@@ -1,0 +1,127 @@
+//! End-to-end SPACDC-DL training driver — the repo's headline
+//! validation run (recorded in EXPERIMENTS.md).
+//!
+//! Trains the §VI DNN (784-256-128-10, ≈236k parameters — the paper's
+//! MNIST-scale workload) on the synthetic MNIST-like dataset with the
+//! full stack engaged:
+//!
+//! * every hidden-layer backward product runs as a coded round through
+//!   the master/worker fabric (SPACDC encode → MEA-ECC seal → dispatch →
+//!   decode from the non-straggler returns);
+//! * workers execute through the PJRT artifacts
+//!   (`rightmul_64x128x64`, `rightmul_32x10x64`) when built;
+//! * stragglers are injected (S=3 of N=30 at 5×).
+//!
+//! Logs the loss curve + test accuracy per epoch, then repeats with
+//! CONV-DL for the headline speedup comparison.
+
+use spacdc::config::{SchemeKind, SystemConfig, TransportSecurity};
+use spacdc::dl::{train, TrainerOptions};
+use spacdc::metrics::{names, MetricsRegistry};
+use spacdc::runtime::{Executor, RuntimeService};
+use std::path::Path;
+use std::sync::Arc;
+
+fn base_cfg() -> SystemConfig {
+    let mut cfg = SystemConfig::default(); // N=30, T=3, K=4
+    cfg.stragglers = 3;
+    cfg.delay.base_service_s = 0.002; // simulated cluster service time
+    cfg.delay.straggler_factor = 5.0;
+    cfg.dl.layers = vec![784, 256, 128, 10];
+    cfg.dl.batch_size = 64;
+    cfg.dl.train_examples = 2048;
+    cfg.dl.test_examples = 512;
+    cfg.dl.epochs = 5;
+    cfg.dl.learning_rate = 0.08;
+    cfg.seed = 0xE2E;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    let metrics = Arc::new(MetricsRegistry::new());
+    let executor = match RuntimeService::start(Path::new("artifacts")) {
+        Ok(svc) => {
+            println!("PJRT runtime: {} artifacts", svc.handle().keys().len());
+            let h = svc.handle();
+            std::mem::forget(svc);
+            Some(Executor::with_runtime(h, Arc::clone(&metrics)))
+        }
+        Err(_) => {
+            println!("PJRT runtime unavailable (run `make artifacts`); native kernels");
+            None
+        }
+    };
+
+    // --- PJRT demonstration epoch --------------------------------------
+    // One epoch with worker tasks on the compiled-artifact path, proving
+    // the three layers compose. (The PJRT service serializes FFI calls on
+    // one thread, so the *timing* comparison below runs on the native
+    // kernels, which execute in parallel across worker threads like a
+    // real cluster.)
+    if let Some(exec) = &executor {
+        let mut demo = base_cfg();
+        demo.scheme = SchemeKind::Spacdc;
+        demo.dl.epochs = 1;
+        let mut opts = TrainerOptions::new(demo);
+        opts.executor = Some(exec.clone());
+        let r = train(&opts)?;
+        println!(
+            "PJRT demo epoch: loss {:.4}, accuracy {:.3}, {} PJRT executions",
+            r.epochs[0].loss,
+            r.epochs[0].accuracy,
+            metrics.get(names::PJRT_EXECUTIONS)
+        );
+    }
+
+    // --- SPACDC-DL ---------------------------------------------------
+    let mut cfg = base_cfg();
+    cfg.scheme = SchemeKind::Spacdc;
+    cfg.transport = TransportSecurity::MeaEcc;
+    println!(
+        "\nSPACDC-DL: {} parameters, N={}, S={}, T={}, K={}",
+        spacdc::dl::Network::new(&cfg.dl.layers, 0).parameter_count(),
+        cfg.workers,
+        cfg.stragglers,
+        cfg.colluders,
+        cfg.partitions
+    );
+    let opts = TrainerOptions::new(cfg);
+    let spacdc_report = train(&opts)?;
+    println!("epoch  loss      accuracy  wall(s)");
+    for e in &spacdc_report.epochs {
+        println!("{:>5}  {:<8.4}  {:<8.4}  {:<8.2}", e.epoch, e.loss, e.accuracy, e.wall_s);
+    }
+    println!(
+        "PJRT executions: {}, native: {}",
+        metrics.get(names::PJRT_EXECUTIONS),
+        metrics.get(names::NATIVE_EXECUTIONS)
+    );
+
+    // --- CONV-DL baseline ---------------------------------------------
+    let mut conv_cfg = base_cfg();
+    conv_cfg.scheme = SchemeKind::Uncoded;
+    conv_cfg.transport = TransportSecurity::Plain;
+    println!("\nCONV-DL baseline (same workload, waits for all workers):");
+    let conv_opts = TrainerOptions::new(conv_cfg);
+    let conv_report = train(&conv_opts)?;
+    println!("epoch  loss      accuracy  wall(s)");
+    for e in &conv_report.epochs {
+        println!("{:>5}  {:<8.4}  {:<8.4}  {:<8.2}", e.epoch, e.loss, e.accuracy, e.wall_s);
+    }
+
+    // --- headline ------------------------------------------------------
+    let saving = 100.0 * (1.0 - spacdc_report.total_wall_s / conv_report.total_wall_s);
+    println!("\n=== headline ===");
+    println!(
+        "SPACDC-DL: {:.2}s to accuracy {:.3} | CONV-DL: {:.2}s to accuracy {:.3}",
+        spacdc_report.total_wall_s,
+        spacdc_report.final_accuracy,
+        conv_report.total_wall_s,
+        conv_report.final_accuracy
+    );
+    println!(
+        "training-time saving: {saving:.1}% (paper: ~52–65% at S ∈ {{5,7}}, \
+         ~this range at S=3 with encryption on)"
+    );
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Security & privacy demo: what the adversaries actually see.
+//!
+//! 1. **Eavesdropper** — taps every master↔worker link; we run the same
+//!    round with `TransportSecurity::Plain` vs `MeaEcc` and report the
+//!    correlation between the wire payloads and the true shares.
+//! 2. **Colluders** — T workers pool their decrypted shares and run the
+//!    best single-share linear inversion; we report the reconstruction
+//!    error at increasing mask scales (the DESIGN.md §3 trade-off).
+
+use spacdc::coding::{CodeParams, Scheme, Spacdc};
+use spacdc::config::{SchemeKind, SystemConfig, TransportSecurity};
+use spacdc::coordinator::MasterBuilder;
+use spacdc::matrix::{split_rows, Matrix};
+use spacdc::rng::rng_from_seed;
+use spacdc::runtime::WorkerOp;
+use spacdc::sim::EavesdropLog;
+use std::sync::Arc;
+
+fn eavesdrop_run(transport: TransportSecurity) -> anyhow::Result<(f64, usize)> {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 12;
+    cfg.partitions = 3;
+    cfg.colluders = 2;
+    cfg.stragglers = 2;
+    cfg.scheme = SchemeKind::Bacc; // deterministic encode → reconstructible
+    cfg.transport = transport;
+    cfg.delay.base_service_s = 0.0;
+    cfg.seed = 0xEA7;
+    let tap = Arc::new(EavesdropLog::new());
+    let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build()?;
+    let mut rng = rng_from_seed(5);
+    let x = Matrix::random_gaussian(24, 16, 0.0, 1.0, &mut rng);
+    master.run_blockmap(WorkerOp::Identity, &x)?;
+    // Reproduce the true shares (BACC encode is deterministic).
+    let scheme = spacdc::coding::Bacc::new(CodeParams::new(12, 3, 0));
+    let enc = scheme.encode(&x, 1, &mut rng_from_seed(0))?;
+    Ok((tap.downlink_correlation(&enc.shares), tap.count()))
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== eavesdropper on the wire ==\n");
+    let (plain_corr, n1) = eavesdrop_run(TransportSecurity::Plain)?;
+    let (sealed_corr, n2) = eavesdrop_run(TransportSecurity::MeaEcc)?;
+    println!("plain transport : {n1} messages captured, share correlation {plain_corr:.3}");
+    println!("MEA-ECC sealed  : {n2} messages captured, share correlation {sealed_corr:.3}");
+    println!("→ with MEA-ECC the tap learns (statistically) nothing.\n");
+
+    println!("== T colluding workers ==\n");
+    println!("{:<12} {:>22} {:>18}", "mask_scale", "colluder attack err", "decode rel-err");
+    for &scale in &[0.5f32, 1.0, 2.0, 4.0] {
+        let k = 4;
+        let t = 3;
+        let scheme = Spacdc::with_mask_scale(CodeParams::new(30, k, t), scale);
+        let mut rng = rng_from_seed(0xC011);
+        let x = Matrix::random_gaussian(64, 32, 0.0, 1.0, &mut rng);
+        let enc = scheme.encode(&x, 1, &mut rng)?;
+        let (blocks, _) = split_rows(&x, k);
+        // Best single-share inversion across the T colluders & K blocks.
+        let (data_pos, _) = Spacdc::node_layout(k, t);
+        let betas = scheme.betas();
+        let signs: Vec<u32> = (0..(k + t) as u32).collect();
+        let mut attack = f64::INFINITY;
+        for j in 0..t {
+            let w = spacdc::coding::interp::berrut_weights(&betas, &signs, enc.ctx.alphas[j]);
+            for (b, block) in blocks.iter().enumerate() {
+                let wb = w[data_pos[b]];
+                if wb.abs() > 1e-6 {
+                    attack =
+                        attack.min(enc.shares[j].scale(1.0 / wb as f32).rel_error(block));
+                }
+            }
+        }
+        // Decode quality at 27/30 returns for the same scale.
+        let results: Vec<(usize, Matrix)> =
+            (0..27).map(|i| (i, enc.shares[i].clone())).collect();
+        let decoded = scheme.decode(&enc.ctx, &results)?;
+        let err = decoded
+            .iter()
+            .zip(&blocks)
+            .map(|(d, b)| d.rel_error(b))
+            .fold(0.0f64, f64::max);
+        println!("{scale:<12} {attack:>22.4} {err:>18.4}");
+    }
+    println!(
+        "\nnote: the paper's Theorem 2 ITP is exact over a finite field; \
+         over ℝ the mask amplitude sets the leakage bound (DESIGN.md §3)."
+    );
+    Ok(())
+}

@@ -1,0 +1,54 @@
+//! Straggler sweep — the Fig. 3 scenario grid at example scale.
+//!
+//! Sweeps S ∈ {0, 3, 5, 7} for all four DL algorithms and prints the
+//! training time matrix plus SPACDC's saving column. A fast, inspectable
+//! version of `cargo bench --bench fig3_training_time`.
+
+use spacdc::config::{SchemeKind, SystemConfig, TransportSecurity};
+use spacdc::dl::{train, TrainerOptions};
+
+fn main() -> anyhow::Result<()> {
+    let schemes =
+        [SchemeKind::Uncoded, SchemeKind::Mds, SchemeKind::MatDot, SchemeKind::Spacdc];
+    let scenarios = [0usize, 3, 5, 7];
+    const STEPS: usize = 8;
+
+    println!("training-time sweep: N=30, T=3, {STEPS} steps, 5x stragglers\n");
+    println!("{:<12} {:>8} {:>8} {:>8} {:>8}", "scheme", "S=0", "S=3", "S=5", "S=7");
+    let mut wall = vec![vec![0.0; scenarios.len()]; schemes.len()];
+    for (si, &scheme) in schemes.iter().enumerate() {
+        for (ci, &s) in scenarios.iter().enumerate() {
+            let mut cfg = SystemConfig::default();
+            cfg.scheme = scheme;
+            cfg.stragglers = s;
+            cfg.transport = if scheme == SchemeKind::Spacdc {
+                TransportSecurity::MeaEcc
+            } else {
+                TransportSecurity::Plain
+            };
+            cfg.delay.base_service_s = 0.002;
+            cfg.dl.layers = vec![256, 128, 64, 10];
+            cfg.dl.train_examples = 512;
+            cfg.dl.test_examples = 128;
+            cfg.dl.epochs = 1;
+            cfg.seed = 0x57EE9;
+            let mut opts = TrainerOptions::new(cfg);
+            opts.max_steps = Some(STEPS);
+            opts.eval_each_epoch = false;
+            wall[si][ci] = train(&opts)?.total_wall_s;
+        }
+        println!(
+            "{:<12} {:>8.3} {:>8.3} {:>8.3} {:>8.3}",
+            scheme.name(),
+            wall[si][0],
+            wall[si][1],
+            wall[si][2],
+            wall[si][3]
+        );
+    }
+    println!("\nSPACDC saving vs CONV:");
+    for (ci, &s) in scenarios.iter().enumerate() {
+        println!("  S={s}: {:.1}%", 100.0 * (1.0 - wall[3][ci] / wall[0][ci]));
+    }
+    Ok(())
+}

@@ -1,0 +1,131 @@
+"""AOT driver: lower the L2 functions (with their L1 Pallas kernels) to
+HLO text and write ``artifacts/`` + ``manifest.txt``.
+
+HLO *text* is the interchange format — jax ≥ 0.5 serializes protos with
+64-bit instruction ids that the Rust side's xla_extension 0.5.1 rejects;
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Manifest line format (consumed by ``rust/src/runtime/pjrt.rs``)::
+
+    <key> <file> <out_rows> <out_cols>
+
+Artifact keys mirror ``runtime::pjrt::artifact_key``:
+``gram_{r}x{c}``, ``rightmul_{r}x{k}x{c}``, ``berrut_{n}x{r}x{c}``,
+``mlp_fwd_{batch}``.
+
+Run via ``make artifacts`` (idempotent: skips when outputs are newer than
+inputs thanks to make's dependency check).
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Default DL geometry — must match rust SystemConfig::default():
+# layers 784-256-128-10, batch 64, K=4 partitions, T=3 masks.
+LAYERS = [784, 256, 128, 10]
+BATCH = 64
+K_PARTITIONS = 4
+T_MASKS = 3
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def lower_entry(fn, args):
+    return to_hlo_text(jax.jit(fn).lower(*args))
+
+
+def artifact_plan():
+    """(key, file, out_shape, thunk) for every artifact."""
+    plan = []
+
+    def add(key, out_shape, fn, args):
+        plan.append((key, f"{key}.hlo.txt", out_shape, lambda: lower_entry(fn, args)))
+
+    # Worker Gram tasks: the quickstart share shape and a small test shape.
+    for r, c in [(128, 256), (64, 64)]:
+        add(f"gram_{r}x{c}", (r, r), model.gram_task, (f32(r, c),))
+
+    # SPACDC-DL backward products (Eq. 23): Θᵀ row-blocks × δ, for the
+    # default net at K=4, batch 64.
+    #   layer 2: Θ₂ᵀ (128×10) → blocks 32×10, δ (10×64)
+    #   layer 1: Θ₁ᵀ (256×128) → blocks 64×128, δ (128×64)
+    for r, k, c in [(32, 10, BATCH), (64, 128, BATCH)]:
+        add(
+            f"rightmul_{r}x{k}x{c}",
+            (r, c),
+            model.rightmul_task,
+            (f32(r, k), f32(k, c)),
+        )
+
+    # Master-side Berrut encode (Eq. 17) for the same layer blocks:
+    # K+T = 7 stacked blocks → one encoded share.
+    n = K_PARTITIONS + T_MASKS
+    for r, c in [(64, 128), (32, 10)]:
+        fn = functools.partial(model.berrut_encode_task, n_blocks=n)
+        add(
+            f"berrut_{n}x{r}x{c}",
+            (r, c),
+            fn,
+            (f32(n * r, c), f32(n, 1)),
+        )
+
+    # Full DNN forward for PJRT-served evaluation.
+    l0, l1, l2, l3 = LAYERS
+    add(
+        f"mlp_fwd_{BATCH}",
+        (l3, BATCH),
+        model.mlp_forward,
+        (
+            f32(l1, l0),
+            f32(l1, 1),
+            f32(l2, l1),
+            f32(l2, 1),
+            f32(l3, l2),
+            f32(l3, 1),
+            f32(l0, BATCH),
+        ),
+    )
+    return plan
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_lines = ["# key file out_rows out_cols"]
+    for key, fname, out_shape, thunk in artifact_plan():
+        text = thunk()
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{key} {fname} {out_shape[0]} {out_shape[1]}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(manifest_lines) - 1} artifacts")
+
+
+if __name__ == "__main__":
+    main()

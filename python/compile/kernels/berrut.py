@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: Berrut weighted block combination.
+
+The SPACDC encode (Eq. (17)) evaluates ``u(αⱼ) = Σᵢ wᵢ(αⱼ)·Bᵢ`` for each
+worker j — a weighted sum of the K+T data/mask blocks. On a real TPU this
+is a VMEM-resident reduction: the grid walks row-tiles of the output; each
+program streams the matching tile of all n source blocks through VMEM and
+accumulates with the scalar weights (held in SMEM-like full residency).
+
+Lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic custom-calls);
+the BlockSpec structure below is the TPU schedule the DESIGN.md
+§Hardware-Adaptation section analyzes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-tile height: one VMEM tile of each source block per grid step.
+# 8 sublanes × f32 is the TPU-native minimum; 64 keeps the tile MXU/VPU
+# friendly while bounding VMEM at n_blocks × 64 × c × 4 bytes.
+TILE_ROWS = 64
+
+
+def _berrut_kernel(w_ref, blocks_ref, o_ref):
+    """One row-tile: o = Σᵢ wᵢ · blocksᵢ  (accumulate in f32)."""
+    blocks = blocks_ref[...]  # (n, tile_rows, c)
+    w = w_ref[...]  # (n,)
+    # Weighted reduction over the leading axis. tensordot lowers to a
+    # single (1×n)·(n×tile·c) contraction — MXU-shaped on real hardware.
+    o_ref[...] = jnp.tensordot(w, blocks, axes=1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def berrut_combine(blocks: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Σᵢ wᵢ·Bᵢ for blocks (n, r, c), weights (n,) → (r, c).
+
+    Rows are tiled at TILE_ROWS when divisible (the AOT shapes are);
+    otherwise the kernel falls back to a single-program grid.
+    """
+    n, r, c = blocks.shape
+    tile = TILE_ROWS if r % TILE_ROWS == 0 else r
+    grid = (r // tile,)
+    return pl.pallas_call(
+        _berrut_kernel,
+        grid=grid,
+        in_specs=[
+            # Weights: full residency every step.
+            pl.BlockSpec((n,), lambda i: (0,)),
+            # Blocks: all n sources, one row-tile, all columns.
+            pl.BlockSpec((n, tile, c), lambda i: (0, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, c), blocks.dtype),
+        interpret=True,
+    )(weights, blocks)
+
+
+def berrut_combine_stacked(
+    stacked: jnp.ndarray, weights: jnp.ndarray, n_blocks: int
+) -> jnp.ndarray:
+    """2-D interop wrapper for the Rust runtime: ``stacked`` is the n
+    blocks concatenated by rows ((n·r) × c); ``weights`` is (n, 1).
+
+    The PJRT bridge moves plain 2-D f32 matrices, so the AOT artifact is
+    lowered through this wrapper.
+    """
+    total_rows, c = stacked.shape
+    r = total_rows // n_blocks
+    blocks = stacked.reshape(n_blocks, r, c)
+    return berrut_combine(blocks, weights.reshape(n_blocks))

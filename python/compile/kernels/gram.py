@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: tiled Gram product f(X) = X·Xᵀ.
+
+The paper's running worker task (§V-A). TPU schedule: the output grid is
+(r/T, r/T) tiles; each program holds two (T × d) row-panels of X in VMEM
+and issues one (T×d)·(d×T) contraction on the MXU, accumulating in f32.
+For the AOT shapes (T = 64, d ≤ 512) the VMEM footprint is
+2·T·d·4B ≤ 256 KiB — far under the ~16 MiB budget, leaving room for
+double-buffering the HBM→VMEM streams.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so correctness runs through the interpreter and the real-TPU
+efficiency is estimated analytically (DESIGN.md §Perf).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output tile edge. 64 keeps (64 × d) panels VMEM-resident and feeds the
+# 128×128 MXU with well-shaped operands after internal vectorization.
+TILE = 64
+
+
+def _gram_kernel(xi_ref, xj_ref, o_ref):
+    """o = Xᵢ · Xⱼᵀ for two row-panels of X."""
+    xi = xi_ref[...]  # (tile, d)
+    xj = xj_ref[...]  # (tile, d)
+    o_ref[...] = jax.lax.dot_general(
+        xi,
+        xj,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def gram(x: jnp.ndarray) -> jnp.ndarray:
+    """X (r, d) → X·Xᵀ (r, r), tiled at TILE when divisible."""
+    r, d = x.shape
+    tile = TILE if r % TILE == 0 else r
+    grid = (r // tile, r // tile)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, r), jnp.float32),
+        interpret=True,
+    )(x, x)

@@ -1,0 +1,47 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels.
+
+Every kernel in this package is checked against these references by
+``python/tests`` (pytest + hypothesis). The references are deliberately
+written in the most obvious jnp form — no tiling, no tricks — so a
+mismatch always indicts the kernel.
+"""
+
+import jax.numpy as jnp
+
+
+def berrut_combine_ref(blocks: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Σᵢ wᵢ·Bᵢ over stacked blocks (n, r, c) with weights (n,).
+
+    This is the inner operation of the SPACDC/BACC encode (paper
+    Eq. (17)) and decode (Eq. (18)): a weighted combination of the K+T
+    data/mask blocks at one evaluation node.
+    """
+    return jnp.tensordot(weights, blocks, axes=1)
+
+
+def gram_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """f(X) = X Xᵀ — the paper's running worker task (§V-A)."""
+    return x @ x.T
+
+
+def rightmul_ref(x: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """f(X) = X·V — the SPACDC-DL coded gradient op (Eq. (23))."""
+    return x @ v
+
+
+def mlp_forward_ref(params, x: jnp.ndarray) -> jnp.ndarray:
+    """Forward pass of the §VI-A DNN: ReLU hiddens, softmax output.
+
+    ``params`` is a list of (W, b) with W (out, in) and b (out, 1);
+    ``x`` is (features, batch); returns class probabilities
+    (classes, batch).
+    """
+    a = x
+    for i, (w, b) in enumerate(params):
+        tau = w @ a + b
+        if i + 1 == len(params):
+            a = jnp.exp(tau - tau.max(axis=0, keepdims=True))
+            a = a / a.sum(axis=0, keepdims=True)
+        else:
+            a = jnp.maximum(tau, 0.0)
+    return a

@@ -1,0 +1,46 @@
+"""L2: the JAX compute graph — the worker tasks and the §VI-A DNN.
+
+Everything here is build-time only: ``aot.py`` lowers these functions to
+HLO text once (``make artifacts``) and the Rust coordinator executes the
+compiled artifacts through PJRT. Python never runs on the request path.
+
+The worker tasks call the L1 Pallas kernels so the kernels lower into the
+same HLO module the Rust side loads.
+"""
+
+import jax.numpy as jnp
+
+from compile.kernels.berrut import berrut_combine_stacked
+from compile.kernels.gram import gram as gram_kernel
+
+
+def gram_task(x: jnp.ndarray):
+    """Worker task f(X̃) = X̃·X̃ᵀ (§V-A), via the L1 Pallas kernel.
+
+    Returned as a 1-tuple: the AOT path lowers with ``return_tuple=True``
+    and the Rust loader unwraps with ``to_tuple1``.
+    """
+    return (gram_kernel(x),)
+
+
+def rightmul_task(x: jnp.ndarray, v: jnp.ndarray):
+    """Worker task f(X̃) = X̃·V — the Eq. (23) coded gradient product."""
+    return (jnp.dot(x, v, preferred_element_type=jnp.float32),)
+
+
+def berrut_encode_task(stacked: jnp.ndarray, weights: jnp.ndarray, n_blocks: int):
+    """Master-side SPACDC encode step (Eq. (17)) at one node: weighted
+    combination of the K+T stacked blocks, via the L1 Pallas kernel."""
+    return (berrut_combine_stacked(stacked, weights, n_blocks),)
+
+
+def mlp_forward(w0, b0, w1, b1, w2, b2, x):
+    """Forward pass of the default 784-256-128-10 DNN (Eq. (19)):
+    ReLU hiddens, softmax output. Biases are (out, 1) so every operand is
+    a plain 2-D f32 matrix on the PJRT bridge.
+    """
+    a1 = jnp.maximum(w0 @ x + b0, 0.0)
+    a2 = jnp.maximum(w1 @ a1 + b1, 0.0)
+    tau = w2 @ a2 + b2
+    e = jnp.exp(tau - tau.max(axis=0, keepdims=True))
+    return (e / e.sum(axis=0, keepdims=True),)

@@ -1,0 +1,182 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and value ranges; fixed tests pin the exact AOT
+shapes the Rust runtime loads.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.berrut import berrut_combine, berrut_combine_stacked
+from compile.kernels.gram import gram
+from compile.kernels.ref import (
+    berrut_combine_ref,
+    gram_ref,
+    mlp_forward_ref,
+    rightmul_ref,
+)
+
+
+def rand(key, *shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestBerrutKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n=st.integers(1, 9),
+        r=st.integers(1, 96),
+        c=st.integers(1, 40),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, n, r, c, seed):
+        blocks = rand(seed, n, r, c)
+        weights = rand(seed + 1, n)
+        got = berrut_combine(blocks, weights)
+        want = berrut_combine_ref(blocks, weights)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_aot_shape_64x128(self):
+        # The exact artifact shape: K+T=7 blocks of 64×128.
+        blocks = rand(1, 7, 64, 128)
+        weights = rand(2, 7)
+        np.testing.assert_allclose(
+            berrut_combine(blocks, weights),
+            berrut_combine_ref(blocks, weights),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_tiled_path_multiple_of_tile(self):
+        # 128 rows → 2 grid steps at TILE_ROWS=64.
+        blocks = rand(3, 4, 128, 16)
+        weights = rand(4, 4)
+        np.testing.assert_allclose(
+            berrut_combine(blocks, weights),
+            berrut_combine_ref(blocks, weights),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_stacked_wrapper_matches_3d(self):
+        blocks = rand(5, 7, 32, 10)
+        weights = rand(6, 7)
+        stacked = blocks.reshape(7 * 32, 10)
+        np.testing.assert_allclose(
+            berrut_combine_stacked(stacked, weights.reshape(7, 1), 7),
+            berrut_combine_ref(blocks, weights),
+            rtol=1e-5,
+            atol=1e-5,
+        )
+
+    def test_single_block_identity_weight(self):
+        blocks = rand(7, 1, 8, 8)
+        out = berrut_combine(blocks, jnp.ones((1,)))
+        np.testing.assert_allclose(out, blocks[0], rtol=1e-6)
+
+    def test_weights_summing_to_one_preserve_constant(self):
+        # Partition-of-unity weights on identical blocks: exact identity.
+        blocks = jnp.stack([jnp.full((16, 4), 3.25)] * 5)
+        w = jnp.array([0.4, 0.25, 0.2, 0.1, 0.05])
+        out = berrut_combine(blocks, w)
+        np.testing.assert_allclose(out, jnp.full((16, 4), 3.25), rtol=1e-5)
+
+
+class TestGramKernel:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        r=st.integers(1, 80),
+        d=st.integers(1, 64),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref_across_shapes(self, r, d, seed):
+        x = rand(seed, r, d)
+        np.testing.assert_allclose(gram(x), gram_ref(x), rtol=1e-4, atol=1e-4)
+
+    def test_aot_shape_128x256(self):
+        x = rand(11, 128, 256)
+        np.testing.assert_allclose(gram(x), gram_ref(x), rtol=1e-4, atol=1e-4)
+
+    def test_output_is_symmetric_psd_diagonal(self):
+        x = rand(12, 64, 32)
+        g = np.asarray(gram(x))
+        np.testing.assert_allclose(g, g.T, rtol=1e-5, atol=1e-5)
+        assert (np.diag(g) >= -1e-5).all()
+
+    def test_dtype_is_f32(self):
+        x = rand(13, 64, 16)
+        assert gram(x).dtype == jnp.float32
+
+
+class TestModelFunctions:
+    def test_rightmul_matches_ref(self):
+        from compile import model
+
+        x = rand(20, 64, 128)
+        v = rand(21, 128, 64)
+        (got,) = model.rightmul_task(x, v)
+        np.testing.assert_allclose(got, rightmul_ref(x, v), rtol=1e-4, atol=1e-4)
+
+    def test_mlp_forward_matches_ref(self):
+        from compile import model
+
+        params = [
+            (rand(30, 256, 784, scale=0.05), rand(31, 256, 1, scale=0.01)),
+            (rand(32, 128, 256, scale=0.05), rand(33, 128, 1, scale=0.01)),
+            (rand(34, 10, 128, scale=0.05), rand(35, 10, 1, scale=0.01)),
+        ]
+        x = jax.random.uniform(jax.random.PRNGKey(36), (784, 64), jnp.float32)
+        (got,) = model.mlp_forward(
+            params[0][0], params[0][1],
+            params[1][0], params[1][1],
+            params[2][0], params[2][1],
+            x,
+        )
+        want = mlp_forward_ref(params, x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+        # Probabilities: columns sum to 1.
+        np.testing.assert_allclose(np.asarray(got).sum(axis=0), 1.0, rtol=1e-5)
+
+    def test_berrut_encode_task_matches_ref(self):
+        from compile import model
+
+        blocks = rand(40, 7, 64, 128)
+        w = rand(41, 7)
+        (got,) = model.berrut_encode_task(
+            blocks.reshape(7 * 64, 128), w.reshape(7, 1), n_blocks=7
+        )
+        np.testing.assert_allclose(
+            got, berrut_combine_ref(blocks, w), rtol=1e-5, atol=1e-5
+        )
+
+    def test_gram_task_wraps_kernel(self):
+        from compile import model
+
+        x = rand(42, 64, 64)
+        (got,) = model.gram_task(x)
+        np.testing.assert_allclose(got, gram_ref(x), rtol=1e-4, atol=1e-4)
+
+
+class TestHypothesisProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.integers(2, 8))
+    def test_berrut_linearity(self, seed, n):
+        """combine(B, w1 + w2) == combine(B, w1) + combine(B, w2)."""
+        blocks = rand(seed, n, 32, 8)
+        w1 = rand(seed + 1, n)
+        w2 = rand(seed + 2, n)
+        lhs = berrut_combine(blocks, w1 + w2)
+        rhs = berrut_combine(blocks, w1) + berrut_combine(blocks, w2)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), scale=st.floats(0.1, 100.0))
+    def test_gram_scale_quadratic(self, seed, scale):
+        """gram(s·X) == s²·gram(X)."""
+        x = rand(seed, 32, 16)
+        lhs = gram(scale * x)
+        rhs = (scale**2) * gram(x)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-3, atol=1e-3)

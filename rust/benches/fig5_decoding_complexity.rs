@@ -1,0 +1,89 @@
+//! Fig. 5 — decoding complexity vs K (m = 1000, K = 1..36).
+//!
+//! Two views per scheme:
+//! * the paper's closed-form curve (Table II, `analysis::complexity`);
+//! * measured wall-clock of this repo's actual decoders at matching
+//!   parameters (N = 40 workers, |𝓕| = N − 4 returns, d = 32).
+//!
+//! Paper shape: SPACDC ≈ BACC lowest and flat in K; LCC below the
+//! polynomial-interpolation family; MatDot highest.
+
+use spacdc::analysis::CostModel;
+use spacdc::bench::{banner, black_box, print_series};
+use spacdc::coding::{make_scheme, CodeParams, MatDot, Scheme};
+use spacdc::config::SchemeKind;
+use spacdc::matrix::Matrix;
+use spacdc::rng::rng_from_seed;
+use std::time::Instant;
+
+const M: usize = 1000;
+const D: usize = 32;
+const N: usize = 40;
+const KS: [usize; 5] = [2, 4, 8, 12, 16];
+
+fn measured_decode_s(kind: SchemeKind, k: usize) -> Option<f64> {
+    let mut rng = rng_from_seed(0xF165 + k as u64);
+    let x = Matrix::random_gaussian(M, D, 0.0, 1.0, &mut rng);
+    let returns = N - 4;
+    if kind == SchemeKind::MatDot {
+        let code = MatDot::new(N, k);
+        let enc = code.encode_pair(&x, &x.transpose()).ok()?;
+        let results: Vec<(usize, Matrix)> = (0..code.threshold().min(returns))
+            .map(|i| (i, MatDot::worker_compute(&enc.shares[i])))
+            .collect();
+        let t0 = Instant::now();
+        black_box(code.decode(&enc, &results).ok()?);
+        return Some(t0.elapsed().as_secs_f64());
+    }
+    let params = CodeParams::new(N, k, 2);
+    let scheme = make_scheme(kind, params)?;
+    let enc = scheme.encode(&x, 1, &mut rng).ok()?;
+    let need = match scheme.threshold(1) {
+        spacdc::coding::Threshold::Exact(t) => t,
+        spacdc::coding::Threshold::Flexible { .. } => returns,
+    };
+    if need > N {
+        return None;
+    }
+    let results: Vec<(usize, Matrix)> =
+        (0..need).map(|i| (i, enc.shares[i].clone())).collect();
+    let t0 = Instant::now();
+    black_box(scheme.decode(&enc.ctx, &results).ok()?);
+    Some(t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    banner("Fig. 5 — decoding complexity vs K (m=1000)");
+    let schemes = [
+        SchemeKind::Bacc,
+        SchemeKind::Lcc,
+        SchemeKind::Polynomial,
+        SchemeKind::SecPoly,
+        SchemeKind::MatDot,
+        SchemeKind::Spacdc,
+    ];
+
+    println!("\nanalytic (Table II formulas), ops:");
+    print_series("K =", &KS.map(|k| k as f64));
+    for kind in schemes {
+        let series: Vec<f64> = KS
+            .iter()
+            .map(|&k| CostModel::new(M, M, k, N, N - 4).costs(kind).decoding)
+            .collect();
+        print_series(kind.name(), &series);
+    }
+
+    println!("\nmeasured decode wall-time (ms), this repo's decoders:");
+    print_series("K =", &KS.map(|k| k as f64));
+    for kind in schemes {
+        let series: Vec<f64> = KS
+            .iter()
+            .map(|&k| measured_decode_s(kind, k).map(|s| s * 1e3).unwrap_or(f64::NAN))
+            .collect();
+        print_series(kind.name(), &series);
+    }
+    println!(
+        "\npaper shape: SPACDC ≈ BACC lowest/flat; MatDot highest; \
+         LCC < Polynomial/SecPoly."
+    );
+}

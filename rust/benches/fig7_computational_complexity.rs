@@ -1,0 +1,81 @@
+//! Fig. 7 — per-worker computational complexity vs K
+//! (d = 1000, m = 5000, K = 1..36).
+//!
+//! Analytic Table II curves plus measured per-worker Gram time on the
+//! actual share shapes each scheme hands its workers (scaled grid:
+//! m = 1200, d = 128 keeps the bench under a minute).
+//!
+//! Paper shape: MatDot O(dm²/K) dominates everyone else's O(dm²/K²);
+//! all the row-partition schemes coincide.
+
+use spacdc::analysis::CostModel;
+use spacdc::bench::{banner, black_box, print_series, run, BenchConfig};
+use spacdc::config::SchemeKind;
+use spacdc::matrix::{gram, matmul, Matrix};
+use spacdc::rng::rng_from_seed;
+
+const KS: [usize; 4] = [2, 4, 8, 16];
+const M_MEAS: usize = 1200;
+const D_MEAS: usize = 128;
+
+fn main() {
+    banner("Fig. 7 — per-worker computational complexity vs K (d=1000, m=5000)");
+    let schemes = [
+        SchemeKind::Bacc,
+        SchemeKind::MatDot,
+        SchemeKind::Polynomial,
+        SchemeKind::Lcc,
+        SchemeKind::SecPoly,
+        SchemeKind::Spacdc,
+    ];
+
+    println!("\nanalytic per-worker ops (Table II):");
+    print_series("K =", &KS.map(|k| k as f64));
+    for kind in schemes {
+        let series: Vec<f64> = KS
+            .iter()
+            .map(|&k| CostModel::new(5000, 1000, k, 30, 10).costs(kind).worker_compute)
+            .collect();
+        print_series(kind.name(), &series);
+    }
+
+    println!(
+        "\nmeasured worker-task wall (ms) at m={M_MEAS}, d={D_MEAS} \
+         (gram on the actual share shape):"
+    );
+    print_series("K =", &KS.map(|k| k as f64));
+    // Row-partition schemes: share is (m/K × d); worker computes share·shareᵀ.
+    let mut rng = rng_from_seed(0xF167);
+    let row_series: Vec<f64> = KS
+        .iter()
+        .map(|&k| {
+            let share = Matrix::random_gaussian(M_MEAS / k, D_MEAS, 0.0, 1.0, &mut rng);
+            let r = run("gram", BenchConfig { warmup_iters: 1, iters: 3 }, |_| {
+                black_box(gram(&share));
+            });
+            r.mean() * 1e3
+        })
+        .collect();
+    print_series("row-partition (all)", &row_series);
+
+    // MatDot: share pair is (m × d/K)·(d/K × m) → full m×m product.
+    let matdot_series: Vec<f64> = KS
+        .iter()
+        .map(|&k| {
+            let a = Matrix::random_gaussian(M_MEAS, D_MEAS / k, 0.0, 1.0, &mut rng);
+            let b = Matrix::random_gaussian(D_MEAS / k, M_MEAS, 0.0, 1.0, &mut rng);
+            let r = run("matdot", BenchConfig { warmup_iters: 1, iters: 3 }, |_| {
+                black_box(matmul(&a, &b));
+            });
+            r.mean() * 1e3
+        })
+        .collect();
+    print_series("MATDOT", &matdot_series);
+
+    // Shape check: the MatDot/row-partition ratio should grow ~linearly
+    // in K (O(dm²/K) vs O(dm²/K²)).
+    println!("\nMATDOT / row-partition ratio (paper: grows ~K):");
+    for (i, &k) in KS.iter().enumerate() {
+        println!("  K={k}: {:.1}×", matdot_series[i] / row_series[i]);
+    }
+}

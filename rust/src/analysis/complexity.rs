@@ -1,0 +1,259 @@
+//! Closed-form complexity model — exactly the formulas of Table II,
+//! evaluated to regenerate Figs. 5 (decoding vs K), 6 (communication vs
+//! m), and 7 (per-worker computation vs K).
+//!
+//! Parameters follow the paper's notation: data X is m×d split into K
+//! blocks, N workers, |𝓕| returned results, task f(X̃) = X̃X̃ᵀ.
+
+use crate::config::SchemeKind;
+
+/// Evaluated costs (in abstract "operations"/"symbols", as the paper
+/// plots them).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SchemeCosts {
+    /// Encoding complexity (master).
+    pub encoding: f64,
+    /// Decoding complexity (master).
+    pub decoding: f64,
+    /// Communication master → all workers (symbols).
+    pub comm_to_workers: f64,
+    /// Communication workers → master (symbols).
+    pub comm_to_master: f64,
+    /// Per-worker computational complexity.
+    pub worker_compute: f64,
+    /// Data security during transmission (MEA-ECC)?
+    pub protects_security: bool,
+    /// Information-theoretic privacy against colluders?
+    pub protects_privacy: bool,
+}
+
+/// The Table II cost model for one parameter setting.
+#[derive(Clone, Copy, Debug)]
+pub struct CostModel {
+    /// Rows of X.
+    pub m: f64,
+    /// Columns of X.
+    pub d: f64,
+    /// Partitions K.
+    pub k: f64,
+    /// Workers N.
+    pub n: f64,
+    /// Returned results |𝓕|.
+    pub f_returned: f64,
+}
+
+impl CostModel {
+    /// Convenience constructor.
+    pub fn new(m: usize, d: usize, k: usize, n: usize, f_returned: usize) -> Self {
+        Self {
+            m: m as f64,
+            d: d as f64,
+            k: k as f64,
+            n: n as f64,
+            f_returned: f_returned as f64,
+        }
+    }
+
+    fn log2(x: f64) -> f64 {
+        x.max(2.0).log2()
+    }
+
+    fn loglog2(x: f64) -> f64 {
+        Self::log2(Self::log2(x))
+    }
+
+    /// Evaluate the Table II row for `kind`.
+    pub fn costs(&self, kind: SchemeKind) -> SchemeCosts {
+        let Self { m, d, k, n, f_returned: f } = *self;
+        match kind {
+            // Polynomial codes [23]: decode interpolates degree-K² — the
+            // table's O(m² log²K² loglog K²) row.
+            SchemeKind::Polynomial => SchemeCosts {
+                encoding: m * d * n,
+                decoding: m * m * Self::log2(k * k).powi(2) * Self::loglog2(k * k),
+                comm_to_workers: m * d * n / k,
+                comm_to_master: m * m,
+                worker_compute: d * m * m / (k * k),
+                protects_security: false,
+                protects_privacy: false,
+            },
+            // MatDot codes [24]: higher decode (K·m² polylog) and
+            // worst-in-class download (each worker returns m×m) and
+            // compute (blocks only shrink in one dimension).
+            SchemeKind::MatDot => SchemeCosts {
+                encoding: m * d * n,
+                decoding: k * m * m * Self::log2(k).powi(2) * Self::loglog2(k),
+                comm_to_workers: m * d * n / k,
+                comm_to_master: k * m * m,
+                worker_compute: d * m * m / k,
+                protects_security: false,
+                protects_privacy: false,
+            },
+            // SecPoly [34]: polynomial-code costs + privacy.
+            SchemeKind::SecPoly => SchemeCosts {
+                encoding: m * d * n,
+                decoding: m * m * Self::log2(k * k).powi(2) * Self::loglog2(k * k),
+                comm_to_workers: m * d * n / k,
+                comm_to_master: m * m,
+                worker_compute: d * m * m / (k * k),
+                protects_security: false,
+                protects_privacy: true,
+            },
+            // BACC [18]: Berrut decode is O(|𝓕|) per recovered point.
+            SchemeKind::Bacc => SchemeCosts {
+                encoding: m * d * n,
+                decoding: f,
+                comm_to_workers: m * d * n / k,
+                comm_to_master: m * m * f / (k * k),
+                worker_compute: d * m * m / (k * k),
+                protects_security: false,
+                protects_privacy: false,
+            },
+            // LCC [27].
+            SchemeKind::Lcc => SchemeCosts {
+                encoding: m * d * n,
+                decoding: m * m * Self::log2(k).powi(2) * Self::loglog2(k) / k,
+                comm_to_workers: m * d * n / k,
+                comm_to_master: m * m / k,
+                worker_compute: d * m * m / (k * k),
+                protects_security: false,
+                protects_privacy: true,
+            },
+            // SPACDC (this paper): BACC-class costs + security + privacy.
+            SchemeKind::Spacdc => SchemeCosts {
+                encoding: m * d * n,
+                decoding: f,
+                comm_to_workers: m * d * n / k,
+                comm_to_master: m * m * f / (k * k),
+                worker_compute: d * m * m / (k * k),
+                protects_security: true,
+                protects_privacy: true,
+            },
+            // MDS [22] (not a Table II row; modeled like the polynomial
+            // family with one-sided partitioning, for the DL comparison).
+            SchemeKind::Mds => SchemeCosts {
+                encoding: m * d * n,
+                decoding: m * m * Self::log2(k).powi(2) * Self::loglog2(k),
+                comm_to_workers: m * d * n / k,
+                comm_to_master: m * m * f / (k * k),
+                worker_compute: d * m * m / (k * k),
+                protects_security: false,
+                protects_privacy: false,
+            },
+            // CONV: no coding; every worker computes its 1/N share, the
+            // master just concatenates.
+            SchemeKind::Uncoded => SchemeCosts {
+                encoding: 0.0,
+                decoding: n,
+                comm_to_workers: m * d,
+                comm_to_master: m * m / n,
+                worker_compute: d * m * m / (n * n),
+                protects_security: false,
+                protects_privacy: false,
+            },
+        }
+    }
+
+    /// The six Table II rows, in the paper's order.
+    pub fn table_ii_rows() -> [SchemeKind; 6] {
+        [
+            SchemeKind::Polynomial,
+            SchemeKind::MatDot,
+            SchemeKind::SecPoly,
+            SchemeKind::Bacc,
+            SchemeKind::Lcc,
+            SchemeKind::Spacdc,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(k: usize) -> CostModel {
+        CostModel::new(1000, 1000, k, 30, 10)
+    }
+
+    #[test]
+    fn fig5_shape_spacdc_and_bacc_lowest_decoding() {
+        // m=1000, K ∈ 1..36 — SPACDC ≈ BACC ≪ everything else; MatDot
+        // highest among the polynomial-decode schemes at moderate K.
+        for k in [2usize, 8, 16, 36] {
+            let m = model(k);
+            let spacdc = m.costs(SchemeKind::Spacdc).decoding;
+            let bacc = m.costs(SchemeKind::Bacc).decoding;
+            let lcc = m.costs(SchemeKind::Lcc).decoding;
+            let poly = m.costs(SchemeKind::Polynomial).decoding;
+            let matdot = m.costs(SchemeKind::MatDot).decoding;
+            assert_eq!(spacdc, bacc);
+            assert!(spacdc < lcc, "k={k}");
+            assert!(lcc < poly, "k={k}");
+            // MatDot overtakes the polynomial family once the polylog
+            // factors settle (K ≥ 8 in the paper's plotted range).
+            if k >= 8 {
+                assert!(poly < matdot, "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig6_shape_matdot_worst_upload() {
+        // |𝓕|=10, K=30: worker→master, MatDot ≫ others; SPACDC = BACC low.
+        let m = CostModel::new(1000, 1000, 30, 30, 10);
+        let matdot = m.costs(SchemeKind::MatDot).comm_to_master;
+        let poly = m.costs(SchemeKind::Polynomial).comm_to_master;
+        let spacdc = m.costs(SchemeKind::Spacdc).comm_to_master;
+        let bacc = m.costs(SchemeKind::Bacc).comm_to_master;
+        assert!(matdot > poly);
+        assert!(poly > spacdc);
+        assert_eq!(spacdc, bacc);
+    }
+
+    #[test]
+    fn fig7_shape_matdot_worst_worker_compute() {
+        // d=1000, m=5000: MatDot O(dm²/K) vs everyone else O(dm²/K²).
+        let m = CostModel::new(5000, 1000, 16, 30, 10);
+        let matdot = m.costs(SchemeKind::MatDot).worker_compute;
+        for kind in [
+            SchemeKind::Spacdc,
+            SchemeKind::Bacc,
+            SchemeKind::Lcc,
+            SchemeKind::Polynomial,
+            SchemeKind::SecPoly,
+        ] {
+            let c = m.costs(kind).worker_compute;
+            assert!(matdot / c >= 15.0, "{kind:?}: matdot {matdot} vs {c}");
+        }
+    }
+
+    #[test]
+    fn only_spacdc_has_both_protections() {
+        let m = model(8);
+        for kind in CostModel::table_ii_rows() {
+            let c = m.costs(kind);
+            if kind == SchemeKind::Spacdc {
+                assert!(c.protects_security && c.protects_privacy);
+            } else {
+                assert!(!c.protects_security, "{kind:?} should not claim security");
+            }
+        }
+    }
+
+    #[test]
+    fn decoding_scales_linearly_in_returns_for_berrut_family() {
+        let m5 = CostModel::new(1000, 1000, 8, 30, 5).costs(SchemeKind::Spacdc).decoding;
+        let m20 = CostModel::new(1000, 1000, 8, 30, 20).costs(SchemeKind::Spacdc).decoding;
+        assert!((m20 / m5 - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn encoding_complexity_same_across_coded_schemes() {
+        // Table II: all coded schemes encode at O(mdN).
+        let m = model(8);
+        let base = m.costs(SchemeKind::Spacdc).encoding;
+        for kind in CostModel::table_ii_rows() {
+            assert_eq!(m.costs(kind).encoding, base, "{kind:?}");
+        }
+    }
+}

@@ -1,0 +1,5 @@
+//! Closed-form complexity model — paper Table II and Figs. 5–7.
+
+pub mod complexity;
+
+pub use complexity::{CostModel, SchemeCosts};

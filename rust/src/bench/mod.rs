@@ -1,0 +1,139 @@
+//! Benchmark harness substrate (no `criterion` in this environment).
+//!
+//! Provides warmup + timed iteration with mean/σ/p50/p99 statistics and
+//! aligned table output. Every `rust/benches/*.rs` harness (one per paper
+//! table/figure) builds on this. Deterministic: no adaptive sampling, so
+//! two runs on the same machine produce comparable rows.
+
+use crate::metrics::Histogram;
+use std::time::Instant;
+
+/// Configuration for one measured benchmark.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchConfig {
+    /// Untimed warmup iterations.
+    pub warmup_iters: usize,
+    /// Timed iterations.
+    pub iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self { warmup_iters: 3, iters: 10 }
+    }
+}
+
+impl BenchConfig {
+    /// Quick preset for expensive end-to-end scenarios.
+    pub fn quick() -> Self {
+        Self { warmup_iters: 1, iters: 3 }
+    }
+}
+
+/// Result of a measured benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    /// Label for reporting.
+    pub name: String,
+    /// Per-iteration wall-clock samples (seconds).
+    pub samples: Histogram,
+}
+
+impl BenchResult {
+    /// Mean seconds per iteration.
+    pub fn mean(&self) -> f64 {
+        self.samples.mean()
+    }
+
+    /// Render one aligned row: name, mean, σ, p50, p99 (ms).
+    pub fn row(&self) -> String {
+        format!(
+            "{:<44} {:>10.3} {:>9.3} {:>10.3} {:>10.3}",
+            self.name,
+            self.mean() * 1e3,
+            self.samples.std_dev() * 1e3,
+            self.samples.p50() * 1e3,
+            self.samples.p99() * 1e3,
+        )
+    }
+}
+
+/// Header matching [`BenchResult::row`].
+pub fn header() -> String {
+    format!(
+        "{:<44} {:>10} {:>9} {:>10} {:>10}",
+        "benchmark", "mean(ms)", "sd(ms)", "p50(ms)", "p99(ms)"
+    )
+}
+
+/// Measure `f` under `cfg`, returning per-iteration statistics.
+///
+/// `f` receives the iteration index so scenarios can vary seeds while
+/// staying deterministic.
+pub fn run(name: &str, cfg: BenchConfig, mut f: impl FnMut(usize)) -> BenchResult {
+    for i in 0..cfg.warmup_iters {
+        f(i);
+    }
+    let mut samples = Histogram::new();
+    for i in 0..cfg.iters {
+        let t0 = Instant::now();
+        f(cfg.warmup_iters + i);
+        samples.record(t0.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), samples }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Pretty-print a section banner for bench output.
+pub fn banner(title: &str) {
+    let line = "=".repeat(title.len() + 8);
+    println!("\n{line}\n==  {title}  ==\n{line}");
+}
+
+/// Simple aligned series printer: one labelled row of f64s, for
+/// figure-series output (x → y per scheme).
+pub fn print_series(label: &str, xs: &[f64]) {
+    print!("{label:<28}");
+    for x in xs {
+        print!(" {x:>12.4}");
+    }
+    println!();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_records_requested_iterations() {
+        let r = run("noop", BenchConfig { warmup_iters: 2, iters: 5 }, |_| {
+            black_box(3 + 4);
+        });
+        assert_eq!(r.samples.count(), 5);
+        assert!(r.mean() >= 0.0);
+    }
+
+    #[test]
+    fn run_passes_increasing_iteration_index() {
+        let mut seen = Vec::new();
+        let cfg = BenchConfig { warmup_iters: 1, iters: 3 };
+        // Collect indices through a RefCell-free trick: accumulate in a
+        // local because FnMut allows mutation.
+        let r = run("idx", cfg, |i| seen.push(i));
+        assert_eq!(seen, vec![0, 1, 2, 3]);
+        assert_eq!(r.samples.count(), 3);
+    }
+
+    #[test]
+    fn row_is_aligned_with_header() {
+        let r = run("x", BenchConfig::quick(), |_| {});
+        // Rows and header columns should be non-empty and parseable.
+        assert!(header().contains("mean(ms)"));
+        assert!(r.row().starts_with('x'));
+    }
+}

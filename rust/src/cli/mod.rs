@@ -1,0 +1,236 @@
+//! Command-line parsing substrate (no `clap` in this environment).
+//!
+//! A small declarative parser: `ArgSpec` declares flags with defaults and
+//! help text; `parse` validates, fills defaults, and renders usage. Used
+//! by `main.rs` and the examples.
+
+use std::collections::BTreeMap;
+
+/// Declared option kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgKind {
+    /// `--flag` (boolean, no value).
+    Flag,
+    /// `--key value` (string-valued).
+    Value,
+}
+
+/// One declared argument.
+#[derive(Clone, Debug)]
+pub struct ArgSpec {
+    /// Long name without the `--`.
+    pub name: &'static str,
+    /// Kind of the argument.
+    pub kind: ArgKind,
+    /// Default (for Value args).
+    pub default: Option<&'static str>,
+    /// Help line.
+    pub help: &'static str,
+}
+
+impl ArgSpec {
+    /// Declare a boolean flag.
+    pub fn flag(name: &'static str, help: &'static str) -> Self {
+        Self { name, kind: ArgKind::Flag, default: None, help }
+    }
+
+    /// Declare a valued option with a default.
+    pub fn opt(name: &'static str, default: &'static str, help: &'static str) -> Self {
+        Self { name, kind: ArgKind::Value, default: Some(default), help }
+    }
+
+    /// Declare a required valued option.
+    pub fn required(name: &'static str, help: &'static str) -> Self {
+        Self { name, kind: ArgKind::Value, default: None, help }
+    }
+}
+
+/// Parsed arguments: typed getters over a string map.
+#[derive(Clone, Debug, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    /// Non-flag positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+impl Parsed {
+    /// String value (always present when declared with a default).
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    /// Required string value; panics with a clear message if missing.
+    pub fn get_str(&self, name: &str) -> &str {
+        self.get(name).unwrap_or_else(|| panic!("missing required --{name}"))
+    }
+
+    /// Parse a value as usize.
+    pub fn get_usize(&self, name: &str) -> usize {
+        self.parse_as(name)
+    }
+
+    /// Parse a value as u64.
+    pub fn get_u64(&self, name: &str) -> u64 {
+        self.parse_as(name)
+    }
+
+    /// Parse a value as f64.
+    pub fn get_f64(&self, name: &str) -> f64 {
+        self.parse_as(name)
+    }
+
+    fn parse_as<T: std::str::FromStr>(&self, name: &str) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        let raw = self.get_str(name);
+        raw.parse().unwrap_or_else(|e| panic!("--{name}={raw}: {e}"))
+    }
+
+    /// Was the boolean flag given?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Parse error.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    /// Unknown `--option`.
+    #[error("unknown option --{0}\n{1}")]
+    Unknown(String, String),
+    /// Declared Value option had no value token.
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+}
+
+/// Render a usage/help block for a spec set.
+pub fn usage(program: &str, specs: &[ArgSpec]) -> String {
+    let mut out = format!("usage: {program} [options]\n\noptions:\n");
+    for s in specs {
+        let left = match (s.kind, s.default) {
+            (ArgKind::Flag, _) => format!("--{}", s.name),
+            (ArgKind::Value, Some(d)) => format!("--{} <v={}>", s.name, d),
+            (ArgKind::Value, None) => format!("--{} <v> (required)", s.name),
+        };
+        out.push_str(&format!("  {left:<28} {}\n", s.help));
+    }
+    out
+}
+
+/// Parse `args` (without argv[0]) against `specs`.
+pub fn parse(args: &[String], specs: &[ArgSpec]) -> Result<Parsed, CliError> {
+    let mut parsed = Parsed::default();
+    // Seed defaults.
+    for s in specs {
+        if let (ArgKind::Value, Some(d)) = (s.kind, s.default) {
+            parsed.values.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < args.len() {
+        let tok = &args[i];
+        if let Some(name) = tok.strip_prefix("--") {
+            // Support --key=value in one token.
+            let (name, inline_val) = match name.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (name, None),
+            };
+            let spec = specs.iter().find(|s| s.name == name).ok_or_else(|| {
+                CliError::Unknown(name.to_string(), usage("", specs))
+            })?;
+            match spec.kind {
+                ArgKind::Flag => parsed.flags.push(name.to_string()),
+                ArgKind::Value => {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError::MissingValue(name.to_string()))?
+                        }
+                    };
+                    parsed.values.insert(name.to_string(), val);
+                }
+            }
+        } else {
+            parsed.positional.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(parsed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ArgSpec> {
+        vec![
+            ArgSpec::opt("workers", "30", "number of workers N"),
+            ArgSpec::opt("stragglers", "3", "number of stragglers S"),
+            ArgSpec::flag("verbose", "chatty output"),
+            ArgSpec::required("scheme", "coding scheme"),
+        ]
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_are_seeded() {
+        let p = parse(&sv(&["--scheme", "spacdc"]), &specs()).unwrap();
+        assert_eq!(p.get_usize("workers"), 30);
+        assert_eq!(p.get_str("scheme"), "spacdc");
+        assert!(!p.has_flag("verbose"));
+    }
+
+    #[test]
+    fn overrides_and_flags() {
+        let p =
+            parse(&sv(&["--workers", "8", "--verbose", "--scheme=mds"]), &specs()).unwrap();
+        assert_eq!(p.get_usize("workers"), 8);
+        assert!(p.has_flag("verbose"));
+        assert_eq!(p.get_str("scheme"), "mds");
+    }
+
+    #[test]
+    fn positional_args_collected() {
+        let p = parse(&sv(&["train", "--scheme", "bacc", "extra"]), &specs()).unwrap();
+        assert_eq!(p.positional, vec!["train", "extra"]);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(matches!(
+            parse(&sv(&["--nope"]), &specs()),
+            Err(CliError::Unknown(_, _))
+        ));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(matches!(
+            parse(&sv(&["--workers"]), &specs()),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn usage_mentions_every_option() {
+        let u = usage("spacdc", &specs());
+        for s in specs() {
+            assert!(u.contains(s.name));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "missing required --scheme")]
+    fn required_getter_panics_when_absent() {
+        let p = parse(&sv(&[]), &specs()).unwrap();
+        let _ = p.get_str("scheme");
+    }
+}

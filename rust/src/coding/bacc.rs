@@ -1,0 +1,147 @@
+//! BACC — Berrut Approximated Coded Computing (Jahani-Nezhad &
+//! Maddah-Ali [18]), the paper's closest baseline: identical Berrut
+//! encode/decode machinery but **no privacy masks** (T = 0). Table II row
+//! 4; the scheme SPACDC matches on complexity while adding privacy.
+
+use super::interp::{berrut_eval, chebyshev_nodes_in, disjoint_eval_nodes};
+use super::spacdc::decode_berrut;
+use super::traits::{CodeParams, CodingError, DecodeCtx, Encoded, Scheme, Threshold};
+use crate::config::SchemeKind;
+use crate::matrix::{split_rows, Matrix};
+use crate::rng::Rng;
+
+/// BACC code.
+#[derive(Clone, Debug)]
+pub struct Bacc {
+    params: CodeParams,
+}
+
+impl Bacc {
+    /// Construct; any `t` in `params` is ignored (BACC has no masks).
+    pub fn new(params: CodeParams) -> Self {
+        Self { params: CodeParams { t: 0, ..params } }
+    }
+}
+
+impl Scheme for Bacc {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Bacc
+    }
+
+    fn params(&self) -> CodeParams {
+        self.params
+    }
+
+    fn threshold(&self, _deg: u32) -> Threshold {
+        Threshold::Flexible { min: 1 }
+    }
+
+    fn supports_degree(&self, _deg: u32) -> bool {
+        true
+    }
+
+    fn encode(&self, x: &Matrix, deg: u32, _rng: &mut Rng) -> Result<Encoded, CodingError> {
+        let CodeParams { n, k, .. } = self.params;
+        let (blocks, spec) = split_rows(x, k);
+        let betas = chebyshev_nodes_in(k, -0.95, 0.95);
+        let alphas = disjoint_eval_nodes(n, &betas);
+        let signs: Vec<u32> = (0..k as u32).collect();
+        let shares: Vec<Matrix> =
+            alphas.iter().map(|&a| berrut_eval(&betas, &signs, &blocks, a)).collect();
+        Ok(Encoded {
+            shares,
+            ctx: DecodeCtx {
+                kind: SchemeKind::Bacc,
+                params: self.params,
+                alphas,
+                betas,
+                spec,
+                degree: deg,
+            },
+        })
+    }
+
+    fn decode(
+        &self,
+        ctx: &DecodeCtx,
+        results: &[(usize, Matrix)],
+    ) -> Result<Vec<Matrix>, CodingError> {
+        decode_berrut(ctx, results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{gram, matmul};
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn bacc_and_spacdc_both_decode_under_stragglers() {
+        // Same Berrut machinery, different node grids (K vs K+T): both
+        // must decode with bounded error from a 16/20 return set.
+        use super::super::spacdc::Spacdc;
+        let mut rng = rng_from_seed(60);
+        let x = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
+        let v = Matrix::random_gaussian(8, 4, 0.0, 1.0, &mut rng);
+        let (blocks, _) = split_rows(&x, 3);
+        let expect: Vec<Matrix> = blocks.iter().map(|b| matmul(b, &v)).collect();
+
+        let bacc = Bacc::new(CodeParams::new(20, 3, 0));
+        let spacdc = Spacdc::new(CodeParams::new(20, 3, 3));
+
+        let mut err = [0.0f64; 2];
+        for (s, scheme) in [&bacc as &dyn Scheme, &spacdc as &dyn Scheme].iter().enumerate() {
+            let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+            let results: Vec<(usize, Matrix)> = enc
+                .shares
+                .iter()
+                .enumerate()
+                .take(16)
+                .map(|(i, sh)| (i, matmul(sh, &v)))
+                .collect();
+            let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+            err[s] = decoded
+                .iter()
+                .zip(&expect)
+                .map(|(d, e)| d.rel_error(e))
+                .fold(0.0f64, f64::max);
+        }
+        assert!(err[0] < 0.20, "BACC error too high: {}", err[0]);
+        assert!(err[1] < 0.40, "SPACDC error too high: {}", err[1]);
+    }
+
+    #[test]
+    fn gram_decode_close_without_masks() {
+        let mut rng = rng_from_seed(61);
+        let scheme = Bacc::new(CodeParams::new(24, 2, 0));
+        let x = Matrix::random_gaussian(16, 10, 0.0, 1.0, &mut rng);
+        let enc = scheme.encode(&x, 2, &mut rng).unwrap();
+        let results: Vec<(usize, Matrix)> =
+            enc.shares.iter().enumerate().map(|(i, s)| (i, gram(s))).collect();
+        let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+        let (blocks, _) = split_rows(&x, 2);
+        for (d, b) in decoded.iter().zip(&blocks) {
+            let err = d.rel_error(&gram(b));
+            assert!(err < 0.15, "err={err}");
+        }
+    }
+
+    #[test]
+    fn encode_is_deterministic_without_masks() {
+        let scheme = Bacc::new(CodeParams::new(8, 2, 0));
+        let x = Matrix::ones(8, 4);
+        let e1 = scheme.encode(&x, 1, &mut rng_from_seed(1)).unwrap();
+        let e2 = scheme.encode(&x, 1, &mut rng_from_seed(2)).unwrap();
+        for (a, b) in e1.shares.iter().zip(&e2.shares) {
+            assert_eq!(a.as_slice(), b.as_slice());
+        }
+    }
+
+    #[test]
+    fn not_private() {
+        let scheme = Bacc::new(CodeParams::new(8, 2, 0));
+        assert!(!scheme.is_private());
+        assert_eq!(scheme.threshold(1), Threshold::Flexible { min: 1 });
+    }
+}

@@ -1,0 +1,334 @@
+//! Shared machinery for the exact polynomial-evaluation baselines:
+//! MDS [22], Polynomial codes [23], LCC [27], and SecPoly [34].
+//!
+//! All four encode the K blocks (plus T masks for the private variants)
+//! as evaluations of a polynomial u(z) with u(βᵢ) = Xᵢ, and decode by
+//! *exact* polynomial interpolation of f∘u from `deg·(K+T−1)+1` returned
+//! evaluations — the classical recovery threshold that SPACDC's rational
+//! decode removes.
+//!
+//! Faithfulness note (DESIGN.md §3): the original codes work over a large
+//! finite field with monomial (Vandermonde) bases. Over ℝ a monomial
+//! basis at K ≈ 30 is numerically singular, so encode uses the Lagrange
+//! basis on Chebyshev recovery nodes — the *same codeword space* and the
+//! same thresholds, in the numerically meaningful basis (this is also
+//! exactly how LCC is specified).
+
+use super::interp::{chebyshev_nodes_in, disjoint_eval_nodes, lagrange_eval, lagrange_weights};
+use super::traits::{
+    validate_results, CodeParams, CodingError, DecodeCtx, Encoded, Scheme, Threshold,
+};
+use crate::config::SchemeKind;
+use crate::matrix::{split_rows, Matrix};
+use crate::rng::Rng;
+
+/// Configuration of one member of the evaluation-code family.
+#[derive(Clone, Debug)]
+pub struct EvalCode {
+    kind: SchemeKind,
+    params: CodeParams,
+    /// Highest task degree this member admits (1 for the linear-only
+    /// MDS/Polynomial/SecPoly; u32::MAX for LCC).
+    max_degree: u32,
+    /// Whether T masks are appended (LCC/SecPoly).
+    private: bool,
+    /// Mask amplitude for private members.
+    mask_scale: f32,
+}
+
+impl EvalCode {
+    /// MDS codes (Lee et al. [22]): linear tasks, no privacy, threshold K.
+    pub fn mds(params: CodeParams) -> Self {
+        Self {
+            kind: SchemeKind::Mds,
+            params: CodeParams { t: 0, ..params },
+            max_degree: 1,
+            private: false,
+            mask_scale: 1.0,
+        }
+    }
+
+    /// Polynomial codes [23]: linear tasks in this row-partition framing
+    /// (the two-sided matmul variant lives in the complexity model),
+    /// threshold K.
+    pub fn polynomial(params: CodeParams) -> Self {
+        Self {
+            kind: SchemeKind::Polynomial,
+            params: CodeParams { t: 0, ..params },
+            max_degree: 1,
+            private: false,
+            mask_scale: 1.0,
+        }
+    }
+
+    /// LCC [27]: arbitrary polynomial degree, T-private,
+    /// threshold deg·(K+T−1)+1.
+    pub fn lcc(params: CodeParams) -> Self {
+        Self {
+            kind: SchemeKind::Lcc,
+            params,
+            max_degree: u32::MAX,
+            private: params.t > 0,
+            mask_scale: 1.0,
+        }
+    }
+
+    /// SecPoly [34]: linear tasks, T-private, threshold K+T.
+    pub fn secpoly(params: CodeParams) -> Self {
+        Self {
+            kind: SchemeKind::SecPoly,
+            params,
+            max_degree: 1,
+            private: params.t > 0,
+            mask_scale: 1.0,
+        }
+    }
+
+    fn mask_count(&self) -> usize {
+        if self.private {
+            self.params.t
+        } else {
+            0
+        }
+    }
+}
+
+impl Scheme for EvalCode {
+    fn kind(&self) -> SchemeKind {
+        self.kind
+    }
+
+    fn params(&self) -> CodeParams {
+        self.params
+    }
+
+    fn threshold(&self, deg: u32) -> Threshold {
+        // deg·(K+T−1)+1: K for linear non-private, K+T for linear
+        // private, 2(K+T−1)+1 for quadratic LCC, …
+        let kt = self.params.k + self.mask_count();
+        Threshold::Exact((deg as usize) * (kt - 1) + 1)
+    }
+
+    fn supports_degree(&self, deg: u32) -> bool {
+        deg >= 1 && deg <= self.max_degree
+    }
+
+    fn is_private(&self) -> bool {
+        self.private
+    }
+
+    fn encode(&self, x: &Matrix, deg: u32, rng: &mut Rng) -> Result<Encoded, CodingError> {
+        if !self.supports_degree(deg) {
+            return Err(CodingError::UnsupportedDegree {
+                scheme: self.kind.name(),
+                degree: deg,
+            });
+        }
+        let CodeParams { n, k, .. } = self.params;
+        let t = self.mask_count();
+        if let Threshold::Exact(need) = self.threshold(deg) {
+            if need > n {
+                return Err(CodingError::NotEnoughResults { need, got: n });
+            }
+        }
+        let (mut blocks, spec) = split_rows(x, k);
+        let (br, bc) = blocks[0].shape();
+        for _ in 0..t {
+            blocks.push(Matrix::random_uniform(
+                br,
+                bc,
+                -self.mask_scale,
+                self.mask_scale,
+                rng,
+            ));
+        }
+        let betas = chebyshev_nodes_in(k + t, -0.95, 0.95);
+        let alphas = disjoint_eval_nodes(n, &betas);
+        // u(αⱼ) = Σᵢ Bᵢ·Lᵢ(αⱼ): exact degree-(K+T−1) polynomial through
+        // the blocks at the β nodes.
+        let shares: Vec<Matrix> =
+            alphas.iter().map(|&a| lagrange_eval(&betas, &blocks, a)).collect();
+        Ok(Encoded {
+            shares,
+            ctx: DecodeCtx { kind: self.kind, params: self.params, alphas, betas, spec, degree: deg },
+        })
+    }
+
+    fn decode(
+        &self,
+        ctx: &DecodeCtx,
+        results: &[(usize, Matrix)],
+    ) -> Result<Vec<Matrix>, CodingError> {
+        let need = match self.threshold(ctx.degree) {
+            Threshold::Exact(k) => k,
+            Threshold::Flexible { min } => min,
+        };
+        if results.len() < need {
+            return Err(CodingError::NotEnoughResults { need, got: results.len() });
+        }
+        let sorted = validate_results(ctx.params.n, results)?;
+        // Exact interpolation of f∘u (degree deg·(K+T−1)) from the first
+        // `need` returns.
+        let take = &sorted[..need];
+        let nodes: Vec<f64> = take.iter().map(|(i, _)| ctx.alphas[*i]).collect();
+        let values: Vec<Matrix> = take.iter().map(|(_, m)| m.clone()).collect();
+        let mut out = Vec::with_capacity(ctx.params.k);
+        for i in 0..ctx.params.k {
+            let w = lagrange_weights(&nodes, ctx.betas[i]);
+            out.push(super::interp::weighted_sum(&values, &w));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{gram, matmul};
+    use crate::prop::{forall, prop_assert};
+    use crate::rng::rng_from_seed;
+
+    fn check_linear_exact(code: &EvalCode, n: usize, k: usize, seed: u64) {
+        let mut rng = rng_from_seed(seed);
+        let x = Matrix::random_gaussian(8 * k, 6, 0.0, 1.0, &mut rng);
+        let v = Matrix::random_gaussian(6, 5, 0.0, 1.0, &mut rng);
+        let enc = code.encode(&x, 1, &mut rng).unwrap();
+        assert_eq!(enc.shares.len(), n);
+        // Return exactly the threshold, from an arbitrary offset.
+        let need = match code.threshold(1) {
+            Threshold::Exact(t) => t,
+            _ => unreachable!(),
+        };
+        let results: Vec<(usize, Matrix)> = (0..need)
+            .map(|j| {
+                let idx = (j * 7 + 3) % n; // scattered subset
+                (idx, matmul(&enc.shares[idx], &v))
+            })
+            .collect();
+        // Dedup protection: indices must be distinct for this test setup.
+        let mut seen: Vec<usize> = results.iter().map(|(i, _)| *i).collect();
+        seen.sort_unstable();
+        seen.dedup();
+        if seen.len() < need {
+            // fall back to first `need` workers
+            let results: Vec<(usize, Matrix)> =
+                (0..need).map(|i| (i, matmul(&enc.shares[i], &v))).collect();
+            let decoded = code.decode(&enc.ctx, &results).unwrap();
+            assert_exact(&x, &v, k, &decoded);
+            return;
+        }
+        let decoded = code.decode(&enc.ctx, &results).unwrap();
+        assert_exact(&x, &v, k, &decoded);
+    }
+
+    fn assert_exact(x: &Matrix, v: &Matrix, k: usize, decoded: &[Matrix]) {
+        let (blocks, _) = split_rows(x, k);
+        for (i, d) in decoded.iter().enumerate() {
+            let expect = matmul(&blocks[i], v);
+            let err = d.rel_error(&expect);
+            assert!(err < 1e-2, "block {i}: err {err}");
+        }
+    }
+
+    #[test]
+    fn mds_decodes_exactly_from_threshold() {
+        check_linear_exact(&EvalCode::mds(CodeParams::new(12, 4, 0)), 12, 4, 70);
+    }
+
+    #[test]
+    fn polynomial_decodes_exactly_from_threshold() {
+        check_linear_exact(&EvalCode::polynomial(CodeParams::new(10, 3, 0)), 10, 3, 71);
+    }
+
+    #[test]
+    fn secpoly_decodes_exactly_and_is_private() {
+        let code = EvalCode::secpoly(CodeParams::new(14, 4, 2));
+        assert!(code.is_private());
+        assert_eq!(code.threshold(1), Threshold::Exact(6)); // K+T
+        check_linear_exact(&code, 14, 4, 72);
+    }
+
+    #[test]
+    fn lcc_handles_quadratic_tasks() {
+        // Gram (degree 2): threshold 2(K+T−1)+1.
+        let k = 2;
+        let t = 1;
+        let n = 12;
+        let code = EvalCode::lcc(CodeParams::new(n, k, t));
+        assert_eq!(code.threshold(2), Threshold::Exact(5));
+        let mut rng = rng_from_seed(73);
+        let x = Matrix::random_gaussian(10, 6, 0.0, 1.0, &mut rng);
+        let enc = code.encode(&x, 2, &mut rng).unwrap();
+        let results: Vec<(usize, Matrix)> =
+            (0..5).map(|i| (i, gram(&enc.shares[i]))).collect();
+        let decoded = code.decode(&enc.ctx, &results).unwrap();
+        let (blocks, _) = split_rows(&x, k);
+        for (d, b) in decoded.iter().zip(&blocks) {
+            let err = d.rel_error(&gram(b));
+            assert!(err < 5e-2, "err={err}");
+        }
+    }
+
+    #[test]
+    fn below_threshold_fails() {
+        let code = EvalCode::mds(CodeParams::new(8, 4, 0));
+        let mut rng = rng_from_seed(74);
+        let x = Matrix::random_uniform(8, 4, -1.0, 1.0, &mut rng);
+        let enc = code.encode(&x, 1, &mut rng).unwrap();
+        let results: Vec<(usize, Matrix)> =
+            (0..3).map(|i| (i, enc.shares[i].clone())).collect();
+        assert!(matches!(
+            code.decode(&enc.ctx, &results),
+            Err(CodingError::NotEnoughResults { need: 4, got: 3 })
+        ));
+    }
+
+    #[test]
+    fn mds_rejects_nonlinear_tasks() {
+        let code = EvalCode::mds(CodeParams::new(8, 4, 0));
+        let mut rng = rng_from_seed(75);
+        let x = Matrix::ones(8, 4);
+        assert!(matches!(
+            code.encode(&x, 2, &mut rng),
+            Err(CodingError::UnsupportedDegree { .. })
+        ));
+    }
+
+    #[test]
+    fn threshold_exceeding_n_rejected_at_encode() {
+        // LCC degree 2 with K+T too large for N.
+        let code = EvalCode::lcc(CodeParams::new(8, 4, 2));
+        // threshold = 2(6−1)+1 = 11 > 8
+        let mut rng = rng_from_seed(76);
+        let x = Matrix::ones(8, 2);
+        assert!(matches!(
+            code.encode(&x, 2, &mut rng),
+            Err(CodingError::NotEnoughResults { need: 11, got: 8 })
+        ));
+    }
+
+    #[test]
+    fn property_any_threshold_subset_decodes_linear_tasks() {
+        forall(10, 77, |g| {
+            let k = g.usize_in(2..5);
+            let n = k + 4 + g.usize_in(0..6);
+            let code = EvalCode::mds(CodeParams::new(n, k, 0));
+            let mut rng = rng_from_seed(g.u64());
+            let x = Matrix::random_gaussian(4 * k, 5, 0.0, 1.0, &mut rng);
+            let v = Matrix::random_gaussian(5, 3, 0.0, 1.0, &mut rng);
+            let enc = code.encode(&x, 1, &mut rng).unwrap();
+            let idx = g.subset(n, k);
+            let results: Vec<(usize, Matrix)> =
+                idx.iter().map(|&i| (i, matmul(&enc.shares[i], &v))).collect();
+            let decoded = code.decode(&enc.ctx, &results).unwrap();
+            let (blocks, _) = split_rows(&x, k);
+            for (d, b) in decoded.iter().zip(&blocks) {
+                let err = d.rel_error(&matmul(b, &v));
+                if err > 0.05 {
+                    return Err(format!("subset decode err {err} (n={n}, k={k})"));
+                }
+            }
+            prop_assert(true, "")
+        });
+    }
+}

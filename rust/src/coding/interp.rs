@@ -1,0 +1,369 @@
+//! Interpolation machinery shared by every coding scheme.
+//!
+//! * Chebyshev node generation (the node family the BACC line of work
+//!   uses for numerically stable rational interpolation over ℝ).
+//! * Berrut rational basis weights — paper Def. 3 / Eqs. (6), (17), (18).
+//! * Exact Lagrange interpolation of matrix-valued polynomials (decode
+//!   path of the MDS/Polynomial/LCC/SecPoly baselines).
+//! * A small dense linear solver (Gaussian elimination with partial
+//!   pivoting) for Vandermonde coefficient extraction (MatDot decode).
+
+use crate::matrix::Matrix;
+
+/// Chebyshev points of the first kind: xⱼ = cos(π(2j+1)/(2n)), j=0..n−1,
+/// on (−1, 1). Distinct by construction.
+pub fn chebyshev_nodes(n: usize) -> Vec<f64> {
+    assert!(n > 0, "need at least one node");
+    (0..n)
+        .map(|j| (std::f64::consts::PI * (2 * j + 1) as f64 / (2 * n) as f64).cos())
+        .collect()
+}
+
+/// Chebyshev nodes scaled into [lo, hi].
+pub fn chebyshev_nodes_in(n: usize, lo: f64, hi: f64) -> Vec<f64> {
+    chebyshev_nodes(n)
+        .into_iter()
+        .map(|x| 0.5 * (lo + hi) + 0.5 * (hi - lo) * x)
+        .collect()
+}
+
+/// Pick `n` evaluation nodes (α's) disjoint from the `avoid` set (β's),
+/// per the paper's requirement {αᵢ} ∩ {βᵢ} = ∅.
+///
+/// α's live on a wider interval than the β's so collisions are already
+/// unlikely; any that occur are nudged by a relative epsilon.
+pub fn disjoint_eval_nodes(n: usize, avoid: &[f64]) -> Vec<f64> {
+    let mut nodes = chebyshev_nodes_in(n, -0.97, 0.97);
+    for x in nodes.iter_mut() {
+        let mut guard = 0;
+        while avoid.iter().any(|b| (*b - *x).abs() < 1e-9) {
+            *x += 1e-6 * (1.0 + guard as f64);
+            guard += 1;
+            assert!(guard < 100, "could not separate nodes");
+        }
+    }
+    nodes
+}
+
+/// Berrut basis weight ℓᵢ(z) for node set `nodes` with alternating signs
+/// (paper Eq. (6)): ℓᵢ(z) = [(−1)^sᵢ/(z−xᵢ)] / Σⱼ (−1)^sⱼ/(z−xⱼ).
+///
+/// `signs[i]` is the exponent sᵢ — the paper indexes by the *global*
+/// worker id, so a subset 𝓕 keeps its original signs (Eq. (18)).
+/// If `z` coincides with a node, the weight degenerates to the exact
+/// indicator (interpolation property).
+pub fn berrut_weights(nodes: &[f64], signs: &[u32], z: f64) -> Vec<f64> {
+    assert_eq!(nodes.len(), signs.len());
+    // Exact-hit fast path: rational basis interpolates.
+    if let Some(hit) = nodes.iter().position(|&x| (x - z).abs() < 1e-12) {
+        let mut w = vec![0.0; nodes.len()];
+        w[hit] = 1.0;
+        return w;
+    }
+    let terms: Vec<f64> = nodes
+        .iter()
+        .zip(signs)
+        .map(|(&x, &s)| {
+            let sign = if s % 2 == 0 { 1.0 } else { -1.0 };
+            sign / (z - x)
+        })
+        .collect();
+    let denom: f64 = terms.iter().sum();
+    assert!(
+        denom.abs() > f64::MIN_POSITIVE,
+        "Berrut denominator vanished at z={z}"
+    );
+    terms.into_iter().map(|t| t / denom).collect()
+}
+
+/// Evaluate the Berrut interpolant of matrix samples at `z`:
+/// r(z) = Σᵢ ℓᵢ(z)·Yᵢ (Eq. (5) lifted to matrices).
+pub fn berrut_eval(nodes: &[f64], signs: &[u32], values: &[Matrix], z: f64) -> Matrix {
+    assert_eq!(nodes.len(), values.len());
+    let w = berrut_weights(nodes, signs, z);
+    weighted_sum(values, &w)
+}
+
+/// Lagrange basis weights for exact polynomial interpolation at `z`.
+pub fn lagrange_weights(nodes: &[f64], z: f64) -> Vec<f64> {
+    let n = nodes.len();
+    let mut w = vec![1.0; n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                let denom = nodes[i] - nodes[j];
+                assert!(denom.abs() > 1e-300, "repeated interpolation node");
+                w[i] *= (z - nodes[j]) / denom;
+            }
+        }
+    }
+    w
+}
+
+/// Evaluate the exact Lagrange interpolant of matrix samples at `z`.
+pub fn lagrange_eval(nodes: &[f64], values: &[Matrix], z: f64) -> Matrix {
+    assert_eq!(nodes.len(), values.len());
+    let w = lagrange_weights(nodes, z);
+    weighted_sum(values, &w)
+}
+
+/// Σᵢ wᵢ·Yᵢ with f64 weights over f32 matrices.
+pub fn weighted_sum(values: &[Matrix], weights: &[f64]) -> Matrix {
+    assert_eq!(values.len(), weights.len());
+    assert!(!values.is_empty(), "weighted_sum of nothing");
+    let (r, c) = values[0].shape();
+    let mut out = Matrix::zeros(r, c);
+    for (v, &w) in values.iter().zip(weights) {
+        assert_eq!(v.shape(), (r, c), "inconsistent sample shapes");
+        out.axpy(w as f32, v);
+    }
+    out
+}
+
+/// Solve the dense system `A x = b` for multiple right-hand sides packed
+/// as matrix columns, via Gaussian elimination with partial pivoting.
+/// Used for Vandermonde coefficient extraction (MatDot decode) and the
+/// MDS generator inversion.
+pub fn solve_dense(a: &[Vec<f64>], b: Vec<Vec<f64>>) -> Result<Vec<Vec<f64>>, String> {
+    let n = a.len();
+    if n == 0 {
+        return Ok(vec![]);
+    }
+    assert!(a.iter().all(|row| row.len() == n), "A must be square");
+    assert_eq!(b.len(), n, "b row count must match A");
+    let width = b[0].len();
+
+    // Augment.
+    let mut m: Vec<Vec<f64>> = a
+        .iter()
+        .zip(b.iter())
+        .map(|(ar, br)| {
+            let mut row = ar.clone();
+            row.extend_from_slice(br);
+            row
+        })
+        .collect();
+
+    for col in 0..n {
+        // Pivot.
+        let pivot = (col..n)
+            .max_by(|&i, &j| m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap())
+            .unwrap();
+        if m[pivot][col].abs() < 1e-12 {
+            return Err(format!("singular system at column {col}"));
+        }
+        m.swap(col, pivot);
+        // Eliminate below.
+        for row in col + 1..n {
+            let factor = m[row][col] / m[col][col];
+            if factor != 0.0 {
+                for k in col..n + width {
+                    m[row][k] -= factor * m[col][k];
+                }
+            }
+        }
+    }
+    // Back substitution.
+    let mut x = vec![vec![0.0; width]; n];
+    for row in (0..n).rev() {
+        for w in 0..width {
+            let mut s = m[row][n + w];
+            for k in row + 1..n {
+                s -= m[row][k] * x[k][w];
+            }
+            x[row][w] = s / m[row][row];
+        }
+    }
+    Ok(x)
+}
+
+/// Interpolate the coefficients of a matrix-valued polynomial of degree
+/// `deg` from `deg+1` (node, value) samples: returns [C₀, …, C_deg] with
+/// p(z) = Σ Cᵢ zⁱ. MatDot decode extracts the middle coefficient.
+pub fn polynomial_coefficients(
+    nodes: &[f64],
+    values: &[Matrix],
+    deg: usize,
+) -> Result<Vec<Matrix>, String> {
+    assert!(nodes.len() == deg + 1, "need exactly deg+1 samples");
+    assert_eq!(nodes.len(), values.len());
+    let (r, c) = values[0].shape();
+    // Vandermonde system: V · coeffs = values, solved per element-column.
+    let v: Vec<Vec<f64>> = nodes
+        .iter()
+        .map(|&x| (0..=deg).map(|p| x.powi(p as i32)).collect())
+        .collect();
+    // Pack each matrix as one wide row of RHS.
+    let b: Vec<Vec<f64>> = values
+        .iter()
+        .map(|m| m.as_slice().iter().map(|&x| x as f64).collect())
+        .collect();
+    let coeffs = solve_dense(&v, b)?;
+    Ok(coeffs
+        .into_iter()
+        .map(|flat| Matrix::from_vec(r, c, flat.into_iter().map(|x| x as f32).collect()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn chebyshev_nodes_distinct_and_bounded() {
+        for n in [1usize, 2, 5, 36] {
+            let xs = chebyshev_nodes(n);
+            assert_eq!(xs.len(), n);
+            assert!(xs.iter().all(|&x| (-1.0..=1.0).contains(&x)));
+            for i in 0..n {
+                for j in i + 1..n {
+                    assert!((xs[i] - xs[j]).abs() > 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn disjoint_nodes_avoid_collisions() {
+        let betas = chebyshev_nodes_in(5, -0.97, 0.97);
+        let alphas = disjoint_eval_nodes(5, &betas);
+        for a in &alphas {
+            for b in &betas {
+                assert!((a - b).abs() > 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn berrut_weights_sum_to_one() {
+        let nodes = chebyshev_nodes(7);
+        let signs: Vec<u32> = (0..7).collect();
+        for z in [-0.5, 0.0, 0.3, 2.0] {
+            let w = berrut_weights(&nodes, &signs, z);
+            let sum: f64 = w.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "z={z}, sum={sum}");
+        }
+    }
+
+    #[test]
+    fn berrut_interpolates_at_nodes() {
+        let nodes = chebyshev_nodes(5);
+        let signs: Vec<u32> = (0..5).collect();
+        let w = berrut_weights(&nodes, &signs, nodes[2]);
+        assert_eq!(w[2], 1.0);
+        assert!(w.iter().enumerate().filter(|(i, _)| *i != 2).all(|(_, &x)| x == 0.0));
+    }
+
+    #[test]
+    fn berrut_reproduces_constants_exactly() {
+        // Rational interpolant with weights summing to 1 reproduces
+        // constant functions for any z.
+        let nodes = chebyshev_nodes(6);
+        let signs: Vec<u32> = (0..6).collect();
+        let values: Vec<Matrix> = (0..6).map(|_| Matrix::ones(2, 2).scale(3.5)).collect();
+        let y = berrut_eval(&nodes, &signs, &values, 0.123);
+        assert!(y.max_abs_diff(&Matrix::ones(2, 2).scale(3.5)) < 1e-6);
+    }
+
+    #[test]
+    fn berrut_approximates_smooth_function() {
+        // Berrut's interpolant converges linearly for smooth f on
+        // Chebyshev-like nodes; with 24 nodes the error should be small.
+        let n = 24;
+        let nodes = chebyshev_nodes(n);
+        let signs: Vec<u32> = (0..n as u32).collect();
+        let values: Vec<Matrix> = nodes
+            .iter()
+            .map(|&x| Matrix::from_vec(1, 1, vec![(x * 1.3).sin() as f32]))
+            .collect();
+        for z in [-0.8, -0.1, 0.42, 0.77] {
+            let y = berrut_eval(&nodes, &signs, &values, z);
+            let expect = (z * 1.3).sin();
+            assert!(
+                (y.get(0, 0) as f64 - expect).abs() < 0.02,
+                "z={z}: got {} want {expect}",
+                y.get(0, 0)
+            );
+        }
+    }
+
+    #[test]
+    fn lagrange_recovers_polynomial_exactly() {
+        // p(z) = 2 − z + 3z² sampled at 3 nodes → exact everywhere.
+        let nodes = [0.1, 0.5, -0.7];
+        let p = |z: f64| 2.0 - z + 3.0 * z * z;
+        let values: Vec<Matrix> =
+            nodes.iter().map(|&x| Matrix::from_vec(1, 1, vec![p(x) as f32])).collect();
+        for z in [-1.0, 0.0, 0.25, 2.0] {
+            let y = lagrange_eval(&nodes, &values, z);
+            assert!((y.get(0, 0) as f64 - p(z)).abs() < 1e-4, "z={z}");
+        }
+    }
+
+    #[test]
+    fn lagrange_weights_sum_to_one() {
+        let nodes = chebyshev_nodes(8);
+        let w = lagrange_weights(&nodes, 0.3);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn solve_dense_roundtrip() {
+        let mut r = rng_from_seed(31);
+        for n in [1usize, 2, 5, 9] {
+            let a: Vec<Vec<f64>> = (0..n)
+                .map(|_| (0..n).map(|_| r.uniform(-1.0, 1.0)).collect())
+                .collect();
+            // Make diagonally dominant to guarantee solvability.
+            let a: Vec<Vec<f64>> = a
+                .iter()
+                .enumerate()
+                .map(|(i, row)| {
+                    row.iter()
+                        .enumerate()
+                        .map(|(j, &v)| if i == j { v + 3.0 } else { v })
+                        .collect()
+                })
+                .collect();
+            let x_true: Vec<Vec<f64>> =
+                (0..n).map(|_| vec![r.uniform(-2.0, 2.0)]).collect();
+            let b: Vec<Vec<f64>> = (0..n)
+                .map(|i| vec![(0..n).map(|j| a[i][j] * x_true[j][0]).sum()])
+                .collect();
+            let x = solve_dense(&a, b).unwrap();
+            for i in 0..n {
+                assert!((x[i][0] - x_true[i][0]).abs() < 1e-8, "n={n} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_dense_detects_singularity() {
+        let a = vec![vec![1.0, 2.0], vec![2.0, 4.0]];
+        let b = vec![vec![1.0], vec![2.0]];
+        assert!(solve_dense(&a, b).is_err());
+    }
+
+    #[test]
+    fn polynomial_coefficients_roundtrip() {
+        // p(z) = C0 + C1 z + C2 z² with 2×2 matrix coefficients.
+        let mut r = rng_from_seed(32);
+        let cs: Vec<Matrix> =
+            (0..3).map(|_| Matrix::random_uniform(2, 2, -1.0, 1.0, &mut r)).collect();
+        let nodes = [0.2, -0.5, 0.9];
+        let values: Vec<Matrix> = nodes
+            .iter()
+            .map(|&z| {
+                let mut v = cs[0].clone();
+                v.axpy(z as f32, &cs[1]);
+                v.axpy((z * z) as f32, &cs[2]);
+                v
+            })
+            .collect();
+        let got = polynomial_coefficients(&nodes, &values, 2).unwrap();
+        for (g, c) in got.iter().zip(&cs) {
+            assert!(g.max_abs_diff(c) < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,244 @@
+//! MatDot codes (Dutta et al. [24]) — the paper's matrix-product
+//! baseline (MATDOT-DL), Table II row 2.
+//!
+//! MatDot is a *pair* code, not a row-partition code: for `Y = A·B` the
+//! master splits A by **columns** and B by **rows** into K blocks each,
+//! so `A·B = Σᵢ AᵢBᵢ`. With
+//!
+//! ```text
+//!   p_A(z) = Σᵢ Aᵢ zⁱ,     p_B(z) = Σⱼ Bⱼ z^{K−1−j},
+//! ```
+//!
+//! worker j computes `p_A(αⱼ)·p_B(αⱼ)` — one product of small matrices —
+//! and the coefficient of z^{K−1} in `p_A·p_B` (degree 2K−2) is exactly
+//! `A·B`. The recovery threshold is therefore **2K−1**, the highest of
+//! all baselines, and each worker's result is a full `r×c` matrix — the
+//! two facts behind MatDot's worst-in-class communication (Fig. 6) and
+//! computation (Fig. 7) curves.
+
+use super::interp::{chebyshev_nodes_in, polynomial_coefficients};
+use super::traits::{validate_results, CodingError};
+use crate::matrix::{matmul, Matrix};
+
+/// MatDot code for the product `A·B`.
+#[derive(Clone, Debug)]
+pub struct MatDot {
+    /// Workers N.
+    pub n: usize,
+    /// Partitions K (per operand).
+    pub k: usize,
+}
+
+/// Encoded MatDot computation: per-worker operand pairs + decode context.
+#[derive(Clone, Debug)]
+pub struct MatDotEncoded {
+    /// (Ãⱼ, B̃ⱼ) per worker.
+    pub shares: Vec<(Matrix, Matrix)>,
+    /// Worker evaluation nodes.
+    pub alphas: Vec<f64>,
+    /// Partitions.
+    pub k: usize,
+}
+
+impl MatDot {
+    /// Construct; panics unless 2K−1 ≤ N (otherwise undecodable).
+    pub fn new(n: usize, k: usize) -> Self {
+        assert!(k >= 1, "K must be ≥ 1");
+        assert!(2 * k - 1 <= n, "MatDot needs 2K-1 ≤ N (K={k}, N={n})");
+        Self { n, k }
+    }
+
+    /// Recovery threshold 2K−1.
+    pub fn threshold(&self) -> usize {
+        2 * self.k - 1
+    }
+
+    /// Split A by columns and B by rows into K blocks each (zero-padding
+    /// the shared inner dimension), and encode the polynomial pair at N
+    /// Chebyshev nodes.
+    pub fn encode_pair(&self, a: &Matrix, b: &Matrix) -> Result<MatDotEncoded, CodingError> {
+        if a.cols() != b.rows() {
+            return Err(CodingError::ShapeMismatch(format!(
+                "A cols {} != B rows {}",
+                a.cols(),
+                b.rows()
+            )));
+        }
+        let k = self.k;
+        let inner = a.cols();
+        let block = inner.div_ceil(k);
+
+        // Column blocks of A (padded with zero columns).
+        let a_blocks: Vec<Matrix> = (0..k)
+            .map(|i| {
+                Matrix::from_fn(a.rows(), block, |r, c| {
+                    let col = i * block + c;
+                    if col < inner {
+                        a.get(r, col)
+                    } else {
+                        0.0
+                    }
+                })
+            })
+            .collect();
+        // Row blocks of B (padded with zero rows).
+        let b_blocks: Vec<Matrix> = (0..k)
+            .map(|i| {
+                Matrix::from_fn(block, b.cols(), |r, c| {
+                    let row = i * block + r;
+                    if row < inner {
+                        b.get(row, c)
+                    } else {
+                        0.0
+                    }
+                })
+            })
+            .collect();
+
+        let alphas = chebyshev_nodes_in(self.n, -1.0, 1.0);
+        let shares = alphas
+            .iter()
+            .map(|&z| {
+                // p_A(z) = Σ Aᵢ zⁱ;  p_B(z) = Σ Bⱼ z^{K−1−j}
+                let mut pa = Matrix::zeros(a.rows(), block);
+                let mut pb = Matrix::zeros(block, b.cols());
+                for i in 0..k {
+                    pa.axpy(z.powi(i as i32) as f32, &a_blocks[i]);
+                    pb.axpy(z.powi((k - 1 - i) as i32) as f32, &b_blocks[i]);
+                }
+                (pa, pb)
+            })
+            .collect();
+        Ok(MatDotEncoded { shares, alphas, k })
+    }
+
+    /// The worker task: multiply the two received operands.
+    pub fn worker_compute(share: &(Matrix, Matrix)) -> Matrix {
+        matmul(&share.0, &share.1)
+    }
+
+    /// Decode `A·B` from ≥ 2K−1 worker products.
+    pub fn decode(
+        &self,
+        enc: &MatDotEncoded,
+        results: &[(usize, Matrix)],
+    ) -> Result<Matrix, CodingError> {
+        let need = self.threshold();
+        if results.len() < need {
+            return Err(CodingError::NotEnoughResults { need, got: results.len() });
+        }
+        let sorted = validate_results(self.n, results)?;
+        let take = &sorted[..need];
+        let nodes: Vec<f64> = take.iter().map(|(i, _)| enc.alphas[*i]).collect();
+        let values: Vec<Matrix> = take.iter().map(|(_, m)| m.clone()).collect();
+        // Interpolate the degree-2K−2 matrix polynomial; A·B is the
+        // coefficient of z^{K−1}.
+        let coeffs = polynomial_coefficients(&nodes, &values, 2 * self.k - 2)
+            .map_err(CodingError::Numerical)?;
+        Ok(coeffs.into_iter().nth(self.k - 1).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn exact_product_from_threshold_returns() {
+        let mut rng = rng_from_seed(90);
+        for k in [1usize, 2, 3, 4] {
+            let n = 2 * k + 3;
+            let code = MatDot::new(n, k);
+            let a = Matrix::random_gaussian(10, 8, 0.0, 1.0, &mut rng);
+            let b = Matrix::random_gaussian(8, 6, 0.0, 1.0, &mut rng);
+            let enc = code.encode_pair(&a, &b).unwrap();
+            let results: Vec<(usize, Matrix)> = (0..code.threshold())
+                .map(|i| (i, MatDot::worker_compute(&enc.shares[i])))
+                .collect();
+            let got = code.decode(&enc, &results).unwrap();
+            let expect = matmul(&a, &b);
+            assert!(got.rel_error(&expect) < 1e-2, "k={k}: err {}", got.rel_error(&expect));
+        }
+    }
+
+    #[test]
+    fn works_with_scattered_subset() {
+        let mut rng = rng_from_seed(91);
+        let code = MatDot::new(12, 3);
+        let a = Matrix::random_gaussian(6, 9, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_gaussian(9, 4, 0.0, 1.0, &mut rng);
+        let enc = code.encode_pair(&a, &b).unwrap();
+        let idx = [1usize, 4, 6, 8, 11];
+        let results: Vec<(usize, Matrix)> = idx
+            .iter()
+            .map(|&i| (i, MatDot::worker_compute(&enc.shares[i])))
+            .collect();
+        let got = code.decode(&enc, &results).unwrap();
+        assert!(got.rel_error(&matmul(&a, &b)) < 1e-2);
+    }
+
+    #[test]
+    fn below_threshold_rejected() {
+        let mut rng = rng_from_seed(92);
+        let code = MatDot::new(8, 3);
+        let a = Matrix::random_uniform(4, 6, -1.0, 1.0, &mut rng);
+        let b = Matrix::random_uniform(6, 4, -1.0, 1.0, &mut rng);
+        let enc = code.encode_pair(&a, &b).unwrap();
+        let results: Vec<(usize, Matrix)> = (0..4)
+            .map(|i| (i, MatDot::worker_compute(&enc.shares[i])))
+            .collect();
+        assert!(matches!(
+            code.decode(&enc, &results),
+            Err(CodingError::NotEnoughResults { need: 5, got: 4 })
+        ));
+    }
+
+    #[test]
+    fn inner_dim_padding_handled() {
+        // inner = 7, K = 3 → block = 3, padded to 9.
+        let mut rng = rng_from_seed(93);
+        let code = MatDot::new(9, 3);
+        let a = Matrix::random_gaussian(5, 7, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_gaussian(7, 5, 0.0, 1.0, &mut rng);
+        let enc = code.encode_pair(&a, &b).unwrap();
+        let results: Vec<(usize, Matrix)> = (0..5)
+            .map(|i| (i, MatDot::worker_compute(&enc.shares[i])))
+            .collect();
+        let got = code.decode(&enc, &results).unwrap();
+        assert!(got.rel_error(&matmul(&a, &b)) < 1e-2);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let code = MatDot::new(5, 2);
+        let a = Matrix::ones(3, 4);
+        let b = Matrix::ones(5, 3);
+        assert!(matches!(
+            code.encode_pair(&a, &b),
+            Err(CodingError::ShapeMismatch(_))
+        ));
+    }
+
+    #[test]
+    fn gram_via_matdot() {
+        // X·Xᵀ through the pair API (how MatDot serves the paper's
+        // running example).
+        let mut rng = rng_from_seed(94);
+        let code = MatDot::new(10, 2);
+        let x = Matrix::random_gaussian(6, 8, 0.0, 1.0, &mut rng);
+        let xt = x.transpose();
+        let enc = code.encode_pair(&x, &xt).unwrap();
+        let results: Vec<(usize, Matrix)> = (3..6)
+            .map(|i| (i, MatDot::worker_compute(&enc.shares[i])))
+            .collect();
+        let got = code.decode(&enc, &results).unwrap();
+        assert!(got.rel_error(&crate::matrix::gram(&x)) < 1e-2);
+    }
+
+    #[test]
+    #[should_panic(expected = "MatDot needs 2K-1")]
+    fn constructor_enforces_decodability() {
+        let _ = MatDot::new(4, 3);
+    }
+}

@@ -1,0 +1,113 @@
+//! Coding schemes: the paper's SPACDC plus every baseline in Table II.
+//!
+//! | Module       | Scheme | Threshold (deg-1 task) | Private | Exact? |
+//! |--------------|--------|------------------------|---------|--------|
+//! | `spacdc`     | SPACDC (this paper) | flexible (any ≥ 1) | yes (T masks) | approximate |
+//! | `bacc`       | BACC [18]           | flexible (any ≥ 1) | no  | approximate |
+//! | `evalcode`   | MDS [22]            | K                  | no  | exact |
+//! | `evalcode`   | Polynomial [23]     | K                  | no  | exact |
+//! | `evalcode`   | LCC [27]            | deg·(K+T−1)+1      | yes | exact |
+//! | `evalcode`   | SecPoly [34]        | K+T                | yes | exact |
+//! | `matdot`     | MatDot [24]         | 2K−1 (pair code)   | no  | exact |
+//! | `uncoded`    | CONV                | N                  | no  | exact |
+
+pub mod bacc;
+pub mod evalcode;
+pub mod interp;
+pub mod matdot;
+pub mod spacdc;
+pub mod traits;
+pub mod uncoded;
+
+pub use bacc::Bacc;
+pub use evalcode::EvalCode;
+pub use matdot::{MatDot, MatDotEncoded};
+pub use spacdc::Spacdc;
+pub use traits::{CodeParams, CodingError, DecodeCtx, Encoded, Scheme, Threshold};
+pub use uncoded::Uncoded;
+
+use crate::config::SchemeKind;
+
+/// Build the row-partition scheme for `kind`.
+///
+/// MatDot is a pair code with a different API; asking for it here returns
+/// `None` and callers must use [`MatDot`] directly (the DL trainer does).
+pub fn make_scheme(kind: SchemeKind, params: CodeParams) -> Option<Box<dyn Scheme>> {
+    Some(match kind {
+        SchemeKind::Spacdc => Box::new(Spacdc::new(params)),
+        SchemeKind::Bacc => Box::new(Bacc::new(params)),
+        SchemeKind::Mds => Box::new(EvalCode::mds(params)),
+        SchemeKind::Polynomial => Box::new(EvalCode::polynomial(params)),
+        SchemeKind::Lcc => Box::new(EvalCode::lcc(params)),
+        SchemeKind::SecPoly => Box::new(EvalCode::secpoly(params)),
+        SchemeKind::Uncoded => Box::new(Uncoded::new(params)),
+        SchemeKind::MatDot => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factory_builds_every_row_partition_scheme() {
+        let params = CodeParams::new(12, 3, 2);
+        for kind in [
+            SchemeKind::Spacdc,
+            SchemeKind::Bacc,
+            SchemeKind::Mds,
+            SchemeKind::Polynomial,
+            SchemeKind::Lcc,
+            SchemeKind::SecPoly,
+            SchemeKind::Uncoded,
+        ] {
+            let s = make_scheme(kind, params).unwrap_or_else(|| panic!("{kind:?}"));
+            assert_eq!(s.kind(), kind);
+        }
+    }
+
+    #[test]
+    fn factory_declines_matdot() {
+        assert!(make_scheme(SchemeKind::MatDot, CodeParams::new(12, 3, 0)).is_none());
+    }
+
+    #[test]
+    fn privacy_flags_match_table_ii() {
+        let params = CodeParams::new(12, 3, 2);
+        let expect = [
+            (SchemeKind::Spacdc, true),
+            (SchemeKind::Bacc, false),
+            (SchemeKind::Mds, false),
+            (SchemeKind::Polynomial, false),
+            (SchemeKind::Lcc, true),
+            (SchemeKind::SecPoly, true),
+            (SchemeKind::Uncoded, false),
+        ];
+        for (kind, private) in expect {
+            let s = make_scheme(kind, params).unwrap();
+            assert_eq!(s.is_private(), private, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn thresholds_match_table_ii_ordering() {
+        // For a linear task at K=4, T=2, N=30:
+        //   SPACDC/BACC flexible < MDS/Poly (4) < SecPoly/LCC (6) < CONV (30).
+        let params = CodeParams::new(30, 4, 2);
+        let exact = |k: SchemeKind| match make_scheme(k, params).unwrap().threshold(1) {
+            Threshold::Exact(v) => v,
+            Threshold::Flexible { .. } => 0,
+        };
+        assert_eq!(exact(SchemeKind::Mds), 4);
+        assert_eq!(exact(SchemeKind::Polynomial), 4);
+        assert_eq!(exact(SchemeKind::SecPoly), 6);
+        assert_eq!(exact(SchemeKind::Lcc), 6);
+        assert_eq!(exact(SchemeKind::Uncoded), 30);
+        assert!(matches!(
+            make_scheme(SchemeKind::Spacdc, params).unwrap().threshold(1),
+            Threshold::Flexible { min: 1 }
+        ));
+        // MatDot: 2K−1 = 7.
+        assert_eq!(MatDot::new(30, 4).threshold(), 7);
+    }
+}

@@ -1,0 +1,209 @@
+//! The common interface every coding scheme implements.
+//!
+//! All row-partition schemes (everything except MatDot, which is a
+//! matrix-product code with its own pair API in `matdot.rs`) share the
+//! same shape: encode K row-blocks (plus T random mask blocks for the
+//! private schemes) into N worker shares; workers apply `f` to their
+//! share; the master decodes per-block results `Yᵢ ≈ f(Xᵢ)` from
+//! whichever workers returned.
+
+use crate::config::SchemeKind;
+use crate::matrix::{Matrix, PartitionSpec};
+use crate::rng::Rng;
+
+/// Code parameters: N workers, K data blocks, T privacy masks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CodeParams {
+    /// Number of workers N.
+    pub n: usize,
+    /// Number of data partitions K.
+    pub k: usize,
+    /// Number of colluding workers tolerated T (= number of masks).
+    pub t: usize,
+}
+
+impl CodeParams {
+    /// Convenience constructor.
+    pub fn new(n: usize, k: usize, t: usize) -> Self {
+        Self { n, k, t }
+    }
+}
+
+/// The recovery threshold semantics — the paper's central axis.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Threshold {
+    /// The master must wait for exactly this many results (classical
+    /// coded computing: MDS/Polynomial/LCC/SecPoly/MatDot/CONV).
+    Exact(usize),
+    /// The master may decode from *any* `min`-or-more results, trading
+    /// accuracy for latency (SPACDC/BACC — "does not impose strict
+    /// constraints on the minimum number of results").
+    Flexible {
+        /// Smallest return set the decoder will accept (≥ 1).
+        min: usize,
+    },
+}
+
+impl Threshold {
+    /// The count the coordinator waits for given the paper's semantics:
+    /// exact schemes wait for the threshold; flexible schemes take every
+    /// non-straggler result available — here expressed as "wait for at
+    /// least `min`, then decode with whatever has arrived".
+    pub fn wait_count(&self, available: usize) -> usize {
+        match *self {
+            Threshold::Exact(k) => k,
+            Threshold::Flexible { min } => min.min(available),
+        }
+    }
+}
+
+/// Decode failure modes.
+#[derive(Debug, thiserror::Error)]
+pub enum CodingError {
+    /// Fewer results than the scheme's recovery threshold.
+    #[error("not enough results: need {need}, got {got}")]
+    NotEnoughResults {
+        /// Required result count.
+        need: usize,
+        /// Supplied result count.
+        got: usize,
+    },
+    /// Scheme cannot handle a task of this polynomial degree.
+    #[error("{scheme} does not support task degree {degree}")]
+    UnsupportedDegree {
+        /// Scheme name.
+        scheme: &'static str,
+        /// Requested degree.
+        degree: u32,
+    },
+    /// A result matrix had an unexpected shape.
+    #[error("result shape mismatch: {0}")]
+    ShapeMismatch(String),
+    /// Linear-algebra failure during decode.
+    #[error("decode failed: {0}")]
+    Numerical(String),
+    /// Worker index out of range or duplicated.
+    #[error("bad worker index: {0}")]
+    BadWorkerIndex(usize),
+}
+
+/// Everything the decoder needs, produced at encode time.
+#[derive(Clone, Debug)]
+pub struct DecodeCtx {
+    /// Which scheme encoded this.
+    pub kind: SchemeKind,
+    /// Code parameters at encode time.
+    pub params: CodeParams,
+    /// Worker evaluation nodes αⱼ (one per worker; empty for uncoded).
+    pub alphas: Vec<f64>,
+    /// Recovery nodes βᵢ (the first K index the data blocks).
+    pub betas: Vec<f64>,
+    /// Row-partition bookkeeping (to undo padding).
+    pub spec: PartitionSpec,
+    /// Polynomial degree of the worker task f (1 = linear).
+    pub degree: u32,
+}
+
+/// An encoded computation: one share per worker + the decode context.
+#[derive(Clone, Debug)]
+pub struct Encoded {
+    /// Share for worker j at index j.
+    pub shares: Vec<Matrix>,
+    /// Decode context.
+    pub ctx: DecodeCtx,
+}
+
+/// A coding scheme over row-partitioned data.
+pub trait Scheme: Send + Sync {
+    /// Which scheme this is.
+    fn kind(&self) -> SchemeKind;
+
+    /// Code parameters.
+    fn params(&self) -> CodeParams;
+
+    /// Recovery threshold for a worker task of polynomial degree `deg`.
+    fn threshold(&self, deg: u32) -> Threshold;
+
+    /// Can this scheme decode a task of degree `deg`? Exact linear codes
+    /// (MDS/Polynomial/SecPoly) only commute with linear `f`.
+    fn supports_degree(&self, deg: u32) -> bool;
+
+    /// Does the encoding information-theoretically hide the data from up
+    /// to T colluding workers?
+    fn is_private(&self) -> bool {
+        false
+    }
+
+    /// Encode `x` for a worker task of degree `deg`.
+    fn encode(&self, x: &Matrix, deg: u32, rng: &mut Rng) -> Result<Encoded, CodingError>;
+
+    /// Decode per-block results from `(worker index, f(share))` pairs.
+    /// Returns K matrices `Yᵢ ≈ f(Xᵢ)`.
+    fn decode(
+        &self,
+        ctx: &DecodeCtx,
+        results: &[(usize, Matrix)],
+    ) -> Result<Vec<Matrix>, CodingError>;
+}
+
+/// Validate a result set: indices in range, no duplicates. Returns the
+/// results sorted by worker index.
+pub fn validate_results(
+    n: usize,
+    results: &[(usize, Matrix)],
+) -> Result<Vec<(usize, Matrix)>, CodingError> {
+    let mut sorted: Vec<(usize, Matrix)> = results.to_vec();
+    sorted.sort_by_key(|(i, _)| *i);
+    for w in sorted.windows(2) {
+        if w[0].0 == w[1].0 {
+            return Err(CodingError::BadWorkerIndex(w[0].0));
+        }
+    }
+    if let Some((i, _)) = sorted.last() {
+        if *i >= n {
+            return Err(CodingError::BadWorkerIndex(*i));
+        }
+    }
+    Ok(sorted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threshold_wait_count_semantics() {
+        assert_eq!(Threshold::Exact(10).wait_count(30), 10);
+        assert_eq!(Threshold::Flexible { min: 1 }.wait_count(30), 1);
+        assert_eq!(Threshold::Flexible { min: 5 }.wait_count(3), 3);
+    }
+
+    #[test]
+    fn validate_rejects_duplicates() {
+        let m = Matrix::zeros(1, 1);
+        let r = vec![(0, m.clone()), (0, m.clone())];
+        assert!(matches!(
+            validate_results(4, &r),
+            Err(CodingError::BadWorkerIndex(0))
+        ));
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        let m = Matrix::zeros(1, 1);
+        let r = vec![(5, m)];
+        assert!(matches!(
+            validate_results(4, &r),
+            Err(CodingError::BadWorkerIndex(5))
+        ));
+    }
+
+    #[test]
+    fn validate_sorts_by_index() {
+        let m = Matrix::zeros(1, 1);
+        let r = vec![(3, m.clone()), (1, m.clone()), (2, m)];
+        let sorted = validate_results(4, &r).unwrap();
+        let idx: Vec<usize> = sorted.iter().map(|(i, _)| *i).collect();
+        assert_eq!(idx, vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,131 @@
+//! CONV — conventional uncoded distribution, the paper's first baseline
+//! (CONV-DL in §VII-B). The data is split into K = N parts, worker i
+//! computes f on part i, and the master must wait for **all** workers:
+//! a single straggler stalls the step, which is exactly the effect
+//! Figs. 3–4 measure.
+
+use super::traits::{
+    validate_results, CodeParams, CodingError, DecodeCtx, Encoded, Scheme, Threshold,
+};
+use crate::config::SchemeKind;
+use crate::matrix::{split_rows, Matrix, PartitionSpec};
+use crate::rng::Rng;
+
+/// Uncoded (CONV) distribution.
+#[derive(Clone, Debug)]
+pub struct Uncoded {
+    params: CodeParams,
+}
+
+impl Uncoded {
+    /// Construct. K is forced to N (one raw part per worker); T to 0.
+    pub fn new(params: CodeParams) -> Self {
+        Self { params: CodeParams { k: params.n, t: 0, n: params.n } }
+    }
+}
+
+impl Scheme for Uncoded {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::Uncoded
+    }
+
+    fn params(&self) -> CodeParams {
+        self.params
+    }
+
+    fn threshold(&self, _deg: u32) -> Threshold {
+        Threshold::Exact(self.params.n)
+    }
+
+    fn supports_degree(&self, _deg: u32) -> bool {
+        true // raw parts: any f works
+    }
+
+    fn encode(&self, x: &Matrix, deg: u32, _rng: &mut Rng) -> Result<Encoded, CodingError> {
+        let (blocks, spec) = split_rows(x, self.params.n);
+        Ok(Encoded {
+            shares: blocks,
+            ctx: DecodeCtx {
+                kind: SchemeKind::Uncoded,
+                params: self.params,
+                alphas: vec![],
+                betas: vec![],
+                spec,
+                degree: deg,
+            },
+        })
+    }
+
+    fn decode(
+        &self,
+        ctx: &DecodeCtx,
+        results: &[(usize, Matrix)],
+    ) -> Result<Vec<Matrix>, CodingError> {
+        let n = ctx.params.n;
+        if results.len() < n {
+            return Err(CodingError::NotEnoughResults { need: n, got: results.len() });
+        }
+        let sorted = validate_results(n, results)?;
+        Ok(sorted.into_iter().map(|(_, m)| m).collect())
+    }
+}
+
+/// Spec helper used by tests/integration: uncoded "decode" output is one
+/// block per worker.
+pub fn uncoded_spec(x_rows: usize, n: usize) -> PartitionSpec {
+    PartitionSpec::new(x_rows, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{gram, stack_rows};
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn decode_requires_all_workers() {
+        let scheme = Uncoded::new(CodeParams::new(6, 0, 0));
+        let mut rng = rng_from_seed(80);
+        let x = Matrix::random_uniform(12, 3, -1.0, 1.0, &mut rng);
+        let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+        let partial: Vec<(usize, Matrix)> =
+            (0..5).map(|i| (i, enc.shares[i].clone())).collect();
+        assert!(matches!(
+            scheme.decode(&enc.ctx, &partial),
+            Err(CodingError::NotEnoughResults { need: 6, got: 5 })
+        ));
+    }
+
+    #[test]
+    fn identity_task_roundtrips_exactly() {
+        let scheme = Uncoded::new(CodeParams::new(5, 0, 0));
+        let mut rng = rng_from_seed(81);
+        let x = Matrix::random_gaussian(13, 4, 0.0, 1.0, &mut rng);
+        let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+        let results: Vec<(usize, Matrix)> =
+            enc.shares.iter().enumerate().map(|(i, s)| (i, s.clone())).collect();
+        let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+        assert_eq!(stack_rows(&decoded, &enc.ctx.spec), x);
+    }
+
+    #[test]
+    fn gram_task_is_exact_per_part() {
+        let scheme = Uncoded::new(CodeParams::new(4, 0, 0));
+        let mut rng = rng_from_seed(82);
+        let x = Matrix::random_gaussian(16, 6, 0.0, 1.0, &mut rng);
+        let enc = scheme.encode(&x, 2, &mut rng).unwrap();
+        let results: Vec<(usize, Matrix)> =
+            enc.shares.iter().enumerate().map(|(i, s)| (i, gram(s))).collect();
+        let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+        for (d, s) in decoded.iter().zip(&enc.shares) {
+            assert_eq!(d.as_slice(), gram(s).as_slice());
+        }
+    }
+
+    #[test]
+    fn threshold_is_n() {
+        let scheme = Uncoded::new(CodeParams::new(30, 0, 0));
+        assert_eq!(scheme.threshold(1), Threshold::Exact(30));
+        assert!(!scheme.is_private());
+    }
+}

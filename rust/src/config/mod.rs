@@ -1,0 +1,399 @@
+//! Typed configuration system (no `serde`/`toml` in this environment).
+//!
+//! [`SystemConfig`] is the single source of truth for an experiment run:
+//! cluster shape (N, S, T, K), coding scheme, transport security, delay
+//! model, DL hyper-parameters, and runtime/artifact paths. It can be
+//! loaded from a TOML-subset file (`[section]` + `key = value` lines,
+//! `#` comments), overridden by CLI options, and validated against the
+//! paper's parameter constraints (e.g. K + T ≤ N for SPACDC encode).
+
+mod parser;
+
+pub use parser::{parse_file, parse_str, ConfigError, RawConfig};
+
+/// Which coding scheme drives an experiment (paper Table II rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SchemeKind {
+    /// Conventional uncoded distribution (CONV).
+    Uncoded,
+    /// MDS codes (Lee et al. [22]).
+    Mds,
+    /// MatDot codes [24].
+    MatDot,
+    /// Polynomial codes [23].
+    Polynomial,
+    /// Lagrange coded computing [27].
+    Lcc,
+    /// Secure polynomial codes [34].
+    SecPoly,
+    /// Berrut approximated coded computing [18] (no privacy).
+    Bacc,
+    /// This paper's scheme.
+    Spacdc,
+}
+
+impl SchemeKind {
+    /// Parse from the CLI/config token.
+    pub fn from_str_token(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "uncoded" | "conv" => Self::Uncoded,
+            "mds" => Self::Mds,
+            "matdot" => Self::MatDot,
+            "polynomial" | "poly" => Self::Polynomial,
+            "lcc" => Self::Lcc,
+            "secpoly" => Self::SecPoly,
+            "bacc" => Self::Bacc,
+            "spacdc" => Self::Spacdc,
+            _ => return None,
+        })
+    }
+
+    /// Canonical display name (paper nomenclature).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Uncoded => "CONV",
+            Self::Mds => "MDS",
+            Self::MatDot => "MATDOT",
+            Self::Polynomial => "POLY",
+            Self::Lcc => "LCC",
+            Self::SecPoly => "SECPOLY",
+            Self::Bacc => "BACC",
+            Self::Spacdc => "SPACDC",
+        }
+    }
+
+    /// All schemes, in Table II order.
+    pub fn all() -> [SchemeKind; 8] {
+        [
+            Self::Polynomial,
+            Self::MatDot,
+            Self::SecPoly,
+            Self::Bacc,
+            Self::Lcc,
+            Self::Spacdc,
+            Self::Mds,
+            Self::Uncoded,
+        ]
+    }
+}
+
+/// Transport security between master and workers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum TransportSecurity {
+    /// Shares travel in the clear (all baselines, as in the paper).
+    Plain,
+    /// Shares sealed with MEA-ECC (§IV) — SPACDC's default.
+    #[default]
+    MeaEcc,
+}
+
+/// Straggler delay injection, mirroring the paper's `sleep()` method.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DelayConfig {
+    /// Multiplicative service-time factor for stragglers (e.g. 5.0 means
+    /// a straggler takes 5× the nominal compute time).
+    pub straggler_factor: f64,
+    /// Base per-task artificial service time in seconds (the simulated
+    /// "cluster-grade" compute cost floor; 0 disables).
+    pub base_service_s: f64,
+    /// Jitter fraction applied to every service time (uniform ±).
+    pub jitter: f64,
+}
+
+impl Default for DelayConfig {
+    fn default() -> Self {
+        Self { straggler_factor: 5.0, base_service_s: 0.0, jitter: 0.1 }
+    }
+}
+
+/// DL hyper-parameters for SPACDC-DL (§VI/§VII).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DlConfig {
+    /// Layer widths, input first, classes last.
+    pub layers: Vec<usize>,
+    /// Mini-batch size.
+    pub batch_size: usize,
+    /// Learning rate η.
+    pub learning_rate: f32,
+    /// Training epochs.
+    pub epochs: usize,
+    /// Training-set size (synthetic MNIST-like).
+    pub train_examples: usize,
+    /// Test-set size.
+    pub test_examples: usize,
+}
+
+impl Default for DlConfig {
+    fn default() -> Self {
+        Self {
+            layers: vec![784, 256, 128, 10],
+            batch_size: 64,
+            learning_rate: 0.05,
+            epochs: 10,
+            train_examples: 4096,
+            test_examples: 1024,
+        }
+    }
+}
+
+/// Full experiment configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SystemConfig {
+    /// Number of workers N.
+    pub workers: usize,
+    /// Number of stragglers S.
+    pub stragglers: usize,
+    /// Number of colluding workers T (also the number of privacy masks).
+    pub colluders: usize,
+    /// Number of data partitions K.
+    pub partitions: usize,
+    /// Coding scheme.
+    pub scheme: SchemeKind,
+    /// Transport security.
+    pub transport: TransportSecurity,
+    /// Delay injection.
+    pub delay: DelayConfig,
+    /// DL hyper-parameters.
+    pub dl: DlConfig,
+    /// RNG seed for the whole experiment.
+    pub seed: u64,
+    /// Directory of AOT artifacts.
+    pub artifacts_dir: String,
+    /// Prefer the PJRT path when an artifact matches.
+    pub use_pjrt: bool,
+}
+
+impl Default for SystemConfig {
+    fn default() -> Self {
+        // Paper §VII-B: N = 30 workers, T = 3 colluders, K chosen by the
+        // experiment; scenarios vary S ∈ {0, 3, 5, 7}.
+        Self {
+            workers: 30,
+            stragglers: 3,
+            colluders: 3,
+            partitions: 4,
+            scheme: SchemeKind::Spacdc,
+            transport: TransportSecurity::MeaEcc,
+            delay: DelayConfig::default(),
+            dl: DlConfig::default(),
+            seed: 0xC0DE,
+            artifacts_dir: "artifacts".to_string(),
+            use_pjrt: true,
+        }
+    }
+}
+
+/// Validation failure.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigValidationError {
+    /// A structural constraint was violated.
+    #[error("invalid config: {0}")]
+    Invalid(String),
+}
+
+impl SystemConfig {
+    /// Validate the paper's structural constraints.
+    pub fn validate(&self) -> Result<(), ConfigValidationError> {
+        let err = |m: String| Err(ConfigValidationError::Invalid(m));
+        if self.workers == 0 {
+            return err("workers must be ≥ 1".into());
+        }
+        if self.partitions == 0 {
+            return err("partitions K must be ≥ 1".into());
+        }
+        if self.stragglers >= self.workers {
+            return err(format!(
+                "stragglers S={} must be < workers N={}",
+                self.stragglers, self.workers
+            ));
+        }
+        // SPACDC/BACC encode at K+T interpolation nodes; sensible setups
+        // keep K+T ≤ N so the non-straggling returns carry information.
+        if matches!(self.scheme, SchemeKind::Spacdc)
+            && self.partitions + self.colluders > self.workers
+        {
+            return err(format!(
+                "SPACDC needs K+T ≤ N (K={}, T={}, N={})",
+                self.partitions, self.colluders, self.workers
+            ));
+        }
+        if matches!(self.scheme, SchemeKind::Mds | SchemeKind::Polynomial)
+            && self.partitions > self.workers
+        {
+            return err(format!(
+                "{} needs K ≤ N (K={}, N={})",
+                self.scheme.name(),
+                self.partitions,
+                self.workers
+            ));
+        }
+        if self.dl.layers.len() < 2 {
+            return err("DL network needs ≥ 2 layers".into());
+        }
+        if !(self.dl.learning_rate > 0.0) {
+            return err("learning rate must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// Apply `key = value` overrides from a parsed raw config.
+    pub fn apply_raw(&mut self, raw: &RawConfig) -> Result<(), ConfigError> {
+        for (section, key, value) in raw.entries() {
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            self.apply_kv(&full, value)?;
+        }
+        Ok(())
+    }
+
+    /// Apply one dotted-path override (also used for CLI `--set k=v`).
+    pub fn apply_kv(&mut self, key: &str, value: &str) -> Result<(), ConfigError> {
+        let bad = |k: &str, v: &str| ConfigError::BadValue(k.to_string(), v.to_string());
+        match key {
+            "cluster.workers" | "workers" => {
+                self.workers = value.parse().map_err(|_| bad(key, value))?
+            }
+            "cluster.stragglers" | "stragglers" => {
+                self.stragglers = value.parse().map_err(|_| bad(key, value))?
+            }
+            "cluster.colluders" | "colluders" => {
+                self.colluders = value.parse().map_err(|_| bad(key, value))?
+            }
+            "cluster.partitions" | "partitions" => {
+                self.partitions = value.parse().map_err(|_| bad(key, value))?
+            }
+            "cluster.scheme" | "scheme" => {
+                self.scheme =
+                    SchemeKind::from_str_token(value).ok_or_else(|| bad(key, value))?
+            }
+            "cluster.transport" | "transport" => {
+                self.transport = match value {
+                    "plain" => TransportSecurity::Plain,
+                    "mea-ecc" | "mea_ecc" | "ecc" => TransportSecurity::MeaEcc,
+                    _ => return Err(bad(key, value)),
+                }
+            }
+            "delay.straggler_factor" => {
+                self.delay.straggler_factor = value.parse().map_err(|_| bad(key, value))?
+            }
+            "delay.base_service_s" => {
+                self.delay.base_service_s = value.parse().map_err(|_| bad(key, value))?
+            }
+            "delay.jitter" => self.delay.jitter = value.parse().map_err(|_| bad(key, value))?,
+            "dl.batch_size" => {
+                self.dl.batch_size = value.parse().map_err(|_| bad(key, value))?
+            }
+            "dl.learning_rate" => {
+                self.dl.learning_rate = value.parse().map_err(|_| bad(key, value))?
+            }
+            "dl.epochs" => self.dl.epochs = value.parse().map_err(|_| bad(key, value))?,
+            "dl.train_examples" => {
+                self.dl.train_examples = value.parse().map_err(|_| bad(key, value))?
+            }
+            "dl.test_examples" => {
+                self.dl.test_examples = value.parse().map_err(|_| bad(key, value))?
+            }
+            "dl.layers" => {
+                let layers: Result<Vec<usize>, _> =
+                    value.split(',').map(|t| t.trim().parse()).collect();
+                self.dl.layers = layers.map_err(|_| bad(key, value))?;
+            }
+            "seed" => self.seed = value.parse().map_err(|_| bad(key, value))?,
+            "runtime.artifacts_dir" | "artifacts_dir" => {
+                self.artifacts_dir = value.to_string()
+            }
+            "runtime.use_pjrt" | "use_pjrt" => {
+                self.use_pjrt = match value {
+                    "true" | "1" | "yes" => true,
+                    "false" | "0" | "no" => false,
+                    _ => return Err(bad(key, value)),
+                }
+            }
+            _ => return Err(ConfigError::UnknownKey(key.to_string())),
+        }
+        Ok(())
+    }
+
+    /// Load from a config file, then validate.
+    pub fn from_file(path: &str) -> Result<Self, ConfigError> {
+        let raw = parse_file(path)?;
+        let mut cfg = Self::default();
+        cfg.apply_raw(&raw)?;
+        cfg.validate().map_err(|e| ConfigError::Validation(e.to_string()))?;
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_scenario_2() {
+        let c = SystemConfig::default();
+        assert_eq!(c.workers, 30);
+        assert_eq!(c.colluders, 3);
+        assert_eq!(c.stragglers, 3);
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn apply_kv_overrides() {
+        let mut c = SystemConfig::default();
+        c.apply_kv("workers", "8").unwrap();
+        c.apply_kv("scheme", "bacc").unwrap();
+        c.apply_kv("dl.layers", "784, 100, 10").unwrap();
+        assert_eq!(c.workers, 8);
+        assert_eq!(c.scheme, SchemeKind::Bacc);
+        assert_eq!(c.dl.layers, vec![784, 100, 10]);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = SystemConfig::default();
+        assert!(matches!(
+            c.apply_kv("nope.nothing", "1"),
+            Err(ConfigError::UnknownKey(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_rejected() {
+        let mut c = SystemConfig::default();
+        assert!(matches!(
+            c.apply_kv("workers", "lots"),
+            Err(ConfigError::BadValue(_, _))
+        ));
+    }
+
+    #[test]
+    fn validation_catches_too_many_stragglers() {
+        let mut c = SystemConfig::default();
+        c.stragglers = 30;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validation_catches_kt_exceeding_n() {
+        let mut c = SystemConfig::default();
+        c.partitions = 28;
+        c.colluders = 5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn scheme_token_roundtrip() {
+        for s in SchemeKind::all() {
+            let token = s.name().to_ascii_lowercase();
+            let token = match token.as_str() {
+                "conv" => "uncoded".to_string(),
+                "poly" => "polynomial".to_string(),
+                t => t.to_string(),
+            };
+            assert_eq!(SchemeKind::from_str_token(&token), Some(s));
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Minimal TOML-subset parser: `[section]` headers, `key = value` pairs,
+//! `#` comments, blank lines. Values are kept as raw strings; typing
+//! happens in `SystemConfig::apply_kv`.
+
+/// Parse/IO error for config loading.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    /// File could not be read.
+    #[error("cannot read config {0}: {1}")]
+    Io(String, String),
+    /// A line failed to parse.
+    #[error("config syntax error at line {0}: {1}")]
+    Syntax(usize, String),
+    /// Key exists but value failed to type-check.
+    #[error("bad value for {0}: {1:?}")]
+    BadValue(String, String),
+    /// Key is not a recognized configuration path.
+    #[error("unknown config key: {0}")]
+    UnknownKey(String),
+    /// Structural validation failed after load.
+    #[error("{0}")]
+    Validation(String),
+}
+
+/// A parsed-but-untyped config: ordered (section, key, value) triples.
+#[derive(Debug, Default, Clone)]
+pub struct RawConfig {
+    entries: Vec<(String, String, String)>,
+}
+
+impl RawConfig {
+    /// Iterate (section, key, value). Section is "" before any header.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &str)> {
+        self.entries.iter().map(|(s, k, v)| (s.as_str(), k.as_str(), v.as_str()))
+    }
+
+    /// Lookup the last value for (section, key).
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.entries
+            .iter()
+            .rev()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v.as_str())
+    }
+}
+
+/// Parse config text.
+pub fn parse_str(text: &str) -> Result<RawConfig, ConfigError> {
+    let mut cfg = RawConfig::default();
+    let mut section = String::new();
+    for (lineno, raw_line) in text.lines().enumerate() {
+        let line = strip_comment(raw_line).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .ok_or_else(|| ConfigError::Syntax(lineno + 1, raw_line.to_string()))?;
+            section = name.trim().to_string();
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .ok_or_else(|| ConfigError::Syntax(lineno + 1, raw_line.to_string()))?;
+        let value = value.trim().trim_matches('"');
+        cfg.entries.push((section.clone(), key.trim().to_string(), value.to_string()));
+    }
+    Ok(cfg)
+}
+
+/// Parse a config file from disk.
+pub fn parse_file(path: &str) -> Result<RawConfig, ConfigError> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| ConfigError::Io(path.to_string(), e.to_string()))?;
+    parse_str(&text)
+}
+
+fn strip_comment(line: &str) -> &str {
+    match line.find('#') {
+        Some(i) => &line[..i],
+        None => line,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_keys_comments() {
+        let text = r#"
+# experiment
+seed = 7
+[cluster]
+workers = 30     # paper N
+scheme = "spacdc"
+[dl]
+layers = 784,256,10
+"#;
+        let cfg = parse_str(text).unwrap();
+        assert_eq!(cfg.get("", "seed"), Some("7"));
+        assert_eq!(cfg.get("cluster", "workers"), Some("30"));
+        assert_eq!(cfg.get("cluster", "scheme"), Some("spacdc"));
+        assert_eq!(cfg.get("dl", "layers"), Some("784,256,10"));
+    }
+
+    #[test]
+    fn later_values_win() {
+        let cfg = parse_str("a = 1\na = 2\n").unwrap();
+        assert_eq!(cfg.get("", "a"), Some("2"));
+    }
+
+    #[test]
+    fn syntax_errors_carry_line_numbers() {
+        let err = parse_str("ok = 1\nbroken line\n").unwrap_err();
+        match err {
+            ConfigError::Syntax(line, _) => assert_eq!(line, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unterminated_section_is_error() {
+        assert!(parse_str("[cluster\n").is_err());
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(matches!(
+            parse_file("/nonexistent/path.toml"),
+            Err(ConfigError::Io(_, _))
+        ));
+    }
+}

@@ -1,0 +1,494 @@
+//! The master: drives encoded rounds end-to-end (encode → seal →
+//! dispatch → collect → decrypt → decode) and owns all accounting.
+
+use super::messages::{ResultMsg, WirePayload, WorkOrder};
+use super::pool::WorkerPool;
+use crate::coding::{make_scheme, CodeParams, MatDot, Scheme};
+use crate::config::{SchemeKind, SystemConfig, TransportSecurity};
+use crate::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc};
+use crate::field::Fp61;
+use crate::matrix::Matrix;
+use crate::metrics::{names, MetricsRegistry};
+use crate::rng::{derive_seed, rng_from_seed, Rng};
+use crate::runtime::{Executor, WorkerOp};
+use crate::sim::{CollusionPool, DelayModel, EavesdropLog};
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Result of one coded round.
+#[derive(Debug)]
+pub struct RoundOutcome {
+    /// Decoded per-block results `Yᵢ ≈ f(Xᵢ)` (for block-map rounds) or
+    /// the single full product (MatDot rounds).
+    pub blocks: Vec<Matrix>,
+    /// Wall-clock for the whole round (dispatch → decode done).
+    pub wall: Duration,
+    /// How many worker results the decoder consumed.
+    pub results_used: usize,
+}
+
+/// Builder for [`Master`].
+pub struct MasterBuilder {
+    cfg: SystemConfig,
+    executor: Option<Executor>,
+    eavesdropper: Option<Arc<EavesdropLog>>,
+    collusion: Option<Arc<CollusionPool>>,
+    metrics: Option<Arc<MetricsRegistry>>,
+}
+
+impl MasterBuilder {
+    /// Start from a config.
+    pub fn new(cfg: SystemConfig) -> Self {
+        Self { cfg, executor: None, eavesdropper: None, collusion: None, metrics: None }
+    }
+
+    /// Attach an executor (default: native with fresh metrics).
+    pub fn executor(mut self, e: Executor) -> Self {
+        self.executor = Some(e);
+        self
+    }
+
+    /// Attach an eavesdropper tap.
+    pub fn eavesdropper(mut self, tap: Arc<EavesdropLog>) -> Self {
+        self.eavesdropper = Some(tap);
+        self
+    }
+
+    /// Attach a collusion pool (its members leak their shares).
+    pub fn collusion(mut self, pool: Arc<CollusionPool>) -> Self {
+        self.collusion = Some(pool);
+        self
+    }
+
+    /// Share a metrics registry.
+    pub fn metrics(mut self, m: Arc<MetricsRegistry>) -> Self {
+        self.metrics = Some(m);
+        self
+    }
+
+    /// Spawn the worker pool and build the master.
+    pub fn build(self) -> anyhow::Result<Master> {
+        self.cfg.validate().map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let metrics = self.metrics.unwrap_or_else(|| Arc::new(MetricsRegistry::new()));
+        let executor =
+            self.executor.unwrap_or_else(|| Executor::native(Arc::clone(&metrics)));
+        let curve = sim_curve();
+        let mut rng = rng_from_seed(derive_seed(self.cfg.seed, 0x3A57E2));
+        let keys = KeyPair::generate(&curve, &mut rng);
+        let pool = WorkerPool::spawn(
+            self.cfg.workers,
+            keys.public(),
+            executor,
+            self.collusion.clone(),
+            self.cfg.seed,
+        );
+        let params =
+            CodeParams::new(self.cfg.workers, self.cfg.partitions, self.cfg.colluders);
+        let (scheme, matdot) = match self.cfg.scheme {
+            SchemeKind::MatDot => (None, Some(MatDot::new(self.cfg.workers, self.cfg.partitions))),
+            kind => (make_scheme(kind, params), None),
+        };
+        let delays = DelayModel::new(
+            self.cfg.workers,
+            self.cfg.stragglers,
+            self.cfg.delay,
+            self.cfg.seed,
+        );
+        Ok(Master {
+            cfg: self.cfg,
+            scheme,
+            matdot,
+            pool,
+            keys,
+            mea: MeaEcc::new(curve, MaskMode::Keystream),
+            metrics,
+            eavesdropper: self.eavesdropper,
+            delays,
+            round: 0,
+            rng,
+            outstanding: HashMap::new(),
+        })
+    }
+}
+
+/// The master node.
+pub struct Master {
+    cfg: SystemConfig,
+    scheme: Option<Box<dyn Scheme>>,
+    matdot: Option<MatDot>,
+    pool: WorkerPool,
+    keys: KeyPair<Fp61>,
+    mea: MeaEcc<Fp61>,
+    metrics: Arc<MetricsRegistry>,
+    eavesdropper: Option<Arc<EavesdropLog>>,
+    delays: DelayModel,
+    round: u64,
+    rng: Rng,
+    /// round → results still in flight (late-arrival accounting).
+    outstanding: HashMap<u64, usize>,
+}
+
+impl Master {
+    /// Convenience: build with defaults from a config.
+    pub fn from_config(cfg: SystemConfig) -> anyhow::Result<Self> {
+        MasterBuilder::new(cfg).build()
+    }
+
+    /// The metrics registry.
+    pub fn metrics(&self) -> &Arc<MetricsRegistry> {
+        &self.metrics
+    }
+
+    /// The active config.
+    pub fn config(&self) -> &SystemConfig {
+        &self.cfg
+    }
+
+    /// The straggler set chosen for this scenario.
+    pub fn straggler_set(&self) -> Vec<usize> {
+        self.delays.straggler_set()
+    }
+
+    /// Run one block-map round: distribute `f = op` over the row-blocks
+    /// of `x` with the configured scheme, return `{Yᵢ ≈ f(Xᵢ)}`.
+    pub fn run_blockmap(&mut self, op: WorkerOp, x: &Matrix) -> anyhow::Result<RoundOutcome> {
+        let scheme = self
+            .scheme
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("configured scheme is a pair code; use run_matmul"))?;
+        let result = self.run_blockmap_with(&*scheme, op, x);
+        self.scheme = Some(scheme);
+        result
+    }
+
+    fn run_blockmap_with(
+        &mut self,
+        scheme: &dyn Scheme,
+        op: WorkerOp,
+        x: &Matrix,
+    ) -> anyhow::Result<RoundOutcome> {
+        let deg = op.degree();
+        if !scheme.supports_degree(deg) {
+            anyhow::bail!("{} does not support degree-{deg} tasks", scheme.kind().name());
+        }
+        self.drain_stale();
+        self.round += 1;
+        let round = self.round;
+        let t0 = Instant::now();
+
+        // Phase 1: encode (+T masks) — §V-B "data process".
+        let encoded = {
+            let _t = self.metrics.time_phase("phase.encode");
+            scheme.encode(x, deg, &mut self.rng)?
+        };
+
+        // Dispatch sealed shares.
+        {
+            let metrics = Arc::clone(&self.metrics);
+            let _t = metrics.time_phase("phase.dispatch");
+            for (w, share) in encoded.shares.iter().enumerate() {
+                let payload = self.seal_for(w, share);
+                self.capture(w, true, &payload);
+                self.metrics.add(names::SYMBOLS_TO_WORKERS, payload.symbols() as u64);
+                self.metrics.inc(names::TASKS_DISPATCHED);
+                self.pool.dispatch(WorkOrder {
+                    round,
+                    worker: w,
+                    op: op.clone(),
+                    payloads: vec![payload],
+                    delay: self.delays.service_delay(w, round),
+                });
+            }
+        }
+
+        // Phase 3: collect + decode.
+        let wait = self.wait_count(scheme.threshold(deg));
+        let results = self.collect(round, wait, self.cfg.workers)?;
+        let used = results.len();
+        let decoded = {
+            let _t = self.metrics.time_phase("phase.decode");
+            scheme.decode(&encoded.ctx, &results)?
+        };
+        Ok(RoundOutcome { blocks: decoded, wall: t0.elapsed(), results_used: used })
+    }
+
+    /// Run one MatDot round: the full product `A·B` via the pair code.
+    pub fn run_matmul(&mut self, a: &Matrix, b: &Matrix) -> anyhow::Result<RoundOutcome> {
+        let code = self
+            .matdot
+            .clone()
+            .ok_or_else(|| anyhow::anyhow!("configured scheme is not MatDot; use run_blockmap"))?;
+        let code = &code;
+        self.drain_stale();
+        self.round += 1;
+        let round = self.round;
+        let t0 = Instant::now();
+
+        let encoded = {
+            let _t = self.metrics.time_phase("phase.encode");
+            code.encode_pair(a, b)?
+        };
+
+        {
+            let metrics = Arc::clone(&self.metrics);
+            let _t = metrics.time_phase("phase.dispatch");
+            for (w, (pa, pb)) in encoded.shares.iter().enumerate() {
+                let payload_a = self.seal_for(w, pa);
+                let payload_b = self.seal_for(w, pb);
+                for p in [&payload_a, &payload_b] {
+                    self.capture(w, true, p);
+                    self.metrics.add(names::SYMBOLS_TO_WORKERS, p.symbols() as u64);
+                }
+                self.metrics.inc(names::TASKS_DISPATCHED);
+                self.pool.dispatch(WorkOrder {
+                    round,
+                    worker: w,
+                    op: WorkerOp::PairProduct,
+                    payloads: vec![payload_a, payload_b],
+                    delay: self.delays.service_delay(w, round),
+                });
+            }
+        }
+
+        let results = self.collect(round, code.threshold(), self.cfg.workers)?;
+        let used = results.len();
+        let product = {
+            let _t = self.metrics.time_phase("phase.decode");
+            code.decode(&encoded, &results)?
+        };
+        Ok(RoundOutcome { blocks: vec![product], wall: t0.elapsed(), results_used: used })
+    }
+
+    /// How many results to wait for, given the scheme's threshold.
+    fn wait_count(&self, threshold: crate::coding::Threshold) -> usize {
+        match threshold {
+            crate::coding::Threshold::Exact(k) => k,
+            // Flexible: take what the non-stragglers produce (paper's
+            // experimental policy — decode fires when the fast workers
+            // are in, without waiting out the stragglers).
+            crate::coding::Threshold::Flexible { min } => {
+                (self.cfg.workers - self.cfg.stragglers).max(min)
+            }
+        }
+    }
+
+    /// Collect `wait` results for `round`, unsealing payloads.
+    fn collect(
+        &mut self,
+        round: u64,
+        wait: usize,
+        dispatched: usize,
+    ) -> anyhow::Result<Vec<(usize, Matrix)>> {
+        let metrics = Arc::clone(&self.metrics);
+        let _t = metrics.time_phase("phase.wait");
+        let mut results = Vec::with_capacity(wait);
+        let deadline = Duration::from_secs(60);
+        while results.len() < wait {
+            let msg: ResultMsg = self
+                .pool
+                .results()
+                .recv_timeout(deadline)
+                .map_err(|_| anyhow::anyhow!("timed out waiting for worker results"))?;
+            if msg.round != round {
+                self.note_stale(msg.round);
+                continue;
+            }
+            self.capture(msg.worker, false, &msg.payload);
+            self.metrics.add(names::SYMBOLS_TO_MASTER, msg.payload.symbols() as u64);
+            self.metrics.inc(names::RESULTS_USED);
+            let m = self.unseal(&msg.payload);
+            results.push((msg.worker, m));
+        }
+        // Anything not yet received is in flight → counted late when it
+        // lands during a later round (or drained on the next round).
+        self.outstanding.insert(round, dispatched - results.len());
+        Ok(results)
+    }
+
+    /// Seal (or pass through) a share for worker `w`.
+    fn seal_for(&mut self, w: usize, m: &Matrix) -> WirePayload {
+        match self.cfg.transport {
+            TransportSecurity::Plain => WirePayload::Plain(m.clone()),
+            TransportSecurity::MeaEcc => WirePayload::Sealed(self.mea.encrypt(
+                m,
+                &self.pool.worker_pks()[w],
+                &mut self.rng,
+            )),
+        }
+    }
+
+    /// Unseal a worker result.
+    fn unseal(&self, p: &WirePayload) -> Matrix {
+        match p {
+            WirePayload::Plain(m) => m.clone(),
+            WirePayload::Sealed(s) => self.mea.decrypt(s, &self.keys),
+        }
+    }
+
+    /// Record an eavesdropped wire payload.
+    fn capture(&self, worker: usize, downlink: bool, p: &WirePayload) {
+        if let Some(tap) = &self.eavesdropper {
+            tap.capture(worker, downlink, p.wire_view());
+        }
+    }
+
+    /// Drain results from previous rounds that arrived after decode.
+    fn drain_stale(&mut self) {
+        while let Ok(msg) = self.pool.results().try_recv() {
+            self.note_stale(msg.round);
+        }
+    }
+
+    fn note_stale(&mut self, round: u64) {
+        self.metrics.inc(names::RESULTS_LATE);
+        if let Some(left) = self.outstanding.get_mut(&round) {
+            *left = left.saturating_sub(1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::matrix::{matmul, split_rows};
+
+    fn base_cfg(scheme: SchemeKind) -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.workers = 12;
+        cfg.partitions = 3;
+        cfg.colluders = 2;
+        cfg.stragglers = 2;
+        cfg.scheme = scheme;
+        cfg.delay.base_service_s = 0.0; // fast tests
+        cfg
+    }
+
+    #[test]
+    fn spacdc_round_end_to_end_sealed() {
+        let mut master = Master::from_config(base_cfg(SchemeKind::Spacdc)).unwrap();
+        let mut rng = rng_from_seed(1);
+        let x = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
+        let v = Arc::new(Matrix::random_gaussian(8, 4, 0.0, 1.0, &mut rng));
+        let out = master
+            .run_blockmap(WorkerOp::RightMul(Arc::clone(&v)), &x)
+            .unwrap();
+        assert_eq!(out.blocks.len(), 3);
+        assert_eq!(out.results_used, 10); // N − S
+        let (blocks, _) = split_rows(&x, 3);
+        for (d, b) in out.blocks.iter().zip(&blocks) {
+            let err = d.rel_error(&matmul(b, &v));
+            // Approximate decode at N=12, S=2, with privacy masks: the
+            // bound here is coarse; accuracy-vs-returns is characterized
+            // precisely in the coding-layer tests.
+            assert!(err < 0.5, "err={err}");
+        }
+        // Transport accounting is live.
+        assert!(master.metrics().get(names::SYMBOLS_TO_WORKERS) > 0);
+        assert!(master.metrics().get(names::SYMBOLS_TO_MASTER) > 0);
+    }
+
+    #[test]
+    fn mds_round_exact_decode() {
+        let mut cfg = base_cfg(SchemeKind::Mds);
+        cfg.transport = TransportSecurity::Plain;
+        let mut master = Master::from_config(cfg).unwrap();
+        let mut rng = rng_from_seed(2);
+        let x = Matrix::random_gaussian(24, 6, 0.0, 1.0, &mut rng);
+        let v = Arc::new(Matrix::random_gaussian(6, 5, 0.0, 1.0, &mut rng));
+        let out = master.run_blockmap(WorkerOp::RightMul(Arc::clone(&v)), &x).unwrap();
+        assert_eq!(out.results_used, 3); // threshold K
+        let (blocks, _) = split_rows(&x, 3);
+        for (d, b) in out.blocks.iter().zip(&blocks) {
+            assert!(d.rel_error(&matmul(b, &v)) < 1e-2);
+        }
+    }
+
+    #[test]
+    fn uncoded_round_waits_for_everyone() {
+        let mut cfg = base_cfg(SchemeKind::Uncoded);
+        cfg.partitions = 12;
+        let mut master = Master::from_config(cfg).unwrap();
+        let mut rng = rng_from_seed(3);
+        let x = Matrix::random_gaussian(24, 4, 0.0, 1.0, &mut rng);
+        let out = master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+        assert_eq!(out.results_used, 12);
+    }
+
+    #[test]
+    fn matdot_round_full_product() {
+        let mut cfg = base_cfg(SchemeKind::MatDot);
+        cfg.partitions = 3;
+        let mut master = Master::from_config(cfg).unwrap();
+        let mut rng = rng_from_seed(4);
+        let a = Matrix::random_gaussian(8, 9, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_gaussian(9, 7, 0.0, 1.0, &mut rng);
+        let out = master.run_matmul(&a, &b).unwrap();
+        assert_eq!(out.results_used, 5); // 2K−1
+        assert_eq!(out.blocks.len(), 1);
+        assert!(out.blocks[0].rel_error(&matmul(&a, &b)) < 1e-2);
+    }
+
+    #[test]
+    fn blockmap_on_matdot_config_is_an_error() {
+        let mut master = Master::from_config(base_cfg(SchemeKind::MatDot)).unwrap();
+        let x = Matrix::ones(6, 4);
+        assert!(master.run_blockmap(WorkerOp::Identity, &x).is_err());
+    }
+
+    #[test]
+    fn mds_rejects_gram_tasks() {
+        let mut master = Master::from_config(base_cfg(SchemeKind::Mds)).unwrap();
+        let x = Matrix::ones(6, 4);
+        assert!(master.run_blockmap(WorkerOp::Gram, &x).is_err());
+    }
+
+    #[test]
+    fn eavesdropper_sees_only_ciphertext_under_mea() {
+        let tap = Arc::new(EavesdropLog::new());
+        let cfg = base_cfg(SchemeKind::Spacdc);
+        let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
+        let mut rng = rng_from_seed(5);
+        let x = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
+        master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+        assert!(tap.count() > 0);
+        // Reconstruct what the shares would be and check decorrelation.
+        let params = CodeParams::new(12, 3, 2);
+        let scheme = crate::coding::Spacdc::new(params);
+        let enc = scheme.encode(&x, 1, &mut rng_from_seed(999)).unwrap();
+        let corr = tap.downlink_correlation(&enc.shares);
+        assert!(corr < 0.2, "wire payloads correlate with shares: {corr}");
+    }
+
+    #[test]
+    fn plain_transport_leaks_to_eavesdropper() {
+        let tap = Arc::new(EavesdropLog::new());
+        let mut cfg = base_cfg(SchemeKind::Bacc);
+        cfg.transport = TransportSecurity::Plain;
+        cfg.seed = 77;
+        let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
+        let mut rng = rng_from_seed(6);
+        let x = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
+        master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+        // BACC encode is deterministic → the true shares are exactly
+        // reproducible, and the plaintext wire bytes must match them.
+        let scheme = crate::coding::Bacc::new(CodeParams::new(12, 3, 0));
+        let enc = scheme.encode(&x, 1, &mut rng_from_seed(0)).unwrap();
+        let corr = tap.downlink_correlation(&enc.shares);
+        assert!(corr > 0.5, "plaintext transport should leak: {corr}");
+    }
+
+    #[test]
+    fn successive_rounds_reuse_pool() {
+        let mut master = Master::from_config(base_cfg(SchemeKind::Spacdc)).unwrap();
+        let mut rng = rng_from_seed(7);
+        let x = Matrix::random_gaussian(12, 4, 0.0, 1.0, &mut rng);
+        for _ in 0..3 {
+            let out = master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+            assert_eq!(out.blocks.len(), 3);
+        }
+        // Late results from earlier rounds may or may not have landed,
+        // but the master must still be consistent.
+        assert!(master.metrics().get(names::TASKS_DISPATCHED) >= 36);
+    }
+}

@@ -1,0 +1,72 @@
+//! Wire messages between master and workers.
+
+use crate::ecc::SealedMatrix;
+use crate::field::Fp61;
+use crate::matrix::Matrix;
+use crate::runtime::WorkerOp;
+use std::time::Duration;
+
+/// A payload as it travels the (simulated) network: sealed under MEA-ECC
+/// or in the clear, depending on [`TransportSecurity`]
+/// (crate::config::TransportSecurity).
+#[derive(Clone, Debug)]
+pub enum WirePayload {
+    /// Plaintext matrix (baseline schemes).
+    Plain(Matrix),
+    /// MEA-ECC ciphertext (SPACDC default).
+    Sealed(SealedMatrix<Fp61>),
+}
+
+impl WirePayload {
+    /// The bytes-on-the-wire view an eavesdropper records.
+    pub fn wire_view(&self) -> &Matrix {
+        match self {
+            WirePayload::Plain(m) => m,
+            WirePayload::Sealed(s) => &s.payload,
+        }
+    }
+
+    /// Symbol count (f32 elements) for the communication accounting.
+    pub fn symbols(&self) -> usize {
+        self.wire_view().len()
+    }
+}
+
+/// A work order for one worker in one round.
+#[derive(Clone, Debug)]
+pub struct WorkOrder {
+    /// Monotone round id.
+    pub round: u64,
+    /// Destination worker index.
+    pub worker: usize,
+    /// The operation to apply.
+    pub op: WorkerOp,
+    /// Operand payloads (1, or 2 for pair ops).
+    pub payloads: Vec<WirePayload>,
+    /// Injected service delay (straggler simulation).
+    pub delay: Duration,
+}
+
+/// A worker's result for one round.
+#[derive(Debug)]
+pub struct ResultMsg {
+    /// Round the result belongs to.
+    pub round: u64,
+    /// Originating worker.
+    pub worker: usize,
+    /// The computed (possibly sealed) result.
+    pub payload: WirePayload,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_payload_views_and_counts() {
+        let m = Matrix::ones(3, 4);
+        let p = WirePayload::Plain(m.clone());
+        assert_eq!(p.symbols(), 12);
+        assert_eq!(p.wire_view().as_slice(), m.as_slice());
+    }
+}

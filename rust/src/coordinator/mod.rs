@@ -1,0 +1,23 @@
+//! The L3 coordinator: master/worker runtime implementing the paper's
+//! three-phase protocol (Fig. 1):
+//!
+//! 1. **Data process** — master encodes with the configured scheme,
+//!    seals every share with MEA-ECC (§IV), dispatches to workers.
+//! 2. **Task computing** — worker threads decrypt, execute `f` through
+//!    the [`Executor`](crate::runtime::Executor) (PJRT artifact or native
+//!    kernel), encrypt the result, return it.
+//! 3. **Result recovering** — master collects until the scheme's wait
+//!    policy is satisfied, decrypts, decodes `{Yᵢ}`.
+//!
+//! Stragglers are injected per [`sim::DelayModel`](crate::sim::DelayModel);
+//! colluders and eavesdroppers observe through the [`sim`](crate::sim)
+//! taps. Every symbol crossing a link is counted in the metrics registry
+//! (the Fig. 6 accounting).
+
+mod master;
+mod messages;
+mod pool;
+
+pub use master::{Master, MasterBuilder, RoundOutcome};
+pub use messages::{ResultMsg, WirePayload, WorkOrder};
+pub use pool::WorkerPool;

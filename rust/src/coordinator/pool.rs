@@ -1,0 +1,274 @@
+//! The worker fabric: N long-lived threads, one per worker, each with its
+//! own ECC key pair. Workers receive [`WorkOrder`]s on a private channel,
+//! simulate their service delay, decrypt, compute through the
+//! [`Executor`], re-encrypt, and push the result onto the shared return
+//! channel — the paper's "task computing" phase (§III-A step 2).
+
+use super::messages::{ResultMsg, WirePayload, WorkOrder};
+use crate::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc, Point};
+use crate::field::Fp61;
+use crate::matrix::Matrix;
+use crate::rng::{derive_seed, rng_from_seed};
+use crate::runtime::Executor;
+use crate::sim::CollusionPool;
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A pool of worker threads plus the master-side channel ends.
+pub struct WorkerPool {
+    order_txs: Vec<Sender<WorkOrder>>,
+    result_rx: Receiver<ResultMsg>,
+    worker_pks: Vec<Point<Fp61>>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `n` workers. Each generates its own key pair (§IV-B step 1)
+    /// and publishes the public key to the master.
+    ///
+    /// * `master_pk` — the master's public key (workers encrypt results
+    ///   to it).
+    /// * `executor` — shared execution façade (PJRT or native).
+    /// * `collusion` — optional coalition tap; colluding workers deposit
+    ///   their decrypted shares there.
+    pub fn spawn(
+        n: usize,
+        master_pk: Point<Fp61>,
+        executor: Executor,
+        collusion: Option<Arc<CollusionPool>>,
+        seed: u64,
+    ) -> Self {
+        let curve = sim_curve();
+        let (result_tx, result_rx) = mpsc::channel::<ResultMsg>();
+        let mut order_txs = Vec::with_capacity(n);
+        let mut worker_pks = Vec::with_capacity(n);
+        let mut joins = Vec::with_capacity(n);
+
+        for w in 0..n {
+            let mut rng = rng_from_seed(derive_seed(seed, 0xBEEF_0000 + w as u64));
+            let keys = KeyPair::generate(&curve, &mut rng);
+            worker_pks.push(keys.public());
+
+            let (order_tx, order_rx) = mpsc::channel::<WorkOrder>();
+            order_txs.push(order_tx);
+
+            let result_tx = result_tx.clone();
+            let executor = executor.clone();
+            let collusion = collusion.clone();
+            let master_pk = master_pk;
+            let join = std::thread::Builder::new()
+                .name(format!("worker-{w}"))
+                .spawn(move || {
+                    worker_loop(
+                        w, keys, master_pk, order_rx, result_tx, executor, collusion, seed,
+                    )
+                })
+                .expect("spawn worker");
+            joins.push(join);
+        }
+
+        Self { order_txs, result_rx, worker_pks, joins }
+    }
+
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        self.order_txs.len()
+    }
+
+    /// Worker public keys, indexed by worker id.
+    pub fn worker_pks(&self) -> &[Point<Fp61>] {
+        &self.worker_pks
+    }
+
+    /// Send an order to its worker.
+    pub fn dispatch(&self, order: WorkOrder) {
+        let w = order.worker;
+        self.order_txs[w].send(order).expect("worker alive");
+    }
+
+    /// The master-side result receiver.
+    pub fn results(&self) -> &Receiver<ResultMsg> {
+        &self.result_rx
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the order channels ends the worker loops.
+        self.order_txs.clear();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    w: usize,
+    keys: KeyPair<Fp61>,
+    master_pk: Point<Fp61>,
+    orders: Receiver<WorkOrder>,
+    results: Sender<ResultMsg>,
+    executor: Executor,
+    collusion: Option<Arc<CollusionPool>>,
+    seed: u64,
+) {
+    let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
+    let mut rng = rng_from_seed(derive_seed(seed, 0xD0_0000 + w as u64));
+    while let Ok(order) = orders.recv() {
+        // Straggler simulation — the paper's sleep() injection.
+        if !order.delay.is_zero() {
+            std::thread::sleep(order.delay);
+        }
+
+        // Decrypt operands (§IV-B step 4).
+        let operands: Vec<Matrix> = order
+            .payloads
+            .iter()
+            .map(|p| match p {
+                WirePayload::Plain(m) => m.clone(),
+                WirePayload::Sealed(s) => mea.decrypt(s, &keys),
+            })
+            .collect();
+
+        // Colluding workers leak their plaintext shares to the pool.
+        if let Some(pool) = &collusion {
+            for m in &operands {
+                pool.deposit(w, m);
+            }
+        }
+
+        // Compute f (PJRT artifact or native kernel).
+        let out = executor.run(&order.op, &operands);
+
+        // Encrypt the result back to the master when the share arrived
+        // sealed (symmetric policy — §V-B step 2).
+        let sealed_round = matches!(order.payloads.first(), Some(WirePayload::Sealed(_)));
+        let payload = if sealed_round {
+            WirePayload::Sealed(mea.encrypt(&out, &master_pk, &mut rng))
+        } else {
+            WirePayload::Plain(out)
+        };
+
+        if results.send(ResultMsg { round: order.round, worker: w, payload }).is_err() {
+            break; // master gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::MetricsRegistry;
+    use crate::runtime::WorkerOp;
+    use std::time::Duration;
+
+    fn pool(n: usize) -> (WorkerPool, KeyPair<Fp61>) {
+        let curve = sim_curve();
+        let mut rng = rng_from_seed(0xAA);
+        let master = KeyPair::generate(&curve, &mut rng);
+        let exec = Executor::native(Arc::new(MetricsRegistry::new()));
+        let p = WorkerPool::spawn(n, master.public(), exec, None, 7);
+        (p, master)
+    }
+
+    #[test]
+    fn workers_echo_identity_orders() {
+        let (pool, _master) = pool(4);
+        for w in 0..4 {
+            pool.dispatch(WorkOrder {
+                round: 1,
+                worker: w,
+                op: WorkerOp::Identity,
+                payloads: vec![WirePayload::Plain(Matrix::ones(2, 2).scale(w as f32))],
+                delay: Duration::ZERO,
+            });
+        }
+        let mut seen = vec![false; 4];
+        for _ in 0..4 {
+            let r = pool.results().recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.round, 1);
+            match r.payload {
+                WirePayload::Plain(m) => {
+                    assert_eq!(m.get(0, 0), r.worker as f32);
+                }
+                _ => panic!("expected plain"),
+            }
+            seen[r.worker] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sealed_roundtrip_through_worker() {
+        let (pool, master) = pool(2);
+        let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
+        let mut rng = rng_from_seed(1);
+        let x = Matrix::random_gaussian(4, 4, 0.0, 1.0, &mut rng);
+        let sealed = mea.encrypt(&x, &pool.worker_pks()[0], &mut rng);
+        pool.dispatch(WorkOrder {
+            round: 9,
+            worker: 0,
+            op: WorkerOp::Identity,
+            payloads: vec![WirePayload::Sealed(sealed)],
+            delay: Duration::ZERO,
+        });
+        let r = pool.results().recv_timeout(Duration::from_secs(5)).unwrap();
+        match r.payload {
+            WirePayload::Sealed(s) => {
+                let opened = mea.decrypt(&s, &master);
+                assert_eq!(opened, x, "worker must echo the decrypted plaintext, re-sealed");
+            }
+            _ => panic!("expected sealed result for a sealed order"),
+        }
+    }
+
+    #[test]
+    fn colluders_deposit_plaintext() {
+        let curve = sim_curve();
+        let mut rng = rng_from_seed(0xBB);
+        let master = KeyPair::generate(&curve, &mut rng);
+        let exec = Executor::native(Arc::new(MetricsRegistry::new()));
+        let coalition = Arc::new(CollusionPool::new(vec![1]));
+        let pool =
+            WorkerPool::spawn(3, master.public(), exec, Some(Arc::clone(&coalition)), 7);
+        for w in 0..3 {
+            pool.dispatch(WorkOrder {
+                round: 1,
+                worker: w,
+                op: WorkerOp::Identity,
+                payloads: vec![WirePayload::Plain(Matrix::ones(2, 2))],
+                delay: Duration::ZERO,
+            });
+        }
+        for _ in 0..3 {
+            pool.results().recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        let gathered = coalition.gathered();
+        assert_eq!(gathered.len(), 1, "only worker 1 colludes");
+        assert_eq!(gathered[0].0, 1);
+    }
+
+    #[test]
+    fn straggler_delay_orders_arrival() {
+        let (pool, _master) = pool(2);
+        // Worker 0 delayed, worker 1 immediate → 1 arrives first.
+        pool.dispatch(WorkOrder {
+            round: 1,
+            worker: 0,
+            op: WorkerOp::Identity,
+            payloads: vec![WirePayload::Plain(Matrix::ones(1, 1))],
+            delay: Duration::from_millis(150),
+        });
+        pool.dispatch(WorkOrder {
+            round: 1,
+            worker: 1,
+            op: WorkerOp::Identity,
+            payloads: vec![WirePayload::Plain(Matrix::ones(1, 1))],
+            delay: Duration::ZERO,
+        });
+        let first = pool.results().recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(first.worker, 1, "non-straggler must arrive first");
+    }
+}

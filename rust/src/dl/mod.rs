@@ -1,0 +1,18 @@
+//! SPACDC-DL — the paper's deep-learning application (§VI, Algorithm 2).
+//!
+//! * [`dataset`] — synthetic MNIST-like classification data (no network
+//!   access in this environment; see DESIGN.md §3 for the substitution).
+//! * [`network`] — the DNN of §VI-A: dense layers, forward/backward,
+//!   SGD updates (Eqs. (19)–(22)).
+//! * [`trainer`] — distributed training where the backward-pass matrix
+//!   product of Eq. (23) is computed through the coded master/worker
+//!   fabric, under any of the paper's four algorithms
+//!   (CONV-DL, MDS-DL, MATDOT-DL, SPACDC-DL).
+
+pub mod dataset;
+pub mod network;
+pub mod trainer;
+
+pub use dataset::Dataset;
+pub use network::{Network, TrainBatch};
+pub use trainer::{train, EpochStats, TrainReport, TrainerOptions};

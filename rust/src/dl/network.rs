@@ -1,0 +1,352 @@
+//! The DNN of §VI-A: dense layers with column-major batches,
+//! `aˡ = σ(Θˡ aˡ⁻¹ + bˡ)` (Eq. (19)), ReLU hidden activations, softmax +
+//! cross-entropy at the output, SGD updates (Eq. (21)).
+//!
+//! The backward pass exposes its heavy matrix product — `(Θˡ)ᵀ · δˡ`
+//! of Eq. (22)/(23) — through a pluggable multiplier so the trainer can
+//! route it through the coded master/worker fabric. Everything else
+//! (activations, Hadamard products, updates) stays on the master, exactly
+//! as Algorithm 2 prescribes.
+
+use crate::dl::dataset::Dataset;
+use crate::matrix::{matmul, matmul_tb, Matrix};
+use crate::rng::{derive_seed, rng_from_seed};
+
+/// One dense layer.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    /// Weights Θ (out × in).
+    pub w: Matrix,
+    /// Bias b (out).
+    pub b: Vec<f32>,
+}
+
+/// A mini-batch in network convention: features d×batch, one-hot labels
+/// classes×batch.
+#[derive(Clone, Debug)]
+pub struct TrainBatch {
+    /// Inputs (one example per column).
+    pub x: Matrix,
+    /// One-hot labels.
+    pub y: Matrix,
+}
+
+/// Cached forward state for backprop.
+pub struct ForwardState {
+    /// a⁰ (input) .. a^L (output, post-softmax).
+    pub activations: Vec<Matrix>,
+    /// τ¹ .. τ^L (pre-activations).
+    pub taus: Vec<Matrix>,
+}
+
+/// Per-layer gradients.
+pub struct Gradients {
+    /// dΘ per layer.
+    pub dw: Vec<Matrix>,
+    /// db per layer.
+    pub db: Vec<Vec<f32>>,
+}
+
+/// The multiplier used for the backward product `(Θˡ⁺¹)ᵀ · δˡ⁺¹`.
+/// Arguments: (layer index of Θ, Θ, δ). Returns the product.
+pub type BackwardMul<'a> = dyn FnMut(usize, &Matrix, &Matrix) -> Matrix + 'a;
+
+/// A multi-layer perceptron.
+#[derive(Clone, Debug)]
+pub struct Network {
+    layers: Vec<Layer>,
+    dims: Vec<usize>,
+}
+
+impl Network {
+    /// He-initialized network with the given layer widths
+    /// (input, hidden…, classes).
+    pub fn new(dims: &[usize], seed: u64) -> Self {
+        assert!(dims.len() >= 2, "need at least input and output layers");
+        let mut layers = Vec::with_capacity(dims.len() - 1);
+        for l in 0..dims.len() - 1 {
+            let (fan_in, fan_out) = (dims[l], dims[l + 1]);
+            let std = (2.0 / fan_in as f64).sqrt() as f32;
+            let mut rng = rng_from_seed(derive_seed(seed, 0x11E7 + l as u64));
+            layers.push(Layer {
+                w: Matrix::random_gaussian(fan_out, fan_in, 0.0, std, &mut rng),
+                b: vec![0.0; fan_out],
+            });
+        }
+        Self { layers, dims: dims.to_vec() }
+    }
+
+    /// Layer widths.
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// The layers (read access for the coded trainer).
+    pub fn layers(&self) -> &[Layer] {
+        &self.layers
+    }
+
+    /// Total parameter count.
+    pub fn parameter_count(&self) -> usize {
+        self.layers.iter().map(|l| l.w.len() + l.b.len()).sum()
+    }
+
+    /// Forward pass, caching activations for backprop.
+    pub fn forward(&self, x: &Matrix) -> ForwardState {
+        let mut activations = vec![x.clone()];
+        let mut taus = Vec::with_capacity(self.layers.len());
+        for (l, layer) in self.layers.iter().enumerate() {
+            let mut tau = matmul(&layer.w, activations.last().unwrap());
+            // + b (broadcast over columns)
+            for r in 0..tau.rows() {
+                for c in 0..tau.cols() {
+                    let v = tau.get(r, c) + layer.b[r];
+                    tau.set(r, c, v);
+                }
+            }
+            let a = if l + 1 == self.layers.len() {
+                softmax_cols(&tau)
+            } else {
+                tau.map(|v| v.max(0.0)) // ReLU
+            };
+            taus.push(tau);
+            activations.push(a);
+        }
+        ForwardState { activations, taus }
+    }
+
+    /// Mean cross-entropy of the forward output against one-hot `y`.
+    pub fn loss(&self, output: &Matrix, y: &Matrix) -> f64 {
+        let b = y.cols();
+        let mut loss = 0.0;
+        for c in 0..b {
+            for r in 0..y.rows() {
+                if y.get(r, c) > 0.5 {
+                    loss -= (output.get(r, c).max(1e-12) as f64).ln();
+                }
+            }
+        }
+        loss / b as f64
+    }
+
+    /// Backward pass with a custom multiplier for the Eq. (23) product.
+    /// Returns (loss, gradients).
+    pub fn backward_with(
+        &self,
+        fwd: &ForwardState,
+        y: &Matrix,
+        mm: &mut BackwardMul<'_>,
+    ) -> (f64, Gradients) {
+        let l_count = self.layers.len();
+        let batch = y.cols() as f32;
+        let output = fwd.activations.last().unwrap();
+        let loss = self.loss(output, y);
+
+        // δ^L for softmax-CE: (a^L − y).
+        let mut delta = output.sub(y);
+        let mut dw = vec![Matrix::zeros(1, 1); l_count];
+        let mut db = vec![Vec::new(); l_count];
+
+        for l in (0..l_count).rev() {
+            // dΘˡ = δˡ (aˡ⁻¹)ᵀ / batch   (Eq. (21))
+            dw[l] = matmul_tb(&delta, &fwd.activations[l]).scale(1.0 / batch);
+            db[l] = (0..delta.rows())
+                .map(|r| (0..delta.cols()).map(|c| delta.get(r, c)).sum::<f32>() / batch)
+                .collect();
+            if l > 0 {
+                // δˡ⁻¹ = (Θˡ)ᵀ δˡ ⊙ σ'(τˡ⁻¹)   (Eq. (22)) — the heavy
+                // product goes through the pluggable multiplier.
+                let h = mm(l, &self.layers[l].w, &delta);
+                let relu_grad = fwd.taus[l - 1].map(|v| if v > 0.0 { 1.0 } else { 0.0 });
+                delta = h.hadamard(&relu_grad);
+            }
+        }
+        (loss, Gradients { dw, db })
+    }
+
+    /// Backward with the local (uncoded) multiplier.
+    pub fn backward(&self, fwd: &ForwardState, y: &Matrix) -> (f64, Gradients) {
+        self.backward_with(fwd, y, &mut |_, w, delta| matmul(&w.transpose(), delta))
+    }
+
+    /// SGD step: Θ ← Θ − η·dΘ, b ← b − η·db  (Eq. (21)).
+    pub fn apply(&mut self, grads: &Gradients, lr: f32) {
+        for (l, layer) in self.layers.iter_mut().enumerate() {
+            layer.w.axpy(-lr, &grads.dw[l]);
+            for (bv, g) in layer.b.iter_mut().zip(&grads.db[l]) {
+                *bv -= lr * g;
+            }
+        }
+    }
+
+    /// Classification accuracy over a dataset (batched).
+    pub fn accuracy(&self, data: &Dataset, batch_size: usize) -> f64 {
+        let mut correct = 0usize;
+        let n = data.len();
+        let mut i = 0;
+        while i < n {
+            let idx: Vec<usize> = (i..(i + batch_size).min(n)).collect();
+            let (x, _) = data.batch(&idx);
+            let out = self.forward(&x);
+            let probs = out.activations.last().unwrap();
+            for (col, &example) in idx.iter().enumerate() {
+                let mut best = 0;
+                for r in 1..probs.rows() {
+                    if probs.get(r, col) > probs.get(best, col) {
+                        best = r;
+                    }
+                }
+                if best == data.y[example] {
+                    correct += 1;
+                }
+            }
+            i += batch_size;
+        }
+        correct as f64 / n as f64
+    }
+}
+
+/// Column-wise softmax.
+fn softmax_cols(m: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(m.rows(), m.cols());
+    for c in 0..m.cols() {
+        let mut mx = f32::NEG_INFINITY;
+        for r in 0..m.rows() {
+            mx = mx.max(m.get(r, c));
+        }
+        let mut sum = 0f32;
+        for r in 0..m.rows() {
+            let e = (m.get(r, c) - mx).exp();
+            out.set(r, c, e);
+            sum += e;
+        }
+        for r in 0..m.rows() {
+            out.set(r, c, out.get(r, c) / sum);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forward_shapes() {
+        let net = Network::new(&[8, 16, 4], 1);
+        let x = Matrix::ones(8, 5);
+        let f = net.forward(&x);
+        assert_eq!(f.activations.len(), 3);
+        assert_eq!(f.activations[2].shape(), (4, 5));
+        assert_eq!(f.taus[0].shape(), (16, 5));
+    }
+
+    #[test]
+    fn softmax_columns_sum_to_one() {
+        let net = Network::new(&[4, 3], 2);
+        let x = Matrix::ones(4, 6);
+        let f = net.forward(&x);
+        let probs = f.activations.last().unwrap();
+        for c in 0..6 {
+            let s: f32 = (0..3).map(|r| probs.get(r, c)).sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        // Numerically check dΘ for a tiny network.
+        let mut net = Network::new(&[3, 4, 2], 3);
+        let mut rng = rng_from_seed(4);
+        let x = Matrix::random_uniform(3, 5, 0.0, 1.0, &mut rng);
+        let mut y = Matrix::zeros(2, 5);
+        for c in 0..5 {
+            y.set(c % 2, c, 1.0);
+        }
+        let fwd = net.forward(&x);
+        let (_, grads) = net.backward(&fwd, &y);
+
+        let eps = 1e-3f32;
+        for (r, c) in [(0usize, 0usize), (1, 2), (3, 1)] {
+            let orig = net.layers[0].w.get(r, c);
+            net.layers[0].w.set(r, c, orig + eps);
+            let lp = net.loss(net.forward(&x).activations.last().unwrap(), &y);
+            net.layers[0].w.set(r, c, orig - eps);
+            let lm = net.loss(net.forward(&x).activations.last().unwrap(), &y);
+            net.layers[0].w.set(r, c, orig);
+            let numeric = ((lp - lm) / (2.0 * eps as f64)) as f32;
+            let analytic = grads.dw[0].get(r, c);
+            assert!(
+                (numeric - analytic).abs() < 2e-2,
+                "({r},{c}): numeric {numeric} vs analytic {analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn custom_multiplier_is_invoked_per_hidden_layer() {
+        let net = Network::new(&[6, 8, 7, 3], 5);
+        let x = Matrix::ones(6, 2);
+        let mut y = Matrix::zeros(3, 2);
+        y.set(0, 0, 1.0);
+        y.set(1, 1, 1.0);
+        let fwd = net.forward(&x);
+        let mut calls = Vec::new();
+        let (_, _) = net.backward_with(&fwd, &y, &mut |l, w, d| {
+            calls.push(l);
+            matmul(&w.transpose(), d)
+        });
+        // Hidden products for layers 2 and 1 (never layer 0).
+        assert_eq!(calls, vec![2, 1]);
+    }
+
+    #[test]
+    fn training_reduces_loss_locally() {
+        let data = Dataset::synthetic(256, 32, 4, 6);
+        let mut net = Network::new(&[32, 24, 4], 7);
+        let idx: Vec<usize> = (0..64).collect();
+        let (x, y) = data.batch(&idx);
+        let first_loss = {
+            let f = net.forward(&x);
+            net.loss(f.activations.last().unwrap(), &y)
+        };
+        for _ in 0..30 {
+            let f = net.forward(&x);
+            let (_, g) = net.backward(&f, &y);
+            net.apply(&g, 0.1);
+        }
+        let f = net.forward(&x);
+        let last_loss = net.loss(f.activations.last().unwrap(), &y);
+        assert!(
+            last_loss < first_loss * 0.5,
+            "loss {first_loss} → {last_loss} did not halve"
+        );
+    }
+
+    #[test]
+    fn accuracy_improves_with_training() {
+        let train = Dataset::synthetic_with_templates(512, 64, 4, 8, 80);
+        let test = Dataset::synthetic_with_templates(128, 64, 4, 8, 81);
+        let mut net = Network::new(&[64, 32, 4], 10);
+        let before = net.accuracy(&test, 32);
+        for epoch in 0..5 {
+            let order = train.epoch_order(1, epoch);
+            for chunk in order.chunks(32) {
+                let (x, y) = train.batch(chunk);
+                let f = net.forward(&x);
+                let (_, g) = net.backward(&f, &y);
+                net.apply(&g, 0.1);
+            }
+        }
+        let after = net.accuracy(&test, 32);
+        assert!(after > before + 0.2, "accuracy {before} → {after}");
+        assert!(after > 0.7, "final accuracy {after}");
+    }
+
+    #[test]
+    fn parameter_count_matches_dims() {
+        let net = Network::new(&[784, 256, 128, 10], 1);
+        let expect = 784 * 256 + 256 + 256 * 128 + 128 + 128 * 10 + 10;
+        assert_eq!(net.parameter_count(), expect);
+    }
+}

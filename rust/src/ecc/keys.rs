@@ -1,0 +1,139 @@
+//! Key generation and ECDH key exchange — §IV-B steps 1–2.
+
+use super::curve::{Curve, Point};
+use crate::field::{FieldElement, U256};
+use crate::rng::Rng;
+
+/// A party's key pair: private scalar `sk` and public point `pk = sk·G`.
+#[derive(Clone, Debug)]
+pub struct KeyPair<F: FieldElement> {
+    sk: U256,
+    pk: Point<F>,
+}
+
+impl<F: FieldElement> KeyPair<F> {
+    /// §IV-B step 1: pick random `sk`, compute `pk = sk·G`.
+    ///
+    /// The scalar is drawn with 128 random bits for the simulation curve
+    /// (ample for a 61-bit group) and retried if it degenerates to the
+    /// identity.
+    pub fn generate(curve: &Curve<F>, rng: &mut Rng) -> Self {
+        loop {
+            let sk = U256([rng.next_u64(), rng.next_u64(), 0, 0]);
+            if sk.is_zero() {
+                continue;
+            }
+            let pk = curve.mul_scalar(&sk, &curve.generator());
+            if !pk.is_infinity() {
+                return Self { sk, pk };
+            }
+        }
+    }
+
+    /// The public key.
+    pub fn public(&self) -> Point<F> {
+        self.pk
+    }
+
+    /// The private scalar (used internally by MEA decryption).
+    pub(crate) fn secret(&self) -> &U256 {
+        &self.sk
+    }
+
+    /// §IV-B step 2: ECDH share key `s_K = sk_self · pk_peer`.
+    pub fn shared_secret(&self, curve: &Curve<F>, peer_pk: &Point<F>) -> SharedSecret<F> {
+        SharedSecret { point: curve.mul_scalar(&self.sk, peer_pk) }
+    }
+}
+
+/// The ECDH shared point `s_K`. Both sides derive the same point:
+/// `sk_M·pk_W = sk_M·sk_W·G = sk_W·pk_M`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SharedSecret<F: FieldElement> {
+    point: Point<F>,
+}
+
+impl<F: FieldElement> SharedSecret<F> {
+    /// Wrap a raw point (used by MEA with the per-message point `k·pk`).
+    pub fn from_point(point: Point<F>) -> Self {
+        Self { point }
+    }
+
+    /// The underlying point.
+    pub fn point(&self) -> Point<F> {
+        self.point
+    }
+
+    /// Collapse the shared point into a 64-bit keystream seed by mixing
+    /// the limbs of both coordinates through SplitMix64.
+    ///
+    /// (The paper's Ψ keeps only the x-coordinate; mixing in y as well
+    /// costs nothing and removes the x/−x ambiguity.)
+    pub fn keystream_seed(&self) -> u64 {
+        use crate::rng::SplitMix64;
+        let mut h = SplitMix64::new(0xC0DE_D15E_ED15_7A2B);
+        let mut acc = 0u64;
+        if let Some((x, y)) = self.point.xy() {
+            for limb in x.to_limbs().iter().chain(y.to_limbs().iter()) {
+                acc = h.next_u64() ^ acc.rotate_left(17) ^ *limb;
+                h = SplitMix64::new(acc);
+            }
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ecc::{secp256k1, sim_curve};
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn ecdh_agreement_sim_curve() {
+        let curve = sim_curve();
+        let mut rng = rng_from_seed(42);
+        let master = KeyPair::generate(&curve, &mut rng);
+        let worker = KeyPair::generate(&curve, &mut rng);
+        // s_K = sk_M · pk_W  ==  s'_K = sk_W · pk_M   (§IV-B step 2)
+        let s1 = master.shared_secret(&curve, &worker.public());
+        let s2 = worker.shared_secret(&curve, &master.public());
+        assert_eq!(s1, s2);
+        assert_eq!(s1.keystream_seed(), s2.keystream_seed());
+    }
+
+    #[test]
+    fn ecdh_agreement_secp256k1() {
+        let curve = secp256k1();
+        let mut rng = rng_from_seed(43);
+        let a = KeyPair::generate(&curve, &mut rng);
+        let b = KeyPair::generate(&curve, &mut rng);
+        assert_eq!(
+            a.shared_secret(&curve, &b.public()),
+            b.shared_secret(&curve, &a.public())
+        );
+    }
+
+    #[test]
+    fn distinct_parties_get_distinct_secrets() {
+        let curve = sim_curve();
+        let mut rng = rng_from_seed(44);
+        let master = KeyPair::generate(&curve, &mut rng);
+        let w1 = KeyPair::generate(&curve, &mut rng);
+        let w2 = KeyPair::generate(&curve, &mut rng);
+        let s1 = master.shared_secret(&curve, &w1.public());
+        let s2 = master.shared_secret(&curve, &w2.public());
+        assert_ne!(s1, s2);
+        assert_ne!(s1.keystream_seed(), s2.keystream_seed());
+    }
+
+    #[test]
+    fn public_keys_are_on_curve() {
+        let curve = sim_curve();
+        let mut rng = rng_from_seed(45);
+        for _ in 0..10 {
+            let kp = KeyPair::generate(&curve, &mut rng);
+            assert!(curve.contains(&kp.public()));
+        }
+    }
+}

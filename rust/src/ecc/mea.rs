@@ -1,0 +1,272 @@
+//! MEA-ECC: Matrix Encryption Algorithm based on ECC — paper §IV-B.
+//!
+//! Encryption of a matrix M for worker Wᵢ (steps 3–4 of §IV-B):
+//!
+//! ```text
+//!   C = { k·G,  M ⊞ mask(k·pk_W) }          (master side, random k)
+//!   M = C.payload ⊟ mask(sk_W · (k·G))      (worker side)
+//! ```
+//!
+//! correctness resting on `k·pk_W = k·sk_W·G = sk_W·(k·G)`.
+//!
+//! Two mask constructions are provided ([`MaskMode`]):
+//!
+//! * [`MaskMode::Keystream`] (default) — the shared point seeds a
+//!   SplitMix64 keystream; one 32-bit word per element is XORed onto the
+//!   f32 *bit pattern*. Decryption is bit-exact, and unlike the paper's
+//!   rank-one mask, two ciphertext entries never leak their plaintext
+//!   difference. This is the strict strengthening documented in
+//!   DESIGN.md §3.
+//! * [`MaskMode::RankOne`] — the paper-literal `M + Ψ(k·pk_W)·𝟙` with
+//!   Ψ folded into a bounded float so f32 addition is invertible up to
+//!   rounding. Kept for complexity benches and fidelity tests.
+
+use super::curve::{Curve, Point};
+use super::keys::{KeyPair, SharedSecret};
+use crate::field::{FieldElement, U256};
+use crate::matrix::Matrix;
+use crate::rng::{Rng, SplitMix64};
+
+/// Which masking construction to use (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum MaskMode {
+    /// XOR keystream on f32 bit patterns (bit-exact, per-element).
+    #[default]
+    Keystream,
+    /// Paper-literal rank-one additive mask `Ψ(k·pk)·𝟙`.
+    RankOne,
+}
+
+/// A matrix encrypted under MEA-ECC.
+///
+/// Carries the ephemeral public point `k·G` (the first ciphertext
+/// component of §IV-B step 3) plus the masked payload. An eavesdropper
+/// sees exactly this struct and nothing else.
+#[derive(Clone, Debug)]
+pub struct SealedMatrix<F: FieldElement> {
+    /// Ephemeral point `k·G`.
+    pub ephemeral: Point<F>,
+    /// Masked payload (same shape as the plaintext).
+    pub payload: Matrix,
+    /// Which mask was applied.
+    pub mode: MaskMode,
+}
+
+impl<F: FieldElement> SealedMatrix<F> {
+    /// Ciphertext size in symbols (f32 elements) — used by the
+    /// communication-complexity accounting (Fig. 6).
+    pub fn symbols(&self) -> usize {
+        self.payload.len()
+    }
+}
+
+/// The MEA-ECC engine for one curve.
+pub struct MeaEcc<F: FieldElement> {
+    curve: Curve<F>,
+    mode: MaskMode,
+}
+
+impl<F: FieldElement> MeaEcc<F> {
+    /// Create an engine with the given mask mode.
+    pub fn new(curve: Curve<F>, mode: MaskMode) -> Self {
+        Self { curve, mode }
+    }
+
+    /// The curve in use.
+    pub fn curve(&self) -> &Curve<F> {
+        &self.curve
+    }
+
+    /// §IV-B step 3 — encrypt `m` to the holder of `recipient_pk`.
+    pub fn encrypt(
+        &self,
+        m: &Matrix,
+        recipient_pk: &Point<F>,
+        rng: &mut Rng,
+    ) -> SealedMatrix<F> {
+        // Ephemeral scalar k, 1 < k < q. §Perf optimization #2: a 64-bit
+        // ephemeral is enough — the simulation curve's group order is
+        // ~2^61, so wider scalars only add doubling iterations without
+        // adding entropy (halves the per-message scalar-mul cost).
+        let k = loop {
+            let cand = U256::from_u64(rng.next_u64());
+            if !cand.is_zero() && cand != U256::ONE {
+                break cand;
+            }
+        };
+        let ephemeral = self.curve.mul_scalar(&k, &self.curve.generator());
+        let shared = SharedSecret::from_point(self.curve.mul_scalar(&k, recipient_pk));
+        let payload = apply_mask(m, &shared, self.mode, Direction::Seal);
+        SealedMatrix { ephemeral, payload, mode: self.mode }
+    }
+
+    /// §IV-B step 4 — decrypt with the recipient's key pair.
+    pub fn decrypt(&self, sealed: &SealedMatrix<F>, keys: &KeyPair<F>) -> Matrix {
+        let shared =
+            SharedSecret::from_point(self.curve.mul_scalar(keys.secret(), &sealed.ephemeral));
+        apply_mask(&sealed.payload, &shared, sealed.mode, Direction::Open)
+    }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Direction {
+    Seal,
+    Open,
+}
+
+/// Apply (or remove) the mask derived from the shared point.
+fn apply_mask<F: FieldElement>(
+    m: &Matrix,
+    shared: &SharedSecret<F>,
+    mode: MaskMode,
+    dir: Direction,
+) -> Matrix {
+    match mode {
+        MaskMode::Keystream => {
+            // XOR a per-element 32-bit keystream onto the f32 bit
+            // pattern. Self-inverse, so Seal and Open are the same op.
+            // §Perf optimization #3: consume both 32-bit halves of each
+            // SplitMix64 output (2 elements per draw) and write into a
+            // preallocated buffer.
+            let mut ks = SplitMix64::new(shared.keystream_seed());
+            let src = m.as_slice();
+            let mut data = Vec::with_capacity(src.len());
+            let mut chunks = src.chunks_exact(2);
+            for pair in &mut chunks {
+                let w = ks.next_u64();
+                data.push(f32::from_bits(pair[0].to_bits() ^ (w >> 32) as u32));
+                data.push(f32::from_bits(pair[1].to_bits() ^ w as u32));
+            }
+            if let [last] = chunks.remainder() {
+                data.push(f32::from_bits(last.to_bits() ^ ks.next_u32()));
+            }
+            Matrix::from_vec(m.rows(), m.cols(), data)
+        }
+        MaskMode::RankOne => {
+            // Paper-literal: C = M + Ψ(shared)·𝟙. Ψ (the x-coordinate) is
+            // folded to a float of magnitude ~2^20 so the addition stays
+            // numerically invertible for f32 payloads.
+            let psi = shared
+                .point()
+                .psi()
+                .map(|x| x.to_limbs()[0])
+                .unwrap_or(0);
+            let scalar = ((psi % (1 << 20)) as f32) + ((psi >> 20) % 1024) as f32 / 1024.0;
+            let signed = if dir == Direction::Seal { scalar } else { -scalar };
+            m.map(|x| x + signed)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ecc::sim_curve;
+    use crate::rng::rng_from_seed;
+
+    fn setup() -> (MeaEcc<crate::field::Fp61>, KeyPair<crate::field::Fp61>, Rng) {
+        let curve = sim_curve();
+        let mut rng = rng_from_seed(7);
+        let worker = KeyPair::generate(&curve, &mut rng);
+        (MeaEcc::new(curve, MaskMode::Keystream), worker, rng)
+    }
+
+    #[test]
+    fn keystream_roundtrip_is_bit_exact() {
+        let (mea, worker, mut rng) = setup();
+        let m = Matrix::random_gaussian(17, 9, 0.0, 3.0, &mut rng);
+        let sealed = mea.encrypt(&m, &worker.public(), &mut rng);
+        let opened = mea.decrypt(&sealed, &worker);
+        assert_eq!(opened, m, "keystream decrypt must be bit-exact");
+    }
+
+    #[test]
+    fn rank_one_roundtrip_is_close() {
+        let curve = sim_curve();
+        let mut rng = rng_from_seed(8);
+        let worker = KeyPair::generate(&curve, &mut rng);
+        let mea = MeaEcc::new(curve, MaskMode::RankOne);
+        let m = Matrix::random_uniform(8, 8, -1.0, 1.0, &mut rng);
+        let sealed = mea.encrypt(&m, &worker.public(), &mut rng);
+        let opened = mea.decrypt(&sealed, &worker);
+        // Rank-one mask adds then subtracts a ~2^20 float: rounding loss
+        // is bounded by the f32 ulp at that magnitude (~0.0625).
+        assert!(opened.max_abs_diff(&m) < 0.13, "diff={}", opened.max_abs_diff(&m));
+    }
+
+    #[test]
+    fn ciphertext_differs_from_plaintext() {
+        let (mea, worker, mut rng) = setup();
+        let m = Matrix::ones(16, 16);
+        let sealed = mea.encrypt(&m, &worker.public(), &mut rng);
+        // Every element should be perturbed with overwhelming probability.
+        let changed = sealed
+            .payload
+            .as_slice()
+            .iter()
+            .zip(m.as_slice())
+            .filter(|(c, p)| c != p)
+            .count();
+        assert!(changed > 250, "only {changed}/256 elements masked");
+    }
+
+    #[test]
+    fn wrong_key_fails_to_decrypt() {
+        let (mea, worker, mut rng) = setup();
+        let eve = KeyPair::generate(mea.curve(), &mut rng);
+        let m = Matrix::random_uniform(10, 10, -1.0, 1.0, &mut rng);
+        let sealed = mea.encrypt(&m, &worker.public(), &mut rng);
+        let eavesdropped = mea.decrypt(&sealed, &eve);
+        assert!(
+            eavesdropped.max_abs_diff(&m) > 1e-3,
+            "wrong key must not recover plaintext"
+        );
+    }
+
+    #[test]
+    fn fresh_ephemeral_per_message() {
+        let (mea, worker, mut rng) = setup();
+        let m = Matrix::ones(4, 4);
+        let s1 = mea.encrypt(&m, &worker.public(), &mut rng);
+        let s2 = mea.encrypt(&m, &worker.public(), &mut rng);
+        assert_ne!(s1.ephemeral, s2.ephemeral, "ephemeral k must be fresh");
+        assert_ne!(
+            s1.payload.as_slice(),
+            s2.payload.as_slice(),
+            "same plaintext must yield different ciphertexts"
+        );
+    }
+
+    #[test]
+    fn keystream_ciphertext_decorrelated_from_plaintext() {
+        // Empirical eavesdropper check: correlation between plaintext and
+        // ciphertext bits should be ~0.
+        let (mea, worker, mut rng) = setup();
+        let m = Matrix::random_gaussian(32, 32, 0.0, 1.0, &mut rng);
+        let sealed = mea.encrypt(&m, &worker.public(), &mut rng);
+        // XORing bit patterns can produce NaN/Inf floats; sanitize the
+        // ciphertext to finite values before computing moments.
+        let sanitize = |v: f32| -> f64 {
+            if v.is_finite() {
+                (v.clamp(-1e6, 1e6)) as f64
+            } else {
+                0.0
+            }
+        };
+        let n = m.len() as f64;
+        let mx = m.as_slice().iter().map(|&x| x as f64).sum::<f64>() / n;
+        let my = sealed.payload.as_slice().iter().map(|&x| sanitize(x)).sum::<f64>() / n;
+        let mut cov = 0.0;
+        let mut vx = 0.0;
+        let mut vy = 0.0;
+        for (a, b) in m.as_slice().iter().zip(sealed.payload.as_slice()) {
+            let x = *a as f64 - mx;
+            let y = sanitize(*b) - my;
+            cov += x * y;
+            vx += x * x;
+            vy += y * y;
+        }
+        let corr = cov / (vx.sqrt() * vy.sqrt()).max(1e-30);
+        assert!(corr.abs() < 0.2, "ciphertext correlates with plaintext: {corr}");
+    }
+}

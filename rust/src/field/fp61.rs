@@ -1,0 +1,187 @@
+//! F_{2^61 − 1}: the Mersenne-prime field used as the default simulation
+//! field for MEA-ECC. Reduction is two shift-adds; inversion is Fermat.
+
+use super::FieldElement;
+
+/// The Mersenne prime 2^61 − 1.
+pub const P61: u64 = (1u64 << 61) - 1;
+
+/// An element of F_{2^61 − 1}, kept in canonical form `0 <= v < P61`.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fp61(u64);
+
+impl Fp61 {
+    /// Construct, reducing mod p.
+    #[inline]
+    pub fn new(v: u64) -> Self {
+        Self(v % P61)
+    }
+
+    /// Raw canonical value.
+    #[inline]
+    pub fn value(&self) -> u64 {
+        self.0
+    }
+
+    /// Reduce a 128-bit product into the field. For Mersenne p = 2^61−1,
+    /// x ≡ (x & p) + (x >> 61) (mod p), applied twice.
+    #[inline]
+    fn reduce128(x: u128) -> u64 {
+        let lo = (x as u64) & P61;
+        let hi = (x >> 61) as u64;
+        let mut s = lo + (hi & P61) + (hi >> 61);
+        if s >= P61 {
+            s -= P61;
+        }
+        if s >= P61 {
+            s -= P61;
+        }
+        s
+    }
+
+    /// Modular exponentiation (square-and-multiply).
+    pub fn pow(&self, mut e: u64) -> Self {
+        let mut base = *self;
+        let mut acc = Self(1);
+        while e > 0 {
+            if e & 1 == 1 {
+                acc = acc.mul(&base);
+            }
+            base = base.square();
+            e >>= 1;
+        }
+        acc
+    }
+}
+
+impl FieldElement for Fp61 {
+    #[inline]
+    fn zero() -> Self {
+        Self(0)
+    }
+
+    #[inline]
+    fn one() -> Self {
+        Self(1)
+    }
+
+    #[inline]
+    fn is_zero(&self) -> bool {
+        self.0 == 0
+    }
+
+    #[inline]
+    fn add(&self, rhs: &Self) -> Self {
+        let mut s = self.0 + rhs.0; // < 2^62, no overflow
+        if s >= P61 {
+            s -= P61;
+        }
+        Self(s)
+    }
+
+    #[inline]
+    fn sub(&self, rhs: &Self) -> Self {
+        let s = if self.0 >= rhs.0 { self.0 - rhs.0 } else { self.0 + P61 - rhs.0 };
+        Self(s)
+    }
+
+    #[inline]
+    fn mul(&self, rhs: &Self) -> Self {
+        Self(Self::reduce128(self.0 as u128 * rhs.0 as u128))
+    }
+
+    #[inline]
+    fn neg(&self) -> Self {
+        if self.0 == 0 {
+            *self
+        } else {
+            Self(P61 - self.0)
+        }
+    }
+
+    fn inverse(&self) -> Option<Self> {
+        if self.is_zero() {
+            None
+        } else {
+            // Fermat: a^(p-2) mod p.
+            Some(self.pow(P61 - 2))
+        }
+    }
+
+    fn to_limbs(&self) -> [u64; 4] {
+        [self.0, 0, 0, 0]
+    }
+
+    fn from_u64(v: u64) -> Self {
+        Self::new(v)
+    }
+}
+
+impl core::fmt::Debug for Fp61 {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(f, "Fp61({})", self.0)
+    }
+}
+
+impl core::fmt::Display for Fp61 {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn canonical_form_after_new() {
+        assert_eq!(Fp61::new(P61).value(), 0);
+        assert_eq!(Fp61::new(P61 + 5).value(), 5);
+        assert_eq!(Fp61::new(u64::MAX).value(), u64::MAX % P61);
+    }
+
+    #[test]
+    fn mul_matches_u128_reference() {
+        let mut r = rng_from_seed(101);
+        for _ in 0..2000 {
+            let a = r.next_u64() % P61;
+            let b = r.next_u64() % P61;
+            let expect = ((a as u128 * b as u128) % P61 as u128) as u64;
+            assert_eq!(Fp61::new(a).mul(&Fp61::new(b)).value(), expect);
+        }
+    }
+
+    #[test]
+    fn inverse_roundtrip_randomized() {
+        let mut r = rng_from_seed(77);
+        for _ in 0..200 {
+            let a = Fp61::new(r.next_u64());
+            if a.is_zero() {
+                continue;
+            }
+            let inv = a.inverse().unwrap();
+            assert_eq!(a.mul(&inv), Fp61::one());
+        }
+    }
+
+    #[test]
+    fn zero_has_no_inverse() {
+        assert!(Fp61::zero().inverse().is_none());
+    }
+
+    #[test]
+    fn pow_small_cases() {
+        let a = Fp61::new(3);
+        assert_eq!(a.pow(0), Fp61::one());
+        assert_eq!(a.pow(1), a);
+        assert_eq!(a.pow(4).value(), 81);
+    }
+
+    #[test]
+    fn sub_wraps_correctly() {
+        let a = Fp61::new(2);
+        let b = Fp61::new(5);
+        assert_eq!(a.sub(&b).add(&b), a);
+    }
+}

@@ -1,0 +1,97 @@
+//! Finite-field arithmetic substrate for the MEA-ECC layer (paper §IV).
+//!
+//! Two prime fields are provided:
+//!
+//! * [`Fp61`] — F_{2^61 − 1} (Mersenne), all arithmetic in u128. This is
+//!   the default *simulation* field: fast, branch-light, and large enough
+//!   that the ECDH/masking algebra of §IV runs exactly as written.
+//! * [`FpBig`] over [`U256`] — arbitrary 256-bit prime moduli, used to
+//!   instantiate the secp256k1 curve for a production-grade parameter set.
+//!
+//! The substitution of a 61-bit field for a 256-bit one in the default
+//! config affects only cryptographic hardness, not any quantity the paper
+//! evaluates (see DESIGN.md §3).
+
+pub mod fp61;
+pub mod u256;
+
+pub use fp61::Fp61;
+pub use u256::{FpBig, U256};
+
+/// Common behaviour of a prime-field element, enough for Weierstrass
+/// curve arithmetic (`ecc::curve`).
+pub trait FieldElement:
+    Copy + Clone + PartialEq + Eq + core::fmt::Debug + core::fmt::Display
+{
+    /// Additive identity.
+    fn zero() -> Self;
+    /// Multiplicative identity.
+    fn one() -> Self;
+    /// True iff this is the additive identity.
+    fn is_zero(&self) -> bool;
+    /// Field addition.
+    fn add(&self, rhs: &Self) -> Self;
+    /// Field subtraction.
+    fn sub(&self, rhs: &Self) -> Self;
+    /// Field multiplication.
+    fn mul(&self, rhs: &Self) -> Self;
+    /// Additive inverse.
+    fn neg(&self) -> Self;
+    /// Multiplicative inverse; `None` for zero.
+    fn inverse(&self) -> Option<Self>;
+    /// Squaring (specializable; default multiplies).
+    fn square(&self) -> Self {
+        self.mul(self)
+    }
+    /// Canonical little-endian u64 limbs (for hashing / keystreams).
+    fn to_limbs(&self) -> [u64; 4];
+    /// Construct from a u64 (reduced mod p).
+    fn from_u64(v: u64) -> Self;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn field_axioms<F: FieldElement>(samples: &[F]) {
+        for a in samples {
+            // identity
+            assert_eq!(a.add(&F::zero()), *a);
+            assert_eq!(a.mul(&F::one()), *a);
+            // inverse laws
+            assert!(a.add(&a.neg()).is_zero());
+            if !a.is_zero() {
+                let inv = a.inverse().expect("nonzero invertible");
+                assert_eq!(a.mul(&inv), F::one());
+            }
+            for b in samples {
+                // commutativity
+                assert_eq!(a.add(b), b.add(a));
+                assert_eq!(a.mul(b), b.mul(a));
+                for c in samples {
+                    // associativity + distributivity
+                    assert_eq!(a.add(&b.add(c)), a.add(b).add(c));
+                    assert_eq!(a.mul(&b.mul(c)), a.mul(b).mul(c));
+                    assert_eq!(a.mul(&b.add(c)), a.mul(b).add(&a.mul(c)));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fp61_satisfies_field_axioms() {
+        let xs: Vec<Fp61> =
+            [0u64, 1, 2, 3, 5, 1 << 60, (1 << 61) - 2].iter().map(|&v| Fp61::new(v)).collect();
+        field_axioms(&xs);
+    }
+
+    #[test]
+    fn fpbig_satisfies_field_axioms_on_secp_modulus() {
+        let p = U256::SECP256K1_P;
+        let xs: Vec<FpBig> = [0u64, 1, 2, 7, 0xFFFF_FFFF_FFFF_FFFF]
+            .iter()
+            .map(|&v| FpBig::new(U256::from_u64(v), p))
+            .collect();
+        field_axioms(&xs);
+    }
+}

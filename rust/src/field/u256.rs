@@ -1,0 +1,485 @@
+//! 256-bit unsigned integers and a generic prime field over them.
+//!
+//! No bigint crate is available in this environment, so this is a
+//! from-scratch 4×u64-limb implementation sized for ECC: constant-width
+//! add/sub/cmp, shift-add modular multiplication (Russian peasant, 256
+//! iterations), and inversion by the binary extended GCD. Fast enough for
+//! the coordinator (scalar multiplication ≈ hundreds of microseconds),
+//! and free of secret-dependent memory access, though we make no strict
+//! constant-time claim — this is a systems reproduction, not a crypto
+//! library.
+
+use super::FieldElement;
+
+/// Little-endian 4-limb 256-bit unsigned integer.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct U256(pub [u64; 4]);
+
+impl U256 {
+    /// Zero.
+    pub const ZERO: U256 = U256([0, 0, 0, 0]);
+    /// One.
+    pub const ONE: U256 = U256([1, 0, 0, 0]);
+
+    /// secp256k1 field modulus p = 2^256 − 2^32 − 977.
+    pub const SECP256K1_P: U256 = U256([
+        0xFFFF_FFFE_FFFF_FC2F,
+        0xFFFF_FFFF_FFFF_FFFF,
+        0xFFFF_FFFF_FFFF_FFFF,
+        0xFFFF_FFFF_FFFF_FFFF,
+    ]);
+
+    /// secp256k1 group order n.
+    pub const SECP256K1_N: U256 = U256([
+        0xBFD2_5E8C_D036_4141,
+        0xBAAE_DCE6_AF48_A03B,
+        0xFFFF_FFFF_FFFF_FFFE,
+        0xFFFF_FFFF_FFFF_FFFF,
+    ]);
+
+    /// Construct from a single u64.
+    pub const fn from_u64(v: u64) -> Self {
+        U256([v, 0, 0, 0])
+    }
+
+    /// Construct from big-endian hex (no 0x prefix). Panics on bad input;
+    /// used only for constants and tests.
+    pub fn from_hex(s: &str) -> Self {
+        assert!(s.len() <= 64, "hex too long for U256");
+        let mut limbs = [0u64; 4];
+        let bytes: Vec<u8> = s.bytes().rev().collect(); // LE nibbles
+        for (i, b) in bytes.iter().enumerate() {
+            let nib = match b {
+                b'0'..=b'9' => b - b'0',
+                b'a'..=b'f' => b - b'a' + 10,
+                b'A'..=b'F' => b - b'A' + 10,
+                _ => panic!("bad hex digit {}", *b as char),
+            } as u64;
+            limbs[i / 16] |= nib << (4 * (i % 16));
+        }
+        U256(limbs)
+    }
+
+    /// True iff zero.
+    pub fn is_zero(&self) -> bool {
+        self.0 == [0, 0, 0, 0]
+    }
+
+    /// True iff the low bit is set.
+    pub fn is_odd(&self) -> bool {
+        self.0[0] & 1 == 1
+    }
+
+    /// Comparison.
+    pub fn cmp_u(&self, other: &U256) -> core::cmp::Ordering {
+        for i in (0..4).rev() {
+            match self.0[i].cmp(&other.0[i]) {
+                core::cmp::Ordering::Equal => continue,
+                ord => return ord,
+            }
+        }
+        core::cmp::Ordering::Equal
+    }
+
+    /// `self < other`.
+    pub fn lt(&self, other: &U256) -> bool {
+        self.cmp_u(other) == core::cmp::Ordering::Less
+    }
+
+    /// Wrapping add; returns (sum, carry).
+    pub fn adc(&self, other: &U256) -> (U256, bool) {
+        let mut out = [0u64; 4];
+        let mut carry = false;
+        for i in 0..4 {
+            let (s1, c1) = self.0[i].overflowing_add(other.0[i]);
+            let (s2, c2) = s1.overflowing_add(carry as u64);
+            out[i] = s2;
+            carry = c1 | c2;
+        }
+        (U256(out), carry)
+    }
+
+    /// Wrapping sub; returns (diff, borrow).
+    pub fn sbb(&self, other: &U256) -> (U256, bool) {
+        let mut out = [0u64; 4];
+        let mut borrow = false;
+        for i in 0..4 {
+            let (d1, b1) = self.0[i].overflowing_sub(other.0[i]);
+            let (d2, b2) = d1.overflowing_sub(borrow as u64);
+            out[i] = d2;
+            borrow = b1 | b2;
+        }
+        (U256(out), borrow)
+    }
+
+    /// Left shift by one bit; returns (shifted, carried-out bit).
+    pub fn shl1(&self) -> (U256, bool) {
+        let mut out = [0u64; 4];
+        let mut carry = 0u64;
+        for i in 0..4 {
+            out[i] = (self.0[i] << 1) | carry;
+            carry = self.0[i] >> 63;
+        }
+        (U256(out), carry == 1)
+    }
+
+    /// Right shift by one bit.
+    pub fn shr1(&self) -> U256 {
+        let mut out = [0u64; 4];
+        for i in 0..4 {
+            out[i] = self.0[i] >> 1;
+            if i + 1 < 4 {
+                out[i] |= self.0[i + 1] << 63;
+            }
+        }
+        U256(out)
+    }
+
+    /// Bit i (0 = LSB).
+    pub fn bit(&self, i: usize) -> bool {
+        (self.0[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Index of the highest set bit, or None if zero.
+    pub fn highest_bit(&self) -> Option<usize> {
+        for i in (0..4).rev() {
+            if self.0[i] != 0 {
+                return Some(i * 64 + 63 - self.0[i].leading_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// Modular addition (inputs must be < p).
+    pub fn add_mod(&self, other: &U256, p: &U256) -> U256 {
+        let (s, carry) = self.adc(other);
+        if carry || !s.lt(p) {
+            s.sbb(p).0
+        } else {
+            s
+        }
+    }
+
+    /// Modular subtraction (inputs must be < p).
+    pub fn sub_mod(&self, other: &U256, p: &U256) -> U256 {
+        let (d, borrow) = self.sbb(other);
+        if borrow {
+            d.adc(p).0
+        } else {
+            d
+        }
+    }
+
+    /// Modular doubling.
+    pub fn dbl_mod(&self, p: &U256) -> U256 {
+        let (s, carry) = self.shl1();
+        if carry || !s.lt(p) {
+            s.sbb(p).0
+        } else {
+            s
+        }
+    }
+
+    /// Modular multiplication by interleaved shift-add (Russian peasant,
+    /// MSB first). Inputs must be < p. 256 iterations of dbl+add.
+    pub fn mul_mod(&self, other: &U256, p: &U256) -> U256 {
+        let mut acc = U256::ZERO;
+        let hb = match other.highest_bit() {
+            Some(h) => h,
+            None => return U256::ZERO,
+        };
+        for i in (0..=hb).rev() {
+            acc = acc.dbl_mod(p);
+            if other.bit(i) {
+                acc = acc.add_mod(self, p);
+            }
+        }
+        acc
+    }
+
+    /// Reduce an arbitrary U256 mod p (repeated conditional subtract is
+    /// wrong for values ≫ p; use sub-until-below via the fact that inputs
+    /// here are < 2^256 < 2p only when p > 2^255 — secp moduli qualify.
+    /// For general p use `rem_general`).
+    pub fn reduce_once(&self, p: &U256) -> U256 {
+        if self.lt(p) {
+            *self
+        } else {
+            self.sbb(p).0
+        }
+    }
+
+    /// General remainder via binary long division (used for hashing
+    /// arbitrary values into the field).
+    pub fn rem_general(&self, p: &U256) -> U256 {
+        assert!(!p.is_zero(), "division by zero modulus");
+        if self.lt(p) {
+            return *self;
+        }
+        let mut rem = U256::ZERO;
+        let hb = self.highest_bit().unwrap();
+        for i in (0..=hb).rev() {
+            let (r2, _) = rem.shl1();
+            rem = r2;
+            if self.bit(i) {
+                rem.0[0] |= 1;
+            }
+            if !rem.lt(p) {
+                rem = rem.sbb(p).0;
+            }
+        }
+        rem
+    }
+
+    /// Modular inverse by the binary extended GCD (p odd prime, self < p).
+    pub fn inv_mod(&self, p: &U256) -> Option<U256> {
+        if self.is_zero() {
+            return None;
+        }
+        // Kaliski-style binary inversion: maintain
+        //   u = self, v = p, x1, x2 with  u*x? ≡ ... (mod p)
+        let mut u = *self;
+        let mut v = *p;
+        let mut x1 = U256::ONE;
+        let mut x2 = U256::ZERO;
+        while !u.is_zero() && u != U256::ONE && v != U256::ONE {
+            while !u.is_zero() && !u.is_odd() {
+                u = u.shr1();
+                x1 = if x1.is_odd() { x1.adc(p).0.shr1_carry(x1.adc(p).1) } else { x1.shr1() };
+            }
+            while !v.is_odd() {
+                v = v.shr1();
+                x2 = if x2.is_odd() { x2.adc(p).0.shr1_carry(x2.adc(p).1) } else { x2.shr1() };
+            }
+            if !u.lt(&v) {
+                u = u.sbb(&v).0;
+                x1 = x1.sub_mod(&x2, p);
+            } else {
+                v = v.sbb(&u).0;
+                x2 = x2.sub_mod(&x1, p);
+            }
+        }
+        if u == U256::ONE {
+            Some(x1.reduce_once(p))
+        } else if v == U256::ONE {
+            Some(x2.reduce_once(p))
+        } else {
+            None // gcd != 1 (p not prime or self shares a factor)
+        }
+    }
+
+    /// Helper: shift right one bit bringing in `carry` as the new MSB.
+    fn shr1_carry(&self, carry: bool) -> U256 {
+        let mut out = self.shr1();
+        if carry {
+            out.0[3] |= 1u64 << 63;
+        }
+        out
+    }
+}
+
+impl core::fmt::Debug for U256 {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(
+            f,
+            "U256(0x{:016x}{:016x}{:016x}{:016x})",
+            self.0[3], self.0[2], self.0[1], self.0[0]
+        )
+    }
+}
+
+impl core::fmt::Display for U256 {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(
+            f,
+            "0x{:016x}{:016x}{:016x}{:016x}",
+            self.0[3], self.0[2], self.0[1], self.0[0]
+        )
+    }
+}
+
+/// An element of a prime field with a runtime 256-bit modulus.
+///
+/// The modulus travels with the element; mixing moduli is a logic error
+/// and panics in debug builds.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct FpBig {
+    value: U256,
+    modulus: U256,
+}
+
+impl FpBig {
+    /// Construct, reducing `v` into the field.
+    pub fn new(v: U256, modulus: U256) -> Self {
+        Self { value: v.rem_general(&modulus), modulus }
+    }
+
+    /// The canonical value.
+    pub fn value(&self) -> U256 {
+        self.value
+    }
+
+    /// The modulus this element lives under.
+    pub fn modulus(&self) -> U256 {
+        self.modulus
+    }
+
+    #[inline]
+    fn check(&self, rhs: &Self) {
+        debug_assert_eq!(self.modulus, rhs.modulus, "mixed moduli");
+    }
+}
+
+impl FieldElement for FpBig {
+    fn zero() -> Self {
+        // Modulus-less zero: adopt secp256k1 by convention. Binary ops
+        // adopt the other operand's modulus when one side is this zero.
+        Self { value: U256::ZERO, modulus: U256::SECP256K1_P }
+    }
+
+    fn one() -> Self {
+        Self { value: U256::ONE, modulus: U256::SECP256K1_P }
+    }
+
+    fn is_zero(&self) -> bool {
+        self.value.is_zero()
+    }
+
+    fn add(&self, rhs: &Self) -> Self {
+        self.check(rhs);
+        Self { value: self.value.add_mod(&rhs.value, &self.modulus), modulus: self.modulus }
+    }
+
+    fn sub(&self, rhs: &Self) -> Self {
+        self.check(rhs);
+        Self { value: self.value.sub_mod(&rhs.value, &self.modulus), modulus: self.modulus }
+    }
+
+    fn mul(&self, rhs: &Self) -> Self {
+        self.check(rhs);
+        Self { value: self.value.mul_mod(&rhs.value, &self.modulus), modulus: self.modulus }
+    }
+
+    fn neg(&self) -> Self {
+        Self { value: U256::ZERO.sub_mod(&self.value, &self.modulus), modulus: self.modulus }
+    }
+
+    fn inverse(&self) -> Option<Self> {
+        self.value.inv_mod(&self.modulus).map(|v| Self { value: v, modulus: self.modulus })
+    }
+
+    fn to_limbs(&self) -> [u64; 4] {
+        self.value.0
+    }
+
+    fn from_u64(v: u64) -> Self {
+        Self { value: U256::from_u64(v), modulus: U256::SECP256K1_P }
+    }
+}
+
+impl core::fmt::Debug for FpBig {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(f, "FpBig({:?})", self.value)
+    }
+}
+
+impl core::fmt::Display for FpBig {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(f, "{}", self.value)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    fn rand_u256(r: &mut crate::rng::Rng) -> U256 {
+        U256([r.next_u64(), r.next_u64(), r.next_u64(), r.next_u64()])
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let v = U256::from_hex("fffffffefffffc2f");
+        assert_eq!(v.0[0], 0xFFFF_FFFE_FFFF_FC2F);
+        assert_eq!(v.0[1], 0);
+        let p = U256::from_hex(
+            "fffffffffffffffffffffffffffffffffffffffffffffffffffffffefffffc2f",
+        );
+        assert_eq!(p, U256::SECP256K1_P);
+    }
+
+    #[test]
+    fn adc_sbb_inverse() {
+        let mut r = rng_from_seed(1);
+        for _ in 0..500 {
+            let a = rand_u256(&mut r);
+            let b = rand_u256(&mut r);
+            let (s, c) = a.adc(&b);
+            let (back, br) = s.sbb(&b);
+            assert_eq!(back, a);
+            assert_eq!(c, br);
+        }
+    }
+
+    #[test]
+    fn mul_mod_matches_small_reference() {
+        let p = U256::from_u64(1_000_000_007);
+        let mut r = rng_from_seed(2);
+        for _ in 0..500 {
+            let a = r.next_u64() % 1_000_000_007;
+            let b = r.next_u64() % 1_000_000_007;
+            let expect = (a as u128 * b as u128 % 1_000_000_007u128) as u64;
+            let got = U256::from_u64(a).mul_mod(&U256::from_u64(b), &p);
+            assert_eq!(got, U256::from_u64(expect));
+        }
+    }
+
+    #[test]
+    fn rem_general_matches_small_reference() {
+        let mut r = rng_from_seed(3);
+        for _ in 0..200 {
+            let a = r.next_u64();
+            let m = 1 + r.next_u64() % 1_000_000;
+            assert_eq!(U256::from_u64(a).rem_general(&U256::from_u64(m)), U256::from_u64(a % m));
+        }
+    }
+
+    #[test]
+    fn inv_mod_on_secp_modulus() {
+        let p = U256::SECP256K1_P;
+        let mut r = rng_from_seed(4);
+        for _ in 0..20 {
+            let a = rand_u256(&mut r).rem_general(&p);
+            if a.is_zero() {
+                continue;
+            }
+            let inv = a.inv_mod(&p).expect("invertible");
+            assert_eq!(a.mul_mod(&inv, &p), U256::ONE);
+        }
+    }
+
+    #[test]
+    fn inv_of_one_is_one() {
+        assert_eq!(U256::ONE.inv_mod(&U256::SECP256K1_P), Some(U256::ONE));
+    }
+
+    #[test]
+    fn shl_shr_roundtrip() {
+        let mut r = rng_from_seed(5);
+        for _ in 0..200 {
+            let a = rand_u256(&mut r);
+            let (s, carry) = a.shl1();
+            let back = s.shr1_carry(carry);
+            assert_eq!(back, a);
+        }
+    }
+
+    #[test]
+    fn highest_bit_examples() {
+        assert_eq!(U256::ZERO.highest_bit(), None);
+        assert_eq!(U256::ONE.highest_bit(), Some(0));
+        assert_eq!(U256::from_u64(0x8000_0000_0000_0000).highest_bit(), Some(63));
+        assert_eq!(U256([0, 1, 0, 0]).highest_bit(), Some(64));
+    }
+}

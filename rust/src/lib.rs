@@ -1,0 +1,40 @@
+//! # SPACDC — Secure and Private Approximated Coded Distributed Computing
+//!
+//! A full-system reproduction of *"Approximated Coded Computing: Towards
+//! Fast, Private and Secure Distributed Machine Learning"* (Qiu, Zhu,
+//! Luong, Niyato — CS.DC 2024).
+//!
+//! The system is a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: a master/worker
+//!   runtime that Berrut-encodes data with T privacy masks
+//!   ([`coding::spacdc`]), seals every share with MEA-ECC ([`ecc::mea`]),
+//!   dispatches to workers, and decodes an approximation of `f(Xᵢ)` from
+//!   *any* subset of returned results ([`coordinator`]).
+//! * **L2 (python/compile/model.py)** — the worker task `f(X̃)=X̃X̃ᵀ` and
+//!   the DNN fwd/bwd of §VI, written in JAX and AOT-lowered to HLO text.
+//! * **L1 (python/compile/kernels/)** — Pallas kernels for the Berrut
+//!   encode combination and the tiled Gram product, lowered inside the L2
+//!   functions.
+//!
+//! The compiled artifacts are executed from Rust through the PJRT C API
+//! ([`runtime`]); Python never runs on the request path.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod analysis;
+pub mod bench;
+pub mod cli;
+pub mod coding;
+pub mod config;
+pub mod coordinator;
+pub mod dl;
+pub mod ecc;
+pub mod field;
+pub mod matrix;
+pub mod metrics;
+pub mod prop;
+pub mod rng;
+pub mod runtime;
+pub mod sim;

@@ -1,0 +1,201 @@
+//! `spacdc` — the SPACDC coordinator CLI.
+//!
+//! Subcommands:
+//! * `train`  — run SPACDC-DL (or a baseline) end to end and report the
+//!   loss/accuracy curve (Algorithm 2).
+//! * `round`  — run one coded Gram round and report decode error +
+//!   communication accounting.
+//! * `sweep`  — training-time sweep over straggler counts (the Fig. 3
+//!   scenario grid) for one scheme.
+//! * `info`   — print the resolved config, artifact registry, and the
+//!   Table II complexity row for the chosen parameters.
+
+use spacdc::analysis::CostModel;
+use spacdc::cli::{parse, usage, ArgSpec};
+use spacdc::config::{SchemeKind, SystemConfig};
+use spacdc::coordinator::MasterBuilder;
+use spacdc::dl::{train, TrainerOptions};
+use spacdc::matrix::{gram, split_rows, Matrix};
+use spacdc::rng::rng_from_seed;
+use spacdc::runtime::{Executor, RuntimeService, WorkerOp};
+use std::path::Path;
+use std::sync::Arc;
+
+fn specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::opt("config", "", "config file (TOML subset; optional)"),
+        ArgSpec::opt("scheme", "spacdc", "uncoded|mds|matdot|polynomial|lcc|secpoly|bacc|spacdc"),
+        ArgSpec::opt("workers", "30", "number of workers N"),
+        ArgSpec::opt("stragglers", "3", "number of stragglers S"),
+        ArgSpec::opt("colluders", "3", "number of colluders T"),
+        ArgSpec::opt("partitions", "4", "number of data partitions K"),
+        ArgSpec::opt("epochs", "10", "training epochs"),
+        ArgSpec::opt("seed", "49374", "experiment seed"),
+        ArgSpec::opt("base-service-ms", "0", "injected per-task service time (ms)"),
+        ArgSpec::opt("rows", "512", "data rows m (round subcommand)"),
+        ArgSpec::opt("cols", "256", "data cols d (round subcommand)"),
+        ArgSpec::flag("no-pjrt", "disable the PJRT artifact path"),
+        ArgSpec::flag("help", "show usage"),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let specs = specs();
+    let parsed = match parse(&args, &specs) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if parsed.has_flag("help") || parsed.positional.is_empty() {
+        print!("{}", usage("spacdc <train|round|sweep|info>", &specs));
+        return Ok(());
+    }
+
+    let mut cfg = match parsed.get("config") {
+        Some("") | None => SystemConfig::default(),
+        Some(path) => SystemConfig::from_file(path)?,
+    };
+    cfg.scheme = SchemeKind::from_str_token(parsed.get_str("scheme"))
+        .ok_or_else(|| anyhow::anyhow!("unknown scheme {}", parsed.get_str("scheme")))?;
+    cfg.workers = parsed.get_usize("workers");
+    cfg.stragglers = parsed.get_usize("stragglers");
+    cfg.colluders = parsed.get_usize("colluders");
+    cfg.partitions = parsed.get_usize("partitions");
+    cfg.dl.epochs = parsed.get_usize("epochs");
+    cfg.seed = parsed.get_u64("seed");
+    cfg.delay.base_service_s = parsed.get_f64("base-service-ms") / 1e3;
+    cfg.use_pjrt = !parsed.has_flag("no-pjrt");
+    cfg.validate().map_err(|e| anyhow::anyhow!(e.to_string()))?;
+
+    match parsed.positional[0].as_str() {
+        "train" => cmd_train(&cfg),
+        "round" => cmd_round(&cfg, parsed.get_usize("rows"), parsed.get_usize("cols")),
+        "sweep" => cmd_sweep(&cfg),
+        "info" => cmd_info(&cfg),
+        other => {
+            eprintln!("unknown subcommand {other}");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// Attach the PJRT runtime when artifacts exist and it is enabled.
+fn executor_for(cfg: &SystemConfig) -> Option<Executor> {
+    if !cfg.use_pjrt {
+        return None;
+    }
+    let dir = Path::new(&cfg.artifacts_dir);
+    match RuntimeService::start(dir) {
+        Ok(svc) => {
+            let metrics = Arc::new(spacdc::metrics::MetricsRegistry::new());
+            let handle = svc.handle();
+            // Leak the service so the runtime thread lives as long as the
+            // process (standard for a daemon-style runtime).
+            std::mem::forget(svc);
+            Some(Executor::with_runtime(handle, metrics))
+        }
+        Err(e) => {
+            eprintln!("note: PJRT runtime unavailable ({e}); using native kernels");
+            None
+        }
+    }
+}
+
+fn cmd_train(cfg: &SystemConfig) -> anyhow::Result<()> {
+    println!(
+        "SPACDC-DL training: scheme={} N={} S={} T={} K={} layers={:?}",
+        cfg.scheme.name(),
+        cfg.workers,
+        cfg.stragglers,
+        cfg.colluders,
+        cfg.partitions,
+        cfg.dl.layers
+    );
+    let mut opts = TrainerOptions::new(cfg.clone());
+    opts.executor = executor_for(cfg);
+    let report = train(&opts)?;
+    println!("epoch  loss      accuracy  wall(s)");
+    for e in &report.epochs {
+        println!("{:>5}  {:<8.4}  {:<8.4}  {:<8.2}", e.epoch, e.loss, e.accuracy, e.wall_s);
+    }
+    println!(
+        "final accuracy {:.4} after {} steps in {:.2}s",
+        report.final_accuracy, report.steps, report.total_wall_s
+    );
+    Ok(())
+}
+
+fn cmd_round(cfg: &SystemConfig, rows: usize, cols: usize) -> anyhow::Result<()> {
+    println!(
+        "one coded round: scheme={} f(X)=XXᵀ on {}x{} data",
+        cfg.scheme.name(),
+        rows,
+        cols
+    );
+    let mut builder = MasterBuilder::new(cfg.clone());
+    if let Some(exec) = executor_for(cfg) {
+        builder = builder.executor(exec);
+    }
+    let mut master = builder.build()?;
+    let mut rng = rng_from_seed(cfg.seed);
+    let x = Matrix::random_gaussian(rows, cols, 0.0, 1.0, &mut rng);
+    let out = if cfg.scheme == SchemeKind::MatDot {
+        master.run_matmul(&x, &x.transpose())?
+    } else {
+        master.run_blockmap(WorkerOp::Gram, &x)?
+    };
+    // Decode-quality report.
+    if cfg.scheme == SchemeKind::MatDot {
+        let err = out.blocks[0].rel_error(&gram(&x));
+        println!("full-product rel error: {err:.6}");
+    } else {
+        let (blocks, _) = split_rows(&x, master.config().partitions);
+        for (i, (d, b)) in out.blocks.iter().zip(&blocks).enumerate() {
+            println!("block {i}: rel error {:.6}", d.rel_error(&gram(b)));
+        }
+    }
+    println!(
+        "round wall {:.3}ms, {} results used",
+        out.wall.as_secs_f64() * 1e3,
+        out.results_used
+    );
+    println!("{}", master.metrics().report());
+    Ok(())
+}
+
+fn cmd_sweep(cfg: &SystemConfig) -> anyhow::Result<()> {
+    println!("training-time sweep over stragglers (scheme={})", cfg.scheme.name());
+    println!("{:>3}  {:>10}  {:>9}", "S", "wall(s)", "accuracy");
+    for s in [0usize, 3, 5, 7] {
+        let mut c = cfg.clone();
+        c.stragglers = s;
+        c.dl.epochs = cfg.dl.epochs.min(3);
+        let report = train(&TrainerOptions::new(c))?;
+        println!("{s:>3}  {:>10.2}  {:>9.4}", report.total_wall_s, report.final_accuracy);
+    }
+    Ok(())
+}
+
+fn cmd_info(cfg: &SystemConfig) -> anyhow::Result<()> {
+    println!("resolved config:\n{cfg:#?}");
+    let model =
+        CostModel::new(1000, 1000, cfg.partitions, cfg.workers, cfg.workers - cfg.stragglers);
+    let costs = model.costs(cfg.scheme);
+    println!("\nTable II row for {} (m=d=1000):", cfg.scheme.name());
+    println!("  encoding        {:.3e}", costs.encoding);
+    println!("  decoding        {:.3e}", costs.decoding);
+    println!("  comm → workers  {:.3e}", costs.comm_to_workers);
+    println!("  comm → master   {:.3e}", costs.comm_to_master);
+    println!("  worker compute  {:.3e}", costs.worker_compute);
+    println!("  security {}   privacy {}", costs.protects_security, costs.protects_privacy);
+    if let Some(exec) = executor_for(cfg) {
+        let _ = exec;
+        println!("\nPJRT runtime: available (artifacts loaded)");
+    } else {
+        println!("\nPJRT runtime: unavailable");
+    }
+    Ok(())
+}

@@ -1,0 +1,299 @@
+//! Row-major dense `f32` matrix.
+
+use crate::rng::Rng;
+
+/// A dense row-major matrix of `f32`.
+///
+/// `f32` matches the HLO artifacts on the PJRT path; accumulations that
+/// are numerically delicate (norms, losses, Berrut decode weights) are
+/// done in `f64` internally.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// All-ones matrix (the paper's `I_{m,d}` mask carrier in §IV-B).
+    pub fn ones(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![1.0; rows * cols] }
+    }
+
+    /// Identity (square).
+    pub fn identity(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer size mismatch");
+        Self { rows, cols, data }
+    }
+
+    /// Uniform random entries in [lo, hi).
+    pub fn random_uniform(rows: usize, cols: usize, lo: f32, hi: f32, rng: &mut Rng) -> Self {
+        let data = (0..rows * cols).map(|_| lo + (hi - lo) * rng.next_f32()).collect();
+        Self { rows, cols, data }
+    }
+
+    /// Gaussian random entries.
+    pub fn random_gaussian(rows: usize, cols: usize, mean: f32, std: f32, rng: &mut Rng) -> Self {
+        let data =
+            (0..rows * cols).map(|_| rng.gaussian_with(mean as f64, std as f64) as f32).collect();
+        Self { rows, cols, data }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// (rows, cols).
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Total element count.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True iff the matrix has no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Mutable element accessor.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Raw row-major slice.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Raw mutable row-major slice.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// A single row as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Consume into the raw buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Elementwise `self + rhs`.
+    pub fn add(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), rhs.shape(), "add: shape mismatch");
+        let data = self.data.iter().zip(&rhs.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Elementwise `self - rhs`.
+    pub fn sub(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), rhs.shape(), "sub: shape mismatch");
+        let data = self.data.iter().zip(&rhs.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Scalar multiply.
+    pub fn scale(&self, s: f32) -> Matrix {
+        let data = self.data.iter().map(|a| a * s).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `self += alpha * rhs` (the encode inner loop).
+    pub fn axpy(&mut self, alpha: f32, rhs: &Matrix) {
+        assert_eq!(self.shape(), rhs.shape(), "axpy: shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&rhs.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Elementwise (Hadamard) product — `⊙` of Eq. (22).
+    pub fn hadamard(&self, rhs: &Matrix) -> Matrix {
+        assert_eq!(self.shape(), rhs.shape(), "hadamard: shape mismatch");
+        let data = self.data.iter().zip(&rhs.data).map(|(a, b)| a * b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Transpose.
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// Map every element.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        let data = self.data.iter().map(|&x| f(x)).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Frobenius norm (f64 accumulation).
+    pub fn frobenius_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Max |aᵢⱼ − bᵢⱼ| between two matrices.
+    pub fn max_abs_diff(&self, rhs: &Matrix) -> f64 {
+        assert_eq!(self.shape(), rhs.shape(), "max_abs_diff: shape mismatch");
+        self.data
+            .iter()
+            .zip(&rhs.data)
+            .map(|(a, b)| ((a - b) as f64).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Relative Frobenius error ‖self − rhs‖ / ‖rhs‖ (decode-quality metric).
+    pub fn rel_error(&self, reference: &Matrix) -> f64 {
+        let denom = reference.frobenius_norm().max(1e-30);
+        self.sub(reference).frobenius_norm() / denom
+    }
+
+    /// Extract rows [start, start+count).
+    pub fn rows_slice(&self, start: usize, count: usize) -> Matrix {
+        assert!(start + count <= self.rows, "rows_slice out of bounds");
+        let data = self.data[start * self.cols..(start + count) * self.cols].to_vec();
+        Matrix { rows: count, cols: self.cols, data }
+    }
+}
+
+impl core::fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
+        write!(f, "Matrix({}x{})", self.rows, self.cols)?;
+        if self.rows <= 8 && self.cols <= 8 {
+            writeln!(f)?;
+            for r in 0..self.rows {
+                write!(f, "  [")?;
+                for c in 0..self.cols {
+                    write!(f, " {:8.4}", self.get(r, c))?;
+                }
+                writeln!(f, " ]")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn construct_and_index() {
+        let m = Matrix::from_fn(3, 4, |r, c| (r * 10 + c) as f32);
+        assert_eq!(m.shape(), (3, 4));
+        assert_eq!(m.get(2, 3), 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn identity_times_behaviour_via_transpose() {
+        let i = Matrix::identity(4);
+        assert_eq!(i.transpose(), i);
+    }
+
+    #[test]
+    fn add_sub_roundtrip() {
+        let mut r = rng_from_seed(1);
+        let a = Matrix::random_uniform(5, 7, -1.0, 1.0, &mut r);
+        let b = Matrix::random_uniform(5, 7, -1.0, 1.0, &mut r);
+        let back = a.add(&b).sub(&b);
+        assert!(back.max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn axpy_matches_scale_add() {
+        let mut r = rng_from_seed(2);
+        let a = Matrix::random_uniform(4, 4, -1.0, 1.0, &mut r);
+        let b = Matrix::random_uniform(4, 4, -1.0, 1.0, &mut r);
+        let mut c = a.clone();
+        c.axpy(0.5, &b);
+        assert!(c.max_abs_diff(&a.add(&b.scale(0.5))) < 1e-6);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = rng_from_seed(3);
+        let a = Matrix::random_gaussian(6, 3, 0.0, 1.0, &mut r);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn frobenius_norm_known_value() {
+        let m = Matrix::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((m.frobenius_norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rows_slice_extracts_expected_rows() {
+        let m = Matrix::from_fn(6, 2, |r, _| r as f32);
+        let s = m.rows_slice(2, 3);
+        assert_eq!(s.shape(), (3, 2));
+        assert_eq!(s.get(0, 0), 2.0);
+        assert_eq!(s.get(2, 1), 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn add_shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 2);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.add(&b);
+    }
+}

@@ -1,0 +1,17 @@
+//! Dense matrix substrate.
+//!
+//! Every coding scheme in the paper manipulates `m × d` real matrices:
+//! partitioning into K row-blocks, linear combinations (encoding),
+//! Gram products `X Xᵀ` (the paper's running worker task, §V-A), and the
+//! DL layer products of §VI. No ndarray/BLAS is available in this
+//! environment, so this module implements a row-major `f32` matrix with
+//! cache-blocked, transpose-packed matmul (see `ops.rs`) plus the
+//! partition/stack helpers the schemes need (`partition.rs`).
+
+mod dense;
+mod ops;
+mod partition;
+
+pub use dense::Matrix;
+pub use ops::{gram, matmul, matmul_naive, matmul_tb, matvec};
+pub use partition::{split_rows, stack_rows, PartitionSpec};

@@ -1,0 +1,187 @@
+//! Matrix products: the compute hot path of the native (non-PJRT) route.
+//!
+//! The worker task of the paper's running example is the Gram product
+//! `f(X̃) = X̃ X̃ᵀ` (§V-A); the DL trainer needs `A·B`, `A·Bᵀ` and
+//! matrix–vector products. All products here use the same strategy:
+//! pack the B operand so the inner loop walks both operands contiguously
+//! (unit stride), then block over rows for cache reuse. This is the
+//! "optimize the hot path" target of the §Perf pass — see
+//! `benches/microbench.rs` for the naive-vs-blocked comparison.
+
+use super::Matrix;
+
+/// Row-block size for the outer blocking. 64 rows × 4 B × d floats keeps
+/// a block of B-columns resident in L2 for the d values we use (≤ 4096).
+const ROW_BLOCK: usize = 64;
+
+/// `A (r×k) · B (k×c) → (r×c)`.
+///
+/// B is packed transposed once (O(kc)) so the inner product over `k`
+/// reads both operands at unit stride.
+pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {} vs {}", a.cols(), b.rows());
+    let bt = b.transpose();
+    matmul_tb(a, &bt)
+}
+
+/// `A (r×k) · Bᵀ where B is given as (c×k) → (r×c)`.
+///
+/// This is the natural layout for the Gram product and for the packed
+/// general matmul. The inner kernel is an 8-wide unrolled dot product
+/// with four independent accumulators (breaks the FP dependency chain so
+/// the CPU can keep ≥2 FMAs in flight).
+pub fn matmul_tb(a: &Matrix, b_t: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b_t.cols(), "matmul_tb: inner dims {} vs {}", a.cols(), b_t.cols());
+    let (r, k) = a.shape();
+    let c = b_t.rows();
+    let mut out = Matrix::zeros(r, c);
+
+    for rb in (0..r).step_by(ROW_BLOCK) {
+        let rend = (rb + ROW_BLOCK).min(r);
+        for i in rb..rend {
+            let arow = a.row(i);
+            let orow = &mut out.as_mut_slice()[i * c..(i + 1) * c];
+            for (j, o) in orow.iter_mut().enumerate() {
+                *o = dot(arow, b_t.row(j));
+            }
+        }
+    }
+    let _ = k;
+    out
+}
+
+/// Unrolled dot product with 4 accumulators.
+#[inline]
+fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let o = i * 8;
+        s0 += x[o] * y[o] + x[o + 4] * y[o + 4];
+        s1 += x[o + 1] * y[o + 1] + x[o + 5] * y[o + 5];
+        s2 += x[o + 2] * y[o + 2] + x[o + 6] * y[o + 6];
+        s3 += x[o + 3] * y[o + 3] + x[o + 7] * y[o + 7];
+    }
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += x[i] * y[i];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Gram product `X · Xᵀ` — the paper's worker task `f`.
+///
+/// Exploits symmetry: computes the upper triangle and mirrors, ~2×
+/// fewer dot products than the general path.
+pub fn gram(x: &Matrix) -> Matrix {
+    let n = x.rows();
+    let mut out = Matrix::zeros(n, n);
+    for i in 0..n {
+        let ri = x.row(i);
+        for j in i..n {
+            let v = dot(ri, x.row(j));
+            out.set(i, j, v);
+            out.set(j, i, v);
+        }
+    }
+    out
+}
+
+/// Matrix–vector product `A (r×k) · v (k) → (r)`.
+pub fn matvec(a: &Matrix, v: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols(), v.len(), "matvec: dims {} vs {}", a.cols(), v.len());
+    (0..a.rows()).map(|i| dot(a.row(i), v)).collect()
+}
+
+/// Naive triple-loop matmul — kept as the correctness oracle and the
+/// "before" side of the §Perf comparison. Not used on any hot path.
+pub fn matmul_naive(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul_naive: inner dims");
+    let (r, k) = a.shape();
+    let c = b.cols();
+    let mut out = Matrix::zeros(r, c);
+    for i in 0..r {
+        for j in 0..c {
+            let mut s = 0f32;
+            for l in 0..k {
+                s += a.get(i, l) * b.get(l, j);
+            }
+            out.set(i, j, s);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn matmul_matches_naive_random() {
+        let mut r = rng_from_seed(10);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 2), (17, 9, 23), (64, 33, 65)] {
+            let a = Matrix::random_uniform(m, k, -1.0, 1.0, &mut r);
+            let b = Matrix::random_uniform(k, n, -1.0, 1.0, &mut r);
+            let fast = matmul(&a, &b);
+            let slow = matmul_naive(&a, &b);
+            assert!(fast.max_abs_diff(&slow) < 1e-3, "shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn matmul_identity_is_noop() {
+        let mut r = rng_from_seed(11);
+        let a = Matrix::random_uniform(6, 6, -2.0, 2.0, &mut r);
+        let i = Matrix::identity(6);
+        assert!(matmul(&a, &i).max_abs_diff(&a) < 1e-6);
+        assert!(matmul(&i, &a).max_abs_diff(&a) < 1e-6);
+    }
+
+    #[test]
+    fn gram_matches_matmul_with_transpose() {
+        let mut r = rng_from_seed(12);
+        let x = Matrix::random_gaussian(20, 13, 0.0, 1.0, &mut r);
+        let g1 = gram(&x);
+        let g2 = matmul(&x, &x.transpose());
+        assert!(g1.max_abs_diff(&g2) < 1e-3);
+    }
+
+    #[test]
+    fn gram_is_symmetric_and_psd_diagonal() {
+        let mut r = rng_from_seed(13);
+        let x = Matrix::random_uniform(10, 7, -1.0, 1.0, &mut r);
+        let g = gram(&x);
+        for i in 0..10 {
+            assert!(g.get(i, i) >= 0.0, "diagonal of Gram must be ≥ 0");
+            for j in 0..10 {
+                assert_eq!(g.get(i, j), g.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul_column() {
+        let mut r = rng_from_seed(14);
+        let a = Matrix::random_uniform(9, 4, -1.0, 1.0, &mut r);
+        let v: Vec<f32> = (0..4).map(|_| r.next_f32()).collect();
+        let got = matvec(&a, &v);
+        let vm = Matrix::from_vec(4, 1, v.clone());
+        let expect = matmul(&a, &vm);
+        for i in 0..9 {
+            assert!((got[i] - expect.get(i, 0)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dot_handles_non_multiple_of_eight() {
+        for n in 0..20 {
+            let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let y = vec![1f32; n];
+            let expect: f32 = x.iter().sum();
+            assert_eq!(super::dot(&x, &y), expect);
+        }
+    }
+}

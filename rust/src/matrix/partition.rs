@@ -1,0 +1,127 @@
+//! Row-partitioning per §V-B Eq. (16): X ∈ F^{m×d} split into K equal
+//! row-blocks, zero-padding the last block when K ∤ m.
+
+use super::Matrix;
+
+/// How a matrix was partitioned — needed to undo the padding on decode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PartitionSpec {
+    /// Original row count m.
+    pub original_rows: usize,
+    /// Number of blocks K.
+    pub k: usize,
+    /// Rows per block (⌈m/K⌉).
+    pub block_rows: usize,
+}
+
+impl PartitionSpec {
+    /// Compute the spec for splitting `m` rows into `k` blocks.
+    pub fn new(original_rows: usize, k: usize) -> Self {
+        assert!(k > 0, "K must be positive");
+        assert!(original_rows > 0, "matrix must be non-empty");
+        let block_rows = original_rows.div_ceil(k);
+        Self { original_rows, k, block_rows }
+    }
+
+    /// Rows of padding added to the final block.
+    pub fn padding(&self) -> usize {
+        self.block_rows * self.k - self.original_rows
+    }
+}
+
+/// Split `x` into K row-blocks of equal size (Eq. 16), zero-padding the
+/// final block if `K ∤ m` (as the paper specifies).
+pub fn split_rows(x: &Matrix, k: usize) -> (Vec<Matrix>, PartitionSpec) {
+    let spec = PartitionSpec::new(x.rows(), k);
+    let d = x.cols();
+    let mut blocks = Vec::with_capacity(k);
+    for b in 0..k {
+        let start = b * spec.block_rows;
+        let end = ((b + 1) * spec.block_rows).min(x.rows());
+        let mut block = Matrix::zeros(spec.block_rows, d);
+        if start < x.rows() {
+            let have = end - start;
+            block.as_mut_slice()[..have * d]
+                .copy_from_slice(&x.as_slice()[start * d..end * d]);
+        }
+        blocks.push(block);
+    }
+    (blocks, spec)
+}
+
+/// Reassemble row-blocks into one matrix, dropping the padding rows.
+pub fn stack_rows(blocks: &[Matrix], spec: &PartitionSpec) -> Matrix {
+    assert_eq!(blocks.len(), spec.k, "stack_rows: block count mismatch");
+    let d = blocks[0].cols();
+    let mut out = Matrix::zeros(spec.original_rows, d);
+    for (b, block) in blocks.iter().enumerate() {
+        assert_eq!(block.shape(), (spec.block_rows, d), "stack_rows: block shape");
+        let start = b * spec.block_rows;
+        if start >= spec.original_rows {
+            break;
+        }
+        let take = (spec.original_rows - start).min(spec.block_rows);
+        out.as_mut_slice()[start * d..(start + take) * d]
+            .copy_from_slice(&block.as_slice()[..take * d]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn split_stack_roundtrip_divisible() {
+        let mut r = rng_from_seed(20);
+        let x = Matrix::random_uniform(12, 5, -1.0, 1.0, &mut r);
+        let (blocks, spec) = split_rows(&x, 4);
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(spec.padding(), 0);
+        assert_eq!(stack_rows(&blocks, &spec), x);
+    }
+
+    #[test]
+    fn split_stack_roundtrip_with_padding() {
+        let mut r = rng_from_seed(21);
+        let x = Matrix::random_uniform(13, 3, -1.0, 1.0, &mut r);
+        let (blocks, spec) = split_rows(&x, 4);
+        assert_eq!(spec.block_rows, 4);
+        assert_eq!(spec.padding(), 3);
+        // Padded rows must be zero.
+        let last = &blocks[3];
+        for c in 0..3 {
+            assert_eq!(last.get(1, c), 0.0);
+            assert_eq!(last.get(2, c), 0.0);
+            assert_eq!(last.get(3, c), 0.0);
+        }
+        assert_eq!(stack_rows(&blocks, &spec), x);
+    }
+
+    #[test]
+    fn split_k1_is_identity() {
+        let mut r = rng_from_seed(22);
+        let x = Matrix::random_uniform(7, 2, -1.0, 1.0, &mut r);
+        let (blocks, spec) = split_rows(&x, 1);
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0], x);
+        assert_eq!(stack_rows(&blocks, &spec), x);
+    }
+
+    #[test]
+    fn split_k_larger_than_rows() {
+        let x = Matrix::ones(2, 2);
+        let (blocks, spec) = split_rows(&x, 5);
+        assert_eq!(blocks.len(), 5);
+        assert_eq!(spec.block_rows, 1);
+        assert_eq!(stack_rows(&blocks, &spec), x);
+    }
+
+    #[test]
+    #[should_panic(expected = "K must be positive")]
+    fn split_k0_panics() {
+        let x = Matrix::ones(2, 2);
+        let _ = split_rows(&x, 0);
+    }
+}

@@ -1,0 +1,169 @@
+//! Named metric registry + phase timers for the coordinator.
+
+use super::Histogram;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Central metrics sink shared by master and workers.
+///
+/// Counters cover the communication accounting the paper's Fig. 6 needs
+/// (symbols master→workers, workers→master) plus scheduling events;
+/// histograms cover per-phase latencies.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, u64>>,
+    histograms: Mutex<BTreeMap<String, Histogram>>,
+}
+
+/// Well-known counter names.
+pub mod names {
+    /// Symbols (f32 elements) sent master → workers.
+    pub const SYMBOLS_TO_WORKERS: &str = "comm.symbols_to_workers";
+    /// Symbols (f32 elements) sent workers → master.
+    pub const SYMBOLS_TO_MASTER: &str = "comm.symbols_to_master";
+    /// Tasks dispatched.
+    pub const TASKS_DISPATCHED: &str = "sched.tasks_dispatched";
+    /// Results accepted by the decoder.
+    pub const RESULTS_USED: &str = "sched.results_used";
+    /// Results that arrived after the decode fired (wasted work).
+    pub const RESULTS_LATE: &str = "sched.results_late";
+    /// Executions that went through the PJRT artifact path.
+    pub const PJRT_EXECUTIONS: &str = "runtime.pjrt_executions";
+    /// Executions that fell back to the native kernel.
+    pub const NATIVE_EXECUTIONS: &str = "runtime.native_executions";
+}
+
+impl MetricsRegistry {
+    /// Fresh empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `n` to the named counter (creating it at zero).
+    pub fn add(&self, name: &str, n: u64) {
+        let mut c = self.counters.lock().unwrap();
+        *c.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    /// Increment the named counter.
+    pub fn inc(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    /// Read a counter (0 if absent).
+    pub fn get(&self, name: &str) -> u64 {
+        self.counters.lock().unwrap().get(name).copied().unwrap_or(0)
+    }
+
+    /// Record a duration/latency sample (seconds) under `name`.
+    pub fn record(&self, name: &str, seconds: f64) {
+        let mut h = self.histograms.lock().unwrap();
+        h.entry(name.to_string()).or_default().record(seconds);
+    }
+
+    /// Snapshot a histogram by name.
+    pub fn histogram(&self, name: &str) -> Option<Histogram> {
+        self.histograms.lock().unwrap().get(name).cloned()
+    }
+
+    /// Start a phase timer that records into `name` on drop.
+    pub fn time_phase<'a>(&'a self, name: &'a str) -> PhaseTimer<'a> {
+        PhaseTimer { registry: self, name, start: Instant::now() }
+    }
+
+    /// Render all counters + histogram summaries as aligned text.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        let counters = self.counters.lock().unwrap();
+        if !counters.is_empty() {
+            out.push_str("counters:\n");
+            for (k, v) in counters.iter() {
+                out.push_str(&format!("  {k:<32} {v}\n"));
+            }
+        }
+        let hists = self.histograms.lock().unwrap();
+        if !hists.is_empty() {
+            out.push_str("timers (s): name, n, mean, p50, p99, max\n");
+            for (k, h) in hists.iter() {
+                out.push_str(&format!(
+                    "  {:<32} {:>6} {:>10.6} {:>10.6} {:>10.6} {:>10.6}\n",
+                    k,
+                    h.count(),
+                    h.mean(),
+                    h.p50(),
+                    h.p99(),
+                    h.max()
+                ));
+            }
+        }
+        out
+    }
+
+    /// Reset everything (between bench scenarios).
+    pub fn reset(&self) {
+        self.counters.lock().unwrap().clear();
+        self.histograms.lock().unwrap().clear();
+    }
+}
+
+/// RAII phase timer: records elapsed seconds into its histogram on drop.
+pub struct PhaseTimer<'a> {
+    registry: &'a MetricsRegistry,
+    name: &'a str,
+    start: Instant,
+}
+
+impl Drop for PhaseTimer<'_> {
+    fn drop(&mut self) {
+        self.registry.record(self.name, self.start.elapsed().as_secs_f64());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_by_name() {
+        let m = MetricsRegistry::new();
+        m.add(names::SYMBOLS_TO_WORKERS, 100);
+        m.add(names::SYMBOLS_TO_WORKERS, 50);
+        m.inc(names::TASKS_DISPATCHED);
+        assert_eq!(m.get(names::SYMBOLS_TO_WORKERS), 150);
+        assert_eq!(m.get(names::TASKS_DISPATCHED), 1);
+        assert_eq!(m.get("missing"), 0);
+    }
+
+    #[test]
+    fn phase_timer_records_on_drop() {
+        let m = MetricsRegistry::new();
+        {
+            let _t = m.time_phase("phase.test");
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        let h = m.histogram("phase.test").unwrap();
+        assert_eq!(h.count(), 1);
+        assert!(h.mean() >= 0.004, "recorded {}", h.mean());
+    }
+
+    #[test]
+    fn report_contains_names() {
+        let m = MetricsRegistry::new();
+        m.inc("a.b");
+        m.record("t.x", 0.5);
+        let rep = m.report();
+        assert!(rep.contains("a.b"));
+        assert!(rep.contains("t.x"));
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let m = MetricsRegistry::new();
+        m.inc("x");
+        m.record("y", 1.0);
+        m.reset();
+        assert_eq!(m.get("x"), 0);
+        assert!(m.histogram("y").is_none());
+    }
+}

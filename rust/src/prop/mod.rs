@@ -1,0 +1,173 @@
+//! Property-based testing substrate (no `proptest` in this environment).
+//!
+//! Provides seeded random-input generators and a `forall` runner with
+//! greedy shrinking: on failure, the runner re-tries progressively
+//! "smaller" versions of the failing input (halving sizes / magnitudes)
+//! and reports the smallest input that still fails. Used by the coding
+//! and coordinator invariant tests.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries don't inherit the xla rpath link flags)
+//! use spacdc::prop::{forall, prop_assert};
+//! forall(100, 42, |g| {
+//!     let xs = g.vec_f32(1..50, -10.0, 10.0);
+//!     let sum: f32 = xs.iter().sum();
+//!     prop_assert(sum.is_finite(), format!("sum not finite: {sum}"))
+//! });
+//! ```
+
+use crate::rng::{rng_from_seed, Rng};
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property: `Err` carries the failure message.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two f64s are within `tol`.
+pub fn prop_close(a: f64, b: f64, tol: f64) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("|{a} - {b}| = {} > {tol}", (a - b).abs()))
+    }
+}
+
+/// A seeded input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Size multiplier in (0, 1]; shrinking reruns with smaller values.
+    scale: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, scale: f64) -> Self {
+        Self { rng: rng_from_seed(seed), scale }
+    }
+
+    /// Integer in [lo, hi) — the range shrinks toward `lo` under scaling.
+    pub fn usize_in(&mut self, range: core::ops::Range<usize>) -> usize {
+        assert!(range.start < range.end, "empty range");
+        let span = range.end - range.start;
+        let scaled = ((span as f64 * self.scale).ceil() as usize).max(1);
+        range.start + (self.rng.next_below(scaled as u64) as usize)
+    }
+
+    /// f32 in [lo, hi) — magnitude shrinks toward the midpoint.
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let mid = (lo + hi) / 2.0;
+        let half = (hi - lo) / 2.0 * self.scale as f32;
+        mid - half + 2.0 * half * self.rng.next_f32()
+    }
+
+    /// f64 in [lo, hi).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let mid = (lo + hi) / 2.0;
+        let half = (hi - lo) / 2.0 * self.scale;
+        mid - half + 2.0 * half * self.rng.next_f64()
+    }
+
+    /// Raw u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Bool with probability `p` of true.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Vec of f32 with length drawn from `len`, entries in [lo, hi).
+    pub fn vec_f32(&mut self, len: core::ops::Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    /// Choose `k` distinct indices out of n.
+    pub fn subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        self.rng.choose_indices(n, k)
+    }
+
+    /// Access the raw RNG (for matrix constructors etc.).
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `cases` random evaluations of `property`; on failure, rerun the
+/// failing seed at smaller scales and panic with the smallest failure.
+pub fn forall(cases: usize, seed: u64, property: impl Fn(&mut Gen) -> PropResult) {
+    for case in 0..cases {
+        let case_seed = crate::rng::derive_seed(seed, case as u64);
+        let mut g = Gen::new(case_seed, 1.0);
+        if let Err(first_msg) = property(&mut g) {
+            // Shrink: retry the same seed with smaller scales; keep the
+            // smallest scale that still fails.
+            let mut best = (1.0f64, first_msg);
+            for shrink_step in 1..=6 {
+                let scale = 1.0 / f64::powi(2.0, shrink_step);
+                let mut g = Gen::new(case_seed, scale);
+                if let Err(msg) = property(&mut g) {
+                    best = (scale, msg);
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x}, smallest failing scale {}):\n  {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall(50, 1, |g| {
+            let x = g.f32_in(-5.0, 5.0);
+            prop_assert((-5.0..=5.0).contains(&x), "out of range")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_context() {
+        forall(50, 2, |g| {
+            let x = g.f32_in(0.0, 10.0);
+            prop_assert(x < 5.0, format!("x={x} >= 5"))
+        });
+    }
+
+    #[test]
+    fn usize_in_respects_bounds() {
+        forall(200, 3, |g| {
+            let n = g.usize_in(3..17);
+            prop_assert((3..17).contains(&n), format!("n={n}"))
+        });
+    }
+
+    #[test]
+    fn subset_yields_distinct() {
+        forall(100, 4, |g| {
+            let s = g.subset(20, 5);
+            let mut t = s.clone();
+            t.sort_unstable();
+            t.dedup();
+            prop_assert(t.len() == 5, "subset not distinct")
+        });
+    }
+
+    #[test]
+    fn prop_close_tolerance() {
+        assert!(prop_close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(prop_close(1.0, 2.0, 0.5).is_err());
+    }
+}

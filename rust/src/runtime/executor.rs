@@ -1,0 +1,177 @@
+//! The executor façade: the single entry point workers use to run their
+//! task `f`. Dispatches to a PJRT artifact when one matches the op +
+//! shape, otherwise to the native Rust kernel with identical numerics.
+
+use super::pjrt::artifact_key;
+use super::service::RuntimeHandle;
+use crate::matrix::{gram, matmul, Matrix};
+use crate::metrics::{names, MetricsRegistry};
+use std::sync::Arc;
+
+/// The worker-side operations the coordinator can dispatch.
+#[derive(Clone, Debug)]
+pub enum WorkerOp {
+    /// `f(X̃) = X̃ X̃ᵀ` — the paper's running example (§V-A).
+    Gram,
+    /// `f(X̃) = X̃ · V` with a broadcast right operand — the SPACDC-DL
+    /// coded gradient op (Eq. (23) matmul).
+    RightMul(Arc<Matrix>),
+    /// `(Ã, B̃) ↦ Ã·B̃` — MatDot's pair product.
+    PairProduct,
+    /// Identity (decode-path tests and echo benchmarking).
+    Identity,
+}
+
+impl WorkerOp {
+    /// Polynomial degree of the op in its encoded operand (drives each
+    /// scheme's recovery threshold).
+    pub fn degree(&self) -> u32 {
+        match self {
+            WorkerOp::Gram => 2,
+            WorkerOp::RightMul(_) | WorkerOp::Identity => 1,
+            WorkerOp::PairProduct => 2,
+        }
+    }
+
+    /// Short name for metrics/artifact keys.
+    pub fn name(&self) -> &'static str {
+        match self {
+            WorkerOp::Gram => "gram",
+            WorkerOp::RightMul(_) => "rightmul",
+            WorkerOp::PairProduct => "pair",
+            WorkerOp::Identity => "identity",
+        }
+    }
+}
+
+/// Executes [`WorkerOp`]s, preferring PJRT artifacts.
+#[derive(Clone)]
+pub struct Executor {
+    runtime: Option<RuntimeHandle>,
+    metrics: Arc<MetricsRegistry>,
+}
+
+impl Executor {
+    /// Native-only executor.
+    pub fn native(metrics: Arc<MetricsRegistry>) -> Self {
+        Self { runtime: None, metrics }
+    }
+
+    /// Executor with a PJRT runtime attached.
+    pub fn with_runtime(runtime: RuntimeHandle, metrics: Arc<MetricsRegistry>) -> Self {
+        Self { runtime: Some(runtime), metrics }
+    }
+
+    /// Is a PJRT runtime attached?
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// The metrics sink.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    /// Run `op` on `operands` (1 operand, or 2 for `PairProduct`).
+    pub fn run(&self, op: &WorkerOp, operands: &[Matrix]) -> Matrix {
+        match op {
+            WorkerOp::Gram => {
+                let x = &operands[0];
+                let key = artifact_key("gram", &[x.rows(), x.cols()]);
+                self.dispatch(&key, std::slice::from_ref(x), || gram(x))
+            }
+            WorkerOp::RightMul(v) => {
+                let x = &operands[0];
+                let key = artifact_key("rightmul", &[x.rows(), x.cols(), v.cols()]);
+                let inputs = [x.clone(), (**v).clone()];
+                self.dispatch(&key, &inputs, || matmul(x, v))
+            }
+            WorkerOp::PairProduct => {
+                let (a, b) = (&operands[0], &operands[1]);
+                let key = artifact_key("rightmul", &[a.rows(), a.cols(), b.cols()]);
+                let inputs = [a.clone(), b.clone()];
+                self.dispatch(&key, &inputs, || matmul(a, b))
+            }
+            WorkerOp::Identity => {
+                self.metrics.inc(names::NATIVE_EXECUTIONS);
+                operands[0].clone()
+            }
+        }
+    }
+
+    /// Try PJRT under `key`; fall back to `native` on miss or error.
+    fn dispatch(&self, key: &str, inputs: &[Matrix], native: impl Fn() -> Matrix) -> Matrix {
+        if let Some(rt) = &self.runtime {
+            if rt.has(key) {
+                match rt.execute(key, inputs.to_vec()) {
+                    Ok(out) => {
+                        self.metrics.inc(names::PJRT_EXECUTIONS);
+                        return out;
+                    }
+                    Err(e) => {
+                        log::warn!("PJRT execute {key} failed ({e}); falling back to native");
+                    }
+                }
+            }
+        }
+        self.metrics.inc(names::NATIVE_EXECUTIONS);
+        native()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    fn exec() -> Executor {
+        Executor::native(Arc::new(MetricsRegistry::new()))
+    }
+
+    #[test]
+    fn gram_native_matches_kernel() {
+        let mut rng = rng_from_seed(1);
+        let x = Matrix::random_gaussian(8, 5, 0.0, 1.0, &mut rng);
+        let e = exec();
+        let out = e.run(&WorkerOp::Gram, &[x.clone()]);
+        assert_eq!(out.as_slice(), gram(&x).as_slice());
+        assert_eq!(e.metrics().get(names::NATIVE_EXECUTIONS), 1);
+        assert_eq!(e.metrics().get(names::PJRT_EXECUTIONS), 0);
+    }
+
+    #[test]
+    fn rightmul_native_matches_kernel() {
+        let mut rng = rng_from_seed(2);
+        let x = Matrix::random_gaussian(6, 4, 0.0, 1.0, &mut rng);
+        let v = Matrix::random_gaussian(4, 3, 0.0, 1.0, &mut rng);
+        let e = exec();
+        let out = e.run(&WorkerOp::RightMul(Arc::new(v.clone())), &[x.clone()]);
+        assert_eq!(out.as_slice(), matmul(&x, &v).as_slice());
+    }
+
+    #[test]
+    fn pair_product_multiplies_operands() {
+        let mut rng = rng_from_seed(3);
+        let a = Matrix::random_gaussian(4, 6, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_gaussian(6, 2, 0.0, 1.0, &mut rng);
+        let e = exec();
+        let out = e.run(&WorkerOp::PairProduct, &[a.clone(), b.clone()]);
+        assert_eq!(out.as_slice(), matmul(&a, &b).as_slice());
+    }
+
+    #[test]
+    fn identity_echoes() {
+        let x = Matrix::ones(2, 3);
+        assert_eq!(exec().run(&WorkerOp::Identity, &[x.clone()]).as_slice(), x.as_slice());
+    }
+
+    #[test]
+    fn op_degrees_drive_thresholds() {
+        assert_eq!(WorkerOp::Gram.degree(), 2);
+        assert_eq!(WorkerOp::Identity.degree(), 1);
+        assert_eq!(
+            WorkerOp::RightMul(Arc::new(Matrix::ones(1, 1))).degree(),
+            1
+        );
+    }
+}

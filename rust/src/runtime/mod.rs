@@ -1,0 +1,21 @@
+//! Execution runtime: the bridge between the L3 coordinator and the
+//! AOT-compiled L2/L1 artifacts.
+//!
+//! * [`pjrt`] — wraps the `xla` crate: PJRT CPU client, HLO-text loading
+//!   (`HloModuleProto::from_text_file` — see /opt/xla-example/README.md
+//!   for why text, not serialized protos), compile + execute.
+//! * [`service`] — the PJRT client is `Rc`-based (not `Send`), so a
+//!   dedicated runtime thread owns the engine and serves execute requests
+//!   over channels; worker threads hold a cloneable [`RuntimeHandle`].
+//! * [`executor`] — the façade workers actually call: looks up an
+//!   artifact matching `(op, shape)` and goes through PJRT, else runs the
+//!   native Rust kernel with identical numerics. Metrics record which
+//!   path served each call.
+
+pub mod executor;
+pub mod pjrt;
+pub mod service;
+
+pub use executor::{Executor, WorkerOp};
+pub use pjrt::{artifact_key, PjrtEngine};
+pub use service::{RuntimeHandle, RuntimeService};

@@ -1,0 +1,152 @@
+//! PJRT engine: load HLO-text artifacts, compile once, execute many.
+//!
+//! Interchange is HLO **text** (not serialized `HloModuleProto`): jax
+//! ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
+//! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+
+use crate::matrix::Matrix;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Canonical artifact key for an op + input shape, matching the names
+/// `python/compile/aot.py` writes into `artifacts/manifest.txt`.
+///
+/// * Gram (r×c input):            `gram_{r}x{c}`
+/// * Right-multiply (r×k · k×c):  `rightmul_{r}x{k}x{c}`
+/// * Berrut combine (n blocks):   `berrut_{n}x{r}x{c}`
+/// * MLP forward (batch b):       `mlp_fwd_b{b}`
+pub fn artifact_key(op: &str, dims: &[usize]) -> String {
+    let mut s = String::from(op);
+    for (i, d) in dims.iter().enumerate() {
+        s.push(if i == 0 { '_' } else { 'x' });
+        s.push_str(&d.to_string());
+    }
+    s
+}
+
+/// A compiled artifact plus its declared output shape.
+struct LoadedArtifact {
+    exe: xla::PjRtLoadedExecutable,
+    out_rows: usize,
+    out_cols: usize,
+}
+
+/// The PJRT engine: one CPU client + a registry of compiled executables.
+///
+/// NOT `Send` (the client is `Rc`-based) — owned by the
+/// [`RuntimeService`](super::service::RuntimeService) thread.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    artifacts: HashMap<String, LoadedArtifact>,
+}
+
+impl PjrtEngine {
+    /// Create an engine with an empty registry.
+    pub fn new() -> anyhow::Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, artifacts: HashMap::new() })
+    }
+
+    /// Load every artifact listed in `<dir>/manifest.txt`.
+    ///
+    /// Manifest line format: `key file out_rows out_cols`, `#` comments.
+    pub fn load_dir(dir: &Path) -> anyhow::Result<Self> {
+        let mut engine = Self::new()?;
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", manifest.display()))?;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            anyhow::ensure!(parts.len() == 4, "bad manifest line: {line}");
+            let key = parts[0].to_string();
+            let file: PathBuf = dir.join(parts[1]);
+            let out_rows: usize = parts[2].parse()?;
+            let out_cols: usize = parts[3].parse()?;
+            engine.load_artifact(&key, &file, out_rows, out_cols)?;
+        }
+        Ok(engine)
+    }
+
+    /// Compile a single HLO-text file under `key`.
+    pub fn load_artifact(
+        &mut self,
+        key: &str,
+        path: &Path,
+        out_rows: usize,
+        out_cols: usize,
+    ) -> anyhow::Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.artifacts.insert(key.to_string(), LoadedArtifact { exe, out_rows, out_cols });
+        Ok(())
+    }
+
+    /// Keys currently loaded.
+    pub fn keys(&self) -> Vec<String> {
+        let mut k: Vec<String> = self.artifacts.keys().cloned().collect();
+        k.sort();
+        k
+    }
+
+    /// Is `key` available?
+    pub fn has(&self, key: &str) -> bool {
+        self.artifacts.contains_key(key)
+    }
+
+    /// Execute artifact `key` on the given matrices. Returns the single
+    /// matrix output (our artifacts are lowered with `return_tuple=True`
+    /// and exactly one result).
+    pub fn execute(&self, key: &str, inputs: &[Matrix]) -> anyhow::Result<Matrix> {
+        let art = self
+            .artifacts
+            .get(key)
+            .ok_or_else(|| anyhow::anyhow!("no artifact {key}"))?;
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|m| {
+                xla::Literal::vec1(m.as_slice())
+                    .reshape(&[m.rows() as i64, m.cols() as i64])
+                    .map_err(anyhow::Error::from)
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let result = art.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        let data = out.to_vec::<f32>()?;
+        anyhow::ensure!(
+            data.len() == art.out_rows * art.out_cols,
+            "artifact {key}: expected {}x{} output, got {} elements",
+            art.out_rows,
+            art.out_cols,
+            data.len()
+        );
+        Ok(Matrix::from_vec(art.out_rows, art.out_cols, data))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_key_formats() {
+        assert_eq!(artifact_key("gram", &[128, 256]), "gram_128x256");
+        assert_eq!(artifact_key("rightmul", &[196, 256, 64]), "rightmul_196x256x64");
+        assert_eq!(artifact_key("mlp_fwd", &[64]), "mlp_fwd_64");
+    }
+
+    #[test]
+    fn load_dir_missing_manifest_errors() {
+        match PjrtEngine::load_dir(Path::new("/nonexistent")) {
+            Err(e) => assert!(e.to_string().contains("cannot read")),
+            Ok(_) => panic!("expected error for missing manifest"),
+        }
+    }
+
+    // Full PJRT execution against real artifacts is covered by
+    // rust/tests/pjrt_integration.rs (requires `make artifacts`).
+}

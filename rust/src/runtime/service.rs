@@ -1,0 +1,147 @@
+//! The runtime service thread.
+//!
+//! `xla::PjRtClient` holds an `Rc` internally and is not `Send`, so the
+//! engine lives on one dedicated thread; worker threads talk to it
+//! through a cloneable [`RuntimeHandle`]. Requests carry their own reply
+//! channel, so the service is a simple serial loop (CPU PJRT parallelizes
+//! internally; serializing submissions costs little and keeps the FFI
+//! single-threaded).
+
+use super::pjrt::PjrtEngine;
+use crate::matrix::Matrix;
+use std::path::Path;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+enum Request {
+    Execute {
+        key: String,
+        inputs: Vec<Matrix>,
+        reply: mpsc::Sender<Result<Matrix, String>>,
+    },
+    Has {
+        key: String,
+        reply: mpsc::Sender<bool>,
+    },
+    Keys {
+        reply: mpsc::Sender<Vec<String>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, `Send` handle to the runtime service.
+#[derive(Clone)]
+pub struct RuntimeHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl RuntimeHandle {
+    /// Execute artifact `key`; blocks until the service replies.
+    pub fn execute(&self, key: &str, inputs: Vec<Matrix>) -> Result<Matrix, String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute { key: key.to_string(), inputs, reply })
+            .map_err(|_| "runtime service down".to_string())?;
+        rx.recv().map_err(|_| "runtime service dropped reply".to_string())?
+    }
+
+    /// Is an artifact available?
+    pub fn has(&self, key: &str) -> bool {
+        let (reply, rx) = mpsc::channel();
+        if self.tx.send(Request::Has { key: key.to_string(), reply }).is_err() {
+            return false;
+        }
+        rx.recv().unwrap_or(false)
+    }
+
+    /// All loaded artifact keys.
+    pub fn keys(&self) -> Vec<String> {
+        let (reply, rx) = mpsc::channel();
+        if self.tx.send(Request::Keys { reply }).is_err() {
+            return vec![];
+        }
+        rx.recv().unwrap_or_default()
+    }
+}
+
+/// The service: owns the engine thread; dropping shuts it down.
+pub struct RuntimeService {
+    tx: mpsc::Sender<Request>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl RuntimeService {
+    /// Start a service for the artifacts in `dir`. Fails if the manifest
+    /// is unreadable or any artifact fails to compile.
+    pub fn start(dir: &Path) -> anyhow::Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<(), String>>();
+        let dir = dir.to_path_buf();
+        let join = std::thread::Builder::new()
+            .name("pjrt-runtime".into())
+            .spawn(move || {
+                let engine = match PjrtEngine::load_dir(&dir) {
+                    Ok(e) => {
+                        let _ = init_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e.to_string()));
+                        return;
+                    }
+                };
+                serve(engine, rx);
+            })
+            .expect("spawn runtime thread");
+        init_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("runtime thread died during init"))?
+            .map_err(|e| anyhow::anyhow!(e))?;
+        Ok(Self { tx, join: Some(join) })
+    }
+
+    /// A cloneable handle for workers.
+    pub fn handle(&self) -> RuntimeHandle {
+        RuntimeHandle { tx: self.tx.clone() }
+    }
+}
+
+fn serve(engine: PjrtEngine, rx: mpsc::Receiver<Request>) {
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Execute { key, inputs, reply } => {
+                let out = engine.execute(&key, &inputs).map_err(|e| e.to_string());
+                let _ = reply.send(out);
+            }
+            Request::Has { key, reply } => {
+                let _ = reply.send(engine.has(&key));
+            }
+            Request::Keys { reply } => {
+                let _ = reply.send(engine.keys());
+            }
+            Request::Shutdown => break,
+        }
+    }
+}
+
+impl Drop for RuntimeService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_fails_cleanly_without_artifacts() {
+        assert!(RuntimeService::start(Path::new("/nonexistent-artifacts")).is_err());
+    }
+
+    // Live service round-trips are covered by
+    // rust/tests/pjrt_integration.rs (requires `make artifacts`).
+}

@@ -1,0 +1,249 @@
+//! Adversary models: colluding workers (privacy threat, §III-B Def. 1)
+//! and the network eavesdropper (security threat, §IV).
+
+use crate::matrix::Matrix;
+use std::sync::Mutex;
+
+/// A pool where T colluding workers deposit everything they see
+/// (decrypted shares). Used by the privacy experiments to measure how
+/// well the coalition can reconstruct the master's data.
+#[derive(Debug, Default)]
+pub struct CollusionPool {
+    shares: Mutex<Vec<(usize, Matrix)>>,
+    members: Vec<usize>,
+}
+
+impl CollusionPool {
+    /// A coalition of the given worker indices.
+    pub fn new(members: Vec<usize>) -> Self {
+        Self { shares: Mutex::new(Vec::new()), members }
+    }
+
+    /// Coalition membership.
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// Is `worker` in the coalition?
+    pub fn contains(&self, worker: usize) -> bool {
+        self.members.contains(&worker)
+    }
+
+    /// A colluding worker deposits its (plaintext) share.
+    pub fn deposit(&self, worker: usize, share: &Matrix) {
+        if self.contains(worker) {
+            self.shares.lock().unwrap().push((worker, share.clone()));
+        }
+    }
+
+    /// Everything the coalition has gathered.
+    pub fn gathered(&self) -> Vec<(usize, Matrix)> {
+        self.shares.lock().unwrap().clone()
+    }
+
+    /// Best-effort linear reconstruction attack: given the public encode
+    /// weights `w[share_idx][block_idx]`, least-squares-solve for the
+    /// blocks when the coalition has enough equations, else scale the
+    /// single best share. Returns the estimate of block `target` or None.
+    ///
+    /// (The experiments use this to *measure* leakage; see the ITP
+    /// discussion in DESIGN.md §3.)
+    pub fn linear_attack(
+        &self,
+        weights: &dyn Fn(usize) -> Vec<f64>,
+        target: usize,
+    ) -> Option<Matrix> {
+        let shares = self.gathered();
+        if shares.is_empty() {
+            return None;
+        }
+        // Single-share inversion: pick the share with the largest
+        // |weight| on the target block.
+        let (best_share, best_w) = shares
+            .iter()
+            .map(|(i, m)| {
+                let w = weights(*i);
+                (m, w[target])
+            })
+            .max_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())?;
+        if best_w.abs() < 1e-9 {
+            return None;
+        }
+        Some(best_share.scale(1.0 / best_w as f32))
+    }
+
+    /// Clear gathered state (between rounds).
+    pub fn reset(&self) {
+        self.shares.lock().unwrap().clear();
+    }
+}
+
+/// One message captured on the wire.
+#[derive(Clone, Debug)]
+pub struct EavesdroppedMessage {
+    /// Worker endpoint of the link.
+    pub worker: usize,
+    /// Direction: true = master→worker.
+    pub downlink: bool,
+    /// The payload as it appeared on the wire (ciphertext when MEA-ECC
+    /// is on, plaintext otherwise).
+    pub payload: Matrix,
+}
+
+/// A passive network eavesdropper: records every payload crossing the
+/// master↔worker links. The security experiments compare what it sees
+/// under `TransportSecurity::Plain` vs `MeaEcc`.
+#[derive(Debug, Default)]
+pub struct EavesdropLog {
+    messages: Mutex<Vec<EavesdroppedMessage>>,
+}
+
+impl EavesdropLog {
+    /// Fresh empty log.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a wire payload.
+    pub fn capture(&self, worker: usize, downlink: bool, payload: &Matrix) {
+        self.messages.lock().unwrap().push(EavesdroppedMessage {
+            worker,
+            downlink,
+            payload: payload.clone(),
+        });
+    }
+
+    /// Number of captured messages.
+    pub fn count(&self) -> usize {
+        self.messages.lock().unwrap().len()
+    }
+
+    /// Snapshot of everything captured.
+    pub fn messages(&self) -> Vec<EavesdroppedMessage> {
+        self.messages.lock().unwrap().clone()
+    }
+
+    /// Mean absolute Pearson correlation between captured downlink
+    /// payloads and the reference plaintext *for the same worker* — ≈ 0
+    /// when transport encryption is on, ≈ 1 when off.
+    ///
+    /// `reference[w]` is what worker `w` should have been sent in the
+    /// clear; messages for workers beyond the reference set are skipped.
+    pub fn downlink_correlation(&self, reference: &[Matrix]) -> f64 {
+        let msgs = self.messages.lock().unwrap();
+        let mut total = 0.0;
+        let mut count = 0usize;
+        for m in msgs.iter().filter(|m| m.downlink) {
+            if let Some(r) = reference.get(m.worker) {
+                if r.shape() == m.payload.shape() {
+                    total += correlation(r, &m.payload).abs();
+                    count += 1;
+                }
+            }
+        }
+        if count == 0 {
+            0.0
+        } else {
+            total / count as f64
+        }
+    }
+
+    /// Clear the log.
+    pub fn reset(&self) {
+        self.messages.lock().unwrap().clear();
+    }
+}
+
+/// Pearson correlation between two equal-shape matrices, with non-finite
+/// ciphertext bits sanitized to zero.
+pub fn correlation(a: &Matrix, b: &Matrix) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let clean = |v: f32| -> f64 {
+        if v.is_finite() {
+            (v.clamp(-1e9, 1e9)) as f64
+        } else {
+            0.0
+        }
+    };
+    let n = a.len() as f64;
+    let ma = a.as_slice().iter().map(|&x| clean(x)).sum::<f64>() / n;
+    let mb = b.as_slice().iter().map(|&x| clean(x)).sum::<f64>() / n;
+    let mut cov = 0.0;
+    let mut va = 0.0;
+    let mut vb = 0.0;
+    for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+        let dx = clean(*x) - ma;
+        let dy = clean(*y) - mb;
+        cov += dx * dy;
+        va += dx * dx;
+        vb += dy * dy;
+    }
+    let denom = (va.sqrt() * vb.sqrt()).max(1e-30);
+    cov / denom
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn collusion_pool_only_accepts_members() {
+        let pool = CollusionPool::new(vec![1, 3]);
+        let m = Matrix::ones(2, 2);
+        pool.deposit(0, &m);
+        pool.deposit(1, &m);
+        pool.deposit(3, &m);
+        assert_eq!(pool.gathered().len(), 2);
+        assert!(pool.contains(3));
+        assert!(!pool.contains(0));
+    }
+
+    #[test]
+    fn linear_attack_inverts_single_known_weight() {
+        // One share = 2.0 × block → attack recovers block exactly.
+        let pool = CollusionPool::new(vec![0]);
+        let mut rng = rng_from_seed(1);
+        let block = Matrix::random_uniform(3, 3, -1.0, 1.0, &mut rng);
+        pool.deposit(0, &block.scale(2.0));
+        let est = pool
+            .linear_attack(&|_| vec![2.0], 0)
+            .expect("attack should produce an estimate");
+        assert!(est.max_abs_diff(&block) < 1e-6);
+    }
+
+    #[test]
+    fn linear_attack_empty_pool_is_none() {
+        let pool = CollusionPool::new(vec![0]);
+        assert!(pool.linear_attack(&|_| vec![1.0], 0).is_none());
+    }
+
+    #[test]
+    fn correlation_of_identical_is_one() {
+        let mut rng = rng_from_seed(2);
+        let a = Matrix::random_gaussian(8, 8, 0.0, 1.0, &mut rng);
+        assert!((correlation(&a, &a) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn correlation_of_independent_is_small() {
+        let mut rng = rng_from_seed(3);
+        let a = Matrix::random_gaussian(32, 32, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_gaussian(32, 32, 0.0, 1.0, &mut rng);
+        assert!(correlation(&a, &b).abs() < 0.1);
+    }
+
+    #[test]
+    fn eavesdrop_log_records_and_correlates() {
+        let log = EavesdropLog::new();
+        let mut rng = rng_from_seed(4);
+        let plain = Matrix::random_gaussian(16, 16, 0.0, 1.0, &mut rng);
+        log.capture(0, true, &plain);
+        log.capture(0, false, &plain);
+        assert_eq!(log.count(), 2);
+        let corr = log.downlink_correlation(&[plain.clone()]);
+        assert!(corr > 0.99, "plaintext on the wire should correlate: {corr}");
+        log.reset();
+        assert_eq!(log.count(), 0);
+    }
+}

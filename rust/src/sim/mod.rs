@@ -1,0 +1,10 @@
+//! Adversary and environment simulation — the paper's experimental
+//! apparatus (§VII-B.1): straggler injection via artificial delays,
+//! colluding workers that pool their received shares, and an
+//! eavesdropper that records everything on the wire.
+
+mod adversary;
+mod straggler;
+
+pub use adversary::{correlation as correlation_of, CollusionPool, EavesdropLog, EavesdroppedMessage};
+pub use straggler::{fresh_round_model, DelayModel, WorkerProfile};

@@ -1,0 +1,175 @@
+//! Straggler injection.
+//!
+//! The paper simulates stragglers by inserting `sleep()` into chosen
+//! workers (§VII-B.1). [`DelayModel`] reproduces that: S workers chosen
+//! by seed get a multiplicative service-time factor; all workers get a
+//! base service time and uniform jitter. Deterministic from the seed so
+//! every bench run sees the same straggler pattern.
+
+use crate::config::DelayConfig;
+use crate::rng::{derive_seed, rng_from_seed};
+use std::time::Duration;
+
+/// Per-worker service profile.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WorkerProfile {
+    /// Is this worker a straggler?
+    pub straggler: bool,
+    /// Multiplier applied to the nominal service time.
+    pub speed_factor: f64,
+}
+
+/// Deterministic delay model for a cluster of N workers.
+#[derive(Clone, Debug)]
+pub struct DelayModel {
+    cfg: DelayConfig,
+    profiles: Vec<WorkerProfile>,
+    seed: u64,
+}
+
+impl DelayModel {
+    /// Choose `stragglers` random workers out of `n` (seeded) and build
+    /// their profiles.
+    pub fn new(n: usize, stragglers: usize, cfg: DelayConfig, seed: u64) -> Self {
+        assert!(stragglers <= n, "more stragglers than workers");
+        let mut rng = rng_from_seed(derive_seed(seed, 0x57A6));
+        let chosen = rng.choose_indices(n, stragglers);
+        let mut profiles = vec![
+            WorkerProfile { straggler: false, speed_factor: 1.0 };
+            n
+        ];
+        for &i in &chosen {
+            profiles[i] = WorkerProfile { straggler: true, speed_factor: cfg.straggler_factor };
+        }
+        Self { cfg, profiles, seed }
+    }
+
+    /// Number of workers.
+    pub fn n(&self) -> usize {
+        self.profiles.len()
+    }
+
+    /// The worker profile.
+    pub fn profile(&self, worker: usize) -> WorkerProfile {
+        self.profiles[worker]
+    }
+
+    /// Indices of the straggling workers.
+    pub fn straggler_set(&self) -> Vec<usize> {
+        self.profiles
+            .iter()
+            .enumerate()
+            .filter(|(_, p)| p.straggler)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// The artificial service delay for `worker` on round `round`
+    /// (excludes real compute time, which happens anyway).
+    ///
+    /// delay = base · speed_factor · (1 ± jitter), deterministic in
+    /// (seed, worker, round).
+    pub fn service_delay(&self, worker: usize, round: u64) -> Duration {
+        let p = self.profiles[worker];
+        if self.cfg.base_service_s <= 0.0 {
+            // Even with no base cost, stragglers must straggle: give them
+            // a small floor so the effect exists in fast unit tests.
+            if p.straggler {
+                return Duration::from_micros(200);
+            }
+            return Duration::ZERO;
+        }
+        let mut r = rng_from_seed(derive_seed(
+            self.seed,
+            (worker as u64) << 32 | (round & 0xFFFF_FFFF),
+        ));
+        let jitter = 1.0 + self.cfg.jitter * (2.0 * r.next_f64() - 1.0);
+        let secs = self.cfg.base_service_s * p.speed_factor * jitter.max(0.0);
+        Duration::from_secs_f64(secs)
+    }
+
+    /// Expected (jitter-free) service seconds for `worker` — used by the
+    /// analytical latency model in the benches.
+    pub fn expected_service_s(&self, worker: usize) -> f64 {
+        self.cfg.base_service_s * self.profiles[worker].speed_factor
+    }
+}
+
+/// Draw a fresh straggler assignment per round (paper: "randomly select
+/// S straggling workers").
+pub fn fresh_round_model(
+    n: usize,
+    stragglers: usize,
+    cfg: DelayConfig,
+    seed: u64,
+    round: u64,
+) -> DelayModel {
+    DelayModel::new(n, stragglers, cfg, derive_seed(seed, round))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(base: f64) -> DelayConfig {
+        DelayConfig { straggler_factor: 5.0, base_service_s: base, jitter: 0.1 }
+    }
+
+    #[test]
+    fn straggler_count_respected() {
+        let m = DelayModel::new(30, 7, cfg(0.01), 42);
+        assert_eq!(m.straggler_set().len(), 7);
+        assert_eq!(m.n(), 30);
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = DelayModel::new(30, 5, cfg(0.01), 7);
+        let b = DelayModel::new(30, 5, cfg(0.01), 7);
+        assert_eq!(a.straggler_set(), b.straggler_set());
+        for w in 0..30 {
+            assert_eq!(a.service_delay(w, 3), b.service_delay(w, 3));
+        }
+    }
+
+    #[test]
+    fn different_seeds_move_stragglers() {
+        let a = DelayModel::new(30, 5, cfg(0.01), 1);
+        let b = DelayModel::new(30, 5, cfg(0.01), 2);
+        assert_ne!(a.straggler_set(), b.straggler_set());
+    }
+
+    #[test]
+    fn stragglers_are_slower() {
+        let m = DelayModel::new(10, 3, cfg(0.01), 9);
+        for w in 0..10 {
+            let d = m.service_delay(w, 0).as_secs_f64();
+            if m.profile(w).straggler {
+                assert!(d > 0.04, "straggler {w} delay {d}");
+            } else {
+                assert!(d < 0.012, "normal {w} delay {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_base_still_distinguishes_stragglers() {
+        let m = DelayModel::new(8, 2, cfg(0.0), 3);
+        for w in 0..8 {
+            let d = m.service_delay(w, 0);
+            if m.profile(w).straggler {
+                assert!(d > Duration::ZERO);
+            } else {
+                assert_eq!(d, Duration::ZERO);
+            }
+        }
+    }
+
+    #[test]
+    fn jitter_varies_by_round() {
+        let m = DelayModel::new(4, 0, cfg(0.01), 5);
+        let d0 = m.service_delay(0, 0);
+        let d1 = m.service_delay(0, 1);
+        assert_ne!(d0, d1);
+    }
+}

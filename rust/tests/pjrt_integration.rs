@@ -1,0 +1,152 @@
+//! PJRT integration: the Rust runtime loads the AOT artifacts produced by
+//! `make artifacts` and executes them with correct numerics.
+//!
+//! All tests skip cleanly when `artifacts/manifest.txt` is absent so
+//! `cargo test` stays green before the Python step has run.
+
+use spacdc::matrix::{gram, matmul, Matrix};
+use spacdc::metrics::{names, MetricsRegistry};
+use spacdc::rng::rng_from_seed;
+use spacdc::runtime::{Executor, RuntimeService, WorkerOp};
+use std::path::Path;
+use std::sync::Arc;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn service_loads_manifest() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = RuntimeService::start(dir).expect("runtime service");
+    let keys = svc.handle().keys();
+    assert!(keys.iter().any(|k| k == "gram_128x256"), "keys: {keys:?}");
+    assert!(keys.iter().any(|k| k == "mlp_fwd_64"), "keys: {keys:?}");
+    assert!(keys.len() >= 6);
+}
+
+#[test]
+fn gram_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = RuntimeService::start(dir).expect("runtime service");
+    let mut rng = rng_from_seed(1);
+    let x = Matrix::random_gaussian(128, 256, 0.0, 1.0, &mut rng);
+    let out = svc
+        .handle()
+        .execute("gram_128x256", vec![x.clone()])
+        .expect("execute");
+    let expect = gram(&x);
+    assert_eq!(out.shape(), (128, 128));
+    assert!(
+        out.rel_error(&expect) < 1e-4,
+        "PJRT vs native gram: {}",
+        out.rel_error(&expect)
+    );
+}
+
+#[test]
+fn rightmul_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = RuntimeService::start(dir).expect("runtime service");
+    let mut rng = rng_from_seed(2);
+    let x = Matrix::random_gaussian(64, 128, 0.0, 1.0, &mut rng);
+    let v = Matrix::random_gaussian(128, 64, 0.0, 1.0, &mut rng);
+    let out = svc
+        .handle()
+        .execute("rightmul_64x128x64", vec![x.clone(), v.clone()])
+        .expect("execute");
+    assert!(out.rel_error(&matmul(&x, &v)) < 1e-4);
+}
+
+#[test]
+fn berrut_encode_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = RuntimeService::start(dir).expect("runtime service");
+    let mut rng = rng_from_seed(3);
+    // 7 stacked blocks of 64×128 + weights (7×1).
+    let stacked = Matrix::random_gaussian(7 * 64, 128, 0.0, 1.0, &mut rng);
+    let weights = Matrix::random_uniform(7, 1, -1.0, 1.0, &mut rng);
+    let out = svc
+        .handle()
+        .execute("berrut_7x64x128", vec![stacked.clone(), weights.clone()])
+        .expect("execute");
+    // Native: Σ wᵢ · blockᵢ.
+    let mut expect = Matrix::zeros(64, 128);
+    for i in 0..7 {
+        expect.axpy(weights.get(i, 0), &stacked.rows_slice(i * 64, 64));
+    }
+    assert!(out.rel_error(&expect) < 1e-4, "err {}", out.rel_error(&expect));
+}
+
+#[test]
+fn mlp_forward_artifact_produces_probabilities() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = RuntimeService::start(dir).expect("runtime service");
+    let mut rng = rng_from_seed(4);
+    let inputs = vec![
+        Matrix::random_gaussian(256, 784, 0.0, 0.05, &mut rng), // w0
+        Matrix::zeros(256, 1),                                  // b0
+        Matrix::random_gaussian(128, 256, 0.0, 0.05, &mut rng), // w1
+        Matrix::zeros(128, 1),                                  // b1
+        Matrix::random_gaussian(10, 128, 0.0, 0.05, &mut rng),  // w2
+        Matrix::zeros(10, 1),                                   // b2
+        Matrix::random_uniform(784, 64, 0.0, 1.0, &mut rng),    // x
+    ];
+    let out = svc.handle().execute("mlp_fwd_64", inputs).expect("execute");
+    assert_eq!(out.shape(), (10, 64));
+    for c in 0..64 {
+        let s: f32 = (0..10).map(|r| out.get(r, c)).sum();
+        assert!((s - 1.0).abs() < 1e-4, "column {c} sums to {s}");
+    }
+}
+
+#[test]
+fn executor_prefers_pjrt_for_matching_shapes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = RuntimeService::start(dir).expect("runtime service");
+    let metrics = Arc::new(MetricsRegistry::new());
+    let exec = Executor::with_runtime(svc.handle(), Arc::clone(&metrics));
+    let mut rng = rng_from_seed(5);
+
+    // Matching shape → PJRT.
+    let x = Matrix::random_gaussian(128, 256, 0.0, 1.0, &mut rng);
+    let out = exec.run(&WorkerOp::Gram, &[x.clone()]);
+    assert!(out.rel_error(&gram(&x)) < 1e-4);
+    assert_eq!(metrics.get(names::PJRT_EXECUTIONS), 1);
+    assert_eq!(metrics.get(names::NATIVE_EXECUTIONS), 0);
+
+    // Non-matching shape → native fallback.
+    let y = Matrix::random_gaussian(33, 17, 0.0, 1.0, &mut rng);
+    let out = exec.run(&WorkerOp::Gram, &[y.clone()]);
+    assert!(out.rel_error(&gram(&y)) < 1e-5);
+    assert_eq!(metrics.get(names::NATIVE_EXECUTIONS), 1);
+}
+
+#[test]
+fn executor_shared_across_threads() {
+    let Some(dir) = artifacts_dir() else { return };
+    let svc = RuntimeService::start(dir).expect("runtime service");
+    let metrics = Arc::new(MetricsRegistry::new());
+    let exec = Executor::with_runtime(svc.handle(), Arc::clone(&metrics));
+    let handles: Vec<_> = (0..4)
+        .map(|t| {
+            let exec = exec.clone();
+            std::thread::spawn(move || {
+                let mut rng = rng_from_seed(100 + t);
+                let x = Matrix::random_gaussian(128, 256, 0.0, 1.0, &mut rng);
+                let out = exec.run(&WorkerOp::Gram, &[x.clone()]);
+                assert!(out.rel_error(&gram(&x)) < 1e-4);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(metrics.get(names::PJRT_EXECUTIONS), 4);
+}

@@ -1,0 +1,163 @@
+//! Adversarial integration tests: the paper's security (§IV) and privacy
+//! (Theorems 2–3) claims exercised against live adversaries.
+
+use spacdc::coding::{CodeParams, Scheme, Spacdc};
+use spacdc::config::{SchemeKind, SystemConfig, TransportSecurity};
+use spacdc::coordinator::MasterBuilder;
+use spacdc::ecc::{secp256k1, sim_curve, KeyPair, MaskMode, MeaEcc};
+use spacdc::matrix::{split_rows, Matrix};
+use spacdc::rng::rng_from_seed;
+use spacdc::runtime::WorkerOp;
+use spacdc::sim::{correlation_of, CollusionPool, EavesdropLog};
+use std::sync::Arc;
+
+fn base_cfg() -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 12;
+    cfg.partitions = 3;
+    cfg.colluders = 2;
+    cfg.stragglers = 2;
+    cfg.delay.base_service_s = 0.0;
+    cfg.seed = 0x5EC;
+    cfg
+}
+
+#[test]
+fn eavesdropper_learns_nothing_under_mea_ecc() {
+    let tap = Arc::new(EavesdropLog::new());
+    let mut cfg = base_cfg();
+    cfg.scheme = SchemeKind::Bacc; // deterministic shares, reproducible
+    cfg.transport = TransportSecurity::MeaEcc;
+    let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
+    let mut rng = rng_from_seed(1);
+    let x = Matrix::random_gaussian(24, 16, 0.0, 1.0, &mut rng);
+    master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+
+    let scheme = spacdc::coding::Bacc::new(CodeParams::new(12, 3, 0));
+    let enc = scheme.encode(&x, 1, &mut rng_from_seed(0)).unwrap();
+    let corr = tap.downlink_correlation(&enc.shares);
+    assert!(corr < 0.15, "sealed wire correlates with shares: {corr}");
+    assert!(tap.count() >= 12 + 10, "tap should see both directions");
+}
+
+#[test]
+fn eavesdropper_reads_everything_in_plain_mode() {
+    let tap = Arc::new(EavesdropLog::new());
+    let mut cfg = base_cfg();
+    cfg.scheme = SchemeKind::Bacc;
+    cfg.transport = TransportSecurity::Plain;
+    let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
+    let mut rng = rng_from_seed(2);
+    let x = Matrix::random_gaussian(24, 16, 0.0, 1.0, &mut rng);
+    master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+    let scheme = spacdc::coding::Bacc::new(CodeParams::new(12, 3, 0));
+    let enc = scheme.encode(&x, 1, &mut rng_from_seed(0)).unwrap();
+    let corr = tap.downlink_correlation(&enc.shares);
+    assert!(corr > 0.95, "plain wire must match the shares: {corr}");
+}
+
+#[test]
+fn collusion_pool_collects_only_member_shares_through_coordinator() {
+    let coalition = Arc::new(CollusionPool::new(vec![0, 5]));
+    let mut cfg = base_cfg();
+    cfg.scheme = SchemeKind::Spacdc;
+    let mut master = MasterBuilder::new(cfg).collusion(Arc::clone(&coalition)).build().unwrap();
+    let mut rng = rng_from_seed(3);
+    let x = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
+    master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+    // The members see exactly their decrypted shares, nothing else.
+    let gathered = coalition.gathered();
+    let members: std::collections::BTreeSet<usize> =
+        gathered.iter().map(|(w, _)| *w).collect();
+    assert!(members.iter().all(|w| [0usize, 5].contains(w)), "members {members:?}");
+    assert!(!gathered.is_empty());
+}
+
+#[test]
+fn colluder_leakage_drops_with_mask_amplitude() {
+    // The ℝ-instantiation privacy law (DESIGN.md §3): the best
+    // single-share inversion degrades as mask_scale grows.
+    let attack = |scale: f32| -> f64 {
+        let k = 3;
+        let t = 2;
+        let scheme = Spacdc::with_mask_scale(CodeParams::new(12, k, t), scale);
+        let mut rng = rng_from_seed(4);
+        let mut acc = 0.0;
+        let trials = 10;
+        for _ in 0..trials {
+            let x = Matrix::random_gaussian(12, 6, 0.0, 1.0, &mut rng);
+            let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+            let (blocks, _) = split_rows(&x, k);
+            let (data_pos, _) = Spacdc::node_layout(k, t);
+            let betas = scheme.betas();
+            let signs: Vec<u32> = (0..(k + t) as u32).collect();
+            let mut best = f64::INFINITY;
+            for j in 0..t {
+                let w = spacdc::coding::interp::berrut_weights(
+                    &betas,
+                    &signs,
+                    enc.ctx.alphas[j],
+                );
+                for (b, block) in blocks.iter().enumerate() {
+                    let wb = w[data_pos[b]];
+                    if wb.abs() > 1e-6 {
+                        best = best
+                            .min(enc.shares[j].scale(1.0 / wb as f32).rel_error(block));
+                    }
+                }
+            }
+            acc += best;
+        }
+        acc / trials as f64
+    };
+    let weak = attack(0.25);
+    let strong = attack(4.0);
+    assert!(
+        strong > 3.0 * weak,
+        "mask amplitude must control leakage: {weak} vs {strong}"
+    );
+}
+
+#[test]
+fn mea_ecc_cross_curve_consistency() {
+    // The same MEA-ECC protocol over both curve instantiations.
+    let mut rng = rng_from_seed(5);
+    let m = Matrix::random_gaussian(8, 8, 0.0, 1.0, &mut rng);
+
+    let sim = sim_curve();
+    let kp1 = KeyPair::generate(&sim, &mut rng);
+    let mea1 = MeaEcc::new(sim, MaskMode::Keystream);
+    let sealed1 = mea1.encrypt(&m, &kp1.public(), &mut rng);
+    assert_eq!(mea1.decrypt(&sealed1, &kp1), m);
+
+    let secp = secp256k1();
+    let kp2 = KeyPair::generate(&secp, &mut rng);
+    let mea2 = MeaEcc::new(secp, MaskMode::Keystream);
+    let sealed2 = mea2.encrypt(&m, &kp2.public(), &mut rng);
+    assert_eq!(mea2.decrypt(&sealed2, &kp2), m);
+}
+
+#[test]
+fn sealed_result_path_hides_worker_outputs_too() {
+    // Uplink (worker→master) payloads must also decorrelate from the
+    // true results under MEA-ECC — Theorem 3's transport analogue.
+    let tap = Arc::new(EavesdropLog::new());
+    let mut cfg = base_cfg();
+    cfg.scheme = SchemeKind::Bacc;
+    cfg.transport = TransportSecurity::MeaEcc;
+    let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
+    let mut rng = rng_from_seed(6);
+    let x = Matrix::random_gaussian(24, 16, 0.0, 1.0, &mut rng);
+    master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+    // For the identity op the true uplink payloads are the shares.
+    let scheme = spacdc::coding::Bacc::new(CodeParams::new(12, 3, 0));
+    let enc = scheme.encode(&x, 1, &mut rng_from_seed(0)).unwrap();
+    let mut worst: f64 = 0.0;
+    for msg in tap.messages().iter().filter(|m| !m.downlink) {
+        let r = &enc.shares[msg.worker];
+        if r.shape() == msg.payload.shape() {
+            worst = worst.max(correlation_of(r, &msg.payload).abs());
+        }
+    }
+    assert!(worst < 0.25, "uplink leaks worker results: {worst}");
+}

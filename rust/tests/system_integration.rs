@@ -1,0 +1,211 @@
+//! Cross-module integration: coordinator + coding + ECC + sim working
+//! together across schemes, scenarios, and failure patterns.
+
+use spacdc::coding::{CodeParams, MatDot, Scheme, Spacdc};
+use spacdc::config::{SchemeKind, SystemConfig, TransportSecurity};
+use spacdc::coordinator::Master;
+use spacdc::dl::{train, TrainerOptions};
+use spacdc::matrix::{gram, matmul, split_rows, stack_rows, Matrix};
+use spacdc::metrics::names;
+use spacdc::rng::rng_from_seed;
+use spacdc::runtime::WorkerOp;
+use std::sync::Arc;
+
+fn cfg(scheme: SchemeKind) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 16;
+    cfg.partitions = 4;
+    cfg.colluders = 2;
+    cfg.stragglers = 3;
+    cfg.scheme = scheme;
+    cfg.delay.base_service_s = 0.0;
+    cfg.seed = 0x5151;
+    cfg
+}
+
+#[test]
+fn every_scheme_completes_a_linear_round() {
+    let mut rng = rng_from_seed(1);
+    let x = Matrix::random_gaussian(32, 12, 0.0, 1.0, &mut rng);
+    let v = Arc::new(Matrix::random_gaussian(12, 8, 0.0, 1.0, &mut rng));
+    for scheme in [
+        SchemeKind::Spacdc,
+        SchemeKind::Bacc,
+        SchemeKind::Mds,
+        SchemeKind::Polynomial,
+        SchemeKind::Lcc,
+        SchemeKind::SecPoly,
+        SchemeKind::Uncoded,
+    ] {
+        let mut c = cfg(scheme);
+        if scheme == SchemeKind::Uncoded {
+            c.partitions = c.workers;
+        }
+        let mut master = Master::from_config(c).unwrap();
+        let out = master
+            .run_blockmap(WorkerOp::RightMul(Arc::clone(&v)), &x)
+            .unwrap_or_else(|e| panic!("{scheme:?}: {e}"));
+        assert!(!out.blocks.is_empty(), "{scheme:?}");
+        // Exact schemes must be near-exact; approximate ones bounded.
+        let k = out.blocks.len();
+        let (blocks, _) = split_rows(&x, k);
+        let worst = out
+            .blocks
+            .iter()
+            .zip(&blocks)
+            .map(|(d, b)| d.rel_error(&matmul(b, &v)))
+            .fold(0.0f64, f64::max);
+        let bound = match scheme {
+            SchemeKind::Spacdc | SchemeKind::Bacc => 0.6,
+            _ => 1e-2,
+        };
+        assert!(worst < bound, "{scheme:?}: worst {worst}");
+    }
+}
+
+#[test]
+fn matdot_end_to_end_with_sealed_transport() {
+    let mut c = cfg(SchemeKind::MatDot);
+    c.transport = TransportSecurity::MeaEcc;
+    let mut master = Master::from_config(c).unwrap();
+    let mut rng = rng_from_seed(2);
+    let a = Matrix::random_gaussian(10, 12, 0.0, 1.0, &mut rng);
+    let b = Matrix::random_gaussian(12, 10, 0.0, 1.0, &mut rng);
+    let out = master.run_matmul(&a, &b).unwrap();
+    // MatDot decode solves a degree-(2K−2) Vandermonde system over f32
+    // payloads; conditioning bounds accuracy at ~1e-2 for clustered
+    // return subsets (see matdot.rs docs).
+    assert!(out.blocks[0].rel_error(&matmul(&a, &b)) < 0.05);
+}
+
+#[test]
+fn transport_modes_agree_on_decoded_output() {
+    // MEA-ECC keystream decrypt is bit-exact, so with a deterministic
+    // scheme (BACC) and no stragglers (wait-for-all ⇒ fixed return set)
+    // the decode results must be identical between Plain and MeaEcc.
+    let mut rng = rng_from_seed(3);
+    let x = Matrix::random_gaussian(32, 8, 0.0, 1.0, &mut rng);
+    let run_with = |transport: TransportSecurity| -> Vec<Matrix> {
+        let mut c = cfg(SchemeKind::Bacc);
+        c.stragglers = 0; // flexible wait count = N ⇒ deterministic set
+        c.transport = transport;
+        let mut master = Master::from_config(c).unwrap();
+        master.run_blockmap(WorkerOp::Identity, &x).unwrap().blocks
+    };
+    let plain = run_with(TransportSecurity::Plain);
+    let sealed = run_with(TransportSecurity::MeaEcc);
+    for (p, s) in plain.iter().zip(&sealed) {
+        assert_eq!(p.as_slice(), s.as_slice(), "transport must be transparent");
+    }
+}
+
+#[test]
+fn straggler_injection_delays_but_does_not_break_rounds() {
+    let mut c = cfg(SchemeKind::Spacdc);
+    c.delay.base_service_s = 0.005;
+    c.delay.straggler_factor = 8.0;
+    c.stragglers = 4;
+    let mut master = Master::from_config(c).unwrap();
+    let mut rng = rng_from_seed(4);
+    let x = Matrix::random_gaussian(32, 8, 0.0, 1.0, &mut rng);
+    let out = master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+    // Waited for N−S = 12 fast results; round should finish well before
+    // a straggler's 40ms service time.
+    assert_eq!(out.results_used, 12);
+    assert!(
+        out.wall.as_secs_f64() < 0.035,
+        "round waited for stragglers: {:?}",
+        out.wall
+    );
+}
+
+#[test]
+fn late_results_are_accounted() {
+    let mut c = cfg(SchemeKind::Spacdc);
+    c.delay.base_service_s = 0.002;
+    c.stragglers = 4;
+    let mut master = Master::from_config(c).unwrap();
+    let mut rng = rng_from_seed(5);
+    let x = Matrix::random_gaussian(32, 8, 0.0, 1.0, &mut rng);
+    for _ in 0..3 {
+        master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+    }
+    // Let stragglers land, then trigger a drain with one more round.
+    std::thread::sleep(std::time::Duration::from_millis(80));
+    master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+    let late = master.metrics().get(names::RESULTS_LATE);
+    assert!(late > 0, "straggler results should have been counted late");
+}
+
+#[test]
+fn coded_training_is_deterministic() {
+    // Uncoded waits for every worker, so the return set — and therefore
+    // the whole training trajectory — is deterministic bit-for-bit.
+    let mut c = cfg(SchemeKind::Uncoded);
+    c.partitions = c.workers;
+    c.stragglers = 0;
+    c.dl.layers = vec![16, 12, 4];
+    c.dl.batch_size = 16;
+    c.dl.epochs = 1;
+    c.dl.train_examples = 64;
+    c.dl.test_examples = 32;
+    let a = train(&TrainerOptions::new(c.clone())).unwrap();
+    let b = train(&TrainerOptions::new(c)).unwrap();
+    assert_eq!(a.epochs.len(), b.epochs.len());
+    for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+        assert!((ea.loss - eb.loss).abs() < 1e-9, "coded training must be deterministic");
+    }
+}
+
+#[test]
+fn spacdc_decode_quality_improves_with_returns() {
+    // System-level check of the accuracy-vs-returns trade-off.
+    let params = CodeParams::new(24, 3, 2);
+    let scheme = Spacdc::new(params);
+    let mut rng = rng_from_seed(6);
+    let x = Matrix::random_gaussian(30, 10, 0.0, 1.0, &mut rng);
+    let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+    let (blocks, spec) = split_rows(&x, 3);
+    let err_at = |count: usize| -> f64 {
+        let results: Vec<(usize, Matrix)> =
+            (0..count).map(|i| (i, enc.shares[i].clone())).collect();
+        let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+        stack_rows(&decoded, &spec).rel_error(&stack_rows(&blocks, &spec))
+    };
+    let e_full = err_at(24);
+    let e_half = err_at(12);
+    assert!(e_full < e_half, "more returns must not hurt: {e_full} vs {e_half}");
+}
+
+#[test]
+fn gram_round_through_coordinator_matches_direct_computation() {
+    let mut c = cfg(SchemeKind::Bacc);
+    c.stragglers = 0;
+    let mut master = Master::from_config(c).unwrap();
+    let mut rng = rng_from_seed(7);
+    let x = Matrix::random_gaussian(32, 16, 0.0, 1.0, &mut rng);
+    let out = master.run_blockmap(WorkerOp::Gram, &x).unwrap();
+    let (blocks, _) = split_rows(&x, 4);
+    for (d, b) in out.blocks.iter().zip(&blocks) {
+        assert!(d.rel_error(&gram(b)) < 0.15);
+    }
+}
+
+#[test]
+fn matdot_pair_code_from_library_and_coordinator_agree() {
+    let mut rng = rng_from_seed(8);
+    let a = Matrix::random_gaussian(8, 9, 0.0, 1.0, &mut rng);
+    let b = Matrix::random_gaussian(9, 8, 0.0, 1.0, &mut rng);
+    // Library-level decode.
+    let code = MatDot::new(16, 4);
+    let enc = code.encode_pair(&a, &b).unwrap();
+    let results: Vec<(usize, Matrix)> = (0..7)
+        .map(|i| (i, MatDot::worker_compute(&enc.shares[i])))
+        .collect();
+    let lib = code.decode(&enc, &results).unwrap();
+    // Coordinator-level decode (different return subset ⇒ agreement is
+    // bounded by the Vandermonde conditioning, not bit-exact).
+    let mut master = Master::from_config(cfg(SchemeKind::MatDot)).unwrap();
+    let coord = master.run_matmul(&a, &b).unwrap();
+    assert!(lib.rel_error(&coord.blocks[0]) < 0.05);
+}
