@@ -1,5 +1,5 @@
 //! End-to-end SPACDC-DL training driver — the repo's headline
-//! validation run (recorded in EXPERIMENTS.md).
+//! validation run (see DESIGN.md §4 for the experiment index).
 //!
 //! Trains the §VI DNN (784-256-128-10, ≈236k parameters — the paper's
 //! MNIST-scale workload) on the synthetic MNIST-like dataset with the
@@ -39,18 +39,20 @@ fn base_cfg() -> SystemConfig {
 
 fn main() -> anyhow::Result<()> {
     let metrics = Arc::new(MetricsRegistry::new());
-    let executor = match RuntimeService::start(Path::new("artifacts")) {
+    // Keep the service handle in scope: it owns the runtime thread and
+    // joins it on drop at the end of `main` (no `std::mem::forget` leak).
+    let runtime: Option<RuntimeService> = match RuntimeService::start(Path::new("artifacts")) {
         Ok(svc) => {
             println!("PJRT runtime: {} artifacts", svc.handle().keys().len());
-            let h = svc.handle();
-            std::mem::forget(svc);
-            Some(Executor::with_runtime(h, Arc::clone(&metrics)))
+            Some(svc)
         }
         Err(_) => {
             println!("PJRT runtime unavailable (run `make artifacts`); native kernels");
             None
         }
     };
+    let executor =
+        runtime.as_ref().map(|svc| Executor::with_runtime(svc.handle(), Arc::clone(&metrics)));
 
     // --- PJRT demonstration epoch --------------------------------------
     // One epoch with worker tasks on the compiled-artifact path, proving

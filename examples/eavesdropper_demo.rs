@@ -7,7 +7,7 @@
 //!    best single-share linear inversion; we report the reconstruction
 //!    error at increasing mask scales (the DESIGN.md §3 trade-off).
 
-use spacdc::coding::{CodeParams, Scheme, Spacdc};
+use spacdc::coding::{BlockCode, CodeParams, CodedTask, Spacdc};
 use spacdc::config::{SchemeKind, SystemConfig, TransportSecurity};
 use spacdc::coordinator::MasterBuilder;
 use spacdc::matrix::{split_rows, Matrix};
@@ -30,10 +30,10 @@ fn eavesdrop_run(transport: TransportSecurity) -> anyhow::Result<(f64, usize)> {
     let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build()?;
     let mut rng = rng_from_seed(5);
     let x = Matrix::random_gaussian(24, 16, 0.0, 1.0, &mut rng);
-    master.run_blockmap(WorkerOp::Identity, &x)?;
+    master.run(CodedTask::block_map(WorkerOp::Identity, x.clone()))?;
     // Reproduce the true shares (BACC encode is deterministic).
     let scheme = spacdc::coding::Bacc::new(CodeParams::new(12, 3, 0));
-    let enc = scheme.encode(&x, 1, &mut rng_from_seed(0))?;
+    let enc = scheme.encode_blocks(&x, 1, &mut rng_from_seed(0))?;
     Ok((tap.downlink_correlation(&enc.shares), tap.count()))
 }
 
@@ -53,7 +53,7 @@ fn main() -> anyhow::Result<()> {
         let scheme = Spacdc::with_mask_scale(CodeParams::new(30, k, t), scale);
         let mut rng = rng_from_seed(0xC011);
         let x = Matrix::random_gaussian(64, 32, 0.0, 1.0, &mut rng);
-        let enc = scheme.encode(&x, 1, &mut rng)?;
+        let enc = scheme.encode_blocks(&x, 1, &mut rng)?;
         let (blocks, _) = split_rows(&x, k);
         // Best single-share inversion across the T colluders & K blocks.
         let (data_pos, _) = Spacdc::node_layout(k, t);
@@ -73,7 +73,7 @@ fn main() -> anyhow::Result<()> {
         // Decode quality at 27/30 returns for the same scale.
         let results: Vec<(usize, Matrix)> =
             (0..27).map(|i| (i, enc.shares[i].clone())).collect();
-        let decoded = scheme.decode(&enc.ctx, &results)?;
+        let decoded = scheme.decode_blocks(&enc.ctx, &results)?;
         let err = decoded
             .iter()
             .zip(&blocks)

@@ -6,10 +6,12 @@
 //!
 //! Builds the default cluster (N=30 workers, T=3 colluders tolerated,
 //! S=3 stragglers injected), distributes the paper's running task
-//! `f(X) = X·Xᵀ` over K=4 row-blocks with SPACDC + MEA-ECC, and decodes
-//! the approximation from the non-straggler returns. Workers execute on
-//! the PJRT artifact path when `artifacts/` is present.
+//! `f(X) = X·Xᵀ` over K=4 row-blocks with SPACDC + MEA-ECC as one typed
+//! [`CodedTask`], and decodes the approximation from the non-straggler
+//! returns. Workers execute on the PJRT artifact path when `artifacts/`
+//! is present.
 
+use spacdc::coding::CodedTask;
 use spacdc::config::SystemConfig;
 use spacdc::coordinator::MasterBuilder;
 use spacdc::matrix::{gram, split_rows, Matrix};
@@ -26,19 +28,25 @@ fn main() -> anyhow::Result<()> {
         cfg.workers, cfg.partitions, cfg.colluders, cfg.stragglers
     );
 
-    // PJRT runtime if artifacts are built; native kernels otherwise.
+    // PJRT runtime if artifacts are built; native kernels otherwise. The
+    // service handle stays in scope for the whole run — dropping it at
+    // the end of `main` shuts the runtime thread down cleanly (no
+    // `std::mem::forget` leak).
     let metrics = Arc::new(MetricsRegistry::new());
-    let executor = match RuntimeService::start(Path::new(&cfg.artifacts_dir)) {
+    let runtime: Option<RuntimeService> = match RuntimeService::start(Path::new(&cfg.artifacts_dir))
+    {
         Ok(svc) => {
             println!("PJRT runtime: {} artifacts loaded", svc.handle().keys().len());
-            let handle = svc.handle();
-            std::mem::forget(svc); // keep the runtime thread for process lifetime
-            Executor::with_runtime(handle, Arc::clone(&metrics))
+            Some(svc)
         }
         Err(_) => {
             println!("PJRT runtime: artifacts not built; using native kernels");
-            Executor::native(Arc::clone(&metrics))
+            None
         }
+    };
+    let executor = match &runtime {
+        Some(svc) => Executor::with_runtime(svc.handle(), Arc::clone(&metrics)),
+        None => Executor::native(Arc::clone(&metrics)),
     };
 
     let mut master = MasterBuilder::new(cfg.clone())
@@ -50,7 +58,7 @@ fn main() -> anyhow::Result<()> {
     // 128×256 — exactly the `gram_128x256` artifact shape.
     let mut rng = rng_from_seed(42);
     let x = Matrix::random_gaussian(512, 256, 0.0, 1.0, &mut rng);
-    let out = master.run_blockmap(WorkerOp::Gram, &x)?;
+    let out = master.run(CodedTask::block_map(WorkerOp::Gram, x.clone()))?;
 
     println!(
         "\nround complete in {:.1} ms using {} of {} worker results",

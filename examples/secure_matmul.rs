@@ -6,7 +6,7 @@
 //! using the coding/ECC layers directly, without the coordinator, so the
 //! protocol is visible end to end.
 
-use spacdc::coding::{CodeParams, Scheme, Spacdc};
+use spacdc::coding::{BlockCode, CodeParams, Spacdc};
 use spacdc::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc};
 use spacdc::matrix::{gram, split_rows, Matrix};
 use spacdc::rng::rng_from_seed;
@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     // Phase 1 — data process (Eq. (14)): split K=2, add T=1 mask, encode.
     let x = Matrix::random_gaussian(16, 12, 0.0, 1.0, &mut rng);
     let scheme = Spacdc::new(CodeParams::new(n, k, t));
-    let encoded = scheme.encode(&x, 2, &mut rng)?;
+    let encoded = scheme.encode_blocks(&x, 2, &mut rng)?;
     println!("[encode] X(16x12) → {} shares of {:?}", n, encoded.shares[0].shape());
 
     // Transport: seal share j for worker j.
@@ -54,7 +54,7 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .map(|(j, c)| (*j, mea.decrypt(c, &master_keys)))
         .collect();
-    let decoded = scheme.decode(&encoded.ctx, &results)?;
+    let decoded = scheme.decode_blocks(&encoded.ctx, &results)?;
 
     let (blocks, _) = split_rows(&x, k);
     println!("\n[decode] approximation quality per block:");

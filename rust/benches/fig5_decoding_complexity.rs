@@ -10,10 +10,11 @@
 
 use spacdc::analysis::CostModel;
 use spacdc::bench::{banner, black_box, print_series};
-use spacdc::coding::{make_scheme, CodeParams, MatDot, Scheme};
+use spacdc::coding::{make_scheme, CodeParams, CodedTask, MatDot};
 use spacdc::config::SchemeKind;
 use spacdc::matrix::Matrix;
 use spacdc::rng::rng_from_seed;
+use spacdc::runtime::WorkerOp;
 use std::time::Instant;
 
 const M: usize = 1000;
@@ -26,19 +27,22 @@ fn measured_decode_s(kind: SchemeKind, k: usize) -> Option<f64> {
     let x = Matrix::random_gaussian(M, D, 0.0, 1.0, &mut rng);
     let returns = N - 4;
     if kind == SchemeKind::MatDot {
-        let code = MatDot::new(N, k);
+        let code = MatDot::new(N, k).ok()?;
         let enc = code.encode_pair(&x, &x.transpose()).ok()?;
-        let results: Vec<(usize, Matrix)> = (0..code.threshold().min(returns))
+        let results: Vec<(usize, Matrix)> = (0..code.recovery_threshold().min(returns))
             .map(|i| (i, MatDot::worker_compute(&enc.shares[i])))
             .collect();
         let t0 = Instant::now();
-        black_box(code.decode(&enc, &results).ok()?);
+        black_box(code.decode_pair(&enc, &results).ok()?);
         return Some(t0.elapsed().as_secs_f64());
     }
+    // Row-partition schemes through the unified task API: an identity
+    // block map isolates decode cost from worker compute.
     let params = CodeParams::new(N, k, 2);
-    let scheme = make_scheme(kind, params)?;
-    let enc = scheme.encode(&x, 1, &mut rng).ok()?;
-    let need = match scheme.threshold(1) {
+    let scheme = make_scheme(kind, params);
+    let task = CodedTask::block_map(WorkerOp::Identity, x);
+    let job = scheme.encode(&task, &mut rng).ok()?;
+    let need = match scheme.threshold(&task) {
         spacdc::coding::Threshold::Exact(t) => t,
         spacdc::coding::Threshold::Flexible { .. } => returns,
     };
@@ -46,9 +50,9 @@ fn measured_decode_s(kind: SchemeKind, k: usize) -> Option<f64> {
         return None;
     }
     let results: Vec<(usize, Matrix)> =
-        (0..need).map(|i| (i, enc.shares[i].clone())).collect();
+        (0..need).map(|i| (i, job.payloads[i][0].clone())).collect();
     let t0 = Instant::now();
-    black_box(scheme.decode(&enc.ctx, &results).ok()?);
+    black_box(scheme.decode(&job.ctx, &results).ok()?);
     Some(t0.elapsed().as_secs_f64())
 }
 

@@ -10,6 +10,7 @@
 
 use spacdc::analysis::CostModel;
 use spacdc::bench::{banner, print_series};
+use spacdc::coding::CodedTask;
 use spacdc::config::{SchemeKind, SystemConfig, TransportSecurity};
 use spacdc::coordinator::MasterBuilder;
 use spacdc::matrix::Matrix;
@@ -35,11 +36,12 @@ fn measured_symbols(kind: SchemeKind, m: usize) -> Option<(f64, f64)> {
     let mut master = MasterBuilder::new(cfg).build().ok()?;
     let mut rng = rng_from_seed(1);
     let x = Matrix::random_gaussian(m, 64, 0.0, 1.0, &mut rng);
-    if kind == SchemeKind::MatDot {
-        master.run_matmul(&x, &x.transpose()).ok()?;
+    let task = if kind == SchemeKind::MatDot {
+        CodedTask::pair_product(x.clone(), x.transpose())
     } else {
-        master.run_blockmap(WorkerOp::Gram, &x).ok()?;
-    }
+        CodedTask::block_map(WorkerOp::Gram, x)
+    };
+    master.run(task).ok()?;
     Some((
         master.metrics().get(names::SYMBOLS_TO_WORKERS) as f64,
         master.metrics().get(names::SYMBOLS_TO_MASTER) as f64,

@@ -9,7 +9,7 @@
 //!    (the DESIGN.md §3 privacy/accuracy trade-off).
 
 use spacdc::bench::{banner, black_box, header, run, BenchConfig};
-use spacdc::coding::{CodeParams, Scheme, Spacdc};
+use spacdc::coding::{BlockCode, CodeParams, Spacdc};
 use spacdc::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc};
 use spacdc::matrix::{matmul, matmul_naive, split_rows, Matrix};
 use spacdc::rng::rng_from_seed;
@@ -70,14 +70,14 @@ fn main() {
     let wt = Matrix::random_gaussian(256, 128, 0.0, 1.0, &mut rng);
     let mut enc_rng = rng_from_seed(10);
     let encode = run("spacdc_encode_256x128_n30", BenchConfig { warmup_iters: 2, iters: 15 }, |_| {
-        black_box(scheme.encode(&wt, 1, &mut enc_rng).unwrap());
+        black_box(scheme.encode_blocks(&wt, 1, &mut enc_rng).unwrap());
     });
     println!("{}", encode.row());
-    let enc = scheme.encode(&wt, 1, &mut enc_rng).unwrap();
+    let enc = scheme.encode_blocks(&wt, 1, &mut enc_rng).unwrap();
     let results: Vec<(usize, Matrix)> =
         (0..27).map(|i| (i, enc.shares[i].clone())).collect();
     let decode = run("spacdc_decode_27of30", BenchConfig { warmup_iters: 2, iters: 15 }, |_| {
-        black_box(scheme.decode(&enc.ctx, &results).unwrap());
+        black_box(scheme.decode_blocks(&enc.ctx, &results).unwrap());
     });
     println!("{}", decode.row());
 
@@ -91,10 +91,10 @@ fn main() {
         let scheme = Spacdc::with_mask_scale(CodeParams::new(30, 4, 3), scale);
         let mut rng = rng_from_seed(0xAB);
         let x = Matrix::random_gaussian(64, 32, 0.0, 1.0, &mut rng);
-        let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+        let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
         let results: Vec<(usize, Matrix)> =
             (0..27).map(|i| (i, enc.shares[i].clone())).collect();
-        let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+        let decoded = scheme.decode_blocks(&enc.ctx, &results).unwrap();
         let (blocks, _) = split_rows(&x, 4);
         let err = decoded
             .iter()

@@ -4,8 +4,10 @@
 
 use spacdc::analysis::CostModel;
 use spacdc::bench::banner;
-use spacdc::coding::{make_scheme, CodeParams};
+use spacdc::coding::{make_scheme, CodeParams, CodedTask};
 use spacdc::config::SchemeKind;
+use spacdc::matrix::Matrix;
+use spacdc::runtime::WorkerOp;
 
 fn main() {
     banner("Table II — complexity comparison (m=d=1000, K=8, N=30, |F|=10)");
@@ -31,19 +33,21 @@ fn main() {
 
     println!("\nempirical protection columns (scheme implementations):");
     let params = CodeParams::new(30, 8, 3);
+    let probe = CodedTask::block_map(WorkerOp::Identity, Matrix::ones(8, 8));
     for kind in [
         SchemeKind::Polynomial,
         SchemeKind::SecPoly,
         SchemeKind::Bacc,
         SchemeKind::Lcc,
         SchemeKind::Spacdc,
+        SchemeKind::MatDot,
     ] {
-        let s = make_scheme(kind, params).unwrap();
+        let s = make_scheme(kind, params);
         println!(
             "  {:<12} privacy masks: {}   threshold(deg1): {:?}",
             kind.name(),
             if s.is_private() { "yes (T blocks)" } else { "no" },
-            s.threshold(1),
+            s.threshold(&probe),
         );
     }
     println!(

@@ -95,15 +95,24 @@ impl Parsed {
 }
 
 /// Parse error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
     /// Unknown `--option`.
-    #[error("unknown option --{0}\n{1}")]
     Unknown(String, String),
     /// Declared Value option had no value token.
-    #[error("option --{0} requires a value")]
     MissingValue(String),
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(name, usage) => write!(f, "unknown option --{name}\n{usage}"),
+            CliError::MissingValue(name) => write!(f, "option --{name} requires a value"),
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Render a usage/help block for a spec set.
 pub fn usage(program: &str, specs: &[ArgSpec]) -> String {

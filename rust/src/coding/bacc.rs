@@ -5,7 +5,8 @@
 
 use super::interp::{berrut_eval, chebyshev_nodes_in, disjoint_eval_nodes};
 use super::spacdc::decode_berrut;
-use super::traits::{CodeParams, CodingError, DecodeCtx, Encoded, Scheme, Threshold};
+use super::task::TaskShape;
+use super::traits::{BlockCode, CodeParams, CodingError, DecodeCtx, Encoded, Threshold};
 use crate::config::SchemeKind;
 use crate::matrix::{split_rows, Matrix};
 use crate::rng::Rng;
@@ -23,7 +24,7 @@ impl Bacc {
     }
 }
 
-impl Scheme for Bacc {
+impl BlockCode for Bacc {
     fn kind(&self) -> SchemeKind {
         SchemeKind::Bacc
     }
@@ -32,7 +33,7 @@ impl Scheme for Bacc {
         self.params
     }
 
-    fn threshold(&self, _deg: u32) -> Threshold {
+    fn block_threshold(&self, _deg: u32) -> Threshold {
         Threshold::Flexible { min: 1 }
     }
 
@@ -40,7 +41,7 @@ impl Scheme for Bacc {
         true
     }
 
-    fn encode(&self, x: &Matrix, deg: u32, _rng: &mut Rng) -> Result<Encoded, CodingError> {
+    fn encode_blocks(&self, x: &Matrix, deg: u32, _rng: &mut Rng) -> Result<Encoded, CodingError> {
         let CodeParams { n, k, .. } = self.params;
         let (blocks, spec) = split_rows(x, k);
         let betas = chebyshev_nodes_in(k, -0.95, 0.95);
@@ -57,11 +58,12 @@ impl Scheme for Bacc {
                 betas,
                 spec,
                 degree: deg,
+                shape: TaskShape::BlockMap,
             },
         })
     }
 
-    fn decode(
+    fn decode_blocks(
         &self,
         ctx: &DecodeCtx,
         results: &[(usize, Matrix)],
@@ -91,8 +93,8 @@ mod tests {
         let spacdc = Spacdc::new(CodeParams::new(20, 3, 3));
 
         let mut err = [0.0f64; 2];
-        for (s, scheme) in [&bacc as &dyn Scheme, &spacdc as &dyn Scheme].iter().enumerate() {
-            let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+        for (s, scheme) in [&bacc as &dyn BlockCode, &spacdc as &dyn BlockCode].iter().enumerate() {
+            let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
             let results: Vec<(usize, Matrix)> = enc
                 .shares
                 .iter()
@@ -100,7 +102,7 @@ mod tests {
                 .take(16)
                 .map(|(i, sh)| (i, matmul(sh, &v)))
                 .collect();
-            let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+            let decoded = scheme.decode_blocks(&enc.ctx, &results).unwrap();
             err[s] = decoded
                 .iter()
                 .zip(&expect)
@@ -116,10 +118,10 @@ mod tests {
         let mut rng = rng_from_seed(61);
         let scheme = Bacc::new(CodeParams::new(24, 2, 0));
         let x = Matrix::random_gaussian(16, 10, 0.0, 1.0, &mut rng);
-        let enc = scheme.encode(&x, 2, &mut rng).unwrap();
+        let enc = scheme.encode_blocks(&x, 2, &mut rng).unwrap();
         let results: Vec<(usize, Matrix)> =
             enc.shares.iter().enumerate().map(|(i, s)| (i, gram(s))).collect();
-        let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+        let decoded = scheme.decode_blocks(&enc.ctx, &results).unwrap();
         let (blocks, _) = split_rows(&x, 2);
         for (d, b) in decoded.iter().zip(&blocks) {
             let err = d.rel_error(&gram(b));
@@ -131,8 +133,8 @@ mod tests {
     fn encode_is_deterministic_without_masks() {
         let scheme = Bacc::new(CodeParams::new(8, 2, 0));
         let x = Matrix::ones(8, 4);
-        let e1 = scheme.encode(&x, 1, &mut rng_from_seed(1)).unwrap();
-        let e2 = scheme.encode(&x, 1, &mut rng_from_seed(2)).unwrap();
+        let e1 = scheme.encode_blocks(&x, 1, &mut rng_from_seed(1)).unwrap();
+        let e2 = scheme.encode_blocks(&x, 1, &mut rng_from_seed(2)).unwrap();
         for (a, b) in e1.shares.iter().zip(&e2.shares) {
             assert_eq!(a.as_slice(), b.as_slice());
         }
@@ -142,6 +144,6 @@ mod tests {
     fn not_private() {
         let scheme = Bacc::new(CodeParams::new(8, 2, 0));
         assert!(!scheme.is_private());
-        assert_eq!(scheme.threshold(1), Threshold::Flexible { min: 1 });
+        assert_eq!(scheme.block_threshold(1), Threshold::Flexible { min: 1 });
     }
 }

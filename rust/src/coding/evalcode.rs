@@ -15,8 +15,9 @@
 //! exactly how LCC is specified).
 
 use super::interp::{chebyshev_nodes_in, disjoint_eval_nodes, lagrange_eval, lagrange_weights};
+use super::task::TaskShape;
 use super::traits::{
-    validate_results, CodeParams, CodingError, DecodeCtx, Encoded, Scheme, Threshold,
+    validate_results, BlockCode, CodeParams, CodingError, DecodeCtx, Encoded, Threshold,
 };
 use crate::config::SchemeKind;
 use crate::matrix::{split_rows, Matrix};
@@ -93,7 +94,7 @@ impl EvalCode {
     }
 }
 
-impl Scheme for EvalCode {
+impl BlockCode for EvalCode {
     fn kind(&self) -> SchemeKind {
         self.kind
     }
@@ -102,7 +103,7 @@ impl Scheme for EvalCode {
         self.params
     }
 
-    fn threshold(&self, deg: u32) -> Threshold {
+    fn block_threshold(&self, deg: u32) -> Threshold {
         // deg·(K+T−1)+1: K for linear non-private, K+T for linear
         // private, 2(K+T−1)+1 for quadratic LCC, …
         let kt = self.params.k + self.mask_count();
@@ -117,7 +118,7 @@ impl Scheme for EvalCode {
         self.private
     }
 
-    fn encode(&self, x: &Matrix, deg: u32, rng: &mut Rng) -> Result<Encoded, CodingError> {
+    fn encode_blocks(&self, x: &Matrix, deg: u32, rng: &mut Rng) -> Result<Encoded, CodingError> {
         if !self.supports_degree(deg) {
             return Err(CodingError::UnsupportedDegree {
                 scheme: self.kind.name(),
@@ -126,7 +127,7 @@ impl Scheme for EvalCode {
         }
         let CodeParams { n, k, .. } = self.params;
         let t = self.mask_count();
-        if let Threshold::Exact(need) = self.threshold(deg) {
+        if let Threshold::Exact(need) = self.block_threshold(deg) {
             if need > n {
                 return Err(CodingError::NotEnoughResults { need, got: n });
             }
@@ -150,16 +151,24 @@ impl Scheme for EvalCode {
             alphas.iter().map(|&a| lagrange_eval(&betas, &blocks, a)).collect();
         Ok(Encoded {
             shares,
-            ctx: DecodeCtx { kind: self.kind, params: self.params, alphas, betas, spec, degree: deg },
+            ctx: DecodeCtx {
+                kind: self.kind,
+                params: self.params,
+                alphas,
+                betas,
+                spec,
+                degree: deg,
+                shape: TaskShape::BlockMap,
+            },
         })
     }
 
-    fn decode(
+    fn decode_blocks(
         &self,
         ctx: &DecodeCtx,
         results: &[(usize, Matrix)],
     ) -> Result<Vec<Matrix>, CodingError> {
-        let need = match self.threshold(ctx.degree) {
+        let need = match self.block_threshold(ctx.degree) {
             Threshold::Exact(k) => k,
             Threshold::Flexible { min } => min,
         };
@@ -192,10 +201,10 @@ mod tests {
         let mut rng = rng_from_seed(seed);
         let x = Matrix::random_gaussian(8 * k, 6, 0.0, 1.0, &mut rng);
         let v = Matrix::random_gaussian(6, 5, 0.0, 1.0, &mut rng);
-        let enc = code.encode(&x, 1, &mut rng).unwrap();
+        let enc = code.encode_blocks(&x, 1, &mut rng).unwrap();
         assert_eq!(enc.shares.len(), n);
         // Return exactly the threshold, from an arbitrary offset.
-        let need = match code.threshold(1) {
+        let need = match code.block_threshold(1) {
             Threshold::Exact(t) => t,
             _ => unreachable!(),
         };
@@ -213,11 +222,11 @@ mod tests {
             // fall back to first `need` workers
             let results: Vec<(usize, Matrix)> =
                 (0..need).map(|i| (i, matmul(&enc.shares[i], &v))).collect();
-            let decoded = code.decode(&enc.ctx, &results).unwrap();
+            let decoded = code.decode_blocks(&enc.ctx, &results).unwrap();
             assert_exact(&x, &v, k, &decoded);
             return;
         }
-        let decoded = code.decode(&enc.ctx, &results).unwrap();
+        let decoded = code.decode_blocks(&enc.ctx, &results).unwrap();
         assert_exact(&x, &v, k, &decoded);
     }
 
@@ -244,7 +253,7 @@ mod tests {
     fn secpoly_decodes_exactly_and_is_private() {
         let code = EvalCode::secpoly(CodeParams::new(14, 4, 2));
         assert!(code.is_private());
-        assert_eq!(code.threshold(1), Threshold::Exact(6)); // K+T
+        assert_eq!(code.block_threshold(1), Threshold::Exact(6)); // K+T
         check_linear_exact(&code, 14, 4, 72);
     }
 
@@ -255,13 +264,13 @@ mod tests {
         let t = 1;
         let n = 12;
         let code = EvalCode::lcc(CodeParams::new(n, k, t));
-        assert_eq!(code.threshold(2), Threshold::Exact(5));
+        assert_eq!(code.block_threshold(2), Threshold::Exact(5));
         let mut rng = rng_from_seed(73);
         let x = Matrix::random_gaussian(10, 6, 0.0, 1.0, &mut rng);
-        let enc = code.encode(&x, 2, &mut rng).unwrap();
+        let enc = code.encode_blocks(&x, 2, &mut rng).unwrap();
         let results: Vec<(usize, Matrix)> =
             (0..5).map(|i| (i, gram(&enc.shares[i]))).collect();
-        let decoded = code.decode(&enc.ctx, &results).unwrap();
+        let decoded = code.decode_blocks(&enc.ctx, &results).unwrap();
         let (blocks, _) = split_rows(&x, k);
         for (d, b) in decoded.iter().zip(&blocks) {
             let err = d.rel_error(&gram(b));
@@ -274,11 +283,11 @@ mod tests {
         let code = EvalCode::mds(CodeParams::new(8, 4, 0));
         let mut rng = rng_from_seed(74);
         let x = Matrix::random_uniform(8, 4, -1.0, 1.0, &mut rng);
-        let enc = code.encode(&x, 1, &mut rng).unwrap();
+        let enc = code.encode_blocks(&x, 1, &mut rng).unwrap();
         let results: Vec<(usize, Matrix)> =
             (0..3).map(|i| (i, enc.shares[i].clone())).collect();
         assert!(matches!(
-            code.decode(&enc.ctx, &results),
+            code.decode_blocks(&enc.ctx, &results),
             Err(CodingError::NotEnoughResults { need: 4, got: 3 })
         ));
     }
@@ -289,7 +298,7 @@ mod tests {
         let mut rng = rng_from_seed(75);
         let x = Matrix::ones(8, 4);
         assert!(matches!(
-            code.encode(&x, 2, &mut rng),
+            code.encode_blocks(&x, 2, &mut rng),
             Err(CodingError::UnsupportedDegree { .. })
         ));
     }
@@ -302,7 +311,7 @@ mod tests {
         let mut rng = rng_from_seed(76);
         let x = Matrix::ones(8, 2);
         assert!(matches!(
-            code.encode(&x, 2, &mut rng),
+            code.encode_blocks(&x, 2, &mut rng),
             Err(CodingError::NotEnoughResults { need: 11, got: 8 })
         ));
     }
@@ -316,11 +325,11 @@ mod tests {
             let mut rng = rng_from_seed(g.u64());
             let x = Matrix::random_gaussian(4 * k, 5, 0.0, 1.0, &mut rng);
             let v = Matrix::random_gaussian(5, 3, 0.0, 1.0, &mut rng);
-            let enc = code.encode(&x, 1, &mut rng).unwrap();
+            let enc = code.encode_blocks(&x, 1, &mut rng).unwrap();
             let idx = g.subset(n, k);
             let results: Vec<(usize, Matrix)> =
                 idx.iter().map(|&i| (i, matmul(&enc.shares[i], &v))).collect();
-            let decoded = code.decode(&enc.ctx, &results).unwrap();
+            let decoded = code.decode_blocks(&enc.ctx, &results).unwrap();
             let (blocks, _) = split_rows(&x, k);
             for (d, b) in decoded.iter().zip(&blocks) {
                 let err = d.rel_error(&matmul(b, &v));

@@ -15,10 +15,22 @@
 //! all baselines, and each worker's result is a full `r×c` matrix — the
 //! two facts behind MatDot's worst-in-class communication (Fig. 6) and
 //! computation (Fig. 7) curves.
+//!
+//! MatDot implements the task-level [`Scheme`] trait directly (it is the
+//! one non-[`BlockCode`](super::BlockCode) scheme): it serves
+//! [`CodedTask::PairProduct`] with two operand payloads per worker and
+//! rejects [`CodedTask::BlockMap`], so the coordinator drives it through
+//! the same `encode → dispatch → decode` pipeline as every other scheme.
 
 use super::interp::{chebyshev_nodes_in, polynomial_coefficients};
-use super::traits::{validate_results, CodingError};
-use crate::matrix::{matmul, Matrix};
+use super::task::{CodedTask, TaskShape};
+use super::traits::{
+    validate_results, CodeParams, CodingError, DecodeCtx, EncodedJob, Scheme, Threshold,
+};
+use crate::config::SchemeKind;
+use crate::matrix::{matmul, Matrix, PartitionSpec};
+use crate::rng::Rng;
+use crate::runtime::WorkerOp;
 
 /// MatDot code for the product `A·B`.
 #[derive(Clone, Debug)]
@@ -41,22 +53,44 @@ pub struct MatDotEncoded {
 }
 
 impl MatDot {
-    /// Construct; panics unless 2K−1 ≤ N (otherwise undecodable).
-    pub fn new(n: usize, k: usize) -> Self {
-        assert!(k >= 1, "K must be ≥ 1");
-        assert!(2 * k - 1 <= n, "MatDot needs 2K-1 ≤ N (K={k}, N={n})");
-        Self { n, k }
+    /// Construct; rejects parameter sets that could never decode
+    /// (needs K ≥ 1 and 2K−1 ≤ N).
+    pub fn new(n: usize, k: usize) -> Result<Self, CodingError> {
+        if k < 1 {
+            return Err(CodingError::InvalidParams("MatDot needs K ≥ 1".into()));
+        }
+        if 2 * k - 1 > n {
+            return Err(CodingError::InvalidParams(format!(
+                "MatDot needs 2K-1 ≤ N (K={k}, N={n})"
+            )));
+        }
+        Ok(Self { n, k })
     }
 
-    /// Recovery threshold 2K−1.
-    pub fn threshold(&self) -> usize {
-        2 * self.k - 1
+    /// Unvalidated construction from shared code parameters — used by the
+    /// infallible scheme factory; an undecodable shape is reported as
+    /// [`CodingError::InvalidParams`] at encode time.
+    pub fn from_params(params: CodeParams) -> Self {
+        Self { n: params.n, k: params.k }
+    }
+
+    /// Recovery threshold 2K−1 (0 for the degenerate K = 0 shape, which
+    /// [`MatDot::new`] rejects and `encode` reports as `InvalidParams` —
+    /// saturating here keeps factory-built probes panic-free).
+    pub fn recovery_threshold(&self) -> usize {
+        (2 * self.k).saturating_sub(1)
     }
 
     /// Split A by columns and B by rows into K blocks each (zero-padding
     /// the shared inner dimension), and encode the polynomial pair at N
     /// Chebyshev nodes.
     pub fn encode_pair(&self, a: &Matrix, b: &Matrix) -> Result<MatDotEncoded, CodingError> {
+        if self.k < 1 || 2 * self.k - 1 > self.n {
+            return Err(CodingError::InvalidParams(format!(
+                "MatDot needs 2K-1 ≤ N (K={}, N={})",
+                self.k, self.n
+            )));
+        }
         if a.cols() != b.rows() {
             return Err(CodingError::ShapeMismatch(format!(
                 "A cols {} != B rows {}",
@@ -117,25 +151,92 @@ impl MatDot {
         matmul(&share.0, &share.1)
     }
 
-    /// Decode `A·B` from ≥ 2K−1 worker products.
-    pub fn decode(
+    /// Decode `A·B` from ≥ 2K−1 worker products (block-level API over a
+    /// [`MatDotEncoded`]; the coordinator path goes through
+    /// [`Scheme::decode`] instead).
+    pub fn decode_pair(
         &self,
         enc: &MatDotEncoded,
         results: &[(usize, Matrix)],
     ) -> Result<Matrix, CodingError> {
-        let need = self.threshold();
-        if results.len() < need {
-            return Err(CodingError::NotEnoughResults { need, got: results.len() });
-        }
-        let sorted = validate_results(self.n, results)?;
-        let take = &sorted[..need];
-        let nodes: Vec<f64> = take.iter().map(|(i, _)| enc.alphas[*i]).collect();
-        let values: Vec<Matrix> = take.iter().map(|(_, m)| m.clone()).collect();
-        // Interpolate the degree-2K−2 matrix polynomial; A·B is the
-        // coefficient of z^{K−1}.
-        let coeffs = polynomial_coefficients(&nodes, &values, 2 * self.k - 2)
-            .map_err(CodingError::Numerical)?;
-        Ok(coeffs.into_iter().nth(self.k - 1).unwrap())
+        interpolate_product(self.n, enc.k, &enc.alphas, results)
+    }
+}
+
+/// Interpolate the degree-2K−2 matrix polynomial from ≥ 2K−1 worker
+/// products at nodes `alphas`; `A·B` is the coefficient of z^{K−1}.
+fn interpolate_product(
+    n: usize,
+    k: usize,
+    alphas: &[f64],
+    results: &[(usize, Matrix)],
+) -> Result<Matrix, CodingError> {
+    if k < 1 {
+        return Err(CodingError::InvalidParams("MatDot needs K ≥ 1".into()));
+    }
+    let need = 2 * k - 1;
+    if results.len() < need {
+        return Err(CodingError::NotEnoughResults { need, got: results.len() });
+    }
+    let sorted = validate_results(n, results)?;
+    let take = &sorted[..need];
+    let nodes: Vec<f64> = take.iter().map(|(i, _)| alphas[*i]).collect();
+    let values: Vec<Matrix> = take.iter().map(|(_, m)| m.clone()).collect();
+    let coeffs =
+        polynomial_coefficients(&nodes, &values, 2 * k - 2).map_err(CodingError::Numerical)?;
+    Ok(coeffs.into_iter().nth(k - 1).unwrap())
+}
+
+impl Scheme for MatDot {
+    fn kind(&self) -> SchemeKind {
+        SchemeKind::MatDot
+    }
+
+    fn params(&self) -> CodeParams {
+        CodeParams::new(self.n, self.k, 0)
+    }
+
+    fn threshold(&self, _task: &CodedTask) -> Threshold {
+        Threshold::Exact(self.recovery_threshold())
+    }
+
+    fn supports(&self, task: &CodedTask) -> bool {
+        matches!(task, CodedTask::PairProduct { .. })
+    }
+
+    fn encode(&self, task: &CodedTask, _rng: &mut Rng) -> Result<EncodedJob, CodingError> {
+        let (a, b) = match task {
+            CodedTask::PairProduct { a, b } => (a, b),
+            CodedTask::BlockMap { .. } => {
+                return Err(CodingError::UnsupportedTask {
+                    scheme: SchemeKind::MatDot.name(),
+                    task: task.name(),
+                })
+            }
+        };
+        let enc = self.encode_pair(a, b)?;
+        Ok(EncodedJob {
+            payloads: enc.shares.into_iter().map(|(pa, pb)| vec![pa, pb]).collect(),
+            op: WorkerOp::PairProduct,
+            ctx: DecodeCtx {
+                kind: SchemeKind::MatDot,
+                params: Scheme::params(self),
+                alphas: enc.alphas,
+                betas: vec![],
+                spec: PartitionSpec::new(a.rows(), 1),
+                degree: 2,
+                shape: TaskShape::PairProduct,
+            },
+        })
+    }
+
+    fn decode(
+        &self,
+        ctx: &DecodeCtx,
+        results: &[(usize, Matrix)],
+    ) -> Result<Vec<Matrix>, CodingError> {
+        let product = interpolate_product(ctx.params.n, ctx.params.k, &ctx.alphas, results)?;
+        Ok(vec![product])
     }
 }
 
@@ -149,14 +250,14 @@ mod tests {
         let mut rng = rng_from_seed(90);
         for k in [1usize, 2, 3, 4] {
             let n = 2 * k + 3;
-            let code = MatDot::new(n, k);
+            let code = MatDot::new(n, k).unwrap();
             let a = Matrix::random_gaussian(10, 8, 0.0, 1.0, &mut rng);
             let b = Matrix::random_gaussian(8, 6, 0.0, 1.0, &mut rng);
             let enc = code.encode_pair(&a, &b).unwrap();
-            let results: Vec<(usize, Matrix)> = (0..code.threshold())
+            let results: Vec<(usize, Matrix)> = (0..code.recovery_threshold())
                 .map(|i| (i, MatDot::worker_compute(&enc.shares[i])))
                 .collect();
-            let got = code.decode(&enc, &results).unwrap();
+            let got = code.decode_pair(&enc, &results).unwrap();
             let expect = matmul(&a, &b);
             assert!(got.rel_error(&expect) < 1e-2, "k={k}: err {}", got.rel_error(&expect));
         }
@@ -165,7 +266,7 @@ mod tests {
     #[test]
     fn works_with_scattered_subset() {
         let mut rng = rng_from_seed(91);
-        let code = MatDot::new(12, 3);
+        let code = MatDot::new(12, 3).unwrap();
         let a = Matrix::random_gaussian(6, 9, 0.0, 1.0, &mut rng);
         let b = Matrix::random_gaussian(9, 4, 0.0, 1.0, &mut rng);
         let enc = code.encode_pair(&a, &b).unwrap();
@@ -174,14 +275,14 @@ mod tests {
             .iter()
             .map(|&i| (i, MatDot::worker_compute(&enc.shares[i])))
             .collect();
-        let got = code.decode(&enc, &results).unwrap();
+        let got = code.decode_pair(&enc, &results).unwrap();
         assert!(got.rel_error(&matmul(&a, &b)) < 1e-2);
     }
 
     #[test]
     fn below_threshold_rejected() {
         let mut rng = rng_from_seed(92);
-        let code = MatDot::new(8, 3);
+        let code = MatDot::new(8, 3).unwrap();
         let a = Matrix::random_uniform(4, 6, -1.0, 1.0, &mut rng);
         let b = Matrix::random_uniform(6, 4, -1.0, 1.0, &mut rng);
         let enc = code.encode_pair(&a, &b).unwrap();
@@ -189,7 +290,7 @@ mod tests {
             .map(|i| (i, MatDot::worker_compute(&enc.shares[i])))
             .collect();
         assert!(matches!(
-            code.decode(&enc, &results),
+            code.decode_pair(&enc, &results),
             Err(CodingError::NotEnoughResults { need: 5, got: 4 })
         ));
     }
@@ -198,20 +299,20 @@ mod tests {
     fn inner_dim_padding_handled() {
         // inner = 7, K = 3 → block = 3, padded to 9.
         let mut rng = rng_from_seed(93);
-        let code = MatDot::new(9, 3);
+        let code = MatDot::new(9, 3).unwrap();
         let a = Matrix::random_gaussian(5, 7, 0.0, 1.0, &mut rng);
         let b = Matrix::random_gaussian(7, 5, 0.0, 1.0, &mut rng);
         let enc = code.encode_pair(&a, &b).unwrap();
         let results: Vec<(usize, Matrix)> = (0..5)
             .map(|i| (i, MatDot::worker_compute(&enc.shares[i])))
             .collect();
-        let got = code.decode(&enc, &results).unwrap();
+        let got = code.decode_pair(&enc, &results).unwrap();
         assert!(got.rel_error(&matmul(&a, &b)) < 1e-2);
     }
 
     #[test]
     fn shape_mismatch_rejected() {
-        let code = MatDot::new(5, 2);
+        let code = MatDot::new(5, 2).unwrap();
         let a = Matrix::ones(3, 4);
         let b = Matrix::ones(5, 3);
         assert!(matches!(
@@ -225,20 +326,72 @@ mod tests {
         // X·Xᵀ through the pair API (how MatDot serves the paper's
         // running example).
         let mut rng = rng_from_seed(94);
-        let code = MatDot::new(10, 2);
+        let code = MatDot::new(10, 2).unwrap();
         let x = Matrix::random_gaussian(6, 8, 0.0, 1.0, &mut rng);
         let xt = x.transpose();
         let enc = code.encode_pair(&x, &xt).unwrap();
         let results: Vec<(usize, Matrix)> = (3..6)
             .map(|i| (i, MatDot::worker_compute(&enc.shares[i])))
             .collect();
-        let got = code.decode(&enc, &results).unwrap();
+        let got = code.decode_pair(&enc, &results).unwrap();
         assert!(got.rel_error(&crate::matrix::gram(&x)) < 1e-2);
     }
 
     #[test]
-    #[should_panic(expected = "MatDot needs 2K-1")]
     fn constructor_enforces_decodability() {
-        let _ = MatDot::new(4, 3);
+        // 2K−1 = 5 > N = 4 → rejected with InvalidParams (not a panic).
+        assert!(matches!(
+            MatDot::new(4, 3),
+            Err(CodingError::InvalidParams(_))
+        ));
+        assert!(matches!(
+            MatDot::new(5, 0),
+            Err(CodingError::InvalidParams(_))
+        ));
+    }
+
+    #[test]
+    fn scheme_encode_decode_round_trip() {
+        // The task-level Scheme path: two payloads per worker, decode to
+        // the single full product.
+        let mut rng = rng_from_seed(95);
+        let code = MatDot::new(10, 3).unwrap();
+        let a = Matrix::random_gaussian(7, 9, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_gaussian(9, 5, 0.0, 1.0, &mut rng);
+        let task = CodedTask::pair_product(a.clone(), b.clone());
+        assert!(code.supports(&task));
+        assert_eq!(code.threshold(&task), Threshold::Exact(5));
+        let job = code.encode(&task, &mut rng).unwrap();
+        assert_eq!(job.payloads.len(), 10);
+        assert_eq!(job.payloads[0].len(), 2);
+        let results: Vec<(usize, Matrix)> = (2..7)
+            .map(|i| (i, matmul(&job.payloads[i][0], &job.payloads[i][1])))
+            .collect();
+        let decoded = code.decode(&job.ctx, &results).unwrap();
+        assert_eq!(decoded.len(), 1);
+        assert!(decoded[0].rel_error(&matmul(&a, &b)) < 1e-2);
+    }
+
+    #[test]
+    fn scheme_rejects_blockmap_tasks() {
+        let code = MatDot::new(10, 3).unwrap();
+        let task = CodedTask::block_map(WorkerOp::Identity, Matrix::ones(6, 4));
+        assert!(!code.supports(&task));
+        assert!(matches!(
+            code.encode(&task, &mut rng_from_seed(0)),
+            Err(CodingError::UnsupportedTask { .. })
+        ));
+    }
+
+    #[test]
+    fn factory_shape_errors_surface_at_encode() {
+        // from_params never fails; the undecodable shape errors on use.
+        let code = MatDot::from_params(CodeParams::new(4, 3, 0));
+        let a = Matrix::ones(4, 6);
+        let b = Matrix::ones(6, 4);
+        assert!(matches!(
+            code.encode_pair(&a, &b),
+            Err(CodingError::InvalidParams(_))
+        ));
     }
 }

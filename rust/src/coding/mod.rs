@@ -10,12 +10,20 @@
 //! | `evalcode`   | SecPoly [34]        | K+T                | yes | exact |
 //! | `matdot`     | MatDot [24]         | 2K−1 (pair code)   | no  | exact |
 //! | `uncoded`    | CONV                | N                  | no  | exact |
+//!
+//! Every scheme — MatDot included — implements the task-level [`Scheme`]
+//! trait over typed [`CodedTask`]s, so [`make_scheme`] is total over
+//! [`SchemeKind`] and the coordinator runs one round pipeline for all
+//! eight. The seven row-partition schemes implement [`BlockCode`] (the
+//! per-block encode/decode machinery) and pick up `Scheme` through a
+//! blanket impl; MatDot, a pair code, implements `Scheme` directly.
 
 pub mod bacc;
 pub mod evalcode;
 pub mod interp;
 pub mod matdot;
 pub mod spacdc;
+pub mod task;
 pub mod traits;
 pub mod uncoded;
 
@@ -23,17 +31,21 @@ pub use bacc::Bacc;
 pub use evalcode::EvalCode;
 pub use matdot::{MatDot, MatDotEncoded};
 pub use spacdc::Spacdc;
-pub use traits::{CodeParams, CodingError, DecodeCtx, Encoded, Scheme, Threshold};
+pub use task::{CodedTask, TaskShape};
+pub use traits::{
+    BlockCode, CodeParams, CodingError, DecodeCtx, Encoded, EncodedJob, Scheme, Threshold,
+};
 pub use uncoded::Uncoded;
 
 use crate::config::SchemeKind;
 
-/// Build the row-partition scheme for `kind`.
+/// Build the scheme for `kind` — total over all 8 [`SchemeKind`]s.
 ///
-/// MatDot is a pair code with a different API; asking for it here returns
-/// `None` and callers must use [`MatDot`] directly (the DL trainer does).
-pub fn make_scheme(kind: SchemeKind, params: CodeParams) -> Option<Box<dyn Scheme>> {
-    Some(match kind {
+/// Construction never fails; parameter sets a scheme cannot serve (e.g.
+/// MatDot with 2K−1 > N, or SPACDC with T = 0) surface as
+/// [`CodingError::InvalidParams`] when the first task is encoded.
+pub fn make_scheme(kind: SchemeKind, params: CodeParams) -> Box<dyn Scheme> {
+    match kind {
         SchemeKind::Spacdc => Box::new(Spacdc::new(params)),
         SchemeKind::Bacc => Box::new(Bacc::new(params)),
         SchemeKind::Mds => Box::new(EvalCode::mds(params)),
@@ -41,34 +53,27 @@ pub fn make_scheme(kind: SchemeKind, params: CodeParams) -> Option<Box<dyn Schem
         SchemeKind::Lcc => Box::new(EvalCode::lcc(params)),
         SchemeKind::SecPoly => Box::new(EvalCode::secpoly(params)),
         SchemeKind::Uncoded => Box::new(Uncoded::new(params)),
-        SchemeKind::MatDot => return None,
-    })
+        SchemeKind::MatDot => Box::new(MatDot::from_params(params)),
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::matrix::Matrix;
+    use crate::runtime::WorkerOp;
 
-    #[test]
-    fn factory_builds_every_row_partition_scheme() {
-        let params = CodeParams::new(12, 3, 2);
-        for kind in [
-            SchemeKind::Spacdc,
-            SchemeKind::Bacc,
-            SchemeKind::Mds,
-            SchemeKind::Polynomial,
-            SchemeKind::Lcc,
-            SchemeKind::SecPoly,
-            SchemeKind::Uncoded,
-        ] {
-            let s = make_scheme(kind, params).unwrap_or_else(|| panic!("{kind:?}"));
-            assert_eq!(s.kind(), kind);
-        }
+    fn probe_task() -> CodedTask {
+        CodedTask::block_map(WorkerOp::Identity, Matrix::ones(4, 4))
     }
 
     #[test]
-    fn factory_declines_matdot() {
-        assert!(make_scheme(SchemeKind::MatDot, CodeParams::new(12, 3, 0)).is_none());
+    fn factory_builds_every_scheme() {
+        let params = CodeParams::new(12, 3, 2);
+        for kind in SchemeKind::all() {
+            let s = make_scheme(kind, params);
+            assert_eq!(s.kind(), kind);
+        }
     }
 
     #[test]
@@ -82,9 +87,10 @@ mod tests {
             (SchemeKind::Lcc, true),
             (SchemeKind::SecPoly, true),
             (SchemeKind::Uncoded, false),
+            (SchemeKind::MatDot, false),
         ];
         for (kind, private) in expect {
-            let s = make_scheme(kind, params).unwrap();
+            let s = make_scheme(kind, params);
             assert_eq!(s.is_private(), private, "{kind:?}");
         }
     }
@@ -92,9 +98,11 @@ mod tests {
     #[test]
     fn thresholds_match_table_ii_ordering() {
         // For a linear task at K=4, T=2, N=30:
-        //   SPACDC/BACC flexible < MDS/Poly (4) < SecPoly/LCC (6) < CONV (30).
+        //   SPACDC/BACC flexible < MDS/Poly (4) < SecPoly/LCC (6) <
+        //   MatDot (7) < CONV (30).
         let params = CodeParams::new(30, 4, 2);
-        let exact = |k: SchemeKind| match make_scheme(k, params).unwrap().threshold(1) {
+        let task = probe_task();
+        let exact = |k: SchemeKind| match make_scheme(k, params).threshold(&task) {
             Threshold::Exact(v) => v,
             Threshold::Flexible { .. } => 0,
         };
@@ -102,12 +110,36 @@ mod tests {
         assert_eq!(exact(SchemeKind::Polynomial), 4);
         assert_eq!(exact(SchemeKind::SecPoly), 6);
         assert_eq!(exact(SchemeKind::Lcc), 6);
+        assert_eq!(exact(SchemeKind::MatDot), 7);
         assert_eq!(exact(SchemeKind::Uncoded), 30);
         assert!(matches!(
-            make_scheme(SchemeKind::Spacdc, params).unwrap().threshold(1),
+            make_scheme(SchemeKind::Spacdc, params).threshold(&task),
             Threshold::Flexible { min: 1 }
         ));
-        // MatDot: 2K−1 = 7.
-        assert_eq!(MatDot::new(30, 4).threshold(), 7);
+        // MatDot's own constructor agrees: 2K−1 = 7.
+        assert_eq!(MatDot::new(30, 4).unwrap().recovery_threshold(), 7);
+    }
+
+    #[test]
+    fn task_support_matrix() {
+        // Row-partition schemes serve both task shapes; MatDot serves
+        // pair products only; linear-only schemes reject degree-2 maps.
+        let params = CodeParams::new(12, 3, 2);
+        let gram = CodedTask::block_map(WorkerOp::Gram, Matrix::ones(6, 4));
+        let pair = CodedTask::pair_product(Matrix::ones(6, 4), Matrix::ones(4, 6));
+        for kind in SchemeKind::all() {
+            let s = make_scheme(kind, params);
+            assert!(s.supports(&pair), "{kind:?} must serve pair products");
+            let expect_blockmap = kind != SchemeKind::MatDot;
+            assert_eq!(s.supports(&probe_task()), expect_blockmap, "{kind:?} block-map");
+            let expect_gram = matches!(
+                kind,
+                SchemeKind::Spacdc
+                    | SchemeKind::Bacc
+                    | SchemeKind::Lcc
+                    | SchemeKind::Uncoded
+            );
+            assert_eq!(s.supports(&gram), expect_gram, "{kind:?} gram");
+        }
     }
 }

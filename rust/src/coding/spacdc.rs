@@ -21,8 +21,9 @@
 //! and restores the stability guarantee (see `decode_berrut`).
 
 use super::interp::{berrut_eval, berrut_weights, chebyshev_nodes_in, disjoint_eval_nodes};
+use super::task::TaskShape;
 use super::traits::{
-    validate_results, CodeParams, CodingError, DecodeCtx, Encoded, Scheme, Threshold,
+    validate_results, BlockCode, CodeParams, CodingError, DecodeCtx, Encoded, Threshold,
 };
 use crate::config::SchemeKind;
 use crate::matrix::{split_rows, Matrix};
@@ -40,8 +41,11 @@ pub struct Spacdc {
 
 impl Spacdc {
     /// Standard construction: masks at the data's unit scale.
+    ///
+    /// SPACDC requires T ≥ 1 mask; a T = 0 construction is accepted here
+    /// (so the scheme factory is infallible) and rejected with
+    /// [`CodingError::InvalidParams`] at encode time.
     pub fn new(params: CodeParams) -> Self {
-        assert!(params.t > 0, "SPACDC requires T ≥ 1 mask (use BACC for T = 0)");
         Self { params, mask_scale: 1.0 }
     }
 
@@ -93,7 +97,7 @@ impl Spacdc {
     }
 }
 
-impl Scheme for Spacdc {
+impl BlockCode for Spacdc {
     fn kind(&self) -> SchemeKind {
         SchemeKind::Spacdc
     }
@@ -102,7 +106,7 @@ impl Scheme for Spacdc {
         self.params
     }
 
-    fn threshold(&self, _deg: u32) -> Threshold {
+    fn block_threshold(&self, _deg: u32) -> Threshold {
         // The headline property: decode from any non-empty return set.
         Threshold::Flexible { min: 1 }
     }
@@ -117,8 +121,13 @@ impl Scheme for Spacdc {
         true
     }
 
-    fn encode(&self, x: &Matrix, deg: u32, rng: &mut Rng) -> Result<Encoded, CodingError> {
+    fn encode_blocks(&self, x: &Matrix, deg: u32, rng: &mut Rng) -> Result<Encoded, CodingError> {
         let CodeParams { n, k, t } = self.params;
+        if t == 0 {
+            return Err(CodingError::InvalidParams(
+                "SPACDC requires T ≥ 1 mask (use BACC for T = 0)".into(),
+            ));
+        }
         let (blocks, spec) = split_rows(x, k);
         let (br, bc) = blocks[0].shape();
 
@@ -163,11 +172,12 @@ impl Scheme for Spacdc {
                 betas: data_betas,
                 spec,
                 degree: deg,
+                shape: TaskShape::BlockMap,
             },
         })
     }
 
-    fn decode(
+    fn decode_blocks(
         &self,
         ctx: &DecodeCtx,
         results: &[(usize, Matrix)],
@@ -235,9 +245,9 @@ mod tests {
         let x = Matrix::random_gaussian(32, 16, 0.0, 1.0, &mut rng);
         let v = Matrix::random_gaussian(16, 8, 0.0, 1.0, &mut rng);
 
-        let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+        let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
         let results = run_workers(&enc, |s| matmul(s, &v));
-        let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+        let decoded = scheme.decode_blocks(&enc.ctx, &results).unwrap();
 
         let (blocks, _) = split_rows(&x, 4);
         for (i, d) in decoded.iter().enumerate() {
@@ -255,9 +265,9 @@ mod tests {
         let scheme = Spacdc::with_mask_scale(params, 0.5);
         let x = Matrix::random_gaussian(16, 12, 0.0, 1.0, &mut rng);
 
-        let enc = scheme.encode(&x, 2, &mut rng).unwrap();
+        let enc = scheme.encode_blocks(&x, 2, &mut rng).unwrap();
         let results = run_workers(&enc, gram);
-        let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+        let decoded = scheme.decode_blocks(&enc.ctx, &results).unwrap();
 
         let (blocks, _) = split_rows(&x, 2);
         for (i, d) in decoded.iter().enumerate() {
@@ -274,7 +284,7 @@ mod tests {
         let scheme = Spacdc::new(params);
         let x = Matrix::random_gaussian(32, 8, 0.0, 1.0, &mut rng);
         let v = Matrix::random_gaussian(8, 8, 0.0, 1.0, &mut rng);
-        let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+        let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
         let all = run_workers(&enc, |s| matmul(s, &v));
         let (blocks, _) = split_rows(&x, 4);
         let expect: Vec<Matrix> = blocks.iter().map(|b| matmul(b, &v)).collect();
@@ -289,7 +299,7 @@ mod tests {
                 .filter(|(i, _)| !dropped.contains(i))
                 .cloned()
                 .collect();
-            let decoded = scheme.decode(&enc.ctx, &subset).unwrap();
+            let decoded = scheme.decode_blocks(&enc.ctx, &subset).unwrap();
             decoded
                 .iter()
                 .zip(&expect)
@@ -312,11 +322,23 @@ mod tests {
         let mut rng = rng_from_seed(53);
         let scheme = Spacdc::new(CodeParams::new(8, 2, 1));
         let x = Matrix::random_uniform(8, 4, -1.0, 1.0, &mut rng);
-        let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+        let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
         let one = vec![(3usize, enc.shares[3].clone())];
-        let decoded = scheme.decode(&enc.ctx, &one).unwrap();
+        let decoded = scheme.decode_blocks(&enc.ctx, &one).unwrap();
         assert_eq!(decoded.len(), 2);
         assert_eq!(decoded[0].shape(), (4, 4));
+    }
+
+    #[test]
+    fn t_zero_rejected_at_encode() {
+        // Construction is infallible (the factory needs it); the missing
+        // masks are reported as InvalidParams when encoding starts.
+        let scheme = Spacdc::new(CodeParams::new(8, 2, 0));
+        let x = Matrix::ones(8, 4);
+        assert!(matches!(
+            scheme.encode_blocks(&x, 1, &mut rng_from_seed(0)),
+            Err(CodingError::InvalidParams(_))
+        ));
     }
 
     #[test]
@@ -324,9 +346,9 @@ mod tests {
         let mut rng = rng_from_seed(54);
         let scheme = Spacdc::new(CodeParams::new(8, 2, 1));
         let x = Matrix::ones(8, 4);
-        let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+        let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
         assert!(matches!(
-            scheme.decode(&enc.ctx, &[]),
+            scheme.decode_blocks(&enc.ctx, &[]),
             Err(CodingError::NotEnoughResults { .. })
         ));
     }
@@ -337,7 +359,7 @@ mod tests {
         let mut rng = rng_from_seed(55);
         let scheme = Spacdc::new(CodeParams::new(10, 2, 2));
         let x = Matrix::random_uniform(8, 4, -1.0, 1.0, &mut rng);
-        let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+        let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
         let (blocks, _) = split_rows(&x, 2);
         for share in &enc.shares {
             for block in &blocks {
@@ -351,8 +373,8 @@ mod tests {
         // Same data, different RNG → different shares (the Zᵢ differ).
         let scheme = Spacdc::new(CodeParams::new(6, 2, 1));
         let x = Matrix::ones(4, 4);
-        let e1 = scheme.encode(&x, 1, &mut rng_from_seed(1)).unwrap();
-        let e2 = scheme.encode(&x, 1, &mut rng_from_seed(2)).unwrap();
+        let e1 = scheme.encode_blocks(&x, 1, &mut rng_from_seed(1)).unwrap();
+        let e2 = scheme.encode_blocks(&x, 1, &mut rng_from_seed(2)).unwrap();
         assert!(e1.shares[0].max_abs_diff(&e2.shares[0]) > 1e-6);
     }
 
@@ -376,7 +398,7 @@ mod tests {
             let (data_pos, _) = Spacdc::node_layout(k, t);
             for _ in 0..trials {
                 let x = Matrix::random_gaussian(8, 4, 0.0, 1.0, &mut rng);
-                let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+                let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
                 let (blocks, _) = split_rows(&x, k);
                 // Colluders (workers 0..t) each try to invert their own
                 // share toward the best data block using the public
@@ -420,9 +442,9 @@ mod tests {
         let mut rng = rng_from_seed(57);
         let scheme = Spacdc::new(CodeParams::new(24, 3, 2));
         let x = Matrix::random_gaussian(30, 6, 0.0, 1.0, &mut rng);
-        let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+        let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
         let results = run_workers(&enc, |s| s.clone());
-        let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+        let decoded = scheme.decode_blocks(&enc.ctx, &results).unwrap();
         let restored = stack_rows(&decoded, &enc.ctx.spec);
         assert!(restored.rel_error(&x) < 0.05, "err={}", restored.rel_error(&x));
     }
@@ -437,11 +459,11 @@ mod tests {
             let mut rng = rng_from_seed(g.u64());
             let scheme = Spacdc::new(CodeParams::new(n, k, t));
             let x = Matrix::random_gaussian(8 * k, 6, 0.0, 1.0, &mut rng);
-            let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+            let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
             let idx = g.subset(n, returned);
             let results: Vec<(usize, Matrix)> =
                 idx.iter().map(|&i| (i, enc.shares[i].clone())).collect();
-            let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+            let decoded = scheme.decode_blocks(&enc.ctx, &results).unwrap();
             let (blocks, _) = split_rows(&x, k);
             for (d, b) in decoded.iter().zip(&blocks) {
                 let err = d.rel_error(b);

@@ -1,0 +1,128 @@
+//! Typed coded-computation tasks.
+//!
+//! A [`CodedTask`] is *what* the master wants computed, independent of
+//! *how* any particular scheme encodes it — the framing of Lagrange
+//! coded computing (Yu et al.) where one encode → compute → decode
+//! pipeline is parameterized by the task. Two shapes cover every
+//! workload in the paper:
+//!
+//! * [`CodedTask::BlockMap`] — distribute a single-operand worker op `f`
+//!   over the K row-blocks of `x`; the decode result is the per-block
+//!   vector `{Yᵢ ≈ f(Xᵢ)}`. This is the row-partition schemes' native
+//!   shape (SPACDC, BACC, MDS, Polynomial, LCC, SecPoly, CONV).
+//! * [`CodedTask::PairProduct`] — the full product `A·B`; the decode
+//!   result is a single matrix. This is MatDot's native shape, and the
+//!   row-partition schemes serve it too (encode A's row-blocks, workers
+//!   right-multiply by the broadcast B, decode + restack).
+//!
+//! Every scheme receives the task through the widened
+//! [`Scheme`](super::Scheme) trait, so the coordinator needs exactly one
+//! round pipeline for all eight [`SchemeKind`](crate::config::SchemeKind)s.
+
+use crate::matrix::Matrix;
+use crate::runtime::WorkerOp;
+use std::sync::Arc;
+
+/// One coded computation request.
+#[derive(Clone, Debug)]
+pub enum CodedTask {
+    /// Distribute `op` over the row-blocks of `x`: decode yields
+    /// `{Yᵢ ≈ op(Xᵢ)}`, one matrix per partition.
+    BlockMap {
+        /// The single-operand worker task `f` (its polynomial degree
+        /// drives each scheme's recovery threshold).
+        op: WorkerOp,
+        /// The data matrix to partition and encode.
+        x: Matrix,
+    },
+    /// Compute the full product `A·B`: decode yields one matrix.
+    PairProduct {
+        /// Left operand (the encoded side for row-partition schemes).
+        a: Matrix,
+        /// Right operand. Shared so the row-partition schemes can
+        /// broadcast it into a [`WorkerOp::RightMul`] without another
+        /// full-matrix copy.
+        b: Arc<Matrix>,
+    },
+}
+
+impl CodedTask {
+    /// Convenience constructor for a block-map task.
+    pub fn block_map(op: WorkerOp, x: Matrix) -> Self {
+        CodedTask::BlockMap { op, x }
+    }
+
+    /// Convenience constructor for a pair-product task.
+    pub fn pair_product(a: Matrix, b: Matrix) -> Self {
+        CodedTask::PairProduct { a, b: Arc::new(b) }
+    }
+
+    /// Pair-product constructor for an already-shared right operand
+    /// (e.g. the same weight matrix reused across rounds).
+    pub fn pair_product_shared(a: Matrix, b: Arc<Matrix>) -> Self {
+        CodedTask::PairProduct { a, b }
+    }
+
+    /// Short task name for error messages and metrics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodedTask::BlockMap { .. } => "block-map",
+            CodedTask::PairProduct { .. } => "pair-product",
+        }
+    }
+
+    /// Polynomial degree of the worker task *in the encoded operand*, the
+    /// quantity every row-partition threshold formula consumes. A pair
+    /// product is degree 1 from a row-partition scheme's point of view
+    /// (only A is encoded; B is broadcast), even though MatDot — which
+    /// encodes both operands — ignores this and uses its own 2K−1.
+    pub fn degree(&self) -> u32 {
+        match self {
+            CodedTask::BlockMap { op, .. } => op.degree(),
+            CodedTask::PairProduct { .. } => 1,
+        }
+    }
+
+    /// The shape tag recorded into the decode context.
+    pub fn shape(&self) -> TaskShape {
+        match self {
+            CodedTask::BlockMap { .. } => TaskShape::BlockMap,
+            CodedTask::PairProduct { .. } => TaskShape::PairProduct,
+        }
+    }
+}
+
+/// Which task shape a round was encoded for — recorded in the
+/// [`DecodeCtx`](super::DecodeCtx) so decode knows whether to return
+/// per-block results or a single stacked/interpolated product.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TaskShape {
+    /// Per-block results `{Yᵢ}`.
+    BlockMap,
+    /// One full-product result.
+    PairProduct,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn task_degrees_follow_the_encoded_operand() {
+        let x = Matrix::ones(4, 4);
+        assert_eq!(CodedTask::block_map(WorkerOp::Gram, x.clone()).degree(), 2);
+        assert_eq!(CodedTask::block_map(WorkerOp::Identity, x.clone()).degree(), 1);
+        assert_eq!(CodedTask::pair_product(x.clone(), x).degree(), 1);
+    }
+
+    #[test]
+    fn shapes_and_names() {
+        let x = Matrix::ones(2, 2);
+        let bm = CodedTask::block_map(WorkerOp::Identity, x.clone());
+        let pp = CodedTask::pair_product(x.clone(), x);
+        assert_eq!(bm.shape(), TaskShape::BlockMap);
+        assert_eq!(pp.shape(), TaskShape::PairProduct);
+        assert_eq!(bm.name(), "block-map");
+        assert_eq!(pp.name(), "pair-product");
+    }
+}

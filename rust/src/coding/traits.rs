@@ -1,15 +1,28 @@
 //! The common interface every coding scheme implements.
 //!
-//! All row-partition schemes (everything except MatDot, which is a
-//! matrix-product code with its own pair API in `matdot.rs`) share the
-//! same shape: encode K row-blocks (plus T random mask blocks for the
-//! private schemes) into N worker shares; workers apply `f` to their
-//! share; the master decodes per-block results `Yᵢ ≈ f(Xᵢ)` from
-//! whichever workers returned.
+//! Two levels:
+//!
+//! * [`Scheme`] — the task-level API the coordinator drives: `encode` /
+//!   `threshold` / `decode` all take a typed [`CodedTask`], and the
+//!   encoded output is an [`EncodedJob`] whose per-worker payloads are
+//!   `Vec<Matrix>`, so MatDot's two-operand shares travel the same wire
+//!   path as single-share schemes. Every one of the 8
+//!   [`SchemeKind`](crate::config::SchemeKind)s implements this.
+//! * [`BlockCode`] — the row-partition machinery (everything except
+//!   MatDot): encode K row-blocks (plus T random mask blocks for the
+//!   private schemes) into N worker shares; workers apply `f` to their
+//!   share; the master decodes per-block results `Yᵢ ≈ f(Xᵢ)` from
+//!   whichever workers returned. A blanket impl lifts any `BlockCode`
+//!   into a `Scheme`, including serving [`CodedTask::PairProduct`] by
+//!   encoding A, broadcasting B as a right-multiply, and restacking the
+//!   decoded blocks.
 
+use super::task::{CodedTask, TaskShape};
 use crate::config::SchemeKind;
-use crate::matrix::{Matrix, PartitionSpec};
+use crate::matrix::{stack_rows, Matrix, PartitionSpec};
 use crate::rng::Rng;
+use crate::runtime::WorkerOp;
+use std::sync::Arc;
 
 /// Code parameters: N workers, K data blocks, T privacy masks.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -23,9 +36,28 @@ pub struct CodeParams {
 }
 
 impl CodeParams {
-    /// Convenience constructor.
+    /// Convenience constructor (unvalidated; schemes report
+    /// [`CodingError::InvalidParams`] at encode time for shapes they
+    /// cannot serve).
     pub fn new(n: usize, k: usize, t: usize) -> Self {
         Self { n, k, t }
+    }
+
+    /// Validated constructor: rejects structurally unusable parameters
+    /// instead of panicking downstream.
+    pub fn checked(n: usize, k: usize, t: usize) -> Result<Self, CodingError> {
+        if n == 0 {
+            return Err(CodingError::InvalidParams("N must be ≥ 1".into()));
+        }
+        if k == 0 {
+            return Err(CodingError::InvalidParams("K must be ≥ 1".into()));
+        }
+        if k + t > n {
+            return Err(CodingError::InvalidParams(format!(
+                "K+T must be ≤ N (K={k}, T={t}, N={n})"
+            )));
+        }
+        Ok(Self { n, k, t })
     }
 }
 
@@ -58,10 +90,9 @@ impl Threshold {
 }
 
 /// Decode failure modes.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CodingError {
     /// Fewer results than the scheme's recovery threshold.
-    #[error("not enough results: need {need}, got {got}")]
     NotEnoughResults {
         /// Required result count.
         need: usize,
@@ -69,23 +100,50 @@ pub enum CodingError {
         got: usize,
     },
     /// Scheme cannot handle a task of this polynomial degree.
-    #[error("{scheme} does not support task degree {degree}")]
     UnsupportedDegree {
         /// Scheme name.
         scheme: &'static str,
         /// Requested degree.
         degree: u32,
     },
+    /// Scheme cannot serve this task shape at all.
+    UnsupportedTask {
+        /// Scheme name.
+        scheme: &'static str,
+        /// Task name.
+        task: &'static str,
+    },
+    /// Code parameters are structurally unusable.
+    InvalidParams(String),
     /// A result matrix had an unexpected shape.
-    #[error("result shape mismatch: {0}")]
     ShapeMismatch(String),
     /// Linear-algebra failure during decode.
-    #[error("decode failed: {0}")]
     Numerical(String),
     /// Worker index out of range or duplicated.
-    #[error("bad worker index: {0}")]
     BadWorkerIndex(usize),
 }
+
+impl std::fmt::Display for CodingError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CodingError::NotEnoughResults { need, got } => {
+                write!(f, "not enough results: need {need}, got {got}")
+            }
+            CodingError::UnsupportedDegree { scheme, degree } => {
+                write!(f, "{scheme} does not support task degree {degree}")
+            }
+            CodingError::UnsupportedTask { scheme, task } => {
+                write!(f, "{scheme} does not support {task} tasks")
+            }
+            CodingError::InvalidParams(msg) => write!(f, "invalid code parameters: {msg}"),
+            CodingError::ShapeMismatch(msg) => write!(f, "result shape mismatch: {msg}"),
+            CodingError::Numerical(msg) => write!(f, "decode failed: {msg}"),
+            CodingError::BadWorkerIndex(i) => write!(f, "bad worker index: {i}"),
+        }
+    }
+}
+
+impl std::error::Error for CodingError {}
 
 /// Everything the decoder needs, produced at encode time.
 #[derive(Clone, Debug)]
@@ -102,9 +160,13 @@ pub struct DecodeCtx {
     pub spec: PartitionSpec,
     /// Polynomial degree of the worker task f (1 = linear).
     pub degree: u32,
+    /// The task shape this round decodes back into.
+    pub shape: TaskShape,
 }
 
-/// An encoded computation: one share per worker + the decode context.
+/// A block-level encoding: one share per worker + the decode context.
+/// Produced by [`BlockCode::encode_blocks`]; the blanket [`Scheme`] impl
+/// wraps it into an [`EncodedJob`].
 #[derive(Clone, Debug)]
 pub struct Encoded {
     /// Share for worker j at index j.
@@ -113,7 +175,23 @@ pub struct Encoded {
     pub ctx: DecodeCtx,
 }
 
-/// A coding scheme over row-partitioned data.
+/// A fully-encoded coded round, ready to dispatch: per-worker operand
+/// payloads (1 matrix for single-share schemes, 2 for MatDot), the
+/// worker op to run on them, and the decode context.
+#[derive(Clone, Debug)]
+pub struct EncodedJob {
+    /// `payloads[j]` — the operand matrices worker j receives.
+    pub payloads: Vec<Vec<Matrix>>,
+    /// The operation every worker applies to its payloads.
+    pub op: WorkerOp,
+    /// Decode context.
+    pub ctx: DecodeCtx,
+}
+
+/// A coding scheme over a typed [`CodedTask`] — the interface the
+/// coordinator drives. All eight schemes implement it (the seven
+/// row-partition codes through the blanket [`BlockCode`] impl, MatDot
+/// directly).
 pub trait Scheme: Send + Sync {
     /// Which scheme this is.
     fn kind(&self) -> SchemeKind;
@@ -121,8 +199,43 @@ pub trait Scheme: Send + Sync {
     /// Code parameters.
     fn params(&self) -> CodeParams;
 
+    /// Recovery threshold for `task`.
+    fn threshold(&self, task: &CodedTask) -> Threshold;
+
+    /// Can this scheme serve `task`?
+    fn supports(&self, task: &CodedTask) -> bool;
+
+    /// Does the encoding information-theoretically hide the data from up
+    /// to T colluding workers?
+    fn is_private(&self) -> bool {
+        false
+    }
+
+    /// Encode `task` into per-worker payloads.
+    fn encode(&self, task: &CodedTask, rng: &mut Rng) -> Result<EncodedJob, CodingError>;
+
+    /// Decode from `(worker index, f(payloads))` pairs. Returns K block
+    /// matrices for a block-map round, or a single full-product matrix
+    /// for a pair-product round.
+    fn decode(
+        &self,
+        ctx: &DecodeCtx,
+        results: &[(usize, Matrix)],
+    ) -> Result<Vec<Matrix>, CodingError>;
+}
+
+/// A coding scheme over row-partitioned data — the block-level machinery
+/// shared by everything except MatDot. Implementing this automatically
+/// provides [`Scheme`] via the blanket impl below.
+pub trait BlockCode: Send + Sync {
+    /// Which scheme this is.
+    fn kind(&self) -> SchemeKind;
+
+    /// Code parameters.
+    fn params(&self) -> CodeParams;
+
     /// Recovery threshold for a worker task of polynomial degree `deg`.
-    fn threshold(&self, deg: u32) -> Threshold;
+    fn block_threshold(&self, deg: u32) -> Threshold;
 
     /// Can this scheme decode a task of degree `deg`? Exact linear codes
     /// (MDS/Polynomial/SecPoly) only commute with linear `f`.
@@ -135,15 +248,92 @@ pub trait Scheme: Send + Sync {
     }
 
     /// Encode `x` for a worker task of degree `deg`.
-    fn encode(&self, x: &Matrix, deg: u32, rng: &mut Rng) -> Result<Encoded, CodingError>;
+    fn encode_blocks(&self, x: &Matrix, deg: u32, rng: &mut Rng) -> Result<Encoded, CodingError>;
 
     /// Decode per-block results from `(worker index, f(share))` pairs.
     /// Returns K matrices `Yᵢ ≈ f(Xᵢ)`.
-    fn decode(
+    fn decode_blocks(
         &self,
         ctx: &DecodeCtx,
         results: &[(usize, Matrix)],
     ) -> Result<Vec<Matrix>, CodingError>;
+}
+
+impl<C: BlockCode> Scheme for C {
+    fn kind(&self) -> SchemeKind {
+        BlockCode::kind(self)
+    }
+
+    fn params(&self) -> CodeParams {
+        BlockCode::params(self)
+    }
+
+    fn threshold(&self, task: &CodedTask) -> Threshold {
+        self.block_threshold(task.degree())
+    }
+
+    fn supports(&self, task: &CodedTask) -> bool {
+        match task {
+            CodedTask::BlockMap { op, .. } => {
+                op.operand_count() == 1 && self.supports_degree(op.degree())
+            }
+            // Served as encode(A) + broadcast right-multiply by B.
+            CodedTask::PairProduct { .. } => self.supports_degree(1),
+        }
+    }
+
+    fn is_private(&self) -> bool {
+        BlockCode::is_private(self)
+    }
+
+    fn encode(&self, task: &CodedTask, rng: &mut Rng) -> Result<EncodedJob, CodingError> {
+        match task {
+            CodedTask::BlockMap { op, x } => {
+                if op.operand_count() != 1 {
+                    return Err(CodingError::UnsupportedTask {
+                        scheme: BlockCode::kind(self).name(),
+                        task: "block-map with a pair op",
+                    });
+                }
+                let enc = self.encode_blocks(x, op.degree(), rng)?;
+                Ok(EncodedJob {
+                    payloads: enc.shares.into_iter().map(|s| vec![s]).collect(),
+                    op: op.clone(),
+                    ctx: enc.ctx,
+                })
+            }
+            CodedTask::PairProduct { a, b } => {
+                if a.cols() != b.rows() {
+                    return Err(CodingError::ShapeMismatch(format!(
+                        "A cols {} != B rows {}",
+                        a.cols(),
+                        b.rows()
+                    )));
+                }
+                let mut enc = self.encode_blocks(a, 1, rng)?;
+                enc.ctx.shape = TaskShape::PairProduct;
+                Ok(EncodedJob {
+                    payloads: enc.shares.into_iter().map(|s| vec![s]).collect(),
+                    op: WorkerOp::RightMul(Arc::clone(b)),
+                    ctx: enc.ctx,
+                })
+            }
+        }
+    }
+
+    fn decode(
+        &self,
+        ctx: &DecodeCtx,
+        results: &[(usize, Matrix)],
+    ) -> Result<Vec<Matrix>, CodingError> {
+        let blocks = self.decode_blocks(ctx, results)?;
+        Ok(match ctx.shape {
+            TaskShape::BlockMap => blocks,
+            // Pair products restack the per-block rows of A·B into the
+            // single full product, dropping padding.
+            TaskShape::PairProduct => vec![stack_rows(&blocks, &ctx.spec)],
+        })
+    }
 }
 
 /// Validate a result set: indices in range, no duplicates. Returns the
@@ -205,5 +395,22 @@ mod tests {
         let sorted = validate_results(4, &r).unwrap();
         let idx: Vec<usize> = sorted.iter().map(|(i, _)| *i).collect();
         assert_eq!(idx, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn checked_params_reject_structural_nonsense() {
+        assert!(matches!(
+            CodeParams::checked(0, 1, 0),
+            Err(CodingError::InvalidParams(_))
+        ));
+        assert!(matches!(
+            CodeParams::checked(8, 0, 0),
+            Err(CodingError::InvalidParams(_))
+        ));
+        assert!(matches!(
+            CodeParams::checked(8, 6, 4),
+            Err(CodingError::InvalidParams(_))
+        ));
+        assert_eq!(CodeParams::checked(8, 4, 2).unwrap(), CodeParams::new(8, 4, 2));
     }
 }

@@ -4,8 +4,9 @@
 //! a single straggler stalls the step, which is exactly the effect
 //! Figs. 3–4 measure.
 
+use super::task::TaskShape;
 use super::traits::{
-    validate_results, CodeParams, CodingError, DecodeCtx, Encoded, Scheme, Threshold,
+    validate_results, BlockCode, CodeParams, CodingError, DecodeCtx, Encoded, Threshold,
 };
 use crate::config::SchemeKind;
 use crate::matrix::{split_rows, Matrix, PartitionSpec};
@@ -24,7 +25,7 @@ impl Uncoded {
     }
 }
 
-impl Scheme for Uncoded {
+impl BlockCode for Uncoded {
     fn kind(&self) -> SchemeKind {
         SchemeKind::Uncoded
     }
@@ -33,7 +34,7 @@ impl Scheme for Uncoded {
         self.params
     }
 
-    fn threshold(&self, _deg: u32) -> Threshold {
+    fn block_threshold(&self, _deg: u32) -> Threshold {
         Threshold::Exact(self.params.n)
     }
 
@@ -41,7 +42,7 @@ impl Scheme for Uncoded {
         true // raw parts: any f works
     }
 
-    fn encode(&self, x: &Matrix, deg: u32, _rng: &mut Rng) -> Result<Encoded, CodingError> {
+    fn encode_blocks(&self, x: &Matrix, deg: u32, _rng: &mut Rng) -> Result<Encoded, CodingError> {
         let (blocks, spec) = split_rows(x, self.params.n);
         Ok(Encoded {
             shares: blocks,
@@ -52,11 +53,12 @@ impl Scheme for Uncoded {
                 betas: vec![],
                 spec,
                 degree: deg,
+                shape: TaskShape::BlockMap,
             },
         })
     }
 
-    fn decode(
+    fn decode_blocks(
         &self,
         ctx: &DecodeCtx,
         results: &[(usize, Matrix)],
@@ -87,11 +89,11 @@ mod tests {
         let scheme = Uncoded::new(CodeParams::new(6, 0, 0));
         let mut rng = rng_from_seed(80);
         let x = Matrix::random_uniform(12, 3, -1.0, 1.0, &mut rng);
-        let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+        let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
         let partial: Vec<(usize, Matrix)> =
             (0..5).map(|i| (i, enc.shares[i].clone())).collect();
         assert!(matches!(
-            scheme.decode(&enc.ctx, &partial),
+            scheme.decode_blocks(&enc.ctx, &partial),
             Err(CodingError::NotEnoughResults { need: 6, got: 5 })
         ));
     }
@@ -101,10 +103,10 @@ mod tests {
         let scheme = Uncoded::new(CodeParams::new(5, 0, 0));
         let mut rng = rng_from_seed(81);
         let x = Matrix::random_gaussian(13, 4, 0.0, 1.0, &mut rng);
-        let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+        let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
         let results: Vec<(usize, Matrix)> =
             enc.shares.iter().enumerate().map(|(i, s)| (i, s.clone())).collect();
-        let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+        let decoded = scheme.decode_blocks(&enc.ctx, &results).unwrap();
         assert_eq!(stack_rows(&decoded, &enc.ctx.spec), x);
     }
 
@@ -113,10 +115,10 @@ mod tests {
         let scheme = Uncoded::new(CodeParams::new(4, 0, 0));
         let mut rng = rng_from_seed(82);
         let x = Matrix::random_gaussian(16, 6, 0.0, 1.0, &mut rng);
-        let enc = scheme.encode(&x, 2, &mut rng).unwrap();
+        let enc = scheme.encode_blocks(&x, 2, &mut rng).unwrap();
         let results: Vec<(usize, Matrix)> =
             enc.shares.iter().enumerate().map(|(i, s)| (i, gram(s))).collect();
-        let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+        let decoded = scheme.decode_blocks(&enc.ctx, &results).unwrap();
         for (d, s) in decoded.iter().zip(&enc.shares) {
             assert_eq!(d.as_slice(), gram(s).as_slice());
         }
@@ -125,7 +127,7 @@ mod tests {
     #[test]
     fn threshold_is_n() {
         let scheme = Uncoded::new(CodeParams::new(30, 0, 0));
-        assert_eq!(scheme.threshold(1), Threshold::Exact(30));
+        assert_eq!(scheme.block_threshold(1), Threshold::Exact(30));
         assert!(!scheme.is_private());
     }
 }

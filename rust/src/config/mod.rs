@@ -184,12 +184,21 @@ impl Default for SystemConfig {
 }
 
 /// Validation failure.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigValidationError {
     /// A structural constraint was violated.
-    #[error("invalid config: {0}")]
     Invalid(String),
 }
+
+impl std::fmt::Display for ConfigValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigValidationError::Invalid(msg) => write!(f, "invalid config: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigValidationError {}
 
 impl SystemConfig {
     /// Validate the paper's structural constraints.

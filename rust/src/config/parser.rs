@@ -3,24 +3,35 @@
 //! happens in `SystemConfig::apply_kv`.
 
 /// Parse/IO error for config loading.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
     /// File could not be read.
-    #[error("cannot read config {0}: {1}")]
     Io(String, String),
     /// A line failed to parse.
-    #[error("config syntax error at line {0}: {1}")]
     Syntax(usize, String),
     /// Key exists but value failed to type-check.
-    #[error("bad value for {0}: {1:?}")]
     BadValue(String, String),
     /// Key is not a recognized configuration path.
-    #[error("unknown config key: {0}")]
     UnknownKey(String),
     /// Structural validation failed after load.
-    #[error("{0}")]
     Validation(String),
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Io(path, err) => write!(f, "cannot read config {path}: {err}"),
+            ConfigError::Syntax(line, msg) => {
+                write!(f, "config syntax error at line {line}: {msg}")
+            }
+            ConfigError::BadValue(key, value) => write!(f, "bad value for {key}: {value:?}"),
+            ConfigError::UnknownKey(key) => write!(f, "unknown config key: {key}"),
+            ConfigError::Validation(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 /// A parsed-but-untyped config: ordered (section, key, value) triples.
 #[derive(Debug, Default, Clone)]

@@ -1,16 +1,23 @@
 //! The master: drives encoded rounds end-to-end (encode → seal →
 //! dispatch → collect → decrypt → decode) and owns all accounting.
+//!
+//! One pipeline serves every scheme and task shape: [`Master::run`]
+//! executes a typed [`CodedTask`] synchronously, and the split-phase
+//! [`Master::submit`] / [`Master::wait`] pair keeps several rounds in
+//! flight against the worker pool at once — encode/seal/dispatch of
+//! round r+1 overlaps the workers' compute of round r (see the
+//! `pipelining` bench).
 
 use super::messages::{ResultMsg, WirePayload, WorkOrder};
 use super::pool::WorkerPool;
-use crate::coding::{make_scheme, CodeParams, MatDot, Scheme};
-use crate::config::{SchemeKind, SystemConfig, TransportSecurity};
+use crate::coding::{make_scheme, CodeParams, CodedTask, DecodeCtx, Scheme, Threshold};
+use crate::config::{SystemConfig, TransportSecurity};
 use crate::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc};
 use crate::field::Fp61;
 use crate::matrix::Matrix;
 use crate::metrics::{names, MetricsRegistry};
 use crate::rng::{derive_seed, rng_from_seed, Rng};
-use crate::runtime::{Executor, WorkerOp};
+use crate::runtime::Executor;
 use crate::sim::{CollusionPool, DelayModel, EavesdropLog};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -19,13 +26,43 @@ use std::time::{Duration, Instant};
 /// Result of one coded round.
 #[derive(Debug)]
 pub struct RoundOutcome {
-    /// Decoded per-block results `Yᵢ ≈ f(Xᵢ)` (for block-map rounds) or
-    /// the single full product (MatDot rounds).
+    /// Decoded results: per-block `Yᵢ ≈ f(Xᵢ)` for block-map rounds, or
+    /// a single full product for pair-product rounds.
     pub blocks: Vec<Matrix>,
-    /// Wall-clock for the whole round (dispatch → decode done).
+    /// Wall-clock for the whole round (submit → decode done).
     pub wall: Duration,
     /// How many worker results the decoder consumed.
     pub results_used: usize,
+}
+
+/// A round in flight: returned by [`Master::submit`], consumed by
+/// [`Master::wait`] (or released by [`Master::abandon`]). Deliberately
+/// neither `Clone` nor constructible outside this module, so every
+/// submitted round is waited on at most once.
+///
+/// Dropping a handle without waiting leaves the round's result buffer
+/// allocated until the master is dropped — abandon rounds you will not
+/// wait on.
+#[derive(Debug)]
+pub struct RoundHandle {
+    round: u64,
+}
+
+impl RoundHandle {
+    /// The monotone round id this handle tracks.
+    pub fn round_id(&self) -> u64 {
+        self.round
+    }
+}
+
+/// Book-keeping for a submitted-but-undecoded round.
+struct InflightRound {
+    ctx: DecodeCtx,
+    results: Vec<(usize, Matrix)>,
+    threshold: Threshold,
+    wait_for: usize,
+    dispatched: usize,
+    started: Instant,
 }
 
 /// Builder for [`Master`].
@@ -85,10 +122,9 @@ impl MasterBuilder {
         );
         let params =
             CodeParams::new(self.cfg.workers, self.cfg.partitions, self.cfg.colluders);
-        let (scheme, matdot) = match self.cfg.scheme {
-            SchemeKind::MatDot => (None, Some(MatDot::new(self.cfg.workers, self.cfg.partitions))),
-            kind => (make_scheme(kind, params), None),
-        };
+        // Total over every SchemeKind — MatDot included; no Option field,
+        // no second code path.
+        let scheme = make_scheme(self.cfg.scheme, params);
         let delays = DelayModel::new(
             self.cfg.workers,
             self.cfg.stragglers,
@@ -98,7 +134,6 @@ impl MasterBuilder {
         Ok(Master {
             cfg: self.cfg,
             scheme,
-            matdot,
             pool,
             keys,
             mea: MeaEcc::new(curve, MaskMode::Keystream),
@@ -107,6 +142,7 @@ impl MasterBuilder {
             delays,
             round: 0,
             rng,
+            inflight: HashMap::new(),
             outstanding: HashMap::new(),
         })
     }
@@ -115,8 +151,7 @@ impl MasterBuilder {
 /// The master node.
 pub struct Master {
     cfg: SystemConfig,
-    scheme: Option<Box<dyn Scheme>>,
-    matdot: Option<MatDot>,
+    scheme: Box<dyn Scheme>,
     pool: WorkerPool,
     keys: KeyPair<Fp61>,
     mea: MeaEcc<Fp61>,
@@ -125,7 +160,9 @@ pub struct Master {
     delays: DelayModel,
     round: u64,
     rng: Rng,
-    /// round → results still in flight (late-arrival accounting).
+    /// Rounds submitted but not yet waited on, with buffered results.
+    inflight: HashMap<u64, InflightRound>,
+    /// Completed round → results still in flight (late-arrival accounting).
     outstanding: HashMap<u64, usize>,
 }
 
@@ -145,98 +182,59 @@ impl Master {
         &self.cfg
     }
 
+    /// The configured coding scheme.
+    pub fn scheme(&self) -> &dyn Scheme {
+        &*self.scheme
+    }
+
     /// The straggler set chosen for this scenario.
     pub fn straggler_set(&self) -> Vec<usize> {
         self.delays.straggler_set()
     }
 
-    /// Run one block-map round: distribute `f = op` over the row-blocks
-    /// of `x` with the configured scheme, return `{Yᵢ ≈ f(Xᵢ)}`.
-    pub fn run_blockmap(&mut self, op: WorkerOp, x: &Matrix) -> anyhow::Result<RoundOutcome> {
-        let scheme = self
-            .scheme
-            .take()
-            .ok_or_else(|| anyhow::anyhow!("configured scheme is a pair code; use run_matmul"))?;
-        let result = self.run_blockmap_with(&*scheme, op, x);
-        self.scheme = Some(scheme);
-        result
+    /// Run one coded round synchronously: encode `task` with the
+    /// configured scheme, dispatch, collect, decode.
+    pub fn run(&mut self, task: CodedTask) -> anyhow::Result<RoundOutcome> {
+        let handle = self.submit(task)?;
+        self.wait(handle)
     }
 
-    fn run_blockmap_with(
-        &mut self,
-        scheme: &dyn Scheme,
-        op: WorkerOp,
-        x: &Matrix,
-    ) -> anyhow::Result<RoundOutcome> {
-        let deg = op.degree();
-        if !scheme.supports_degree(deg) {
-            anyhow::bail!("{} does not support degree-{deg} tasks", scheme.kind().name());
+    /// Phase 1+2 of a round: encode `task`, seal the per-worker payloads,
+    /// and dispatch the work orders. Returns immediately with a
+    /// [`RoundHandle`]; several rounds may be in flight at once, and
+    /// [`Master::wait`] routes interleaved results to the right round.
+    pub fn submit(&mut self, task: CodedTask) -> anyhow::Result<RoundHandle> {
+        if !self.scheme.supports(&task) {
+            anyhow::bail!(
+                "{} does not support {} tasks",
+                self.scheme.kind().name(),
+                task.name()
+            );
         }
-        self.drain_stale();
+        // Absorb results that landed since the last call (late arrivals
+        // of completed rounds, early arrivals of in-flight ones).
+        self.drain_pending();
         self.round += 1;
         let round = self.round;
-        let t0 = Instant::now();
+        let started = Instant::now();
 
-        // Phase 1: encode (+T masks) — §V-B "data process".
-        let encoded = {
+        // Encode (+T masks) — §V-B "data process".
+        let job = {
             let _t = self.metrics.time_phase("phase.encode");
-            scheme.encode(x, deg, &mut self.rng)?
+            self.scheme.encode(&task, &mut self.rng)?
         };
+        let threshold = self.scheme.threshold(&task);
+        let wait_for = self.wait_count(threshold);
+        let dispatched = job.payloads.len();
 
-        // Dispatch sealed shares.
+        // Seal and dispatch every worker's operand payloads.
         {
             let metrics = Arc::clone(&self.metrics);
             let _t = metrics.time_phase("phase.dispatch");
-            for (w, share) in encoded.shares.iter().enumerate() {
-                let payload = self.seal_for(w, share);
-                self.capture(w, true, &payload);
-                self.metrics.add(names::SYMBOLS_TO_WORKERS, payload.symbols() as u64);
-                self.metrics.inc(names::TASKS_DISPATCHED);
-                self.pool.dispatch(WorkOrder {
-                    round,
-                    worker: w,
-                    op: op.clone(),
-                    payloads: vec![payload],
-                    delay: self.delays.service_delay(w, round),
-                });
-            }
-        }
-
-        // Phase 3: collect + decode.
-        let wait = self.wait_count(scheme.threshold(deg));
-        let results = self.collect(round, wait, self.cfg.workers)?;
-        let used = results.len();
-        let decoded = {
-            let _t = self.metrics.time_phase("phase.decode");
-            scheme.decode(&encoded.ctx, &results)?
-        };
-        Ok(RoundOutcome { blocks: decoded, wall: t0.elapsed(), results_used: used })
-    }
-
-    /// Run one MatDot round: the full product `A·B` via the pair code.
-    pub fn run_matmul(&mut self, a: &Matrix, b: &Matrix) -> anyhow::Result<RoundOutcome> {
-        let code = self
-            .matdot
-            .clone()
-            .ok_or_else(|| anyhow::anyhow!("configured scheme is not MatDot; use run_blockmap"))?;
-        let code = &code;
-        self.drain_stale();
-        self.round += 1;
-        let round = self.round;
-        let t0 = Instant::now();
-
-        let encoded = {
-            let _t = self.metrics.time_phase("phase.encode");
-            code.encode_pair(a, b)?
-        };
-
-        {
-            let metrics = Arc::clone(&self.metrics);
-            let _t = metrics.time_phase("phase.dispatch");
-            for (w, (pa, pb)) in encoded.shares.iter().enumerate() {
-                let payload_a = self.seal_for(w, pa);
-                let payload_b = self.seal_for(w, pb);
-                for p in [&payload_a, &payload_b] {
+            for (w, operands) in job.payloads.iter().enumerate() {
+                let payloads: Vec<WirePayload> =
+                    operands.iter().map(|m| self.seal_for(w, m)).collect();
+                for p in &payloads {
                     self.capture(w, true, p);
                     self.metrics.add(names::SYMBOLS_TO_WORKERS, p.symbols() as u64);
                 }
@@ -244,66 +242,129 @@ impl Master {
                 self.pool.dispatch(WorkOrder {
                     round,
                     worker: w,
-                    op: WorkerOp::PairProduct,
-                    payloads: vec![payload_a, payload_b],
+                    op: job.op.clone(),
+                    payloads,
                     delay: self.delays.service_delay(w, round),
                 });
             }
         }
 
-        let results = self.collect(round, code.threshold(), self.cfg.workers)?;
-        let used = results.len();
-        let product = {
-            let _t = self.metrics.time_phase("phase.decode");
-            code.decode(&encoded, &results)?
+        self.inflight.insert(
+            round,
+            InflightRound {
+                ctx: job.ctx,
+                results: Vec::new(),
+                threshold,
+                wait_for,
+                dispatched,
+                started,
+            },
+        );
+        Ok(RoundHandle { round })
+    }
+
+    /// Phase 3 of a round: collect results until the scheme's wait policy
+    /// is satisfied, then decode. Results belonging to *other* in-flight
+    /// rounds are buffered for their own `wait`, so rounds may be waited
+    /// on in any order.
+    pub fn wait(&mut self, handle: RoundHandle) -> anyhow::Result<RoundOutcome> {
+        let round = handle.round;
+        anyhow::ensure!(
+            self.inflight.contains_key(&round),
+            "round {round} is not in flight"
+        );
+        {
+            let metrics = Arc::clone(&self.metrics);
+            let _t = metrics.time_phase("phase.wait");
+            // One absolute deadline for the whole collection: traffic
+            // from other in-flight rounds must not keep re-arming it.
+            let deadline = Instant::now() + Duration::from_secs(60);
+            while self.inflight[&round].results.len() < self.inflight[&round].wait_for {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                let msg: ResultMsg = match self.pool.results().recv_timeout(remaining) {
+                    Ok(msg) => msg,
+                    Err(_) => {
+                        // Abandon the round: drop its buffer so later
+                        // arrivals are counted late instead of being
+                        // unsealed and hoarded forever.
+                        self.release(round);
+                        anyhow::bail!(
+                            "timed out waiting for worker results (round {round})"
+                        );
+                    }
+                };
+                self.route(msg);
+            }
+        }
+        let done = self.inflight.remove(&round).expect("checked in flight above");
+        // Anything not yet received is in flight → counted late when it
+        // lands during a later submit/wait.
+        self.outstanding.insert(round, done.dispatched - done.results.len());
+        // An exact-threshold decode consumes exactly its threshold;
+        // results buffered beyond it (possible when other rounds were
+        // waited on first) are wasted work, same as post-decode arrivals.
+        let used = match done.threshold {
+            Threshold::Exact(k) => k.min(done.results.len()),
+            Threshold::Flexible { .. } => done.results.len(),
         };
-        Ok(RoundOutcome { blocks: vec![product], wall: t0.elapsed(), results_used: used })
+        let extras = done.results.len() - used;
+        self.metrics.add(names::RESULTS_USED, used as u64);
+        if extras > 0 {
+            self.metrics.add(names::RESULTS_LATE, extras as u64);
+        }
+        let decoded = {
+            let _t = self.metrics.time_phase("phase.decode");
+            self.scheme.decode(&done.ctx, &done.results)?
+        };
+        Ok(RoundOutcome { blocks: decoded, wall: done.started.elapsed(), results_used: used })
+    }
+
+    /// Give up on a submitted round without decoding it: its buffered
+    /// results are counted as wasted work and its entry is dropped, so
+    /// later arrivals go through the late-result accounting instead of
+    /// being unsealed and buffered forever. Use this for rounds that
+    /// will never be waited on (e.g. when a batch is cancelled part-way
+    /// through submission).
+    pub fn abandon(&mut self, handle: RoundHandle) {
+        self.release(handle.round);
+    }
+
+    /// Drop an in-flight round's book-keeping, settling its accounting.
+    fn release(&mut self, round: u64) {
+        if let Some(dead) = self.inflight.remove(&round) {
+            self.outstanding.insert(round, dead.dispatched - dead.results.len());
+            self.metrics.add(names::RESULTS_LATE, dead.results.len() as u64);
+        }
     }
 
     /// How many results to wait for, given the scheme's threshold.
-    fn wait_count(&self, threshold: crate::coding::Threshold) -> usize {
+    fn wait_count(&self, threshold: Threshold) -> usize {
         match threshold {
-            crate::coding::Threshold::Exact(k) => k,
+            Threshold::Exact(k) => k,
             // Flexible: take what the non-stragglers produce (paper's
             // experimental policy — decode fires when the fast workers
             // are in, without waiting out the stragglers).
-            crate::coding::Threshold::Flexible { min } => {
-                (self.cfg.workers - self.cfg.stragglers).max(min)
-            }
+            Threshold::Flexible { min } => (self.cfg.workers - self.cfg.stragglers).max(min),
         }
     }
 
-    /// Collect `wait` results for `round`, unsealing payloads.
-    fn collect(
-        &mut self,
-        round: u64,
-        wait: usize,
-        dispatched: usize,
-    ) -> anyhow::Result<Vec<(usize, Matrix)>> {
-        let metrics = Arc::clone(&self.metrics);
-        let _t = metrics.time_phase("phase.wait");
-        let mut results = Vec::with_capacity(wait);
-        let deadline = Duration::from_secs(60);
-        while results.len() < wait {
-            let msg: ResultMsg = self
-                .pool
-                .results()
-                .recv_timeout(deadline)
-                .map_err(|_| anyhow::anyhow!("timed out waiting for worker results"))?;
-            if msg.round != round {
-                self.note_stale(msg.round);
-                continue;
-            }
-            self.capture(msg.worker, false, &msg.payload);
-            self.metrics.add(names::SYMBOLS_TO_MASTER, msg.payload.symbols() as u64);
-            self.metrics.inc(names::RESULTS_USED);
-            let m = self.unseal(&msg.payload);
-            results.push((msg.worker, m));
+    /// Deliver one worker result: buffered under its in-flight round, or
+    /// counted late if that round already decoded. (RESULTS_USED /
+    /// RESULTS_LATE for buffered results are settled at decode time in
+    /// [`Master::wait`], once it is known how many the decoder consumed.)
+    fn route(&mut self, msg: ResultMsg) {
+        if !self.inflight.contains_key(&msg.round) {
+            self.note_stale(msg.round);
+            return;
         }
-        // Anything not yet received is in flight → counted late when it
-        // lands during a later round (or drained on the next round).
-        self.outstanding.insert(round, dispatched - results.len());
-        Ok(results)
+        self.capture(msg.worker, false, &msg.payload);
+        self.metrics.add(names::SYMBOLS_TO_MASTER, msg.payload.symbols() as u64);
+        let m = self.unseal(&msg.payload);
+        self.inflight
+            .get_mut(&msg.round)
+            .expect("checked above")
+            .results
+            .push((msg.worker, m));
     }
 
     /// Seal (or pass through) a share for worker `w`.
@@ -333,10 +394,11 @@ impl Master {
         }
     }
 
-    /// Drain results from previous rounds that arrived after decode.
-    fn drain_stale(&mut self) {
+    /// Drain already-arrived results without blocking, routing each to
+    /// its in-flight round or the late-arrival accounting.
+    fn drain_pending(&mut self) {
         while let Ok(msg) = self.pool.results().try_recv() {
-            self.note_stale(msg.round);
+            self.route(msg);
         }
     }
 
@@ -351,7 +413,10 @@ impl Master {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::BlockCode;
+    use crate::config::SchemeKind;
     use crate::matrix::{matmul, split_rows};
+    use crate::runtime::WorkerOp;
 
     fn base_cfg(scheme: SchemeKind) -> SystemConfig {
         let mut cfg = SystemConfig::default();
@@ -371,7 +436,7 @@ mod tests {
         let x = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
         let v = Arc::new(Matrix::random_gaussian(8, 4, 0.0, 1.0, &mut rng));
         let out = master
-            .run_blockmap(WorkerOp::RightMul(Arc::clone(&v)), &x)
+            .run(CodedTask::block_map(WorkerOp::RightMul(Arc::clone(&v)), x.clone()))
             .unwrap();
         assert_eq!(out.blocks.len(), 3);
         assert_eq!(out.results_used, 10); // N − S
@@ -396,7 +461,9 @@ mod tests {
         let mut rng = rng_from_seed(2);
         let x = Matrix::random_gaussian(24, 6, 0.0, 1.0, &mut rng);
         let v = Arc::new(Matrix::random_gaussian(6, 5, 0.0, 1.0, &mut rng));
-        let out = master.run_blockmap(WorkerOp::RightMul(Arc::clone(&v)), &x).unwrap();
+        let out = master
+            .run(CodedTask::block_map(WorkerOp::RightMul(Arc::clone(&v)), x.clone()))
+            .unwrap();
         assert_eq!(out.results_used, 3); // threshold K
         let (blocks, _) = split_rows(&x, 3);
         for (d, b) in out.blocks.iter().zip(&blocks) {
@@ -411,7 +478,7 @@ mod tests {
         let mut master = Master::from_config(cfg).unwrap();
         let mut rng = rng_from_seed(3);
         let x = Matrix::random_gaussian(24, 4, 0.0, 1.0, &mut rng);
-        let out = master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+        let out = master.run(CodedTask::block_map(WorkerOp::Identity, x)).unwrap();
         assert_eq!(out.results_used, 12);
     }
 
@@ -423,24 +490,75 @@ mod tests {
         let mut rng = rng_from_seed(4);
         let a = Matrix::random_gaussian(8, 9, 0.0, 1.0, &mut rng);
         let b = Matrix::random_gaussian(9, 7, 0.0, 1.0, &mut rng);
-        let out = master.run_matmul(&a, &b).unwrap();
+        let out = master.run(CodedTask::pair_product(a.clone(), b.clone())).unwrap();
         assert_eq!(out.results_used, 5); // 2K−1
         assert_eq!(out.blocks.len(), 1);
         assert!(out.blocks[0].rel_error(&matmul(&a, &b)) < 1e-2);
     }
 
     #[test]
+    fn pair_product_through_a_row_partition_scheme() {
+        // The unified surface: the same task MatDot serves natively runs
+        // on SPACDC by encode(A) + broadcast right-multiply.
+        let mut master = Master::from_config(base_cfg(SchemeKind::Spacdc)).unwrap();
+        let mut rng = rng_from_seed(40);
+        let a = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_gaussian(8, 5, 0.0, 1.0, &mut rng);
+        let out = master.run(CodedTask::pair_product(a.clone(), b.clone())).unwrap();
+        assert_eq!(out.blocks.len(), 1);
+        assert_eq!(out.blocks[0].shape(), (24, 5));
+        assert!(out.blocks[0].rel_error(&matmul(&a, &b)) < 0.5);
+    }
+
+    #[test]
     fn blockmap_on_matdot_config_is_an_error() {
         let mut master = Master::from_config(base_cfg(SchemeKind::MatDot)).unwrap();
         let x = Matrix::ones(6, 4);
-        assert!(master.run_blockmap(WorkerOp::Identity, &x).is_err());
+        assert!(master.run(CodedTask::block_map(WorkerOp::Identity, x)).is_err());
     }
 
     #[test]
     fn mds_rejects_gram_tasks() {
         let mut master = Master::from_config(base_cfg(SchemeKind::Mds)).unwrap();
         let x = Matrix::ones(6, 4);
-        assert!(master.run_blockmap(WorkerOp::Gram, &x).is_err());
+        assert!(master.run(CodedTask::block_map(WorkerOp::Gram, x)).is_err());
+    }
+
+    #[test]
+    fn submitted_rounds_interleave_without_bleed() {
+        let mut master = Master::from_config(base_cfg(SchemeKind::Spacdc)).unwrap();
+        let mut rng = rng_from_seed(41);
+        let x1 = Matrix::random_gaussian(12, 4, 0.0, 1.0, &mut rng);
+        let x2 = Matrix::random_gaussian(12, 4, 0.0, 1.0, &mut rng);
+        let h1 = master.submit(CodedTask::block_map(WorkerOp::Identity, x1.clone())).unwrap();
+        let h2 = master.submit(CodedTask::block_map(WorkerOp::Identity, x2.clone())).unwrap();
+        assert_ne!(h1.round_id(), h2.round_id());
+        // Wait in reverse submission order: round 1 results arriving
+        // while we wait on round 2 must be buffered, not dropped.
+        let out2 = master.wait(h2).unwrap();
+        let out1 = master.wait(h1).unwrap();
+        let (b1, _) = split_rows(&x1, 3);
+        let (b2, _) = split_rows(&x2, 3);
+        for ((d1, e1), (d2, e2)) in
+            out1.blocks.iter().zip(&b1).zip(out2.blocks.iter().zip(&b2))
+        {
+            assert!(d1.rel_error(e1) < 0.5, "round 1 decode off: {}", d1.rel_error(e1));
+            assert!(d2.rel_error(e2) < 0.5, "round 2 decode off: {}", d2.rel_error(e2));
+        }
+    }
+
+    #[test]
+    fn abandoned_rounds_settle_their_accounting() {
+        let mut master = Master::from_config(base_cfg(SchemeKind::Spacdc)).unwrap();
+        let x = Matrix::ones(12, 4);
+        let h = master.submit(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
+        master.abandon(h);
+        // The abandoned round's results now land through the stale path;
+        // the next full round must still work and count them late.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let out = master.run(CodedTask::block_map(WorkerOp::Identity, x)).unwrap();
+        assert_eq!(out.blocks.len(), 3);
+        assert!(master.metrics().get(names::RESULTS_LATE) > 0);
     }
 
     #[test]
@@ -450,12 +568,12 @@ mod tests {
         let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
         let mut rng = rng_from_seed(5);
         let x = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
-        master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+        master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
         assert!(tap.count() > 0);
         // Reconstruct what the shares would be and check decorrelation.
         let params = CodeParams::new(12, 3, 2);
         let scheme = crate::coding::Spacdc::new(params);
-        let enc = scheme.encode(&x, 1, &mut rng_from_seed(999)).unwrap();
+        let enc = scheme.encode_blocks(&x, 1, &mut rng_from_seed(999)).unwrap();
         let corr = tap.downlink_correlation(&enc.shares);
         assert!(corr < 0.2, "wire payloads correlate with shares: {corr}");
     }
@@ -469,11 +587,11 @@ mod tests {
         let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
         let mut rng = rng_from_seed(6);
         let x = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
-        master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+        master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
         // BACC encode is deterministic → the true shares are exactly
         // reproducible, and the plaintext wire bytes must match them.
         let scheme = crate::coding::Bacc::new(CodeParams::new(12, 3, 0));
-        let enc = scheme.encode(&x, 1, &mut rng_from_seed(0)).unwrap();
+        let enc = scheme.encode_blocks(&x, 1, &mut rng_from_seed(0)).unwrap();
         let corr = tap.downlink_correlation(&enc.shares);
         assert!(corr > 0.5, "plaintext transport should leak: {corr}");
     }
@@ -484,7 +602,7 @@ mod tests {
         let mut rng = rng_from_seed(7);
         let x = Matrix::random_gaussian(12, 4, 0.0, 1.0, &mut rng);
         for _ in 0..3 {
-            let out = master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+            let out = master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
             assert_eq!(out.blocks.len(), 3);
         }
         // Late results from earlier rounds may or may not have landed,

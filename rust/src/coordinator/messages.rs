@@ -33,6 +33,12 @@ impl WirePayload {
 }
 
 /// A work order for one worker in one round.
+///
+/// The payload vector carries one sealed operand per matrix in the
+/// worker's [`EncodedJob`](crate::coding::EncodedJob) slot — 1 for the
+/// row-partition schemes, 2 for MatDot's operand pairs — so every scheme
+/// shares this wire format. Orders from different rounds may interleave
+/// in a worker's queue; the round id routes each result back.
 #[derive(Clone, Debug)]
 pub struct WorkOrder {
     /// Monotone round id.

@@ -1,13 +1,19 @@
 //! The L3 coordinator: master/worker runtime implementing the paper's
 //! three-phase protocol (Fig. 1):
 //!
-//! 1. **Data process** — master encodes with the configured scheme,
-//!    seals every share with MEA-ECC (§IV), dispatches to workers.
+//! 1. **Data process** — master encodes a typed
+//!    [`CodedTask`](crate::coding::CodedTask) with the configured scheme,
+//!    seals every payload with MEA-ECC (§IV), dispatches to workers.
 //! 2. **Task computing** — worker threads decrypt, execute `f` through
 //!    the [`Executor`](crate::runtime::Executor) (PJRT artifact or native
 //!    kernel), encrypt the result, return it.
 //! 3. **Result recovering** — master collects until the scheme's wait
-//!    policy is satisfied, decrypts, decodes `{Yᵢ}`.
+//!    policy is satisfied, decrypts, decodes.
+//!
+//! One pipeline serves all eight schemes: [`Master::run`] executes a
+//! round synchronously, and [`Master::submit`] / [`Master::wait`] keep
+//! several rounds in flight at once (results are routed to their round
+//! by id, so rounds may complete out of order).
 //!
 //! Stragglers are injected per [`sim::DelayModel`](crate::sim::DelayModel);
 //! colluders and eavesdroppers observe through the [`sim`](crate::sim)
@@ -18,6 +24,6 @@ mod master;
 mod messages;
 mod pool;
 
-pub use master::{Master, MasterBuilder, RoundOutcome};
+pub use master::{Master, MasterBuilder, RoundHandle, RoundOutcome};
 pub use messages::{ResultMsg, WirePayload, WorkOrder};
 pub use pool::WorkerPool;

@@ -3,6 +3,12 @@
 //! simulate their service delay, decrypt, compute through the
 //! [`Executor`], re-encrypt, and push the result onto the shared return
 //! channel — the paper's "task computing" phase (§III-A step 2).
+//!
+//! Each worker drains its order queue in FIFO order, so when the master
+//! pipelines several rounds (`Master::submit` before `Master::wait`) the
+//! orders of round r+1 are already queued while round r computes — the
+//! overlap the `pipelining` bench measures. Results carry their round id
+//! and the master routes them back to the right in-flight round.
 
 use super::messages::{ResultMsg, WirePayload, WorkOrder};
 use crate::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc, Point};

@@ -9,13 +9,13 @@
 //! (Eq. (21)). Wall-clock, loss, and test accuracy are recorded per
 //! epoch; Figs. 3–4 are regenerated from these reports.
 
+use crate::coding::CodedTask;
 use crate::config::{SchemeKind, SystemConfig};
 use crate::coordinator::Master;
 use crate::dl::dataset::Dataset;
 use crate::dl::network::Network;
-use crate::matrix::{matmul, stack_rows, Matrix};
-use crate::runtime::{Executor, WorkerOp};
-use std::sync::Arc;
+use crate::matrix::{matmul, Matrix};
+use crate::runtime::Executor;
 use std::time::Instant;
 
 /// Trainer options.
@@ -175,22 +175,18 @@ pub fn train(opts: &TrainerOptions) -> anyhow::Result<TrainReport> {
 }
 
 /// The Eq. (23) product through the coded fabric:
-/// `H = Θᵀ·δ`, with Θᵀ row-partitioned into K blocks.
+/// `H = Θᵀ·δ`, expressed as one [`CodedTask::PairProduct`] so the same
+/// line serves all eight schemes — MatDot encodes both operands, the
+/// row-partition schemes encode Θᵀ and broadcast δ, and the decode
+/// returns the full stacked product either way.
 fn coded_backward_product(
     master: &mut Master,
     w: &Matrix,
     delta: &Matrix,
 ) -> anyhow::Result<Matrix> {
-    let wt = w.transpose();
-    if master.config().scheme == SchemeKind::MatDot {
-        let out = master.run_matmul(&wt, delta)?;
-        return Ok(out.blocks.into_iter().next().unwrap());
-    }
-    let op = WorkerOp::RightMul(Arc::new(delta.clone()));
-    let out = master.run_blockmap(op, &wt)?;
-    // Stack the per-block results, dropping row padding.
-    let spec = crate::matrix::PartitionSpec::new(wt.rows(), out.blocks.len());
-    Ok(stack_rows(&out.blocks, &spec))
+    let task = CodedTask::pair_product(w.transpose(), delta.clone());
+    let out = master.run(task)?;
+    Ok(out.blocks.into_iter().next().expect("pair product decodes to one matrix"))
 }
 
 #[cfg(test)]

@@ -139,7 +139,7 @@ impl<F: FieldElement> Curve<F> {
     /// §Perf optimization #1: the affine formulas spend one field
     /// inversion per point operation, which dominated the MEA-ECC seal
     /// cost; Jacobian coordinates defer to a single inversion at the end
-    /// (measured ~5× on the seal path, see EXPERIMENTS.md §Perf).
+    /// (measured ~5× on the seal path, see the `microbench` §Perf rows).
     pub fn mul_scalar(&self, k: &U256, p: &Point<F>) -> Point<F> {
         let (px, py) = match p {
             Point::Infinity => return Point::Infinity,

@@ -17,11 +17,19 @@
 //!   encode combination and the tiled Gram product, lowered inside the L2
 //!   functions.
 //!
+//! Every workload enters the system as a typed
+//! [`CodedTask`](coding::CodedTask) through one coordinator pipeline:
+//! [`Master::run`](coordinator::Master::run) for synchronous rounds, or
+//! [`Master::submit`](coordinator::Master::submit) /
+//! [`Master::wait`](coordinator::Master::wait) to keep several rounds in
+//! flight at once. All eight schemes — MatDot included — implement the
+//! task-level [`Scheme`](coding::Scheme) trait.
+//!
 //! The compiled artifacts are executed from Rust through the PJRT C API
 //! ([`runtime`]); Python never runs on the request path.
 //!
-//! See `DESIGN.md` for the system inventory and experiment index, and
-//! `EXPERIMENTS.md` for paper-vs-measured results.
+//! See `DESIGN.md` (repo root) for the system inventory, the task/job
+//! API, the faithfulness notes, and the experiment index.
 
 pub mod analysis;
 pub mod bench;

@@ -12,6 +12,7 @@
 
 use spacdc::analysis::CostModel;
 use spacdc::cli::{parse, usage, ArgSpec};
+use spacdc::coding::CodedTask;
 use spacdc::config::{SchemeKind, SystemConfig};
 use spacdc::coordinator::MasterBuilder;
 use spacdc::dl::{train, TrainerOptions};
@@ -83,7 +84,11 @@ fn main() -> anyhow::Result<()> {
 }
 
 /// Attach the PJRT runtime when artifacts exist and it is enabled.
-fn executor_for(cfg: &SystemConfig) -> Option<Executor> {
+///
+/// Returns the service together with the executor: the caller keeps the
+/// service alive for as long as the executor is in use, and dropping it
+/// joins the runtime thread cleanly (no `std::mem::forget` leak).
+fn executor_for(cfg: &SystemConfig) -> Option<(RuntimeService, Executor)> {
     if !cfg.use_pjrt {
         return None;
     }
@@ -92,10 +97,7 @@ fn executor_for(cfg: &SystemConfig) -> Option<Executor> {
         Ok(svc) => {
             let metrics = Arc::new(spacdc::metrics::MetricsRegistry::new());
             let handle = svc.handle();
-            // Leak the service so the runtime thread lives as long as the
-            // process (standard for a daemon-style runtime).
-            std::mem::forget(svc);
-            Some(Executor::with_runtime(handle, metrics))
+            Some((svc, Executor::with_runtime(handle, metrics)))
         }
         Err(e) => {
             eprintln!("note: PJRT runtime unavailable ({e}); using native kernels");
@@ -114,8 +116,9 @@ fn cmd_train(cfg: &SystemConfig) -> anyhow::Result<()> {
         cfg.partitions,
         cfg.dl.layers
     );
+    let runtime = executor_for(cfg);
     let mut opts = TrainerOptions::new(cfg.clone());
-    opts.executor = executor_for(cfg);
+    opts.executor = runtime.as_ref().map(|(_, e)| e.clone());
     let report = train(&opts)?;
     println!("epoch  loss      accuracy  wall(s)");
     for e in &report.epochs {
@@ -135,18 +138,22 @@ fn cmd_round(cfg: &SystemConfig, rows: usize, cols: usize) -> anyhow::Result<()>
         rows,
         cols
     );
+    let runtime = executor_for(cfg);
     let mut builder = MasterBuilder::new(cfg.clone());
-    if let Some(exec) = executor_for(cfg) {
-        builder = builder.executor(exec);
+    if let Some((_, exec)) = &runtime {
+        builder = builder.executor(exec.clone());
     }
     let mut master = builder.build()?;
     let mut rng = rng_from_seed(cfg.seed);
     let x = Matrix::random_gaussian(rows, cols, 0.0, 1.0, &mut rng);
-    let out = if cfg.scheme == SchemeKind::MatDot {
-        master.run_matmul(&x, &x.transpose())?
+    // One entry point for every scheme: MatDot runs the Gram as its
+    // native pair product; the row-partition schemes as a block map.
+    let task = if cfg.scheme == SchemeKind::MatDot {
+        CodedTask::pair_product(x.clone(), x.transpose())
     } else {
-        master.run_blockmap(WorkerOp::Gram, &x)?
+        CodedTask::block_map(WorkerOp::Gram, x.clone())
     };
+    let out = master.run(task)?;
     // Decode-quality report.
     if cfg.scheme == SchemeKind::MatDot {
         let err = out.blocks[0].rel_error(&gram(&x));
@@ -191,8 +198,7 @@ fn cmd_info(cfg: &SystemConfig) -> anyhow::Result<()> {
     println!("  comm → master   {:.3e}", costs.comm_to_master);
     println!("  worker compute  {:.3e}", costs.worker_compute);
     println!("  security {}   privacy {}", costs.protects_security, costs.protects_privacy);
-    if let Some(exec) = executor_for(cfg) {
-        let _ = exec;
+    if executor_for(cfg).is_some() {
         println!("\nPJRT runtime: available (artifacts loaded)");
     } else {
         println!("\nPJRT runtime: unavailable");

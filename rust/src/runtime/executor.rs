@@ -33,6 +33,14 @@ impl WorkerOp {
         }
     }
 
+    /// Number of wire operands the op consumes (2 only for pair ops).
+    pub fn operand_count(&self) -> usize {
+        match self {
+            WorkerOp::PairProduct => 2,
+            WorkerOp::Gram | WorkerOp::RightMul(_) | WorkerOp::Identity => 1,
+        }
+    }
+
     /// Short name for metrics/artifact keys.
     pub fn name(&self) -> &'static str {
         match self {
@@ -109,7 +117,7 @@ impl Executor {
                         return out;
                     }
                     Err(e) => {
-                        log::warn!("PJRT execute {key} failed ({e}); falling back to native");
+                        eprintln!("warning: PJRT execute {key} failed ({e}); falling back to native");
                     }
                 }
             }

@@ -3,10 +3,19 @@
 //! Interchange is HLO **text** (not serialized `HloModuleProto`): jax
 //! ≥ 0.5 emits protos with 64-bit instruction ids that xla_extension
 //! 0.5.1 rejects; the text parser reassigns ids and round-trips cleanly.
+//!
+//! The real engine needs the `xla` crate and is compiled only under the
+//! off-by-default `xla` cargo feature (this build environment has no
+//! registry access). Without it a stub engine with the same API reports
+//! every artifact as unavailable, so the [`Executor`](super::Executor)
+//! transparently falls back to the native kernels.
 
 use crate::matrix::Matrix;
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "xla")]
+use std::path::PathBuf;
 
 /// Canonical artifact key for an op + input shape, matching the names
 /// `python/compile/aot.py` writes into `artifacts/manifest.txt`.
@@ -25,6 +34,7 @@ pub fn artifact_key(op: &str, dims: &[usize]) -> String {
 }
 
 /// A compiled artifact plus its declared output shape.
+#[cfg(feature = "xla")]
 struct LoadedArtifact {
     exe: xla::PjRtLoadedExecutable,
     out_rows: usize,
@@ -35,11 +45,13 @@ struct LoadedArtifact {
 ///
 /// NOT `Send` (the client is `Rc`-based) — owned by the
 /// [`RuntimeService`](super::service::RuntimeService) thread.
+#[cfg(feature = "xla")]
 pub struct PjrtEngine {
     client: xla::PjRtClient,
     artifacts: HashMap<String, LoadedArtifact>,
 }
 
+#[cfg(feature = "xla")]
 impl PjrtEngine {
     /// Create an engine with an empty registry.
     pub fn new() -> anyhow::Result<Self> {
@@ -128,6 +140,59 @@ impl PjrtEngine {
     }
 }
 
+/// Stub engine used when the crate is built without the `xla` feature:
+/// construction fails (so [`RuntimeService::start`] reports PJRT as
+/// unavailable) and no artifact is ever available.
+///
+/// [`RuntimeService::start`]: super::service::RuntimeService::start
+#[cfg(not(feature = "xla"))]
+pub struct PjrtEngine {
+    _private: (),
+}
+
+#[cfg(not(feature = "xla"))]
+impl PjrtEngine {
+    /// Always fails: the engine needs the `xla` feature.
+    pub fn new() -> anyhow::Result<Self> {
+        anyhow::bail!("built without the `xla` feature; PJRT runtime unavailable")
+    }
+
+    /// Checks the manifest for a readable-diagnostics parity with the real
+    /// engine, then fails because the engine cannot be constructed.
+    pub fn load_dir(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = dir.join("manifest.txt");
+        std::fs::read_to_string(&manifest)
+            .map_err(|e| anyhow::anyhow!("cannot read {}: {e}", manifest.display()))?;
+        Self::new()
+    }
+
+    /// Always fails (no engine).
+    pub fn load_artifact(
+        &mut self,
+        key: &str,
+        _path: &Path,
+        _out_rows: usize,
+        _out_cols: usize,
+    ) -> anyhow::Result<()> {
+        anyhow::bail!("cannot load artifact {key}: built without the `xla` feature")
+    }
+
+    /// No artifacts are ever loaded.
+    pub fn keys(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    /// No artifacts are ever available.
+    pub fn has(&self, _key: &str) -> bool {
+        false
+    }
+
+    /// Always fails (no engine).
+    pub fn execute(&self, key: &str, _inputs: &[Matrix]) -> anyhow::Result<Matrix> {
+        anyhow::bail!("no artifact {key}: built without the `xla` feature")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,5 +213,6 @@ mod tests {
     }
 
     // Full PJRT execution against real artifacts is covered by
-    // rust/tests/pjrt_integration.rs (requires `make artifacts`).
+    // rust/tests/pjrt_integration.rs (requires `make artifacts` and the
+    // `xla` feature).
 }

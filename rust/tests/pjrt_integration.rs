@@ -12,6 +12,10 @@ use std::path::Path;
 use std::sync::Arc;
 
 fn artifacts_dir() -> Option<&'static Path> {
+    if !cfg!(feature = "xla") {
+        eprintln!("skipping: built without the `xla` feature (PJRT stub engine)");
+        return None;
+    }
     let dir = Path::new("artifacts");
     if dir.join("manifest.txt").exists() {
         Some(dir)

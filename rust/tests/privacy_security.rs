@@ -1,7 +1,7 @@
 //! Adversarial integration tests: the paper's security (§IV) and privacy
 //! (Theorems 2–3) claims exercised against live adversaries.
 
-use spacdc::coding::{CodeParams, Scheme, Spacdc};
+use spacdc::coding::{BlockCode, CodeParams, CodedTask, Spacdc};
 use spacdc::config::{SchemeKind, SystemConfig, TransportSecurity};
 use spacdc::coordinator::MasterBuilder;
 use spacdc::ecc::{secp256k1, sim_curve, KeyPair, MaskMode, MeaEcc};
@@ -31,10 +31,10 @@ fn eavesdropper_learns_nothing_under_mea_ecc() {
     let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
     let mut rng = rng_from_seed(1);
     let x = Matrix::random_gaussian(24, 16, 0.0, 1.0, &mut rng);
-    master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+    master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
 
     let scheme = spacdc::coding::Bacc::new(CodeParams::new(12, 3, 0));
-    let enc = scheme.encode(&x, 1, &mut rng_from_seed(0)).unwrap();
+    let enc = scheme.encode_blocks(&x, 1, &mut rng_from_seed(0)).unwrap();
     let corr = tap.downlink_correlation(&enc.shares);
     assert!(corr < 0.15, "sealed wire correlates with shares: {corr}");
     assert!(tap.count() >= 12 + 10, "tap should see both directions");
@@ -49,9 +49,9 @@ fn eavesdropper_reads_everything_in_plain_mode() {
     let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
     let mut rng = rng_from_seed(2);
     let x = Matrix::random_gaussian(24, 16, 0.0, 1.0, &mut rng);
-    master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+    master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
     let scheme = spacdc::coding::Bacc::new(CodeParams::new(12, 3, 0));
-    let enc = scheme.encode(&x, 1, &mut rng_from_seed(0)).unwrap();
+    let enc = scheme.encode_blocks(&x, 1, &mut rng_from_seed(0)).unwrap();
     let corr = tap.downlink_correlation(&enc.shares);
     assert!(corr > 0.95, "plain wire must match the shares: {corr}");
 }
@@ -64,7 +64,7 @@ fn collusion_pool_collects_only_member_shares_through_coordinator() {
     let mut master = MasterBuilder::new(cfg).collusion(Arc::clone(&coalition)).build().unwrap();
     let mut rng = rng_from_seed(3);
     let x = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
-    master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+    master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
     // The members see exactly their decrypted shares, nothing else.
     let gathered = coalition.gathered();
     let members: std::collections::BTreeSet<usize> =
@@ -86,7 +86,7 @@ fn colluder_leakage_drops_with_mask_amplitude() {
         let trials = 10;
         for _ in 0..trials {
             let x = Matrix::random_gaussian(12, 6, 0.0, 1.0, &mut rng);
-            let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+            let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
             let (blocks, _) = split_rows(&x, k);
             let (data_pos, _) = Spacdc::node_layout(k, t);
             let betas = scheme.betas();
@@ -148,10 +148,10 @@ fn sealed_result_path_hides_worker_outputs_too() {
     let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
     let mut rng = rng_from_seed(6);
     let x = Matrix::random_gaussian(24, 16, 0.0, 1.0, &mut rng);
-    master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+    master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
     // For the identity op the true uplink payloads are the shares.
     let scheme = spacdc::coding::Bacc::new(CodeParams::new(12, 3, 0));
-    let enc = scheme.encode(&x, 1, &mut rng_from_seed(0)).unwrap();
+    let enc = scheme.encode_blocks(&x, 1, &mut rng_from_seed(0)).unwrap();
     let mut worst: f64 = 0.0;
     for msg in tap.messages().iter().filter(|m| !m.downlink) {
         let r = &enc.shares[msg.worker];

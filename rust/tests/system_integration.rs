@@ -1,7 +1,8 @@
 //! Cross-module integration: coordinator + coding + ECC + sim working
-//! together across schemes, scenarios, and failure patterns.
+//! together across schemes, scenarios, and failure patterns — all through
+//! the unified `Master::run(CodedTask)` pipeline.
 
-use spacdc::coding::{CodeParams, MatDot, Scheme, Spacdc};
+use spacdc::coding::{BlockCode, CodeParams, CodedTask, MatDot, Spacdc};
 use spacdc::config::{SchemeKind, SystemConfig, TransportSecurity};
 use spacdc::coordinator::Master;
 use spacdc::dl::{train, TrainerOptions};
@@ -43,7 +44,7 @@ fn every_scheme_completes_a_linear_round() {
         }
         let mut master = Master::from_config(c).unwrap();
         let out = master
-            .run_blockmap(WorkerOp::RightMul(Arc::clone(&v)), &x)
+            .run(CodedTask::block_map(WorkerOp::RightMul(Arc::clone(&v)), x.clone()))
             .unwrap_or_else(|e| panic!("{scheme:?}: {e}"));
         assert!(!out.blocks.is_empty(), "{scheme:?}");
         // Exact schemes must be near-exact; approximate ones bounded.
@@ -71,7 +72,7 @@ fn matdot_end_to_end_with_sealed_transport() {
     let mut rng = rng_from_seed(2);
     let a = Matrix::random_gaussian(10, 12, 0.0, 1.0, &mut rng);
     let b = Matrix::random_gaussian(12, 10, 0.0, 1.0, &mut rng);
-    let out = master.run_matmul(&a, &b).unwrap();
+    let out = master.run(CodedTask::pair_product(a.clone(), b.clone())).unwrap();
     // MatDot decode solves a degree-(2K−2) Vandermonde system over f32
     // payloads; conditioning bounds accuracy at ~1e-2 for clustered
     // return subsets (see matdot.rs docs).
@@ -90,7 +91,7 @@ fn transport_modes_agree_on_decoded_output() {
         c.stragglers = 0; // flexible wait count = N ⇒ deterministic set
         c.transport = transport;
         let mut master = Master::from_config(c).unwrap();
-        master.run_blockmap(WorkerOp::Identity, &x).unwrap().blocks
+        master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap().blocks
     };
     let plain = run_with(TransportSecurity::Plain);
     let sealed = run_with(TransportSecurity::MeaEcc);
@@ -108,7 +109,7 @@ fn straggler_injection_delays_but_does_not_break_rounds() {
     let mut master = Master::from_config(c).unwrap();
     let mut rng = rng_from_seed(4);
     let x = Matrix::random_gaussian(32, 8, 0.0, 1.0, &mut rng);
-    let out = master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+    let out = master.run(CodedTask::block_map(WorkerOp::Identity, x)).unwrap();
     // Waited for N−S = 12 fast results; round should finish well before
     // a straggler's 40ms service time.
     assert_eq!(out.results_used, 12);
@@ -128,11 +129,11 @@ fn late_results_are_accounted() {
     let mut rng = rng_from_seed(5);
     let x = Matrix::random_gaussian(32, 8, 0.0, 1.0, &mut rng);
     for _ in 0..3 {
-        master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+        master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
     }
     // Let stragglers land, then trigger a drain with one more round.
     std::thread::sleep(std::time::Duration::from_millis(80));
-    master.run_blockmap(WorkerOp::Identity, &x).unwrap();
+    master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
     let late = master.metrics().get(names::RESULTS_LATE);
     assert!(late > 0, "straggler results should have been counted late");
 }
@@ -164,12 +165,12 @@ fn spacdc_decode_quality_improves_with_returns() {
     let scheme = Spacdc::new(params);
     let mut rng = rng_from_seed(6);
     let x = Matrix::random_gaussian(30, 10, 0.0, 1.0, &mut rng);
-    let enc = scheme.encode(&x, 1, &mut rng).unwrap();
+    let enc = scheme.encode_blocks(&x, 1, &mut rng).unwrap();
     let (blocks, spec) = split_rows(&x, 3);
     let err_at = |count: usize| -> f64 {
         let results: Vec<(usize, Matrix)> =
             (0..count).map(|i| (i, enc.shares[i].clone())).collect();
-        let decoded = scheme.decode(&enc.ctx, &results).unwrap();
+        let decoded = scheme.decode_blocks(&enc.ctx, &results).unwrap();
         stack_rows(&decoded, &spec).rel_error(&stack_rows(&blocks, &spec))
     };
     let e_full = err_at(24);
@@ -184,7 +185,7 @@ fn gram_round_through_coordinator_matches_direct_computation() {
     let mut master = Master::from_config(c).unwrap();
     let mut rng = rng_from_seed(7);
     let x = Matrix::random_gaussian(32, 16, 0.0, 1.0, &mut rng);
-    let out = master.run_blockmap(WorkerOp::Gram, &x).unwrap();
+    let out = master.run(CodedTask::block_map(WorkerOp::Gram, x.clone())).unwrap();
     let (blocks, _) = split_rows(&x, 4);
     for (d, b) in out.blocks.iter().zip(&blocks) {
         assert!(d.rel_error(&gram(b)) < 0.15);
@@ -197,15 +198,15 @@ fn matdot_pair_code_from_library_and_coordinator_agree() {
     let a = Matrix::random_gaussian(8, 9, 0.0, 1.0, &mut rng);
     let b = Matrix::random_gaussian(9, 8, 0.0, 1.0, &mut rng);
     // Library-level decode.
-    let code = MatDot::new(16, 4);
+    let code = MatDot::new(16, 4).unwrap();
     let enc = code.encode_pair(&a, &b).unwrap();
     let results: Vec<(usize, Matrix)> = (0..7)
         .map(|i| (i, MatDot::worker_compute(&enc.shares[i])))
         .collect();
-    let lib = code.decode(&enc, &results).unwrap();
+    let lib = code.decode_pair(&enc, &results).unwrap();
     // Coordinator-level decode (different return subset ⇒ agreement is
     // bounded by the Vandermonde conditioning, not bit-exact).
     let mut master = Master::from_config(cfg(SchemeKind::MatDot)).unwrap();
-    let coord = master.run_matmul(&a, &b).unwrap();
+    let coord = master.run(CodedTask::pair_product(a.clone(), b.clone())).unwrap();
     assert!(lib.rel_error(&coord.blocks[0]) < 0.05);
 }

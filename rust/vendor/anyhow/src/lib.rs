@@ -1,0 +1,130 @@
+//! A minimal, dependency-free subset of the `anyhow` API.
+//!
+//! The build environment for this repo has no crates.io access, so this
+//! vendored shim provides exactly the surface the crate uses: an opaque
+//! [`Error`] convertible from any `std::error::Error`, the [`Result`]
+//! alias, and the `anyhow!` / `bail!` / `ensure!` macros. Source-chaining
+//! and backtraces are intentionally out of scope.
+
+use std::fmt;
+
+/// An opaque, type-erased error.
+///
+/// Deliberately does **not** implement `std::error::Error` so the blanket
+/// `From<E: std::error::Error>` below does not overlap with the identity
+/// `From` impl (the same design as the real `anyhow`).
+pub struct Error(Box<dyn std::error::Error + Send + Sync + 'static>);
+
+/// A plain-message error (what `anyhow!("...")` produces).
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for MessageError {}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error(Box::new(MessageError(message.to_string())))
+    }
+
+    /// The underlying boxed error.
+    pub fn inner(&self) -> &(dyn std::error::Error + Send + Sync + 'static) {
+        &*self.0
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // `fn main() -> anyhow::Result<()>` prints through Debug; show the
+        // human-readable message there too.
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error(Box::new(e))
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message, a displayable value, or a
+/// format string with arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built by [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("broke: {}", 42)
+    }
+
+    #[test]
+    fn macros_and_conversions() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke: 42");
+        let io: Error = std::io::Error::new(std::io::ErrorKind::Other, "disk").into();
+        assert_eq!(io.to_string(), "disk");
+        let from_string = anyhow!(String::from("plain"));
+        assert_eq!(from_string.to_string(), "plain");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1).unwrap_err().to_string().contains("-1"));
+    }
+}
