@@ -78,7 +78,7 @@ fn main() -> anyhow::Result<()> {
     // --- SPACDC-DL ---------------------------------------------------
     let mut cfg = base_cfg();
     cfg.scheme = SchemeKind::Spacdc;
-    cfg.transport = TransportSecurity::MeaEcc;
+    cfg.security = TransportSecurity::MeaEcc;
     println!(
         "\nSPACDC-DL: {} parameters, N={}, S={}, T={}, K={}",
         spacdc::dl::Network::new(&cfg.dl.layers, 0).parameter_count(),
@@ -102,7 +102,7 @@ fn main() -> anyhow::Result<()> {
     // --- CONV-DL baseline ---------------------------------------------
     let mut conv_cfg = base_cfg();
     conv_cfg.scheme = SchemeKind::Uncoded;
-    conv_cfg.transport = TransportSecurity::Plain;
+    conv_cfg.security = TransportSecurity::Plain;
     println!("\nCONV-DL baseline (same workload, waits for all workers):");
     let conv_opts = TrainerOptions::new(conv_cfg);
     let conv_report = train(&conv_opts)?;

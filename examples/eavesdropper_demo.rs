@@ -16,14 +16,14 @@ use spacdc::runtime::WorkerOp;
 use spacdc::sim::EavesdropLog;
 use std::sync::Arc;
 
-fn eavesdrop_run(transport: TransportSecurity) -> anyhow::Result<(f64, usize)> {
+fn eavesdrop_run(security: TransportSecurity) -> anyhow::Result<(f64, usize)> {
     let mut cfg = SystemConfig::default();
     cfg.workers = 12;
     cfg.partitions = 3;
     cfg.colluders = 2;
     cfg.stragglers = 2;
     cfg.scheme = SchemeKind::Bacc; // deterministic encode → reconstructible
-    cfg.transport = transport;
+    cfg.security = security;
     cfg.delay.base_service_s = 0.0;
     cfg.seed = 0xEA7;
     let tap = Arc::new(EavesdropLog::new());

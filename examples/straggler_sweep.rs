@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
             let mut cfg = SystemConfig::default();
             cfg.scheme = scheme;
             cfg.stragglers = s;
-            cfg.transport = if scheme == SchemeKind::Spacdc {
+            cfg.security = if scheme == SchemeKind::Spacdc {
                 TransportSecurity::MeaEcc
             } else {
                 TransportSecurity::Plain

@@ -24,7 +24,7 @@ fn scenario_cfg(scheme: SchemeKind, stragglers: usize) -> SystemConfig {
     cfg.scheme = scheme;
     // Baselines run unencrypted (as in the paper); SPACDC pays for
     // MEA-ECC and still wins.
-    cfg.transport = if scheme == SchemeKind::Spacdc {
+    cfg.security = if scheme == SchemeKind::Spacdc {
         TransportSecurity::MeaEcc
     } else {
         TransportSecurity::Plain

@@ -17,7 +17,7 @@ fn cfg_for(scheme: SchemeKind, stragglers: usize) -> SystemConfig {
     cfg.stragglers = stragglers;
     cfg.partitions = 4;
     cfg.scheme = scheme;
-    cfg.transport = if scheme == SchemeKind::Spacdc {
+    cfg.security = if scheme == SchemeKind::Spacdc {
         TransportSecurity::MeaEcc
     } else {
         TransportSecurity::Plain

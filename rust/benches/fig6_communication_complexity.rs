@@ -1,9 +1,16 @@
 //! Fig. 6 — communication complexity vs m (|𝓕| = 10, K = 30,
 //! m = 1..1000).
 //!
-//! Analytic curves from Table II plus *counted symbols* from real
-//! coordinator rounds (the metrics registry records every f32 crossing a
-//! master↔worker link) at a reduced grid.
+//! Three views, in decreasing abstraction:
+//!
+//! 1. analytic worker→master **symbol** curves from Table II;
+//! 2. **counted symbols** from real coordinator rounds (the metrics
+//!    registry records every f32 crossing a master↔worker link);
+//! 3. **counted bytes** from the transport itself (`comm.bytes_tx` /
+//!    `comm.bytes_rx`): every frame is serialized, so this is the honest
+//!    wire load including framing, shapes, ops, and checksums — and it
+//!    is identical whether the fabric is in-process channels or real
+//!    localhost TCP sockets (the parity rows at the bottom).
 //!
 //! Paper shape: SPACDC ≈ BACC lowest; MatDot's worker→master upload
 //! dominates everything (each worker returns a full m×m product).
@@ -11,7 +18,7 @@
 use spacdc::analysis::CostModel;
 use spacdc::bench::{banner, print_series};
 use spacdc::coding::CodedTask;
-use spacdc::config::{SchemeKind, SystemConfig, TransportSecurity};
+use spacdc::config::{SchemeKind, SystemConfig, TransportKind, TransportSecurity};
 use spacdc::coordinator::MasterBuilder;
 use spacdc::matrix::Matrix;
 use spacdc::metrics::names;
@@ -23,14 +30,22 @@ const K: usize = 30;
 const MS_ANALYTIC: [usize; 5] = [100, 250, 500, 750, 1000];
 const MS_MEASURED: [usize; 3] = [120, 360, 600];
 
-fn measured_symbols(kind: SchemeKind, m: usize) -> Option<(f64, f64)> {
+struct Measured {
+    symbols_down: f64,
+    symbols_up: f64,
+    bytes_tx: f64,
+    bytes_rx: f64,
+}
+
+fn measured_round(kind: SchemeKind, m: usize, transport: TransportKind) -> Option<Measured> {
     let mut cfg = SystemConfig::default();
     cfg.workers = 36;
     cfg.partitions = if kind == SchemeKind::MatDot { 6 } else { K.min(m) };
     cfg.colluders = 2;
     cfg.stragglers = 4;
     cfg.scheme = kind;
-    cfg.transport = TransportSecurity::Plain; // count raw symbols
+    cfg.transport = transport;
+    cfg.security = TransportSecurity::Plain; // count raw symbols
     cfg.delay.base_service_s = 0.0;
     cfg.seed = 0xF166 + m as u64;
     let mut master = MasterBuilder::new(cfg).build().ok()?;
@@ -42,10 +57,13 @@ fn measured_symbols(kind: SchemeKind, m: usize) -> Option<(f64, f64)> {
         CodedTask::block_map(WorkerOp::Gram, x)
     };
     master.run(task).ok()?;
-    Some((
-        master.metrics().get(names::SYMBOLS_TO_WORKERS) as f64,
-        master.metrics().get(names::SYMBOLS_TO_MASTER) as f64,
-    ))
+    let metrics = master.metrics();
+    Some(Measured {
+        symbols_down: metrics.get(names::SYMBOLS_TO_WORKERS) as f64,
+        symbols_up: metrics.get(names::SYMBOLS_TO_MASTER) as f64,
+        bytes_tx: metrics.get(names::BYTES_TX) as f64,
+        bytes_rx: metrics.get(names::BYTES_RX) as f64,
+    })
 }
 
 fn main() {
@@ -69,21 +87,44 @@ fn main() {
         print_series(kind.name(), &series);
     }
 
-    println!("\ncounted symbols from live rounds (gram task, d=64):");
-    println!("{:<12} {:>8} {:>16} {:>16}", "scheme", "m", "→workers", "→master");
-    for kind in [SchemeKind::Spacdc, SchemeKind::Bacc, SchemeKind::Mds, SchemeKind::MatDot] {
+    println!("\ncounted from live rounds (gram task, d=64): symbols and transport bytes:");
+    println!(
+        "{:<12} {:>6} {:>14} {:>14} {:>14} {:>14}",
+        "scheme", "m", "sym→workers", "sym→master", "bytes_tx", "bytes_rx"
+    );
+    for kind in [SchemeKind::Spacdc, SchemeKind::Bacc, SchemeKind::MatDot] {
         for &m in &MS_MEASURED {
-            // MDS can't run a degree-2 gram; skip gracefully.
-            if kind == SchemeKind::Mds {
-                continue;
-            }
-            if let Some((down, up)) = measured_symbols(kind, m) {
-                println!("{:<12} {:>8} {:>16.0} {:>16.0}", kind.name(), m, down, up);
+            if let Some(r) = measured_round(kind, m, TransportKind::InProc) {
+                println!(
+                    "{:<12} {:>6} {:>14.0} {:>14.0} {:>14.0} {:>14.0}",
+                    kind.name(),
+                    m,
+                    r.symbols_down,
+                    r.symbols_up,
+                    r.bytes_tx,
+                    r.bytes_rx
+                );
             }
         }
     }
+
+    println!("\ntransport parity — identical frames over channels and TCP sockets:");
+    println!("{:<12} {:>6} {:>14} {:>14}", "transport", "m", "bytes_tx", "bytes_rx");
+    for transport in [TransportKind::InProc, TransportKind::Tcp] {
+        if let Some(r) = measured_round(SchemeKind::Spacdc, 120, transport) {
+            println!(
+                "{:<12} {:>6} {:>14.0} {:>14.0}",
+                transport.name(),
+                120,
+                r.bytes_tx,
+                r.bytes_rx
+            );
+        }
+    }
+
     println!(
         "\npaper shape: SPACDC ≈ BACC lowest upload; MatDot worst \
-         (full m×m per worker)."
+         (full m×m per worker). bytes_tx ≈ 4·symbols + framing; \
+         bytes_rx counts exactly the results each decode consumed."
     );
 }

@@ -87,6 +87,56 @@ pub enum TransportSecurity {
     MeaEcc,
 }
 
+impl TransportSecurity {
+    /// Parse from the CLI/config token.
+    pub fn from_str_token(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "plain" => Self::Plain,
+            "mea-ecc" | "mea_ecc" | "ecc" => Self::MeaEcc,
+            _ => return None,
+        })
+    }
+
+    /// Canonical display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Plain => "plain",
+            Self::MeaEcc => "mea-ecc",
+        }
+    }
+}
+
+/// Which fabric carries the framed wire bytes between master and
+/// workers (`rust/src/transport/`). Both fabrics move the identical
+/// serialized frames; TCP additionally crosses real localhost sockets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
+pub enum TransportKind {
+    /// Per-worker in-process channels (default).
+    #[default]
+    InProc,
+    /// Localhost TCP sockets, one connection per worker.
+    Tcp,
+}
+
+impl TransportKind {
+    /// Parse from the CLI/config token.
+    pub fn from_str_token(s: &str) -> Option<Self> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "inproc" | "in-proc" | "channels" => Self::InProc,
+            "tcp" | "sockets" => Self::Tcp,
+            _ => return None,
+        })
+    }
+
+    /// Canonical display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::InProc => "inproc",
+            Self::Tcp => "tcp",
+        }
+    }
+}
+
 /// Straggler delay injection, mirroring the paper's `sleep()` method.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DelayConfig {
@@ -149,8 +199,14 @@ pub struct SystemConfig {
     pub partitions: usize,
     /// Coding scheme.
     pub scheme: SchemeKind,
-    /// Transport security.
-    pub transport: TransportSecurity,
+    /// Which fabric carries the framed bytes (in-proc channels or TCP).
+    pub transport: TransportKind,
+    /// Transport security (plaintext vs MEA-ECC sealed frames).
+    pub security: TransportSecurity,
+    /// Wall-clock budget for collecting one round's results, in seconds.
+    /// A round that misses its deadline is abandoned with a typed error
+    /// and its late results are counted as wasted work.
+    pub round_deadline_s: f64,
     /// Delay injection.
     pub delay: DelayConfig,
     /// DL hyper-parameters.
@@ -173,7 +229,9 @@ impl Default for SystemConfig {
             colluders: 3,
             partitions: 4,
             scheme: SchemeKind::Spacdc,
-            transport: TransportSecurity::MeaEcc,
+            transport: TransportKind::InProc,
+            security: TransportSecurity::MeaEcc,
+            round_deadline_s: 60.0,
             delay: DelayConfig::default(),
             dl: DlConfig::default(),
             seed: 0xC0DE,
@@ -236,6 +294,9 @@ impl SystemConfig {
                 self.workers
             ));
         }
+        if !(self.round_deadline_s > 0.0) {
+            return err("round_deadline_s must be positive".into());
+        }
         if self.dl.layers.len() < 2 {
             return err("DL network needs ≥ 2 layers".into());
         }
@@ -279,11 +340,21 @@ impl SystemConfig {
                     SchemeKind::from_str_token(value).ok_or_else(|| bad(key, value))?
             }
             "cluster.transport" | "transport" => {
-                self.transport = match value {
-                    "plain" => TransportSecurity::Plain,
-                    "mea-ecc" | "mea_ecc" | "ecc" => TransportSecurity::MeaEcc,
-                    _ => return Err(bad(key, value)),
+                // This key historically carried the security knob; keep
+                // accepting that vocabulary so old config files load.
+                if let Some(sec) = TransportSecurity::from_str_token(value) {
+                    self.security = sec;
+                } else {
+                    self.transport =
+                        TransportKind::from_str_token(value).ok_or_else(|| bad(key, value))?
                 }
+            }
+            "cluster.security" | "security" => {
+                self.security =
+                    TransportSecurity::from_str_token(value).ok_or_else(|| bad(key, value))?
+            }
+            "cluster.round_deadline_s" | "round_deadline_s" => {
+                self.round_deadline_s = value.parse().map_err(|_| bad(key, value))?
             }
             "delay.straggler_factor" => {
                 self.delay.straggler_factor = value.parse().map_err(|_| bad(key, value))?
@@ -358,6 +429,38 @@ mod tests {
         assert_eq!(c.workers, 8);
         assert_eq!(c.scheme, SchemeKind::Bacc);
         assert_eq!(c.dl.layers, vec![784, 100, 10]);
+    }
+
+    #[test]
+    fn transport_key_selects_the_fabric() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.transport, TransportKind::InProc);
+        c.apply_kv("transport", "tcp").unwrap();
+        assert_eq!(c.transport, TransportKind::Tcp);
+        c.apply_kv("cluster.transport", "inproc").unwrap();
+        assert_eq!(c.transport, TransportKind::InProc);
+        assert!(c.apply_kv("transport", "carrier-pigeon").is_err());
+    }
+
+    #[test]
+    fn legacy_transport_values_still_set_security() {
+        // The `transport` key carried the security knob before the
+        // fabric existed; old config files must keep loading.
+        let mut c = SystemConfig::default();
+        c.apply_kv("transport", "plain").unwrap();
+        assert_eq!(c.security, TransportSecurity::Plain);
+        assert_eq!(c.transport, TransportKind::InProc, "fabric untouched");
+        c.apply_kv("security", "mea-ecc").unwrap();
+        assert_eq!(c.security, TransportSecurity::MeaEcc);
+    }
+
+    #[test]
+    fn round_deadline_is_configurable_and_validated() {
+        let mut c = SystemConfig::default();
+        c.apply_kv("round_deadline_s", "2.5").unwrap();
+        assert_eq!(c.round_deadline_s, 2.5);
+        c.round_deadline_s = 0.0;
+        assert!(c.validate().is_err());
     }
 
     #[test]

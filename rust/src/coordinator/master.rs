@@ -4,13 +4,28 @@
 //! One pipeline serves every scheme and task shape: [`Master::run`]
 //! executes a typed [`CodedTask`] synchronously, and the split-phase
 //! [`Master::submit`] / [`Master::wait`] pair keeps several rounds in
-//! flight against the worker pool at once — encode/seal/dispatch of
-//! round r+1 overlaps the workers' compute of round r (see the
-//! `pipelining` bench).
+//! flight against the worker pool at once.
+//!
+//! Results come home through a dedicated background *collector thread*:
+//! it drains the transport's inbound frame channel, deserializes and
+//! unseals each result, and routes it to its in-flight round through the
+//! shared [`RoundRegistry`](super::registry::RoundRegistry). The submit
+//! path therefore never competes with result intake — encode/seal/
+//! dispatch of round r+1 overlaps both the workers' compute *and* the
+//! unsealing of round r's results (see the `pipelining` bench) — and
+//! every round gets its own collection deadline
+//! (`config.round_deadline_s`).
+//!
+//! Failure semantics: a worker whose link is down is remembered as dead
+//! and skipped — it degrades into a permanent straggler that the wait
+//! policy rides out (or a typed error when an exact-threshold scheme can
+//! no longer be satisfied). Dropping a [`RoundHandle`] without waiting
+//! abandons its round, so in-flight buffers can never leak.
 
-use super::messages::{ResultMsg, WirePayload, WorkOrder};
+use super::messages::{SealedPayload, WirePayload, WorkOrder};
 use super::pool::WorkerPool;
-use crate::coding::{make_scheme, CodeParams, CodedTask, DecodeCtx, Scheme, Threshold};
+use super::registry::{RoundRegistry, WaitError};
+use crate::coding::{make_scheme, CodeParams, CodedTask, Scheme, Threshold};
 use crate::config::{SystemConfig, TransportSecurity};
 use crate::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc};
 use crate::field::Fp61;
@@ -19,8 +34,10 @@ use crate::metrics::{names, MetricsRegistry};
 use crate::rng::{derive_seed, rng_from_seed, Rng};
 use crate::runtime::Executor;
 use crate::sim::{CollusionPool, DelayModel, EavesdropLog};
-use std::collections::HashMap;
-use std::sync::Arc;
+use crate::wire;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Weak};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Result of one coded round.
@@ -40,12 +57,16 @@ pub struct RoundOutcome {
 /// neither `Clone` nor constructible outside this module, so every
 /// submitted round is waited on at most once.
 ///
-/// Dropping a handle without waiting leaves the round's result buffer
-/// allocated until the master is dropped — abandon rounds you will not
-/// wait on.
+/// Dropping a handle without waiting *abandons* its round: the buffered
+/// results are counted as wasted work and the in-flight buffer is freed
+/// immediately (not when the master drops). The explicit
+/// [`Master::abandon`] does the same and reads better when the intent is
+/// deliberate.
 #[derive(Debug)]
 pub struct RoundHandle {
     round: u64,
+    registry: Weak<RoundRegistry>,
+    defused: bool,
 }
 
 impl RoundHandle {
@@ -53,16 +74,22 @@ impl RoundHandle {
     pub fn round_id(&self) -> u64 {
         self.round
     }
+
+    /// Consume the handle without triggering the drop-abandon.
+    fn defuse(mut self) -> u64 {
+        self.defused = true;
+        self.round
+    }
 }
 
-/// Book-keeping for a submitted-but-undecoded round.
-struct InflightRound {
-    ctx: DecodeCtx,
-    results: Vec<(usize, Matrix)>,
-    threshold: Threshold,
-    wait_for: usize,
-    dispatched: usize,
-    started: Instant,
+impl Drop for RoundHandle {
+    fn drop(&mut self) {
+        if !self.defused {
+            if let Some(registry) = self.registry.upgrade() {
+                registry.abandon(self.round);
+            }
+        }
+    }
 }
 
 /// Builder for [`Master`].
@@ -80,7 +107,7 @@ impl MasterBuilder {
         Self { cfg, executor: None, eavesdropper: None, collusion: None, metrics: None }
     }
 
-    /// Attach an executor (default: native with fresh metrics).
+    /// Attach an executor (default: native with the master's metrics).
     pub fn executor(mut self, e: Executor) -> Self {
         self.executor = Some(e);
         self
@@ -104,7 +131,8 @@ impl MasterBuilder {
         self
     }
 
-    /// Spawn the worker pool and build the master.
+    /// Wire the transport, spawn the worker pool and the collector
+    /// thread, and build the master.
     pub fn build(self) -> anyhow::Result<Master> {
         self.cfg.validate().map_err(|e| anyhow::anyhow!(e.to_string()))?;
         let metrics = self.metrics.unwrap_or_else(|| Arc::new(MetricsRegistry::new()));
@@ -113,13 +141,16 @@ impl MasterBuilder {
         let curve = sim_curve();
         let mut rng = rng_from_seed(derive_seed(self.cfg.seed, 0x3A57E2));
         let keys = KeyPair::generate(&curve, &mut rng);
-        let pool = WorkerPool::spawn(
+        let (pool, inbound) = WorkerPool::spawn(
+            self.cfg.transport,
             self.cfg.workers,
             keys.public(),
             executor,
             self.collusion.clone(),
             self.cfg.seed,
-        );
+            Arc::clone(&metrics),
+        )
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
         let params =
             CodeParams::new(self.cfg.workers, self.cfg.partitions, self.cfg.colluders);
         // Total over every SchemeKind — MatDot included; no Option field,
@@ -130,6 +161,15 @@ impl MasterBuilder {
             self.cfg.stragglers,
             self.cfg.delay,
             self.cfg.seed,
+        );
+        let registry = Arc::new(RoundRegistry::new(Arc::clone(&metrics)));
+        let collector = spawn_collector(
+            inbound,
+            Arc::clone(&registry),
+            Arc::clone(&metrics),
+            MeaEcc::new(curve, MaskMode::Keystream),
+            keys.clone(),
+            self.eavesdropper.clone(),
         );
         Ok(Master {
             cfg: self.cfg,
@@ -142,10 +182,71 @@ impl MasterBuilder {
             delays,
             round: 0,
             rng,
-            inflight: HashMap::new(),
-            outstanding: HashMap::new(),
+            registry,
+            collector: Some(collector),
+            dead: Vec::new(),
         })
     }
+}
+
+/// The background result collector: transport frames → decoded, unsealed
+/// results → the round registry. One per master; exits when the inbound
+/// channel disconnects (pool shutdown).
+fn spawn_collector(
+    inbound: Receiver<Vec<u8>>,
+    registry: Arc<RoundRegistry>,
+    metrics: Arc<MetricsRegistry>,
+    mea: MeaEcc<Fp61>,
+    keys: KeyPair<Fp61>,
+    tap: Option<Arc<EavesdropLog>>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("collector".into())
+        .spawn(move || {
+            while let Ok(frame) = inbound.recv() {
+                let msg = match wire::decode_result(&frame) {
+                    Ok(m) => m,
+                    Err(e) => {
+                        metrics.inc(names::WIRE_ERRORS);
+                        eprintln!("collector: dropping undecodable frame: {e}");
+                        continue;
+                    }
+                };
+                // Results that will not be buffered (late or spilled) are
+                // settled without unsealing: no wasted crypto, and the
+                // comm counters stay a deterministic function of the
+                // decode inputs (they are credited at decode time in
+                // `Master::wait`).
+                if !registry.would_accept(msg.round) {
+                    registry.note_rejected(msg.round);
+                    continue;
+                }
+                let result = match &msg.payload {
+                    WirePayload::Plain(m) => m.clone(),
+                    WirePayload::Sealed(s) => match s.open(&mea, &keys) {
+                        Ok(m) => m,
+                        Err(e) => {
+                            metrics.inc(names::WIRE_ERRORS);
+                            eprintln!("collector: sealed result failed to open: {e}");
+                            continue;
+                        }
+                    },
+                };
+                let buffered = registry.deliver(
+                    msg.round,
+                    msg.worker,
+                    result,
+                    msg.payload.symbols() as u64,
+                    frame.len() as u64,
+                );
+                if buffered {
+                    if let Some(tap) = &tap {
+                        tap.capture(msg.worker, false, &msg.payload.wire_matrix());
+                    }
+                }
+            }
+        })
+        .expect("spawn collector")
 }
 
 /// The master node.
@@ -160,10 +261,11 @@ pub struct Master {
     delays: DelayModel,
     round: u64,
     rng: Rng,
-    /// Rounds submitted but not yet waited on, with buffered results.
-    inflight: HashMap<u64, InflightRound>,
-    /// Completed round → results still in flight (late-arrival accounting).
-    outstanding: HashMap<u64, usize>,
+    /// Shared with the collector thread and every live round handle.
+    registry: Arc<RoundRegistry>,
+    collector: Option<JoinHandle<()>>,
+    /// Workers whose links died (permanent stragglers), by index.
+    dead: Vec<usize>,
 }
 
 impl Master {
@@ -192,6 +294,12 @@ impl Master {
         self.delays.straggler_set()
     }
 
+    /// Workers whose links have died so far (treated as permanent
+    /// stragglers).
+    pub fn dead_workers(&self) -> &[usize] {
+        &self.dead
+    }
+
     /// Run one coded round synchronously: encode `task` with the
     /// configured scheme, dispatch, collect, decode.
     pub fn run(&mut self, task: CodedTask) -> anyhow::Result<RoundOutcome> {
@@ -200,9 +308,9 @@ impl Master {
     }
 
     /// Phase 1+2 of a round: encode `task`, seal the per-worker payloads,
-    /// and dispatch the work orders. Returns immediately with a
-    /// [`RoundHandle`]; several rounds may be in flight at once, and
-    /// [`Master::wait`] routes interleaved results to the right round.
+    /// and dispatch the framed work orders. Returns immediately with a
+    /// [`RoundHandle`]; several rounds may be in flight at once — the
+    /// collector thread routes interleaved results to the right round.
     pub fn submit(&mut self, task: CodedTask) -> anyhow::Result<RoundHandle> {
         if !self.scheme.supports(&task) {
             anyhow::bail!(
@@ -211,9 +319,6 @@ impl Master {
                 task.name()
             );
         }
-        // Absorb results that landed since the last call (late arrivals
-        // of completed rounds, early arrivals of in-flight ones).
-        self.drain_pending();
         self.round += 1;
         let round = self.round;
         let started = Instant::now();
@@ -224,94 +329,115 @@ impl Master {
             self.scheme.encode(&task, &mut self.rng)?
         };
         let threshold = self.scheme.threshold(&task);
-        let wait_for = self.wait_count(threshold);
-        let dispatched = job.payloads.len();
+        let crate::coding::EncodedJob { payloads: shares, op, ctx } = job;
 
-        // Seal and dispatch every worker's operand payloads.
+        // Open the round *before* any order goes out so the collector
+        // can never race the registration.
+        self.registry.register(round, ctx, threshold, started);
+
+        // Seal and dispatch every worker's operand payloads. A dead link
+        // is a typed condition, not a panic: the worker becomes a
+        // permanent straggler and the round proceeds without it.
+        let mut dispatched = 0usize;
         {
             let metrics = Arc::clone(&self.metrics);
             let _t = metrics.time_phase("phase.dispatch");
-            for (w, operands) in job.payloads.iter().enumerate() {
+            for (w, operands) in shares.iter().enumerate() {
+                if self.dead.contains(&w) {
+                    continue;
+                }
                 let payloads: Vec<WirePayload> =
                     operands.iter().map(|m| self.seal_for(w, m)).collect();
-                for p in &payloads {
-                    self.capture(w, true, p);
-                    self.metrics.add(names::SYMBOLS_TO_WORKERS, p.symbols() as u64);
-                }
-                self.metrics.inc(names::TASKS_DISPATCHED);
-                self.pool.dispatch(WorkOrder {
+                let order = WorkOrder {
                     round,
                     worker: w,
-                    op: job.op.clone(),
+                    op: op.clone(),
                     payloads,
                     delay: self.delays.service_delay(w, round),
-                });
+                };
+                match self.pool.dispatch(&order) {
+                    Ok(()) => {
+                        dispatched += 1;
+                        self.metrics.inc(names::TASKS_DISPATCHED);
+                        for p in &order.payloads {
+                            self.capture(w, true, p);
+                            self.metrics.add(names::SYMBOLS_TO_WORKERS, p.symbols() as u64);
+                        }
+                    }
+                    Err(e) => {
+                        eprintln!("master: worker {w} marked dead: {e}");
+                        self.dead.push(w);
+                    }
+                }
             }
         }
 
-        self.inflight.insert(
+        // The wait policy over the orders that actually went out.
+        let wait_for = match threshold {
+            Threshold::Exact(k) => {
+                if dispatched < k {
+                    self.registry.abandon(round);
+                    anyhow::bail!(
+                        "round {round}: only {dispatched} live workers but {} needs exactly {k}",
+                        self.scheme.kind().name()
+                    );
+                }
+                k
+            }
+            Threshold::Flexible { min } => {
+                if dispatched < min {
+                    self.registry.abandon(round);
+                    anyhow::bail!(
+                        "round {round}: only {dispatched} live workers, below the flexible minimum {min}"
+                    );
+                }
+                // Paper's experimental policy: decode when the fast
+                // workers are in, without waiting out the stragglers.
+                (self.cfg.workers - self.cfg.stragglers).max(min).min(dispatched)
+            }
+        };
+        self.registry.finalize(round, wait_for, dispatched);
+        Ok(RoundHandle {
             round,
-            InflightRound {
-                ctx: job.ctx,
-                results: Vec::new(),
-                threshold,
-                wait_for,
-                dispatched,
-                started,
-            },
-        );
-        Ok(RoundHandle { round })
+            registry: Arc::downgrade(&self.registry),
+            defused: false,
+        })
     }
 
-    /// Phase 3 of a round: collect results until the scheme's wait policy
-    /// is satisfied, then decode. Results belonging to *other* in-flight
-    /// rounds are buffered for their own `wait`, so rounds may be waited
-    /// on in any order.
+    /// Phase 3 of a round: block until the scheme's wait policy is
+    /// satisfied (the collector buffers results for *all* in-flight
+    /// rounds concurrently, so rounds may be waited on in any order),
+    /// then decode. A round that misses its `round_deadline_s` budget is
+    /// abandoned with a typed error.
     pub fn wait(&mut self, handle: RoundHandle) -> anyhow::Result<RoundOutcome> {
-        let round = handle.round;
-        anyhow::ensure!(
-            self.inflight.contains_key(&round),
-            "round {round} is not in flight"
-        );
-        {
+        let round = handle.defuse();
+        let deadline = Instant::now() + Duration::from_secs_f64(self.cfg.round_deadline_s);
+        let done = {
             let metrics = Arc::clone(&self.metrics);
             let _t = metrics.time_phase("phase.wait");
-            // One absolute deadline for the whole collection: traffic
-            // from other in-flight rounds must not keep re-arming it.
-            let deadline = Instant::now() + Duration::from_secs(60);
-            while self.inflight[&round].results.len() < self.inflight[&round].wait_for {
-                let remaining = deadline.saturating_duration_since(Instant::now());
-                let msg: ResultMsg = match self.pool.results().recv_timeout(remaining) {
-                    Ok(msg) => msg,
-                    Err(_) => {
-                        // Abandon the round: drop its buffer so later
-                        // arrivals are counted late instead of being
-                        // unsealed and hoarded forever.
-                        self.release(round);
-                        anyhow::bail!(
-                            "timed out waiting for worker results (round {round})"
-                        );
-                    }
-                };
-                self.route(msg);
+            match self.registry.wait_done(round, deadline) {
+                Ok(done) => done,
+                Err(WaitError::Unknown(r)) => anyhow::bail!("round {r} is not in flight"),
+                Err(WaitError::TimedOut(r)) => anyhow::bail!(
+                    "timed out waiting for worker results (round {r}, deadline {:.1}s)",
+                    self.cfg.round_deadline_s
+                ),
             }
-        }
-        let done = self.inflight.remove(&round).expect("checked in flight above");
-        // Anything not yet received is in flight → counted late when it
-        // lands during a later submit/wait.
-        self.outstanding.insert(round, done.dispatched - done.results.len());
-        // An exact-threshold decode consumes exactly its threshold;
-        // results buffered beyond it (possible when other rounds were
-        // waited on first) are wasted work, same as post-decode arrivals.
+        };
+        // Credit the uplink comm counters with exactly the decode
+        // inputs (results beyond the wait policy were rejected before
+        // unsealing and never charged — deterministic accounting).
+        let (symbols_rx, bytes_rx) = done.received_totals();
+        self.metrics.add(names::SYMBOLS_TO_MASTER, symbols_rx);
+        self.metrics.add(names::BYTES_RX, bytes_rx);
+        // The buffer is frozen at `wait_for`, so every buffered result
+        // is consumed by the decoder (exact schemes' surplus spills into
+        // the wasted-work accounting at delivery time instead).
         let used = match done.threshold {
             Threshold::Exact(k) => k.min(done.results.len()),
             Threshold::Flexible { .. } => done.results.len(),
         };
-        let extras = done.results.len() - used;
         self.metrics.add(names::RESULTS_USED, used as u64);
-        if extras > 0 {
-            self.metrics.add(names::RESULTS_LATE, extras as u64);
-        }
         let decoded = {
             let _t = self.metrics.time_phase("phase.decode");
             self.scheme.decode(&done.ctx, &done.results)?
@@ -322,56 +448,19 @@ impl Master {
     /// Give up on a submitted round without decoding it: its buffered
     /// results are counted as wasted work and its entry is dropped, so
     /// later arrivals go through the late-result accounting instead of
-    /// being unsealed and buffered forever. Use this for rounds that
-    /// will never be waited on (e.g. when a batch is cancelled part-way
-    /// through submission).
+    /// being buffered forever. Dropping the handle does the same; the
+    /// explicit form reads better when a batch is cancelled part-way.
     pub fn abandon(&mut self, handle: RoundHandle) {
-        self.release(handle.round);
-    }
-
-    /// Drop an in-flight round's book-keeping, settling its accounting.
-    fn release(&mut self, round: u64) {
-        if let Some(dead) = self.inflight.remove(&round) {
-            self.outstanding.insert(round, dead.dispatched - dead.results.len());
-            self.metrics.add(names::RESULTS_LATE, dead.results.len() as u64);
-        }
-    }
-
-    /// How many results to wait for, given the scheme's threshold.
-    fn wait_count(&self, threshold: Threshold) -> usize {
-        match threshold {
-            Threshold::Exact(k) => k,
-            // Flexible: take what the non-stragglers produce (paper's
-            // experimental policy — decode fires when the fast workers
-            // are in, without waiting out the stragglers).
-            Threshold::Flexible { min } => (self.cfg.workers - self.cfg.stragglers).max(min),
-        }
-    }
-
-    /// Deliver one worker result: buffered under its in-flight round, or
-    /// counted late if that round already decoded. (RESULTS_USED /
-    /// RESULTS_LATE for buffered results are settled at decode time in
-    /// [`Master::wait`], once it is known how many the decoder consumed.)
-    fn route(&mut self, msg: ResultMsg) {
-        if !self.inflight.contains_key(&msg.round) {
-            self.note_stale(msg.round);
-            return;
-        }
-        self.capture(msg.worker, false, &msg.payload);
-        self.metrics.add(names::SYMBOLS_TO_MASTER, msg.payload.symbols() as u64);
-        let m = self.unseal(&msg.payload);
-        self.inflight
-            .get_mut(&msg.round)
-            .expect("checked above")
-            .results
-            .push((msg.worker, m));
+        let round = handle.defuse();
+        self.registry.abandon(round);
     }
 
     /// Seal (or pass through) a share for worker `w`.
     fn seal_for(&mut self, w: usize, m: &Matrix) -> WirePayload {
-        match self.cfg.transport {
+        match self.cfg.security {
             TransportSecurity::Plain => WirePayload::Plain(m.clone()),
-            TransportSecurity::MeaEcc => WirePayload::Sealed(self.mea.encrypt(
+            TransportSecurity::MeaEcc => WirePayload::Sealed(SealedPayload::seal(
+                &self.mea,
                 m,
                 &self.pool.worker_pks()[w],
                 &mut self.rng,
@@ -379,33 +468,21 @@ impl Master {
         }
     }
 
-    /// Unseal a worker result.
-    fn unseal(&self, p: &WirePayload) -> Matrix {
-        match p {
-            WirePayload::Plain(m) => m.clone(),
-            WirePayload::Sealed(s) => self.mea.decrypt(s, &self.keys),
-        }
-    }
-
     /// Record an eavesdropped wire payload.
     fn capture(&self, worker: usize, downlink: bool, p: &WirePayload) {
         if let Some(tap) = &self.eavesdropper {
-            tap.capture(worker, downlink, p.wire_view());
+            tap.capture(worker, downlink, &p.wire_matrix());
         }
     }
+}
 
-    /// Drain already-arrived results without blocking, routing each to
-    /// its in-flight round or the late-arrival accounting.
-    fn drain_pending(&mut self) {
-        while let Ok(msg) = self.pool.results().try_recv() {
-            self.route(msg);
-        }
-    }
-
-    fn note_stale(&mut self, round: u64) {
-        self.metrics.inc(names::RESULTS_LATE);
-        if let Some(left) = self.outstanding.get_mut(&round) {
-            *left = left.saturating_sub(1);
+impl Drop for Master {
+    fn drop(&mut self) {
+        // Tear the fabric down first so the inbound channel disconnects,
+        // then join the collector.
+        self.pool.shutdown();
+        if let Some(j) = self.collector.take() {
+            let _ = j.join();
         }
     }
 }
@@ -414,7 +491,7 @@ impl Master {
 mod tests {
     use super::*;
     use crate::coding::BlockCode;
-    use crate::config::SchemeKind;
+    use crate::config::{SchemeKind, TransportKind};
     use crate::matrix::{matmul, split_rows};
     use crate::runtime::WorkerOp;
 
@@ -448,15 +525,17 @@ mod tests {
             // precisely in the coding-layer tests.
             assert!(err < 0.5, "err={err}");
         }
-        // Transport accounting is live.
+        // Transport accounting is live — symbols AND serialized bytes.
         assert!(master.metrics().get(names::SYMBOLS_TO_WORKERS) > 0);
         assert!(master.metrics().get(names::SYMBOLS_TO_MASTER) > 0);
+        assert!(master.metrics().get(names::BYTES_TX) > 0);
+        assert!(master.metrics().get(names::BYTES_RX) > 0);
     }
 
     #[test]
     fn mds_round_exact_decode() {
         let mut cfg = base_cfg(SchemeKind::Mds);
-        cfg.transport = TransportSecurity::Plain;
+        cfg.security = TransportSecurity::Plain;
         let mut master = Master::from_config(cfg).unwrap();
         let mut rng = rng_from_seed(2);
         let x = Matrix::random_gaussian(24, 6, 0.0, 1.0, &mut rng);
@@ -562,6 +641,58 @@ mod tests {
     }
 
     #[test]
+    fn dropping_a_handle_abandons_its_round() {
+        let mut master = Master::from_config(base_cfg(SchemeKind::Spacdc)).unwrap();
+        let x = Matrix::ones(12, 4);
+        let h = master.submit(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
+        let round = h.round_id();
+        drop(h); // no wait, no explicit abandon
+        // The in-flight buffer is freed immediately, not at master drop.
+        assert!(!master.registry.is_inflight(round));
+        // Late arrivals for the dropped round are settled as wasted work
+        // and the next round is unaffected.
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        let out = master.run(CodedTask::block_map(WorkerOp::Identity, x)).unwrap();
+        assert_eq!(out.blocks.len(), 3);
+        assert!(master.metrics().get(names::RESULTS_LATE) > 0);
+    }
+
+    #[test]
+    fn waiting_twice_is_impossible_and_unknown_round_errors() {
+        let mut master = Master::from_config(base_cfg(SchemeKind::Spacdc)).unwrap();
+        let x = Matrix::ones(12, 4);
+        let h = master.submit(CodedTask::block_map(WorkerOp::Identity, x)).unwrap();
+        master.wait(h).unwrap();
+        // The handle is consumed by wait; there is no second handle to
+        // wait on — the closest misuse is an abandoned round's id, which
+        // the registry reports as unknown (covered in registry tests).
+    }
+
+    #[test]
+    fn round_deadline_times_out_with_a_typed_error() {
+        let mut cfg = base_cfg(SchemeKind::Spacdc);
+        cfg.round_deadline_s = 0.05;
+        cfg.delay.base_service_s = 0.3; // every worker far slower than the deadline
+        let mut master = Master::from_config(cfg).unwrap();
+        let x = Matrix::ones(12, 4);
+        let err = master.run(CodedTask::block_map(WorkerOp::Identity, x)).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "got: {err}");
+    }
+
+    #[test]
+    fn tcp_transport_runs_a_full_round() {
+        let mut cfg = base_cfg(SchemeKind::Spacdc);
+        cfg.transport = TransportKind::Tcp;
+        let mut master = Master::from_config(cfg).unwrap();
+        let mut rng = rng_from_seed(50);
+        let x = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
+        let out = master.run(CodedTask::block_map(WorkerOp::Identity, x)).unwrap();
+        assert_eq!(out.blocks.len(), 3);
+        assert!(master.metrics().get(names::BYTES_TX) > 0);
+        assert!(master.metrics().get(names::BYTES_RX) > 0);
+    }
+
+    #[test]
     fn eavesdropper_sees_only_ciphertext_under_mea() {
         let tap = Arc::new(EavesdropLog::new());
         let cfg = base_cfg(SchemeKind::Spacdc);
@@ -582,7 +713,7 @@ mod tests {
     fn plain_transport_leaks_to_eavesdropper() {
         let tap = Arc::new(EavesdropLog::new());
         let mut cfg = base_cfg(SchemeKind::Bacc);
-        cfg.transport = TransportSecurity::Plain;
+        cfg.security = TransportSecurity::Plain;
         cfg.seed = 77;
         let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
         let mut rng = rng_from_seed(6);

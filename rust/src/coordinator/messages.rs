@@ -1,34 +1,92 @@
 //! Wire messages between master and workers.
+//!
+//! These are the *typed* forms; what actually crosses a transport link
+//! is their serialized frame (see [`crate::wire`]). A payload is either
+//! plaintext or MEA-ECC *seal-the-bytes*: the serialized matrix data
+//! masked byte-by-byte under the recipient's key
+//! ([`SealedPayload`]), with the ephemeral point and the shape in the
+//! clear — framing needs the shape, and it is exactly what a real
+//! length-prefixed protocol would leak anyway.
 
-use crate::ecc::SealedMatrix;
+use crate::ecc::{KeyPair, MeaEcc, Point, SealedBytes};
 use crate::field::Fp61;
 use crate::matrix::Matrix;
+use crate::rng::Rng;
 use crate::runtime::WorkerOp;
+use crate::wire::{matrix_from_le_bytes, matrix_to_le_bytes, WireError};
 use std::time::Duration;
 
-/// A payload as it travels the (simulated) network: sealed under MEA-ECC
-/// or in the clear, depending on [`TransportSecurity`]
+/// A matrix sealed for the wire: MEA-ECC over its serialized bytes.
+#[derive(Clone, Debug)]
+pub struct SealedPayload {
+    /// Ephemeral point + masked row-major f32 data bytes.
+    pub sealed: SealedBytes<Fp61>,
+    /// Plaintext row count (cleartext framing metadata).
+    pub rows: usize,
+    /// Plaintext column count (cleartext framing metadata).
+    pub cols: usize,
+}
+
+impl SealedPayload {
+    /// Seal `m` to the holder of `recipient_pk`.
+    pub fn seal(mea: &MeaEcc<Fp61>, m: &Matrix, recipient_pk: &Point<Fp61>, rng: &mut Rng) -> Self {
+        let bytes = matrix_to_le_bytes(m);
+        Self { sealed: mea.seal_bytes(&bytes, recipient_pk, rng), rows: m.rows(), cols: m.cols() }
+    }
+
+    /// Open with the recipient's key pair. Fails (typed) when the byte
+    /// count disagrees with the cleartext shape — corruption that
+    /// slipped past framing must not panic the worker/collector.
+    pub fn open(&self, mea: &MeaEcc<Fp61>, keys: &KeyPair<Fp61>) -> Result<Matrix, WireError> {
+        let bytes = mea.open_bytes(&self.sealed, keys);
+        matrix_from_le_bytes(self.rows, self.cols, &bytes)
+    }
+
+    /// Symbol count (f32 elements) for the communication accounting.
+    pub fn symbols(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// The ciphertext as an eavesdropper would chart it: the masked
+    /// bytes reinterpreted as f32s in the plaintext's shape.
+    pub fn wire_matrix(&self) -> Matrix {
+        let data: Vec<f32> = self
+            .sealed
+            .bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Matrix::from_vec(self.rows, self.cols, data)
+    }
+}
+
+/// A payload as it travels the wire: sealed under MEA-ECC or in the
+/// clear, depending on [`TransportSecurity`]
 /// (crate::config::TransportSecurity).
 #[derive(Clone, Debug)]
 pub enum WirePayload {
     /// Plaintext matrix (baseline schemes).
     Plain(Matrix),
-    /// MEA-ECC ciphertext (SPACDC default).
-    Sealed(SealedMatrix<Fp61>),
+    /// MEA-ECC seal-the-bytes ciphertext (SPACDC default).
+    Sealed(SealedPayload),
 }
 
 impl WirePayload {
-    /// The bytes-on-the-wire view an eavesdropper records.
-    pub fn wire_view(&self) -> &Matrix {
+    /// The bytes-on-the-wire view an eavesdropper records, as a matrix
+    /// (ciphertext bytes reinterpreted as f32s when sealed).
+    pub fn wire_matrix(&self) -> Matrix {
         match self {
-            WirePayload::Plain(m) => m,
-            WirePayload::Sealed(s) => &s.payload,
+            WirePayload::Plain(m) => m.clone(),
+            WirePayload::Sealed(s) => s.wire_matrix(),
         }
     }
 
     /// Symbol count (f32 elements) for the communication accounting.
     pub fn symbols(&self) -> usize {
-        self.wire_view().len()
+        match self {
+            WirePayload::Plain(m) => m.len(),
+            WirePayload::Sealed(s) => s.symbols(),
+        }
     }
 }
 
@@ -67,12 +125,59 @@ pub struct ResultMsg {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ecc::{sim_curve, MaskMode};
+    use crate::rng::rng_from_seed;
 
     #[test]
     fn plain_payload_views_and_counts() {
         let m = Matrix::ones(3, 4);
         let p = WirePayload::Plain(m.clone());
         assert_eq!(p.symbols(), 12);
-        assert_eq!(p.wire_view().as_slice(), m.as_slice());
+        assert_eq!(p.wire_matrix().as_slice(), m.as_slice());
+    }
+
+    #[test]
+    fn sealed_payload_round_trips_bit_exact() {
+        let curve = sim_curve();
+        let mut rng = rng_from_seed(31);
+        let recipient = KeyPair::generate(&curve, &mut rng);
+        let mea = MeaEcc::new(curve, MaskMode::Keystream);
+        let m = Matrix::random_gaussian(9, 5, 0.0, 2.0, &mut rng);
+        let sealed = SealedPayload::seal(&mea, &m, &recipient.public(), &mut rng);
+        assert_eq!(sealed.symbols(), 45);
+        assert_eq!(sealed.sealed.len(), 45 * 4);
+        let opened = sealed.open(&mea, &recipient).unwrap();
+        assert_eq!(opened, m, "seal-the-bytes must open bit-exact");
+    }
+
+    #[test]
+    fn sealed_wire_view_is_not_the_plaintext() {
+        let curve = sim_curve();
+        let mut rng = rng_from_seed(32);
+        let recipient = KeyPair::generate(&curve, &mut rng);
+        let mea = MeaEcc::new(curve, MaskMode::Keystream);
+        let m = Matrix::random_gaussian(8, 8, 0.0, 1.0, &mut rng);
+        let sealed = SealedPayload::seal(&mea, &m, &recipient.public(), &mut rng);
+        let view = sealed.wire_matrix();
+        assert_eq!(view.shape(), m.shape());
+        let same = view
+            .as_slice()
+            .iter()
+            .zip(m.as_slice())
+            .filter(|(a, b)| a.to_bits() == b.to_bits())
+            .count();
+        assert!(same < 4, "{same}/64 wire elements equal plaintext");
+    }
+
+    #[test]
+    fn sealed_shape_mismatch_is_typed() {
+        let curve = sim_curve();
+        let mut rng = rng_from_seed(33);
+        let recipient = KeyPair::generate(&curve, &mut rng);
+        let mea = MeaEcc::new(curve, MaskMode::Keystream);
+        let m = Matrix::ones(4, 4);
+        let mut sealed = SealedPayload::seal(&mea, &m, &recipient.public(), &mut rng);
+        sealed.rows = 5; // corrupted cleartext shape
+        assert!(matches!(sealed.open(&mea, &recipient), Err(WireError::Malformed(_))));
     }
 }

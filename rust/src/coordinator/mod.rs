@@ -3,27 +3,33 @@
 //!
 //! 1. **Data process** — master encodes a typed
 //!    [`CodedTask`](crate::coding::CodedTask) with the configured scheme,
-//!    seals every payload with MEA-ECC (§IV), dispatches to workers.
-//! 2. **Task computing** — worker threads decrypt, execute `f` through
-//!    the [`Executor`](crate::runtime::Executor) (PJRT artifact or native
-//!    kernel), encrypt the result, return it.
-//! 3. **Result recovering** — master collects until the scheme's wait
-//!    policy is satisfied, decrypts, decodes.
+//!    seals every payload's serialized bytes with MEA-ECC (§IV), and
+//!    dispatches framed work orders over the configured transport.
+//! 2. **Task computing** — worker threads decode the frame
+//!    ([`crate::wire`]), unseal, execute `f` through the
+//!    [`Executor`](crate::runtime::Executor) (PJRT artifact or native
+//!    kernel), re-seal the result, and write the framed result back.
+//! 3. **Result recovering** — a dedicated collector thread on the master
+//!    deserializes and unseals arriving results and routes them to their
+//!    in-flight round (`registry`); `Master::wait` decodes once the
+//!    scheme's wait policy is satisfied, under a per-round deadline.
 //!
 //! One pipeline serves all eight schemes: [`Master::run`] executes a
 //! round synchronously, and [`Master::submit`] / [`Master::wait`] keep
 //! several rounds in flight at once (results are routed to their round
-//! by id, so rounds may complete out of order).
+//! by id, so rounds may complete out of order; dropping a
+//! [`RoundHandle`] abandons its round).
 //!
 //! Stragglers are injected per [`sim::DelayModel`](crate::sim::DelayModel);
 //! colluders and eavesdroppers observe through the [`sim`](crate::sim)
-//! taps. Every symbol crossing a link is counted in the metrics registry
-//! (the Fig. 6 accounting).
+//! taps. Every frame crossing a link is counted twice over: symbols for
+//! the analytic Fig. 6 accounting, serialized bytes for the measured one.
 
 mod master;
 mod messages;
 mod pool;
+mod registry;
 
 pub use master::{Master, MasterBuilder, RoundHandle, RoundOutcome};
-pub use messages::{ResultMsg, WirePayload, WorkOrder};
+pub use messages::{ResultMsg, SealedPayload, WirePayload, WorkOrder};
 pub use pool::WorkerPool;

@@ -1,85 +1,97 @@
 //! The worker fabric: N long-lived threads, one per worker, each with its
-//! own ECC key pair. Workers receive [`WorkOrder`]s on a private channel,
-//! simulate their service delay, decrypt, compute through the
-//! [`Executor`], re-encrypt, and push the result onto the shared return
-//! channel — the paper's "task computing" phase (§III-A step 2).
+//! own ECC key pair, speaking *only serialized frames* over a pluggable
+//! [`Transport`](crate::transport::Transport). Workers receive framed
+//! [`WorkOrder`]s, decode them ([`crate::wire`]), simulate their service
+//! delay, unseal, compute through the [`Executor`], re-seal, and write
+//! the framed result back — the paper's "task computing" phase (§III-A
+//! step 2).
 //!
-//! Each worker drains its order queue in FIFO order, so when the master
+//! Each worker drains its link in FIFO order, so when the master
 //! pipelines several rounds (`Master::submit` before `Master::wait`) the
-//! orders of round r+1 are already queued while round r computes — the
-//! overlap the `pipelining` bench measures. Results carry their round id
-//! and the master routes them back to the right in-flight round.
+//! orders of round r+1 are already queued while round r computes.
+//! Results carry their round id; the master's collector thread routes
+//! them back to the right in-flight round.
+//!
+//! A worker whose link is down surfaces as a typed
+//! [`TransportError::WorkerDown`] from [`WorkerPool::dispatch`] — the
+//! master degrades it into a permanent straggler instead of panicking.
+//! A complete frame that fails wire validation is counted
+//! (`comm.wire_errors`) and dropped, and the worker keeps serving;
+//! header-level stream corruption (frame sync lost) is also counted,
+//! but kills the link — the master sees the worker as dead at its next
+//! dispatch.
 
-use super::messages::{ResultMsg, WirePayload, WorkOrder};
+use super::messages::{ResultMsg, SealedPayload, WirePayload, WorkOrder};
+use crate::config::TransportKind;
 use crate::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc, Point};
 use crate::field::Fp61;
 use crate::matrix::Matrix;
+use crate::metrics::{names, MetricsRegistry};
 use crate::rng::{derive_seed, rng_from_seed};
 use crate::runtime::Executor;
 use crate::sim::CollusionPool;
-use std::sync::mpsc::{self, Receiver, Sender};
+use crate::transport::{self, Transport, TransportError, WorkerLink};
+use crate::wire;
+use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-/// A pool of worker threads plus the master-side channel ends.
+/// A pool of worker threads plus the master-side transport sender.
 pub struct WorkerPool {
-    order_txs: Vec<Sender<WorkOrder>>,
-    result_rx: Receiver<ResultMsg>,
+    transport: Option<Box<dyn Transport>>,
     worker_pks: Vec<Point<Fp61>>,
     joins: Vec<JoinHandle<()>>,
 }
 
 impl WorkerPool {
-    /// Spawn `n` workers. Each generates its own key pair (§IV-B step 1)
-    /// and publishes the public key to the master.
+    /// Wire a fabric of `kind` and spawn `n` workers on it. Each worker
+    /// generates its own key pair (§IV-B step 1) and publishes the
+    /// public key to the master. Returns the pool plus the merged
+    /// inbound channel of result *frames* (consumed by the master's
+    /// collector thread).
     ///
     /// * `master_pk` — the master's public key (workers encrypt results
     ///   to it).
     /// * `executor` — shared execution façade (PJRT or native).
     /// * `collusion` — optional coalition tap; colluding workers deposit
     ///   their decrypted shares there.
+    /// * `metrics` — sink for the transport byte counters.
     pub fn spawn(
+        kind: TransportKind,
         n: usize,
         master_pk: Point<Fp61>,
         executor: Executor,
         collusion: Option<Arc<CollusionPool>>,
         seed: u64,
-    ) -> Self {
+        metrics: Arc<MetricsRegistry>,
+    ) -> Result<(Self, Receiver<Vec<u8>>), TransportError> {
         let curve = sim_curve();
-        let (result_tx, result_rx) = mpsc::channel::<ResultMsg>();
-        let mut order_txs = Vec::with_capacity(n);
+        let fabric = transport::connect(kind, n, metrics)?;
         let mut worker_pks = Vec::with_capacity(n);
         let mut joins = Vec::with_capacity(n);
 
-        for w in 0..n {
+        for (w, link) in fabric.links.into_iter().enumerate() {
             let mut rng = rng_from_seed(derive_seed(seed, 0xBEEF_0000 + w as u64));
             let keys = KeyPair::generate(&curve, &mut rng);
             worker_pks.push(keys.public());
 
-            let (order_tx, order_rx) = mpsc::channel::<WorkOrder>();
-            order_txs.push(order_tx);
-
-            let result_tx = result_tx.clone();
             let executor = executor.clone();
             let collusion = collusion.clone();
-            let master_pk = master_pk;
             let join = std::thread::Builder::new()
                 .name(format!("worker-{w}"))
                 .spawn(move || {
-                    worker_loop(
-                        w, keys, master_pk, order_rx, result_tx, executor, collusion, seed,
-                    )
+                    worker_loop(w, keys, master_pk, link, executor, collusion, seed)
                 })
                 .expect("spawn worker");
             joins.push(join);
         }
 
-        Self { order_txs, result_rx, worker_pks, joins }
+        Ok((Self { transport: Some(fabric.transport), worker_pks, joins }, fabric.inbound))
     }
 
     /// Number of workers.
     pub fn n(&self) -> usize {
-        self.order_txs.len()
+        self.worker_pks.len()
     }
 
     /// Worker public keys, indexed by worker id.
@@ -87,56 +99,94 @@ impl WorkerPool {
         &self.worker_pks
     }
 
-    /// Send an order to its worker.
-    pub fn dispatch(&self, order: WorkOrder) {
-        let w = order.worker;
-        self.order_txs[w].send(order).expect("worker alive");
+    /// Which fabric the pool runs on.
+    pub fn transport_kind(&self) -> TransportKind {
+        self.transport.as_ref().expect("pool not shut down").kind()
     }
 
-    /// The master-side result receiver.
-    pub fn results(&self) -> &Receiver<ResultMsg> {
-        &self.result_rx
+    /// Serialize an order and send it to its worker. A down link
+    /// surfaces as [`TransportError::WorkerDown`]; the caller treats
+    /// that worker as a permanent straggler.
+    pub fn dispatch(&self, order: &WorkOrder) -> Result<(), TransportError> {
+        let frame = wire::encode_order(order);
+        self.transport.as_ref().expect("pool not shut down").send(order.worker, frame)
     }
-}
 
-impl Drop for WorkerPool {
-    fn drop(&mut self) {
-        // Closing the order channels ends the worker loops.
-        self.order_txs.clear();
+    /// Tear the fabric down and join the workers. Called by `Drop`;
+    /// idempotent.
+    pub(crate) fn shutdown(&mut self) {
+        self.transport.take(); // closes every link
         for j in self.joins.drain(..) {
             let _ = j.join();
         }
     }
 }
 
-#[allow(clippy::too_many_arguments)]
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
 fn worker_loop(
     w: usize,
     keys: KeyPair<Fp61>,
     master_pk: Point<Fp61>,
-    orders: Receiver<WorkOrder>,
-    results: Sender<ResultMsg>,
+    mut link: WorkerLink,
     executor: Executor,
     collusion: Option<Arc<CollusionPool>>,
     seed: u64,
 ) {
     let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
     let mut rng = rng_from_seed(derive_seed(seed, 0xD0_0000 + w as u64));
-    while let Ok(order) = orders.recv() {
+    loop {
+        // A clean close (master gone / fabric torn down) ends the loop
+        // silently; a poisoned stream (header-level corruption, socket
+        // error) is counted before the link dies, since frame sync is
+        // unrecoverable at that point.
+        let frame = match link.recv() {
+            Ok(f) => f,
+            Err(wire::WireError::Closed) => break,
+            Err(e) => {
+                executor.metrics().inc(names::WIRE_ERRORS);
+                eprintln!("worker {w}: link failed ({e}); shutting down");
+                break;
+            }
+        };
+        let order = match wire::decode_order(&frame) {
+            Ok(o) => o,
+            Err(e) => {
+                executor.metrics().inc(names::WIRE_ERRORS);
+                eprintln!("worker {w}: dropping undecodable frame: {e}");
+                continue;
+            }
+        };
+
         // Straggler simulation — the paper's sleep() injection.
         if !order.delay.is_zero() {
             std::thread::sleep(order.delay);
         }
 
         // Decrypt operands (§IV-B step 4).
-        let operands: Vec<Matrix> = order
-            .payloads
-            .iter()
-            .map(|p| match p {
-                WirePayload::Plain(m) => m.clone(),
-                WirePayload::Sealed(s) => mea.decrypt(s, &keys),
-            })
-            .collect();
+        let mut operands: Vec<Matrix> = Vec::with_capacity(order.payloads.len());
+        let mut poisoned = false;
+        for p in &order.payloads {
+            match p {
+                WirePayload::Plain(m) => operands.push(m.clone()),
+                WirePayload::Sealed(s) => match s.open(&mea, &keys) {
+                    Ok(m) => operands.push(m),
+                    Err(e) => {
+                        executor.metrics().inc(names::WIRE_ERRORS);
+                        eprintln!("worker {w}: sealed payload failed to open: {e}");
+                        poisoned = true;
+                        break;
+                    }
+                },
+            }
+        }
+        if poisoned {
+            continue;
+        }
 
         // Colluding workers leak their plaintext shares to the pool.
         if let Some(pool) = &collusion {
@@ -152,12 +202,13 @@ fn worker_loop(
         // sealed (symmetric policy — §V-B step 2).
         let sealed_round = matches!(order.payloads.first(), Some(WirePayload::Sealed(_)));
         let payload = if sealed_round {
-            WirePayload::Sealed(mea.encrypt(&out, &master_pk, &mut rng))
+            WirePayload::Sealed(SealedPayload::seal(&mea, &out, &master_pk, &mut rng))
         } else {
             WirePayload::Plain(out)
         };
 
-        if results.send(ResultMsg { round: order.round, worker: w, payload }).is_err() {
+        let msg = ResultMsg { round: order.round, worker: w, payload };
+        if link.send(&wire::encode_result(&msg)).is_err() {
             break; // master gone
         }
     }
@@ -166,34 +217,50 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::metrics::MetricsRegistry;
     use crate::runtime::WorkerOp;
+    use crate::wire::MsgKind;
     use std::time::Duration;
 
-    fn pool(n: usize) -> (WorkerPool, KeyPair<Fp61>) {
+    fn pool(n: usize) -> (WorkerPool, Receiver<Vec<u8>>, KeyPair<Fp61>) {
         let curve = sim_curve();
         let mut rng = rng_from_seed(0xAA);
         let master = KeyPair::generate(&curve, &mut rng);
-        let exec = Executor::native(Arc::new(MetricsRegistry::new()));
-        let p = WorkerPool::spawn(n, master.public(), exec, None, 7);
-        (p, master)
+        let metrics = Arc::new(MetricsRegistry::new());
+        let exec = Executor::native(Arc::clone(&metrics));
+        let (p, rx) = WorkerPool::spawn(
+            TransportKind::InProc,
+            n,
+            master.public(),
+            exec,
+            None,
+            7,
+            metrics,
+        )
+        .unwrap();
+        (p, rx, master)
+    }
+
+    fn recv_result(rx: &Receiver<Vec<u8>>) -> ResultMsg {
+        let frame = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        wire::decode_result(&frame).unwrap()
     }
 
     #[test]
     fn workers_echo_identity_orders() {
-        let (pool, _master) = pool(4);
+        let (pool, rx, _master) = pool(4);
         for w in 0..4 {
-            pool.dispatch(WorkOrder {
+            pool.dispatch(&WorkOrder {
                 round: 1,
                 worker: w,
                 op: WorkerOp::Identity,
                 payloads: vec![WirePayload::Plain(Matrix::ones(2, 2).scale(w as f32))],
                 delay: Duration::ZERO,
-            });
+            })
+            .unwrap();
         }
         let mut seen = vec![false; 4];
         for _ in 0..4 {
-            let r = pool.results().recv_timeout(Duration::from_secs(5)).unwrap();
+            let r = recv_result(&rx);
             assert_eq!(r.round, 1);
             match r.payload {
                 WirePayload::Plain(m) => {
@@ -208,22 +275,23 @@ mod tests {
 
     #[test]
     fn sealed_roundtrip_through_worker() {
-        let (pool, master) = pool(2);
+        let (pool, rx, master) = pool(2);
         let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
         let mut rng = rng_from_seed(1);
         let x = Matrix::random_gaussian(4, 4, 0.0, 1.0, &mut rng);
-        let sealed = mea.encrypt(&x, &pool.worker_pks()[0], &mut rng);
-        pool.dispatch(WorkOrder {
+        let sealed = SealedPayload::seal(&mea, &x, &pool.worker_pks()[0], &mut rng);
+        pool.dispatch(&WorkOrder {
             round: 9,
             worker: 0,
             op: WorkerOp::Identity,
             payloads: vec![WirePayload::Sealed(sealed)],
             delay: Duration::ZERO,
-        });
-        let r = pool.results().recv_timeout(Duration::from_secs(5)).unwrap();
+        })
+        .unwrap();
+        let r = recv_result(&rx);
         match r.payload {
             WirePayload::Sealed(s) => {
-                let opened = mea.decrypt(&s, &master);
+                let opened = s.open(&mea, &master).unwrap();
                 assert_eq!(opened, x, "worker must echo the decrypted plaintext, re-sealed");
             }
             _ => panic!("expected sealed result for a sealed order"),
@@ -235,21 +303,31 @@ mod tests {
         let curve = sim_curve();
         let mut rng = rng_from_seed(0xBB);
         let master = KeyPair::generate(&curve, &mut rng);
-        let exec = Executor::native(Arc::new(MetricsRegistry::new()));
+        let metrics = Arc::new(MetricsRegistry::new());
+        let exec = Executor::native(Arc::clone(&metrics));
         let coalition = Arc::new(CollusionPool::new(vec![1]));
-        let pool =
-            WorkerPool::spawn(3, master.public(), exec, Some(Arc::clone(&coalition)), 7);
+        let (pool, rx) = WorkerPool::spawn(
+            TransportKind::InProc,
+            3,
+            master.public(),
+            exec,
+            Some(Arc::clone(&coalition)),
+            7,
+            metrics,
+        )
+        .unwrap();
         for w in 0..3 {
-            pool.dispatch(WorkOrder {
+            pool.dispatch(&WorkOrder {
                 round: 1,
                 worker: w,
                 op: WorkerOp::Identity,
                 payloads: vec![WirePayload::Plain(Matrix::ones(2, 2))],
                 delay: Duration::ZERO,
-            });
+            })
+            .unwrap();
         }
         for _ in 0..3 {
-            pool.results().recv_timeout(Duration::from_secs(5)).unwrap();
+            recv_result(&rx);
         }
         let gathered = coalition.gathered();
         assert_eq!(gathered.len(), 1, "only worker 1 colludes");
@@ -258,23 +336,78 @@ mod tests {
 
     #[test]
     fn straggler_delay_orders_arrival() {
-        let (pool, _master) = pool(2);
+        let (pool, rx, _master) = pool(2);
         // Worker 0 delayed, worker 1 immediate → 1 arrives first.
-        pool.dispatch(WorkOrder {
+        pool.dispatch(&WorkOrder {
             round: 1,
             worker: 0,
             op: WorkerOp::Identity,
             payloads: vec![WirePayload::Plain(Matrix::ones(1, 1))],
             delay: Duration::from_millis(150),
-        });
-        pool.dispatch(WorkOrder {
+        })
+        .unwrap();
+        pool.dispatch(&WorkOrder {
             round: 1,
             worker: 1,
             op: WorkerOp::Identity,
             payloads: vec![WirePayload::Plain(Matrix::ones(1, 1))],
             delay: Duration::ZERO,
-        });
-        let first = pool.results().recv_timeout(Duration::from_secs(5)).unwrap();
+        })
+        .unwrap();
+        let first = recv_result(&rx);
         assert_eq!(first.worker, 1, "non-straggler must arrive first");
+    }
+
+    #[test]
+    fn undecodable_frame_is_dropped_not_fatal() {
+        let (pool, rx, _master) = pool(1);
+        // A structurally valid frame with a garbage body: the worker must
+        // count it, drop it, and keep serving.
+        let junk = wire::frame(MsgKind::Order, b"not an order body");
+        pool.transport.as_ref().unwrap().send(0, junk).unwrap();
+        pool.dispatch(&WorkOrder {
+            round: 2,
+            worker: 0,
+            op: WorkerOp::Identity,
+            payloads: vec![WirePayload::Plain(Matrix::ones(1, 1))],
+            delay: Duration::ZERO,
+        })
+        .unwrap();
+        let r = recv_result(&rx);
+        assert_eq!(r.round, 2, "worker must survive the junk frame");
+    }
+
+    #[test]
+    fn tcp_pool_round_trips_orders() {
+        let curve = sim_curve();
+        let mut rng = rng_from_seed(0xCC);
+        let master = KeyPair::generate(&curve, &mut rng);
+        let metrics = Arc::new(MetricsRegistry::new());
+        let exec = Executor::native(Arc::clone(&metrics));
+        let (pool, rx) = WorkerPool::spawn(
+            TransportKind::Tcp,
+            2,
+            master.public(),
+            exec,
+            None,
+            7,
+            Arc::clone(&metrics),
+        )
+        .unwrap();
+        for w in 0..2 {
+            pool.dispatch(&WorkOrder {
+                round: 5,
+                worker: w,
+                op: WorkerOp::Identity,
+                payloads: vec![WirePayload::Plain(Matrix::ones(3, 3))],
+                delay: Duration::ZERO,
+            })
+            .unwrap();
+        }
+        for _ in 0..2 {
+            let r = recv_result(&rx);
+            assert_eq!(r.round, 5);
+        }
+        assert!(metrics.get(names::BYTES_TX) > 0, "socket bytes must be counted");
     }
 }

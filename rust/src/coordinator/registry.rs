@@ -1,0 +1,400 @@
+//! The in-flight round registry: the rendezvous between the submit
+//! path, the background collector thread, and round handles.
+//!
+//! `Master::submit` registers a round before dispatching its orders; the
+//! collector thread [`deliver`](RoundRegistry::deliver)s every decoded
+//! result to its round (or the late-arrival accounting); `Master::wait`
+//! blocks on the condvar until the round's wait policy is satisfied or
+//! its deadline passes. Because delivery happens on the collector
+//! thread, waiting on one round never stalls result intake for the
+//! others, and a dropped [`RoundHandle`](super::RoundHandle) can settle
+//! its round's accounting from wherever it is dropped.
+
+use crate::coding::{DecodeCtx, Threshold};
+use crate::matrix::Matrix;
+use crate::metrics::{names, MetricsRegistry};
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+/// Book-keeping for a submitted-but-undecoded round.
+#[derive(Debug)]
+pub(crate) struct InflightRound {
+    /// Everything the decoder needs, produced at encode time.
+    pub ctx: DecodeCtx,
+    /// The scheme's recovery-threshold semantics for this round.
+    pub threshold: Threshold,
+    /// Decoded (worker, result) pairs buffered so far — capped at
+    /// `wait_for`: once the policy is satisfied the buffer is frozen, so
+    /// the decode input set is exactly the first `wait_for` arrivals
+    /// (deterministic `results_used`, same as the old blocking recv loop).
+    pub results: Vec<(usize, Matrix)>,
+    /// How many results the wait policy needs.
+    pub wait_for: usize,
+    /// How many orders were actually dispatched.
+    pub dispatched: usize,
+    /// Results that arrived while in flight but after the buffer froze
+    /// (already counted as wasted work).
+    pub spilled: usize,
+    /// Per-buffered-result (symbols, frame bytes), index-aligned with
+    /// `results`. Fed to `comm.symbols_to_master` / `comm.bytes_rx` at
+    /// decode time, so those counters reflect exactly the decode inputs
+    /// — deterministic, like the old blocking recv loop.
+    pub sizes: Vec<(u64, u64)>,
+    /// Submit time (for the round's wall-clock).
+    pub started: Instant,
+}
+
+impl InflightRound {
+    /// Total (symbols, frame bytes) of the buffered results.
+    pub fn received_totals(&self) -> (u64, u64) {
+        self.sizes.iter().fold((0, 0), |(s, b), (ds, db)| (s + ds, b + db))
+    }
+}
+
+/// Why a wait did not produce a round.
+#[derive(Debug, PartialEq, Eq)]
+pub(crate) enum WaitError {
+    /// The round is not in flight (never submitted, already waited on,
+    /// or abandoned).
+    Unknown(u64),
+    /// The deadline passed first; the round has been abandoned.
+    TimedOut(u64),
+}
+
+#[derive(Default)]
+struct State {
+    rounds: HashMap<u64, InflightRound>,
+    /// Completed/abandoned round → results still expected from workers
+    /// (late-arrival accounting).
+    outstanding: HashMap<u64, usize>,
+}
+
+/// Shared registry of in-flight rounds (see module docs).
+pub(crate) struct RoundRegistry {
+    metrics: Arc<MetricsRegistry>,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl RoundRegistry {
+    pub fn new(metrics: Arc<MetricsRegistry>) -> Self {
+        Self { metrics, state: Mutex::new(State::default()), cv: Condvar::new() }
+    }
+
+    /// Open a round *before* its orders go out, so results can never
+    /// race the registration. `wait_for` starts unsatisfiable;
+    /// [`finalize`](Self::finalize) installs the real counts once
+    /// dispatch has settled.
+    pub fn register(&self, round: u64, ctx: DecodeCtx, threshold: Threshold, started: Instant) {
+        let mut st = self.state.lock().unwrap();
+        st.rounds.insert(
+            round,
+            InflightRound {
+                ctx,
+                threshold,
+                results: Vec::new(),
+                wait_for: usize::MAX,
+                dispatched: 0,
+                spilled: 0,
+                sizes: Vec::new(),
+                started,
+            },
+        );
+    }
+
+    /// Install the real wait/dispatch counts after the dispatch loop.
+    /// Early arrivals beyond `wait_for` (possible when workers respond
+    /// mid-dispatch) spill into the wasted-work accounting, keeping the
+    /// decode input at exactly the first `wait_for` arrivals.
+    pub fn finalize(&self, round: u64, wait_for: usize, dispatched: usize) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(r) = st.rounds.get_mut(&round) {
+            r.wait_for = wait_for;
+            r.dispatched = dispatched;
+            if r.results.len() > wait_for {
+                let excess = r.results.len() - wait_for;
+                r.results.truncate(wait_for);
+                r.sizes.truncate(wait_for);
+                r.spilled += excess;
+                self.metrics.add(names::RESULTS_LATE, excess as u64);
+            }
+            if r.results.len() >= r.wait_for {
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    /// Would a result for `round` be buffered right now? The collector
+    /// uses this as a cheap pre-check so rejected results are never
+    /// unsealed (wasted crypto) or charged to the comm counters.
+    pub fn would_accept(&self, round: u64) -> bool {
+        let st = self.state.lock().unwrap();
+        matches!(st.rounds.get(&round), Some(r) if r.results.len() < r.wait_for)
+    }
+
+    /// Settle a result that will not be buffered: spilled (round in
+    /// flight but frozen) or late (round gone) — wasted work either way.
+    pub fn note_rejected(&self, round: u64) {
+        let mut st = self.state.lock().unwrap();
+        self.metrics.inc(names::RESULTS_LATE);
+        match st.rounds.get_mut(&round) {
+            Some(r) => r.spilled += 1,
+            None => Self::settle_outstanding(&mut st, round),
+        }
+    }
+
+    /// Deliver one decoded worker result with its wire cost
+    /// `(symbols, frame bytes)`: buffered under its in-flight round
+    /// (waking waiters when the policy is satisfied), or counted as
+    /// wasted work — spilled (buffer frozen at `wait_for`) or late
+    /// (round gone). Returns true when buffered.
+    pub fn deliver(
+        &self,
+        round: u64,
+        worker: usize,
+        result: Matrix,
+        symbols: u64,
+        frame_bytes: u64,
+    ) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match st.rounds.get_mut(&round) {
+            Some(r) if r.results.len() >= r.wait_for => {
+                // Policy already satisfied: frozen buffer, wasted work.
+                r.spilled += 1;
+                self.metrics.inc(names::RESULTS_LATE);
+                false
+            }
+            Some(r) => {
+                r.results.push((worker, result));
+                r.sizes.push((symbols, frame_bytes));
+                if r.results.len() >= r.wait_for {
+                    self.cv.notify_all();
+                }
+                true
+            }
+            None => {
+                self.metrics.inc(names::RESULTS_LATE);
+                Self::settle_outstanding(&mut st, round);
+                false
+            }
+        }
+    }
+
+    /// One expected-but-unbuffered result landed for a settled round;
+    /// drop its entry once nothing more is expected (keeps the
+    /// late-arrival map from growing forever).
+    fn settle_outstanding(st: &mut State, round: u64) {
+        if let Some(left) = st.outstanding.get_mut(&round) {
+            *left = left.saturating_sub(1);
+            if *left == 0 {
+                st.outstanding.remove(&round);
+            }
+        }
+    }
+
+    /// Block until `round` satisfies its wait policy, or until
+    /// `deadline`. On timeout the round is abandoned in place (its
+    /// buffered results become wasted work) so late arrivals go through
+    /// the stale path instead of accumulating forever.
+    pub fn wait_done(&self, round: u64, deadline: Instant) -> Result<InflightRound, WaitError> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match st.rounds.get(&round) {
+                None => return Err(WaitError::Unknown(round)),
+                Some(r) if r.results.len() >= r.wait_for => {
+                    let done = st.rounds.remove(&round).expect("checked above");
+                    let received = done.results.len() + done.spilled;
+                    let remaining = done.dispatched.saturating_sub(received);
+                    if remaining > 0 {
+                        st.outstanding.insert(round, remaining);
+                    }
+                    return Ok(done);
+                }
+                Some(_) => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                Self::drop_round(&mut st, &self.metrics, round);
+                return Err(WaitError::TimedOut(round));
+            }
+            let (guard, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Abandon a round (explicit `abandon`, or a dropped handle):
+    /// buffered results are counted as wasted work and later arrivals go
+    /// through the late accounting. Returns true if the round was still
+    /// in flight.
+    pub fn abandon(&self, round: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        Self::drop_round(&mut st, &self.metrics, round)
+    }
+
+    /// Is the round still in flight?
+    #[cfg(test)]
+    pub fn is_inflight(&self, round: u64) -> bool {
+        self.state.lock().unwrap().rounds.contains_key(&round)
+    }
+
+    fn drop_round(st: &mut State, metrics: &MetricsRegistry, round: u64) -> bool {
+        if let Some(dead) = st.rounds.remove(&round) {
+            let received = dead.results.len() + dead.spilled;
+            let remaining = dead.dispatched.saturating_sub(received);
+            if remaining > 0 {
+                st.outstanding.insert(round, remaining);
+            }
+            metrics.add(names::RESULTS_LATE, dead.results.len() as u64);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::CodeParams;
+    use crate::coding::TaskShape;
+    use crate::config::SchemeKind;
+    use crate::matrix::PartitionSpec;
+    use std::time::Duration;
+
+    fn registry() -> (Arc<RoundRegistry>, Arc<MetricsRegistry>) {
+        let metrics = Arc::new(MetricsRegistry::new());
+        (Arc::new(RoundRegistry::new(Arc::clone(&metrics))), metrics)
+    }
+
+    fn ctx() -> DecodeCtx {
+        DecodeCtx {
+            kind: SchemeKind::Uncoded,
+            params: CodeParams::new(4, 4, 0),
+            alphas: vec![],
+            betas: vec![],
+            spec: PartitionSpec::new(4, 4),
+            degree: 1,
+            shape: TaskShape::BlockMap,
+        }
+    }
+
+    fn open(reg: &RoundRegistry, round: u64) {
+        reg.register(round, ctx(), Threshold::Exact(1), Instant::now());
+    }
+
+    #[test]
+    fn results_before_finalize_are_buffered_not_completing() {
+        let (reg, _) = registry();
+        open(&reg, 1);
+        assert!(reg.deliver(1, 0, Matrix::ones(1, 1), 1, 64));
+        // Unsatisfiable until finalize installs the real wait_for.
+        let err = reg.wait_done(1, Instant::now()).unwrap_err();
+        assert_eq!(err, WaitError::TimedOut(1));
+    }
+
+    #[test]
+    fn wait_returns_once_policy_met_even_from_another_thread() {
+        let (reg, _) = registry();
+        open(&reg, 7);
+        reg.finalize(7, 2, 4);
+        let reg2 = Arc::clone(&reg);
+        let j = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            reg2.deliver(7, 0, Matrix::ones(1, 1), 1, 64);
+            reg2.deliver(7, 1, Matrix::ones(1, 1), 1, 64);
+        });
+        let done = reg.wait_done(7, Instant::now() + Duration::from_secs(5)).unwrap();
+        assert_eq!(done.results.len(), 2);
+        assert_eq!(done.dispatched, 4);
+        j.join().unwrap();
+        // Round is gone; a third delivery counts late.
+        assert!(!reg.deliver(7, 2, Matrix::ones(1, 1), 1, 64));
+    }
+
+    #[test]
+    fn timeout_abandons_and_counts_buffered_results_late() {
+        let (reg, metrics) = registry();
+        open(&reg, 3);
+        reg.finalize(3, 5, 5);
+        reg.deliver(3, 0, Matrix::ones(1, 1), 1, 64);
+        let err = reg.wait_done(3, Instant::now() + Duration::from_millis(30)).unwrap_err();
+        assert_eq!(err, WaitError::TimedOut(3));
+        assert!(!reg.is_inflight(3));
+        assert_eq!(metrics.get(names::RESULTS_LATE), 1);
+    }
+
+    #[test]
+    fn waiting_twice_is_unknown() {
+        let (reg, _) = registry();
+        open(&reg, 9);
+        reg.finalize(9, 0, 0); // trivially satisfied
+        reg.wait_done(9, Instant::now()).unwrap();
+        assert_eq!(
+            reg.wait_done(9, Instant::now()).unwrap_err(),
+            WaitError::Unknown(9)
+        );
+    }
+
+    #[test]
+    fn buffer_freezes_at_wait_for() {
+        let (reg, metrics) = registry();
+        open(&reg, 5);
+        reg.finalize(5, 2, 4);
+        assert!(reg.deliver(5, 0, Matrix::ones(1, 1), 1, 64));
+        assert!(reg.deliver(5, 1, Matrix::ones(1, 1), 1, 64));
+        // Policy satisfied: the third arrival is wasted work, not a
+        // bigger decode input.
+        assert!(!reg.deliver(5, 2, Matrix::ones(1, 1), 1, 64));
+        assert_eq!(metrics.get(names::RESULTS_LATE), 1);
+        let done = reg.wait_done(5, Instant::now()).unwrap();
+        assert_eq!(done.results.len(), 2, "decode input frozen at wait_for");
+        assert_eq!(done.spilled, 1);
+    }
+
+    #[test]
+    fn finalize_trims_early_overshoot() {
+        let (reg, metrics) = registry();
+        open(&reg, 6);
+        // Workers responded mid-dispatch: three results before finalize.
+        for w in 0..3 {
+            assert!(reg.deliver(6, w, Matrix::ones(1, 1), 1, 64));
+        }
+        reg.finalize(6, 2, 4);
+        let done = reg.wait_done(6, Instant::now()).unwrap();
+        assert_eq!(done.results.len(), 2, "early overshoot must be trimmed");
+        assert_eq!(done.spilled, 1);
+        assert_eq!(metrics.get(names::RESULTS_LATE), 1);
+    }
+
+    #[test]
+    fn would_accept_and_note_rejected_paths() {
+        let (reg, metrics) = registry();
+        open(&reg, 8);
+        reg.finalize(8, 1, 2);
+        assert!(reg.would_accept(8));
+        assert!(reg.deliver(8, 0, Matrix::ones(1, 1), 3, 70));
+        assert!(!reg.would_accept(8), "frozen buffer must reject");
+        reg.note_rejected(8); // spilled while still in flight
+        let done = reg.wait_done(8, Instant::now()).unwrap();
+        assert_eq!(done.spilled, 1);
+        assert_eq!(done.received_totals(), (3, 70));
+        assert!(!reg.would_accept(8), "settled round must reject");
+        reg.note_rejected(8); // late path
+        assert_eq!(metrics.get(names::RESULTS_LATE), 2);
+    }
+
+    #[test]
+    fn abandon_settles_accounting() {
+        let (reg, metrics) = registry();
+        open(&reg, 4);
+        reg.finalize(4, 3, 3);
+        reg.deliver(4, 0, Matrix::ones(1, 1), 1, 64);
+        assert!(reg.abandon(4));
+        assert!(!reg.abandon(4), "second abandon is a no-op");
+        assert_eq!(metrics.get(names::RESULTS_LATE), 1);
+        // The two never-delivered results now land through the stale path.
+        assert!(!reg.deliver(4, 1, Matrix::ones(1, 1), 1, 64));
+        assert_eq!(metrics.get(names::RESULTS_LATE), 2);
+    }
+}

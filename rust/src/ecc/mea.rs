@@ -37,6 +37,36 @@ pub enum MaskMode {
     RankOne,
 }
 
+/// A byte buffer sealed under MEA-ECC — the wire's *seal-the-bytes*
+/// form.
+///
+/// Where [`SealedMatrix`] encrypts a live `Matrix` struct (the in-memory
+/// form the complexity benches and fidelity tests exercise), this seals
+/// an already-serialized byte buffer: the ephemeral point `k·G` travels
+/// in the clear and every payload byte is XORed with a keystream derived
+/// from the shared point. It is what actually crosses a transport link
+/// (see `wire`/`transport`), so transmission security operates on real
+/// bytes rather than on structs that were never serialized.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SealedBytes<F: FieldElement> {
+    /// Ephemeral point `k·G` (§IV-B step 3, first ciphertext component).
+    pub ephemeral: Point<F>,
+    /// The masked payload bytes (same length as the plaintext).
+    pub bytes: Vec<u8>,
+}
+
+impl<F: FieldElement> SealedBytes<F> {
+    /// Ciphertext length in bytes.
+    pub fn len(&self) -> usize {
+        self.bytes.len()
+    }
+
+    /// True iff the payload is empty.
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+}
+
 /// A matrix encrypted under MEA-ECC.
 ///
 /// Carries the ephemeral public point `k·G` (the first ciphertext
@@ -61,6 +91,7 @@ impl<F: FieldElement> SealedMatrix<F> {
 }
 
 /// The MEA-ECC engine for one curve.
+#[derive(Clone)]
 pub struct MeaEcc<F: FieldElement> {
     curve: Curve<F>,
     mode: MaskMode,
@@ -84,16 +115,7 @@ impl<F: FieldElement> MeaEcc<F> {
         recipient_pk: &Point<F>,
         rng: &mut Rng,
     ) -> SealedMatrix<F> {
-        // Ephemeral scalar k, 1 < k < q. §Perf optimization #2: a 64-bit
-        // ephemeral is enough — the simulation curve's group order is
-        // ~2^61, so wider scalars only add doubling iterations without
-        // adding entropy (halves the per-message scalar-mul cost).
-        let k = loop {
-            let cand = U256::from_u64(rng.next_u64());
-            if !cand.is_zero() && cand != U256::ONE {
-                break cand;
-            }
-        };
+        let k = ephemeral_scalar(rng);
         let ephemeral = self.curve.mul_scalar(&k, &self.curve.generator());
         let shared = SharedSecret::from_point(self.curve.mul_scalar(&k, recipient_pk));
         let payload = apply_mask(m, &shared, self.mode, Direction::Seal);
@@ -106,6 +128,69 @@ impl<F: FieldElement> MeaEcc<F> {
             SharedSecret::from_point(self.curve.mul_scalar(keys.secret(), &sealed.ephemeral));
         apply_mask(&sealed.payload, &shared, sealed.mode, Direction::Open)
     }
+
+    /// Seal a serialized byte buffer to the holder of `recipient_pk` —
+    /// the wire form of §IV-B step 3.
+    ///
+    /// Always uses the keystream construction (a byte-level XOR pad from
+    /// the shared point): the rank-one mask is an f32 addition and has no
+    /// meaning on raw bytes. Self-inverse, so [`MeaEcc::open_bytes`] is
+    /// the same XOR under the recomputed shared point.
+    pub fn seal_bytes(
+        &self,
+        plain: &[u8],
+        recipient_pk: &Point<F>,
+        rng: &mut Rng,
+    ) -> SealedBytes<F> {
+        let k = ephemeral_scalar(rng);
+        let ephemeral = self.curve.mul_scalar(&k, &self.curve.generator());
+        let shared = SharedSecret::from_point(self.curve.mul_scalar(&k, recipient_pk));
+        SealedBytes { ephemeral, bytes: xor_keystream(plain, &shared) }
+    }
+
+    /// Open a sealed byte buffer with the recipient's key pair — the
+    /// wire form of §IV-B step 4.
+    pub fn open_bytes(&self, sealed: &SealedBytes<F>, keys: &KeyPair<F>) -> Vec<u8> {
+        let shared =
+            SharedSecret::from_point(self.curve.mul_scalar(keys.secret(), &sealed.ephemeral));
+        xor_keystream(&sealed.bytes, &shared)
+    }
+}
+
+/// Fresh ephemeral scalar k, 1 < k < q, shared by both seal paths.
+/// §Perf optimization #2: a 64-bit ephemeral is enough — the simulation
+/// curve's group order is ~2^61, so wider scalars only add doubling
+/// iterations without adding entropy (halves the per-message scalar-mul
+/// cost).
+fn ephemeral_scalar(rng: &mut Rng) -> U256 {
+    loop {
+        let cand = U256::from_u64(rng.next_u64());
+        if !cand.is_zero() && cand != U256::ONE {
+            break cand;
+        }
+    }
+}
+
+/// XOR `bytes` with the SplitMix64 keystream seeded from the shared
+/// point, 8 bytes per draw. Self-inverse.
+fn xor_keystream<F: FieldElement>(bytes: &[u8], shared: &SharedSecret<F>) -> Vec<u8> {
+    let mut ks = SplitMix64::new(shared.keystream_seed());
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut chunks = bytes.chunks_exact(8);
+    for chunk in &mut chunks {
+        let pad = ks.next_u64().to_le_bytes();
+        for (b, p) in chunk.iter().zip(pad.iter()) {
+            out.push(b ^ p);
+        }
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let pad = ks.next_u64().to_le_bytes();
+        for (b, p) in rem.iter().zip(pad.iter()) {
+            out.push(b ^ p);
+        }
+    }
+    out
 }
 
 #[derive(Clone, Copy, PartialEq)]
@@ -235,6 +320,47 @@ mod tests {
             s2.payload.as_slice(),
             "same plaintext must yield different ciphertexts"
         );
+    }
+
+    #[test]
+    fn seal_bytes_round_trip_is_exact() {
+        let (mea, worker, mut rng) = setup();
+        for len in [0usize, 1, 7, 8, 9, 64, 1023] {
+            let plain: Vec<u8> = (0..len).map(|_| rng.next_u32() as u8).collect();
+            let sealed = mea.seal_bytes(&plain, &worker.public(), &mut rng);
+            assert_eq!(sealed.len(), len);
+            assert_eq!(mea.open_bytes(&sealed, &worker), plain, "len={len}");
+        }
+    }
+
+    #[test]
+    fn seal_bytes_masks_every_block() {
+        let (mea, worker, mut rng) = setup();
+        let plain = vec![0u8; 256];
+        let sealed = mea.seal_bytes(&plain, &worker.public(), &mut rng);
+        // The ciphertext of an all-zero buffer IS the keystream; it must
+        // look nothing like the plaintext.
+        let zeros = sealed.bytes.iter().filter(|&&b| b == 0).count();
+        assert!(zeros < 32, "{zeros}/256 ciphertext bytes are zero");
+    }
+
+    #[test]
+    fn seal_bytes_wrong_key_fails_to_open() {
+        let (mea, worker, mut rng) = setup();
+        let eve = KeyPair::generate(mea.curve(), &mut rng);
+        let plain: Vec<u8> = (0..128).map(|i| i as u8).collect();
+        let sealed = mea.seal_bytes(&plain, &worker.public(), &mut rng);
+        assert_ne!(mea.open_bytes(&sealed, &eve), plain);
+    }
+
+    #[test]
+    fn seal_bytes_fresh_ephemeral_per_message() {
+        let (mea, worker, mut rng) = setup();
+        let plain = vec![0x5Au8; 64];
+        let s1 = mea.seal_bytes(&plain, &worker.public(), &mut rng);
+        let s2 = mea.seal_bytes(&plain, &worker.public(), &mut rng);
+        assert_ne!(s1.ephemeral, s2.ephemeral);
+        assert_ne!(s1.bytes, s2.bytes);
     }
 
     #[test]

@@ -20,7 +20,7 @@ pub mod mea;
 
 pub use curve::{Curve, Point};
 pub use keys::{KeyPair, SharedSecret};
-pub use mea::{MaskMode, MeaEcc, SealedMatrix};
+pub use mea::{MaskMode, MeaEcc, SealedBytes, SealedMatrix};
 
 use crate::field::{Fp61, FpBig, U256};
 use crate::field::FieldElement;

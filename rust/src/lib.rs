@@ -25,6 +25,14 @@
 //! flight at once. All eight schemes — MatDot included — implement the
 //! task-level [`Scheme`](coding::Scheme) trait.
 //!
+//! Master and workers exchange *serialized frames* — a versioned,
+//! checksummed binary format ([`wire`]) — over a pluggable fabric
+//! ([`transport`]): in-process channels by default, localhost TCP
+//! sockets with `transport = "tcp"`. A background collector thread on
+//! the master routes results to their in-flight rounds, and the
+//! transport feeds real `bytes_tx`/`bytes_rx` counters (the honest half
+//! of the Fig. 6 communication accounting).
+//!
 //! The compiled artifacts are executed from Rust through the PJRT C API
 //! ([`runtime`]); Python never runs on the request path.
 //!
@@ -46,3 +54,5 @@ pub mod prop;
 pub mod rng;
 pub mod runtime;
 pub mod sim;
+pub mod transport;
+pub mod wire;

@@ -13,7 +13,7 @@
 use spacdc::analysis::CostModel;
 use spacdc::cli::{parse, usage, ArgSpec};
 use spacdc::coding::CodedTask;
-use spacdc::config::{SchemeKind, SystemConfig};
+use spacdc::config::{SchemeKind, SystemConfig, TransportKind, TransportSecurity};
 use spacdc::coordinator::MasterBuilder;
 use spacdc::dl::{train, TrainerOptions};
 use spacdc::matrix::{gram, split_rows, Matrix};
@@ -31,6 +31,9 @@ fn specs() -> Vec<ArgSpec> {
         ArgSpec::opt("colluders", "3", "number of colluders T"),
         ArgSpec::opt("partitions", "4", "number of data partitions K"),
         ArgSpec::opt("epochs", "10", "training epochs"),
+        ArgSpec::opt("transport", "inproc", "worker link fabric: inproc|tcp"),
+        ArgSpec::opt("security", "mea-ecc", "payload sealing: plain|mea-ecc"),
+        ArgSpec::opt("round-deadline-s", "60", "per-round result-collection deadline (s)"),
         ArgSpec::opt("seed", "49374", "experiment seed"),
         ArgSpec::opt("base-service-ms", "0", "injected per-task service time (ms)"),
         ArgSpec::opt("rows", "512", "data rows m (round subcommand)"),
@@ -66,6 +69,11 @@ fn main() -> anyhow::Result<()> {
     cfg.colluders = parsed.get_usize("colluders");
     cfg.partitions = parsed.get_usize("partitions");
     cfg.dl.epochs = parsed.get_usize("epochs");
+    cfg.transport = TransportKind::from_str_token(parsed.get_str("transport"))
+        .ok_or_else(|| anyhow::anyhow!("unknown transport {}", parsed.get_str("transport")))?;
+    cfg.security = TransportSecurity::from_str_token(parsed.get_str("security"))
+        .ok_or_else(|| anyhow::anyhow!("unknown security {}", parsed.get_str("security")))?;
+    cfg.round_deadline_s = parsed.get_f64("round-deadline-s");
     cfg.seed = parsed.get_u64("seed");
     cfg.delay.base_service_s = parsed.get_f64("base-service-ms") / 1e3;
     cfg.use_pjrt = !parsed.has_flag("no-pjrt");
@@ -133,8 +141,9 @@ fn cmd_train(cfg: &SystemConfig) -> anyhow::Result<()> {
 
 fn cmd_round(cfg: &SystemConfig, rows: usize, cols: usize) -> anyhow::Result<()> {
     println!(
-        "one coded round: scheme={} f(X)=XXᵀ on {}x{} data",
+        "one coded round: scheme={} transport={} f(X)=XXᵀ on {}x{} data",
         cfg.scheme.name(),
+        cfg.transport.name(),
         rows,
         cols
     );

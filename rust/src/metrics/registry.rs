@@ -22,6 +22,14 @@ pub mod names {
     pub const SYMBOLS_TO_WORKERS: &str = "comm.symbols_to_workers";
     /// Symbols (f32 elements) sent workers → master.
     pub const SYMBOLS_TO_MASTER: &str = "comm.symbols_to_master";
+    /// Serialized frame bytes the transport sent master → workers.
+    pub const BYTES_TX: &str = "comm.bytes_tx";
+    /// Serialized frame bytes of the results each decode consumed
+    /// (credited at decode time, so the counter is deterministic;
+    /// rejected/late frames are never charged).
+    pub const BYTES_RX: &str = "comm.bytes_rx";
+    /// Frames dropped for failing wire validation (truncation/corruption).
+    pub const WIRE_ERRORS: &str = "comm.wire_errors";
     /// Tasks dispatched.
     pub const TASKS_DISPATCHED: &str = "sched.tasks_dispatched";
     /// Results accepted by the decoder.

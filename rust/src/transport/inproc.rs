@@ -1,0 +1,57 @@
+//! The in-process fabric: per-worker `mpsc` channels carrying frames.
+//!
+//! Functionally identical to [`Tcp`](super::Tcp) — the same serialized
+//! bytes move, the same counters tick — minus the syscalls. This is the
+//! default fabric for tests, benches, and single-machine runs.
+
+use super::{Fabric, Transport, TransportError, WorkerLink};
+use crate::config::TransportKind;
+use crate::metrics::{names, MetricsRegistry};
+use std::sync::mpsc::{self, Sender};
+use std::sync::Arc;
+
+/// Master-side sender over per-worker channels.
+pub struct InProc {
+    order_txs: Vec<Sender<Vec<u8>>>,
+    metrics: Arc<MetricsRegistry>,
+}
+
+impl InProc {
+    /// Wire `n` channel links plus the merged inbound channel.
+    pub fn connect(n: usize, metrics: Arc<MetricsRegistry>) -> Fabric {
+        let (result_tx, inbound) = mpsc::channel::<Vec<u8>>();
+        let mut order_txs = Vec::with_capacity(n);
+        let mut links = Vec::with_capacity(n);
+        for _ in 0..n {
+            let (order_tx, order_rx) = mpsc::channel::<Vec<u8>>();
+            order_txs.push(order_tx);
+            links.push(WorkerLink::InProc { orders: order_rx, results: result_tx.clone() });
+        }
+        let transport = Box::new(InProc { order_txs, metrics });
+        Fabric { transport, inbound, links }
+    }
+}
+
+impl Transport for InProc {
+    fn kind(&self) -> TransportKind {
+        TransportKind::InProc
+    }
+
+    fn workers(&self) -> usize {
+        self.order_txs.len()
+    }
+
+    fn send(&self, w: usize, frame: Vec<u8>) -> Result<(), TransportError> {
+        let tx = self.order_txs.get(w).ok_or_else(|| TransportError::WorkerDown {
+            worker: w,
+            detail: format!("no such link (fabric has {})", self.order_txs.len()),
+        })?;
+        let len = frame.len() as u64;
+        tx.send(frame).map_err(|_| TransportError::WorkerDown {
+            worker: w,
+            detail: "order channel disconnected".into(),
+        })?;
+        self.metrics.add(names::BYTES_TX, len);
+        Ok(())
+    }
+}

@@ -1,0 +1,225 @@
+//! Pluggable master↔worker transports — DESIGN.md §5.
+//!
+//! The coordinator never touches channels or sockets directly: it sends
+//! framed bytes ([`crate::wire`]) through a [`Transport`] and receives
+//! result frames from a single merged inbound channel. Two fabrics
+//! implement the contract, selected by the `transport` config key /
+//! `--transport` CLI flag ([`TransportKind`](crate::config::TransportKind)):
+//!
+//! * [`InProc`] — per-worker `mpsc` channels carrying the *same frames*
+//!   TCP would carry. The default: zero syscalls, but every byte is still
+//!   serialized, checksummed, and counted.
+//! * [`Tcp`] — localhost sockets, one connection per worker,
+//!   length-prefixed frames. One bridge thread per connection reads
+//!   result frames off its socket into the merged inbound channel, so
+//!   the master side is transport-agnostic. This is the gateway to
+//!   out-of-process workers: the worker loop already speaks only bytes.
+//!
+//! [`connect`] wires a whole fabric at once and returns the three parts:
+//! the master-side sender ([`Transport`]), the merged inbound receiver,
+//! and one [`WorkerLink`] endpoint per worker (moved into the worker
+//! threads by [`WorkerPool`](crate::coordinator::WorkerPool)).
+//!
+//! Byte accounting: `Transport::send` counts `comm.bytes_tx` at the
+//! moment a frame enters the fabric; the master's collector thread
+//! counts `comm.bytes_rx` as frames leave it (`coordinator/master.rs`),
+//! so both counters measure real serialized frames, whatever the fabric.
+
+mod inproc;
+mod tcp;
+
+pub use inproc::InProc;
+pub use tcp::Tcp;
+
+use crate::config::TransportKind;
+use crate::metrics::MetricsRegistry;
+use crate::wire::{self, WireError};
+use std::io::Write;
+use std::net::TcpStream;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// Transport failure modes.
+#[derive(Debug)]
+pub enum TransportError {
+    /// The link to one worker is down (thread dead / socket closed).
+    /// The coordinator treats such a worker as a permanent straggler.
+    WorkerDown {
+        /// Which worker's link failed.
+        worker: usize,
+        /// Underlying cause.
+        detail: String,
+    },
+    /// The fabric could not be wired up.
+    Setup(String),
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::WorkerDown { worker, detail } => {
+                write!(f, "link to worker {worker} is down: {detail}")
+            }
+            TransportError::Setup(msg) => write!(f, "transport setup failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// The master-side sender half of a wired fabric: delivers one frame to
+/// one worker. Implementations count every sent byte into
+/// `comm.bytes_tx`.
+///
+/// `send` takes the frame by value: the dispatch path builds one owned
+/// frame per worker anyway, and the in-proc fabric can move it straight
+/// into the channel without a copy (TCP writes from the buffer either
+/// way).
+pub trait Transport: Send + Sync {
+    /// Which fabric this is.
+    fn kind(&self) -> TransportKind;
+
+    /// Number of worker links.
+    fn workers(&self) -> usize;
+
+    /// Send one complete frame to worker `w`.
+    fn send(&self, w: usize, frame: Vec<u8>) -> Result<(), TransportError>;
+}
+
+/// A worker's endpoint of the fabric: a blocking source of order frames
+/// and a sink for result frames. Moved into the worker thread.
+pub enum WorkerLink {
+    /// In-process channel pair.
+    InProc {
+        /// Order frames from the master.
+        orders: Receiver<Vec<u8>>,
+        /// Result frames back to the master (merged inbound channel).
+        results: Sender<Vec<u8>>,
+    },
+    /// The worker side of one TCP connection.
+    Tcp {
+        /// Full-duplex socket: orders are read from it, results written.
+        stream: TcpStream,
+    },
+}
+
+impl WorkerLink {
+    /// Block for the next order frame. [`WireError::Closed`] means the
+    /// master hung up and the worker loop should exit.
+    pub fn recv(&mut self) -> Result<Vec<u8>, WireError> {
+        match self {
+            WorkerLink::InProc { orders, .. } => {
+                orders.recv().map_err(|_| WireError::Closed)
+            }
+            WorkerLink::Tcp { stream } => wire::read_frame(stream),
+        }
+    }
+
+    /// Send one result frame to the master. Errors mean the master side
+    /// is gone and the worker loop should exit.
+    pub fn send(&mut self, frame: &[u8]) -> Result<(), WireError> {
+        match self {
+            WorkerLink::InProc { results, .. } => {
+                results.send(frame.to_vec()).map_err(|_| WireError::Closed)
+            }
+            WorkerLink::Tcp { stream } => {
+                stream.write_all(frame)?;
+                Ok(())
+            }
+        }
+    }
+}
+
+/// A fully wired fabric, ready to hand to the worker pool.
+pub struct Fabric {
+    /// Master-side sender.
+    pub transport: Box<dyn Transport>,
+    /// Merged worker→master result frames (consumed by the collector).
+    pub inbound: Receiver<Vec<u8>>,
+    /// One endpoint per worker, index-aligned.
+    pub links: Vec<WorkerLink>,
+}
+
+/// Wire up a fabric of `n` worker links of the given kind.
+pub fn connect(
+    kind: TransportKind,
+    n: usize,
+    metrics: Arc<MetricsRegistry>,
+) -> Result<Fabric, TransportError> {
+    match kind {
+        TransportKind::InProc => Ok(InProc::connect(n, metrics)),
+        TransportKind::Tcp => Tcp::connect(n, metrics),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::names;
+    use crate::wire::{frame, MsgKind};
+
+    fn echo_fabric_check(kind: TransportKind) {
+        let metrics = Arc::new(MetricsRegistry::new());
+        let fabric = connect(kind, 3, Arc::clone(&metrics)).unwrap();
+        // Workers echo every order frame back as-is.
+        let joins: Vec<_> = fabric
+            .links
+            .into_iter()
+            .map(|mut link| {
+                std::thread::spawn(move || {
+                    while let Ok(f) = link.recv() {
+                        if link.send(&f).is_err() {
+                            break;
+                        }
+                    }
+                })
+            })
+            .collect();
+        let frames: Vec<Vec<u8>> = (0..3)
+            .map(|w| frame(MsgKind::Order, format!("order for {w}").as_bytes()))
+            .collect();
+        for (w, f) in frames.iter().enumerate() {
+            fabric.transport.send(w, f.clone()).unwrap();
+        }
+        let mut got: Vec<Vec<u8>> = (0..3)
+            .map(|_| {
+                fabric
+                    .inbound
+                    .recv_timeout(std::time::Duration::from_secs(5))
+                    .expect("echo frame")
+            })
+            .collect();
+        got.sort();
+        let mut want = frames.clone();
+        want.sort();
+        assert_eq!(got, want);
+        let tx: u64 = frames.iter().map(|f| f.len() as u64).sum();
+        assert_eq!(metrics.get(names::BYTES_TX), tx);
+        drop(fabric.transport); // closes the links → workers exit
+        for j in joins {
+            j.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn inproc_fabric_echoes_frames_and_counts_bytes() {
+        echo_fabric_check(TransportKind::InProc);
+    }
+
+    #[test]
+    fn tcp_fabric_echoes_frames_and_counts_bytes() {
+        echo_fabric_check(TransportKind::Tcp);
+    }
+
+    #[test]
+    fn send_to_dead_worker_is_a_typed_error() {
+        let metrics = Arc::new(MetricsRegistry::new());
+        let fabric = connect(TransportKind::InProc, 2, metrics).unwrap();
+        drop(fabric.links); // every worker endpoint gone
+        let f = frame(MsgKind::Order, b"x");
+        match fabric.transport.send(0, f) {
+            Err(TransportError::WorkerDown { worker: 0, .. }) => {}
+            other => panic!("expected WorkerDown, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,112 @@
+//! The TCP fabric: localhost sockets, one connection per worker,
+//! length-prefixed frames.
+//!
+//! Wiring (all on 127.0.0.1, ephemeral port): the master binds a
+//! listener, then for each worker dials one connection and accepts its
+//! peer — dial and accept are paired serially, so link `w` is
+//! unambiguous without a handshake. The accepted (worker-side) socket
+//! becomes that worker's [`WorkerLink`]; the dialing (master-side)
+//! socket is kept for order writes, and a clone of it feeds one *bridge
+//! thread* that reads result frames off the socket into the merged
+//! inbound channel. The master therefore consumes one
+//! `Receiver<Vec<u8>>` regardless of fabric — the bridge is the only
+//! TCP-specific reader.
+//!
+//! Shutdown: dropping the [`Tcp`] sender shuts both directions of every
+//! master-side socket. Workers see EOF (`WireError::Closed`) and exit;
+//! bridge threads see EOF and exit, dropping their inbound senders,
+//! which disconnects the collector. Drop then joins the bridges.
+
+use super::{Fabric, Transport, TransportError, WorkerLink};
+use crate::config::TransportKind;
+use crate::metrics::{names, MetricsRegistry};
+use crate::wire;
+use std::io::Write;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// Master-side sender over per-worker localhost sockets.
+pub struct Tcp {
+    streams: Vec<Mutex<TcpStream>>,
+    metrics: Arc<MetricsRegistry>,
+    bridges: Vec<JoinHandle<()>>,
+}
+
+impl Tcp {
+    /// Wire `n` socket links plus the bridged inbound channel.
+    pub fn connect(n: usize, metrics: Arc<MetricsRegistry>) -> Result<Fabric, TransportError> {
+        let setup = |e: std::io::Error| TransportError::Setup(e.to_string());
+        let listener = TcpListener::bind(("127.0.0.1", 0)).map_err(setup)?;
+        let addr = listener.local_addr().map_err(setup)?;
+        let (result_tx, inbound) = mpsc::channel::<Vec<u8>>();
+        let mut streams = Vec::with_capacity(n);
+        let mut bridges = Vec::with_capacity(n);
+        let mut links = Vec::with_capacity(n);
+        for w in 0..n {
+            let master_side = TcpStream::connect(addr).map_err(setup)?;
+            let (worker_side, _) = listener.accept().map_err(setup)?;
+            master_side.set_nodelay(true).map_err(setup)?;
+            worker_side.set_nodelay(true).map_err(setup)?;
+            let reader = master_side.try_clone().map_err(setup)?;
+            bridges.push(spawn_bridge(w, reader, result_tx.clone()));
+            streams.push(Mutex::new(master_side));
+            links.push(WorkerLink::Tcp { stream: worker_side });
+        }
+        let transport = Box::new(Tcp { streams, metrics, bridges });
+        Ok(Fabric { transport, inbound, links })
+    }
+}
+
+/// One bridge per connection: result frames socket → merged channel.
+fn spawn_bridge(w: usize, mut reader: TcpStream, tx: Sender<Vec<u8>>) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(format!("tcp-bridge-{w}"))
+        .spawn(move || loop {
+            match wire::read_frame(&mut reader) {
+                Ok(frame) => {
+                    if tx.send(frame).is_err() {
+                        break; // collector gone
+                    }
+                }
+                Err(_) => break, // EOF, shutdown, or a poisoned stream
+            }
+        })
+        .expect("spawn tcp bridge")
+}
+
+impl Transport for Tcp {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Tcp
+    }
+
+    fn workers(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn send(&self, w: usize, frame: Vec<u8>) -> Result<(), TransportError> {
+        let stream = self.streams.get(w).ok_or_else(|| TransportError::WorkerDown {
+            worker: w,
+            detail: format!("no such link (fabric has {})", self.streams.len()),
+        })?;
+        let mut s = stream.lock().unwrap();
+        s.write_all(&frame).map_err(|e| TransportError::WorkerDown {
+            worker: w,
+            detail: format!("socket write failed: {e}"),
+        })?;
+        self.metrics.add(names::BYTES_TX, frame.len() as u64);
+        Ok(())
+    }
+}
+
+impl Drop for Tcp {
+    fn drop(&mut self) {
+        for s in &self.streams {
+            let _ = s.lock().unwrap().shutdown(Shutdown::Both);
+        }
+        for b in self.bridges.drain(..) {
+            let _ = b.join();
+        }
+    }
+}

@@ -1,0 +1,426 @@
+//! Body codecs: typed messages ⇄ little-endian bytes.
+//!
+//! Field-by-field layouts (all integers LE):
+//!
+//! ```text
+//! Matrix       := rows:u32 cols:u32 data:[f32; rows·cols]
+//! Point        := tag:u8 (0 = infinity | 1 = affine x:u64 y:u64)
+//! WorkerOp     := tag:u8 (0 = Gram | 1 = RightMul Matrix |
+//!                         2 = PairProduct | 3 = Identity)
+//! WirePayload  := tag:u8 (0 = Plain Matrix |
+//!                         1 = Sealed Point rows:u32 cols:u32
+//!                             len:u32 bytes:[u8; len])
+//! WorkOrder    := round:u64 worker:u32 delay_ns:u64 WorkerOp
+//!                 n_payloads:u16 WirePayload*
+//! ResultMsg    := round:u64 worker:u32 WirePayload
+//! ```
+//!
+//! A sealed payload travels as MEA-ECC seal-the-bytes: the ephemeral
+//! point in the clear, the matrix *shape* in the clear (framing needs
+//! it), and the row-major f32 data bytes XOR-masked by the keystream —
+//! see [`SealedPayload`](crate::coordinator::SealedPayload).
+
+use super::frame::{frame, unframe, MsgKind, WireError, MAX_BODY_LEN};
+use crate::coordinator::{ResultMsg, SealedPayload, WirePayload, WorkOrder};
+use crate::ecc::{Point, SealedBytes};
+use crate::field::Fp61;
+use crate::matrix::Matrix;
+use crate::runtime::WorkerOp;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Matrix dimensions above this are treated as corruption.
+const MAX_DIM: usize = 1 << 24;
+
+/// A decoded frame, either direction.
+#[derive(Debug)]
+pub enum WireMessage {
+    /// Master → worker.
+    Order(WorkOrder),
+    /// Worker → master.
+    Result(ResultMsg),
+}
+
+/// Encode a work order into a complete frame.
+pub fn encode_order(order: &WorkOrder) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, order.round);
+    put_u32(&mut body, order.worker as u32);
+    put_u64(&mut body, order.delay.as_nanos() as u64);
+    put_op(&mut body, &order.op);
+    put_u16(&mut body, order.payloads.len() as u16);
+    for p in &order.payloads {
+        put_payload(&mut body, p);
+    }
+    frame(MsgKind::Order, &body)
+}
+
+/// Encode a worker result into a complete frame.
+pub fn encode_result(msg: &ResultMsg) -> Vec<u8> {
+    let mut body = Vec::new();
+    put_u64(&mut body, msg.round);
+    put_u32(&mut body, msg.worker as u32);
+    put_payload(&mut body, &msg.payload);
+    frame(MsgKind::Result, &body)
+}
+
+/// Decode either message kind from a complete frame.
+pub fn decode_message(buf: &[u8]) -> Result<WireMessage, WireError> {
+    let (kind, body) = unframe(buf)?;
+    let mut cur = Cur::new(body);
+    let msg = match kind {
+        MsgKind::Order => WireMessage::Order(read_order(&mut cur)?),
+        MsgKind::Result => WireMessage::Result(read_result(&mut cur)?),
+    };
+    cur.finish()?;
+    Ok(msg)
+}
+
+/// Decode a frame that must be a work order.
+pub fn decode_order(buf: &[u8]) -> Result<WorkOrder, WireError> {
+    match decode_message(buf)? {
+        WireMessage::Order(o) => Ok(o),
+        WireMessage::Result(_) => {
+            Err(WireError::Malformed("expected an order frame, got a result".into()))
+        }
+    }
+}
+
+/// Decode a frame that must be a worker result.
+pub fn decode_result(buf: &[u8]) -> Result<ResultMsg, WireError> {
+    match decode_message(buf)? {
+        WireMessage::Result(r) => Ok(r),
+        WireMessage::Order(_) => {
+            Err(WireError::Malformed("expected a result frame, got an order".into()))
+        }
+    }
+}
+
+/// Row-major little-endian f32 bytes of a matrix — the buffer MEA-ECC
+/// seals for the wire.
+pub fn matrix_to_le_bytes(m: &Matrix) -> Vec<u8> {
+    let mut out = Vec::with_capacity(m.len() * 4);
+    for v in m.as_slice() {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Rebuild a matrix from row-major little-endian f32 bytes.
+pub fn matrix_from_le_bytes(rows: usize, cols: usize, bytes: &[u8]) -> Result<Matrix, WireError> {
+    let elems = check_dims(rows, cols)?;
+    if bytes.len() != elems * 4 {
+        return Err(WireError::Malformed(format!(
+            "matrix data is {} bytes, {rows}x{cols} needs {}",
+            bytes.len(),
+            elems * 4
+        )));
+    }
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok(Matrix::from_vec(rows, cols, data))
+}
+
+fn check_dims(rows: usize, cols: usize) -> Result<usize, WireError> {
+    if rows > MAX_DIM || cols > MAX_DIM {
+        return Err(WireError::Malformed(format!("matrix dims {rows}x{cols} over cap")));
+    }
+    let elems = rows
+        .checked_mul(cols)
+        .ok_or_else(|| WireError::Malformed(format!("matrix dims {rows}x{cols} overflow")))?;
+    if elems * 4 > MAX_BODY_LEN {
+        return Err(WireError::Malformed(format!("matrix {rows}x{cols} over body cap")));
+    }
+    Ok(elems)
+}
+
+// ---------------------------------------------------------------- writers
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_matrix(out: &mut Vec<u8>, m: &Matrix) {
+    put_u32(out, m.rows() as u32);
+    put_u32(out, m.cols() as u32);
+    out.extend_from_slice(&matrix_to_le_bytes(m));
+}
+
+fn put_point(out: &mut Vec<u8>, p: &Point<Fp61>) {
+    match p.xy() {
+        None => out.push(0),
+        Some((x, y)) => {
+            out.push(1);
+            put_u64(out, x.value());
+            put_u64(out, y.value());
+        }
+    }
+}
+
+fn put_op(out: &mut Vec<u8>, op: &WorkerOp) {
+    match op {
+        WorkerOp::Gram => out.push(0),
+        WorkerOp::RightMul(v) => {
+            out.push(1);
+            put_matrix(out, v);
+        }
+        WorkerOp::PairProduct => out.push(2),
+        WorkerOp::Identity => out.push(3),
+    }
+}
+
+fn put_payload(out: &mut Vec<u8>, p: &WirePayload) {
+    match p {
+        WirePayload::Plain(m) => {
+            out.push(0);
+            put_matrix(out, m);
+        }
+        WirePayload::Sealed(s) => {
+            out.push(1);
+            put_point(out, &s.sealed.ephemeral);
+            put_u32(out, s.rows as u32);
+            put_u32(out, s.cols as u32);
+            put_u32(out, s.sealed.bytes.len() as u32);
+            out.extend_from_slice(&s.sealed.bytes);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- readers
+
+/// Bounds-checked body reader.
+struct Cur<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        let rest = self.buf.len() - self.pos;
+        if rest < n {
+            return Err(WireError::Truncated { need: n, got: rest });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// The whole body must be consumed — leftovers mean a framing bug.
+    fn finish(&self) -> Result<(), WireError> {
+        if self.pos != self.buf.len() {
+            return Err(WireError::Malformed(format!(
+                "{} unconsumed body bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn read_matrix(cur: &mut Cur) -> Result<Matrix, WireError> {
+    let rows = cur.u32()? as usize;
+    let cols = cur.u32()? as usize;
+    let elems = check_dims(rows, cols)?;
+    let bytes = cur.take(elems * 4)?;
+    matrix_from_le_bytes(rows, cols, bytes)
+}
+
+fn read_point(cur: &mut Cur) -> Result<Point<Fp61>, WireError> {
+    match cur.u8()? {
+        0 => Ok(Point::Infinity),
+        1 => {
+            let x = Fp61::new(cur.u64()?);
+            let y = Fp61::new(cur.u64()?);
+            Ok(Point::affine(x, y))
+        }
+        tag => Err(WireError::BadTag { what: "point", tag }),
+    }
+}
+
+fn read_op(cur: &mut Cur) -> Result<WorkerOp, WireError> {
+    match cur.u8()? {
+        0 => Ok(WorkerOp::Gram),
+        1 => Ok(WorkerOp::RightMul(Arc::new(read_matrix(cur)?))),
+        2 => Ok(WorkerOp::PairProduct),
+        3 => Ok(WorkerOp::Identity),
+        tag => Err(WireError::BadTag { what: "worker op", tag }),
+    }
+}
+
+fn read_payload(cur: &mut Cur) -> Result<WirePayload, WireError> {
+    match cur.u8()? {
+        0 => Ok(WirePayload::Plain(read_matrix(cur)?)),
+        1 => {
+            let ephemeral = read_point(cur)?;
+            let rows = cur.u32()? as usize;
+            let cols = cur.u32()? as usize;
+            let elems = check_dims(rows, cols)?;
+            let len = cur.u32()? as usize;
+            if len != elems * 4 {
+                return Err(WireError::Malformed(format!(
+                    "sealed payload is {len} bytes, {rows}x{cols} needs {}",
+                    elems * 4
+                )));
+            }
+            let bytes = cur.take(len)?.to_vec();
+            Ok(WirePayload::Sealed(SealedPayload {
+                sealed: SealedBytes { ephemeral, bytes },
+                rows,
+                cols,
+            }))
+        }
+        tag => Err(WireError::BadTag { what: "payload", tag }),
+    }
+}
+
+fn read_order(cur: &mut Cur) -> Result<WorkOrder, WireError> {
+    let round = cur.u64()?;
+    let worker = cur.u32()? as usize;
+    let delay = Duration::from_nanos(cur.u64()?);
+    let op = read_op(cur)?;
+    let n = cur.u16()? as usize;
+    let mut payloads = Vec::with_capacity(n);
+    for _ in 0..n {
+        payloads.push(read_payload(cur)?);
+    }
+    Ok(WorkOrder { round, worker, op, payloads, delay })
+}
+
+fn read_result(cur: &mut Cur) -> Result<ResultMsg, WireError> {
+    let round = cur.u64()?;
+    let worker = cur.u32()? as usize;
+    let payload = read_payload(cur)?;
+    Ok(ResultMsg { round, worker, payload })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    fn payloads_eq(a: &WirePayload, b: &WirePayload) -> bool {
+        match (a, b) {
+            (WirePayload::Plain(x), WirePayload::Plain(y)) => x == y,
+            (WirePayload::Sealed(x), WirePayload::Sealed(y)) => {
+                x.sealed.ephemeral == y.sealed.ephemeral
+                    && x.sealed.bytes == y.sealed.bytes
+                    && x.rows == y.rows
+                    && x.cols == y.cols
+            }
+            _ => false,
+        }
+    }
+
+    #[test]
+    fn plain_order_round_trips() {
+        let mut rng = rng_from_seed(1);
+        let m = Matrix::random_gaussian(5, 7, 0.0, 1.0, &mut rng);
+        let v = Matrix::random_gaussian(7, 3, 0.0, 1.0, &mut rng);
+        let order = WorkOrder {
+            round: 42,
+            worker: 3,
+            op: WorkerOp::RightMul(Arc::new(v.clone())),
+            payloads: vec![WirePayload::Plain(m.clone())],
+            delay: Duration::from_millis(17),
+        };
+        let back = decode_order(&encode_order(&order)).unwrap();
+        assert_eq!(back.round, 42);
+        assert_eq!(back.worker, 3);
+        assert_eq!(back.delay, Duration::from_millis(17));
+        assert!(matches!(&back.op, WorkerOp::RightMul(w) if **w == v));
+        assert_eq!(back.payloads.len(), 1);
+        assert!(payloads_eq(&back.payloads[0], &order.payloads[0]));
+    }
+
+    #[test]
+    fn sealed_result_round_trips() {
+        let msg = ResultMsg {
+            round: 9,
+            worker: 11,
+            payload: WirePayload::Sealed(SealedPayload {
+                sealed: SealedBytes {
+                    ephemeral: Point::affine(Fp61::new(123), Fp61::new(456)),
+                    bytes: vec![0xAB; 2 * 3 * 4],
+                },
+                rows: 2,
+                cols: 3,
+            }),
+        };
+        let back = decode_result(&encode_result(&msg)).unwrap();
+        assert_eq!(back.round, 9);
+        assert_eq!(back.worker, 11);
+        assert!(payloads_eq(&back.payload, &msg.payload));
+    }
+
+    #[test]
+    fn kind_confusion_is_rejected() {
+        let msg = ResultMsg {
+            round: 1,
+            worker: 0,
+            payload: WirePayload::Plain(Matrix::ones(1, 1)),
+        };
+        let f = encode_result(&msg);
+        assert!(decode_order(&f).is_err());
+    }
+
+    #[test]
+    fn empty_matrix_round_trips() {
+        let order = WorkOrder {
+            round: 1,
+            worker: 0,
+            op: WorkerOp::Identity,
+            payloads: vec![WirePayload::Plain(Matrix::zeros(0, 4))],
+            delay: Duration::ZERO,
+        };
+        let back = decode_order(&encode_order(&order)).unwrap();
+        assert!(matches!(&back.payloads[0],
+            WirePayload::Plain(m) if m.shape() == (0, 4)));
+    }
+
+    #[test]
+    fn sealed_length_mismatch_is_rejected() {
+        // Hand-assemble a sealed payload whose byte length disagrees
+        // with its shape.
+        let mut body = Vec::new();
+        put_u64(&mut body, 1); // round
+        put_u32(&mut body, 0); // worker
+        body.push(1); // sealed payload tag
+        put_point(&mut body, &Point::affine(Fp61::new(1), Fp61::new(2)));
+        put_u32(&mut body, 2); // rows
+        put_u32(&mut body, 2); // cols
+        put_u32(&mut body, 7); // wrong: needs 16
+        body.extend_from_slice(&[0u8; 7]);
+        let f = frame(MsgKind::Result, &body);
+        assert!(matches!(decode_result(&f), Err(WireError::Malformed(_))));
+    }
+}

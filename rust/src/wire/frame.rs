@@ -1,0 +1,330 @@
+//! Frame layer: magic, version, kind, length, CRC — DESIGN.md §5.
+//!
+//! Every message crossing a master↔worker link is one frame:
+//!
+//! ```text
+//! offset  size  field
+//!      0     4  magic      b"SPDC" (little-endian u32 0x43445053)
+//!      4     2  version    u16 LE — currently 1
+//!      6     1  kind       1 = WorkOrder, 2 = ResultMsg
+//!      7     1  reserved   0
+//!      8     4  body_len   u32 LE
+//!     12     n  body       message-specific (see `codec`)
+//!  12+n      4  checksum   CRC-32 (IEEE) over body, u32 LE
+//! ```
+//!
+//! The header is fixed-size, so a stream reader ([`read_frame`]) can pull
+//! the header, learn `body_len`, and read the exact remainder — the
+//! length-prefixed framing the TCP transport relies on. Truncation and
+//! corruption surface as typed [`WireError`]s, never as garbage messages.
+
+use std::io::Read;
+
+/// Frame magic: the bytes `b"SPDC"` read as a little-endian u32.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"SPDC");
+
+/// Current wire-format version.
+pub const VERSION: u16 = 1;
+
+/// Fixed header size (magic + version + kind + reserved + body_len).
+pub const HEADER_LEN: usize = 12;
+
+/// Trailer size (CRC-32 over the body).
+pub const TRAILER_LEN: usize = 4;
+
+/// Hard cap on a frame body (guards corrupted lengths from OOM-ing the
+/// reader): 1 GiB covers any matrix this system ships.
+pub const MAX_BODY_LEN: usize = 1 << 30;
+
+/// Message kinds carried by a frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MsgKind {
+    /// Master → worker: a [`WorkOrder`](crate::coordinator::WorkOrder).
+    Order,
+    /// Worker → master: a [`ResultMsg`](crate::coordinator::ResultMsg).
+    Result,
+}
+
+impl MsgKind {
+    fn code(self) -> u8 {
+        match self {
+            MsgKind::Order => 1,
+            MsgKind::Result => 2,
+        }
+    }
+
+    fn from_code(c: u8) -> Result<Self, WireError> {
+        match c {
+            1 => Ok(MsgKind::Order),
+            2 => Ok(MsgKind::Result),
+            other => Err(WireError::BadKind(other)),
+        }
+    }
+}
+
+/// Everything that can go wrong between bytes and messages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    /// Fewer bytes than the format requires at this position.
+    Truncated {
+        /// Bytes the decoder needed.
+        need: usize,
+        /// Bytes actually available.
+        got: usize,
+    },
+    /// The frame does not start with [`MAGIC`].
+    BadMagic(u32),
+    /// A frame from a future (or corrupted) format version.
+    UnsupportedVersion(u16),
+    /// Unknown message-kind byte.
+    BadKind(u8),
+    /// The CRC over the body does not match the trailer.
+    ChecksumMismatch {
+        /// CRC computed over the received body.
+        computed: u32,
+        /// CRC carried in the frame trailer.
+        stored: u32,
+    },
+    /// An enum tag byte with no defined meaning.
+    BadTag {
+        /// Which field carried the tag.
+        what: &'static str,
+        /// The offending byte.
+        tag: u8,
+    },
+    /// Structurally invalid contents (bad lengths, oversized dims, …).
+    Malformed(String),
+    /// The peer closed the link at a clean frame boundary.
+    Closed,
+    /// An I/O failure underneath the framing (stream transports).
+    Io(String),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Truncated { need, got } => {
+                write!(f, "truncated frame: need {need} bytes, got {got}")
+            }
+            WireError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            WireError::UnsupportedVersion(v) => write!(f, "unsupported wire version {v}"),
+            WireError::BadKind(k) => write!(f, "unknown message kind {k}"),
+            WireError::ChecksumMismatch { computed, stored } => write!(
+                f,
+                "frame checksum mismatch: computed {computed:#010x}, stored {stored:#010x}"
+            ),
+            WireError::BadTag { what, tag } => write!(f, "bad {what} tag {tag}"),
+            WireError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+            WireError::Closed => write!(f, "link closed"),
+            WireError::Io(msg) => write!(f, "wire i/o error: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e.to_string())
+    }
+}
+
+/// CRC-32 (IEEE 802.3 polynomial, reflected), table computed at compile
+/// time — no runtime init, no dependency.
+const CRC32_TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// CRC-32 of `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+/// Wrap a message body into a complete frame.
+pub fn frame(kind: MsgKind, body: &[u8]) -> Vec<u8> {
+    assert!(body.len() <= MAX_BODY_LEN, "frame body over MAX_BODY_LEN");
+    let mut out = Vec::with_capacity(HEADER_LEN + body.len() + TRAILER_LEN);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.push(kind.code());
+    out.push(0); // reserved
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(body);
+    out.extend_from_slice(&crc32(body).to_le_bytes());
+    out
+}
+
+/// Validate a complete frame and return its kind and body slice.
+///
+/// Rejects short buffers, wrong magic/version, unknown kinds, length
+/// mismatches (the buffer must be *exactly* one frame), and CRC failures.
+pub fn unframe(buf: &[u8]) -> Result<(MsgKind, &[u8]), WireError> {
+    if buf.len() < HEADER_LEN + TRAILER_LEN {
+        return Err(WireError::Truncated { need: HEADER_LEN + TRAILER_LEN, got: buf.len() });
+    }
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+    if version != VERSION {
+        return Err(WireError::UnsupportedVersion(version));
+    }
+    let kind = MsgKind::from_code(buf[6])?;
+    if buf[7] != 0 {
+        return Err(WireError::Malformed(format!("reserved byte is {}", buf[7])));
+    }
+    let body_len = u32::from_le_bytes(buf[8..12].try_into().unwrap()) as usize;
+    if body_len > MAX_BODY_LEN {
+        return Err(WireError::Malformed(format!("body_len {body_len} over cap")));
+    }
+    let total = HEADER_LEN + body_len + TRAILER_LEN;
+    if buf.len() < total {
+        return Err(WireError::Truncated { need: total, got: buf.len() });
+    }
+    if buf.len() > total {
+        return Err(WireError::Malformed(format!(
+            "frame is {} bytes, header says {total}",
+            buf.len()
+        )));
+    }
+    let body = &buf[HEADER_LEN..HEADER_LEN + body_len];
+    let stored = u32::from_le_bytes(buf[total - TRAILER_LEN..total].try_into().unwrap());
+    let computed = crc32(body);
+    if computed != stored {
+        return Err(WireError::ChecksumMismatch { computed, stored });
+    }
+    Ok((kind, body))
+}
+
+/// Read exactly one frame from a byte stream (the TCP read path).
+///
+/// Returns the complete frame bytes (header + body + trailer), to be
+/// handed to [`unframe`]/decoders. A clean EOF *before* any header byte
+/// maps to [`WireError::Closed`] (the peer hung up between frames); EOF
+/// mid-frame maps to [`WireError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>, WireError> {
+    let mut header = [0u8; HEADER_LEN];
+    let mut filled = 0usize;
+    while filled < HEADER_LEN {
+        match r.read(&mut header[filled..]) {
+            Ok(0) => {
+                return if filled == 0 {
+                    Err(WireError::Closed)
+                } else {
+                    Err(WireError::Truncated { need: HEADER_LEN, got: filled })
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    // Validate the length field before allocating.
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let body_len = u32::from_le_bytes(header[8..12].try_into().unwrap()) as usize;
+    if body_len > MAX_BODY_LEN {
+        return Err(WireError::Malformed(format!("body_len {body_len} over cap")));
+    }
+    let total = HEADER_LEN + body_len + TRAILER_LEN;
+    let mut buf = vec![0u8; total];
+    buf[..HEADER_LEN].copy_from_slice(&header);
+    let mut filled = HEADER_LEN;
+    while filled < total {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) => return Err(WireError::Truncated { need: total, got: filled }),
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard IEEE CRC-32 check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn frame_unframe_round_trip() {
+        let body = b"hello wire".to_vec();
+        let f = frame(MsgKind::Order, &body);
+        let (kind, got) = unframe(&f).unwrap();
+        assert_eq!(kind, MsgKind::Order);
+        assert_eq!(got, &body[..]);
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let f = frame(MsgKind::Result, b"payload bytes");
+        for cut in 0..f.len() {
+            assert!(unframe(&f[..cut]).is_err(), "prefix of {cut} bytes must not parse");
+        }
+    }
+
+    #[test]
+    fn every_single_byte_corruption_is_rejected() {
+        let f = frame(MsgKind::Order, b"some body content here");
+        for i in 0..f.len() {
+            let mut bad = f.clone();
+            bad[i] ^= 0x41;
+            assert!(unframe(&bad).is_err(), "corruption at byte {i} must not parse");
+        }
+    }
+
+    #[test]
+    fn trailing_garbage_is_rejected() {
+        let mut f = frame(MsgKind::Order, b"body");
+        f.push(0);
+        assert!(matches!(unframe(&f), Err(WireError::Malformed(_))));
+    }
+
+    #[test]
+    fn stream_reader_round_trips_and_reports_clean_close() {
+        let f1 = frame(MsgKind::Order, b"first");
+        let f2 = frame(MsgKind::Result, b"second");
+        let mut stream: Vec<u8> = Vec::new();
+        stream.extend_from_slice(&f1);
+        stream.extend_from_slice(&f2);
+        let mut cursor = std::io::Cursor::new(stream);
+        assert_eq!(read_frame(&mut cursor).unwrap(), f1);
+        assert_eq!(read_frame(&mut cursor).unwrap(), f2);
+        assert_eq!(read_frame(&mut cursor), Err(WireError::Closed));
+    }
+
+    #[test]
+    fn stream_reader_rejects_mid_frame_eof() {
+        let f = frame(MsgKind::Order, b"cut short");
+        let mut cursor = std::io::Cursor::new(f[..f.len() - 2].to_vec());
+        assert!(matches!(
+            read_frame(&mut cursor),
+            Err(WireError::Truncated { .. })
+        ));
+    }
+}

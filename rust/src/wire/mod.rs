@@ -1,0 +1,29 @@
+//! The byte-level wire format — DESIGN.md §5.
+//!
+//! Until this module existed, master↔worker "transmission" moved live
+//! `Matrix` structs through channels: nothing was ever serialized, so the
+//! MEA-ECC transmission-security story was simulated rather than
+//! exercised, and the Fig. 6 communication accounting could only count
+//! symbols. Everything crossing a link is now one *frame* — a versioned,
+//! checksummed, little-endian byte envelope ([`frame`]/[`unframe`]) around
+//! a message body ([`encode_order`]/[`decode_order`],
+//! [`encode_result`]/[`decode_result`]) — whatever the transport
+//! ([`crate::transport`]) underneath: in-process channels carry the same
+//! bytes TCP sockets do, and the byte counters (`comm.bytes_tx` /
+//! `comm.bytes_rx`) measure real serialized traffic.
+//!
+//! Corruption and truncation surface as typed [`WireError`]s: a flipped
+//! bit anywhere in a frame fails the CRC (or a structural check) rather
+//! than decoding into a plausible message.
+
+mod codec;
+mod frame;
+
+pub use codec::{
+    decode_message, decode_order, decode_result, encode_order, encode_result,
+    matrix_from_le_bytes, matrix_to_le_bytes, WireMessage,
+};
+pub use frame::{
+    crc32, frame, read_frame, unframe, MsgKind, WireError, HEADER_LEN, MAGIC, MAX_BODY_LEN,
+    TRAILER_LEN, VERSION,
+};

@@ -27,7 +27,7 @@ fn eavesdropper_learns_nothing_under_mea_ecc() {
     let tap = Arc::new(EavesdropLog::new());
     let mut cfg = base_cfg();
     cfg.scheme = SchemeKind::Bacc; // deterministic shares, reproducible
-    cfg.transport = TransportSecurity::MeaEcc;
+    cfg.security = TransportSecurity::MeaEcc;
     let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
     let mut rng = rng_from_seed(1);
     let x = Matrix::random_gaussian(24, 16, 0.0, 1.0, &mut rng);
@@ -45,7 +45,7 @@ fn eavesdropper_reads_everything_in_plain_mode() {
     let tap = Arc::new(EavesdropLog::new());
     let mut cfg = base_cfg();
     cfg.scheme = SchemeKind::Bacc;
-    cfg.transport = TransportSecurity::Plain;
+    cfg.security = TransportSecurity::Plain;
     let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
     let mut rng = rng_from_seed(2);
     let x = Matrix::random_gaussian(24, 16, 0.0, 1.0, &mut rng);
@@ -144,7 +144,7 @@ fn sealed_result_path_hides_worker_outputs_too() {
     let tap = Arc::new(EavesdropLog::new());
     let mut cfg = base_cfg();
     cfg.scheme = SchemeKind::Bacc;
-    cfg.transport = TransportSecurity::MeaEcc;
+    cfg.security = TransportSecurity::MeaEcc;
     let mut master = MasterBuilder::new(cfg).eavesdropper(Arc::clone(&tap)).build().unwrap();
     let mut rng = rng_from_seed(6);
     let x = Matrix::random_gaussian(24, 16, 0.0, 1.0, &mut rng);

@@ -67,7 +67,7 @@ fn every_scheme_completes_a_linear_round() {
 #[test]
 fn matdot_end_to_end_with_sealed_transport() {
     let mut c = cfg(SchemeKind::MatDot);
-    c.transport = TransportSecurity::MeaEcc;
+    c.security = TransportSecurity::MeaEcc;
     let mut master = Master::from_config(c).unwrap();
     let mut rng = rng_from_seed(2);
     let a = Matrix::random_gaussian(10, 12, 0.0, 1.0, &mut rng);
@@ -86,10 +86,10 @@ fn transport_modes_agree_on_decoded_output() {
     // the decode results must be identical between Plain and MeaEcc.
     let mut rng = rng_from_seed(3);
     let x = Matrix::random_gaussian(32, 8, 0.0, 1.0, &mut rng);
-    let run_with = |transport: TransportSecurity| -> Vec<Matrix> {
+    let run_with = |security: TransportSecurity| -> Vec<Matrix> {
         let mut c = cfg(SchemeKind::Bacc);
         c.stragglers = 0; // flexible wait count = N ⇒ deterministic set
-        c.transport = transport;
+        c.security = security;
         let mut master = Master::from_config(c).unwrap();
         master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap().blocks
     };

@@ -91,7 +91,7 @@ fn pair_product_round_trips_under_sealed_transport() {
     let reference = matmul(&a, &b);
     for scheme in [SchemeKind::MatDot, SchemeKind::Mds] {
         let mut c = cfg(scheme);
-        c.transport = TransportSecurity::MeaEcc;
+        c.security = TransportSecurity::MeaEcc;
         let mut master = Master::from_config(c).unwrap();
         let out = master.run(CodedTask::pair_product(a.clone(), b.clone())).unwrap();
         assert!(

@@ -1,0 +1,245 @@
+//! The wire + transport layers, end to end: property tests over the
+//! frame codecs (round-trip, corruption, truncation) and the
+//! transport-equivalence guarantee — a TCP round decodes bit-identically
+//! to the same seeded in-proc round, across schemes and security modes.
+
+use spacdc::coding::CodedTask;
+use spacdc::config::{SchemeKind, SystemConfig, TransportKind, TransportSecurity};
+use spacdc::coordinator::{Master, ResultMsg, SealedPayload, WirePayload, WorkOrder};
+use spacdc::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc};
+use spacdc::matrix::Matrix;
+use spacdc::metrics::names;
+use spacdc::prop::{forall, prop_assert, Gen};
+use spacdc::rng::rng_from_seed;
+use spacdc::runtime::WorkerOp;
+use spacdc::wire;
+use std::sync::Arc;
+use std::time::Duration;
+
+// ---------------------------------------------------------------- helpers
+
+fn gen_matrix(g: &mut Gen) -> Matrix {
+    let rows = g.usize_in(1..24);
+    let cols = g.usize_in(1..24);
+    Matrix::random_gaussian(rows, cols, 0.0, 3.0, g.rng())
+}
+
+/// A random payload: plain, or sealed to a throwaway key.
+fn gen_payload(g: &mut Gen, mea: &MeaEcc<spacdc::field::Fp61>) -> WirePayload {
+    let m = gen_matrix(g);
+    if g.bool_with(0.5) {
+        WirePayload::Plain(m)
+    } else {
+        let kp = KeyPair::generate(mea.curve(), g.rng());
+        WirePayload::Sealed(SealedPayload::seal(mea, &m, &kp.public(), g.rng()))
+    }
+}
+
+fn gen_op(g: &mut Gen) -> WorkerOp {
+    match g.usize_in(0..4) {
+        0 => WorkerOp::Gram,
+        1 => WorkerOp::RightMul(Arc::new(gen_matrix(g))),
+        2 => WorkerOp::PairProduct,
+        _ => WorkerOp::Identity,
+    }
+}
+
+fn gen_order(g: &mut Gen, mea: &MeaEcc<spacdc::field::Fp61>) -> WorkOrder {
+    let arity = g.usize_in(1..3); // 1 or 2 operands, like the real schemes
+    WorkOrder {
+        round: g.u64(),
+        worker: g.usize_in(0..64),
+        op: gen_op(g),
+        payloads: (0..arity).map(|_| gen_payload(g, mea)).collect(),
+        delay: Duration::from_nanos(g.u64() >> 20),
+    }
+}
+
+fn payloads_eq(a: &WirePayload, b: &WirePayload) -> bool {
+    match (a, b) {
+        (WirePayload::Plain(x), WirePayload::Plain(y)) => {
+            x.shape() == y.shape()
+                && x.as_slice().iter().zip(y.as_slice()).all(|(p, q)| p.to_bits() == q.to_bits())
+        }
+        (WirePayload::Sealed(x), WirePayload::Sealed(y)) => {
+            x.rows == y.rows
+                && x.cols == y.cols
+                && x.sealed.ephemeral == y.sealed.ephemeral
+                && x.sealed.bytes == y.sealed.bytes
+        }
+        _ => false,
+    }
+}
+
+fn ops_eq(a: &WorkerOp, b: &WorkerOp) -> bool {
+    match (a, b) {
+        (WorkerOp::Gram, WorkerOp::Gram)
+        | (WorkerOp::PairProduct, WorkerOp::PairProduct)
+        | (WorkerOp::Identity, WorkerOp::Identity) => true,
+        (WorkerOp::RightMul(x), WorkerOp::RightMul(y)) => {
+            x.shape() == y.shape() && x.as_slice() == y.as_slice()
+        }
+        _ => false,
+    }
+}
+
+// --------------------------------------------------------- codec properties
+
+#[test]
+fn order_frames_round_trip_over_random_shapes_and_arities() {
+    let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
+    forall(60, 0xF1A7, |g| {
+        let order = gen_order(g, &mea);
+        let frame = wire::encode_order(&order);
+        let back = wire::decode_order(&frame).map_err(|e| e.to_string())?;
+        prop_assert(back.round == order.round, "round id changed")?;
+        prop_assert(back.worker == order.worker, "worker id changed")?;
+        prop_assert(back.delay == order.delay, "delay changed")?;
+        prop_assert(ops_eq(&back.op, &order.op), "op changed")?;
+        prop_assert(back.payloads.len() == order.payloads.len(), "arity changed")?;
+        for (p, q) in back.payloads.iter().zip(&order.payloads) {
+            prop_assert(payloads_eq(p, q), "payload changed")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn result_frames_round_trip_plain_and_sealed() {
+    let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
+    forall(60, 0xF1A8, |g| {
+        let msg = ResultMsg {
+            round: g.u64(),
+            worker: g.usize_in(0..64),
+            payload: gen_payload(g, &mea),
+        };
+        let frame = wire::encode_result(&msg);
+        let back = wire::decode_result(&frame).map_err(|e| e.to_string())?;
+        prop_assert(back.round == msg.round, "round id changed")?;
+        prop_assert(back.worker == msg.worker, "worker id changed")?;
+        prop_assert(payloads_eq(&back.payload, &msg.payload), "payload changed")
+    });
+}
+
+#[test]
+fn any_single_byte_corruption_is_rejected() {
+    let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
+    forall(80, 0xC0FF, |g| {
+        let order = gen_order(g, &mea);
+        let mut frame = wire::encode_order(&order);
+        let pos = g.usize_in(0..frame.len());
+        // Any nonzero flip at any position must surface as a WireError.
+        let flip = (g.usize_in(1..256)) as u8;
+        frame[pos] ^= flip;
+        prop_assert(
+            wire::decode_order(&frame).is_err(),
+            format!("corruption at byte {pos} (flip {flip:#04x}) decoded anyway"),
+        )
+    });
+}
+
+#[test]
+fn any_truncation_is_rejected() {
+    let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
+    forall(80, 0x7A11, |g| {
+        let msg = ResultMsg {
+            round: g.u64(),
+            worker: g.usize_in(0..8),
+            payload: gen_payload(g, &mea),
+        };
+        let frame = wire::encode_result(&msg);
+        let cut = g.usize_in(0..frame.len());
+        prop_assert(
+            wire::decode_result(&frame[..cut]).is_err(),
+            format!("{cut}-byte prefix of a {}-byte frame decoded", frame.len()),
+        )
+    });
+}
+
+// ---------------------------------------------------- transport equivalence
+
+fn round_cfg(
+    scheme: SchemeKind,
+    security: TransportSecurity,
+    transport: TransportKind,
+    stragglers: usize,
+) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 12;
+    cfg.partitions = if scheme == SchemeKind::Uncoded { 12 } else { 3 };
+    cfg.colluders = 2;
+    cfg.stragglers = stragglers;
+    cfg.scheme = scheme;
+    cfg.security = security;
+    cfg.transport = transport;
+    // With stragglers the return set must be deterministic for the
+    // bit-identity check: give every task a real service time so the
+    // S stragglers (5× slower) can never beat a fast worker home.
+    cfg.delay.base_service_s = if stragglers > 0 { 0.04 } else { 0.0 };
+    cfg.seed = 0x7C9;
+    cfg
+}
+
+fn run_round(cfg: SystemConfig) -> (Vec<Matrix>, usize, u64, u64) {
+    let mut master = Master::from_config(cfg).unwrap();
+    let mut rng = rng_from_seed(99);
+    let x = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
+    let out = master.run(CodedTask::block_map(WorkerOp::Identity, x)).unwrap();
+    let tx = master.metrics().get(names::BYTES_TX);
+    let rx = master.metrics().get(names::BYTES_RX);
+    (out.blocks, out.results_used, tx, rx)
+}
+
+#[test]
+fn tcp_rounds_decode_bit_identically_to_inproc_across_schemes() {
+    // Scheme × security grid with deterministic return sets:
+    //  - SPACDC sealed, S=2 → flexible policy takes the 10 non-stragglers;
+    //  - BACC plain, S=0    → flexible policy takes all 12;
+    //  - CONV plain, S=0    → exact policy waits for all 12.
+    let grid = [
+        (SchemeKind::Spacdc, TransportSecurity::MeaEcc, 2usize),
+        (SchemeKind::Bacc, TransportSecurity::Plain, 0),
+        (SchemeKind::Uncoded, TransportSecurity::Plain, 0),
+    ];
+    for (scheme, security, stragglers) in grid {
+        let (inproc, used_i, tx_i, rx_i) =
+            run_round(round_cfg(scheme, security, TransportKind::InProc, stragglers));
+        let (tcp, used_t, tx_t, rx_t) =
+            run_round(round_cfg(scheme, security, TransportKind::Tcp, stragglers));
+        assert_eq!(used_i, used_t, "{scheme:?}: results_used must match");
+        assert_eq!(inproc.len(), tcp.len(), "{scheme:?}: block count must match");
+        for (a, b) in inproc.iter().zip(&tcp) {
+            assert_eq!(a.shape(), b.shape(), "{scheme:?}");
+            for (x, y) in a.as_slice().iter().zip(b.as_slice()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{scheme:?}: decode must be bit-identical");
+            }
+        }
+        // Identical frames moved on both fabrics, and bytes_rx reflects
+        // exactly the (identical) decode inputs.
+        assert_eq!(tx_i, tx_t, "{scheme:?}: bytes_tx must match across transports");
+        assert_eq!(rx_i, rx_t, "{scheme:?}: bytes_rx must match across transports");
+        assert!(tx_i > 0 && rx_i > 0, "{scheme:?}: byte counters live");
+    }
+}
+
+#[test]
+fn sealed_tcp_round_reports_more_bytes_than_symbols() {
+    // 4 bytes per f32 symbol plus framing: the byte counters must
+    // strictly dominate 4× the symbol counters.
+    let (_, _, tx, _) = run_round(round_cfg(
+        SchemeKind::Spacdc,
+        TransportSecurity::MeaEcc,
+        TransportKind::Tcp,
+        0,
+    ));
+    let cfg = round_cfg(SchemeKind::Spacdc, TransportSecurity::MeaEcc, TransportKind::InProc, 0);
+    let mut master = Master::from_config(cfg).unwrap();
+    let mut rng = rng_from_seed(99);
+    let x = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
+    master.run(CodedTask::block_map(WorkerOp::Identity, x)).unwrap();
+    let symbols = master.metrics().get(names::SYMBOLS_TO_WORKERS);
+    assert!(
+        tx > 4 * symbols,
+        "bytes_tx {tx} must exceed 4×symbols {symbols} (framing overhead)"
+    );
+}
