@@ -1,41 +1,83 @@
-//! Microbenchmarks + ablations — the §Perf harness.
+//! Microbenchmarks + ablations — the §Perf harness, now machine-readable.
 //!
 //! Sections:
-//! 1. Matrix substrate: naive vs packed/blocked matmul (the L3 hot-path
-//!    optimization target).
-//! 2. ECC layer: scalar multiplication, MEA-ECC seal/open throughput.
+//! 1. Matrix substrate: naive vs packed/blocked/parallel matmul.
+//! 2. ECC layer: scalar multiplication, MEA-ECC seal/open throughput
+//!    (the wire's seal-the-bytes form).
 //! 3. Coding hot paths: SPACDC encode / decode at the DL shapes.
-//! 4. Ablation: SPACDC mask_scale vs decode error and colluder leakage
-//!    (the DESIGN.md §3 privacy/accuracy trade-off).
+//! 4. End-to-end sealed SPACDC round at n = 8 workers
+//!    (encode + seal + worker compute + unseal + decode), serial
+//!    (`threads = 1`) vs parallel (`threads = 8`), asserting the decode
+//!    output is bit-identical across thread counts.
+//! 5. Ablation: SPACDC mask_scale vs decode error and colluder leakage
+//!    (full mode only).
+//!
+//! Flags (after `cargo bench --bench microbench --`):
+//! * `--smoke`        — small shapes / few iterations (the CI preset).
+//! * `--json <path>`  — additionally write the measurements as JSON
+//!   (`BENCH_PR3.json` is the PR-3 perf artifact; CI runs
+//!   `--smoke --json BENCH_PR3.json` so the perf trajectory accumulates).
 
 use spacdc::bench::{banner, black_box, header, run, BenchConfig};
 use spacdc::coding::{BlockCode, CodeParams, Spacdc};
+use spacdc::coordinator::SealedPayload;
 use spacdc::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc};
-use spacdc::matrix::{matmul, matmul_naive, split_rows, Matrix};
-use spacdc::rng::rng_from_seed;
+use spacdc::field::Fp61;
+use spacdc::matrix::{gram, matmul, matmul_naive, split_rows, Matrix};
+use spacdc::parallel;
+use spacdc::rng::{derive_seed, rng_from_seed};
+use std::time::Instant;
+
+struct GemmRow {
+    n: usize,
+    naive_ms: f64,
+    packed_ms: f64,
+    gflops: f64,
+}
 
 fn main() {
-    banner("§Perf microbenchmarks");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    banner(if smoke { "§Perf microbenchmarks (smoke)" } else { "§Perf microbenchmarks" });
+    parallel::configure(0); // auto width for the kernel benches
+    println!("available cores: {cores}, pool width: {}", parallel::configured_threads());
     println!("{}", header());
 
     // ---- 1. matrix substrate -------------------------------------------
     let mut rng = rng_from_seed(0x3B);
-    for n in [128usize, 256, 512] {
+    let gemm_sizes: &[usize] = if smoke { &[64, 128] } else { &[128, 256, 512] };
+    let gemm_cfg =
+        if smoke { BenchConfig { warmup_iters: 1, iters: 2 } } else { BenchConfig::quick() };
+    let mut gemm_rows = Vec::new();
+    for &n in gemm_sizes {
         let a = Matrix::random_gaussian(n, n, 0.0, 1.0, &mut rng);
         let b = Matrix::random_gaussian(n, n, 0.0, 1.0, &mut rng);
-        let naive = run(&format!("matmul_naive_{n}"), BenchConfig::quick(), |_| {
+        let naive = run(&format!("matmul_naive_{n}"), gemm_cfg, |_| {
             black_box(matmul_naive(&a, &b));
         });
-        let fast = run(&format!("matmul_packed_{n}"), BenchConfig::quick(), |_| {
+        let fast = run(&format!("matmul_packed_{n}"), gemm_cfg, |_| {
             black_box(matmul(&a, &b));
         });
         println!("{}", naive.row());
         println!("{}", fast.row());
+        let gflops = 2.0 * (n as f64).powi(3) / fast.mean() / 1e9;
         println!(
-            "  -> packed speedup at {n}: {:.2}x  (flops {:.2} GF/s)",
+            "  -> packed speedup at {n}: {:.2}x  (flops {gflops:.2} GF/s)",
             naive.mean() / fast.mean(),
-            2.0 * (n as f64).powi(3) / fast.mean() / 1e9
         );
+        gemm_rows.push(GemmRow {
+            n,
+            naive_ms: naive.mean() * 1e3,
+            packed_ms: fast.mean() * 1e3,
+            gflops,
+        });
     }
 
     // ---- 2. ECC / MEA-ECC ----------------------------------------------
@@ -48,40 +90,175 @@ fn main() {
     println!("{}", scalar_mul.row());
 
     let mea = MeaEcc::new(curve, MaskMode::Keystream);
-    let payload = Matrix::random_gaussian(64, 128, 0.0, 1.0, &mut rng);
+    let (sr, sc) = if smoke { (128usize, 128usize) } else { (512usize, 512usize) };
+    let payload = Matrix::random_gaussian(sr, sc, 0.0, 1.0, &mut rng);
+    let seal_bytes = (sr * sc * 4) as f64;
     let mut seal_rng = rng_from_seed(9);
-    let seal = run("mea_seal_64x128", BenchConfig { warmup_iters: 2, iters: 20 }, |_| {
-        black_box(mea.encrypt(&payload, &worker.public(), &mut seal_rng));
+    let ecc_cfg = BenchConfig { warmup_iters: 2, iters: if smoke { 5 } else { 20 } };
+    let seal = run(&format!("mea_seal_bytes_{sr}x{sc}"), ecc_cfg, |_| {
+        black_box(SealedPayload::seal(&mea, &payload, &worker.public(), &mut seal_rng));
     });
     println!("{}", seal.row());
-    let sealed = mea.encrypt(&payload, &worker.public(), &mut seal_rng);
-    let open = run("mea_open_64x128", BenchConfig { warmup_iters: 2, iters: 20 }, |_| {
-        black_box(mea.decrypt(&sealed, &worker));
+    let sealed = SealedPayload::seal(&mea, &payload, &worker.public(), &mut seal_rng);
+    let open = run(&format!("mea_open_bytes_{sr}x{sc}"), ecc_cfg, |_| {
+        black_box(sealed.open(&mea, &worker).unwrap());
     });
     println!("{}", open.row());
-    println!(
-        "  -> MEA-ECC throughput: seal {:.1} MB/s, open {:.1} MB/s",
-        64.0 * 128.0 * 4.0 / seal.mean() / 1e6,
-        64.0 * 128.0 * 4.0 / open.mean() / 1e6
-    );
+    let seal_mb_s = seal_bytes / seal.mean() / 1e6;
+    let open_mb_s = seal_bytes / open.mean() / 1e6;
+    println!("  -> MEA-ECC throughput: seal {seal_mb_s:.1} MB/s, open {open_mb_s:.1} MB/s");
 
     // ---- 3. SPACDC encode/decode at the DL shapes ------------------------
-    let scheme = Spacdc::new(CodeParams::new(30, 4, 3));
-    let wt = Matrix::random_gaussian(256, 128, 0.0, 1.0, &mut rng);
+    let (dn, dk, dt, drows, dcols, drets) =
+        if smoke { (12, 4, 2, 64, 64, 10) } else { (30, 4, 3, 256, 128, 27) };
+    let scheme = Spacdc::new(CodeParams::new(dn, dk, dt));
+    let wt = Matrix::random_gaussian(drows, dcols, 0.0, 1.0, &mut rng);
     let mut enc_rng = rng_from_seed(10);
-    let encode = run("spacdc_encode_256x128_n30", BenchConfig { warmup_iters: 2, iters: 15 }, |_| {
+    let code_cfg = BenchConfig { warmup_iters: 2, iters: if smoke { 5 } else { 15 } };
+    let encode = run(&format!("spacdc_encode_{drows}x{dcols}_n{dn}"), code_cfg, |_| {
         black_box(scheme.encode_blocks(&wt, 1, &mut enc_rng).unwrap());
     });
     println!("{}", encode.row());
     let enc = scheme.encode_blocks(&wt, 1, &mut enc_rng).unwrap();
     let results: Vec<(usize, Matrix)> =
-        (0..27).map(|i| (i, enc.shares[i].clone())).collect();
-    let decode = run("spacdc_decode_27of30", BenchConfig { warmup_iters: 2, iters: 15 }, |_| {
+        (0..drets).map(|i| (i, enc.shares[i].clone())).collect();
+    let decode = run(&format!("spacdc_decode_{drets}of{dn}"), code_cfg, |_| {
         black_box(scheme.decode_blocks(&enc.ctx, &results).unwrap());
     });
     println!("{}", decode.row());
 
-    // ---- 4. mask-scale ablation ------------------------------------------
+    // ---- 4. end-to-end sealed round: serial vs parallel ------------------
+    // Always the acceptance-criterion shape (512×512, n = 8) so the JSON
+    // artifact measures the real thing even in smoke mode — one round is
+    // ~100 ms serial, cheap enough for CI. Note the measured speedup is
+    // bounded by the runner's core count (recorded as available_cores).
+    banner("end-to-end sealed SPACDC round, n=8: threads=1 vs threads=8");
+    let (rr, rc) = (512usize, 512usize);
+    let round_iters = if smoke { 2 } else { 3 };
+    let (serial_s, decoded_serial) = best_round(1, rr, rc, round_iters);
+    let (parallel_s, decoded_parallel) = best_round(8, rr, rc, round_iters);
+    parallel::configure(0);
+    let bit_identical = decoded_serial.len() == decoded_parallel.len()
+        && decoded_serial
+            .iter()
+            .zip(&decoded_parallel)
+            .all(|(a, b)| a.as_slice().len() == b.as_slice().len()
+                && a.as_slice().iter().zip(b.as_slice()).all(|(x, y)| x.to_bits() == y.to_bits()));
+    let speedup = serial_s / parallel_s;
+    println!(
+        "round {rr}x{rc}: threads=1 {:.2}ms, threads=8 {:.2}ms  -> {speedup:.2}x, decode bit-identical: {bit_identical}",
+        serial_s * 1e3,
+        parallel_s * 1e3
+    );
+    assert!(bit_identical, "decode output must not depend on the thread count");
+
+    // ---- 5. mask-scale ablation ------------------------------------------
+    if !smoke {
+        mask_scale_ablation();
+    }
+
+    // ---- JSON artifact ---------------------------------------------------
+    if let Some(path) = json_path {
+        let gemm_json: Vec<String> = gemm_rows
+            .iter()
+            .map(|g| {
+                format!(
+                    "{{\"n\": {}, \"naive_ms\": {:.4}, \"packed_ms\": {:.4}, \"speedup\": {:.3}, \"gflops\": {:.3}}}",
+                    g.n,
+                    g.naive_ms,
+                    g.packed_ms,
+                    g.naive_ms / g.packed_ms,
+                    g.gflops
+                )
+            })
+            .collect();
+        let json = format!(
+            "{{\n  \"pr\": 3,\n  \"smoke\": {smoke},\n  \"available_cores\": {cores},\n  \
+             \"gemm\": [{}],\n  \
+             \"seal\": {{\"rows\": {sr}, \"cols\": {sc}, \"seal_ms\": {:.4}, \"open_ms\": {:.4}, \"seal_mb_s\": {:.2}, \"open_mb_s\": {:.2}}},\n  \
+             \"decode\": {{\"scheme\": \"spacdc\", \"workers\": {dn}, \"returns\": {drets}, \"rows\": {drows}, \"cols\": {dcols}, \"encode_ms\": {:.4}, \"decode_ms\": {:.4}}},\n  \
+             \"round\": {{\"scheme\": \"spacdc\", \"workers\": 8, \"rows\": {rr}, \"cols\": {rc}, \"threads_1_ms\": {:.3}, \"threads_8_ms\": {:.3}, \"speedup\": {:.3}, \"decode_bit_identical\": {bit_identical}}}\n}}\n",
+            gemm_json.join(", "),
+            seal.mean() * 1e3,
+            open.mean() * 1e3,
+            seal_mb_s,
+            open_mb_s,
+            encode.mean() * 1e3,
+            decode.mean() * 1e3,
+            serial_s * 1e3,
+            parallel_s * 1e3,
+            speedup,
+        );
+        std::fs::write(&path, &json).expect("write bench JSON");
+        println!("\nwrote {path}");
+    }
+}
+
+/// One full sealed SPACDC round at a fixed pool width, modeled exactly
+/// like the live system: parallel encode fan-out, parallel per-worker
+/// seal fan-out, the 8 workers in parallel (each worker's open → Gram →
+/// re-seal runs on one pool thread; its inner kernels degrade to serial
+/// there, as on a real worker node), serial collector-style unseal, and
+/// the row-chunked parallel decode. All RNGs are derived, so the decode
+/// output is a pure function of the inputs — compared bit-for-bit
+/// between widths by the caller.
+fn sealed_round(threads: usize, rows: usize, cols: usize) -> (f64, Vec<Matrix>) {
+    parallel::configure(threads);
+    let (n, k, t) = (8usize, 4usize, 2usize);
+    let scheme = Spacdc::new(CodeParams::new(n, k, t));
+    let curve = sim_curve();
+    let mea = MeaEcc::new(curve, MaskMode::Keystream);
+    let worker_keys: Vec<KeyPair<Fp61>> = (0..n)
+        .map(|w| KeyPair::generate(&curve, &mut rng_from_seed(derive_seed(0xBEEF, w as u64))))
+        .collect();
+    let master_keys = KeyPair::generate(&curve, &mut rng_from_seed(0xAB));
+    let x = Matrix::random_gaussian(rows, cols, 0.0, 1.0, &mut rng_from_seed(0x5EED));
+
+    let t0 = Instant::now();
+    // Master: encode (per-share fan-out) + seal (per-worker fan-out).
+    let enc = scheme.encode_blocks(&x, 2, &mut rng_from_seed(1)).unwrap();
+    let ctx = enc.ctx;
+    let pool = parallel::global();
+    let worker_pks: Vec<_> = worker_keys.iter().map(|kp| kp.public()).collect();
+    let sealed: Vec<SealedPayload> = pool.map_vec(enc.shares, |w, share| {
+        let mut srng = rng_from_seed(derive_seed(2, w as u64));
+        SealedPayload::seal(&mea, &share, &worker_pks[w], &mut srng)
+    });
+    // Workers: open, compute f = Gram, re-seal to the master.
+    let master_pk = master_keys.public();
+    let result_payloads: Vec<SealedPayload> = pool.map_vec(sealed, |w, s| {
+        let share = s.open_owned(&mea, &worker_keys[w]).unwrap();
+        let y = gram(&share);
+        let mut srng = rng_from_seed(derive_seed(3, w as u64));
+        SealedPayload::seal(&mea, &y, &master_pk, &mut srng)
+    });
+    // Master: unseal results (serial, like the collector thread), decode.
+    let results: Vec<(usize, Matrix)> = result_payloads
+        .into_iter()
+        .enumerate()
+        .map(|(w, s)| (w, s.open_owned(&mea, &master_keys).unwrap()))
+        .collect();
+    let decoded = scheme.decode_blocks(&ctx, &results).unwrap();
+    (t0.elapsed().as_secs_f64(), decoded)
+}
+
+/// Best-of-`iters` wall time for the sealed round at one width (plus one
+/// untimed warmup); returns the decode output for the bit-identity check.
+fn best_round(threads: usize, rows: usize, cols: usize, iters: usize) -> (f64, Vec<Matrix>) {
+    let _ = sealed_round(threads, rows, cols); // warmup
+    let mut best = f64::INFINITY;
+    let mut out = Vec::new();
+    for _ in 0..iters {
+        let (secs, decoded) = sealed_round(threads, rows, cols);
+        if secs < best {
+            best = secs;
+        }
+        out = decoded;
+    }
+    (best, out)
+}
+
+fn mask_scale_ablation() {
     banner("ablation: SPACDC mask_scale vs decode error & colluder leakage");
     println!(
         "{:<12} {:>14} {:>22}",

@@ -47,8 +47,11 @@ impl BlockCode for Bacc {
         let betas = chebyshev_nodes_in(k, -0.95, 0.95);
         let alphas = disjoint_eval_nodes(n, &betas);
         let signs: Vec<u32> = (0..k as u32).collect();
-        let shares: Vec<Matrix> =
-            alphas.iter().map(|&a| berrut_eval(&betas, &signs, &blocks, a)).collect();
+        // Per-worker encode fan-out on the pool (shares are independent;
+        // index order keeps the output deterministic).
+        let pool = crate::parallel::global();
+        let shares: Vec<Matrix> = pool
+            .map_indexed(alphas.len(), |j| berrut_eval(&betas, &signs, &blocks, alphas[j]));
         Ok(Encoded {
             shares,
             ctx: DecodeCtx {

@@ -146,9 +146,11 @@ impl BlockCode for EvalCode {
         let betas = chebyshev_nodes_in(k + t, -0.95, 0.95);
         let alphas = disjoint_eval_nodes(n, &betas);
         // u(αⱼ) = Σᵢ Bᵢ·Lᵢ(αⱼ): exact degree-(K+T−1) polynomial through
-        // the blocks at the β nodes.
+        // the blocks at the β nodes. Per-worker fan-out on the pool;
+        // index order keeps the share vector deterministic.
+        let pool = crate::parallel::global();
         let shares: Vec<Matrix> =
-            alphas.iter().map(|&a| lagrange_eval(&betas, &blocks, a)).collect();
+            pool.map_indexed(alphas.len(), |j| lagrange_eval(&betas, &blocks, alphas[j]));
         Ok(Encoded {
             shares,
             ctx: DecodeCtx {

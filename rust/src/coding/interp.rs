@@ -107,16 +107,44 @@ pub fn lagrange_eval(nodes: &[f64], values: &[Matrix], z: f64) -> Matrix {
     weighted_sum(values, &w)
 }
 
-/// Σᵢ wᵢ·Yᵢ with f64 weights over f32 matrices.
+/// Element count per parallel chunk of a weighted sum: 16 KiB of output
+/// per granule — big enough to amortize scheduling, small enough that a
+/// 128×512 DL block (64 Ki elements) still splits 16 ways.
+const SUM_CHUNK: usize = 4096;
+
+/// Σᵢ wᵢ·Yᵢ with f64 weights over f32 matrices, row-chunked on the
+/// globally configured pool.
 pub fn weighted_sum(values: &[Matrix], weights: &[f64]) -> Matrix {
+    weighted_sum_with(&crate::parallel::global(), values, weights)
+}
+
+/// [`weighted_sum`] on an explicit pool.
+///
+/// The output is split into fixed [`SUM_CHUNK`] element ranges; within a
+/// chunk the samples are accumulated in input order (i = 0, 1, …), so
+/// every output element sees the identical fixed-order reduction at any
+/// thread count — decode stays bit-identical whatever `threads` is.
+pub fn weighted_sum_with(
+    pool: &crate::parallel::ThreadPool,
+    values: &[Matrix],
+    weights: &[f64],
+) -> Matrix {
     assert_eq!(values.len(), weights.len());
     assert!(!values.is_empty(), "weighted_sum of nothing");
     let (r, c) = values[0].shape();
-    let mut out = Matrix::zeros(r, c);
-    for (v, &w) in values.iter().zip(weights) {
+    for v in values {
         assert_eq!(v.shape(), (r, c), "inconsistent sample shapes");
-        out.axpy(w as f32, v);
     }
+    let mut out = Matrix::zeros(r, c);
+    pool.for_each_chunk(out.as_mut_slice(), SUM_CHUNK, |offset, chunk| {
+        for (v, &w) in values.iter().zip(weights) {
+            let src = &v.as_slice()[offset..offset + chunk.len()];
+            let wf = w as f32;
+            for (o, s) in chunk.iter_mut().zip(src) {
+                *o += wf * s;
+            }
+        }
+    });
     out
 }
 
@@ -306,6 +334,20 @@ mod tests {
         let nodes = chebyshev_nodes(8);
         let w = lagrange_weights(&nodes, 0.3);
         assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn weighted_sum_bit_identical_across_pool_widths() {
+        use crate::parallel::ThreadPool;
+        let mut r = rng_from_seed(33);
+        let values: Vec<Matrix> =
+            (0..9).map(|_| Matrix::random_gaussian(37, 23, 0.0, 1.0, &mut r)).collect();
+        let weights: Vec<f64> = (0..9).map(|_| r.uniform(-1.0, 1.0)).collect();
+        let serial = weighted_sum_with(&ThreadPool::new(1), &values, &weights);
+        for threads in [2usize, 3, 8] {
+            let par = weighted_sum_with(&ThreadPool::new(threads), &values, &weights);
+            assert_eq!(serial.as_slice(), par.as_slice(), "threads={threads}");
+        }
     }
 
     #[test]

@@ -154,11 +154,15 @@ impl BlockCode for Spacdc {
         let alphas = disjoint_eval_nodes(n, &all_betas);
         let signs: Vec<u32> = (0..(k + t) as u32).collect();
 
-        // X̃ⱼ = u(αⱼ): Berrut combination of the K+T slots.
-        let shares: Vec<Matrix> = alphas
-            .iter()
-            .map(|&a| berrut_eval(&all_betas, &signs, &slot_blocks, a))
-            .collect();
+        // X̃ⱼ = u(αⱼ): Berrut combination of the K+T slots. Each share
+        // depends only on its own node, so the per-worker fan-out runs on
+        // the pool; results come back in worker order, and the nested
+        // weighted_sum inside berrut_eval degrades to serial on pool
+        // workers (no oversubscription).
+        let pool = crate::parallel::global();
+        let shares: Vec<Matrix> = pool.map_indexed(alphas.len(), |j| {
+            berrut_eval(&all_betas, &signs, &slot_blocks, alphas[j])
+        });
 
         // Decode only needs the data recovery nodes, in block order.
         let data_betas: Vec<f64> = data_pos.iter().map(|&p| all_betas[p]).collect();

@@ -207,6 +207,12 @@ pub struct SystemConfig {
     /// A round that misses its deadline is abandoned with a typed error
     /// and its late results are counted as wasted work.
     pub round_deadline_s: f64,
+    /// Width of the master-side thread pool driving the parallel hot
+    /// paths (encode/seal fan-out, packed GEMM, Berrut decode). 0 = one
+    /// thread per available core. The setting is process-wide (the last
+    /// master built wins); results are bit-identical at any width
+    /// (DESIGN.md §6).
+    pub threads: usize,
     /// Delay injection.
     pub delay: DelayConfig,
     /// DL hyper-parameters.
@@ -232,6 +238,7 @@ impl Default for SystemConfig {
             transport: TransportKind::InProc,
             security: TransportSecurity::MeaEcc,
             round_deadline_s: 60.0,
+            threads: 0,
             delay: DelayConfig::default(),
             dl: DlConfig::default(),
             seed: 0xC0DE,
@@ -356,6 +363,9 @@ impl SystemConfig {
             "cluster.round_deadline_s" | "round_deadline_s" => {
                 self.round_deadline_s = value.parse().map_err(|_| bad(key, value))?
             }
+            "cluster.threads" | "threads" => {
+                self.threads = value.parse().map_err(|_| bad(key, value))?
+            }
             "delay.straggler_factor" => {
                 self.delay.straggler_factor = value.parse().map_err(|_| bad(key, value))?
             }
@@ -452,6 +462,18 @@ mod tests {
         assert_eq!(c.transport, TransportKind::InProc, "fabric untouched");
         c.apply_kv("security", "mea-ecc").unwrap();
         assert_eq!(c.security, TransportSecurity::MeaEcc);
+    }
+
+    #[test]
+    fn threads_key_is_configurable() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.threads, 0, "default is auto");
+        c.apply_kv("threads", "8").unwrap();
+        assert_eq!(c.threads, 8);
+        c.apply_kv("cluster.threads", "1").unwrap();
+        assert_eq!(c.threads, 1);
+        assert!(c.apply_kv("threads", "many").is_err());
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -135,6 +135,11 @@ impl MasterBuilder {
     /// thread, and build the master.
     pub fn build(self) -> anyhow::Result<Master> {
         self.cfg.validate().map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        // Size the process-wide pool from the config: every parallel hot
+        // path (encode fan-out, seal fan-out, GEMM, decode) reads it.
+        // The width is process-global (last build wins — see DESIGN.md
+        // §6); thread count never affects results, only wall-clock.
+        crate::parallel::configure(self.cfg.threads);
         let metrics = self.metrics.unwrap_or_else(|| Arc::new(MetricsRegistry::new()));
         let executor =
             self.executor.unwrap_or_else(|| Executor::native(Arc::clone(&metrics)));
@@ -221,9 +226,17 @@ fn spawn_collector(
                     registry.note_rejected(msg.round);
                     continue;
                 }
-                let result = match &msg.payload {
-                    WirePayload::Plain(m) => m.clone(),
-                    WirePayload::Sealed(s) => match s.open(&mea, &keys) {
+                let (round, worker) = (msg.round, msg.worker);
+                let symbols = msg.payload.symbols() as u64;
+                // The eavesdropper's ciphertext view has to be charted
+                // before the payload is consumed; only materialized when
+                // a tap is actually attached.
+                let wire_view = tap.as_ref().map(|_| msg.payload.wire_matrix());
+                // Unseal by value: the ciphertext buffer is unmasked in
+                // place instead of copied.
+                let result = match msg.payload {
+                    WirePayload::Plain(m) => m,
+                    WirePayload::Sealed(s) => match s.open_owned(&mea, &keys) {
                         Ok(m) => m,
                         Err(e) => {
                             metrics.inc(names::WIRE_ERRORS);
@@ -232,16 +245,11 @@ fn spawn_collector(
                         }
                     },
                 };
-                let buffered = registry.deliver(
-                    msg.round,
-                    msg.worker,
-                    result,
-                    msg.payload.symbols() as u64,
-                    frame.len() as u64,
-                );
+                let buffered =
+                    registry.deliver(round, worker, result, symbols, frame.len() as u64);
                 if buffered {
-                    if let Some(tap) = &tap {
-                        tap.capture(msg.worker, false, &msg.payload.wire_matrix());
+                    if let (Some(tap), Some(view)) = (&tap, &wire_view) {
+                        tap.capture(worker, false, view);
                     }
                 }
             }
@@ -335,19 +343,51 @@ impl Master {
         // can never race the registration.
         self.registry.register(round, ctx, threshold, started);
 
-        // Seal and dispatch every worker's operand payloads. A dead link
-        // is a typed condition, not a panic: the worker becomes a
-        // permanent straggler and the round proceeds without it.
+        // Seal every live worker's operand payloads on the thread pool:
+        // each worker's MEA-ECC scalar multiplications and keystream are
+        // independent of every other worker's, so the fan-out is
+        // embarrassingly parallel. Each worker's seal RNG is derived
+        // from a per-round salt and the worker index — ciphertexts are a
+        // pure function of (seed, round, worker), never of thread count
+        // or scheduling. Shares are *moved* into the fan-out, so plain
+        // payloads travel without a clone.
+        let round_salt = self.rng.next_u64();
+        let sealed: Vec<Option<Vec<WirePayload>>> = {
+            let _t = self.metrics.time_phase("phase.seal");
+            let security = self.cfg.security;
+            let mea = &self.mea;
+            let pks = self.pool.worker_pks();
+            let dead = &self.dead;
+            crate::parallel::global().map_vec(shares, |w, operands| {
+                if dead.contains(&w) {
+                    return None;
+                }
+                let mut seal_rng = rng_from_seed(derive_seed(round_salt, w as u64));
+                Some(
+                    operands
+                        .into_iter()
+                        .map(|m| match security {
+                            TransportSecurity::Plain => WirePayload::Plain(m),
+                            TransportSecurity::MeaEcc => WirePayload::Sealed(
+                                SealedPayload::seal(mea, &m, &pks[w], &mut seal_rng),
+                            ),
+                        })
+                        .collect(),
+                )
+            })
+        };
+
+        // Dispatch serially in worker order (frame serialization is
+        // cheap next to sealing, and ordered sends keep the transport
+        // deterministic). A dead link is a typed condition, not a panic:
+        // the worker becomes a permanent straggler and the round
+        // proceeds without it.
         let mut dispatched = 0usize;
         {
             let metrics = Arc::clone(&self.metrics);
             let _t = metrics.time_phase("phase.dispatch");
-            for (w, operands) in shares.iter().enumerate() {
-                if self.dead.contains(&w) {
-                    continue;
-                }
-                let payloads: Vec<WirePayload> =
-                    operands.iter().map(|m| self.seal_for(w, m)).collect();
+            for (w, payloads) in sealed.into_iter().enumerate() {
+                let Some(payloads) = payloads else { continue };
                 let order = WorkOrder {
                     round,
                     worker: w,
@@ -453,19 +493,6 @@ impl Master {
     pub fn abandon(&mut self, handle: RoundHandle) {
         let round = handle.defuse();
         self.registry.abandon(round);
-    }
-
-    /// Seal (or pass through) a share for worker `w`.
-    fn seal_for(&mut self, w: usize, m: &Matrix) -> WirePayload {
-        match self.cfg.security {
-            TransportSecurity::Plain => WirePayload::Plain(m.clone()),
-            TransportSecurity::MeaEcc => WirePayload::Sealed(SealedPayload::seal(
-                &self.mea,
-                m,
-                &self.pool.worker_pks()[w],
-                &mut self.rng,
-            )),
-        }
     }
 
     /// Record an eavesdropped wire payload.

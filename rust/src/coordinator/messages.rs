@@ -28,10 +28,16 @@ pub struct SealedPayload {
 }
 
 impl SealedPayload {
-    /// Seal `m` to the holder of `recipient_pk`.
+    /// Seal `m` to the holder of `recipient_pk`. The serialized buffer
+    /// is masked in place ([`MeaEcc::seal_bytes_owned`]) — one
+    /// allocation for the wire bytes, nothing else.
     pub fn seal(mea: &MeaEcc<Fp61>, m: &Matrix, recipient_pk: &Point<Fp61>, rng: &mut Rng) -> Self {
         let bytes = matrix_to_le_bytes(m);
-        Self { sealed: mea.seal_bytes(&bytes, recipient_pk, rng), rows: m.rows(), cols: m.cols() }
+        Self {
+            sealed: mea.seal_bytes_owned(bytes, recipient_pk, rng),
+            rows: m.rows(),
+            cols: m.cols(),
+        }
     }
 
     /// Open with the recipient's key pair. Fails (typed) when the byte
@@ -40,6 +46,15 @@ impl SealedPayload {
     pub fn open(&self, mea: &MeaEcc<Fp61>, keys: &KeyPair<Fp61>) -> Result<Matrix, WireError> {
         let bytes = mea.open_bytes(&self.sealed, keys);
         matrix_from_le_bytes(self.rows, self.cols, &bytes)
+    }
+
+    /// [`SealedPayload::open`] consuming the payload: the ciphertext
+    /// buffer is unmasked in place instead of being copied — the
+    /// worker/collector hot path, where the payload is owned anyway.
+    pub fn open_owned(self, mea: &MeaEcc<Fp61>, keys: &KeyPair<Fp61>) -> Result<Matrix, WireError> {
+        let (rows, cols) = (self.rows, self.cols);
+        let bytes = mea.open_bytes_owned(self.sealed, keys);
+        matrix_from_le_bytes(rows, cols, &bytes)
     }
 
     /// Symbol count (f32 elements) for the communication accounting.

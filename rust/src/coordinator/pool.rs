@@ -137,8 +137,16 @@ fn worker_loop(
     collusion: Option<Arc<CollusionPool>>,
     seed: u64,
 ) {
+    // One worker thread models one remote node: its kernels run serial
+    // so N workers use N cores, not N × pool-width.
+    crate::parallel::mark_serial_thread();
     let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
     let mut rng = rng_from_seed(derive_seed(seed, 0xD0_0000 + w as u64));
+    // Result frames are serialized into this scratch buffer; after the
+    // first round it is already at frame size and sending allocates
+    // nothing (the TCP path writes from it directly, the in-proc path
+    // copies it into the channel).
+    let mut frame_buf: Vec<u8> = Vec::new();
     loop {
         // A clean close (master gone / fabric torn down) ends the loop
         // silently; a poisoned stream (header-level corruption, socket
@@ -166,14 +174,19 @@ fn worker_loop(
         if !order.delay.is_zero() {
             std::thread::sleep(order.delay);
         }
+        let WorkOrder { round, op, payloads, .. } = order;
 
-        // Decrypt operands (§IV-B step 4).
-        let mut operands: Vec<Matrix> = Vec::with_capacity(order.payloads.len());
+        // Decrypt operands (§IV-B step 4), consuming the decoded order:
+        // plain operands move straight through and sealed ones are
+        // unmasked in place — the worker never clones a matrix it
+        // already owns.
+        let sealed_round = matches!(payloads.first(), Some(WirePayload::Sealed(_)));
+        let mut operands: Vec<Matrix> = Vec::with_capacity(payloads.len());
         let mut poisoned = false;
-        for p in &order.payloads {
+        for p in payloads {
             match p {
-                WirePayload::Plain(m) => operands.push(m.clone()),
-                WirePayload::Sealed(s) => match s.open(&mea, &keys) {
+                WirePayload::Plain(m) => operands.push(m),
+                WirePayload::Sealed(s) => match s.open_owned(&mea, &keys) {
                     Ok(m) => operands.push(m),
                     Err(e) => {
                         executor.metrics().inc(names::WIRE_ERRORS);
@@ -196,19 +209,19 @@ fn worker_loop(
         }
 
         // Compute f (PJRT artifact or native kernel).
-        let out = executor.run(&order.op, &operands);
+        let out = executor.run(&op, &operands);
 
         // Encrypt the result back to the master when the share arrived
         // sealed (symmetric policy — §V-B step 2).
-        let sealed_round = matches!(order.payloads.first(), Some(WirePayload::Sealed(_)));
         let payload = if sealed_round {
             WirePayload::Sealed(SealedPayload::seal(&mea, &out, &master_pk, &mut rng))
         } else {
             WirePayload::Plain(out)
         };
 
-        let msg = ResultMsg { round: order.round, worker: w, payload };
-        if link.send(&wire::encode_result(&msg)).is_err() {
+        let msg = ResultMsg { round, worker: w, payload };
+        wire::encode_result_into(&msg, &mut frame_buf);
+        if link.send(&frame_buf).is_err() {
             break; // master gone
         }
     }

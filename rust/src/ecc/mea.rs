@@ -142,18 +142,47 @@ impl<F: FieldElement> MeaEcc<F> {
         recipient_pk: &Point<F>,
         rng: &mut Rng,
     ) -> SealedBytes<F> {
+        self.seal_bytes_owned(plain.to_vec(), recipient_pk, rng)
+    }
+
+    /// [`MeaEcc::seal_bytes`] consuming the plaintext buffer: the
+    /// keystream is XORed *in place*, so sealing an already-serialized
+    /// payload allocates nothing. This is the master/worker hot path
+    /// (`SealedPayload::seal`).
+    pub fn seal_bytes_owned(
+        &self,
+        mut plain: Vec<u8>,
+        recipient_pk: &Point<F>,
+        rng: &mut Rng,
+    ) -> SealedBytes<F> {
         let k = ephemeral_scalar(rng);
         let ephemeral = self.curve.mul_scalar(&k, &self.curve.generator());
         let shared = SharedSecret::from_point(self.curve.mul_scalar(&k, recipient_pk));
-        SealedBytes { ephemeral, bytes: xor_keystream(plain, &shared) }
+        xor_keystream_in_place(&mut plain, &shared);
+        SealedBytes { ephemeral, bytes: plain }
     }
 
     /// Open a sealed byte buffer with the recipient's key pair — the
     /// wire form of §IV-B step 4.
     pub fn open_bytes(&self, sealed: &SealedBytes<F>, keys: &KeyPair<F>) -> Vec<u8> {
+        let mut bytes = sealed.bytes.clone();
+        self.unmask_in_place(&sealed.ephemeral, &mut bytes, keys);
+        bytes
+    }
+
+    /// [`MeaEcc::open_bytes`] consuming the ciphertext: the pad is
+    /// removed in place and the same buffer is returned as plaintext —
+    /// the collector/worker unseal path allocates nothing.
+    pub fn open_bytes_owned(&self, sealed: SealedBytes<F>, keys: &KeyPair<F>) -> Vec<u8> {
+        let SealedBytes { ephemeral, mut bytes } = sealed;
+        self.unmask_in_place(&ephemeral, &mut bytes, keys);
+        bytes
+    }
+
+    fn unmask_in_place(&self, ephemeral: &Point<F>, bytes: &mut [u8], keys: &KeyPair<F>) {
         let shared =
-            SharedSecret::from_point(self.curve.mul_scalar(keys.secret(), &sealed.ephemeral));
-        xor_keystream(&sealed.bytes, &shared)
+            SharedSecret::from_point(self.curve.mul_scalar(keys.secret(), ephemeral));
+        xor_keystream_in_place(bytes, &shared);
     }
 }
 
@@ -171,26 +200,41 @@ fn ephemeral_scalar(rng: &mut Rng) -> U256 {
     }
 }
 
-/// XOR `bytes` with the SplitMix64 keystream seeded from the shared
-/// point, 8 bytes per draw. Self-inverse.
-fn xor_keystream<F: FieldElement>(bytes: &[u8], shared: &SharedSecret<F>) -> Vec<u8> {
+/// XOR `bytes` in place with the SplitMix64 keystream seeded from the
+/// shared point, 8 bytes per draw. Self-inverse; no allocation.
+fn xor_keystream_in_place<F: FieldElement>(bytes: &mut [u8], shared: &SharedSecret<F>) {
     let mut ks = SplitMix64::new(shared.keystream_seed());
-    let mut out = Vec::with_capacity(bytes.len());
-    let mut chunks = bytes.chunks_exact(8);
+    let mut chunks = bytes.chunks_exact_mut(8);
     for chunk in &mut chunks {
         let pad = ks.next_u64().to_le_bytes();
-        for (b, p) in chunk.iter().zip(pad.iter()) {
-            out.push(b ^ p);
+        for (b, p) in chunk.iter_mut().zip(pad.iter()) {
+            *b ^= p;
         }
     }
-    let rem = chunks.remainder();
+    let rem = chunks.into_remainder();
     if !rem.is_empty() {
         let pad = ks.next_u64().to_le_bytes();
-        for (b, p) in rem.iter().zip(pad.iter()) {
-            out.push(b ^ p);
+        for (b, p) in rem.iter_mut().zip(pad.iter()) {
+            *b ^= p;
         }
     }
-    out
+}
+
+/// Per-element 32-bit XOR keystream over f32 bit patterns, in place.
+/// Identical stream layout to the original out-of-place version: the
+/// high half of each SplitMix64 draw masks the even element, the low
+/// half the odd one, and a trailing element takes a fresh 32-bit draw.
+fn mask_f32_keystream_in_place<F: FieldElement>(data: &mut [f32], shared: &SharedSecret<F>) {
+    let mut ks = SplitMix64::new(shared.keystream_seed());
+    let mut chunks = data.chunks_exact_mut(2);
+    for pair in &mut chunks {
+        let w = ks.next_u64();
+        pair[0] = f32::from_bits(pair[0].to_bits() ^ (w >> 32) as u32);
+        pair[1] = f32::from_bits(pair[1].to_bits() ^ w as u32);
+    }
+    if let [last] = chunks.into_remainder() {
+        *last = f32::from_bits(last.to_bits() ^ ks.next_u32());
+    }
 }
 
 #[derive(Clone, Copy, PartialEq)]
@@ -209,22 +253,12 @@ fn apply_mask<F: FieldElement>(
     match mode {
         MaskMode::Keystream => {
             // XOR a per-element 32-bit keystream onto the f32 bit
-            // pattern. Self-inverse, so Seal and Open are the same op.
-            // §Perf optimization #3: consume both 32-bit halves of each
-            // SplitMix64 output (2 elements per draw) and write into a
-            // preallocated buffer.
-            let mut ks = SplitMix64::new(shared.keystream_seed());
-            let src = m.as_slice();
-            let mut data = Vec::with_capacity(src.len());
-            let mut chunks = src.chunks_exact(2);
-            for pair in &mut chunks {
-                let w = ks.next_u64();
-                data.push(f32::from_bits(pair[0].to_bits() ^ (w >> 32) as u32));
-                data.push(f32::from_bits(pair[1].to_bits() ^ w as u32));
-            }
-            if let [last] = chunks.remainder() {
-                data.push(f32::from_bits(last.to_bits() ^ ks.next_u32()));
-            }
+            // pattern, in place on one buffer copy. Self-inverse, so
+            // Seal and Open are the same op. §Perf optimization #3:
+            // consume both 32-bit halves of each SplitMix64 output
+            // (2 elements per draw); no per-element pushes.
+            let mut data = m.as_slice().to_vec();
+            mask_f32_keystream_in_place(&mut data, shared);
             Matrix::from_vec(m.rows(), m.cols(), data)
         }
         MaskMode::RankOne => {

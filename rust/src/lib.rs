@@ -50,6 +50,7 @@ pub mod ecc;
 pub mod field;
 pub mod matrix;
 pub mod metrics;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod runtime;

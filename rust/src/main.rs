@@ -34,6 +34,7 @@ fn specs() -> Vec<ArgSpec> {
         ArgSpec::opt("transport", "inproc", "worker link fabric: inproc|tcp"),
         ArgSpec::opt("security", "mea-ecc", "payload sealing: plain|mea-ecc"),
         ArgSpec::opt("round-deadline-s", "60", "per-round result-collection deadline (s)"),
+        ArgSpec::opt("threads", "0", "master-side thread-pool width (0 = one per core)"),
         ArgSpec::opt("seed", "49374", "experiment seed"),
         ArgSpec::opt("base-service-ms", "0", "injected per-task service time (ms)"),
         ArgSpec::opt("rows", "512", "data rows m (round subcommand)"),
@@ -74,6 +75,7 @@ fn main() -> anyhow::Result<()> {
     cfg.security = TransportSecurity::from_str_token(parsed.get_str("security"))
         .ok_or_else(|| anyhow::anyhow!("unknown security {}", parsed.get_str("security")))?;
     cfg.round_deadline_s = parsed.get_f64("round-deadline-s");
+    cfg.threads = parsed.get_usize("threads");
     cfg.seed = parsed.get_u64("seed");
     cfg.delay.base_service_s = parsed.get_f64("base-service-ms") / 1e3;
     cfg.use_pjrt = !parsed.has_flag("no-pjrt");

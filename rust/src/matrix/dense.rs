@@ -166,12 +166,23 @@ impl Matrix {
         Matrix { rows: self.rows, cols: self.cols, data }
     }
 
-    /// Transpose.
+    /// Transpose, cache-blocked: 32×32 tiles keep both the read and the
+    /// strided write side inside L1 (a tile is 4 KiB twice over), which
+    /// matters because the packed-GEMM path transposes its B operand on
+    /// every call.
     pub fn transpose(&self) -> Matrix {
+        const TILE: usize = 32;
         let mut out = Matrix::zeros(self.cols, self.rows);
-        for r in 0..self.rows {
-            for c in 0..self.cols {
-                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+        let (r, c) = (self.rows, self.cols);
+        for rb in (0..r).step_by(TILE) {
+            let rend = (rb + TILE).min(r);
+            for cb in (0..c).step_by(TILE) {
+                let cend = (cb + TILE).min(c);
+                for i in rb..rend {
+                    for j in cb..cend {
+                        out.data[j * r + i] = self.data[i * c + j];
+                    }
+                }
             }
         }
         out

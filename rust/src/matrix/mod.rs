@@ -13,5 +13,7 @@ mod ops;
 mod partition;
 
 pub use dense::Matrix;
-pub use ops::{gram, matmul, matmul_naive, matmul_tb, matvec};
+pub use ops::{
+    gram, gram_with, matmul, matmul_naive, matmul_tb, matmul_tb_with, matmul_with, matvec,
+};
 pub use partition::{split_rows, stack_rows, PartitionSpec};

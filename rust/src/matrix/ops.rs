@@ -2,51 +2,86 @@
 //!
 //! The worker task of the paper's running example is the Gram product
 //! `f(X̃) = X̃ X̃ᵀ` (§V-A); the DL trainer needs `A·B`, `A·Bᵀ` and
-//! matrix–vector products. All products here use the same strategy:
-//! pack the B operand so the inner loop walks both operands contiguously
-//! (unit stride), then block over rows for cache reuse. This is the
-//! "optimize the hot path" target of the §Perf pass — see
-//! `benches/microbench.rs` for the naive-vs-blocked comparison.
+//! matrix–vector products. All products go through one packed, blocked,
+//! parallel kernel ([`matmul_tb`]): the B operand is packed transposed
+//! once so the inner loop walks both operands at unit stride, the kernel
+//! blocks over rows *and* columns for cache reuse, and the outer row
+//! blocks run on the scoped thread pool ([`crate::parallel`]). Every
+//! output element is produced by exactly one fixed-order dot product, so
+//! results are bit-identical at any thread count. `matmul_naive` stays
+//! as the correctness oracle and the "before" side of the §Perf
+//! comparison (`benches/microbench.rs`).
 
 use super::Matrix;
+use crate::parallel::{self, ThreadPool};
 
-/// Row-block size for the outer blocking. 64 rows × 4 B × d floats keeps
-/// a block of B-columns resident in L2 for the d values we use (≤ 4096).
-const ROW_BLOCK: usize = 64;
+/// Rows of A per parallel granule. 32 rows × 4 B × d floats keeps the A
+/// panel comfortably in L2 for the d values we use (≤ 4096) while giving
+/// the pool enough granules to balance (a 512-row product splits 16
+/// ways).
+const ROW_BLOCK: usize = 32;
 
-/// `A (r×k) · B (k×c) → (r×c)`.
+/// Rows of the packed Bᵀ operand per inner pass: a 64 × d panel
+/// (≤ 1 MiB at d = 4096, 128 KiB at the DL shapes) stays hot across the
+/// whole row block instead of being streamed from memory once per row.
+const COL_BLOCK: usize = 64;
+
+/// `A (r×k) · B (k×c) → (r×c)` on the globally configured pool.
 ///
-/// B is packed transposed once (O(kc)) so the inner product over `k`
-/// reads both operands at unit stride.
+/// B is packed transposed once (O(kc), cache-blocked) so the inner
+/// product over `k` reads both operands at unit stride.
 pub fn matmul(a: &Matrix, b: &Matrix) -> Matrix {
-    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {} vs {}", a.cols(), b.rows());
-    let bt = b.transpose();
-    matmul_tb(a, &bt)
+    matmul_with(&parallel::global(), a, b)
 }
 
-/// `A (r×k) · Bᵀ where B is given as (c×k) → (r×c)`.
+/// [`matmul`] on an explicit pool (determinism tests pin widths).
+pub fn matmul_with(pool: &ThreadPool, a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols(), b.rows(), "matmul: inner dims {} vs {}", a.cols(), b.rows());
+    let bt = b.transpose();
+    matmul_tb_with(pool, a, &bt)
+}
+
+/// `A (r×k) · Bᵀ where B is given as (c×k) → (r×c)` — the packed kernel.
 ///
 /// This is the natural layout for the Gram product and for the packed
-/// general matmul. The inner kernel is an 8-wide unrolled dot product
-/// with four independent accumulators (breaks the FP dependency chain so
-/// the CPU can keep ≥2 FMAs in flight).
+/// general matmul.
 pub fn matmul_tb(a: &Matrix, b_t: &Matrix) -> Matrix {
+    matmul_tb_with(&parallel::global(), a, b_t)
+}
+
+/// [`matmul_tb`] on an explicit pool.
+///
+/// Blocking: the output is split into [`ROW_BLOCK`]-row granules that the
+/// pool distributes (disjoint output rows — no synchronization); inside a
+/// granule the kernel iterates [`COL_BLOCK`]-row panels of the packed Bᵀ
+/// so the panel is reused across every row of the granule. The inner
+/// kernel is an 8-wide unrolled dot product with four independent
+/// accumulators (breaks the FP dependency chain so the CPU keeps ≥ 2
+/// FMAs in flight).
+pub fn matmul_tb_with(pool: &ThreadPool, a: &Matrix, b_t: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b_t.cols(), "matmul_tb: inner dims {} vs {}", a.cols(), b_t.cols());
     let (r, k) = a.shape();
     let c = b_t.rows();
     let mut out = Matrix::zeros(r, c);
-
-    for rb in (0..r).step_by(ROW_BLOCK) {
-        let rend = (rb + ROW_BLOCK).min(r);
-        for i in rb..rend {
-            let arow = a.row(i);
-            let orow = &mut out.as_mut_slice()[i * c..(i + 1) * c];
-            for (j, o) in orow.iter_mut().enumerate() {
-                *o = dot(arow, b_t.row(j));
+    if r == 0 || c == 0 {
+        return out;
+    }
+    let a_data = a.as_slice();
+    let b_data = b_t.as_slice();
+    pool.for_each_chunk(out.as_mut_slice(), ROW_BLOCK * c, |offset, chunk| {
+        let row0 = offset / c;
+        let rows = chunk.len() / c;
+        for jb in (0..c).step_by(COL_BLOCK) {
+            let jend = (jb + COL_BLOCK).min(c);
+            for i in 0..rows {
+                let arow = &a_data[(row0 + i) * k..(row0 + i) * k + k];
+                let orow = &mut chunk[i * c..i * c + c];
+                for j in jb..jend {
+                    orow[j] = dot(arow, &b_data[j * k..j * k + k]);
+                }
             }
         }
-    }
-    let _ = k;
+    });
     out
 }
 
@@ -73,23 +108,49 @@ fn dot(x: &[f32], y: &[f32]) -> f32 {
 
 /// Gram product `X · Xᵀ` — the paper's worker task `f`.
 ///
-/// Exploits symmetry: computes the upper triangle and mirrors, ~2×
-/// fewer dot products than the general path.
+/// Uses the packed kernel's row-granule layout (X is its own packed
+/// operand) but keeps the symmetry saving: each granule computes only
+/// the `j ≥ i` half of its rows, and a cheap serial mirror pass fills
+/// the lower triangle — ~2× fewer dot products than the general kernel.
+/// Still deterministic at any width: every element is produced by
+/// exactly one fixed-order `dot`, and `dot(rᵢ, rⱼ)` is bitwise equal to
+/// `dot(rⱼ, rᵢ)`, so the mirrored half is exactly what computing it
+/// would have produced.
 pub fn gram(x: &Matrix) -> Matrix {
-    let n = x.rows();
+    gram_with(&parallel::global(), x)
+}
+
+/// [`gram`] on an explicit pool.
+pub fn gram_with(pool: &ThreadPool, x: &Matrix) -> Matrix {
+    let (n, k) = x.shape();
     let mut out = Matrix::zeros(n, n);
-    for i in 0..n {
-        let ri = x.row(i);
-        for j in i..n {
-            let v = dot(ri, x.row(j));
-            out.set(i, j, v);
-            out.set(j, i, v);
+    if n == 0 {
+        return out;
+    }
+    let xd = x.as_slice();
+    pool.for_each_chunk(out.as_mut_slice(), ROW_BLOCK * n, |offset, chunk| {
+        let row0 = offset / n;
+        let rows = chunk.len() / n;
+        for i in 0..rows {
+            let gi = row0 + i;
+            let xrow = &xd[gi * k..gi * k + k];
+            let orow = &mut chunk[i * n..i * n + n];
+            for j in gi..n {
+                orow[j] = dot(xrow, &xd[j * k..j * k + k]);
+            }
+        }
+    });
+    let data = out.as_mut_slice();
+    for i in 1..n {
+        for j in 0..i {
+            data[i * n + j] = data[j * n + i];
         }
     }
     out
 }
 
-/// Matrix–vector product `A (r×k) · v (k) → (r)`.
+/// Matrix–vector product `A (r×k) · v (k) → (r)`. Small enough to stay
+/// serial — the DL layer shapes never make this a bottleneck.
 pub fn matvec(a: &Matrix, v: &[f32]) -> Vec<f32> {
     assert_eq!(a.cols(), v.len(), "matvec: dims {} vs {}", a.cols(), v.len());
     (0..a.rows()).map(|i| dot(a.row(i), v)).collect()
@@ -132,6 +193,22 @@ mod tests {
     }
 
     #[test]
+    fn matmul_bit_identical_across_pool_widths() {
+        let mut r = rng_from_seed(15);
+        let a = Matrix::random_gaussian(70, 33, 0.0, 1.0, &mut r);
+        let b = Matrix::random_gaussian(33, 41, 0.0, 1.0, &mut r);
+        let serial = matmul_with(&ThreadPool::new(1), &a, &b);
+        for threads in [2usize, 3, 8] {
+            let par = matmul_with(&ThreadPool::new(threads), &a, &b);
+            assert_eq!(
+                serial.as_slice(),
+                par.as_slice(),
+                "threads={threads} must be bit-identical"
+            );
+        }
+    }
+
+    #[test]
     fn matmul_identity_is_noop() {
         let mut r = rng_from_seed(11);
         let a = Matrix::random_uniform(6, 6, -2.0, 2.0, &mut r);
@@ -160,6 +237,21 @@ mod tests {
                 assert_eq!(g.get(i, j), g.get(j, i));
             }
         }
+    }
+
+    #[test]
+    fn degenerate_shapes_are_handled() {
+        let a = Matrix::zeros(0, 5);
+        let b = Matrix::zeros(5, 3);
+        assert_eq!(matmul(&a, &b).shape(), (0, 3));
+        let a = Matrix::zeros(4, 0);
+        let b = Matrix::zeros(0, 3);
+        let out = matmul(&a, &b);
+        assert_eq!(out.shape(), (4, 3));
+        assert!(out.as_slice().iter().all(|&v| v == 0.0));
+        let a = Matrix::ones(2, 3);
+        let b = Matrix::zeros(3, 0);
+        assert_eq!(matmul(&a, &b).shape(), (2, 0));
     }
 
     #[test]

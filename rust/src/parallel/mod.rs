@@ -1,0 +1,345 @@
+//! Hand-rolled data parallelism for the master-side hot paths —
+//! DESIGN.md §6.
+//!
+//! No rayon/crossbeam in this environment, so this module provides a
+//! small *scoped, chunk-based* thread pool built on
+//! [`std::thread::scope`]. Three primitives cover every hot path:
+//!
+//! * [`ThreadPool::map_indexed`] — `f(0..n)` in parallel, results
+//!   returned **in index order** (per-worker encode fan-out).
+//! * [`ThreadPool::map_vec`] — the same, but consuming a `Vec` so each
+//!   item's ownership moves into exactly one closure call (the seal
+//!   fan-out moves each share instead of cloning it).
+//! * [`ThreadPool::for_each_chunk`] — split one `&mut [T]` into
+//!   fixed-granularity chunks and run `f(offset, chunk)` on each
+//!   (row-chunked GEMM output, row-chunked `weighted_sum`).
+//!
+//! **Determinism contract:** every primitive performs the *identical*
+//! per-element computation in the *identical* per-element order at any
+//! thread count — parallelism only changes which OS thread runs which
+//! chunk, never how a chunk is computed or how results are combined.
+//! Chunk boundaries are a function of (input length, granularity) alone,
+//! and reductions happen inside a chunk in fixed order, so outputs are
+//! bit-identical for `threads ∈ {1, 2, …}` (asserted by
+//! `tests/parallel_determinism.rs`).
+//!
+//! **Nesting guard:** a closure already running on a pool worker sees an
+//! effective width of 1, so nested parallel regions (e.g. a parallel
+//! encode whose per-share `weighted_sum` is itself parallel) degrade to
+//! serial instead of oversubscribing the machine with thread explosions.
+//!
+//! Threads are spawned per region and joined before the call returns
+//! (scoped); there is no persistent worker state. Spawn cost (~tens of
+//! µs) is amortized by only splitting work that is large enough to
+//! matter — callers pick granularities in the tens-of-KiB range.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Process-wide thread budget set from `SystemConfig::threads` /
+/// `--threads`. 0 = one thread per available core.
+static CONFIGURED: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// True on threads spawned by a pool region — nested regions run
+    /// serially instead of spawning again.
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Set the process-wide thread budget (0 = auto). Called by
+/// `MasterBuilder::build` from the `threads` config key / `--threads`
+/// CLI flag, and directly by the benches when pinning a width; safe to
+/// call repeatedly.
+pub fn configure(threads: usize) {
+    CONFIGURED.store(threads, Ordering::Relaxed);
+}
+
+/// The number of threads [`global`] currently resolves to.
+pub fn configured_threads() -> usize {
+    resolve(CONFIGURED.load(Ordering::Relaxed))
+}
+
+/// The pool the hot paths use: sized by [`configure`], auto by default.
+pub fn global() -> ThreadPool {
+    ThreadPool::new(CONFIGURED.load(Ordering::Relaxed))
+}
+
+/// Permanently mark the calling thread as serial-only: every parallel
+/// region started on it runs inline. The worker fabric calls this from
+/// each worker thread — a simulated worker models one remote node, and
+/// N workers each fanning out kernel threads would oversubscribe the
+/// machine N-fold. Master-side threads (encode/seal/decode) stay
+/// parallel.
+pub fn mark_serial_thread() {
+    IN_POOL_WORKER.with(|c| c.set(true));
+}
+
+fn resolve(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+/// A scoped, chunk-based thread pool of a fixed width.
+///
+/// Cheap to construct (it is just the resolved width); the actual OS
+/// threads are scoped to each parallel region.
+#[derive(Clone, Copy, Debug)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool of `threads` workers; 0 = one per available core.
+    pub fn new(threads: usize) -> Self {
+        Self { threads: resolve(threads).max(1) }
+    }
+
+    /// The resolved width.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Width actually used for a region with `work_items` independent
+    /// pieces: 1 when nested inside another region or when there is
+    /// nothing to split.
+    fn effective(&self, work_items: usize) -> usize {
+        if IN_POOL_WORKER.with(|c| c.get()) {
+            1
+        } else {
+            self.threads.min(work_items).max(1)
+        }
+    }
+
+    /// Apply `f` to every index in `0..n` and return the results in
+    /// index order. Each index is computed exactly once; the split into
+    /// contiguous index ranges never affects any single result.
+    pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let threads = self.effective(n);
+        if threads <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let per = n.div_ceil(threads);
+        let f = &f;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| ((t * per).min(n), ((t + 1) * per).min(n)))
+                .filter(|(lo, hi)| lo < hi)
+                .map(|(lo, hi)| {
+                    s.spawn(move || {
+                        IN_POOL_WORKER.with(|c| c.set(true));
+                        (lo..hi).map(f).collect::<Vec<T>>()
+                    })
+                })
+                .collect();
+            let mut out = Vec::with_capacity(n);
+            for h in handles {
+                out.extend(h.join().expect("parallel worker panicked"));
+            }
+            out
+        })
+    }
+
+    /// Like [`map_indexed`](Self::map_indexed) but consuming `items`:
+    /// `f(i, item)` receives each item by value exactly once, so callers
+    /// can move heavy payloads instead of cloning them. Results are in
+    /// item order.
+    pub fn map_vec<I, T, F>(&self, items: Vec<I>, f: F) -> Vec<T>
+    where
+        I: Send,
+        T: Send,
+        F: Fn(usize, I) -> T + Sync,
+    {
+        let n = items.len();
+        let threads = self.effective(n);
+        if threads <= 1 {
+            return items.into_iter().enumerate().map(|(i, x)| f(i, x)).collect();
+        }
+        // Carve into contiguous owned segments, remembering each base
+        // index so results keep their original positions.
+        let per = n.div_ceil(threads);
+        let mut segments: Vec<(usize, Vec<I>)> = Vec::with_capacity(threads);
+        let mut rest = items;
+        let mut base = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let tail = rest.split_off(take);
+            segments.push((base, rest));
+            base += take;
+            rest = tail;
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            let handles: Vec<_> = segments
+                .into_iter()
+                .map(|(seg_base, seg)| {
+                    s.spawn(move || {
+                        IN_POOL_WORKER.with(|c| c.set(true));
+                        seg.into_iter()
+                            .enumerate()
+                            .map(|(i, item)| f(seg_base + i, item))
+                            .collect::<Vec<T>>()
+                    })
+                })
+                .collect();
+            let mut out = Vec::with_capacity(n);
+            for h in handles {
+                out.extend(h.join().expect("parallel worker panicked"));
+            }
+            out
+        })
+    }
+
+    /// Split `data` into consecutive chunks of `granularity` elements
+    /// (the last may be shorter) and call `f(element_offset, chunk)` on
+    /// every chunk. Chunk boundaries depend only on
+    /// `(data.len(), granularity)` — never on the thread count — and
+    /// each chunk is written by exactly one closure call, so any
+    /// fixed-order reduction inside a chunk is deterministic.
+    pub fn for_each_chunk<T, F>(&self, data: &mut [T], granularity: usize, f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut [T]) + Sync,
+    {
+        if data.is_empty() {
+            return;
+        }
+        assert!(granularity > 0, "for_each_chunk needs a positive granularity");
+        let granules = data.len().div_ceil(granularity);
+        let threads = self.effective(granules);
+        if threads <= 1 {
+            let mut off = 0usize;
+            for chunk in data.chunks_mut(granularity) {
+                let len = chunk.len();
+                f(off, chunk);
+                off += len;
+            }
+            return;
+        }
+        // Deal the granules to threads round-robin (granule g → thread
+        // g mod threads): for uniform work this is as good as contiguous
+        // runs, and for triangular work (gram's upper-triangle rows) it
+        // balances the load instead of front-loading thread 0. The
+        // assignment never affects results — each chunk is still
+        // computed by exactly one call with the same (offset, slice).
+        let mut per_thread: Vec<Vec<(usize, &mut [T])>> =
+            (0..threads).map(|_| Vec::with_capacity(granules.div_ceil(threads))).collect();
+        let mut off = 0usize;
+        for (g, chunk) in data.chunks_mut(granularity).enumerate() {
+            let len = chunk.len();
+            per_thread[g % threads].push((off, chunk));
+            off += len;
+        }
+        let f = &f;
+        std::thread::scope(|s| {
+            for list in per_thread {
+                s.spawn(move || {
+                    IN_POOL_WORKER.with(|c| c.set(true));
+                    for (o, chunk) in list {
+                        f(o, chunk);
+                    }
+                });
+            }
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_indexed_preserves_order_at_any_width() {
+        for threads in [1usize, 2, 3, 8, 16] {
+            let pool = ThreadPool::new(threads);
+            let got = pool.map_indexed(37, |i| i * i);
+            let want: Vec<usize> = (0..37).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_indexed_handles_empty_and_tiny() {
+        let pool = ThreadPool::new(8);
+        assert_eq!(pool.map_indexed(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map_indexed(1, |i| i + 10), vec![10]);
+    }
+
+    #[test]
+    fn map_vec_moves_each_item_once_in_order() {
+        for threads in [1usize, 2, 5, 8] {
+            let pool = ThreadPool::new(threads);
+            let items: Vec<String> = (0..23).map(|i| format!("item-{i}")).collect();
+            let got = pool.map_vec(items, |i, s| format!("{i}:{s}"));
+            for (i, s) in got.iter().enumerate() {
+                assert_eq!(s, &format!("{i}:item-{i}"), "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_covers_every_element_exactly_once() {
+        for threads in [1usize, 2, 4, 8] {
+            for (len, gran) in [(100usize, 7usize), (64, 64), (65, 64), (5, 100), (1, 1)] {
+                let pool = ThreadPool::new(threads);
+                let mut data = vec![0u32; len];
+                pool.for_each_chunk(&mut data, gran, |off, chunk| {
+                    for (i, v) in chunk.iter_mut().enumerate() {
+                        *v += (off + i) as u32 + 1;
+                    }
+                });
+                for (i, v) in data.iter().enumerate() {
+                    assert_eq!(*v, i as u32 + 1, "threads={threads} len={len} gran={gran}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn for_each_chunk_offsets_align_with_granularity() {
+        let pool = ThreadPool::new(4);
+        let mut data = vec![0u8; 103];
+        let offsets = std::sync::Mutex::new(Vec::new());
+        pool.for_each_chunk(&mut data, 10, |off, chunk| {
+            offsets.lock().unwrap().push((off, chunk.len()));
+        });
+        let mut seen = offsets.into_inner().unwrap();
+        seen.sort_unstable();
+        let want: Vec<(usize, usize)> =
+            (0..11).map(|g| (g * 10, if g == 10 { 3 } else { 10 })).collect();
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn empty_slice_is_a_noop_even_with_zero_granularity() {
+        let pool = ThreadPool::new(4);
+        let mut data: Vec<u8> = Vec::new();
+        pool.for_each_chunk(&mut data, 0, |_, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn nested_regions_degrade_to_serial() {
+        let pool = ThreadPool::new(8);
+        let outer = pool.map_indexed(4, |i| {
+            // Inside a pool worker the effective width is 1, so this
+            // nested region must run inline without spawning.
+            let inner = global().map_indexed(5, move |j| i * 10 + j);
+            inner.iter().sum::<usize>()
+        });
+        let want: Vec<usize> = (0..4).map(|i| (0..5).map(|j| i * 10 + j).sum()).collect();
+        assert_eq!(outer, want);
+    }
+
+    #[test]
+    fn width_resolution() {
+        // Never asserts on actual machine parallelism.
+        assert!(ThreadPool::new(0).threads() >= 1);
+        assert_eq!(ThreadPool::new(3).threads(), 3);
+    }
+}

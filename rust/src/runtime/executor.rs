@@ -86,19 +86,17 @@ impl Executor {
             WorkerOp::Gram => {
                 let x = &operands[0];
                 let key = artifact_key("gram", &[x.rows(), x.cols()]);
-                self.dispatch(&key, std::slice::from_ref(x), || gram(x))
+                self.dispatch(&key, || vec![x.clone()], || gram(x))
             }
             WorkerOp::RightMul(v) => {
                 let x = &operands[0];
                 let key = artifact_key("rightmul", &[x.rows(), x.cols(), v.cols()]);
-                let inputs = [x.clone(), (**v).clone()];
-                self.dispatch(&key, &inputs, || matmul(x, v))
+                self.dispatch(&key, || vec![x.clone(), (**v).clone()], || matmul(x, v))
             }
             WorkerOp::PairProduct => {
                 let (a, b) = (&operands[0], &operands[1]);
                 let key = artifact_key("rightmul", &[a.rows(), a.cols(), b.cols()]);
-                let inputs = [a.clone(), b.clone()];
-                self.dispatch(&key, &inputs, || matmul(a, b))
+                self.dispatch(&key, || vec![a.clone(), b.clone()], || matmul(a, b))
             }
             WorkerOp::Identity => {
                 self.metrics.inc(names::NATIVE_EXECUTIONS);
@@ -108,10 +106,17 @@ impl Executor {
     }
 
     /// Try PJRT under `key`; fall back to `native` on miss or error.
-    fn dispatch(&self, key: &str, inputs: &[Matrix], native: impl Fn() -> Matrix) -> Matrix {
+    /// `inputs` is a thunk so the native path (the common case without a
+    /// runtime) never materializes the operand copies PJRT would need.
+    fn dispatch(
+        &self,
+        key: &str,
+        inputs: impl FnOnce() -> Vec<Matrix>,
+        native: impl FnOnce() -> Matrix,
+    ) -> Matrix {
         if let Some(rt) = &self.runtime {
             if rt.has(key) {
-                match rt.execute(key, inputs.to_vec()) {
+                match rt.execute(key, inputs()) {
                     Ok(out) => {
                         self.metrics.inc(names::PJRT_EXECUTIONS);
                         return out;

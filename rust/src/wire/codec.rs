@@ -20,7 +20,7 @@
 //! it), and the row-major f32 data bytes XOR-masked by the keystream —
 //! see [`SealedPayload`](crate::coordinator::SealedPayload).
 
-use super::frame::{frame, unframe, MsgKind, WireError, MAX_BODY_LEN};
+use super::frame::{unframe, MsgKind, WireError, MAX_BODY_LEN};
 use crate::coordinator::{ResultMsg, SealedPayload, WirePayload, WorkOrder};
 use crate::ecc::{Point, SealedBytes};
 use crate::field::Fp61;
@@ -43,25 +43,86 @@ pub enum WireMessage {
 
 /// Encode a work order into a complete frame.
 pub fn encode_order(order: &WorkOrder) -> Vec<u8> {
-    let mut body = Vec::new();
-    put_u64(&mut body, order.round);
-    put_u32(&mut body, order.worker as u32);
-    put_u64(&mut body, order.delay.as_nanos() as u64);
-    put_op(&mut body, &order.op);
-    put_u16(&mut body, order.payloads.len() as u16);
+    let mut out = Vec::new();
+    encode_order_into(order, &mut out);
+    out
+}
+
+/// Encode a work order into a caller-owned buffer: cleared, sized to
+/// the exact frame length up front (one `reserve`, no growth
+/// reallocations), body written straight into it. The dispatch path
+/// must hand frame ownership to the transport, so it uses the one-shot
+/// [`encode_order`] wrapper and gets the exact-capacity single
+/// allocation; true scratch reuse is for callers that send from a
+/// borrowed slice (the worker loop's [`encode_result_into`]).
+pub fn encode_order_into(order: &WorkOrder, out: &mut Vec<u8>) {
+    // Clear before reserving: `reserve` is relative to the current len,
+    // so reserving over a still-full scratch would over-allocate.
+    // (frame_begin clears again, harmlessly — it must also serve
+    // callers that never reserve.)
+    out.clear();
+    let body_len = 8
+        + 4
+        + 8
+        + op_encoded_len(&order.op)
+        + 2
+        + order.payloads.iter().map(payload_encoded_len).sum::<usize>();
+    let total = super::frame::HEADER_LEN + body_len + super::frame::TRAILER_LEN;
+    out.reserve(total);
+    let start = super::frame::frame_begin(out, MsgKind::Order);
+    put_u64(out, order.round);
+    put_u32(out, order.worker as u32);
+    put_u64(out, order.delay.as_nanos() as u64);
+    put_op(out, &order.op);
+    put_u16(out, order.payloads.len() as u16);
     for p in &order.payloads {
-        put_payload(&mut body, p);
+        put_payload(out, p);
     }
-    frame(MsgKind::Order, &body)
+    super::frame::frame_end(out, start);
+    debug_assert_eq!(out.len(), total, "order size estimate out of sync with the writers");
 }
 
 /// Encode a worker result into a complete frame.
 pub fn encode_result(msg: &ResultMsg) -> Vec<u8> {
-    let mut body = Vec::new();
-    put_u64(&mut body, msg.round);
-    put_u32(&mut body, msg.worker as u32);
-    put_payload(&mut body, &msg.payload);
-    frame(MsgKind::Result, &body)
+    let mut out = Vec::new();
+    encode_result_into(msg, &mut out);
+    out
+}
+
+/// Encode a worker result into a caller-owned scratch buffer (see
+/// [`encode_order_into`]); the worker loop reuses one buffer for every
+/// result it sends.
+pub fn encode_result_into(msg: &ResultMsg, out: &mut Vec<u8>) {
+    // Clear before reserving — see encode_order_into.
+    out.clear();
+    let body_len = 8 + 4 + payload_encoded_len(&msg.payload);
+    let total = super::frame::HEADER_LEN + body_len + super::frame::TRAILER_LEN;
+    out.reserve(total);
+    let start = super::frame::frame_begin(out, MsgKind::Result);
+    put_u64(out, msg.round);
+    put_u32(out, msg.worker as u32);
+    put_payload(out, &msg.payload);
+    super::frame::frame_end(out, start);
+    debug_assert_eq!(out.len(), total, "result size estimate out of sync with the writers");
+}
+
+/// Exact encoded size of a [`WorkerOp`] body field.
+fn op_encoded_len(op: &WorkerOp) -> usize {
+    match op {
+        WorkerOp::Gram | WorkerOp::PairProduct | WorkerOp::Identity => 1,
+        WorkerOp::RightMul(v) => 1 + 8 + v.len() * 4,
+    }
+}
+
+/// Exact encoded size of a [`WirePayload`] body field.
+fn payload_encoded_len(p: &WirePayload) -> usize {
+    match p {
+        WirePayload::Plain(m) => 1 + 8 + m.len() * 4,
+        WirePayload::Sealed(s) => {
+            let point = if s.sealed.ephemeral.xy().is_some() { 17 } else { 1 };
+            1 + point + 4 + 4 + 4 + s.sealed.bytes.len()
+        }
+    }
 }
 
 /// Decode either message kind from a complete frame.
@@ -327,6 +388,7 @@ fn read_result(cur: &mut Cur) -> Result<ResultMsg, WireError> {
 mod tests {
     use super::*;
     use crate::rng::rng_from_seed;
+    use crate::wire::frame;
 
     fn payloads_eq(a: &WirePayload, b: &WirePayload) -> bool {
         match (a, b) {
@@ -380,6 +442,49 @@ mod tests {
         assert_eq!(back.round, 9);
         assert_eq!(back.worker, 11);
         assert!(payloads_eq(&back.payload, &msg.payload));
+    }
+
+    #[test]
+    fn into_encoders_match_and_reuse_scratch_exactly() {
+        let mut rng = rng_from_seed(77);
+        let m = Matrix::random_gaussian(6, 9, 0.0, 1.0, &mut rng);
+        let order = WorkOrder {
+            round: 3,
+            worker: 1,
+            op: WorkerOp::RightMul(Arc::new(Matrix::ones(9, 2))),
+            payloads: vec![
+                WirePayload::Plain(m),
+                WirePayload::Sealed(SealedPayload {
+                    sealed: SealedBytes {
+                        ephemeral: Point::affine(Fp61::new(5), Fp61::new(9)),
+                        bytes: vec![0x11; 6 * 9 * 4],
+                    },
+                    rows: 6,
+                    cols: 9,
+                }),
+            ],
+            delay: Duration::ZERO,
+        };
+        let one_shot = encode_order(&order);
+        let mut scratch = Vec::new();
+        encode_order_into(&order, &mut scratch);
+        assert_eq!(scratch, one_shot);
+        // The size estimate is exact (the debug_assert inside the
+        // encoder pins estimate == actual), so a second encode into the
+        // grown buffer must not reallocate.
+        let before = scratch.capacity();
+        encode_order_into(&order, &mut scratch);
+        assert_eq!(scratch.capacity(), before, "re-encoding must not reallocate");
+        assert_eq!(scratch, one_shot);
+
+        let msg = ResultMsg {
+            round: 3,
+            worker: 1,
+            payload: WirePayload::Plain(Matrix::ones(2, 2)),
+        };
+        let mut scratch = Vec::new();
+        encode_result_into(&msg, &mut scratch);
+        assert_eq!(scratch, encode_result(&msg));
     }
 
     #[test]

@@ -160,14 +160,35 @@ pub fn crc32(bytes: &[u8]) -> u32 {
 pub fn frame(kind: MsgKind, body: &[u8]) -> Vec<u8> {
     assert!(body.len() <= MAX_BODY_LEN, "frame body over MAX_BODY_LEN");
     let mut out = Vec::with_capacity(HEADER_LEN + body.len() + TRAILER_LEN);
+    let start = frame_begin(&mut out, kind);
+    out.extend_from_slice(body);
+    frame_end(&mut out, start);
+    out
+}
+
+/// Start writing a frame directly into `out` (cleared first, so a
+/// caller-owned scratch buffer is reused across messages): the header
+/// goes in with a placeholder body length. Returns the body start
+/// offset to hand to [`frame_end`]. Body codecs append their bytes
+/// straight to `out` — no intermediate body buffer, no copy.
+pub fn frame_begin(out: &mut Vec<u8>, kind: MsgKind) -> usize {
+    out.clear();
     out.extend_from_slice(&MAGIC.to_le_bytes());
     out.extend_from_slice(&VERSION.to_le_bytes());
     out.push(kind.code());
     out.push(0); // reserved
-    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
-    out.extend_from_slice(body);
-    out.extend_from_slice(&crc32(body).to_le_bytes());
-    out
+    out.extend_from_slice(&0u32.to_le_bytes()); // body_len placeholder
+    out.len()
+}
+
+/// Finish a frame started with [`frame_begin`]: patch the body length
+/// and append the CRC-32 trailer over the body bytes.
+pub fn frame_end(out: &mut Vec<u8>, body_start: usize) {
+    let body_len = out.len() - body_start;
+    assert!(body_len <= MAX_BODY_LEN, "frame body over MAX_BODY_LEN");
+    out[body_start - 4..body_start].copy_from_slice(&(body_len as u32).to_le_bytes());
+    let crc = crc32(&out[body_start..]);
+    out.extend_from_slice(&crc.to_le_bytes());
 }
 
 /// Validate a complete frame and return its kind and body slice.

@@ -20,10 +20,10 @@ mod codec;
 mod frame;
 
 pub use codec::{
-    decode_message, decode_order, decode_result, encode_order, encode_result,
-    matrix_from_le_bytes, matrix_to_le_bytes, WireMessage,
+    decode_message, decode_order, decode_result, encode_order, encode_order_into,
+    encode_result, encode_result_into, matrix_from_le_bytes, matrix_to_le_bytes, WireMessage,
 };
 pub use frame::{
-    crc32, frame, read_frame, unframe, MsgKind, WireError, HEADER_LEN, MAGIC, MAX_BODY_LEN,
-    TRAILER_LEN, VERSION,
+    crc32, frame, frame_begin, frame_end, read_frame, unframe, MsgKind, WireError, HEADER_LEN,
+    MAGIC, MAX_BODY_LEN, TRAILER_LEN, VERSION,
 };

@@ -1,0 +1,178 @@
+//! Determinism under parallelism — the PR-3 contract.
+//!
+//! The parallel subsystem (`spacdc::parallel`) promises that every hot
+//! path — per-worker encode fan-out, MEA-ECC seal fan-out, packed GEMM,
+//! row-chunked Berrut/Lagrange decode — produces *bit-identical* output
+//! at any thread count. This suite pins that:
+//!
+//! * a full encode → seal → open → compute → decode pipeline, digested
+//!   to bytes, is identical for `threads ∈ {1, 2, 8}` across all 8
+//!   schemes;
+//! * the packed GEMM matches the naive oracle on ragged shapes and is
+//!   bit-identical across pool widths.
+//!
+//! The scheme pipeline runs against the process-global pool (the same
+//! one `Master` configures), so the cross-width comparison lives in a
+//! single `#[test]` to avoid races on the global width; the GEMM
+//! properties use explicit `ThreadPool`s and parallelize freely.
+
+use spacdc::coding::{make_scheme, CodeParams, CodedTask, Threshold};
+use spacdc::config::SchemeKind;
+use spacdc::coordinator::SealedPayload;
+use spacdc::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc};
+use spacdc::matrix::{gram_with, matmul_naive, matmul_with, Matrix};
+use spacdc::metrics::MetricsRegistry;
+use spacdc::parallel::{self, ThreadPool};
+use spacdc::rng::{derive_seed, rng_from_seed};
+use spacdc::runtime::{Executor, WorkerOp};
+use std::sync::Arc;
+
+fn push_matrix(digest: &mut Vec<u8>, m: &Matrix) {
+    digest.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+    digest.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+    for v in m.as_slice() {
+        digest.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// One full coded round at the current global pool width, digested to
+/// bytes: encoded shares, sealed wire ciphertexts, and decoded blocks.
+/// Every RNG is seeded explicitly, so two calls differ only if some
+/// stage's output depends on the thread count.
+fn pipeline_digest(kind: SchemeKind) -> Vec<u8> {
+    let params = CodeParams::new(12, 3, 2);
+    let scheme = make_scheme(kind, params);
+    let mut rng = rng_from_seed(0xD17);
+    let x = Matrix::random_gaussian(24, 18, 0.0, 1.0, &mut rng);
+    let task = if kind == SchemeKind::MatDot {
+        CodedTask::pair_product(x.clone(), x.transpose())
+    } else {
+        let v = Matrix::random_gaussian(18, 8, 0.0, 1.0, &mut rng);
+        CodedTask::block_map(WorkerOp::RightMul(Arc::new(v)), x.clone())
+    };
+    assert!(scheme.supports(&task), "{kind:?} must support the probe task");
+    let job = scheme.encode(&task, &mut rng).unwrap();
+
+    let mut digest = Vec::new();
+    for payloads in &job.payloads {
+        for m in payloads {
+            push_matrix(&mut digest, m);
+        }
+    }
+
+    // Seal → open per worker exactly as the wire does, with per-worker
+    // derived RNGs (the same construction Master::submit uses), then run
+    // the worker op on the opened operands.
+    let curve = sim_curve();
+    let mea = MeaEcc::new(curve, MaskMode::Keystream);
+    let executor = Executor::native(Arc::new(MetricsRegistry::new()));
+    let mut results: Vec<(usize, Matrix)> = Vec::new();
+    for (w, payloads) in job.payloads.iter().enumerate() {
+        let mut wrng = rng_from_seed(derive_seed(0xA11CE, w as u64));
+        let keys = KeyPair::generate(&curve, &mut wrng);
+        let mut opened = Vec::new();
+        for m in payloads {
+            let sealed = SealedPayload::seal(&mea, m, &keys.public(), &mut wrng);
+            digest.extend_from_slice(&sealed.sealed.bytes);
+            let back = sealed.open_owned(&mea, &keys).unwrap();
+            assert_eq!(&back, m, "seal/open must round-trip bit-exact");
+            opened.push(back);
+        }
+        results.push((w, executor.run(&job.op, &opened)));
+    }
+
+    // A deterministic result subset per the scheme's own semantics:
+    // exact schemes decode from exactly their threshold, flexible ones
+    // from a fixed straggler pattern.
+    let selected: Vec<(usize, Matrix)> = match scheme.threshold(&task) {
+        Threshold::Exact(k) => results.into_iter().take(k).collect(),
+        Threshold::Flexible { .. } => {
+            results.into_iter().filter(|(w, _)| *w != 2 && *w != 7).collect()
+        }
+    };
+    let decoded = scheme.decode(&job.ctx, &selected).unwrap();
+    for m in &decoded {
+        push_matrix(&mut digest, m);
+    }
+    digest
+}
+
+#[test]
+fn encode_seal_decode_bit_identical_across_thread_counts() {
+    for kind in SchemeKind::all() {
+        parallel::configure(1);
+        let baseline = pipeline_digest(kind);
+        assert!(!baseline.is_empty());
+        for threads in [2usize, 8] {
+            parallel::configure(threads);
+            let got = pipeline_digest(kind);
+            assert_eq!(
+                got, baseline,
+                "{} pipeline must be bit-identical at threads={threads}",
+                kind.name()
+            );
+        }
+    }
+    parallel::configure(0); // restore auto for any later test in this binary
+}
+
+#[test]
+fn packed_gemm_matches_naive_on_ragged_shapes() {
+    let shapes = [
+        (1usize, 1usize, 1usize), // minimal
+        (1, 7, 1),                // single row/col, prime inner
+        (7, 11, 13),              // all prime
+        (3, 1, 5),                // inner dim 1
+        (31, 37, 29),             // primes around the block sizes
+        (257, 3, 65),             // tall & skinny, crosses ROW_BLOCK
+        (2, 129, 2),              // long inner dim, tiny output
+        (64, 64, 64),             // exactly one block each way
+    ];
+    let mut rng = rng_from_seed(0x6E44);
+    let pool = ThreadPool::new(8);
+    for &(m, k, n) in &shapes {
+        let a = Matrix::random_gaussian(m, k, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_gaussian(k, n, 0.0, 1.0, &mut rng);
+        let fast = matmul_with(&pool, &a, &b);
+        let slow = matmul_naive(&a, &b);
+        assert!(
+            fast.max_abs_diff(&slow) < 1e-3,
+            "({m},{k},{n}): diff {}",
+            fast.max_abs_diff(&slow)
+        );
+    }
+}
+
+#[test]
+fn packed_gemm_bit_identical_across_pool_widths() {
+    let mut rng = rng_from_seed(0x6E45);
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (33, 17, 65), (100, 40, 70)] {
+        let a = Matrix::random_gaussian(m, k, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_gaussian(k, n, 0.0, 1.0, &mut rng);
+        let serial = matmul_with(&ThreadPool::new(1), &a, &b);
+        for threads in [2usize, 8] {
+            let par = matmul_with(&ThreadPool::new(threads), &a, &b);
+            assert_eq!(
+                serial.as_slice(),
+                par.as_slice(),
+                "({m},{k},{n}) at threads={threads}"
+            );
+        }
+    }
+}
+
+#[test]
+fn gram_bit_identical_across_pool_widths_and_symmetric() {
+    let mut rng = rng_from_seed(0x6E46);
+    let x = Matrix::random_gaussian(67, 41, 0.0, 1.0, &mut rng);
+    let serial = gram_with(&ThreadPool::new(1), &x);
+    for threads in [2usize, 8] {
+        let par = gram_with(&ThreadPool::new(threads), &x);
+        assert_eq!(serial.as_slice(), par.as_slice(), "threads={threads}");
+    }
+    for i in 0..67 {
+        for j in 0..67 {
+            assert_eq!(serial.get(i, j), serial.get(j, i), "gram must stay exactly symmetric");
+        }
+    }
+}
