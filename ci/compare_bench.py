@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare a fresh smoke-bench JSON against the
+committed baseline and fail on a >tolerance throughput regression.
+
+Usage:
+    compare_bench.py BASELINE.json CURRENT.json [--tolerance 0.25]
+
+Gated metrics (higher is better):
+  * best GEMM GFLOP/s across the measured sizes
+  * MEA-ECC seal MB/s
+  * MEA-ECC open MB/s
+
+The default tolerance is 25% — smoke benches on shared CI runners are
+noisy, so the gate only catches real regressions (a botched GEMM kernel,
+an accidentally quadratic seal path), not jitter.
+
+Bootstrapping: the repo ships a placeholder baseline (``"placeholder":
+true``) because the baseline must be *measured on CI hardware*, not
+authored by hand. While the placeholder is in place the gate prints the
+current numbers and passes; replace ``BENCH_BASELINE.json`` with the
+``bench`` job's ``BENCH.json`` artifact from a trusted run to arm it.
+"""
+
+import argparse
+import json
+import sys
+
+
+def metrics(bench: dict) -> dict:
+    """Extract the gated metrics from a microbench JSON."""
+    out = {}
+    gemm = bench.get("gemm") or []
+    gflops = [row["gflops"] for row in gemm if "gflops" in row]
+    if gflops:
+        out["gemm_gflops"] = max(gflops)
+    seal = bench.get("seal") or {}
+    if "seal_mb_s" in seal:
+        out["seal_mb_s"] = seal["seal_mb_s"]
+    if "open_mb_s" in seal:
+        out["open_mb_s"] = seal["open_mb_s"]
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline")
+    ap.add_argument("current")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    cur = metrics(current)
+    if not cur:
+        print("error: current bench JSON carries no gated metrics", file=sys.stderr)
+        return 1
+    print("current bench metrics:")
+    for k, v in sorted(cur.items()):
+        print(f"  {k:<14} {v:.3f}")
+
+    if baseline.get("placeholder"):
+        print("\nbaseline is a placeholder — gate not armed yet.")
+        print("To arm it, commit this run's BENCH.json as BENCH_BASELINE.json.")
+        return 0
+
+    base = metrics(baseline)
+    failed = False
+    print(f"\nvs baseline (tolerance {args.tolerance:.0%}):")
+    for key, base_v in sorted(base.items()):
+        cur_v = cur.get(key)
+        if cur_v is None:
+            print(f"  {key:<14} MISSING from current run")
+            failed = True
+            continue
+        floor = base_v * (1.0 - args.tolerance)
+        delta = (cur_v - base_v) / base_v
+        verdict = "ok" if cur_v >= floor else "REGRESSION"
+        print(f"  {key:<14} {base_v:.3f} -> {cur_v:.3f} ({delta:+.1%})  {verdict}")
+        if cur_v < floor:
+            failed = True
+
+    if failed:
+        print("\nbench gate FAILED: throughput regressed beyond tolerance", file=sys.stderr)
+        return 1
+    print("\nbench gate passed.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -14,9 +14,10 @@
 //!
 //! Flags (after `cargo bench --bench microbench --`):
 //! * `--smoke`        — small shapes / few iterations (the CI preset).
-//! * `--json <path>`  — additionally write the measurements as JSON
-//!   (`BENCH_PR3.json` is the PR-3 perf artifact; CI runs
-//!   `--smoke --json BENCH_PR3.json` so the perf trajectory accumulates).
+//! * `--json <path>`  — additionally write the measurements as JSON.
+//!   CI runs `--smoke --json BENCH.json` and gates the job on the
+//!   committed `BENCH_BASELINE.json` (see `ci/compare_bench.py`):
+//!   GEMM GFLOP/s and seal/open MB/s may not regress more than 25%.
 
 use spacdc::bench::{banner, black_box, header, run, BenchConfig};
 use spacdc::coding::{BlockCode, CodeParams, Spacdc};
@@ -173,7 +174,7 @@ fn main() {
             })
             .collect();
         let json = format!(
-            "{{\n  \"pr\": 3,\n  \"smoke\": {smoke},\n  \"available_cores\": {cores},\n  \
+            "{{\n  \"schema\": \"spacdc-microbench-v1\",\n  \"smoke\": {smoke},\n  \"available_cores\": {cores},\n  \
              \"gemm\": [{}],\n  \
              \"seal\": {{\"rows\": {sr}, \"cols\": {sc}, \"seal_ms\": {:.4}, \"open_ms\": {:.4}, \"seal_mb_s\": {:.2}, \"open_mb_s\": {:.2}}},\n  \
              \"decode\": {{\"scheme\": \"spacdc\", \"workers\": {dn}, \"returns\": {drets}, \"rows\": {drows}, \"cols\": {dcols}, \"encode_ms\": {:.4}, \"decode_ms\": {:.4}}},\n  \

@@ -1,0 +1,81 @@
+//! `scenario_runner` — drive one declarative adversity scenario through
+//! the live master/worker system and emit `SCENARIO_REPORT.json`.
+//!
+//! The CI matrix runs this over `{inproc, tcp} × {threads 1, 8}` per
+//! scenario and asserts every combination prints the same digest — the
+//! determinism contract (DESIGN.md §7). `--expect-digest` makes the
+//! assertion self-contained: the process exits non-zero on mismatch.
+//!
+//! ```text
+//! scenario_runner --scenario baseline
+//! scenario_runner --scenario crash-respawn --transport tcp --threads 8
+//! scenario_runner --scenario scenarios/baseline.toml --rounds 4 --json /tmp/r.json
+//! ```
+
+use spacdc::cli::{parse, usage, ArgSpec};
+use spacdc::config::{parse_threads_token, TransportKind};
+use spacdc::sim::{run_scenario, Scenario};
+
+fn specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::required("scenario", "scenario name (builtin or scenarios/<name>.toml) or path"),
+        ArgSpec::opt("transport", "inproc", "worker link fabric: inproc|tcp"),
+        ArgSpec::opt("threads", "auto", "master-side thread-pool width (auto = one per core)"),
+        ArgSpec::opt("rounds", "", "override the scenario's round count"),
+        ArgSpec::opt("json", "SCENARIO_REPORT.json", "where to write the JSON report"),
+        ArgSpec::opt("expect-digest", "", "fail unless the run's digest equals this hex value"),
+        ArgSpec::flag("quiet", "suppress the per-round table"),
+        ArgSpec::flag("help", "show usage"),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let specs = specs();
+    let parsed = match parse(&args, &specs) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if parsed.has_flag("help") || parsed.get("scenario").is_none() {
+        print!("{}", usage("scenario_runner", &specs));
+        return Ok(());
+    }
+
+    let mut scenario = Scenario::load(parsed.get_str("scenario"))?;
+    if let Some(rounds) = parsed.get("rounds").filter(|s| !s.is_empty()) {
+        scenario.rounds =
+            rounds.parse().map_err(|_| anyhow::anyhow!("--rounds {rounds}: not a number"))?;
+    }
+    let transport = TransportKind::from_str_token(parsed.get_str("transport"))
+        .ok_or_else(|| anyhow::anyhow!("unknown transport {}", parsed.get_str("transport")))?;
+    let threads = parse_threads_token(parsed.get_str("threads")).ok_or_else(|| {
+        anyhow::anyhow!(
+            "--threads {}: pool width must be ≥ 1, or 'auto'",
+            parsed.get_str("threads")
+        )
+    })?;
+
+    let report = run_scenario(&scenario, transport, threads)?;
+    if !parsed.has_flag("quiet") {
+        print!("{}", report.render_table());
+    } else {
+        println!("digest: {}", report.digest);
+    }
+
+    let json_path = parsed.get_str("json");
+    if !json_path.is_empty() {
+        std::fs::write(json_path, report.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {json_path}: {e}"))?;
+        println!("wrote {json_path}");
+    }
+
+    let expected = parsed.get_str("expect-digest");
+    if !expected.is_empty() && expected != report.digest {
+        eprintln!("digest mismatch: expected {expected}, got {}", report.digest);
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -209,10 +209,15 @@ pub struct SystemConfig {
     pub round_deadline_s: f64,
     /// Width of the master-side thread pool driving the parallel hot
     /// paths (encode/seal fan-out, packed GEMM, Berrut decode). 0 = one
-    /// thread per available core. The setting is process-wide (the last
-    /// master built wins); results are bit-identical at any width
-    /// (DESIGN.md §6).
+    /// thread per available core (the `auto` token at the config/CLI
+    /// surface — an explicit `0` there is rejected as a typed error).
+    /// The setting is process-wide (the last master built wins); results
+    /// are bit-identical at any width (DESIGN.md §6).
     pub threads: usize,
+    /// Named adversity scenario (or scenario-file path) for the scenario
+    /// engine — empty when the run is not scenario-driven. Resolved by
+    /// [`Scenario::load`](crate::sim::Scenario::load).
+    pub scenario: String,
     /// Delay injection.
     pub delay: DelayConfig,
     /// DL hyper-parameters.
@@ -239,6 +244,7 @@ impl Default for SystemConfig {
             security: TransportSecurity::MeaEcc,
             round_deadline_s: 60.0,
             threads: 0,
+            scenario: String::new(),
             delay: DelayConfig::default(),
             dl: DlConfig::default(),
             seed: 0xC0DE,
@@ -264,6 +270,20 @@ impl std::fmt::Display for ConfigValidationError {
 }
 
 impl std::error::Error for ConfigValidationError {}
+
+/// Parse a thread-pool-width token from the config/CLI surface:
+/// `"auto"` → 0 (one thread per core), `"N"` (N ≥ 1) → N. An explicit
+/// `"0"` is rejected (`None`) — the caller turns that into a typed
+/// error instead of letting the pool silently go auto-width.
+pub fn parse_threads_token(s: &str) -> Option<usize> {
+    if s.eq_ignore_ascii_case("auto") {
+        return Some(0);
+    }
+    match s.parse::<usize>() {
+        Ok(0) | Err(_) => None,
+        Ok(n) => Some(n),
+    }
+}
 
 impl SystemConfig {
     /// Validate the paper's structural constraints.
@@ -364,8 +384,17 @@ impl SystemConfig {
                 self.round_deadline_s = value.parse().map_err(|_| bad(key, value))?
             }
             "cluster.threads" | "threads" => {
-                self.threads = value.parse().map_err(|_| bad(key, value))?
+                // An explicit 0 is a config mistake (the pool would
+                // silently go auto-width); the auto behavior is spelled
+                // "auto".
+                self.threads = parse_threads_token(value).ok_or_else(|| {
+                    ConfigError::BadValue(
+                        key.to_string(),
+                        format!("{value} (pool width must be ≥ 1, or 'auto')"),
+                    )
+                })?
             }
+            "cluster.scenario" | "scenario" => self.scenario = value.to_string(),
             "delay.straggler_factor" => {
                 self.delay.straggler_factor = value.parse().map_err(|_| bad(key, value))?
             }
@@ -472,7 +501,34 @@ mod tests {
         assert_eq!(c.threads, 8);
         c.apply_kv("cluster.threads", "1").unwrap();
         assert_eq!(c.threads, 1);
+        c.apply_kv("threads", "auto").unwrap();
+        assert_eq!(c.threads, 0, "'auto' spells the one-per-core width");
         assert!(c.apply_kv("threads", "many").is_err());
+        assert!(
+            matches!(c.apply_kv("threads", "0"), Err(ConfigError::BadValue(_, _))),
+            "an explicit 0 must be a typed config error, not silent auto"
+        );
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn threads_token_parser_spells_auto() {
+        assert_eq!(parse_threads_token("auto"), Some(0));
+        assert_eq!(parse_threads_token("AUTO"), Some(0));
+        assert_eq!(parse_threads_token("4"), Some(4));
+        assert_eq!(parse_threads_token("0"), None);
+        assert_eq!(parse_threads_token("-1"), None);
+        assert_eq!(parse_threads_token("lots"), None);
+    }
+
+    #[test]
+    fn scenario_key_is_plumbed() {
+        let mut c = SystemConfig::default();
+        assert!(c.scenario.is_empty());
+        c.apply_kv("scenario", "crash-respawn").unwrap();
+        assert_eq!(c.scenario, "crash-respawn");
+        c.apply_kv("cluster.scenario", "scenarios/baseline.toml").unwrap();
+        assert_eq!(c.scenario, "scenarios/baseline.toml");
         assert!(c.validate().is_ok());
     }
 

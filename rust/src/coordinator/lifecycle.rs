@@ -1,0 +1,230 @@
+//! The worker lifecycle directory: the master's live view of every
+//! worker slot.
+//!
+//! Each worker index moves through the state machine
+//!
+//! ```text
+//!            crash (injected, scheduled, or link death)
+//!   Alive ────────────────────────────────────────────▶ Crashed
+//!     ▲                                                    │
+//!     │ Register received              WorkerPool::respawn │
+//!     │ (generation bump)                                  ▼
+//!   (rejoined) ◀───────────────────────────────────── Respawning
+//! ```
+//!
+//! A respawned worker is a *new incarnation*: it generates a fresh key
+//! pair (seeded by `(seed, worker, generation)`, so the whole lifecycle
+//! is deterministic) and re-registers by sending a
+//! [`ControlMsg::Register`](super::ControlMsg) frame over its new link.
+//! The master's collector thread installs the registration here; the
+//! submit path seals every share to the *current* incarnation's key.
+//!
+//! The directory is the rendezvous between three parties: the pool
+//! (spawns/respawns incarnations), the collector (installs
+//! registrations), and the master (reads keys and aliveness at submit
+//! time, waits for a respawn's registration to land).
+
+use crate::ecc::Point;
+use crate::field::Fp61;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+/// Lifecycle state of one worker slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerState {
+    /// Registered and serving (the initial state once bring-up
+    /// registration completes; re-entered on rejoin).
+    Alive,
+    /// Known dead: crashed by fault injection or a failed link. No
+    /// orders are dispatched to it, no results expected from it.
+    Crashed,
+    /// A new incarnation was spawned but its `Register` frame has not
+    /// landed yet.
+    Respawning,
+}
+
+#[derive(Clone, Debug)]
+struct Entry {
+    pk: Point<Fp61>,
+    generation: u32,
+    state: WorkerState,
+}
+
+/// Shared directory of worker incarnations (see module docs).
+#[derive(Debug)]
+pub struct WorkerDirectory {
+    entries: Mutex<Vec<Entry>>,
+    cv: Condvar,
+}
+
+impl WorkerDirectory {
+    /// A directory of `n` unregistered slots (state `Respawning`,
+    /// generation 0): bring-up is just the first registration wave.
+    pub fn new(n: usize) -> Self {
+        let entries =
+            vec![Entry { pk: Point::Infinity, generation: 0, state: WorkerState::Respawning }; n];
+        Self { entries: Mutex::new(entries), cv: Condvar::new() }
+    }
+
+    /// Number of worker slots.
+    pub fn n(&self) -> usize {
+        self.entries.lock().unwrap().len()
+    }
+
+    /// Install a registration: the incarnation's key becomes current and
+    /// the slot goes `Alive`. Called by the pool at bring-up and by the
+    /// collector thread for respawns. Stale registrations (an older
+    /// generation racing a newer respawn) are ignored.
+    pub fn register(&self, worker: usize, generation: u32, pk: Point<Fp61>) {
+        let mut es = self.entries.lock().unwrap();
+        if let Some(e) = es.get_mut(worker) {
+            if generation >= e.generation {
+                *e = Entry { pk, generation, state: WorkerState::Alive };
+                self.cv.notify_all();
+            }
+        }
+    }
+
+    /// Mark a worker crashed (fault injection or link death).
+    pub fn mark_crashed(&self, worker: usize) {
+        let mut es = self.entries.lock().unwrap();
+        if let Some(e) = es.get_mut(worker) {
+            e.state = WorkerState::Crashed;
+        }
+    }
+
+    /// Begin a respawn: bump the generation, mark the slot `Respawning`,
+    /// and return the new generation the incarnation must register with.
+    pub fn begin_respawn(&self, worker: usize) -> u32 {
+        let mut es = self.entries.lock().unwrap();
+        let e = &mut es[worker];
+        e.generation += 1;
+        e.state = WorkerState::Respawning;
+        e.generation
+    }
+
+    /// Block until `worker` has registered generation ≥ `generation`
+    /// (true), or until `deadline` (false).
+    pub fn wait_registered(&self, worker: usize, generation: u32, deadline: Instant) -> bool {
+        let mut es = self.entries.lock().unwrap();
+        loop {
+            match es.get(worker) {
+                Some(e) if e.state == WorkerState::Alive && e.generation >= generation => {
+                    return true;
+                }
+                None => return false,
+                _ => {}
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (guard, _) = self.cv.wait_timeout(es, deadline - now).unwrap();
+            es = guard;
+        }
+    }
+
+    /// The worker's current lifecycle state.
+    pub fn state(&self, worker: usize) -> WorkerState {
+        self.entries.lock().unwrap()[worker].state
+    }
+
+    /// Snapshot of every worker's state.
+    pub fn states(&self) -> Vec<WorkerState> {
+        self.entries.lock().unwrap().iter().map(|e| e.state).collect()
+    }
+
+    /// The worker's current incarnation number.
+    pub fn generation(&self, worker: usize) -> u32 {
+        self.entries.lock().unwrap()[worker].generation
+    }
+
+    /// Snapshot of every worker's incarnation number.
+    pub fn generations(&self) -> Vec<u32> {
+        self.entries.lock().unwrap().iter().map(|e| e.generation).collect()
+    }
+
+    /// Per-worker "may I dispatch to it" mask (`Alive` only).
+    pub fn alive_mask(&self) -> Vec<bool> {
+        self.entries.lock().unwrap().iter().map(|e| e.state == WorkerState::Alive).collect()
+    }
+
+    /// Snapshot of the current incarnations' public keys, indexed by
+    /// worker (the seal targets for the next round).
+    pub fn pks(&self) -> Vec<Point<Fp61>> {
+        self.entries.lock().unwrap().iter().map(|e| e.pk).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    fn pk(x: u64) -> Point<Fp61> {
+        Point::affine(crate::field::Fp61::new(x), crate::field::Fp61::new(x + 1))
+    }
+
+    #[test]
+    fn bring_up_registers_every_slot() {
+        let d = WorkerDirectory::new(3);
+        assert_eq!(d.states(), vec![WorkerState::Respawning; 3]);
+        for w in 0..3 {
+            d.register(w, 0, pk(w as u64));
+        }
+        assert_eq!(d.states(), vec![WorkerState::Alive; 3]);
+        assert_eq!(d.pks()[2], pk(2));
+        assert_eq!(d.alive_mask(), vec![true; 3]);
+    }
+
+    #[test]
+    fn crash_respawn_rejoin_walks_the_state_machine() {
+        let d = WorkerDirectory::new(2);
+        d.register(0, 0, pk(1));
+        d.register(1, 0, pk(2));
+        d.mark_crashed(1);
+        assert_eq!(d.state(1), WorkerState::Crashed);
+        assert_eq!(d.alive_mask(), vec![true, false]);
+        let gen = d.begin_respawn(1);
+        assert_eq!(gen, 1);
+        assert_eq!(d.state(1), WorkerState::Respawning);
+        d.register(1, gen, pk(9));
+        assert_eq!(d.state(1), WorkerState::Alive);
+        assert_eq!(d.generation(1), 1);
+        assert_eq!(d.pks()[1], pk(9), "rejoin must install the new incarnation's key");
+    }
+
+    #[test]
+    fn stale_generation_registrations_are_ignored() {
+        let d = WorkerDirectory::new(1);
+        d.register(0, 0, pk(1));
+        let gen = d.begin_respawn(0);
+        // A late frame from the dead generation must not resurrect it.
+        d.register(0, 0, pk(7));
+        assert_eq!(d.state(0), WorkerState::Respawning);
+        d.register(0, gen, pk(8));
+        assert_eq!(d.pks()[0], pk(8));
+    }
+
+    #[test]
+    fn wait_registered_blocks_until_the_frame_lands() {
+        let d = Arc::new(WorkerDirectory::new(1));
+        let gen = {
+            d.register(0, 0, pk(1));
+            d.mark_crashed(0);
+            d.begin_respawn(0)
+        };
+        let d2 = Arc::clone(&d);
+        let j = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            d2.register(0, gen, pk(5));
+        });
+        assert!(d.wait_registered(0, gen, Instant::now() + Duration::from_secs(5)));
+        j.join().unwrap();
+        assert!(
+            !d.wait_registered(0, gen + 1, Instant::now() + Duration::from_millis(10)),
+            "a never-arriving generation must time out"
+        );
+    }
+}

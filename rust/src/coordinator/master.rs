@@ -22,7 +22,8 @@
 //! no longer be satisfied). Dropping a [`RoundHandle`] without waiting
 //! abandons its round, so in-flight buffers can never leak.
 
-use super::messages::{SealedPayload, WirePayload, WorkOrder};
+use super::lifecycle::{WorkerDirectory, WorkerState};
+use super::messages::{ControlMsg, SealedPayload, WirePayload, WorkOrder};
 use super::pool::WorkerPool;
 use super::registry::{RoundRegistry, WaitError};
 use crate::coding::{make_scheme, CodeParams, CodedTask, Scheme, Threshold};
@@ -33,8 +34,8 @@ use crate::matrix::Matrix;
 use crate::metrics::{names, MetricsRegistry};
 use crate::rng::{derive_seed, rng_from_seed, Rng};
 use crate::runtime::Executor;
-use crate::sim::{CollusionPool, DelayModel, EavesdropLog};
-use crate::wire;
+use crate::sim::{CollusionPool, DelayModel, EavesdropLog, FaultPlan};
+use crate::wire::{self, WireMessage};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Weak};
 use std::thread::JoinHandle;
@@ -50,7 +51,70 @@ pub struct RoundOutcome {
     pub wall: Duration,
     /// How many worker results the decoder consumed.
     pub results_used: usize,
+    /// Did the round lose workers mid-flight and decode from fewer
+    /// results than the original wait policy asked for?
+    pub degraded: bool,
 }
+
+/// Why a round failed — the typed failure surface of [`Master::wait`]
+/// (reachable from the opaque error via
+/// `err.inner().downcast_ref::<RoundError>()`).
+///
+/// The two terminal variants are deliberately distinct: `Deadline`
+/// means enough workers were still live for k-of-n recovery — they were
+/// just slower than the budget — while `Hopeless` means the recovery
+/// threshold can *never* be met because too many workers are down, so
+/// the wait was cut short instead of burning the deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoundError {
+    /// `round_deadline_s` elapsed with `got` of `need` results buffered.
+    /// The missing workers were still believed live: k-of-n recovery was
+    /// still possible, just slow.
+    Deadline {
+        /// The abandoned round.
+        round: u64,
+        /// Results buffered when the deadline hit.
+        got: usize,
+        /// Results the wait policy wanted.
+        need: usize,
+    },
+    /// Too many workers are down for the threshold to ever be reached;
+    /// the round was abandoned immediately (no deadline ride-down).
+    Hopeless {
+        /// The abandoned round.
+        round: u64,
+        /// Results that could still have arrived.
+        possible: usize,
+        /// The scheme's hard minimum.
+        need: usize,
+    },
+    /// The round is not in flight (never submitted, already waited on,
+    /// or abandoned).
+    Unknown {
+        /// The unknown round id.
+        round: u64,
+    },
+}
+
+impl std::fmt::Display for RoundError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RoundError::Deadline { round, got, need } => write!(
+                f,
+                "round {round} timed out with {got}/{need} results buffered — enough \
+                 workers remain live, k-of-n recovery was still possible"
+            ),
+            RoundError::Hopeless { round, possible, need } => write!(
+                f,
+                "round {round}: only {possible} results can still arrive but the scheme \
+                 needs {need} — too many workers are down"
+            ),
+            RoundError::Unknown { round } => write!(f, "round {round} is not in flight"),
+        }
+    }
+}
+
+impl std::error::Error for RoundError {}
 
 /// A round in flight: returned by [`Master::submit`], consumed by
 /// [`Master::wait`] (or released by [`Master::abandon`]). Deliberately
@@ -98,13 +162,21 @@ pub struct MasterBuilder {
     executor: Option<Executor>,
     eavesdropper: Option<Arc<EavesdropLog>>,
     collusion: Option<Arc<CollusionPool>>,
+    faults: Option<Arc<FaultPlan>>,
     metrics: Option<Arc<MetricsRegistry>>,
 }
 
 impl MasterBuilder {
     /// Start from a config.
     pub fn new(cfg: SystemConfig) -> Self {
-        Self { cfg, executor: None, eavesdropper: None, collusion: None, metrics: None }
+        Self {
+            cfg,
+            executor: None,
+            eavesdropper: None,
+            collusion: None,
+            faults: None,
+            metrics: None,
+        }
     }
 
     /// Attach an executor (default: native with the master's metrics).
@@ -122,6 +194,15 @@ impl MasterBuilder {
     /// Attach a collusion pool (its members leak their shares).
     pub fn collusion(mut self, pool: Arc<CollusionPool>) -> Self {
         self.collusion = Some(pool);
+        self
+    }
+
+    /// Attach a deterministic fault schedule (the scenario engine's
+    /// plan): workers crash mid-round and corrupt result frames per the
+    /// plan, and the master drives the matching bookkeeping — crash
+    /// accounting at submit time, respawns on schedule.
+    pub fn faults(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.faults = Some(plan);
         self
     }
 
@@ -152,10 +233,12 @@ impl MasterBuilder {
             keys.public(),
             executor,
             self.collusion.clone(),
+            self.faults.clone(),
             self.cfg.seed,
             Arc::clone(&metrics),
         )
         .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let directory = Arc::clone(pool.directory());
         let params =
             CodeParams::new(self.cfg.workers, self.cfg.partitions, self.cfg.colluders);
         // Total over every SchemeKind — MatDot included; no Option field,
@@ -171,35 +254,38 @@ impl MasterBuilder {
         let collector = spawn_collector(
             inbound,
             Arc::clone(&registry),
+            Arc::clone(&directory),
             Arc::clone(&metrics),
             MeaEcc::new(curve, MaskMode::Keystream),
-            keys.clone(),
+            keys,
             self.eavesdropper.clone(),
         );
         Ok(Master {
             cfg: self.cfg,
             scheme,
             pool,
-            keys,
             mea: MeaEcc::new(curve, MaskMode::Keystream),
             metrics,
             eavesdropper: self.eavesdropper,
+            faults: self.faults,
             delays,
             round: 0,
             rng,
             registry,
+            directory,
             collector: Some(collector),
-            dead: Vec::new(),
         })
     }
 }
 
 /// The background result collector: transport frames → decoded, unsealed
-/// results → the round registry. One per master; exits when the inbound
-/// channel disconnects (pool shutdown).
+/// results → the round registry; `Register` control frames → the worker
+/// directory (the respawn handshake's master side). One per master;
+/// exits when the inbound channel disconnects (pool shutdown).
 fn spawn_collector(
     inbound: Receiver<Vec<u8>>,
     registry: Arc<RoundRegistry>,
+    directory: Arc<WorkerDirectory>,
     metrics: Arc<MetricsRegistry>,
     mea: MeaEcc<Fp61>,
     keys: KeyPair<Fp61>,
@@ -209,8 +295,22 @@ fn spawn_collector(
         .name("collector".into())
         .spawn(move || {
             while let Ok(frame) = inbound.recv() {
-                let msg = match wire::decode_result(&frame) {
-                    Ok(m) => m,
+                let msg = match wire::decode_message(&frame) {
+                    Ok(WireMessage::Result(m)) => m,
+                    Ok(WireMessage::Control(ControlMsg::Register { worker, generation, pk })) => {
+                        // A respawned incarnation rejoining: install its
+                        // key and wake whoever waits on the handshake.
+                        directory.register(worker, generation, pk);
+                        continue;
+                    }
+                    Ok(other) => {
+                        metrics.inc(names::WIRE_ERRORS);
+                        eprintln!(
+                            "collector: dropping unexpected {} frame",
+                            other.kind_name()
+                        );
+                        continue;
+                    }
                     Err(e) => {
                         metrics.inc(names::WIRE_ERRORS);
                         eprintln!("collector: dropping undecodable frame: {e}");
@@ -249,7 +349,7 @@ fn spawn_collector(
                     registry.deliver(round, worker, result, symbols, frame.len() as u64);
                 if buffered {
                     if let (Some(tap), Some(view)) = (&tap, &wire_view) {
-                        tap.capture(worker, false, view);
+                        tap.capture(worker, round, false, view);
                     }
                 }
             }
@@ -262,18 +362,19 @@ pub struct Master {
     cfg: SystemConfig,
     scheme: Box<dyn Scheme>,
     pool: WorkerPool,
-    keys: KeyPair<Fp61>,
     mea: MeaEcc<Fp61>,
     metrics: Arc<MetricsRegistry>,
     eavesdropper: Option<Arc<EavesdropLog>>,
+    faults: Option<Arc<FaultPlan>>,
     delays: DelayModel,
     round: u64,
     rng: Rng,
     /// Shared with the collector thread and every live round handle.
     registry: Arc<RoundRegistry>,
+    /// Shared with the pool and the collector: lifecycle states,
+    /// generations, and current public keys.
+    directory: Arc<WorkerDirectory>,
     collector: Option<JoinHandle<()>>,
-    /// Workers whose links died (permanent stragglers), by index.
-    dead: Vec<usize>,
 }
 
 impl Master {
@@ -302,10 +403,109 @@ impl Master {
         self.delays.straggler_set()
     }
 
-    /// Workers whose links have died so far (treated as permanent
-    /// stragglers).
-    pub fn dead_workers(&self) -> &[usize] {
-        &self.dead
+    /// Workers currently unable to serve (crashed or mid-respawn), by
+    /// index.
+    pub fn dead_workers(&self) -> Vec<usize> {
+        self.directory
+            .states()
+            .into_iter()
+            .enumerate()
+            .filter(|(_, s)| *s != WorkerState::Alive)
+            .map(|(w, _)| w)
+            .collect()
+    }
+
+    /// Every worker's lifecycle state, by index.
+    pub fn worker_states(&self) -> Vec<WorkerState> {
+        self.directory.states()
+    }
+
+    /// Every worker's incarnation number, by index (0 = never respawned).
+    pub fn worker_generations(&self) -> Vec<u32> {
+        self.directory.generations()
+    }
+
+    /// Kill worker `w` over the wire: it dies silently at its next frame
+    /// boundary. Orders already queued to it are still served first (the
+    /// kill is a frame like any other), so in-flight rounds keep their
+    /// expected results; from the next submit on, the worker is skipped.
+    pub fn crash_worker(&mut self, w: usize) -> anyhow::Result<()> {
+        self.pool.crash(w).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        self.directory.mark_crashed(w);
+        self.metrics.inc(names::WORKER_CRASHES);
+        Ok(())
+    }
+
+    /// Record that worker `w` died *hard*, mid-round: nothing more will
+    /// arrive from it. Every in-flight round that still expected its
+    /// result re-evaluates (degrade or go hopeless — see
+    /// [`RoundError`]); future submits skip the worker. This is also the
+    /// path a failed dispatch takes (dead link = dead queue).
+    pub fn note_worker_crashed(&mut self, w: usize) {
+        self.directory.mark_crashed(w);
+        self.registry.note_worker_down(w);
+        self.metrics.inc(names::WORKER_CRASHES);
+    }
+
+    /// Record that worker `w`'s result for `round` was lost in transit
+    /// (e.g. a corrupted frame) while the worker itself is fine. The
+    /// scheduled-fault booking in [`Master::submit`] goes through here.
+    pub fn note_result_lost(&mut self, round: u64, w: usize) {
+        self.registry.note_lost(round, w);
+    }
+
+    /// Book this round's scheduled faults, mirroring what the workers
+    /// will actually do with the same plan. Crash state is recorded even
+    /// when the round itself is being abandoned (`note_registry =
+    /// false`): the worker received its order and died, whatever became
+    /// of the round — skipping the booking would leave it `Alive`
+    /// forever and silently cancel its scheduled respawn.
+    fn book_scheduled_faults(&mut self, round: u64, sent: &[usize], note_registry: bool) {
+        let Some(plan) = self.faults.clone() else { return };
+        for &w in sent {
+            if plan.crashes_at(w, round) {
+                self.directory.mark_crashed(w);
+                self.metrics.inc(names::WORKER_CRASHES);
+                if note_registry {
+                    self.note_result_lost(round, w);
+                }
+            } else if plan.corrupts(w, round) && note_registry {
+                self.note_result_lost(round, w);
+            }
+        }
+    }
+
+    /// Respawn a crashed worker: wire a fresh link, start a new
+    /// incarnation (generation bumped, fresh deterministic keys), and
+    /// block until its `Register` frame lands — after this returns the
+    /// worker is `Alive` and the next round seals to its new key.
+    pub fn respawn_worker(&mut self, w: usize) -> anyhow::Result<()> {
+        if w >= self.directory.n() {
+            anyhow::bail!("worker {w} out of range (pool has {})", self.directory.n());
+        }
+        if self.directory.state(w) == WorkerState::Alive {
+            anyhow::bail!("worker {w} is alive; nothing to respawn");
+        }
+        self.respawn_now(w)
+    }
+
+    fn respawn_now(&mut self, w: usize) -> anyhow::Result<()> {
+        // Relinking tears down whatever is left of the old link, and on
+        // TCP that discards any unread in-flight orders with it — so any
+        // result the old incarnation still owed is written off *before*
+        // the swap. Rounds re-evaluate (degrade / fail fast), and if a
+        // written-off result makes it home anyway (the in-proc fabric
+        // drains queued orders), the registry still welcomes it.
+        self.registry.note_worker_down(w);
+        let generation = self.pool.respawn(w).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        if !self.directory.wait_registered(w, generation, deadline) {
+            anyhow::bail!(
+                "worker {w} respawn: registration for generation {generation} never arrived"
+            );
+        }
+        self.metrics.inc(names::WORKER_RESPAWNS);
+        Ok(())
     }
 
     /// Run one coded round synchronously: encode `task` with the
@@ -329,6 +529,17 @@ impl Master {
         }
         self.round += 1;
         let round = self.round;
+        // Scheduled respawns land before the round's orders go out, so a
+        // rejoined incarnation serves this round with its new key.
+        if let Some(plan) = self.faults.clone() {
+            for w in plan.respawns_due(round) {
+                if self.directory.state(w) == WorkerState::Crashed {
+                    if let Err(e) = self.respawn_now(w) {
+                        eprintln!("master: scheduled respawn of worker {w} failed: {e}");
+                    }
+                }
+            }
+        }
         let started = Instant::now();
 
         // Encode (+T masks) — §V-B "data process".
@@ -356,10 +567,12 @@ impl Master {
             let _t = self.metrics.time_phase("phase.seal");
             let security = self.cfg.security;
             let mea = &self.mea;
-            let pks = self.pool.worker_pks();
-            let dead = &self.dead;
+            // Seal to the *current incarnations'* keys: a respawned
+            // worker re-registered with a fresh key pair.
+            let pks = self.directory.pks();
+            let alive = self.directory.alive_mask();
             crate::parallel::global().map_vec(shares, |w, operands| {
-                if dead.contains(&w) {
+                if !alive[w] {
                     return None;
                 }
                 let mut seal_rng = rng_from_seed(derive_seed(round_salt, w as u64));
@@ -382,7 +595,7 @@ impl Master {
         // deterministic). A dead link is a typed condition, not a panic:
         // the worker becomes a permanent straggler and the round
         // proceeds without it.
-        let mut dispatched = 0usize;
+        let mut sent: Vec<usize> = Vec::new();
         {
             let metrics = Arc::clone(&self.metrics);
             let _t = metrics.time_phase("phase.dispatch");
@@ -397,46 +610,62 @@ impl Master {
                 };
                 match self.pool.dispatch(&order) {
                     Ok(()) => {
-                        dispatched += 1;
+                        sent.push(w);
                         self.metrics.inc(names::TASKS_DISPATCHED);
                         for p in &order.payloads {
-                            self.capture(w, true, p);
+                            self.capture(w, round, true, p);
                             self.metrics.add(names::SYMBOLS_TO_WORKERS, p.symbols() as u64);
                         }
                     }
                     Err(e) => {
+                        // A dead link means the thread is gone and its
+                        // queue with it: nothing more will arrive from
+                        // this worker for *any* in-flight round.
                         eprintln!("master: worker {w} marked dead: {e}");
-                        self.dead.push(w);
+                        self.note_worker_crashed(w);
                     }
                 }
             }
         }
+        let dispatched = sent.len();
 
         // The wait policy over the orders that actually went out.
-        let wait_for = match threshold {
+        let (wait_for, min_required) = match threshold {
             Threshold::Exact(k) => {
                 if dispatched < k {
                     self.registry.abandon(round);
+                    // The abandoned round's orders are out: crashes
+                    // scheduled on it still happen worker-side and must
+                    // still be booked.
+                    self.book_scheduled_faults(round, &sent, false);
                     anyhow::bail!(
                         "round {round}: only {dispatched} live workers but {} needs exactly {k}",
                         self.scheme.kind().name()
                     );
                 }
-                k
+                (k, k)
             }
             Threshold::Flexible { min } => {
                 if dispatched < min {
                     self.registry.abandon(round);
+                    self.book_scheduled_faults(round, &sent, false);
                     anyhow::bail!(
                         "round {round}: only {dispatched} live workers, below the flexible minimum {min}"
                     );
                 }
                 // Paper's experimental policy: decode when the fast
                 // workers are in, without waiting out the stragglers.
-                (self.cfg.workers - self.cfg.stragglers).max(min).min(dispatched)
+                ((self.cfg.workers - self.cfg.stragglers).max(min).min(dispatched), min)
             }
         };
-        self.registry.finalize(round, wait_for, dispatched);
+        self.registry.finalize(round, wait_for, min_required, &sent);
+        // Scheduled faults for this round, booked from the same plan the
+        // workers execute: a crashed worker received its order but will
+        // never reply (and serves nothing afterwards); a corrupted
+        // result is lost in transit while the worker lives on. Either
+        // way the round's pending set shrinks now, so it degrades or
+        // fails fast instead of riding the deadline.
+        self.book_scheduled_faults(round, &sent, true);
         Ok(RoundHandle {
             round,
             registry: Arc::downgrade(&self.registry),
@@ -447,8 +676,11 @@ impl Master {
     /// Phase 3 of a round: block until the scheme's wait policy is
     /// satisfied (the collector buffers results for *all* in-flight
     /// rounds concurrently, so rounds may be waited on in any order),
-    /// then decode. A round that misses its `round_deadline_s` budget is
-    /// abandoned with a typed error.
+    /// then decode. A round that loses workers mid-flight degrades to
+    /// "decode from what arrived" when the scheme allows it; otherwise
+    /// the wait fails with a typed [`RoundError`] — [`RoundError::Hopeless`]
+    /// as soon as the threshold is unreachable, [`RoundError::Deadline`]
+    /// when live-but-slow workers exhaust `round_deadline_s`.
     pub fn wait(&mut self, handle: RoundHandle) -> anyhow::Result<RoundOutcome> {
         let round = handle.defuse();
         let deadline = Instant::now() + Duration::from_secs_f64(self.cfg.round_deadline_s);
@@ -457,11 +689,15 @@ impl Master {
             let _t = metrics.time_phase("phase.wait");
             match self.registry.wait_done(round, deadline) {
                 Ok(done) => done,
-                Err(WaitError::Unknown(r)) => anyhow::bail!("round {r} is not in flight"),
-                Err(WaitError::TimedOut(r)) => anyhow::bail!(
-                    "timed out waiting for worker results (round {r}, deadline {:.1}s)",
-                    self.cfg.round_deadline_s
-                ),
+                Err(WaitError::Unknown(round)) => {
+                    return Err(RoundError::Unknown { round }.into())
+                }
+                Err(WaitError::TimedOut { round, got, need }) => {
+                    return Err(RoundError::Deadline { round, got, need }.into())
+                }
+                Err(WaitError::Hopeless { round, possible, need }) => {
+                    return Err(RoundError::Hopeless { round, possible, need }.into())
+                }
             }
         };
         // Credit the uplink comm counters with exactly the decode
@@ -482,7 +718,12 @@ impl Master {
             let _t = self.metrics.time_phase("phase.decode");
             self.scheme.decode(&done.ctx, &done.results)?
         };
-        Ok(RoundOutcome { blocks: decoded, wall: done.started.elapsed(), results_used: used })
+        Ok(RoundOutcome {
+            blocks: decoded,
+            wall: done.started.elapsed(),
+            results_used: used,
+            degraded: done.degraded,
+        })
     }
 
     /// Give up on a submitted round without decoding it: its buffered
@@ -496,9 +737,9 @@ impl Master {
     }
 
     /// Record an eavesdropped wire payload.
-    fn capture(&self, worker: usize, downlink: bool, p: &WirePayload) {
+    fn capture(&self, worker: usize, round: u64, downlink: bool, p: &WirePayload) {
         if let Some(tap) = &self.eavesdropper {
-            tap.capture(worker, downlink, &p.wire_matrix());
+            tap.capture(worker, round, downlink, &p.wire_matrix());
         }
     }
 }
@@ -752,6 +993,94 @@ mod tests {
         let enc = scheme.encode_blocks(&x, 1, &mut rng_from_seed(0)).unwrap();
         let corr = tap.downlink_correlation(&enc.shares);
         assert!(corr > 0.5, "plaintext transport should leak: {corr}");
+    }
+
+    #[test]
+    fn planned_crash_degrades_then_respawn_restores() {
+        use crate::sim::CrashEvent;
+        // N = 12, S = 0: the policy wants all 12. Worker 0 crashes
+        // mid-round 1 and rejoins before round 3.
+        let mut cfg = base_cfg(SchemeKind::Spacdc);
+        cfg.stragglers = 0;
+        let plan = Arc::new(FaultPlan::new(
+            vec![CrashEvent { worker: 0, round: 1, respawn_after: Some(2) }],
+            0.0,
+            cfg.seed,
+        ));
+        let mut master = MasterBuilder::new(cfg).faults(plan).build().unwrap();
+        let x = Matrix::ones(12, 4);
+
+        // Round 1: 12 dispatched, one never replies → degrade to 11.
+        let out = master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
+        assert_eq!(out.results_used, 11);
+        assert!(out.degraded);
+        assert_eq!(master.dead_workers(), vec![0]);
+        assert_eq!(master.metrics().get(names::ROUNDS_DEGRADED), 1);
+
+        // Round 2: the dead worker is skipped up front → no degradation.
+        let out = master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
+        assert_eq!(out.results_used, 11);
+        assert!(!out.degraded);
+
+        // Round 3: the scheduled respawn rejoined the worker first.
+        let out = master.run(CodedTask::block_map(WorkerOp::Identity, x)).unwrap();
+        assert_eq!(out.results_used, 12);
+        assert!(!out.degraded);
+        assert!(master.dead_workers().is_empty());
+        assert_eq!(master.worker_generations()[0], 1, "worker 0 is its second incarnation");
+        assert_eq!(master.metrics().get(names::WORKER_RESPAWNS), 1);
+    }
+
+    #[test]
+    fn unreachable_threshold_fails_fast_with_a_hopeless_error() {
+        use crate::sim::CrashEvent;
+        // MDS needs exactly K = 3 of N = 4; two mid-round crashes leave
+        // only 2 possible results. The wait must fail immediately (the
+        // deadline is far away) with the "too many down" variant.
+        let mut cfg = base_cfg(SchemeKind::Mds);
+        cfg.workers = 4;
+        cfg.stragglers = 0;
+        cfg.colluders = 0;
+        cfg.security = TransportSecurity::Plain;
+        cfg.round_deadline_s = 60.0;
+        let plan = Arc::new(FaultPlan::new(
+            vec![
+                CrashEvent { worker: 1, round: 1, respawn_after: None },
+                CrashEvent { worker: 2, round: 1, respawn_after: None },
+            ],
+            0.0,
+            cfg.seed,
+        ));
+        let mut master = MasterBuilder::new(cfg).faults(plan).build().unwrap();
+        let t0 = Instant::now();
+        let err = master
+            .run(CodedTask::block_map(WorkerOp::Identity, Matrix::ones(12, 4)))
+            .unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(10), "must not ride the deadline");
+        assert!(err.to_string().contains("too many workers are down"), "got: {err}");
+        assert_eq!(
+            err.inner().downcast_ref::<RoundError>(),
+            Some(&RoundError::Hopeless { round: 1, possible: 2, need: 3 })
+        );
+    }
+
+    #[test]
+    fn manual_crash_and_respawn_walk_the_lifecycle() {
+        let mut master = Master::from_config(base_cfg(SchemeKind::Spacdc)).unwrap();
+        let x = Matrix::ones(12, 4);
+        master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
+        // Graceful wire kill: worker 3 is gone from the next round on.
+        master.crash_worker(3).unwrap();
+        assert_eq!(master.worker_states()[3], WorkerState::Crashed);
+        let out = master.run(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap();
+        assert_eq!(out.results_used, 10); // policy N − S, 11 dispatched
+        // Rejoin: re-keyed, re-registered, serving again.
+        master.respawn_worker(3).unwrap();
+        assert_eq!(master.worker_states()[3], WorkerState::Alive);
+        assert_eq!(master.worker_generations()[3], 1);
+        let out = master.run(CodedTask::block_map(WorkerOp::Identity, x)).unwrap();
+        assert_eq!(out.results_used, 10);
+        assert!(master.respawn_worker(3).is_err(), "respawning a live worker is refused");
     }
 
     #[test]

@@ -126,6 +126,35 @@ pub struct WorkOrder {
     pub delay: Duration,
 }
 
+/// A lifecycle control message (see [`crate::coordinator`] module docs
+/// for the worker state machine).
+///
+/// * `Register` travels worker → master: every worker incarnation —
+///   the initial spawn and every respawn — announces its index,
+///   generation, and freshly generated public key before serving
+///   (§IV-B step 1, re-run on rejoin). The master's collector installs
+///   it in the [`WorkerDirectory`](super::WorkerDirectory).
+/// * `Crash` travels master → worker: a fault-injection order telling
+///   the worker thread to vanish silently (no reply, no cleanup), the
+///   scenario engine's wire-level kill switch.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ControlMsg {
+    /// Master → worker: die silently, mid-protocol.
+    Crash {
+        /// Which worker the kill is addressed to.
+        worker: usize,
+    },
+    /// Worker → master: this incarnation is alive and keyed.
+    Register {
+        /// Worker index.
+        worker: usize,
+        /// Incarnation number: 0 for the initial spawn, +1 per respawn.
+        generation: u32,
+        /// The incarnation's public key (master seals shares to it).
+        pk: Point<Fp61>,
+    },
+}
+
 /// A worker's result for one round.
 #[derive(Debug)]
 pub struct ResultMsg {

@@ -24,12 +24,24 @@
 //! colluders and eavesdroppers observe through the [`sim`](crate::sim)
 //! taps. Every frame crossing a link is counted twice over: symbols for
 //! the analytic Fig. 6 accounting, serialized bytes for the measured one.
+//!
+//! **Worker lifecycle** (DESIGN.md §7): every worker slot walks
+//! alive → crashed → respawning → rejoined. Crashes are injected
+//! deterministically (a [`FaultPlan`](crate::sim::FaultPlan) the worker
+//! consults, or a [`ControlMsg::Crash`] frame); a respawned incarnation
+//! re-keys itself and re-registers over the wire
+//! ([`ControlMsg::Register`], installed into the shared
+//! [`WorkerDirectory`] by the collector). Rounds that lose workers
+//! mid-flight degrade to "decode from what arrived" when the scheme's
+//! threshold allows it, or fail fast with a typed [`RoundError`].
 
+mod lifecycle;
 mod master;
 mod messages;
 mod pool;
 mod registry;
 
-pub use master::{Master, MasterBuilder, RoundHandle, RoundOutcome};
-pub use messages::{ResultMsg, SealedPayload, WirePayload, WorkOrder};
+pub use lifecycle::{WorkerDirectory, WorkerState};
+pub use master::{Master, MasterBuilder, RoundError, RoundHandle, RoundOutcome};
+pub use messages::{ControlMsg, ResultMsg, SealedPayload, WirePayload, WorkOrder};
 pub use pool::WorkerPool;

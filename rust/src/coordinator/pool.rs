@@ -6,6 +6,21 @@
 //! the framed result back — the paper's "task computing" phase (§III-A
 //! step 2).
 //!
+//! **Lifecycle.** Every worker incarnation — initial spawn and every
+//! respawn — generates its own key pair in-thread (seeded by
+//! `(seed, worker, generation)`, so the whole lifecycle is
+//! deterministic) and *registers* by sending a
+//! [`ControlMsg::Register`] frame before serving. At bring-up the pool
+//! drains those N registrations synchronously; after a
+//! [`respawn`](WorkerPool::respawn) the master's collector installs the
+//! frame into the shared [`WorkerDirectory`] — the rejoin handshake of
+//! the state machine in `coordinator/lifecycle.rs`. Crashes come in two
+//! deterministic flavors: a [`FaultPlan`] the worker consults itself
+//! (crash mid-round: the order arrives, the reply never does), and a
+//! [`ControlMsg::Crash`] frame ([`WorkerPool::crash`]) that kills the
+//! worker at a frame boundary. The plan can also corrupt a result frame
+//! on the way out, which the master's collector counts and drops.
+//!
 //! Each worker drains its link in FIFO order, so when the master
 //! pipelines several rounds (`Master::submit` before `Master::wait`) the
 //! orders of round r+1 are already queued while round r computes.
@@ -21,7 +36,8 @@
 //! but kills the link — the master sees the worker as dead at its next
 //! dispatch.
 
-use super::messages::{ResultMsg, SealedPayload, WirePayload, WorkOrder};
+use super::lifecycle::WorkerDirectory;
+use super::messages::{ControlMsg, ResultMsg, SealedPayload, WirePayload, WorkOrder};
 use crate::config::TransportKind;
 use crate::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc, Point};
 use crate::field::Fp61;
@@ -29,74 +45,128 @@ use crate::matrix::Matrix;
 use crate::metrics::{names, MetricsRegistry};
 use crate::rng::{derive_seed, rng_from_seed};
 use crate::runtime::Executor;
-use crate::sim::CollusionPool;
+use crate::sim::{CollusionPool, FaultPlan};
 use crate::transport::{self, Transport, TransportError, WorkerLink};
-use crate::wire;
+use crate::wire::{self, WireMessage};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::Duration;
 
-/// A pool of worker threads plus the master-side transport sender.
+/// A pool of worker threads plus the master-side transport sender and
+/// the shared lifecycle directory.
 pub struct WorkerPool {
     transport: Option<Box<dyn Transport>>,
-    worker_pks: Vec<Point<Fp61>>,
+    directory: Arc<WorkerDirectory>,
     joins: Vec<JoinHandle<()>>,
+    // Respawn ingredients: a new incarnation is built from the same
+    // parts as the original.
+    master_pk: Point<Fp61>,
+    executor: Executor,
+    collusion: Option<Arc<CollusionPool>>,
+    faults: Option<Arc<FaultPlan>>,
+    seed: u64,
 }
 
 impl WorkerPool {
     /// Wire a fabric of `kind` and spawn `n` workers on it. Each worker
-    /// generates its own key pair (§IV-B step 1) and publishes the
-    /// public key to the master. Returns the pool plus the merged
-    /// inbound channel of result *frames* (consumed by the master's
-    /// collector thread).
+    /// generates its own key pair in-thread (§IV-B step 1) and registers
+    /// it over the wire; the pool drains all `n` registrations before
+    /// returning, so the directory is fully populated. Returns the pool
+    /// plus the merged inbound channel of result *frames* (consumed by
+    /// the master's collector thread).
     ///
     /// * `master_pk` — the master's public key (workers encrypt results
     ///   to it).
     /// * `executor` — shared execution façade (PJRT or native).
     /// * `collusion` — optional coalition tap; colluding workers deposit
     ///   their decrypted shares there.
+    /// * `faults` — optional deterministic crash/corruption schedule
+    ///   (the scenario engine's plan).
     /// * `metrics` — sink for the transport byte counters.
+    #[allow(clippy::too_many_arguments)]
     pub fn spawn(
         kind: TransportKind,
         n: usize,
         master_pk: Point<Fp61>,
         executor: Executor,
         collusion: Option<Arc<CollusionPool>>,
+        faults: Option<Arc<FaultPlan>>,
         seed: u64,
         metrics: Arc<MetricsRegistry>,
     ) -> Result<(Self, Receiver<Vec<u8>>), TransportError> {
-        let curve = sim_curve();
         let fabric = transport::connect(kind, n, metrics)?;
-        let mut worker_pks = Vec::with_capacity(n);
-        let mut joins = Vec::with_capacity(n);
-
+        let directory = Arc::new(WorkerDirectory::new(n));
+        let mut pool = Self {
+            transport: Some(fabric.transport),
+            directory,
+            joins: Vec::with_capacity(n),
+            master_pk,
+            executor,
+            collusion,
+            faults,
+            seed,
+        };
         for (w, link) in fabric.links.into_iter().enumerate() {
-            let mut rng = rng_from_seed(derive_seed(seed, 0xBEEF_0000 + w as u64));
-            let keys = KeyPair::generate(&curve, &mut rng);
-            worker_pks.push(keys.public());
-
-            let executor = executor.clone();
-            let collusion = collusion.clone();
-            let join = std::thread::Builder::new()
-                .name(format!("worker-{w}"))
-                .spawn(move || {
-                    worker_loop(w, keys, master_pk, link, executor, collusion, seed)
-                })
-                .expect("spawn worker");
-            joins.push(join);
+            let join = pool.spawn_incarnation(w, 0, link);
+            pool.joins.push(join);
         }
+        // Bring-up registration wave: no orders are out yet, so the next
+        // n inbound frames are exactly the workers' Register frames.
+        for _ in 0..n {
+            let frame = fabric
+                .inbound
+                .recv_timeout(Duration::from_secs(10))
+                .map_err(|_| TransportError::Setup("worker registration timed out".into()))?;
+            match wire::decode_message(&frame) {
+                Ok(WireMessage::Control(ControlMsg::Register { worker, generation, pk })) => {
+                    pool.directory.register(worker, generation, pk);
+                }
+                Ok(other) => {
+                    return Err(TransportError::Setup(format!(
+                        "expected a Register frame during pool bring-up, got a {} frame",
+                        other.kind_name()
+                    )))
+                }
+                Err(e) => {
+                    return Err(TransportError::Setup(format!(
+                        "undecodable frame during pool bring-up: {e}"
+                    )))
+                }
+            }
+        }
+        Ok((pool, fabric.inbound))
+    }
 
-        Ok((Self { transport: Some(fabric.transport), worker_pks, joins }, fabric.inbound))
+    /// Spawn one incarnation of worker `w` on `link`.
+    fn spawn_incarnation(&self, w: usize, generation: u32, link: WorkerLink) -> JoinHandle<()> {
+        let master_pk = self.master_pk;
+        let executor = self.executor.clone();
+        let collusion = self.collusion.clone();
+        let faults = self.faults.clone();
+        let seed = self.seed;
+        std::thread::Builder::new()
+            .name(format!("worker-{w}.g{generation}"))
+            .spawn(move || {
+                worker_loop(w, generation, seed, master_pk, link, executor, collusion, faults)
+            })
+            .expect("spawn worker")
     }
 
     /// Number of workers.
     pub fn n(&self) -> usize {
-        self.worker_pks.len()
+        self.directory.n()
     }
 
-    /// Worker public keys, indexed by worker id.
-    pub fn worker_pks(&self) -> &[Point<Fp61>] {
-        &self.worker_pks
+    /// The shared lifecycle directory (states, generations, current
+    /// public keys).
+    pub fn directory(&self) -> &Arc<WorkerDirectory> {
+        &self.directory
+    }
+
+    /// Current incarnations' public keys, indexed by worker id.
+    pub fn worker_pks(&self) -> Vec<Point<Fp61>> {
+        self.directory.pks()
     }
 
     /// Which fabric the pool runs on.
@@ -110,6 +180,28 @@ impl WorkerPool {
     pub fn dispatch(&self, order: &WorkOrder) -> Result<(), TransportError> {
         let frame = wire::encode_order(order);
         self.transport.as_ref().expect("pool not shut down").send(order.worker, frame)
+    }
+
+    /// Inject a crash over the wire: worker `w` dies silently at its
+    /// next frame boundary (orders already queued behind the kill are
+    /// lost with it). The caller is responsible for the master-side
+    /// bookkeeping (`Master::crash_worker` does both).
+    pub fn crash(&self, w: usize) -> Result<(), TransportError> {
+        let frame = wire::encode_control(&ControlMsg::Crash { worker: w });
+        self.transport.as_ref().expect("pool not shut down").send(w, frame)
+    }
+
+    /// Respawn worker `w`: tear down whatever is left of the old link,
+    /// wire a fresh one, and start a new incarnation on it (generation
+    /// bumped). Returns the new generation; the incarnation is serving
+    /// once its `Register` frame lands in the directory (the master
+    /// waits for that — [`Master::respawn_worker`](super::Master::respawn_worker)).
+    pub fn respawn(&mut self, w: usize) -> Result<u32, TransportError> {
+        let link = self.transport.as_ref().expect("pool not shut down").relink(w)?;
+        let generation = self.directory.begin_respawn(w);
+        let join = self.spawn_incarnation(w, generation, link);
+        self.joins.push(join);
+        Ok(generation)
     }
 
     /// Tear the fabric down and join the workers. Called by `Drop`;
@@ -128,25 +220,45 @@ impl Drop for WorkerPool {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn worker_loop(
     w: usize,
-    keys: KeyPair<Fp61>,
+    generation: u32,
+    seed: u64,
     master_pk: Point<Fp61>,
     mut link: WorkerLink,
     executor: Executor,
     collusion: Option<Arc<CollusionPool>>,
-    seed: u64,
+    faults: Option<Arc<FaultPlan>>,
 ) {
     // One worker thread models one remote node: its kernels run serial
     // so N workers use N cores, not N × pool-width.
     crate::parallel::mark_serial_thread();
-    let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
-    let mut rng = rng_from_seed(derive_seed(seed, 0xD0_0000 + w as u64));
+    let curve = sim_curve();
+    // Every incarnation keys itself deterministically from
+    // (seed, worker, generation): a respawn is a *new* identity, but a
+    // reproducible one.
+    let gen_stream = |base: u64| base ^ ((generation as u64) << 32) ^ w as u64;
+    let keys = {
+        let mut rng = rng_from_seed(derive_seed(seed, gen_stream(0xBEEF_0000)));
+        KeyPair::generate(&curve, &mut rng)
+    };
+    let mea = MeaEcc::new(curve, MaskMode::Keystream);
+    let mut rng = rng_from_seed(derive_seed(seed, gen_stream(0x00D0_0000)));
     // Result frames are serialized into this scratch buffer; after the
     // first round it is already at frame size and sending allocates
     // nothing (the TCP path writes from it directly, the in-proc path
     // copies it into the channel).
     let mut frame_buf: Vec<u8> = Vec::new();
+    // Register this incarnation (§IV-B step 1; re-run on every rejoin):
+    // the master seals subsequent shares to this key.
+    wire::encode_control_into(
+        &ControlMsg::Register { worker: w, generation, pk: keys.public() },
+        &mut frame_buf,
+    );
+    if link.send(&frame_buf).is_err() {
+        return; // master gone before we even joined
+    }
     loop {
         // A clean close (master gone / fabric torn down) ends the loop
         // silently; a poisoned stream (header-level corruption, socket
@@ -161,14 +273,32 @@ fn worker_loop(
                 break;
             }
         };
-        let order = match wire::decode_order(&frame) {
-            Ok(o) => o,
+        let order = match wire::decode_message(&frame) {
+            Ok(WireMessage::Order(o)) => o,
+            Ok(WireMessage::Control(ControlMsg::Crash { .. })) => {
+                // Injected kill: vanish mid-protocol, no reply, no
+                // cleanup — exactly what a dead node looks like.
+                return;
+            }
+            Ok(other) => {
+                executor.metrics().inc(names::WIRE_ERRORS);
+                eprintln!("worker {w}: dropping unexpected {} frame", other.kind_name());
+                continue;
+            }
             Err(e) => {
                 executor.metrics().inc(names::WIRE_ERRORS);
                 eprintln!("worker {w}: dropping undecodable frame: {e}");
                 continue;
             }
         };
+
+        // Scheduled crash: the order arrived, the reply never will. The
+        // master runs the same plan and books the round as degraded.
+        if let Some(plan) = &faults {
+            if plan.crashes_at(w, order.round) {
+                return;
+            }
+        }
 
         // Straggler simulation — the paper's sleep() injection.
         if !order.delay.is_zero() {
@@ -221,6 +351,12 @@ fn worker_loop(
 
         let msg = ResultMsg { round, worker: w, payload };
         wire::encode_result_into(&msg, &mut frame_buf);
+        // Scheduled wire corruption: flip one body byte so the frame
+        // fails its CRC at the master — the result is lost in transit,
+        // deterministically.
+        if faults.as_ref().is_some_and(|plan| plan.corrupts(w, round)) {
+            frame_buf[wire::HEADER_LEN] ^= 0xA5;
+        }
         if link.send(&frame_buf).is_err() {
             break; // master gone
         }
@@ -230,26 +366,39 @@ fn worker_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::lifecycle::WorkerState;
     use crate::runtime::WorkerOp;
+    use crate::sim::CrashEvent;
     use crate::wire::MsgKind;
-    use std::time::Duration;
+    use std::time::Instant;
 
-    fn pool(n: usize) -> (WorkerPool, Receiver<Vec<u8>>, KeyPair<Fp61>) {
+    fn pool_with(
+        kind: TransportKind,
+        n: usize,
+        collusion: Option<Arc<CollusionPool>>,
+        faults: Option<Arc<FaultPlan>>,
+    ) -> (WorkerPool, Receiver<Vec<u8>>, KeyPair<Fp61>, Arc<MetricsRegistry>) {
         let curve = sim_curve();
         let mut rng = rng_from_seed(0xAA);
         let master = KeyPair::generate(&curve, &mut rng);
         let metrics = Arc::new(MetricsRegistry::new());
         let exec = Executor::native(Arc::clone(&metrics));
         let (p, rx) = WorkerPool::spawn(
-            TransportKind::InProc,
+            kind,
             n,
             master.public(),
             exec,
-            None,
+            collusion,
+            faults,
             7,
-            metrics,
+            Arc::clone(&metrics),
         )
         .unwrap();
+        (p, rx, master, metrics)
+    }
+
+    fn pool(n: usize) -> (WorkerPool, Receiver<Vec<u8>>, KeyPair<Fp61>) {
+        let (p, rx, master, _) = pool_with(TransportKind::InProc, n, None, None);
         (p, rx, master)
     }
 
@@ -258,18 +407,21 @@ mod tests {
         wire::decode_result(&frame).unwrap()
     }
 
+    fn identity_order(round: u64, worker: usize, m: Matrix) -> WorkOrder {
+        WorkOrder {
+            round,
+            worker,
+            op: WorkerOp::Identity,
+            payloads: vec![WirePayload::Plain(m)],
+            delay: Duration::ZERO,
+        }
+    }
+
     #[test]
     fn workers_echo_identity_orders() {
         let (pool, rx, _master) = pool(4);
         for w in 0..4 {
-            pool.dispatch(&WorkOrder {
-                round: 1,
-                worker: w,
-                op: WorkerOp::Identity,
-                payloads: vec![WirePayload::Plain(Matrix::ones(2, 2).scale(w as f32))],
-                delay: Duration::ZERO,
-            })
-            .unwrap();
+            pool.dispatch(&identity_order(1, w, Matrix::ones(2, 2).scale(w as f32))).unwrap();
         }
         let mut seen = vec![false; 4];
         for _ in 0..4 {
@@ -313,31 +465,11 @@ mod tests {
 
     #[test]
     fn colluders_deposit_plaintext() {
-        let curve = sim_curve();
-        let mut rng = rng_from_seed(0xBB);
-        let master = KeyPair::generate(&curve, &mut rng);
-        let metrics = Arc::new(MetricsRegistry::new());
-        let exec = Executor::native(Arc::clone(&metrics));
         let coalition = Arc::new(CollusionPool::new(vec![1]));
-        let (pool, rx) = WorkerPool::spawn(
-            TransportKind::InProc,
-            3,
-            master.public(),
-            exec,
-            Some(Arc::clone(&coalition)),
-            7,
-            metrics,
-        )
-        .unwrap();
+        let (pool, rx, _master, _) =
+            pool_with(TransportKind::InProc, 3, Some(Arc::clone(&coalition)), None);
         for w in 0..3 {
-            pool.dispatch(&WorkOrder {
-                round: 1,
-                worker: w,
-                op: WorkerOp::Identity,
-                payloads: vec![WirePayload::Plain(Matrix::ones(2, 2))],
-                delay: Duration::ZERO,
-            })
-            .unwrap();
+            pool.dispatch(&identity_order(1, w, Matrix::ones(2, 2))).unwrap();
         }
         for _ in 0..3 {
             recv_result(&rx);
@@ -359,14 +491,7 @@ mod tests {
             delay: Duration::from_millis(150),
         })
         .unwrap();
-        pool.dispatch(&WorkOrder {
-            round: 1,
-            worker: 1,
-            op: WorkerOp::Identity,
-            payloads: vec![WirePayload::Plain(Matrix::ones(1, 1))],
-            delay: Duration::ZERO,
-        })
-        .unwrap();
+        pool.dispatch(&identity_order(1, 1, Matrix::ones(1, 1))).unwrap();
         let first = recv_result(&rx);
         assert_eq!(first.worker, 1, "non-straggler must arrive first");
     }
@@ -378,49 +503,98 @@ mod tests {
         // count it, drop it, and keep serving.
         let junk = wire::frame(MsgKind::Order, b"not an order body");
         pool.transport.as_ref().unwrap().send(0, junk).unwrap();
-        pool.dispatch(&WorkOrder {
-            round: 2,
-            worker: 0,
-            op: WorkerOp::Identity,
-            payloads: vec![WirePayload::Plain(Matrix::ones(1, 1))],
-            delay: Duration::ZERO,
-        })
-        .unwrap();
+        pool.dispatch(&identity_order(2, 0, Matrix::ones(1, 1))).unwrap();
         let r = recv_result(&rx);
         assert_eq!(r.round, 2, "worker must survive the junk frame");
     }
 
     #[test]
     fn tcp_pool_round_trips_orders() {
-        let curve = sim_curve();
-        let mut rng = rng_from_seed(0xCC);
-        let master = KeyPair::generate(&curve, &mut rng);
-        let metrics = Arc::new(MetricsRegistry::new());
-        let exec = Executor::native(Arc::clone(&metrics));
-        let (pool, rx) = WorkerPool::spawn(
-            TransportKind::Tcp,
-            2,
-            master.public(),
-            exec,
-            None,
-            7,
-            Arc::clone(&metrics),
-        )
-        .unwrap();
+        let (pool, rx, _master, metrics) = pool_with(TransportKind::Tcp, 2, None, None);
         for w in 0..2 {
-            pool.dispatch(&WorkOrder {
-                round: 5,
-                worker: w,
-                op: WorkerOp::Identity,
-                payloads: vec![WirePayload::Plain(Matrix::ones(3, 3))],
-                delay: Duration::ZERO,
-            })
-            .unwrap();
+            pool.dispatch(&identity_order(5, w, Matrix::ones(3, 3))).unwrap();
         }
         for _ in 0..2 {
             let r = recv_result(&rx);
             assert_eq!(r.round, 5);
         }
         assert!(metrics.get(names::BYTES_TX) > 0, "socket bytes must be counted");
+    }
+
+    fn crash_respawn_check(kind: TransportKind) {
+        let (mut pool, rx, _master, _) = pool_with(kind, 2, None, None);
+        let pk_gen0 = pool.worker_pks()[0];
+        // Kill worker 0 over the wire, then bring up a new incarnation.
+        pool.crash(0).unwrap();
+        let gen = pool.respawn(0).unwrap();
+        assert_eq!(gen, 1);
+        // The rejoin handshake: the new incarnation's Register frame
+        // flows through the normal inbound channel (in the live system
+        // the collector consumes it; here the test plays collector).
+        let frame = rx.recv_timeout(Duration::from_secs(5)).expect("register frame");
+        match wire::decode_message(&frame).unwrap() {
+            WireMessage::Control(ControlMsg::Register { worker, generation, pk }) => {
+                assert_eq!((worker, generation), (0, 1));
+                pool.directory().register(worker, generation, pk);
+            }
+            other => panic!("expected the respawn registration, got {other:?}"),
+        }
+        assert!(pool.directory().wait_registered(0, gen, Instant::now()));
+        assert_eq!(pool.directory().state(0), WorkerState::Alive);
+        assert_ne!(pool.worker_pks()[0], pk_gen0, "rejoin must re-key");
+        // The respawned incarnation serves orders on the fresh link.
+        pool.dispatch(&identity_order(3, 0, Matrix::ones(2, 2))).unwrap();
+        let r = recv_result(&rx);
+        assert_eq!((r.round, r.worker), (3, 0));
+    }
+
+    #[test]
+    fn inproc_worker_crashes_and_respawns() {
+        crash_respawn_check(TransportKind::InProc);
+    }
+
+    #[test]
+    fn tcp_worker_crashes_and_respawns() {
+        crash_respawn_check(TransportKind::Tcp);
+    }
+
+    #[test]
+    fn planned_crash_swallows_the_round() {
+        let plan = Arc::new(FaultPlan::new(
+            vec![CrashEvent { worker: 0, round: 2, respawn_after: None }],
+            0.0,
+            7,
+        ));
+        let (pool, rx, _master, _) = pool_with(TransportKind::InProc, 2, None, Some(plan));
+        // Round 1: both reply. Round 2: worker 0 crashes mid-round.
+        for round in 1..=2u64 {
+            for w in 0..2 {
+                pool.dispatch(&identity_order(round, w, Matrix::ones(1, 1))).unwrap();
+            }
+        }
+        let mut got: Vec<(u64, usize)> = (0..3)
+            .map(|_| {
+                let r = recv_result(&rx);
+                (r.round, r.worker)
+            })
+            .collect();
+        got.sort_unstable();
+        assert_eq!(got, vec![(1, 0), (1, 1), (2, 1)], "worker 0's round-2 reply must vanish");
+        assert!(
+            rx.recv_timeout(Duration::from_millis(100)).is_err(),
+            "nothing further may arrive"
+        );
+    }
+
+    #[test]
+    fn planned_corruption_poisons_the_result_frame() {
+        let plan = Arc::new(FaultPlan::new(Vec::new(), 0.999, 7));
+        let (pool, rx, _master, _) = pool_with(TransportKind::InProc, 1, None, Some(plan));
+        pool.dispatch(&identity_order(1, 0, Matrix::ones(2, 2))).unwrap();
+        let frame = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(
+            wire::decode_result(&frame).is_err(),
+            "corrupted frame must fail wire validation at the master"
+        );
     }
 }

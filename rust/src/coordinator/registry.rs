@@ -9,6 +9,25 @@
 //! thread, waiting on one round never stalls result intake for the
 //! others, and a dropped [`RoundHandle`](super::RoundHandle) can settle
 //! its round's accounting from wherever it is dropped.
+//!
+//! **Partial-failure accounting.** Every round tracks which dispatched
+//! workers still owe it a result (`pending`). When the master learns a
+//! worker is gone — a scheduled mid-round crash, a corrupted result
+//! frame, or a dead link — it calls [`note_lost`](RoundRegistry::note_lost)
+//! / [`note_worker_down`](RoundRegistry::note_worker_down), and the
+//! round re-evaluates what can still arrive:
+//!
+//! * still enough for the current policy → nothing changes;
+//! * short of the policy but at least the scheme's hard minimum → the
+//!   wait target is *degraded* to "decode from what can still arrive"
+//!   (flexible-threshold schemes — the paper's headline property);
+//! * below the hard minimum → the round is *hopeless* and the waiter is
+//!   woken immediately with a typed error, instead of burning its whole
+//!   deadline on results that can never come.
+//!
+//! A result from a worker the master wrote off can still arrive (the
+//! master is deliberately pessimistic); it is buffered normally — the
+//! round just finishes earlier than feared.
 
 use crate::coding::{DecodeCtx, Threshold};
 use crate::matrix::Matrix;
@@ -29,10 +48,22 @@ pub(crate) struct InflightRound {
     /// the decode input set is exactly the first `wait_for` arrivals
     /// (deterministic `results_used`, same as the old blocking recv loop).
     pub results: Vec<(usize, Matrix)>,
-    /// How many results the wait policy needs.
+    /// How many results the wait policy needs (may be lowered once — see
+    /// module docs — in which case `degraded` is set).
     pub wait_for: usize,
+    /// The scheme's hard floor: `Exact(k)` needs exactly `k`,
+    /// `Flexible { min }` can degrade down to `min` but no further.
+    pub min_required: usize,
     /// How many orders were actually dispatched.
     pub dispatched: usize,
+    /// Dispatched workers that still owe a result and are believed able
+    /// to deliver one.
+    pub pending: Vec<usize>,
+    /// Was `wait_for` lowered below the original policy?
+    pub degraded: bool,
+    /// Set when fewer than `min_required` results can still arrive:
+    /// `(possible, need)`.
+    pub hopeless: Option<(usize, usize)>,
     /// Results that arrived while in flight but after the buffer froze
     /// (already counted as wasted work).
     pub spilled: usize,
@@ -50,6 +81,11 @@ impl InflightRound {
     pub fn received_totals(&self) -> (u64, u64) {
         self.sizes.iter().fold((0, 0), |(s, b), (ds, db)| (s + ds, b + db))
     }
+
+    /// Results that can still reach the buffer: already there + pending.
+    fn possible(&self) -> usize {
+        self.results.len() + self.pending.len()
+    }
 }
 
 /// Why a wait did not produce a round.
@@ -58,8 +94,27 @@ pub(crate) enum WaitError {
     /// The round is not in flight (never submitted, already waited on,
     /// or abandoned).
     Unknown(u64),
-    /// The deadline passed first; the round has been abandoned.
-    TimedOut(u64),
+    /// The deadline passed first; the round has been abandoned. Enough
+    /// workers were still live for the policy — they were just slow.
+    TimedOut {
+        /// The round that timed out.
+        round: u64,
+        /// Results buffered when the deadline hit.
+        got: usize,
+        /// Results the wait policy wanted.
+        need: usize,
+    },
+    /// Too many workers are down for the wait policy to ever be
+    /// satisfied; the round has been abandoned without waiting out the
+    /// deadline.
+    Hopeless {
+        /// The doomed round.
+        round: u64,
+        /// Results that could still have arrived.
+        possible: usize,
+        /// The scheme's hard minimum.
+        need: usize,
+    },
 }
 
 #[derive(Default)]
@@ -95,7 +150,11 @@ impl RoundRegistry {
                 threshold,
                 results: Vec::new(),
                 wait_for: usize::MAX,
+                min_required: 0,
                 dispatched: 0,
+                pending: Vec::new(),
+                degraded: false,
+                hopeless: None,
                 spilled: 0,
                 sizes: Vec::new(),
                 started,
@@ -104,14 +163,22 @@ impl RoundRegistry {
     }
 
     /// Install the real wait/dispatch counts after the dispatch loop.
+    /// `sent` lists the workers whose orders actually went out; the ones
+    /// that have not already responded become the round's pending set.
     /// Early arrivals beyond `wait_for` (possible when workers respond
     /// mid-dispatch) spill into the wasted-work accounting, keeping the
     /// decode input at exactly the first `wait_for` arrivals.
-    pub fn finalize(&self, round: u64, wait_for: usize, dispatched: usize) {
+    pub fn finalize(&self, round: u64, wait_for: usize, min_required: usize, sent: &[usize]) {
         let mut st = self.state.lock().unwrap();
         if let Some(r) = st.rounds.get_mut(&round) {
             r.wait_for = wait_for;
-            r.dispatched = dispatched;
+            r.min_required = min_required;
+            r.dispatched = sent.len();
+            r.pending = sent
+                .iter()
+                .copied()
+                .filter(|w| !r.results.iter().any(|(rw, _)| rw == w))
+                .collect();
             if r.results.len() > wait_for {
                 let excess = r.results.len() - wait_for;
                 r.results.truncate(wait_for);
@@ -144,11 +211,72 @@ impl RoundRegistry {
         }
     }
 
+    /// The master learned that `worker`'s result for `round` will never
+    /// arrive (scheduled crash, corrupted frame): drop it from the
+    /// pending set and re-evaluate the round (degrade or go hopeless —
+    /// see module docs).
+    pub fn note_lost(&self, round: u64, worker: usize) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(r) = st.rounds.get_mut(&round) {
+            let before = r.pending.len();
+            r.pending.retain(|&p| p != worker);
+            if r.pending.len() != before {
+                self.reevaluate(r);
+            }
+        }
+    }
+
+    /// The master learned `worker` is down entirely (dead link, crash
+    /// without respawn yet): every in-flight round that still expected a
+    /// result from it re-evaluates.
+    pub fn note_worker_down(&self, worker: usize) {
+        let mut st = self.state.lock().unwrap();
+        for r in st.rounds.values_mut() {
+            let before = r.pending.len();
+            r.pending.retain(|&p| p != worker);
+            if r.pending.len() != before {
+                self.reevaluate(r);
+            }
+        }
+    }
+
+    /// Re-derive a round's fate after its pending set shrank.
+    fn reevaluate(&self, r: &mut InflightRound) {
+        if r.wait_for == usize::MAX {
+            return; // not finalized yet: the policy is not known
+        }
+        if r.hopeless.is_some() || r.results.len() >= r.wait_for {
+            return; // already settled one way or the other
+        }
+        let possible = r.possible();
+        if possible >= r.wait_for {
+            return; // the policy is still reachable
+        }
+        if possible < r.min_required {
+            // Exact schemes land here as soon as k is unreachable;
+            // flexible schemes when even `min` is gone.
+            r.hopeless = Some((possible, r.min_required));
+            self.cv.notify_all();
+            return;
+        }
+        // Flexible threshold: degrade to "decode from what can still
+        // arrive" instead of riding the deadline down.
+        r.wait_for = possible.max(r.min_required);
+        if !r.degraded {
+            r.degraded = true;
+            self.metrics.inc(names::ROUNDS_DEGRADED);
+        }
+        if r.results.len() >= r.wait_for {
+            self.cv.notify_all();
+        }
+    }
+
     /// Deliver one decoded worker result with its wire cost
     /// `(symbols, frame bytes)`: buffered under its in-flight round
     /// (waking waiters when the policy is satisfied), or counted as
     /// wasted work — spilled (buffer frozen at `wait_for`) or late
-    /// (round gone). Returns true when buffered.
+    /// (round gone). Returns true when buffered. A result from a worker
+    /// previously written off (`note_lost`) is still welcome.
     pub fn deliver(
         &self,
         round: u64,
@@ -161,11 +289,13 @@ impl RoundRegistry {
         match st.rounds.get_mut(&round) {
             Some(r) if r.results.len() >= r.wait_for => {
                 // Policy already satisfied: frozen buffer, wasted work.
+                r.pending.retain(|&p| p != worker);
                 r.spilled += 1;
                 self.metrics.inc(names::RESULTS_LATE);
                 false
             }
             Some(r) => {
+                r.pending.retain(|&p| p != worker);
                 r.results.push((worker, result));
                 r.sizes.push((symbols, frame_bytes));
                 if r.results.len() >= r.wait_for {
@@ -194,9 +324,10 @@ impl RoundRegistry {
     }
 
     /// Block until `round` satisfies its wait policy, or until
-    /// `deadline`. On timeout the round is abandoned in place (its
-    /// buffered results become wasted work) so late arrivals go through
-    /// the stale path instead of accumulating forever.
+    /// `deadline`, or until the round becomes hopeless (see module
+    /// docs). On timeout or hopelessness the round is abandoned in place
+    /// (its buffered results become wasted work) so late arrivals go
+    /// through the stale path instead of accumulating forever.
     pub fn wait_done(&self, round: u64, deadline: Instant) -> Result<InflightRound, WaitError> {
         let mut st = self.state.lock().unwrap();
         loop {
@@ -211,12 +342,21 @@ impl RoundRegistry {
                     }
                     return Ok(done);
                 }
-                Some(_) => {}
+                Some(r) => {
+                    if let Some((possible, need)) = r.hopeless {
+                        Self::drop_round(&mut st, &self.metrics, round);
+                        return Err(WaitError::Hopeless { round, possible, need });
+                    }
+                }
             }
             let now = Instant::now();
             if now >= deadline {
+                let (got, need) = match st.rounds.get(&round) {
+                    Some(r) => (r.results.len(), r.wait_for),
+                    None => (0, 0),
+                };
                 Self::drop_round(&mut st, &self.metrics, round);
-                return Err(WaitError::TimedOut(round));
+                return Err(WaitError::TimedOut { round, got, need });
             }
             let (guard, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
             st = guard;
@@ -283,6 +423,14 @@ mod tests {
         reg.register(round, ctx(), Threshold::Exact(1), Instant::now());
     }
 
+    fn open_flexible(reg: &RoundRegistry, round: u64, min: usize) {
+        reg.register(round, ctx(), Threshold::Flexible { min }, Instant::now());
+    }
+
+    fn sent(n: usize) -> Vec<usize> {
+        (0..n).collect()
+    }
+
     #[test]
     fn results_before_finalize_are_buffered_not_completing() {
         let (reg, _) = registry();
@@ -290,14 +438,14 @@ mod tests {
         assert!(reg.deliver(1, 0, Matrix::ones(1, 1), 1, 64));
         // Unsatisfiable until finalize installs the real wait_for.
         let err = reg.wait_done(1, Instant::now()).unwrap_err();
-        assert_eq!(err, WaitError::TimedOut(1));
+        assert!(matches!(err, WaitError::TimedOut { round: 1, .. }));
     }
 
     #[test]
     fn wait_returns_once_policy_met_even_from_another_thread() {
         let (reg, _) = registry();
         open(&reg, 7);
-        reg.finalize(7, 2, 4);
+        reg.finalize(7, 2, 1, &sent(4));
         let reg2 = Arc::clone(&reg);
         let j = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(20));
@@ -316,10 +464,10 @@ mod tests {
     fn timeout_abandons_and_counts_buffered_results_late() {
         let (reg, metrics) = registry();
         open(&reg, 3);
-        reg.finalize(3, 5, 5);
+        reg.finalize(3, 5, 1, &sent(5));
         reg.deliver(3, 0, Matrix::ones(1, 1), 1, 64);
         let err = reg.wait_done(3, Instant::now() + Duration::from_millis(30)).unwrap_err();
-        assert_eq!(err, WaitError::TimedOut(3));
+        assert_eq!(err, WaitError::TimedOut { round: 3, got: 1, need: 5 });
         assert!(!reg.is_inflight(3));
         assert_eq!(metrics.get(names::RESULTS_LATE), 1);
     }
@@ -328,7 +476,7 @@ mod tests {
     fn waiting_twice_is_unknown() {
         let (reg, _) = registry();
         open(&reg, 9);
-        reg.finalize(9, 0, 0); // trivially satisfied
+        reg.finalize(9, 0, 0, &sent(0)); // trivially satisfied
         reg.wait_done(9, Instant::now()).unwrap();
         assert_eq!(
             reg.wait_done(9, Instant::now()).unwrap_err(),
@@ -340,7 +488,7 @@ mod tests {
     fn buffer_freezes_at_wait_for() {
         let (reg, metrics) = registry();
         open(&reg, 5);
-        reg.finalize(5, 2, 4);
+        reg.finalize(5, 2, 1, &sent(4));
         assert!(reg.deliver(5, 0, Matrix::ones(1, 1), 1, 64));
         assert!(reg.deliver(5, 1, Matrix::ones(1, 1), 1, 64));
         // Policy satisfied: the third arrival is wasted work, not a
@@ -360,7 +508,7 @@ mod tests {
         for w in 0..3 {
             assert!(reg.deliver(6, w, Matrix::ones(1, 1), 1, 64));
         }
-        reg.finalize(6, 2, 4);
+        reg.finalize(6, 2, 1, &sent(4));
         let done = reg.wait_done(6, Instant::now()).unwrap();
         assert_eq!(done.results.len(), 2, "early overshoot must be trimmed");
         assert_eq!(done.spilled, 1);
@@ -371,7 +519,7 @@ mod tests {
     fn would_accept_and_note_rejected_paths() {
         let (reg, metrics) = registry();
         open(&reg, 8);
-        reg.finalize(8, 1, 2);
+        reg.finalize(8, 1, 1, &sent(2));
         assert!(reg.would_accept(8));
         assert!(reg.deliver(8, 0, Matrix::ones(1, 1), 3, 70));
         assert!(!reg.would_accept(8), "frozen buffer must reject");
@@ -388,7 +536,7 @@ mod tests {
     fn abandon_settles_accounting() {
         let (reg, metrics) = registry();
         open(&reg, 4);
-        reg.finalize(4, 3, 3);
+        reg.finalize(4, 3, 1, &sent(3));
         reg.deliver(4, 0, Matrix::ones(1, 1), 1, 64);
         assert!(reg.abandon(4));
         assert!(!reg.abandon(4), "second abandon is a no-op");
@@ -396,5 +544,131 @@ mod tests {
         // The two never-delivered results now land through the stale path.
         assert!(!reg.deliver(4, 1, Matrix::ones(1, 1), 1, 64));
         assert_eq!(metrics.get(names::RESULTS_LATE), 2);
+    }
+
+    // ---- lifecycle churn -------------------------------------------------
+
+    #[test]
+    fn mid_round_loss_degrades_flexible_round_to_what_can_arrive() {
+        let (reg, metrics) = registry();
+        open_flexible(&reg, 10, 1);
+        reg.finalize(10, 4, 1, &sent(4));
+        reg.deliver(10, 0, Matrix::ones(1, 1), 1, 64);
+        reg.deliver(10, 1, Matrix::ones(1, 1), 1, 64);
+        // Workers 2 and 3 die mid-round: the policy (4) is unreachable,
+        // but min (1) is already exceeded → decode from what arrived.
+        reg.note_lost(10, 2);
+        reg.note_worker_down(3);
+        let done = reg.wait_done(10, Instant::now() + Duration::from_secs(5)).unwrap();
+        assert_eq!(done.results.len(), 2);
+        assert!(done.degraded, "the round must record its degradation");
+        assert_eq!(done.wait_for, 2);
+        assert_eq!(metrics.get(names::ROUNDS_DEGRADED), 1);
+    }
+
+    #[test]
+    fn degraded_round_still_waits_for_remaining_pending() {
+        let (reg, _) = registry();
+        open_flexible(&reg, 11, 1);
+        reg.finalize(11, 3, 1, &sent(3));
+        reg.deliver(11, 0, Matrix::ones(1, 1), 1, 64);
+        reg.note_lost(11, 1); // wait_for degrades 3 → 2; worker 2 still owes
+        let reg2 = Arc::clone(&reg);
+        let j = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            reg2.deliver(11, 2, Matrix::ones(1, 1), 1, 64);
+        });
+        let done = reg.wait_done(11, Instant::now() + Duration::from_secs(5)).unwrap();
+        assert_eq!(done.results.len(), 2, "the straggling live worker is still waited for");
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn exact_round_with_unreachable_threshold_is_hopeless_immediately() {
+        let (reg, _) = registry();
+        reg.register(20, ctx(), Threshold::Exact(3), Instant::now());
+        reg.finalize(20, 3, 3, &sent(4));
+        reg.deliver(20, 0, Matrix::ones(1, 1), 1, 64);
+        reg.note_worker_down(1);
+        reg.note_worker_down(2);
+        // 1 buffered + 1 pending = 2 < k = 3 → hopeless, long before the
+        // deadline.
+        let t0 = Instant::now();
+        let err = reg.wait_done(20, t0 + Duration::from_secs(30)).unwrap_err();
+        assert_eq!(err, WaitError::Hopeless { round: 20, possible: 2, need: 3 });
+        assert!(t0.elapsed() < Duration::from_secs(5), "must not ride the deadline");
+        assert!(!reg.is_inflight(20));
+    }
+
+    #[test]
+    fn flexible_round_below_min_is_hopeless() {
+        let (reg, _) = registry();
+        open_flexible(&reg, 21, 2);
+        reg.finalize(21, 3, 2, &sent(3));
+        reg.deliver(21, 0, Matrix::ones(1, 1), 1, 64);
+        reg.note_worker_down(1);
+        reg.note_worker_down(2);
+        let err = reg.wait_done(21, Instant::now() + Duration::from_secs(30)).unwrap_err();
+        assert_eq!(err, WaitError::Hopeless { round: 21, possible: 1, need: 2 });
+    }
+
+    #[test]
+    fn result_from_a_written_off_worker_still_buffers() {
+        // A worker the master wrote off (crash noted) manages to deliver
+        // anyway — e.g. its result was already in flight, or it crashed
+        // and rejoined mid-round. The registry welcomes the result.
+        let (reg, _) = registry();
+        open_flexible(&reg, 30, 1);
+        reg.finalize(30, 3, 1, &sent(3));
+        reg.note_lost(30, 2); // degrade 3 → 2
+        assert!(reg.deliver(30, 2, Matrix::ones(1, 1), 1, 64), "written-off result welcome");
+        assert!(reg.deliver(30, 0, Matrix::ones(1, 1), 1, 64));
+        let done = reg.wait_done(30, Instant::now()).unwrap();
+        assert_eq!(done.results.len(), 2);
+        assert_eq!(done.results[0].0, 2);
+        // note_lost for a worker that already delivered is a no-op.
+        assert!(!reg.is_inflight(30));
+    }
+
+    #[test]
+    fn abandon_while_respawning_settles_cleanly() {
+        // A round is abandoned while one of its workers is mid-respawn:
+        // the buffered result is wasted work, the never-arriving results
+        // go through the late path, and nothing leaks.
+        let (reg, metrics) = registry();
+        open_flexible(&reg, 40, 1);
+        reg.finalize(40, 3, 1, &sent(3));
+        reg.deliver(40, 0, Matrix::ones(1, 1), 1, 64);
+        reg.note_lost(40, 1); // crashed, respawn pending
+        assert!(reg.abandon(40));
+        assert_eq!(metrics.get(names::RESULTS_LATE), 1);
+        // The respawned incarnation's late delivery (new generation, old
+        // round id) settles through the stale path.
+        assert!(!reg.deliver(40, 1, Matrix::ones(1, 1), 1, 64));
+        assert!(!reg.deliver(40, 2, Matrix::ones(1, 1), 1, 64));
+        assert_eq!(metrics.get(names::RESULTS_LATE), 3);
+    }
+
+    #[test]
+    fn crash_straddling_two_interleaved_rounds_hits_both() {
+        // Two rounds in flight; worker 3 crashes once, mid-both. The
+        // flexible round degrades; the exact round goes hopeless —
+        // independent fates from one note_worker_down.
+        let (reg, metrics) = registry();
+        open_flexible(&reg, 50, 1);
+        reg.finalize(50, 4, 1, &sent(4));
+        reg.register(51, ctx(), Threshold::Exact(4), Instant::now());
+        reg.finalize(51, 4, 4, &sent(4));
+        for w in 0..3 {
+            reg.deliver(50, w, Matrix::ones(1, 1), 1, 64);
+            reg.deliver(51, w, Matrix::ones(1, 1), 1, 64);
+        }
+        reg.note_worker_down(3);
+        let done = reg.wait_done(50, Instant::now() + Duration::from_secs(5)).unwrap();
+        assert_eq!(done.results.len(), 3);
+        assert!(done.degraded);
+        let err = reg.wait_done(51, Instant::now() + Duration::from_secs(5)).unwrap_err();
+        assert_eq!(err, WaitError::Hopeless { round: 51, possible: 3, need: 4 });
+        assert_eq!(metrics.get(names::ROUNDS_DEGRADED), 1);
     }
 }

@@ -7,18 +7,25 @@
 //!   communication accounting.
 //! * `sweep`  — training-time sweep over straggler counts (the Fig. 3
 //!   scenario grid) for one scheme.
+//! * `scenario` — run a declarative adversity scenario (stragglers,
+//!   crash/respawn churn, colluders, wire corruption) through the
+//!   scenario engine and report per-round outcomes + the determinism
+//!   digest (see also the dedicated `scenario_runner` bin).
 //! * `info`   — print the resolved config, artifact registry, and the
 //!   Table II complexity row for the chosen parameters.
 
 use spacdc::analysis::CostModel;
 use spacdc::cli::{parse, usage, ArgSpec};
 use spacdc::coding::CodedTask;
-use spacdc::config::{SchemeKind, SystemConfig, TransportKind, TransportSecurity};
+use spacdc::config::{
+    parse_threads_token, SchemeKind, SystemConfig, TransportKind, TransportSecurity,
+};
 use spacdc::coordinator::MasterBuilder;
 use spacdc::dl::{train, TrainerOptions};
 use spacdc::matrix::{gram, split_rows, Matrix};
 use spacdc::rng::rng_from_seed;
 use spacdc::runtime::{Executor, RuntimeService, WorkerOp};
+use spacdc::sim::{run_scenario, Scenario};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -34,7 +41,8 @@ fn specs() -> Vec<ArgSpec> {
         ArgSpec::opt("transport", "inproc", "worker link fabric: inproc|tcp"),
         ArgSpec::opt("security", "mea-ecc", "payload sealing: plain|mea-ecc"),
         ArgSpec::opt("round-deadline-s", "60", "per-round result-collection deadline (s)"),
-        ArgSpec::opt("threads", "0", "master-side thread-pool width (0 = one per core)"),
+        ArgSpec::opt("threads", "auto", "master-side thread-pool width (auto = one per core)"),
+        ArgSpec::opt("scenario", "", "scenario name or file (scenario subcommand)"),
         ArgSpec::opt("seed", "49374", "experiment seed"),
         ArgSpec::opt("base-service-ms", "0", "injected per-task service time (ms)"),
         ArgSpec::opt("rows", "512", "data rows m (round subcommand)"),
@@ -55,7 +63,7 @@ fn main() -> anyhow::Result<()> {
         }
     };
     if parsed.has_flag("help") || parsed.positional.is_empty() {
-        print!("{}", usage("spacdc <train|round|sweep|info>", &specs));
+        print!("{}", usage("spacdc <train|round|sweep|scenario|info>", &specs));
         return Ok(());
     }
 
@@ -75,7 +83,15 @@ fn main() -> anyhow::Result<()> {
     cfg.security = TransportSecurity::from_str_token(parsed.get_str("security"))
         .ok_or_else(|| anyhow::anyhow!("unknown security {}", parsed.get_str("security")))?;
     cfg.round_deadline_s = parsed.get_f64("round-deadline-s");
-    cfg.threads = parsed.get_usize("threads");
+    cfg.threads = parse_threads_token(parsed.get_str("threads")).ok_or_else(|| {
+        anyhow::anyhow!(
+            "--threads {}: pool width must be ≥ 1, or 'auto'",
+            parsed.get_str("threads")
+        )
+    })?;
+    if let Some(s) = parsed.get("scenario").filter(|s| !s.is_empty()) {
+        cfg.scenario = s.to_string();
+    }
     cfg.seed = parsed.get_u64("seed");
     cfg.delay.base_service_s = parsed.get_f64("base-service-ms") / 1e3;
     cfg.use_pjrt = !parsed.has_flag("no-pjrt");
@@ -85,6 +101,7 @@ fn main() -> anyhow::Result<()> {
         "train" => cmd_train(&cfg),
         "round" => cmd_round(&cfg, parsed.get_usize("rows"), parsed.get_usize("cols")),
         "sweep" => cmd_sweep(&cfg),
+        "scenario" => cmd_scenario(&cfg),
         "info" => cmd_info(&cfg),
         other => {
             eprintln!("unknown subcommand {other}");
@@ -194,6 +211,22 @@ fn cmd_sweep(cfg: &SystemConfig) -> anyhow::Result<()> {
         let report = train(&TrainerOptions::new(c))?;
         println!("{s:>3}  {:>10.2}  {:>9.4}", report.total_wall_s, report.final_accuracy);
     }
+    Ok(())
+}
+
+fn cmd_scenario(cfg: &SystemConfig) -> anyhow::Result<()> {
+    if cfg.scenario.is_empty() {
+        anyhow::bail!(
+            "no scenario selected: pass --scenario <name|file> or set `scenario =` in the \
+             config (builtins: {})",
+            Scenario::builtin_names().join(", ")
+        );
+    }
+    let scenario = Scenario::load(&cfg.scenario)?;
+    let report = run_scenario(&scenario, cfg.transport, cfg.threads)?;
+    print!("{}", report.render_table());
+    std::fs::write("SCENARIO_REPORT.json", report.to_json())?;
+    println!("wrote SCENARIO_REPORT.json");
     Ok(())
 }
 

@@ -36,6 +36,14 @@ pub mod names {
     pub const RESULTS_USED: &str = "sched.results_used";
     /// Results that arrived after the decode fired (wasted work).
     pub const RESULTS_LATE: &str = "sched.results_late";
+    /// Rounds whose wait policy was lowered to "decode from what can
+    /// still arrive" after mid-round worker loss.
+    pub const ROUNDS_DEGRADED: &str = "sched.rounds_degraded";
+    /// Worker crashes the master observed (injected, scheduled, or link
+    /// death).
+    pub const WORKER_CRASHES: &str = "lifecycle.crashes";
+    /// Worker incarnations respawned and re-registered.
+    pub const WORKER_RESPAWNS: &str = "lifecycle.respawns";
     /// Executions that went through the PJRT artifact path.
     pub const PJRT_EXECUTIONS: &str = "runtime.pjrt_executions";
     /// Executions that fell back to the native kernel.

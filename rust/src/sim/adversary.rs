@@ -83,6 +83,9 @@ impl CollusionPool {
 pub struct EavesdroppedMessage {
     /// Worker endpoint of the link.
     pub worker: usize,
+    /// Round the payload belonged to (lets offline analysis correlate a
+    /// capture with the round's plaintext).
+    pub round: u64,
     /// Direction: true = master→worker.
     pub downlink: bool,
     /// The payload as it appeared on the wire (ciphertext when MEA-ECC
@@ -105,9 +108,10 @@ impl EavesdropLog {
     }
 
     /// Record a wire payload.
-    pub fn capture(&self, worker: usize, downlink: bool, payload: &Matrix) {
+    pub fn capture(&self, worker: usize, round: u64, downlink: bool, payload: &Matrix) {
         self.messages.lock().unwrap().push(EavesdroppedMessage {
             worker,
+            round,
             downlink,
             payload: payload.clone(),
         });
@@ -238,8 +242,8 @@ mod tests {
         let log = EavesdropLog::new();
         let mut rng = rng_from_seed(4);
         let plain = Matrix::random_gaussian(16, 16, 0.0, 1.0, &mut rng);
-        log.capture(0, true, &plain);
-        log.capture(0, false, &plain);
+        log.capture(0, 1, true, &plain);
+        log.capture(0, 1, false, &plain);
         assert_eq!(log.count(), 2);
         let corr = log.downlink_correlation(&[plain.clone()]);
         assert!(corr > 0.99, "plaintext on the wire should correlate: {corr}");

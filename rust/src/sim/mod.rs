@@ -1,10 +1,17 @@
 //! Adversary and environment simulation — the paper's experimental
 //! apparatus (§VII-B.1): straggler injection via artificial delays,
-//! colluding workers that pool their received shares, and an
-//! eavesdropper that records everything on the wire.
+//! colluding workers that pool their received shares, an eavesdropper
+//! that records everything on the wire, and the declarative scenario
+//! engine ([`Scenario`] + [`runner`]) that composes all of them — plus
+//! worker crash/respawn churn and wire corruption — into deterministic,
+//! CI-pinnable soaks (DESIGN.md §7).
 
 mod adversary;
+pub mod runner;
+mod scenario;
 mod straggler;
 
 pub use adversary::{correlation as correlation_of, CollusionPool, EavesdropLog, EavesdroppedMessage};
+pub use runner::{run_scenario, RoundRecord, RoundStatus, ScenarioReport};
+pub use scenario::{CrashEvent, FaultPlan, Scenario, ScenarioOp};
 pub use straggler::{fresh_round_model, DelayModel, WorkerProfile};

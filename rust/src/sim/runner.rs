@@ -1,0 +1,456 @@
+//! The scenario engine's driver: run a [`Scenario`] through the live
+//! master/worker system for N rounds and produce a machine-readable
+//! [`ScenarioReport`] (the `SCENARIO_REPORT.json` artifact CI uploads).
+//!
+//! Per round the runner draws fresh seeded data, submits one
+//! [`CodedTask`] through [`Master`](crate::coordinator::Master), and
+//! records the outcome — results used, degradation, decode error vs the
+//! exact result, wall-clock. Crashes, respawns, and wire corruption all
+//! happen *inside* the coordinator, driven by the scenario's
+//! [`FaultPlan`](crate::sim::FaultPlan); the runner only observes.
+//!
+//! **The digest.** CI pins one hex digest per scenario across the whole
+//! `{inproc, tcp} × {threads 1, 8}` execution matrix. It folds exactly
+//! the fields the determinism contract covers — per-round status,
+//! results-used counts, degradation flags, every decoded f32 bit, and
+//! the transport byte totals credited at dispatch/decode time — and
+//! deliberately excludes anything wall-clock-shaped (latencies, late
+//! straggler counts, wire-error tallies that race the soak's end).
+
+use crate::coding::CodedTask;
+use crate::config::{SystemConfig, TransportKind};
+use crate::coordinator::{MasterBuilder, RoundError};
+use crate::matrix::{gram, split_rows, Matrix};
+use crate::metrics::{names, MetricsRegistry};
+use crate::rng::{derive_seed, rng_from_seed};
+use crate::runtime::WorkerOp;
+use crate::sim::{correlation_of, CollusionPool, EavesdropLog, Scenario, ScenarioOp};
+use std::sync::Arc;
+
+/// How one round of a soak ended.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoundStatus {
+    /// Decoded (possibly degraded — see [`RoundRecord::degraded`]).
+    Ok,
+    /// `round_deadline_s` elapsed with recovery still possible.
+    Deadline,
+    /// Too many workers down to ever reach the threshold.
+    Hopeless,
+    /// The round could not even be dispatched (e.g. fewer live workers
+    /// than an exact scheme's k).
+    SubmitFailed,
+}
+
+impl RoundStatus {
+    /// Stable byte for the digest preimage.
+    fn code(self) -> u8 {
+        match self {
+            RoundStatus::Ok => 0,
+            RoundStatus::Deadline => 1,
+            RoundStatus::Hopeless => 2,
+            RoundStatus::SubmitFailed => 3,
+        }
+    }
+
+    /// Stable token for the JSON report.
+    pub fn name(self) -> &'static str {
+        match self {
+            RoundStatus::Ok => "ok",
+            RoundStatus::Deadline => "deadline",
+            RoundStatus::Hopeless => "hopeless",
+            RoundStatus::SubmitFailed => "submit-failed",
+        }
+    }
+}
+
+/// One round's outcome in the report.
+#[derive(Clone, Debug)]
+pub struct RoundRecord {
+    /// Round id (1-based, as the master numbers them).
+    pub round: u64,
+    /// How the round ended.
+    pub status: RoundStatus,
+    /// Results the decoder consumed (0 for failed rounds).
+    pub results_used: usize,
+    /// Did the round decode from fewer results than the original policy?
+    pub degraded: bool,
+    /// Max per-block relative decode error vs the exact computation
+    /// (`None` for failed rounds).
+    pub rel_err: Option<f64>,
+    /// Wall-clock of the round, milliseconds (excluded from the digest).
+    pub wall_ms: f64,
+}
+
+/// The full soak report (serialized as `SCENARIO_REPORT.json`).
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    /// Scenario name.
+    pub scenario: String,
+    /// Scheme under test (paper nomenclature).
+    pub scheme: String,
+    /// Per-round task token.
+    pub op: String,
+    /// Execution knob: which fabric carried the frames.
+    pub transport: String,
+    /// Execution knob: master-side pool width (0 = auto).
+    pub threads: usize,
+    /// Scenario seed.
+    pub seed: u64,
+    /// Cluster size N.
+    pub workers: usize,
+    /// Rounds driven.
+    pub rounds: u64,
+    /// Per-round outcomes.
+    pub records: Vec<RoundRecord>,
+    /// The determinism pin: identical across transports and widths.
+    pub digest: String,
+    /// Fraction of rounds that decoded (status `ok`).
+    pub recovery_hit_rate: f64,
+    /// Round wall-clock stats, milliseconds (not in the digest).
+    pub wall_mean_ms: f64,
+    /// Median round wall-clock, ms.
+    pub wall_p50_ms: f64,
+    /// 99th-percentile round wall-clock, ms.
+    pub wall_p99_ms: f64,
+    /// Worst round wall-clock, ms.
+    pub wall_max_ms: f64,
+    /// Serialized bytes master → workers.
+    pub bytes_tx: u64,
+    /// Serialized bytes of the results the decoders consumed.
+    pub bytes_rx: u64,
+    /// Frames dropped for failing wire validation (corruption injection
+    /// shows up here; excluded from the digest — late frames race the
+    /// soak's end).
+    pub wire_errors: u64,
+    /// Results that arrived as wasted work (ditto).
+    pub results_late: u64,
+    /// Downlink payloads the eavesdropper charted.
+    pub downlink_messages: usize,
+    /// Mean (over downlink captures) of the best |correlation| between
+    /// the wire payload and any of its round's plaintext blocks — ≈ 0
+    /// under MEA-ECC, high when payloads travel in the clear.
+    pub downlink_leak: f64,
+    /// Plaintext shares the colluding coalition gathered.
+    pub colluder_shares: usize,
+    /// Worker crashes the master observed.
+    pub crashes: u64,
+    /// Incarnations respawned and re-registered.
+    pub respawns: u64,
+    /// Rounds that degraded to "decode from what arrived".
+    pub degraded_rounds: u64,
+    /// Final incarnation number per worker.
+    pub final_generations: Vec<u32>,
+}
+
+/// FNV-1a, 64-bit: tiny, dependency-free, good enough to pin a CI
+/// artifact (this is a determinism check, not a security boundary).
+struct Fnv64(u64);
+
+impl Fnv64 {
+    fn new() -> Self {
+        Fnv64(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.write(&v.to_le_bytes());
+    }
+
+    fn hex(&self) -> String {
+        format!("{:016x}", self.0)
+    }
+}
+
+/// Drive `sc` through the live system on the given execution knobs.
+///
+/// `transport` and `threads` may change wall-clock but must not change
+/// the digest — that is the determinism contract CI enforces.
+pub fn run_scenario(
+    sc: &Scenario,
+    transport: TransportKind,
+    threads: usize,
+) -> anyhow::Result<ScenarioReport> {
+    sc.validate().map_err(|e| anyhow::anyhow!("invalid scenario {:?}: {e}", sc.name))?;
+    let mut cfg = SystemConfig::default();
+    cfg.workers = sc.workers;
+    cfg.stragglers = sc.stragglers;
+    cfg.colluders = sc.colluders;
+    cfg.partitions = sc.partitions;
+    cfg.scheme = sc.scheme;
+    cfg.transport = transport;
+    cfg.security = sc.security;
+    cfg.round_deadline_s = sc.round_deadline_s;
+    cfg.threads = threads;
+    cfg.delay = sc.delay;
+    cfg.seed = sc.seed;
+    cfg.use_pjrt = false; // native kernels: deterministic, artifact-free
+
+    let metrics = Arc::new(MetricsRegistry::new());
+    let tap = Arc::new(EavesdropLog::new());
+    let coalition = if sc.colluder_set.is_empty() {
+        None
+    } else {
+        Some(Arc::new(CollusionPool::new(sc.colluder_set.clone())))
+    };
+    let mut builder = MasterBuilder::new(cfg)
+        .metrics(Arc::clone(&metrics))
+        .eavesdropper(Arc::clone(&tap))
+        .faults(Arc::new(sc.fault_plan()));
+    if let Some(c) = &coalition {
+        builder = builder.collusion(Arc::clone(c));
+    }
+    let mut master = builder.build()?;
+
+    let mut digest = Fnv64::new();
+    digest.write(b"scenario-digest-v1");
+    digest.write(sc.name.as_bytes());
+    digest.u64(sc.seed);
+    digest.u64(sc.rounds);
+    digest.u64(sc.workers as u64);
+
+    let mut records = Vec::with_capacity(sc.rounds as usize);
+    // Per-round plaintext blocks, kept for the decode-error and
+    // eavesdropper-leak analyses.
+    let mut round_blocks: Vec<Vec<Matrix>> = Vec::with_capacity(sc.rounds as usize);
+    for r in 1..=sc.rounds {
+        let mut data_rng = rng_from_seed(derive_seed(sc.seed, 0xDA7A_0000 + r));
+        let x = Matrix::random_gaussian(sc.rows, sc.cols, 0.0, 1.0, &mut data_rng);
+        let (blocks, _) = split_rows(&x, sc.partitions);
+        let worker_op = match sc.op {
+            ScenarioOp::Gram => WorkerOp::Gram,
+            ScenarioOp::Identity => WorkerOp::Identity,
+        };
+        let task = CodedTask::block_map(worker_op, x);
+        let outcome = match master.submit(task) {
+            Ok(handle) => master.wait(handle),
+            Err(e) => Err(e),
+        };
+        let record = match outcome {
+            Ok(out) => {
+                let exact = |b: &Matrix| match sc.op {
+                    ScenarioOp::Gram => gram(b),
+                    ScenarioOp::Identity => b.clone(),
+                };
+                let rel_err = out
+                    .blocks
+                    .iter()
+                    .zip(&blocks)
+                    .map(|(d, b)| d.rel_error(&exact(b)))
+                    .fold(0.0f64, f64::max);
+                digest.u64(r);
+                digest.write(&[RoundStatus::Ok.code(), out.degraded as u8]);
+                digest.u64(out.results_used as u64);
+                for m in &out.blocks {
+                    digest.u64(m.rows() as u64);
+                    digest.u64(m.cols() as u64);
+                    for v in m.as_slice() {
+                        digest.write(&v.to_bits().to_le_bytes());
+                    }
+                }
+                metrics.record("scenario.round_wall_s", out.wall.as_secs_f64());
+                RoundRecord {
+                    round: r,
+                    status: RoundStatus::Ok,
+                    results_used: out.results_used,
+                    degraded: out.degraded,
+                    rel_err: Some(rel_err),
+                    wall_ms: out.wall.as_secs_f64() * 1e3,
+                }
+            }
+            Err(e) => {
+                let status = match e.inner().downcast_ref::<RoundError>() {
+                    Some(RoundError::Deadline { .. }) => RoundStatus::Deadline,
+                    Some(RoundError::Hopeless { .. }) => RoundStatus::Hopeless,
+                    _ => RoundStatus::SubmitFailed,
+                };
+                digest.u64(r);
+                digest.write(&[status.code(), 0]);
+                digest.u64(0);
+                RoundRecord {
+                    round: r,
+                    status,
+                    results_used: 0,
+                    degraded: false,
+                    rel_err: None,
+                    wall_ms: 0.0,
+                }
+            }
+        };
+        records.push(record);
+        round_blocks.push(blocks);
+    }
+
+    // Transport totals are deterministic (credited synchronously at
+    // dispatch and decode), so they belong in the digest.
+    let bytes_tx = metrics.get(names::BYTES_TX);
+    let bytes_rx = metrics.get(names::BYTES_RX);
+    digest.u64(bytes_tx);
+    digest.u64(bytes_rx);
+
+    // Eavesdropper analysis: for each charted downlink payload, the best
+    // |correlation| against any plaintext block of its round.
+    let mut leak_sum = 0.0;
+    let mut leak_n = 0usize;
+    for msg in tap.messages().iter().filter(|m| m.downlink) {
+        let Some(blocks) = round_blocks.get((msg.round as usize).wrapping_sub(1)) else {
+            continue;
+        };
+        let best = blocks
+            .iter()
+            .filter(|b| b.shape() == msg.payload.shape())
+            .map(|b| correlation_of(b, &msg.payload).abs())
+            .fold(0.0f64, f64::max);
+        leak_sum += best;
+        leak_n += 1;
+    }
+
+    let wall = metrics.histogram("scenario.round_wall_s").unwrap_or_default();
+    let ok_rounds = records.iter().filter(|r| r.status == RoundStatus::Ok).count();
+    let degraded_rounds = records.iter().filter(|r| r.degraded).count() as u64;
+    Ok(ScenarioReport {
+        scenario: sc.name.clone(),
+        scheme: sc.scheme.name().to_string(),
+        op: sc.op.name().to_string(),
+        transport: transport.name().to_string(),
+        threads,
+        seed: sc.seed,
+        workers: sc.workers,
+        rounds: sc.rounds,
+        digest: digest.hex(),
+        recovery_hit_rate: ok_rounds as f64 / sc.rounds as f64,
+        wall_mean_ms: wall.mean() * 1e3,
+        wall_p50_ms: wall.p50() * 1e3,
+        wall_p99_ms: wall.p99() * 1e3,
+        wall_max_ms: wall.max().max(0.0) * 1e3,
+        bytes_tx,
+        bytes_rx,
+        wire_errors: metrics.get(names::WIRE_ERRORS),
+        results_late: metrics.get(names::RESULTS_LATE),
+        downlink_messages: leak_n,
+        downlink_leak: if leak_n == 0 { 0.0 } else { leak_sum / leak_n as f64 },
+        colluder_shares: coalition.map_or(0, |c| c.gathered().len()),
+        crashes: metrics.get(names::WORKER_CRASHES),
+        respawns: metrics.get(names::WORKER_RESPAWNS),
+        degraded_rounds,
+        final_generations: master.worker_generations(),
+        records,
+    })
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+impl ScenarioReport {
+    /// Render the report as pretty-printed JSON (hand-rolled — this
+    /// environment has no serde).
+    pub fn to_json(&self) -> String {
+        let rounds: Vec<String> = self
+            .records
+            .iter()
+            .map(|r| {
+                let rel = match r.rel_err {
+                    Some(e) => format!("{e:.6}"),
+                    None => "null".to_string(),
+                };
+                format!(
+                    "    {{\"round\": {}, \"status\": \"{}\", \"results_used\": {}, \
+                     \"degraded\": {}, \"rel_err\": {}, \"wall_ms\": {:.3}}}",
+                    r.round,
+                    r.status.name(),
+                    r.results_used,
+                    r.degraded,
+                    rel,
+                    r.wall_ms
+                )
+            })
+            .collect();
+        let generations: Vec<String> =
+            self.final_generations.iter().map(|g| g.to_string()).collect();
+        format!(
+            "{{\n  \"schema\": \"scenario-report-v1\",\n  \"scenario\": \"{}\",\n  \
+             \"scheme\": \"{}\",\n  \"op\": \"{}\",\n  \"transport\": \"{}\",\n  \
+             \"threads\": {},\n  \"seed\": {},\n  \"workers\": {},\n  \"rounds\": {},\n  \
+             \"digest\": \"{}\",\n  \"recovery_hit_rate\": {:.4},\n  \
+             \"wall_ms\": {{\"mean\": {:.3}, \"p50\": {:.3}, \"p99\": {:.3}, \"max\": {:.3}}},\n  \
+             \"comm\": {{\"bytes_tx\": {}, \"bytes_rx\": {}, \"wire_errors\": {}, \
+             \"results_late\": {}}},\n  \
+             \"privacy\": {{\"downlink_messages\": {}, \"downlink_leak\": {:.6}, \
+             \"colluder_shares\": {}}},\n  \
+             \"lifecycle\": {{\"crashes\": {}, \"respawns\": {}, \"degraded_rounds\": {}, \
+             \"final_generations\": [{}]}},\n  \
+             \"per_round\": [\n{}\n  ]\n}}\n",
+            json_escape(&self.scenario),
+            self.scheme,
+            self.op,
+            self.transport,
+            self.threads,
+            self.seed,
+            self.workers,
+            self.rounds,
+            self.digest,
+            self.recovery_hit_rate,
+            self.wall_mean_ms,
+            self.wall_p50_ms,
+            self.wall_p99_ms,
+            self.wall_max_ms,
+            self.bytes_tx,
+            self.bytes_rx,
+            self.wire_errors,
+            self.results_late,
+            self.downlink_messages,
+            self.downlink_leak,
+            self.colluder_shares,
+            self.crashes,
+            self.respawns,
+            self.degraded_rounds,
+            generations.join(", "),
+            rounds.join(",\n"),
+        )
+    }
+
+    /// One-line-per-round console table.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "scenario {} · scheme {} · transport {} · threads {} · seed {}\n",
+            self.scenario, self.scheme, self.transport, self.threads, self.seed
+        ));
+        out.push_str(&format!(
+            "{:>5}  {:<13} {:>7} {:>9} {:>10} {:>9}\n",
+            "round", "status", "used", "degraded", "rel_err", "wall(ms)"
+        ));
+        for r in &self.records {
+            let rel = r.rel_err.map_or("-".to_string(), |e| format!("{e:.4}"));
+            out.push_str(&format!(
+                "{:>5}  {:<13} {:>7} {:>9} {:>10} {:>9.2}\n",
+                r.round,
+                r.status.name(),
+                r.results_used,
+                r.degraded,
+                rel,
+                r.wall_ms
+            ));
+        }
+        out.push_str(&format!(
+            "recovery {:.0}% · degraded {} · crashes {} · respawns {} · \
+             tx {} B · rx {} B · wire errors {} · leak {:.4}\n",
+            self.recovery_hit_rate * 100.0,
+            self.degraded_rounds,
+            self.crashes,
+            self.respawns,
+            self.bytes_tx,
+            self.bytes_rx,
+            self.wire_errors,
+            self.downlink_leak,
+        ));
+        out.push_str(&format!("digest: {}\n", self.digest));
+        out
+    }
+}

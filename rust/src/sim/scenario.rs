@@ -1,0 +1,500 @@
+//! Declarative scenarios: the experiment apparatus as *data*.
+//!
+//! A [`Scenario`] bundles everything that defines one adversity soak —
+//! cluster shape, coding scheme, straggler distribution, a crash/respawn
+//! schedule, a colluder set, a wire-corruption rate, the task shape, and
+//! the round count — so CI can run the same condition as a matrix over
+//! execution knobs (transport fabric, thread-pool width) and pin the
+//! results. Scenarios load from three places, in priority order:
+//!
+//! 1. an explicit TOML-subset file path (`--scenario path/to/x.toml`),
+//! 2. `scenarios/<name>.toml` relative to the working directory,
+//! 3. a compiled-in builtin of the same name ([`Scenario::builtin`]).
+//!
+//! The repo ships the builtins mirrored as files under
+//! `rust/scenarios/`; an integration test pins file ≡ builtin so the two
+//! sources cannot drift.
+//!
+//! **Determinism contract** (same as `parallel/`, see DESIGN.md §7):
+//! every random choice in a scenario run — per-round data, straggler
+//! jitter, respawned key pairs, corruption draws — derives from
+//! `Scenario::seed`, never from time or thread scheduling. Execution
+//! knobs (transport, threads) may change wall-clock but must not change
+//! a single decoded bit; the scenario report's digest pins exactly the
+//! fields that obey this contract.
+//!
+//! [`FaultPlan`] is the scenario's fault schedule compiled to the form
+//! the runtime consumes: worker threads ask it "do I crash on this
+//! round?" / "do I corrupt this result?", and the master asks the same
+//! questions to keep its partial-failure accounting in lock-step with
+//! what the workers will actually do — both sides read one plan, so
+//! neither needs to observe the other.
+
+use crate::config::{parse_str, ConfigError, DelayConfig, SchemeKind, TransportSecurity};
+use crate::rng::{derive_seed, rng_from_seed};
+
+/// One scheduled worker crash, optionally followed by a respawn.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashEvent {
+    /// Which worker crashes.
+    pub worker: usize,
+    /// The round *mid-which* it crashes: the worker receives that
+    /// round's order and vanishes without replying.
+    pub round: u64,
+    /// Respawn `Some(d)` rounds after the crash (the new incarnation
+    /// rejoins before round `round + d` is submitted); `None` = stays
+    /// dead.
+    pub respawn_after: Option<u64>,
+}
+
+/// The per-round task the scenario drives through the master.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScenarioOp {
+    /// `f(X) = XXᵀ` per block (degree 2 — SPACDC/BACC/LCC territory).
+    Gram,
+    /// `f(X) = X` per block (linear — every scheme serves it).
+    Identity,
+}
+
+impl ScenarioOp {
+    fn from_token(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "gram" => Some(Self::Gram),
+            "identity" => Some(Self::Identity),
+            _ => None,
+        }
+    }
+
+    /// Canonical token.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Gram => "gram",
+            Self::Identity => "identity",
+        }
+    }
+}
+
+/// A declarative adversity scenario (see module docs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    /// Scenario name (reported, and part of the digest preimage).
+    pub name: String,
+    /// Number of coded rounds in the soak.
+    pub rounds: u64,
+    /// Data rows per round.
+    pub rows: usize,
+    /// Data columns per round.
+    pub cols: usize,
+    /// The per-round task.
+    pub op: ScenarioOp,
+    /// Root seed: every random choice in the run derives from it.
+    pub seed: u64,
+    /// Cluster size N.
+    pub workers: usize,
+    /// Partitions K.
+    pub partitions: usize,
+    /// Privacy masks T.
+    pub colluders: usize,
+    /// Stragglers S (chosen by seed, delayed per `delay`).
+    pub stragglers: usize,
+    /// Coding scheme under test.
+    pub scheme: SchemeKind,
+    /// Payload sealing.
+    pub security: TransportSecurity,
+    /// Per-round collection deadline.
+    pub round_deadline_s: f64,
+    /// Straggler delay distribution.
+    pub delay: DelayConfig,
+    /// Colluding worker indices (deposit their plaintext shares).
+    pub colluder_set: Vec<usize>,
+    /// Crash/respawn schedule.
+    pub crashes: Vec<CrashEvent>,
+    /// Probability that a worker's result frame is corrupted on the
+    /// wire (drawn deterministically per (worker, round) from `seed`).
+    pub corrupt_rate: f64,
+}
+
+impl Scenario {
+    /// The skeleton every builtin starts from.
+    fn base(name: &str) -> Self {
+        Self {
+            name: name.to_string(),
+            rounds: 8,
+            rows: 96,
+            cols: 48,
+            op: ScenarioOp::Gram,
+            seed: 0x5CE0,
+            workers: 8,
+            partitions: 4,
+            colluders: 2,
+            stragglers: 0,
+            scheme: SchemeKind::Spacdc,
+            security: TransportSecurity::MeaEcc,
+            round_deadline_s: 30.0,
+            delay: DelayConfig { straggler_factor: 25.0, base_service_s: 0.002, jitter: 0.1 },
+            colluder_set: Vec::new(),
+            crashes: Vec::new(),
+            corrupt_rate: 0.0,
+        }
+    }
+
+    /// The compiled-in named scenarios (mirrored under `rust/scenarios/`).
+    pub fn builtin(name: &str) -> Option<Self> {
+        match name {
+            // Happy path: every worker healthy, every result used.
+            "baseline" => Some(Self::base("baseline")),
+            // Churn: two mid-round crashes with staggered respawns plus
+            // a light wire-corruption rate — rounds degrade to "decode
+            // from what arrived" and recover once incarnations rejoin.
+            "crash-respawn" => {
+                let mut sc = Self::base("crash-respawn");
+                sc.rounds = 12;
+                sc.seed = 0x5CE1;
+                sc.workers = 10;
+                sc.partitions = 3;
+                sc.crashes = vec![
+                    CrashEvent { worker: 2, round: 3, respawn_after: Some(2) },
+                    CrashEvent { worker: 5, round: 4, respawn_after: Some(3) },
+                ];
+                sc.corrupt_rate = 0.06;
+                Some(sc)
+            }
+            // The paper's adversary mix: T colluding workers pool their
+            // shares while S stragglers ride the flexible threshold.
+            // The digest pins the decode *set* (the N − S fast returns),
+            // so the straggler delay (~500 ms vs ~2 ms fast service) is
+            // deliberately enormous: even a badly descheduled CI runner
+            // cannot let a straggler into the first N − S arrivals.
+            "colluders-stragglers" => {
+                let mut sc = Self::base("colluders-stragglers");
+                sc.rounds = 10;
+                sc.seed = 0x5CE2;
+                sc.workers = 12;
+                sc.colluders = 3;
+                sc.stragglers = 3;
+                sc.colluder_set = vec![1, 4, 7];
+                sc.delay.straggler_factor = 250.0;
+                Some(sc)
+            }
+            _ => None,
+        }
+    }
+
+    /// Names [`Scenario::builtin`] answers to.
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["baseline", "crash-respawn", "colluders-stragglers"]
+    }
+
+    /// Resolve a `--scenario` / `scenario =` token: an explicit file
+    /// path, then `scenarios/<name>.toml`, then the builtin set.
+    pub fn load(token: &str) -> anyhow::Result<Self> {
+        let looks_like_path = token.ends_with(".toml") || token.contains('/');
+        if looks_like_path {
+            return Self::from_file(token).map_err(|e| anyhow::anyhow!(e.to_string()));
+        }
+        let local = format!("scenarios/{token}.toml");
+        if std::path::Path::new(&local).exists() {
+            return Self::from_file(&local).map_err(|e| anyhow::anyhow!(e.to_string()));
+        }
+        Self::builtin(token).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown scenario {token:?} (no {local}; builtins: {})",
+                Self::builtin_names().join(", ")
+            )
+        })
+    }
+
+    /// Parse a scenario from TOML-subset text (same grammar as the
+    /// config layer: `[section]`, `key = value`, `#` comments; the
+    /// `crash` key may repeat).
+    pub fn from_str_toml(text: &str) -> Result<Self, ConfigError> {
+        let raw = parse_str(text)?;
+        let mut sc = Self::base("unnamed");
+        let bad = |k: &str, v: &str| ConfigError::BadValue(k.to_string(), v.to_string());
+        for (section, key, value) in raw.entries() {
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            match full.as_str() {
+                "name" => sc.name = value.to_string(),
+                "rounds" => sc.rounds = value.parse().map_err(|_| bad(&full, value))?,
+                "rows" => sc.rows = value.parse().map_err(|_| bad(&full, value))?,
+                "cols" => sc.cols = value.parse().map_err(|_| bad(&full, value))?,
+                "op" => {
+                    sc.op = ScenarioOp::from_token(value).ok_or_else(|| bad(&full, value))?
+                }
+                "seed" => sc.seed = value.parse().map_err(|_| bad(&full, value))?,
+                "cluster.workers" => {
+                    sc.workers = value.parse().map_err(|_| bad(&full, value))?
+                }
+                "cluster.partitions" => {
+                    sc.partitions = value.parse().map_err(|_| bad(&full, value))?
+                }
+                "cluster.colluders" => {
+                    sc.colluders = value.parse().map_err(|_| bad(&full, value))?
+                }
+                "cluster.stragglers" => {
+                    sc.stragglers = value.parse().map_err(|_| bad(&full, value))?
+                }
+                "cluster.scheme" => {
+                    sc.scheme =
+                        SchemeKind::from_str_token(value).ok_or_else(|| bad(&full, value))?
+                }
+                "cluster.security" => {
+                    sc.security = TransportSecurity::from_str_token(value)
+                        .ok_or_else(|| bad(&full, value))?
+                }
+                "cluster.round_deadline_s" => {
+                    sc.round_deadline_s = value.parse().map_err(|_| bad(&full, value))?
+                }
+                "delay.base_service_s" => {
+                    sc.delay.base_service_s = value.parse().map_err(|_| bad(&full, value))?
+                }
+                "delay.straggler_factor" => {
+                    sc.delay.straggler_factor = value.parse().map_err(|_| bad(&full, value))?
+                }
+                "delay.jitter" => {
+                    sc.delay.jitter = value.parse().map_err(|_| bad(&full, value))?
+                }
+                "faults.crash" => {
+                    sc.crashes.push(parse_crash(value).ok_or_else(|| bad(&full, value))?)
+                }
+                "faults.corrupt_rate" => {
+                    sc.corrupt_rate = value.parse().map_err(|_| bad(&full, value))?
+                }
+                "adversary.colluder_set" => {
+                    let ids: Result<Vec<usize>, _> =
+                        value.split(',').map(|t| t.trim().parse()).collect();
+                    sc.colluder_set = ids.map_err(|_| bad(&full, value))?;
+                }
+                _ => return Err(ConfigError::UnknownKey(full)),
+            }
+        }
+        sc.validate().map_err(ConfigError::Validation)?;
+        Ok(sc)
+    }
+
+    /// Parse a scenario file from disk.
+    pub fn from_file(path: &str) -> Result<Self, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError::Io(path.to_string(), e.to_string()))?;
+        Self::from_str_toml(&text)
+    }
+
+    /// Structural sanity checks (cluster constraints are re-validated by
+    /// `SystemConfig::validate` when the runner builds the master).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.rounds == 0 {
+            return Err("scenario needs at least one round".into());
+        }
+        if self.workers == 0 {
+            return Err("scenario needs at least one worker".into());
+        }
+        if !(0.0..1.0).contains(&self.corrupt_rate) {
+            return Err(format!("corrupt_rate {} outside [0, 1)", self.corrupt_rate));
+        }
+        for c in &self.crashes {
+            if c.worker >= self.workers {
+                return Err(format!("crash event names worker {} of {}", c.worker, self.workers));
+            }
+            if c.round == 0 || c.round > self.rounds {
+                return Err(format!("crash round {} outside 1..={}", c.round, self.rounds));
+            }
+            // A respawn is scheduled *before* its round's dispatch and a
+            // crash is booked *after* it, so a zero-round respawn could
+            // never fire — the worker would stay dead with no warning.
+            if c.respawn_after == Some(0) {
+                return Err(format!(
+                    "crash of worker {} at round {}: respawn_after must be ≥ 1",
+                    c.worker, c.round
+                ));
+            }
+        }
+        for &w in &self.colluder_set {
+            if w >= self.workers {
+                return Err(format!("colluder set names worker {w} of {}", self.workers));
+            }
+        }
+        Ok(())
+    }
+
+    /// Compile the fault schedule to the runtime's form.
+    pub fn fault_plan(&self) -> FaultPlan {
+        FaultPlan::new(self.crashes.clone(), self.corrupt_rate, self.seed)
+    }
+}
+
+/// Parse one crash event token: `worker@round` or `worker@round+respawn`.
+fn parse_crash(s: &str) -> Option<CrashEvent> {
+    let (worker, rest) = s.split_once('@')?;
+    let worker = worker.trim().parse().ok()?;
+    let (round, respawn_after) = match rest.split_once('+') {
+        Some((r, d)) => (r.trim().parse().ok()?, Some(d.trim().parse().ok()?)),
+        None => (rest.trim().parse().ok()?, None),
+    };
+    Some(CrashEvent { worker, round, respawn_after })
+}
+
+/// The fault schedule as the runtime consumes it: a pure function of
+/// `(worker, round)` — worker threads and the master evaluate the same
+/// plan independently and stay consistent without observing each other
+/// (see module docs).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    crashes: Vec<CrashEvent>,
+    corrupt_rate: f64,
+    seed: u64,
+}
+
+impl FaultPlan {
+    /// Build a plan from its parts.
+    pub fn new(crashes: Vec<CrashEvent>, corrupt_rate: f64, seed: u64) -> Self {
+        Self { crashes, corrupt_rate, seed }
+    }
+
+    /// No faults at all?
+    pub fn is_empty(&self) -> bool {
+        self.crashes.is_empty() && self.corrupt_rate <= 0.0
+    }
+
+    /// Does `worker` crash mid-`round`? (It receives the order and never
+    /// replies.)
+    pub fn crashes_at(&self, worker: usize, round: u64) -> bool {
+        self.crashes.iter().any(|c| c.worker == worker && c.round == round)
+    }
+
+    /// Workers whose respawn is due before `round` is dispatched.
+    pub fn respawns_due(&self, round: u64) -> Vec<usize> {
+        self.crashes
+            .iter()
+            .filter(|c| c.respawn_after.map(|d| c.round + d) == Some(round))
+            .map(|c| c.worker)
+            .collect()
+    }
+
+    /// Is `worker`'s result frame for `round` corrupted on the wire?
+    /// Deterministic: a seeded draw per (worker, round), independent of
+    /// everything else. A crash on the same round takes precedence (the
+    /// worker dies before sending anything).
+    pub fn corrupts(&self, worker: usize, round: u64) -> bool {
+        if self.corrupt_rate <= 0.0 || self.crashes_at(worker, round) {
+            return false;
+        }
+        let mut rng = rng_from_seed(derive_seed(
+            self.seed,
+            0xC0_44_0000 ^ (round << 20) ^ worker as u64,
+        ));
+        rng.next_f64() < self.corrupt_rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_resolve_and_validate() {
+        for name in Scenario::builtin_names() {
+            let sc = Scenario::builtin(name).unwrap();
+            assert_eq!(sc.name, *name);
+            sc.validate().unwrap();
+        }
+        assert!(Scenario::builtin("nope").is_none());
+    }
+
+    #[test]
+    fn toml_round_trips_the_crash_schedule() {
+        let text = r#"
+name = "t"
+rounds = 6
+rows = 32
+cols = 16
+op = "identity"
+seed = 99
+[cluster]
+workers = 6
+partitions = 2
+colluders = 1
+stragglers = 1
+scheme = "bacc"
+security = "plain"
+round_deadline_s = 5
+[delay]
+base_service_s = 0.001
+straggler_factor = 10
+jitter = 0.05
+[faults]
+crash = "1@2+2"
+crash = "3@4"
+corrupt_rate = 0.25
+[adversary]
+colluder_set = "0, 2"
+"#;
+        let sc = Scenario::from_str_toml(text).unwrap();
+        assert_eq!(sc.name, "t");
+        assert_eq!(sc.rounds, 6);
+        assert_eq!(sc.op, ScenarioOp::Identity);
+        assert_eq!(sc.scheme, SchemeKind::Bacc);
+        assert_eq!(sc.security, TransportSecurity::Plain);
+        assert_eq!(
+            sc.crashes,
+            vec![
+                CrashEvent { worker: 1, round: 2, respawn_after: Some(2) },
+                CrashEvent { worker: 3, round: 4, respawn_after: None },
+            ]
+        );
+        assert_eq!(sc.corrupt_rate, 0.25);
+        assert_eq!(sc.colluder_set, vec![0, 2]);
+        assert_eq!(sc.delay.straggler_factor, 10.0);
+    }
+
+    #[test]
+    fn bad_scenarios_are_rejected() {
+        assert!(Scenario::from_str_toml("rounds = 0\n").is_err());
+        assert!(Scenario::from_str_toml("nonsense = 1\n").is_err());
+        assert!(Scenario::from_str_toml("[faults]\ncrash = \"banana\"\n").is_err());
+        // Crash beyond the soak, or of a worker that does not exist.
+        assert!(Scenario::from_str_toml("[faults]\ncrash = \"1@99\"\n").is_err());
+        let ghost = "[cluster]\nworkers = 2\n[faults]\ncrash = \"5@1\"\n";
+        assert!(Scenario::from_str_toml(ghost).is_err());
+        assert!(Scenario::from_str_toml("[faults]\ncorrupt_rate = 1.5\n").is_err());
+        // A same-round respawn can never fire (respawns are scheduled
+        // before dispatch, crashes booked after) — reject it up front.
+        assert!(Scenario::from_str_toml("[faults]\ncrash = \"1@2+0\"\n").is_err());
+    }
+
+    #[test]
+    fn fault_plan_is_deterministic_and_respects_precedence() {
+        let sc = Scenario::builtin("crash-respawn").unwrap();
+        let a = sc.fault_plan();
+        let b = sc.fault_plan();
+        assert!(a.crashes_at(2, 3));
+        assert!(!a.crashes_at(2, 4));
+        assert_eq!(a.respawns_due(5), vec![2]);
+        assert_eq!(a.respawns_due(7), vec![5]);
+        assert_eq!(a.respawns_due(6), Vec::<usize>::new());
+        // Corruption draws are a pure function of (worker, round)…
+        for w in 0..sc.workers {
+            for r in 1..=sc.rounds {
+                assert_eq!(a.corrupts(w, r), b.corrupts(w, r));
+            }
+        }
+        // …and never fire on a round the worker crashes in.
+        assert!(!a.corrupts(2, 3));
+    }
+
+    #[test]
+    fn corruption_rate_is_roughly_honoured() {
+        let plan = FaultPlan::new(Vec::new(), 0.3, 7);
+        let hits: usize = (0..50)
+            .flat_map(|w| (1..=40).map(move |r| (w, r)))
+            .filter(|&(w, r)| plan.corrupts(w, r))
+            .count();
+        let rate = hits as f64 / 2000.0;
+        assert!((0.2..0.4).contains(&rate), "rate {rate} far from 0.3");
+        let off = FaultPlan::new(Vec::new(), 0.0, 7);
+        assert!(!(0..50).any(|w| off.corrupts(w, 1)));
+    }
+}

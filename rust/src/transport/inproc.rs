@@ -8,11 +8,18 @@ use super::{Fabric, Transport, TransportError, WorkerLink};
 use crate::config::TransportKind;
 use crate::metrics::{names, MetricsRegistry};
 use std::sync::mpsc::{self, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Master-side sender over per-worker channels.
 pub struct InProc {
-    order_txs: Vec<Sender<Vec<u8>>>,
+    /// Per-worker order senders. Mutexed so [`Transport::relink`] can
+    /// swap in a fresh channel for a respawned worker while the sender
+    /// half stays shareable across threads.
+    order_txs: Vec<Mutex<Sender<Vec<u8>>>>,
+    /// Kept so respawned links can feed the same merged inbound channel.
+    /// Dropped with the transport at shutdown, which (once every worker
+    /// clone is gone too) disconnects the collector.
+    result_tx: Sender<Vec<u8>>,
     metrics: Arc<MetricsRegistry>,
 }
 
@@ -24,10 +31,10 @@ impl InProc {
         let mut links = Vec::with_capacity(n);
         for _ in 0..n {
             let (order_tx, order_rx) = mpsc::channel::<Vec<u8>>();
-            order_txs.push(order_tx);
+            order_txs.push(Mutex::new(order_tx));
             links.push(WorkerLink::InProc { orders: order_rx, results: result_tx.clone() });
         }
-        let transport = Box::new(InProc { order_txs, metrics });
+        let transport = Box::new(InProc { order_txs, result_tx, metrics });
         Fabric { transport, inbound, links }
     }
 }
@@ -47,11 +54,23 @@ impl Transport for InProc {
             detail: format!("no such link (fabric has {})", self.order_txs.len()),
         })?;
         let len = frame.len() as u64;
-        tx.send(frame).map_err(|_| TransportError::WorkerDown {
+        tx.lock().unwrap().send(frame).map_err(|_| TransportError::WorkerDown {
             worker: w,
             detail: "order channel disconnected".into(),
         })?;
         self.metrics.add(names::BYTES_TX, len);
         Ok(())
+    }
+
+    fn relink(&self, w: usize) -> Result<WorkerLink, TransportError> {
+        let slot = self.order_txs.get(w).ok_or_else(|| TransportError::WorkerDown {
+            worker: w,
+            detail: format!("no such link (fabric has {})", self.order_txs.len()),
+        })?;
+        let (order_tx, order_rx) = mpsc::channel::<Vec<u8>>();
+        // Swapping the sender drops the old one; a dead worker's orphaned
+        // receiver (if any) disconnects cleanly.
+        *slot.lock().unwrap() = order_tx;
+        Ok(WorkerLink::InProc { orders: order_rx, results: self.result_tx.clone() })
     }
 }

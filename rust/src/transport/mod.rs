@@ -84,6 +84,13 @@ pub trait Transport: Send + Sync {
 
     /// Send one complete frame to worker `w`.
     fn send(&self, w: usize, frame: Vec<u8>) -> Result<(), TransportError>;
+
+    /// Tear down worker `w`'s link and wire a fresh one in its place,
+    /// returning the new worker-side endpoint (moved into the respawned
+    /// worker thread by
+    /// [`WorkerPool::respawn`](crate::coordinator::WorkerPool::respawn)).
+    /// The old endpoint — wherever it is — sees its link as closed.
+    fn relink(&self, w: usize) -> Result<WorkerLink, TransportError>;
 }
 
 /// A worker's endpoint of the fabric: a blocking source of order frames
@@ -209,6 +216,43 @@ mod tests {
     #[test]
     fn tcp_fabric_echoes_frames_and_counts_bytes() {
         echo_fabric_check(TransportKind::Tcp);
+    }
+
+    fn relink_check(kind: TransportKind) {
+        let metrics = Arc::new(MetricsRegistry::new());
+        let mut fabric = connect(kind, 2, Arc::clone(&metrics)).unwrap();
+        // Worker 0 dies: its endpoint is simply dropped.
+        let dead = fabric.links.remove(0);
+        drop(dead);
+        // Revive it on a fresh link and run an echo loop there.
+        let mut link = fabric.transport.relink(0).unwrap();
+        let j = std::thread::spawn(move || {
+            while let Ok(f) = link.recv() {
+                if link.send(&f).is_err() {
+                    break;
+                }
+            }
+        });
+        let f = frame(MsgKind::Order, b"after respawn");
+        fabric.transport.send(0, f.clone()).unwrap();
+        let got = fabric
+            .inbound
+            .recv_timeout(std::time::Duration::from_secs(5))
+            .expect("echo from respawned link");
+        assert_eq!(got, f);
+        drop(fabric.transport);
+        drop(fabric.links); // remaining worker endpoint
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn inproc_relink_revives_a_worker() {
+        relink_check(TransportKind::InProc);
+    }
+
+    #[test]
+    fn tcp_relink_revives_a_worker() {
+        relink_check(TransportKind::Tcp);
     }
 
     #[test]

@@ -12,6 +12,12 @@
 //! `Receiver<Vec<u8>>` regardless of fabric — the bridge is the only
 //! TCP-specific reader.
 //!
+//! Relink (worker respawn): the listener stays bound for the fabric's
+//! lifetime, so [`Transport::relink`] dials/accepts a fresh connection
+//! pair for the worker, shuts the old master-side socket (killing the
+//! old bridge), swaps the new socket into the send slot, and spawns a
+//! new bridge — the same dial/accept pairing as bring-up.
+//!
 //! Shutdown: dropping the [`Tcp`] sender shuts both directions of every
 //! master-side socket. Workers see EOF (`WireError::Closed`) and exit;
 //! bridge threads see EOF and exit, dropping their inbound senders,
@@ -22,16 +28,21 @@ use crate::config::TransportKind;
 use crate::metrics::{names, MetricsRegistry};
 use crate::wire;
 use std::io::Write;
-use std::net::{Shutdown, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::mpsc::{self, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 /// Master-side sender over per-worker localhost sockets.
 pub struct Tcp {
+    /// Kept bound so respawned workers can be re-accepted.
+    listener: TcpListener,
+    addr: SocketAddr,
     streams: Vec<Mutex<TcpStream>>,
+    /// Kept so relinked bridges can feed the same merged inbound channel.
+    result_tx: Sender<Vec<u8>>,
     metrics: Arc<MetricsRegistry>,
-    bridges: Vec<JoinHandle<()>>,
+    bridges: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl Tcp {
@@ -45,17 +56,35 @@ impl Tcp {
         let mut bridges = Vec::with_capacity(n);
         let mut links = Vec::with_capacity(n);
         for w in 0..n {
-            let master_side = TcpStream::connect(addr).map_err(setup)?;
-            let (worker_side, _) = listener.accept().map_err(setup)?;
-            master_side.set_nodelay(true).map_err(setup)?;
-            worker_side.set_nodelay(true).map_err(setup)?;
+            let (master_side, worker_side) = Self::dial_pair(&listener, addr)?;
             let reader = master_side.try_clone().map_err(setup)?;
             bridges.push(spawn_bridge(w, reader, result_tx.clone()));
             streams.push(Mutex::new(master_side));
             links.push(WorkerLink::Tcp { stream: worker_side });
         }
-        let transport = Box::new(Tcp { streams, metrics, bridges });
+        let transport = Box::new(Tcp {
+            listener,
+            addr,
+            streams,
+            result_tx,
+            metrics,
+            bridges: Mutex::new(bridges),
+        });
         Ok(Fabric { transport, inbound, links })
+    }
+
+    /// Dial one connection and accept its peer — serial, so the pairing
+    /// is unambiguous.
+    fn dial_pair(
+        listener: &TcpListener,
+        addr: SocketAddr,
+    ) -> Result<(TcpStream, TcpStream), TransportError> {
+        let setup = |e: std::io::Error| TransportError::Setup(e.to_string());
+        let master_side = TcpStream::connect(addr).map_err(setup)?;
+        let (worker_side, _) = listener.accept().map_err(setup)?;
+        master_side.set_nodelay(true).map_err(setup)?;
+        worker_side.set_nodelay(true).map_err(setup)?;
+        Ok((master_side, worker_side))
     }
 }
 
@@ -98,6 +127,26 @@ impl Transport for Tcp {
         self.metrics.add(names::BYTES_TX, frame.len() as u64);
         Ok(())
     }
+
+    fn relink(&self, w: usize) -> Result<WorkerLink, TransportError> {
+        let slot = self.streams.get(w).ok_or_else(|| TransportError::WorkerDown {
+            worker: w,
+            detail: format!("no such link (fabric has {})", self.streams.len()),
+        })?;
+        let (master_side, worker_side) = Self::dial_pair(&self.listener, self.addr)?;
+        let reader = master_side
+            .try_clone()
+            .map_err(|e| TransportError::Setup(e.to_string()))?;
+        {
+            let mut s = slot.lock().unwrap();
+            // Kill the old connection first: its bridge sees EOF and
+            // exits, and any stale worker endpoint is cut off.
+            let _ = s.shutdown(Shutdown::Both);
+            *s = master_side;
+        }
+        self.bridges.lock().unwrap().push(spawn_bridge(w, reader, self.result_tx.clone()));
+        Ok(WorkerLink::Tcp { stream: worker_side })
+    }
 }
 
 impl Drop for Tcp {
@@ -105,7 +154,7 @@ impl Drop for Tcp {
         for s in &self.streams {
             let _ = s.lock().unwrap().shutdown(Shutdown::Both);
         }
-        for b in self.bridges.drain(..) {
+        for b in self.bridges.lock().unwrap().drain(..) {
             let _ = b.join();
         }
     }

@@ -13,6 +13,8 @@
 //! WorkOrder    := round:u64 worker:u32 delay_ns:u64 WorkerOp
 //!                 n_payloads:u16 WirePayload*
 //! ResultMsg    := round:u64 worker:u32 WirePayload
+//! ControlMsg   := tag:u8 (1 = Crash worker:u32 |
+//!                         2 = Register worker:u32 generation:u32 Point)
 //! ```
 //!
 //! A sealed payload travels as MEA-ECC seal-the-bytes: the ephemeral
@@ -21,7 +23,7 @@
 //! see [`SealedPayload`](crate::coordinator::SealedPayload).
 
 use super::frame::{unframe, MsgKind, WireError, MAX_BODY_LEN};
-use crate::coordinator::{ResultMsg, SealedPayload, WirePayload, WorkOrder};
+use crate::coordinator::{ControlMsg, ResultMsg, SealedPayload, WirePayload, WorkOrder};
 use crate::ecc::{Point, SealedBytes};
 use crate::field::Fp61;
 use crate::matrix::Matrix;
@@ -39,6 +41,21 @@ pub enum WireMessage {
     Order(WorkOrder),
     /// Worker → master.
     Result(ResultMsg),
+    /// Lifecycle control, either direction.
+    Control(ControlMsg),
+}
+
+impl WireMessage {
+    /// Compact tag for diagnostics: misrouted frames are reported by
+    /// kind only — Debug-formatting a whole message would dump payload
+    /// buffers (megabytes for a large sealed matrix) to the log.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            WireMessage::Order(_) => "order",
+            WireMessage::Result(_) => "result",
+            WireMessage::Control(_) => "control",
+        }
+    }
 }
 
 /// Encode a work order into a complete frame.
@@ -106,6 +123,50 @@ pub fn encode_result_into(msg: &ResultMsg, out: &mut Vec<u8>) {
     debug_assert_eq!(out.len(), total, "result size estimate out of sync with the writers");
 }
 
+/// Encode a control message into a complete frame.
+pub fn encode_control(msg: &ControlMsg) -> Vec<u8> {
+    let mut out = Vec::new();
+    encode_control_into(msg, &mut out);
+    out
+}
+
+/// Encode a control message into a caller-owned scratch buffer (see
+/// [`encode_order_into`]).
+pub fn encode_control_into(msg: &ControlMsg, out: &mut Vec<u8>) {
+    // Clear before reserving — see encode_order_into.
+    out.clear();
+    let body_len = match msg {
+        ControlMsg::Crash { .. } => 1 + 4,
+        ControlMsg::Register { pk, .. } => 1 + 4 + 4 + point_encoded_len(pk),
+    };
+    let total = super::frame::HEADER_LEN + body_len + super::frame::TRAILER_LEN;
+    out.reserve(total);
+    let start = super::frame::frame_begin(out, MsgKind::Control);
+    match msg {
+        ControlMsg::Crash { worker } => {
+            out.push(1);
+            put_u32(out, *worker as u32);
+        }
+        ControlMsg::Register { worker, generation, pk } => {
+            out.push(2);
+            put_u32(out, *worker as u32);
+            put_u32(out, *generation);
+            put_point(out, pk);
+        }
+    }
+    super::frame::frame_end(out, start);
+    debug_assert_eq!(out.len(), total, "control size estimate out of sync with the writers");
+}
+
+/// Exact encoded size of a [`Point`] body field.
+fn point_encoded_len(p: &Point<Fp61>) -> usize {
+    if p.xy().is_some() {
+        17
+    } else {
+        1
+    }
+}
+
 /// Exact encoded size of a [`WorkerOp`] body field.
 fn op_encoded_len(op: &WorkerOp) -> usize {
     match op {
@@ -119,8 +180,7 @@ fn payload_encoded_len(p: &WirePayload) -> usize {
     match p {
         WirePayload::Plain(m) => 1 + 8 + m.len() * 4,
         WirePayload::Sealed(s) => {
-            let point = if s.sealed.ephemeral.xy().is_some() { 17 } else { 1 };
-            1 + point + 4 + 4 + 4 + s.sealed.bytes.len()
+            1 + point_encoded_len(&s.sealed.ephemeral) + 4 + 4 + 4 + s.sealed.bytes.len()
         }
     }
 }
@@ -132,6 +192,7 @@ pub fn decode_message(buf: &[u8]) -> Result<WireMessage, WireError> {
     let msg = match kind {
         MsgKind::Order => WireMessage::Order(read_order(&mut cur)?),
         MsgKind::Result => WireMessage::Result(read_result(&mut cur)?),
+        MsgKind::Control => WireMessage::Control(read_control(&mut cur)?),
     };
     cur.finish()?;
     Ok(msg)
@@ -141,9 +202,7 @@ pub fn decode_message(buf: &[u8]) -> Result<WireMessage, WireError> {
 pub fn decode_order(buf: &[u8]) -> Result<WorkOrder, WireError> {
     match decode_message(buf)? {
         WireMessage::Order(o) => Ok(o),
-        WireMessage::Result(_) => {
-            Err(WireError::Malformed("expected an order frame, got a result".into()))
-        }
+        _ => Err(WireError::Malformed("expected an order frame".into())),
     }
 }
 
@@ -151,9 +210,7 @@ pub fn decode_order(buf: &[u8]) -> Result<WorkOrder, WireError> {
 pub fn decode_result(buf: &[u8]) -> Result<ResultMsg, WireError> {
     match decode_message(buf)? {
         WireMessage::Result(r) => Ok(r),
-        WireMessage::Order(_) => {
-            Err(WireError::Malformed("expected a result frame, got an order".into()))
-        }
+        _ => Err(WireError::Malformed("expected a result frame".into())),
     }
 }
 
@@ -384,6 +441,19 @@ fn read_result(cur: &mut Cur) -> Result<ResultMsg, WireError> {
     Ok(ResultMsg { round, worker, payload })
 }
 
+fn read_control(cur: &mut Cur) -> Result<ControlMsg, WireError> {
+    match cur.u8()? {
+        1 => Ok(ControlMsg::Crash { worker: cur.u32()? as usize }),
+        2 => {
+            let worker = cur.u32()? as usize;
+            let generation = cur.u32()?;
+            let pk = read_point(cur)?;
+            Ok(ControlMsg::Register { worker, generation, pk })
+        }
+        tag => Err(WireError::BadTag { what: "control", tag }),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -485,6 +555,28 @@ mod tests {
         let mut scratch = Vec::new();
         encode_result_into(&msg, &mut scratch);
         assert_eq!(scratch, encode_result(&msg));
+    }
+
+    #[test]
+    fn control_messages_round_trip() {
+        for msg in [
+            ControlMsg::Crash { worker: 7 },
+            ControlMsg::Register {
+                worker: 3,
+                generation: 2,
+                pk: Point::affine(Fp61::new(11), Fp61::new(22)),
+            },
+            ControlMsg::Register { worker: 0, generation: 0, pk: Point::Infinity },
+        ] {
+            let f = encode_control(&msg);
+            match decode_message(&f).unwrap() {
+                WireMessage::Control(back) => assert_eq!(back, msg),
+                other => panic!("expected a control frame, got {other:?}"),
+            }
+            // Control frames must not decode as orders or results.
+            assert!(decode_order(&f).is_err());
+            assert!(decode_result(&f).is_err());
+        }
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! offset  size  field
 //!      0     4  magic      b"SPDC" (little-endian u32 0x43445053)
 //!      4     2  version    u16 LE — currently 1
-//!      6     1  kind       1 = WorkOrder, 2 = ResultMsg
+//!      6     1  kind       1 = WorkOrder, 2 = ResultMsg, 3 = ControlMsg
 //!      7     1  reserved   0
 //!      8     4  body_len   u32 LE
 //!     12     n  body       message-specific (see `codec`)
@@ -43,6 +43,10 @@ pub enum MsgKind {
     Order,
     /// Worker → master: a [`ResultMsg`](crate::coordinator::ResultMsg).
     Result,
+    /// Lifecycle control, either direction: a
+    /// [`ControlMsg`](crate::coordinator::ControlMsg) (worker
+    /// registration, injected crash).
+    Control,
 }
 
 impl MsgKind {
@@ -50,6 +54,7 @@ impl MsgKind {
         match self {
             MsgKind::Order => 1,
             MsgKind::Result => 2,
+            MsgKind::Control => 3,
         }
     }
 
@@ -57,6 +62,7 @@ impl MsgKind {
         match c {
             1 => Ok(MsgKind::Order),
             2 => Ok(MsgKind::Result),
+            3 => Ok(MsgKind::Control),
             other => Err(WireError::BadKind(other)),
         }
     }

@@ -1,0 +1,181 @@
+//! Scenario-engine integration tests: the determinism contract (one
+//! digest per scenario across `{inproc, tcp} × {threads 1, 8}`), the
+//! crash → respawn → rejoin lifecycle observed end-to-end through the
+//! live system, and the file ≡ builtin pin for the shipped scenarios.
+
+use spacdc::config::TransportKind;
+use spacdc::sim::{run_scenario, CrashEvent, RoundStatus, Scenario, ScenarioOp};
+
+/// The CI matrix in miniature: both fabrics, serial and wide pools.
+const MATRIX: [(TransportKind, usize); 4] = [
+    (TransportKind::InProc, 1),
+    (TransportKind::InProc, 8),
+    (TransportKind::Tcp, 1),
+    (TransportKind::Tcp, 8),
+];
+
+#[test]
+fn shipped_scenario_files_match_their_builtins() {
+    for name in Scenario::builtin_names() {
+        let from_file = Scenario::from_file(&format!("scenarios/{name}.toml"))
+            .unwrap_or_else(|e| panic!("scenarios/{name}.toml: {e}"));
+        let builtin = Scenario::builtin(name).unwrap();
+        assert_eq!(from_file, builtin, "scenarios/{name}.toml drifted from the builtin");
+        // And the loader prefers exactly that file.
+        assert_eq!(Scenario::load(name).unwrap(), builtin);
+    }
+    assert!(Scenario::load("no-such-scenario").is_err());
+}
+
+#[test]
+fn baseline_digest_pins_across_transports_and_widths() {
+    let mut sc = Scenario::builtin("baseline").unwrap();
+    sc.rounds = 4; // keep the matrix cheap; same scenario for every combo
+    let mut digests = Vec::new();
+    for (transport, threads) in MATRIX {
+        let report = run_scenario(&sc, transport, threads).unwrap();
+        assert_eq!(report.recovery_hit_rate, 1.0, "baseline must decode every round");
+        assert!(report.records.iter().all(|r| r.results_used == sc.workers));
+        assert!(report.records.iter().all(|r| !r.degraded));
+        assert!(report.bytes_tx > 0 && report.bytes_rx > 0);
+        digests.push((transport.name(), threads, report.digest));
+    }
+    let first = digests[0].2.clone();
+    for (transport, threads, digest) in &digests {
+        assert_eq!(
+            digest,
+            &first,
+            "digest diverged at transport={transport} threads={threads}: {digests:?}"
+        );
+    }
+}
+
+#[test]
+fn crash_respawn_soak_is_bit_identical_across_the_matrix() {
+    let sc = Scenario::builtin("crash-respawn").unwrap();
+    let mut digests = Vec::new();
+    for (transport, threads) in MATRIX {
+        let report = run_scenario(&sc, transport, threads).unwrap();
+        assert_eq!(report.crashes, 2, "both scheduled crashes must be observed");
+        assert_eq!(report.respawns, 2, "both incarnations must rejoin");
+        assert_eq!(report.final_generations[2], 1, "worker 2 rejoined as generation 1");
+        assert_eq!(report.final_generations[5], 1, "worker 5 rejoined as generation 1");
+        assert!(
+            report.degraded_rounds >= 2,
+            "crash rounds must degrade to decode-from-what-arrived, got {}",
+            report.degraded_rounds
+        );
+        assert_eq!(report.recovery_hit_rate, 1.0, "every round must still decode");
+        // The crash rounds lose exactly the crashed worker (plus any
+        // scheduled corruption) yet still decode.
+        let r3 = &report.records[2];
+        assert_eq!(r3.status, RoundStatus::Ok);
+        assert!(r3.degraded && r3.results_used < sc.workers);
+        digests.push((transport.name(), threads, report.digest));
+    }
+    let first = digests[0].2.clone();
+    for (transport, threads, digest) in &digests {
+        assert_eq!(
+            digest,
+            &first,
+            "digest diverged at transport={transport} threads={threads}: {digests:?}"
+        );
+    }
+}
+
+#[test]
+fn colluders_and_stragglers_ride_the_flexible_threshold() {
+    let mut sc = Scenario::builtin("colluders-stragglers").unwrap();
+    sc.rounds = 4;
+    let report = run_scenario(&sc, TransportKind::InProc, 0).unwrap();
+    assert_eq!(report.recovery_hit_rate, 1.0);
+    // The wait policy takes the N − S fast returns; the stragglers'
+    // results land as wasted work.
+    assert!(report.records.iter().all(|r| r.results_used == sc.workers - sc.stragglers));
+    assert!(
+        report.downlink_leak < 0.2,
+        "sealed payloads must not correlate with the plaintext blocks: {}",
+        report.downlink_leak
+    );
+    // The Berrut decode of a degree-2 f from N − S returns is an
+    // approximation; precise error-vs-returns bounds live in the
+    // coding-layer tests — here it must simply be a sane finite value.
+    assert!(report.records.iter().all(|r| {
+        let e = r.rel_err.unwrap();
+        e.is_finite() && e < 5.0
+    }));
+}
+
+#[test]
+fn colluding_workers_gather_exactly_their_shares() {
+    // S = 0 so every worker (colluders included) deposits before the
+    // round completes: the coalition's haul is exact, not a race —
+    // 3 colluders × 1 share × rounds.
+    let mut sc = Scenario::builtin("colluders-stragglers").unwrap();
+    sc.rounds = 3;
+    sc.stragglers = 0;
+    let report = run_scenario(&sc, TransportKind::InProc, 0).unwrap();
+    assert_eq!(report.colluder_shares, sc.colluder_set.len() * sc.rounds as usize);
+    assert!(report.records.iter().all(|r| r.results_used == sc.workers));
+}
+
+#[test]
+fn hopeless_rounds_fail_fast_and_the_soak_continues() {
+    // MDS needs exactly K = 3 of N = 4. Two unrecovered crashes
+    // mid-round 2 doom that round (typed, immediate) and every round
+    // after it cannot even dispatch — the soak records it all instead
+    // of aborting.
+    let mut sc = Scenario::builtin("baseline").unwrap();
+    sc.name = "hopeless-mds".into();
+    sc.rounds = 4;
+    sc.workers = 4;
+    sc.partitions = 3;
+    sc.colluders = 0;
+    sc.scheme = spacdc::config::SchemeKind::Mds;
+    sc.security = spacdc::config::TransportSecurity::Plain;
+    sc.op = ScenarioOp::Identity;
+    sc.crashes = vec![
+        CrashEvent { worker: 1, round: 2, respawn_after: None },
+        CrashEvent { worker: 2, round: 2, respawn_after: None },
+    ];
+    sc.validate().unwrap();
+    let t0 = std::time::Instant::now();
+    let report = run_scenario(&sc, TransportKind::InProc, 1).unwrap();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(15),
+        "hopeless rounds must not ride the 30s deadline"
+    );
+    let statuses: Vec<RoundStatus> = report.records.iter().map(|r| r.status).collect();
+    assert_eq!(
+        statuses,
+        vec![
+            RoundStatus::Ok,
+            RoundStatus::Hopeless,
+            RoundStatus::SubmitFailed,
+            RoundStatus::SubmitFailed,
+        ]
+    );
+    assert_eq!(report.recovery_hit_rate, 0.25);
+    assert_eq!(report.crashes, 2);
+    assert_eq!(report.respawns, 0);
+}
+
+#[test]
+fn reports_serialize_with_digest_and_per_round_records() {
+    let mut sc = Scenario::builtin("baseline").unwrap();
+    sc.rounds = 2;
+    let report = run_scenario(&sc, TransportKind::InProc, 1).unwrap();
+    let json = report.to_json();
+    for needle in [
+        "\"schema\": \"scenario-report-v1\"",
+        "\"scenario\": \"baseline\"",
+        "\"digest\": \"",
+        "\"per_round\": [",
+        "\"lifecycle\": {",
+        "\"recovery_hit_rate\": 1.0000",
+    ] {
+        assert!(json.contains(needle), "report JSON missing {needle}:\n{json}");
+    }
+    assert_eq!(report.digest.len(), 16, "fnv64 digest is 16 hex chars");
+    assert!(report.digest.chars().all(|c| c.is_ascii_hexdigit()));
+}
