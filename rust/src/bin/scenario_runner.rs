@@ -9,18 +9,25 @@
 //! ```text
 //! scenario_runner --scenario baseline
 //! scenario_runner --scenario crash-respawn --transport tcp --threads 8
+//! scenario_runner --scenario stream --inflight 16 --speculate on
 //! scenario_runner --scenario scenarios/baseline.toml --rounds 4 --json /tmp/r.json
 //! ```
+//!
+//! `--inflight` and `--speculate` override the scenario's `[stream]`
+//! table: the window is an execution knob like the transport — the CI
+//! matrix soaks `inflight ∈ {1, 4, 16}` and pins one digest.
 
 use spacdc::cli::{parse, usage, ArgSpec};
 use spacdc::config::{parse_threads_token, TransportKind};
-use spacdc::sim::{run_scenario, Scenario};
+use spacdc::sim::{run_scenario_with, Scenario};
 
 fn specs() -> Vec<ArgSpec> {
     vec![
         ArgSpec::required("scenario", "scenario name (builtin or scenarios/<name>.toml) or path"),
         ArgSpec::opt("transport", "inproc", "worker link fabric: inproc|tcp"),
         ArgSpec::opt("threads", "auto", "master-side thread-pool width (auto = one per core)"),
+        ArgSpec::opt("inflight", "", "override the scenario's stream window (rounds in flight)"),
+        ArgSpec::opt("speculate", "", "override the scenario's speculation: on|off"),
         ArgSpec::opt("rounds", "", "override the scenario's round count"),
         ArgSpec::opt("json", "SCENARIO_REPORT.json", "where to write the JSON report"),
         ArgSpec::opt("expect-digest", "", "fail unless the run's digest equals this hex value"),
@@ -57,8 +64,24 @@ fn main() -> anyhow::Result<()> {
             parsed.get_str("threads")
         )
     })?;
+    let inflight = match parsed.get("inflight").filter(|s| !s.is_empty()) {
+        None => None,
+        Some(raw) => {
+            let n: usize = raw
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--inflight {raw}: not a number"))?;
+            anyhow::ensure!(n >= 1, "--inflight {n}: stream window must be ≥ 1");
+            Some(n)
+        }
+    };
+    let speculate = match parsed.get("speculate").filter(|s| !s.is_empty()) {
+        None => None,
+        Some("on" | "true" | "1" | "yes") => Some(true),
+        Some("off" | "false" | "0" | "no") => Some(false),
+        Some(other) => anyhow::bail!("--speculate {other}: expected on|off"),
+    };
 
-    let report = run_scenario(&scenario, transport, threads)?;
+    let report = run_scenario_with(&scenario, transport, threads, inflight, speculate)?;
     if !parsed.has_flag("quiet") {
         print!("{}", report.render_table());
     } else {

@@ -214,6 +214,16 @@ pub struct SystemConfig {
     /// The setting is process-wide (the last master built wins); results
     /// are bit-identical at any width (DESIGN.md §6).
     pub threads: usize,
+    /// Round-stream window: how many rounds
+    /// [`Master::run_stream`](crate::coordinator::Master::run_stream)
+    /// keeps in flight at once (≥ 1; 1 = synchronous). Outcomes are
+    /// bit-identical at any width — only throughput moves (DESIGN.md
+    /// §8).
+    pub inflight: usize,
+    /// Speculative re-dispatch: re-send outstanding shares to other
+    /// live workers — written-off shares immediately, live-but-slow
+    /// ones at the deadline checkpoint; first result per share wins.
+    pub speculate: bool,
     /// Named adversity scenario (or scenario-file path) for the scenario
     /// engine — empty when the run is not scenario-driven. Resolved by
     /// [`Scenario::load`](crate::sim::Scenario::load).
@@ -244,6 +254,8 @@ impl Default for SystemConfig {
             security: TransportSecurity::MeaEcc,
             round_deadline_s: 60.0,
             threads: 0,
+            inflight: 1,
+            speculate: false,
             scenario: String::new(),
             delay: DelayConfig::default(),
             dl: DlConfig::default(),
@@ -324,6 +336,9 @@ impl SystemConfig {
         if !(self.round_deadline_s > 0.0) {
             return err("round_deadline_s must be positive".into());
         }
+        if self.inflight == 0 {
+            return err("inflight must be ≥ 1 (1 = synchronous rounds)".into());
+        }
         if self.dl.layers.len() < 2 {
             return err("DL network needs ≥ 2 layers".into());
         }
@@ -393,6 +408,23 @@ impl SystemConfig {
                         format!("{value} (pool width must be ≥ 1, or 'auto')"),
                     )
                 })?
+            }
+            "cluster.inflight" | "stream.inflight" | "inflight" => {
+                let n: usize = value.parse().map_err(|_| bad(key, value))?;
+                if n == 0 {
+                    return Err(ConfigError::BadValue(
+                        key.to_string(),
+                        format!("{value} (stream window must be ≥ 1)"),
+                    ));
+                }
+                self.inflight = n;
+            }
+            "cluster.speculate" | "stream.speculate" | "speculate" => {
+                self.speculate = match value {
+                    "true" | "1" | "yes" | "on" => true,
+                    "false" | "0" | "no" | "off" => false,
+                    _ => return Err(bad(key, value)),
+                }
             }
             "cluster.scenario" | "scenario" => self.scenario = value.to_string(),
             "delay.straggler_factor" => {
@@ -519,6 +551,30 @@ mod tests {
         assert_eq!(parse_threads_token("0"), None);
         assert_eq!(parse_threads_token("-1"), None);
         assert_eq!(parse_threads_token("lots"), None);
+    }
+
+    #[test]
+    fn stream_keys_are_plumbed_and_validated() {
+        let mut c = SystemConfig::default();
+        assert_eq!(c.inflight, 1, "default stream is synchronous");
+        assert!(!c.speculate, "speculation is opt-in");
+        c.apply_kv("inflight", "16").unwrap();
+        assert_eq!(c.inflight, 16);
+        c.apply_kv("stream.inflight", "4").unwrap();
+        assert_eq!(c.inflight, 4);
+        assert!(
+            matches!(c.apply_kv("inflight", "0"), Err(ConfigError::BadValue(_, _))),
+            "a zero window must be a typed config error"
+        );
+        assert!(c.apply_kv("inflight", "wide").is_err());
+        c.apply_kv("speculate", "true").unwrap();
+        assert!(c.speculate);
+        c.apply_kv("stream.speculate", "off").unwrap();
+        assert!(!c.speculate);
+        assert!(c.apply_kv("speculate", "maybe").is_err());
+        assert!(c.validate().is_ok());
+        c.inflight = 0;
+        assert!(c.validate().is_err(), "inflight = 0 must not validate");
     }
 
     #[test]

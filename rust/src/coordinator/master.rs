@@ -6,15 +6,18 @@
 //! [`Master::submit`] / [`Master::wait`] pair keeps several rounds in
 //! flight against the worker pool at once.
 //!
-//! Results come home through a dedicated background *collector thread*:
-//! it drains the transport's inbound frame channel, deserializes and
-//! unseals each result, and routes it to its in-flight round through the
-//! shared [`RoundRegistry`](super::registry::RoundRegistry). The submit
-//! path therefore never competes with result intake — encode/seal/
-//! dispatch of round r+1 overlaps both the workers' compute *and* the
-//! unsealing of round r's results (see the `pipelining` bench) — and
-//! every round gets its own collection deadline
-//! (`config.round_deadline_s`).
+//! Results come home through a *sharded background collector*: a router
+//! thread drains the transport's inbound frame channel and fans result
+//! frames out by round id to [`COLLECTOR_SHARDS`] shard threads, which
+//! deserialize and unseal in parallel and route each result to its
+//! in-flight round through the shared
+//! [`RoundRegistry`](super::registry::RoundRegistry). The submit path
+//! therefore never competes with result intake — encode/seal/dispatch
+//! of round r+1 overlaps both the workers' compute *and* the unsealing
+//! of round r's results (see the `pipelining` bench) — and inbound
+//! unsealing itself is no longer a single-thread bottleneck when many
+//! rounds land at once ([`Master::run_stream`](super::stream)). Every
+//! round gets its own collection deadline (`config.round_deadline_s`).
 //!
 //! Failure semantics: a worker whose link is down is remembered as dead
 //! and skipped — it degrades into a permanent straggler that the wait
@@ -25,7 +28,7 @@
 use super::lifecycle::{WorkerDirectory, WorkerState};
 use super::messages::{ControlMsg, SealedPayload, WirePayload, WorkOrder};
 use super::pool::WorkerPool;
-use super::registry::{RoundRegistry, WaitError};
+use super::registry::{RoundRegistry, SoftWait, WaitError};
 use crate::coding::{make_scheme, CodeParams, CodedTask, Scheme, Threshold};
 use crate::config::{SystemConfig, TransportSecurity};
 use crate::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc};
@@ -33,13 +36,28 @@ use crate::field::Fp61;
 use crate::matrix::Matrix;
 use crate::metrics::{names, MetricsRegistry};
 use crate::rng::{derive_seed, rng_from_seed, Rng};
-use crate::runtime::Executor;
+use crate::runtime::{Executor, WorkerOp};
 use crate::sim::{CollusionPool, DelayModel, EavesdropLog, FaultPlan};
-use crate::wire::{self, WireMessage};
-use std::sync::mpsc::Receiver;
+use crate::transport::LoadBook;
+use crate::wire::{self, MsgKind, WireMessage};
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc::{self, Receiver};
 use std::sync::{Arc, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// How many result-routing shards the collector fans inbound frames out
+/// to. Frames are sharded by round id, so one slow unseal never blocks
+/// the other rounds' intake, while every round still sees its own
+/// results in arrival order (the per-shard channel is FIFO) — the
+/// property the frozen-buffer determinism rests on.
+const COLLECTOR_SHARDS: usize = 4;
+
+/// Fraction of `round_deadline_s` after which a still-unsatisfied wait
+/// duplicates its pending shares onto idle workers (when speculation is
+/// on). Written-off shares are re-dispatched immediately and never wait
+/// for this checkpoint.
+const SPEC_DEADLINE_FRACTION: f64 = 0.5;
 
 /// Result of one coded round.
 #[derive(Debug)]
@@ -256,10 +274,11 @@ impl MasterBuilder {
             Arc::clone(&registry),
             Arc::clone(&directory),
             Arc::clone(&metrics),
-            MeaEcc::new(curve, MaskMode::Keystream),
-            keys,
+            Arc::new(keys),
             self.eavesdropper.clone(),
         );
+        let load = Arc::clone(pool.load());
+        let speculate = self.cfg.speculate;
         Ok(Master {
             cfg: self.cfg,
             scheme,
@@ -273,36 +292,129 @@ impl MasterBuilder {
             rng,
             registry,
             directory,
-            collector: Some(collector),
+            load,
+            speculate,
+            spec_rounds: HashMap::new(),
+            round_targets: HashMap::new(),
+            collector,
         })
     }
 }
 
-/// The background result collector: transport frames → decoded, unsealed
-/// results → the round registry; `Register` control frames → the worker
-/// directory (the respawn handshake's master side). One per master;
-/// exits when the inbound channel disconnects (pool shutdown).
+/// What the master retains about an in-flight round so a share can be
+/// re-sealed and re-sent to another worker: the round's seal salt, the
+/// op, and each share's plaintext operands. Only populated while
+/// speculation is on; dropped when the round retires.
+struct SpecRound {
+    salt: u64,
+    op: WorkerOp,
+    operands: Vec<Option<Vec<Matrix>>>,
+}
+
+/// The background result collector, sharded (DESIGN.md §8): one *router*
+/// thread drains the transport's merged inbound channel, peeks each
+/// frame's kind and round id from the fixed header (no body decode, no
+/// CRC), handles `Register` control frames inline (the respawn
+/// handshake's master side), and forwards result frames to one of
+/// [`COLLECTOR_SHARDS`] shard threads keyed by `round % shards`. The
+/// shards do the expensive work — full decode, CRC validation, MEA-ECC
+/// unsealing — in parallel, and route decoded results into the shared
+/// [`RoundRegistry`]. Sharding by round id keeps each round's arrivals
+/// in FIFO order (one shard, one channel), so the frozen-buffer
+/// determinism is untouched. Everything exits when the inbound channel
+/// disconnects (pool shutdown): the router drops the shard senders and
+/// the shards drain out.
 fn spawn_collector(
     inbound: Receiver<Vec<u8>>,
     registry: Arc<RoundRegistry>,
     directory: Arc<WorkerDirectory>,
     metrics: Arc<MetricsRegistry>,
-    mea: MeaEcc<Fp61>,
-    keys: KeyPair<Fp61>,
+    keys: Arc<KeyPair<Fp61>>,
+    tap: Option<Arc<EavesdropLog>>,
+) -> Vec<JoinHandle<()>> {
+    let mut joins = Vec::with_capacity(COLLECTOR_SHARDS + 1);
+    let mut shard_txs = Vec::with_capacity(COLLECTOR_SHARDS);
+    for shard in 0..COLLECTOR_SHARDS {
+        let (tx, rx) = mpsc::channel::<Vec<u8>>();
+        shard_txs.push(tx);
+        joins.push(spawn_collector_shard(
+            shard,
+            rx,
+            Arc::clone(&registry),
+            Arc::clone(&metrics),
+            Arc::clone(&keys),
+            tap.clone(),
+        ));
+    }
+    let router = std::thread::Builder::new()
+        .name("collector-router".into())
+        .spawn(move || {
+            while let Ok(frame) = inbound.recv() {
+                match wire::peek_kind(&frame) {
+                    Some(MsgKind::Control) => match wire::decode_message(&frame) {
+                        Ok(WireMessage::Control(ControlMsg::Register {
+                            worker,
+                            generation,
+                            pk,
+                        })) => {
+                            // A respawned incarnation rejoining: install
+                            // its key and wake whoever waits on the
+                            // handshake.
+                            directory.register(worker, generation, pk);
+                        }
+                        Ok(other) => {
+                            metrics.inc(names::WIRE_ERRORS);
+                            eprintln!(
+                                "collector: dropping unexpected {} frame",
+                                other.kind_name()
+                            );
+                        }
+                        Err(e) => {
+                            metrics.inc(names::WIRE_ERRORS);
+                            eprintln!("collector: dropping undecodable control frame: {e}");
+                        }
+                    },
+                    Some(MsgKind::Result) => {
+                        let round = wire::peek_result_round(&frame).unwrap_or(0);
+                        let shard = (round % COLLECTOR_SHARDS as u64) as usize;
+                        if shard_txs[shard].send(frame).is_err() {
+                            break;
+                        }
+                    }
+                    // Anything else — a misrouted order, garbled magic —
+                    // goes to shard 0, whose full decoder produces the
+                    // typed error and the wire-error tick.
+                    _ => {
+                        if shard_txs[0].send(frame).is_err() {
+                            break;
+                        }
+                    }
+                }
+            }
+            // Dropping shard_txs here disconnects the shards.
+        })
+        .expect("spawn collector router");
+    joins.push(router);
+    joins
+}
+
+/// One collector shard: full decode + unseal + registry delivery for
+/// the result frames of its round-id residue class.
+fn spawn_collector_shard(
+    shard: usize,
+    frames: Receiver<Vec<u8>>,
+    registry: Arc<RoundRegistry>,
+    metrics: Arc<MetricsRegistry>,
+    keys: Arc<KeyPair<Fp61>>,
     tap: Option<Arc<EavesdropLog>>,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
-        .name("collector".into())
+        .name(format!("collector-{shard}"))
         .spawn(move || {
-            while let Ok(frame) = inbound.recv() {
+            let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
+            while let Ok(frame) = frames.recv() {
                 let msg = match wire::decode_message(&frame) {
                     Ok(WireMessage::Result(m)) => m,
-                    Ok(WireMessage::Control(ControlMsg::Register { worker, generation, pk })) => {
-                        // A respawned incarnation rejoining: install its
-                        // key and wake whoever waits on the handshake.
-                        directory.register(worker, generation, pk);
-                        continue;
-                    }
                     Ok(other) => {
                         metrics.inc(names::WIRE_ERRORS);
                         eprintln!(
@@ -354,7 +466,7 @@ fn spawn_collector(
                 }
             }
         })
-        .expect("spawn collector")
+        .expect("spawn collector shard")
 }
 
 /// The master node.
@@ -369,12 +481,28 @@ pub struct Master {
     delays: DelayModel,
     round: u64,
     rng: Rng,
-    /// Shared with the collector thread and every live round handle.
+    /// Shared with the collector shards and every live round handle.
     registry: Arc<RoundRegistry>,
     /// Shared with the pool and the collector: lifecycle states,
     /// generations, and current public keys.
     directory: Arc<WorkerDirectory>,
-    collector: Option<JoinHandle<()>>,
+    /// Per-worker backlog signal (orders sent − rounds settled): the
+    /// idle-worker signal speculative re-dispatch keys its executor
+    /// choice on. Updated only on the master thread, so readings here
+    /// are deterministic.
+    load: Arc<LoadBook>,
+    /// Re-dispatch outstanding shares to other workers (config
+    /// `speculate`, overridable per stream — see
+    /// [`Master::run_stream`](super::stream)).
+    speculate: bool,
+    /// Retained share operands for speculative re-seal, per in-flight
+    /// round (populated only while `speculate` is on).
+    spec_rounds: HashMap<u64, SpecRound>,
+    /// Physical dispatch targets per in-flight round (original owners
+    /// plus speculative executors), settled into `load` at retirement.
+    round_targets: HashMap<u64, Vec<usize>>,
+    /// Collector shard + router threads, joined at drop.
+    collector: Vec<JoinHandle<()>>,
 }
 
 impl Master {
@@ -486,17 +614,27 @@ impl Master {
         if self.directory.state(w) == WorkerState::Alive {
             anyhow::bail!("worker {w} is alive; nothing to respawn");
         }
-        self.respawn_now(w)
+        // A manual respawn knows nothing about why the worker died, so
+        // it is pessimistic: whatever the old incarnation still owed is
+        // written off (rounds re-evaluate — degrade or fail fast), and a
+        // written-off result that makes it home anyway is still
+        // welcomed by the registry.
+        self.respawn_now(w, true)
     }
 
-    fn respawn_now(&mut self, w: usize) -> anyhow::Result<()> {
-        // Relinking tears down whatever is left of the old link, and on
-        // TCP that discards any unread in-flight orders with it — so any
-        // result the old incarnation still owed is written off *before*
-        // the swap. Rounds re-evaluate (degrade / fail fast), and if a
-        // written-off result makes it home anyway (the in-proc fabric
-        // drains queued orders), the registry still welcomes it.
-        self.registry.note_worker_down(w);
+    /// Wire a fresh link and start a new incarnation. `write_off`
+    /// controls whether the old incarnation's outstanding shares are
+    /// abandoned: a *scheduled* respawn skips it — the relink is
+    /// graceful on both fabrics (the old incarnation drains its queued
+    /// orders and its in-flight replies keep flowing), and the fault
+    /// plan already wrote off exactly the crash round at submit time, so
+    /// writing off again would make older rounds' outcomes depend on
+    /// when the respawn lands relative to them (i.e. on the stream
+    /// window width — DESIGN.md §8).
+    fn respawn_now(&mut self, w: usize, write_off: bool) -> anyhow::Result<()> {
+        if write_off {
+            self.registry.note_worker_down(w);
+        }
         let generation = self.pool.respawn(w).map_err(|e| anyhow::anyhow!(e.to_string()))?;
         let deadline = Instant::now() + Duration::from_secs(10);
         if !self.directory.wait_registered(w, generation, deadline) {
@@ -527,6 +665,9 @@ impl Master {
                 task.name()
             );
         }
+        // Rounds can retire behind the master's back (a dropped handle
+        // abandons in place): reclaim their bookkeeping first.
+        self.sweep_retired();
         self.round += 1;
         let round = self.round;
         // Scheduled respawns land before the round's orders go out, so a
@@ -534,7 +675,7 @@ impl Master {
         if let Some(plan) = self.faults.clone() {
             for w in plan.respawns_due(round) {
                 if self.directory.state(w) == WorkerState::Crashed {
-                    if let Err(e) = self.respawn_now(w) {
+                    if let Err(e) = self.respawn_now(w, false) {
                         eprintln!("master: scheduled respawn of worker {w} failed: {e}");
                     }
                 }
@@ -560,34 +701,73 @@ impl Master {
         // embarrassingly parallel. Each worker's seal RNG is derived
         // from a per-round salt and the worker index — ciphertexts are a
         // pure function of (seed, round, worker), never of thread count
-        // or scheduling. Shares are *moved* into the fan-out, so plain
-        // payloads travel without a clone.
+        // or scheduling.
+        //
+        // Ownership depends on the speculation mode: off, the shares are
+        // *moved* into the fan-out (plain payloads travel without a
+        // clone); on, the fan-out seals from borrows and the shares are
+        // retained for re-sealing to another worker — no per-round deep
+        // copy of the input either way (MEA-ECC copies only the bytes it
+        // masks; the plain+speculate combination clones, which the wire
+        // payload needs an owned matrix for regardless).
         let round_salt = self.rng.next_u64();
-        let sealed: Vec<Option<Vec<WirePayload>>> = {
+        // Seal to the *current incarnations'* keys: a respawned worker
+        // re-registered with a fresh key pair.
+        let pks = self.directory.pks();
+        let alive = self.directory.alive_mask();
+        let (sealed, retained): (Vec<Option<Vec<WirePayload>>>, Vec<Option<Vec<Matrix>>>) = {
             let _t = self.metrics.time_phase("phase.seal");
             let security = self.cfg.security;
             let mea = &self.mea;
-            // Seal to the *current incarnations'* keys: a respawned
-            // worker re-registered with a fresh key pair.
-            let pks = self.directory.pks();
-            let alive = self.directory.alive_mask();
-            crate::parallel::global().map_vec(shares, |w, operands| {
-                if !alive[w] {
-                    return None;
-                }
-                let mut seal_rng = rng_from_seed(derive_seed(round_salt, w as u64));
-                Some(
-                    operands
-                        .into_iter()
-                        .map(|m| match security {
-                            TransportSecurity::Plain => WirePayload::Plain(m),
-                            TransportSecurity::MeaEcc => WirePayload::Sealed(
-                                SealedPayload::seal(mea, &m, &pks[w], &mut seal_rng),
-                            ),
-                        })
-                        .collect(),
-                )
-            })
+            if self.speculate {
+                let shares_ref = &shares;
+                let pks_ref = &pks;
+                let alive_ref = &alive;
+                let sealed = crate::parallel::global().map_indexed(shares.len(), |w| {
+                    if !alive_ref[w] {
+                        return None;
+                    }
+                    let mut seal_rng = rng_from_seed(derive_seed(round_salt, w as u64));
+                    Some(
+                        shares_ref[w]
+                            .iter()
+                            .map(|m| match security {
+                                TransportSecurity::Plain => WirePayload::Plain(m.clone()),
+                                TransportSecurity::MeaEcc => WirePayload::Sealed(
+                                    SealedPayload::seal(mea, m, &pks_ref[w], &mut seal_rng),
+                                ),
+                            })
+                            .collect(),
+                    )
+                });
+                // Dead workers' shares are never dispatched, so they can
+                // never be written off and re-dispatched: drop them.
+                let retained = shares
+                    .into_iter()
+                    .enumerate()
+                    .map(|(w, operands)| if alive[w] { Some(operands) } else { None })
+                    .collect();
+                (sealed, retained)
+            } else {
+                let sealed = crate::parallel::global().map_vec(shares, |w, operands| {
+                    if !alive[w] {
+                        return None;
+                    }
+                    let mut seal_rng = rng_from_seed(derive_seed(round_salt, w as u64));
+                    Some(
+                        operands
+                            .into_iter()
+                            .map(|m| match security {
+                                TransportSecurity::Plain => WirePayload::Plain(m),
+                                TransportSecurity::MeaEcc => WirePayload::Sealed(
+                                    SealedPayload::seal(mea, &m, &pks[w], &mut seal_rng),
+                                ),
+                            })
+                            .collect(),
+                    )
+                });
+                (sealed, Vec::new())
+            }
         };
 
         // Dispatch serially in worker order (frame serialization is
@@ -628,12 +808,14 @@ impl Master {
             }
         }
         let dispatched = sent.len();
+        self.round_targets.insert(round, sent.clone());
 
         // The wait policy over the orders that actually went out.
         let (wait_for, min_required) = match threshold {
             Threshold::Exact(k) => {
                 if dispatched < k {
                     self.registry.abandon(round);
+                    self.settle_round(round);
                     // The abandoned round's orders are out: crashes
                     // scheduled on it still happen worker-side and must
                     // still be booked.
@@ -648,6 +830,7 @@ impl Master {
             Threshold::Flexible { min } => {
                 if dispatched < min {
                     self.registry.abandon(round);
+                    self.settle_round(round);
                     self.book_scheduled_faults(round, &sent, false);
                     anyhow::bail!(
                         "round {round}: only {dispatched} live workers, below the flexible minimum {min}"
@@ -659,6 +842,9 @@ impl Master {
             }
         };
         self.registry.finalize(round, wait_for, min_required, &sent);
+        if self.speculate {
+            self.spec_rounds.insert(round, SpecRound { salt: round_salt, op, operands: retained });
+        }
         // Scheduled faults for this round, booked from the same plan the
         // workers execute: a crashed worker received its order but will
         // never reply (and serves nothing afterwards); a corrupted
@@ -666,6 +852,9 @@ impl Master {
         // way the round's pending set shrinks now, so it degrades or
         // fails fast instead of riding the deadline.
         self.book_scheduled_faults(round, &sent, true);
+        // Reclaim what the bookings just wrote off — for this round and
+        // any older in-flight round a crash straddled.
+        self.speculation_pass();
         Ok(RoundHandle {
             round,
             registry: Arc::downgrade(&self.registry),
@@ -684,22 +873,61 @@ impl Master {
     pub fn wait(&mut self, handle: RoundHandle) -> anyhow::Result<RoundOutcome> {
         let round = handle.defuse();
         let deadline = Instant::now() + Duration::from_secs_f64(self.cfg.round_deadline_s);
+        // Recover anything already known lost before blocking (covers
+        // losses noted since the last submit-time pass).
+        self.speculation_pass();
         let done = {
             let metrics = Arc::clone(&self.metrics);
             let _t = metrics.time_phase("phase.wait");
-            match self.registry.wait_done(round, deadline) {
+            // With speculation on, the wait runs in two legs: a soft leg
+            // to the checkpoint — if the round is still short then, its
+            // pending shares are duplicated onto the least-loaded live
+            // workers (first result per share wins) — then the hard leg
+            // to the deadline.
+            let mut early = None;
+            if self.speculate {
+                let checkpoint = (Instant::now()
+                    + Duration::from_secs_f64(
+                        self.cfg.round_deadline_s * SPEC_DEADLINE_FRACTION,
+                    ))
+                .min(deadline);
+                match self.registry.wait_soft(round, checkpoint) {
+                    SoftWait::Done(done) => early = Some(done),
+                    SoftWait::Gone => {} // the hard leg reports Unknown
+                    SoftWait::Blocked { pending, hopeless } => {
+                        // Duplicating pending shares cannot rescue a
+                        // hopeless round (it adds copies, not shares) —
+                        // let the hard leg fail fast instead.
+                        if !hopeless {
+                            for share in pending {
+                                self.duplicate_share(round, share);
+                            }
+                        }
+                    }
+                }
+            }
+            let outcome = match early {
+                Some(done) => Ok(done),
+                None => self.registry.wait_done(round, deadline),
+            };
+            match outcome {
                 Ok(done) => done,
-                Err(WaitError::Unknown(round)) => {
-                    return Err(RoundError::Unknown { round }.into())
-                }
-                Err(WaitError::TimedOut { round, got, need }) => {
-                    return Err(RoundError::Deadline { round, got, need }.into())
-                }
-                Err(WaitError::Hopeless { round, possible, need }) => {
-                    return Err(RoundError::Hopeless { round, possible, need }.into())
+                Err(e) => {
+                    self.settle_round(round);
+                    return Err(match e {
+                        WaitError::Unknown(round) => RoundError::Unknown { round },
+                        WaitError::TimedOut { round, got, need } => {
+                            RoundError::Deadline { round, got, need }
+                        }
+                        WaitError::Hopeless { round, possible, need } => {
+                            RoundError::Hopeless { round, possible, need }
+                        }
+                    }
+                    .into());
                 }
             }
         };
+        self.settle_round(round);
         // Credit the uplink comm counters with exactly the decode
         // inputs (results beyond the wait policy were rejected before
         // unsealing and never charged — deterministic accounting).
@@ -734,6 +962,182 @@ impl Master {
     pub fn abandon(&mut self, handle: RoundHandle) {
         let round = handle.defuse();
         self.registry.abandon(round);
+        self.settle_round(round);
+    }
+
+    /// Turn speculative re-dispatch on or off for the rounds submitted
+    /// from here on (the builder seeds this from `config.speculate`;
+    /// [`run_stream`](Master::run_stream) overrides it per stream).
+    pub fn set_speculation(&mut self, on: bool) {
+        self.speculate = on;
+    }
+
+    /// Is speculative re-dispatch currently on?
+    pub fn speculation(&self) -> bool {
+        self.speculate
+    }
+
+    /// Re-dispatch every written-off share of every in-flight round to
+    /// another live worker. Runs after fault bookings at submit time and
+    /// before blocking in [`wait`](Master::wait); a no-op when
+    /// speculation is off. Candidate order is deterministic (rounds
+    /// ascending, shares as written off), and so is the executor choice
+    /// (least-loaded per the [`LoadBook`], lowest index on ties).
+    fn speculation_pass(&mut self) {
+        if !self.speculate {
+            return;
+        }
+        for (round, lost) in self.registry.speculation_candidates() {
+            for share in lost {
+                self.respeculate_share(round, share);
+            }
+        }
+    }
+
+    /// Re-send the work order for a written-off `share` of `round` to
+    /// the least-loaded live worker: the share's operands are re-sealed
+    /// to the executor's key on a dedicated seal stream, the order keeps
+    /// the *share* id (so the result routes to the right interpolation
+    /// point whoever computes it), and the registry moves the share back
+    /// to pending — restoring the round's wait target, or rescinding a
+    /// hopeless verdict the loss had caused.
+    fn respeculate_share(&mut self, round: u64, share: usize) -> bool {
+        let Some((salt, op, operands)) = self.spec_round_parts(round, share) else {
+            return false;
+        };
+        let Some(executor) = self.pick_executor(round, share) else { return false };
+        // The registry entry goes back to pending *before* the order
+        // leaves, so the result can never race its own bookkeeping.
+        if !self.registry.respeculate(round, share) {
+            return false;
+        }
+        self.send_speculative(round, share, executor, salt, op, operands)
+    }
+
+    /// Near-deadline duplication of a still-pending `share` (the
+    /// original owner is alive but slow): first result wins, the loser
+    /// is discarded deterministically by share id.
+    fn duplicate_share(&mut self, round: u64, share: usize) -> bool {
+        let Some((salt, op, operands)) = self.spec_round_parts(round, share) else {
+            return false;
+        };
+        // Don't hand the duplicate back to the slow owner.
+        let Some(executor) = self.pick_executor(round, share) else { return false };
+        if !self.registry.respeculate_dup(round, share) {
+            return false;
+        }
+        self.send_speculative(round, share, executor, salt, op, operands)
+    }
+
+    /// The retained seal salt, op, and operands for `share` of `round`.
+    fn spec_round_parts(&self, round: u64, share: usize) -> Option<(u64, WorkerOp, Vec<Matrix>)> {
+        let spec = self.spec_rounds.get(&round)?;
+        let operands = spec.operands.get(share)?.clone()?;
+        Some((spec.salt, spec.op.clone(), operands))
+    }
+
+    /// The least-loaded live worker other than `share`'s original owner
+    /// (deterministic: the load book only moves on the master thread,
+    /// ties break to the lowest index). Workers whose scheduled
+    /// corruption coin is true for `round` are skipped outright: the
+    /// worker loop corrupts *every* result frame it sends for that round
+    /// — the copy would be lost in transit, and unlike the original
+    /// owners' frames, speculative copies are never booked lost at
+    /// submit time, so the share would wedge in `pending` until the
+    /// deadline.
+    fn pick_executor(&self, round: u64, share: usize) -> Option<usize> {
+        let alive = self.directory.alive_mask();
+        let plan = self.faults.as_deref();
+        self.load.least_loaded((0..alive.len()).filter(|&w| {
+            alive[w] && w != share && plan.map_or(true, |p| !p.corrupts(w, round))
+        }))
+    }
+
+    /// Seal and ship one speculative order to `executor`.
+    fn send_speculative(
+        &mut self,
+        round: u64,
+        share: usize,
+        executor: usize,
+        salt: u64,
+        op: WorkerOp,
+        operands: Vec<Matrix>,
+    ) -> bool {
+        let pks = self.directory.pks();
+        // A dedicated seal stream per (round, executor, share): never
+        // reuses the original owner's keystream, and never collides with
+        // the executor's own share of the round.
+        let mut seal_rng = rng_from_seed(derive_seed(
+            salt,
+            0x5BEC_0000 ^ ((executor as u64) << 32) ^ share as u64,
+        ));
+        let payloads: Vec<WirePayload> = operands
+            .into_iter()
+            .map(|m| match self.cfg.security {
+                TransportSecurity::Plain => WirePayload::Plain(m),
+                TransportSecurity::MeaEcc => WirePayload::Sealed(SealedPayload::seal(
+                    &self.mea,
+                    &m,
+                    &pks[executor],
+                    &mut seal_rng,
+                )),
+            })
+            .collect();
+        let order = WorkOrder {
+            round,
+            worker: share,
+            op,
+            payloads,
+            delay: self.delays.service_delay(executor, round),
+        };
+        match self.pool.dispatch_to(executor, &order) {
+            Ok(()) => {
+                self.round_targets.entry(round).or_default().push(executor);
+                self.metrics.inc(names::SPEC_REDISPATCHED);
+                for p in &order.payloads {
+                    self.capture(executor, round, true, p);
+                    self.metrics.add(names::SYMBOLS_TO_WORKERS, p.symbols() as u64);
+                }
+                true
+            }
+            Err(e) => {
+                eprintln!(
+                    "master: speculative re-dispatch of share {share} (round {round}) to \
+                     worker {executor} failed: {e}"
+                );
+                // The order never left: the share returns to lost (or
+                // stays pending for a duplicate) and the dead executor
+                // is booked like any other dead link.
+                self.registry.respeculate_failed(round, share);
+                self.note_worker_crashed(executor);
+                false
+            }
+        }
+    }
+
+    /// Settle a retired round's bookkeeping: release its load-book
+    /// orders and drop its retained operands.
+    fn settle_round(&mut self, round: u64) {
+        if let Some(targets) = self.round_targets.remove(&round) {
+            self.load.settle(&targets);
+        }
+        self.spec_rounds.remove(&round);
+    }
+
+    /// Reclaim bookkeeping for rounds that left the registry without
+    /// passing through [`wait`](Master::wait)/[`abandon`](Master::abandon)
+    /// (a dropped [`RoundHandle`] abandons in place).
+    fn sweep_retired(&mut self) {
+        if self.round_targets.is_empty() && self.spec_rounds.is_empty() {
+            return;
+        }
+        let live: HashSet<u64> = self.registry.inflight_ids().into_iter().collect();
+        let stale: Vec<u64> =
+            self.round_targets.keys().filter(|r| !live.contains(r)).copied().collect();
+        for round in stale {
+            self.settle_round(round);
+        }
+        self.spec_rounds.retain(|round, _| live.contains(round));
     }
 
     /// Record an eavesdropped wire payload.
@@ -747,9 +1151,9 @@ impl Master {
 impl Drop for Master {
     fn drop(&mut self) {
         // Tear the fabric down first so the inbound channel disconnects,
-        // then join the collector.
+        // then join the router and the shards.
         self.pool.shutdown();
-        if let Some(j) = self.collector.take() {
+        for j in self.collector.drain(..) {
             let _ = j.join();
         }
     }

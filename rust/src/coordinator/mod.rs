@@ -15,10 +15,13 @@
 //!    scheme's wait policy is satisfied, under a per-round deadline.
 //!
 //! One pipeline serves all eight schemes: [`Master::run`] executes a
-//! round synchronously, and [`Master::submit`] / [`Master::wait`] keep
+//! round synchronously, [`Master::submit`] / [`Master::wait`] keep
 //! several rounds in flight at once (results are routed to their round
 //! by id, so rounds may complete out of order; dropping a
-//! [`RoundHandle`] abandons its round).
+//! [`RoundHandle`] abandons its round), and [`Master::run_stream`]
+//! drives a whole task list through a configurable in-flight window
+//! with optional speculative re-dispatch of outstanding shares
+//! (`stream`, DESIGN.md §8).
 //!
 //! Stragglers are injected per [`sim::DelayModel`](crate::sim::DelayModel);
 //! colluders and eavesdroppers observe through the [`sim`](crate::sim)
@@ -40,8 +43,10 @@ mod master;
 mod messages;
 mod pool;
 mod registry;
+mod stream;
 
 pub use lifecycle::{WorkerDirectory, WorkerState};
 pub use master::{Master, MasterBuilder, RoundError, RoundHandle, RoundOutcome};
 pub use messages::{ControlMsg, ResultMsg, SealedPayload, WirePayload, WorkOrder};
 pub use pool::WorkerPool;
+pub use stream::{StreamConfig, StreamOutcome, StreamRound};

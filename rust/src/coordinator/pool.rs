@@ -46,7 +46,7 @@ use crate::metrics::{names, MetricsRegistry};
 use crate::rng::{derive_seed, rng_from_seed};
 use crate::runtime::Executor;
 use crate::sim::{CollusionPool, FaultPlan};
-use crate::transport::{self, Transport, TransportError, WorkerLink};
+use crate::transport::{self, LoadBook, Transport, TransportError, WorkerLink};
 use crate::wire::{self, WireMessage};
 use std::sync::mpsc::Receiver;
 use std::sync::Arc;
@@ -58,6 +58,7 @@ use std::time::Duration;
 pub struct WorkerPool {
     transport: Option<Box<dyn Transport>>,
     directory: Arc<WorkerDirectory>,
+    load: Arc<LoadBook>,
     joins: Vec<JoinHandle<()>>,
     // Respawn ingredients: a new incarnation is built from the same
     // parts as the original.
@@ -100,6 +101,7 @@ impl WorkerPool {
         let mut pool = Self {
             transport: Some(fabric.transport),
             directory,
+            load: Arc::clone(&fabric.load),
             joins: Vec::with_capacity(n),
             master_pk,
             executor,
@@ -174,12 +176,30 @@ impl WorkerPool {
         self.transport.as_ref().expect("pool not shut down").kind()
     }
 
-    /// Serialize an order and send it to its worker. A down link
-    /// surfaces as [`TransportError::WorkerDown`]; the caller treats
-    /// that worker as a permanent straggler.
+    /// The fabric's per-worker backlog signal (orders sent minus rounds
+    /// settled) — the idle-worker signal for speculative re-dispatch.
+    pub fn load(&self) -> &Arc<LoadBook> {
+        &self.load
+    }
+
+    /// Serialize an order and send it to its owning worker
+    /// (`order.worker`). A down link surfaces as
+    /// [`TransportError::WorkerDown`]; the caller treats that worker as
+    /// a permanent straggler.
     pub fn dispatch(&self, order: &WorkOrder) -> Result<(), TransportError> {
+        self.dispatch_to(order.worker, order)
+    }
+
+    /// Serialize an order and send it to `target`, which may differ
+    /// from `order.worker`: a speculative re-dispatch ships share
+    /// `order.worker`'s work to another live worker, and the result
+    /// comes home tagged with the *share* id so the decoder never needs
+    /// to know who computed it.
+    pub fn dispatch_to(&self, target: usize, order: &WorkOrder) -> Result<(), TransportError> {
         let frame = wire::encode_order(order);
-        self.transport.as_ref().expect("pool not shut down").send(order.worker, frame)
+        self.transport.as_ref().expect("pool not shut down").send(target, frame)?;
+        self.load.note_sent(target);
+        Ok(())
     }
 
     /// Inject a crash over the wire: worker `w` dies silently at its
@@ -304,7 +324,12 @@ fn worker_loop(
         if !order.delay.is_zero() {
             std::thread::sleep(order.delay);
         }
-        let WorkOrder { round, op, payloads, .. } = order;
+        // `share` is the order's own worker field: normally this
+        // worker's index, but a speculative re-dispatch carries another
+        // worker's share here — the reply must be tagged with the share
+        // id, not the executor, so the master routes it to the right
+        // interpolation point.
+        let WorkOrder { round, worker: share, op, payloads, .. } = order;
 
         // Decrypt operands (§IV-B step 4), consuming the decoded order:
         // plain operands move straight through and sealed ones are
@@ -349,7 +374,7 @@ fn worker_loop(
             WirePayload::Plain(out)
         };
 
-        let msg = ResultMsg { round, worker: w, payload };
+        let msg = ResultMsg { round, worker: share, payload };
         wire::encode_result_into(&msg, &mut frame_buf);
         // Scheduled wire corruption: flip one body byte so the frame
         // fails its CRC at the master — the result is lost in transit,

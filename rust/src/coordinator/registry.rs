@@ -28,6 +28,20 @@
 //! A result from a worker the master wrote off can still arrive (the
 //! master is deliberately pessimistic); it is buffered normally — the
 //! round just finishes earlier than feared.
+//!
+//! **Speculative re-dispatch** (DESIGN.md §8). A written-off share is
+//! not forgotten: it moves to the round's `lost` set, and the master —
+//! when speculation is on — re-sends that share's work order to another
+//! live worker ([`respeculate`](RoundRegistry::respeculate): the share
+//! returns to `pending`, the round's wait target is restored toward the
+//! original policy, and a `hopeless` verdict is rescinded when the
+//! threshold becomes reachable again). Near the deadline the master may
+//! also duplicate still-pending shares onto idle workers
+//! ([`respeculate_dup`](RoundRegistry::respeculate_dup)). Either way the
+//! rule is *first result wins, per share id*: a share already buffered
+//! rejects later copies deterministically (`spec.wasted`), and because
+//! every copy of a share carries bit-identical payload math, the decode
+//! input never depends on which copy won.
 
 use crate::coding::{DecodeCtx, Threshold};
 use crate::matrix::Matrix;
@@ -43,22 +57,39 @@ pub(crate) struct InflightRound {
     pub ctx: DecodeCtx,
     /// The scheme's recovery-threshold semantics for this round.
     pub threshold: Threshold,
-    /// Decoded (worker, result) pairs buffered so far — capped at
+    /// Decoded (share, result) pairs buffered so far — capped at
     /// `wait_for`: once the policy is satisfied the buffer is frozen, so
     /// the decode input set is exactly the first `wait_for` arrivals
     /// (deterministic `results_used`, same as the old blocking recv loop).
+    /// At most one entry per share id: duplicate copies (speculation
+    /// losers) are discarded on arrival.
     pub results: Vec<(usize, Matrix)>,
-    /// How many results the wait policy needs (may be lowered once — see
-    /// module docs — in which case `degraded` is set).
+    /// How many results the wait policy needs right now (lowered by
+    /// mid-round losses, restored by speculative recovery — see module
+    /// docs).
     pub wait_for: usize,
+    /// The wait count the policy originally asked for at finalize time;
+    /// `wait_for` never exceeds it.
+    pub policy_wait: usize,
     /// The scheme's hard floor: `Exact(k)` needs exactly `k`,
     /// `Flexible { min }` can degrade down to `min` but no further.
     pub min_required: usize,
-    /// How many orders were actually dispatched.
+    /// How many orders went out for this round (speculative re-sends
+    /// included) — the denominator for late-arrival accounting.
     pub dispatched: usize,
-    /// Dispatched workers that still owe a result and are believed able
-    /// to deliver one.
+    /// Share ids still expected to produce a result (original owner or a
+    /// speculative executor).
     pub pending: Vec<usize>,
+    /// Share ids written off (owner crashed, frame corrupted): nothing
+    /// is expected from them, but they are eligible for speculative
+    /// re-dispatch and a zombie delivery is still welcome.
+    pub lost: Vec<usize>,
+    /// Lost shares re-dispatched speculatively and not yet settled —
+    /// their first arrival counts as recovered work.
+    pub spec_pending: Vec<usize>,
+    /// Still-pending shares duplicated onto an idle worker near the
+    /// deadline — the losing copy counts as wasted speculation.
+    pub spec_dup: Vec<usize>,
     /// Was `wait_for` lowered below the original policy?
     pub degraded: bool,
     /// Set when fewer than `min_required` results can still arrive:
@@ -86,6 +117,24 @@ impl InflightRound {
     fn possible(&self) -> usize {
         self.results.len() + self.pending.len()
     }
+}
+
+/// Outcome of a non-abandoning [`wait_soft`](RoundRegistry::wait_soft)
+/// — the speculation checkpoint's view of a round.
+#[derive(Debug)]
+pub(crate) enum SoftWait {
+    /// The round completed (retired exactly as `wait_done` would).
+    Done(InflightRound),
+    /// The checkpoint passed (or the round is hopeless) with shares
+    /// still outstanding; nothing was abandoned.
+    Blocked {
+        /// Shares still expected when the checkpoint fired.
+        pending: Vec<usize>,
+        /// The round's threshold is currently unreachable.
+        hopeless: bool,
+    },
+    /// The round is not in flight.
+    Gone,
 }
 
 /// Why a wait did not produce a round.
@@ -150,9 +199,13 @@ impl RoundRegistry {
                 threshold,
                 results: Vec::new(),
                 wait_for: usize::MAX,
+                policy_wait: usize::MAX,
                 min_required: 0,
                 dispatched: 0,
                 pending: Vec::new(),
+                lost: Vec::new(),
+                spec_pending: Vec::new(),
+                spec_dup: Vec::new(),
                 degraded: false,
                 hopeless: None,
                 spilled: 0,
@@ -172,6 +225,7 @@ impl RoundRegistry {
         let mut st = self.state.lock().unwrap();
         if let Some(r) = st.rounds.get_mut(&round) {
             r.wait_for = wait_for;
+            r.policy_wait = wait_for;
             r.min_required = min_required;
             r.dispatched = sent.len();
             r.pending = sent
@@ -212,15 +266,13 @@ impl RoundRegistry {
     }
 
     /// The master learned that `worker`'s result for `round` will never
-    /// arrive (scheduled crash, corrupted frame): drop it from the
-    /// pending set and re-evaluate the round (degrade or go hopeless —
-    /// see module docs).
+    /// arrive (scheduled crash, corrupted frame): move it from the
+    /// pending set to the lost set and re-evaluate the round (degrade or
+    /// go hopeless — see module docs).
     pub fn note_lost(&self, round: u64, worker: usize) {
         let mut st = self.state.lock().unwrap();
         if let Some(r) = st.rounds.get_mut(&round) {
-            let before = r.pending.len();
-            r.pending.retain(|&p| p != worker);
-            if r.pending.len() != before {
+            if Self::write_off(r, worker) {
                 self.reevaluate(r);
             }
         }
@@ -232,26 +284,35 @@ impl RoundRegistry {
     pub fn note_worker_down(&self, worker: usize) {
         let mut st = self.state.lock().unwrap();
         for r in st.rounds.values_mut() {
-            let before = r.pending.len();
-            r.pending.retain(|&p| p != worker);
-            if r.pending.len() != before {
+            if Self::write_off(r, worker) {
                 self.reevaluate(r);
             }
         }
     }
 
-    /// Re-derive a round's fate after its pending set shrank.
+    /// Move `share` pending → lost; true when it was in fact pending.
+    fn write_off(r: &mut InflightRound, share: usize) -> bool {
+        let before = r.pending.len();
+        r.pending.retain(|&p| p != share);
+        if r.pending.len() == before {
+            return false;
+        }
+        if !r.lost.contains(&share) {
+            r.lost.push(share);
+        }
+        true
+    }
+
+    /// Re-derive a round's fate after its pending set changed (shrunk by
+    /// a write-off, or grown back by a speculative re-dispatch).
     fn reevaluate(&self, r: &mut InflightRound) {
         if r.wait_for == usize::MAX {
             return; // not finalized yet: the policy is not known
         }
-        if r.hopeless.is_some() || r.results.len() >= r.wait_for {
-            return; // already settled one way or the other
+        if r.results.len() >= r.wait_for {
+            return; // already satisfied
         }
         let possible = r.possible();
-        if possible >= r.wait_for {
-            return; // the policy is still reachable
-        }
         if possible < r.min_required {
             // Exact schemes land here as soon as k is unreachable;
             // flexible schemes when even `min` is gone.
@@ -259,45 +320,157 @@ impl RoundRegistry {
             self.cv.notify_all();
             return;
         }
-        // Flexible threshold: degrade to "decode from what can still
-        // arrive" instead of riding the deadline down.
-        r.wait_for = possible.max(r.min_required);
-        if !r.degraded {
-            r.degraded = true;
+        // Reachable again (a speculative re-dispatch restored a share):
+        // rescind a hopeless verdict the waiter has not consumed yet.
+        r.hopeless = None;
+        // Wait for as much of the original policy as can still arrive —
+        // degrading on loss, restoring on recovery, never above the
+        // policy and never below the scheme's floor.
+        r.wait_for = possible.min(r.policy_wait).max(r.min_required);
+        let degraded_now = r.wait_for < r.policy_wait;
+        if degraded_now && !r.degraded {
             self.metrics.inc(names::ROUNDS_DEGRADED);
         }
+        r.degraded = degraded_now;
         if r.results.len() >= r.wait_for {
             self.cv.notify_all();
         }
     }
 
-    /// Deliver one decoded worker result with its wire cost
-    /// `(symbols, frame bytes)`: buffered under its in-flight round
+    /// Rounds with written-off shares a speculative pass could recover:
+    /// `(round, lost shares)` for every in-flight finalized round.
+    pub fn speculation_candidates(&self) -> Vec<(u64, Vec<usize>)> {
+        let st = self.state.lock().unwrap();
+        let mut out: Vec<(u64, Vec<usize>)> = st
+            .rounds
+            .iter()
+            .filter(|(_, r)| r.wait_for != usize::MAX && !r.lost.is_empty())
+            .map(|(&round, r)| (round, r.lost.clone()))
+            .collect();
+        out.sort_unstable();
+        out
+    }
+
+    /// Shares still pending for `round` (empty when the round is gone) —
+    /// the deadline-near duplication targets.
+    pub fn pending_shares(&self, round: u64) -> Vec<usize> {
+        let st = self.state.lock().unwrap();
+        st.rounds.get(&round).map(|r| r.pending.clone()).unwrap_or_default()
+    }
+
+    /// Round ids currently in flight (for the master's bookkeeping
+    /// sweeps).
+    pub fn inflight_ids(&self) -> Vec<u64> {
+        self.state.lock().unwrap().rounds.keys().copied().collect()
+    }
+
+    /// A lost share was re-dispatched to another worker: move it back to
+    /// pending, mark it speculative, and re-evaluate (the wait target is
+    /// restored toward the policy; a hopeless verdict is rescinded when
+    /// the threshold is reachable again). False when the share is not
+    /// eligible (round gone, share not lost, or already buffered).
+    pub fn respeculate(&self, round: u64, share: usize) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let Some(r) = st.rounds.get_mut(&round) else { return false };
+        if r.wait_for == usize::MAX
+            || !r.lost.contains(&share)
+            || r.results.iter().any(|(s, _)| *s == share)
+        {
+            return false;
+        }
+        r.lost.retain(|&s| s != share);
+        r.pending.push(share);
+        if !r.spec_pending.contains(&share) {
+            r.spec_pending.push(share);
+        }
+        r.dispatched += 1;
+        self.reevaluate(r);
+        true
+    }
+
+    /// A still-pending share was duplicated onto an idle worker near the
+    /// deadline (first result wins). False when the share is not pending
+    /// or already duplicated.
+    pub fn respeculate_dup(&self, round: u64, share: usize) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let Some(r) = st.rounds.get_mut(&round) else { return false };
+        if !r.pending.contains(&share) || r.spec_dup.contains(&share) {
+            return false;
+        }
+        r.spec_dup.push(share);
+        r.dispatched += 1;
+        true
+    }
+
+    /// Roll back a [`respeculate`](Self::respeculate) /
+    /// [`respeculate_dup`](Self::respeculate_dup) whose dispatch failed
+    /// (the order never left the master, so no result can race this): a
+    /// duplicate simply forgets its marker; a recovery re-dispatch
+    /// returns the share to the lost set and re-evaluates.
+    pub fn respeculate_failed(&self, round: u64, share: usize) {
+        let mut st = self.state.lock().unwrap();
+        if let Some(r) = st.rounds.get_mut(&round) {
+            if r.results.iter().any(|(s, _)| *s == share) {
+                return;
+            }
+            if r.spec_dup.contains(&share) {
+                r.spec_dup.retain(|&s| s != share);
+                r.dispatched = r.dispatched.saturating_sub(1);
+                return;
+            }
+            r.spec_pending.retain(|&s| s != share);
+            if Self::write_off(r, share) {
+                r.dispatched = r.dispatched.saturating_sub(1);
+                self.reevaluate(r);
+            }
+        }
+    }
+
+    /// Deliver one decoded result for a share of `round` with its wire
+    /// cost `(symbols, frame bytes)`: buffered under its in-flight round
     /// (waking waiters when the policy is satisfied), or counted as
-    /// wasted work — spilled (buffer frozen at `wait_for`) or late
-    /// (round gone). Returns true when buffered. A result from a worker
-    /// previously written off (`note_lost`) is still welcome.
+    /// wasted work — a speculation loser (the share is already
+    /// buffered), spilled (buffer frozen at `wait_for`), or late (round
+    /// gone). Returns true when buffered. A result for a share
+    /// previously written off (`note_lost`) is still welcome — first
+    /// copy wins, whichever worker computed it.
     pub fn deliver(
         &self,
         round: u64,
-        worker: usize,
+        share: usize,
         result: Matrix,
         symbols: u64,
         frame_bytes: u64,
     ) -> bool {
         let mut st = self.state.lock().unwrap();
         match st.rounds.get_mut(&round) {
+            Some(r) if r.results.iter().any(|(s, _)| *s == share) => {
+                // A duplicate copy of an already-buffered share: the
+                // losing side of first-result-wins. Deterministic by
+                // construction — both copies carry identical bits, so
+                // which one was "first" never changes the decode input.
+                r.pending.retain(|&p| p != share);
+                r.spec_dup.retain(|&s| s != share);
+                r.spec_pending.retain(|&s| s != share);
+                r.spilled += 1;
+                self.metrics.inc(names::SPEC_WASTED);
+                false
+            }
             Some(r) if r.results.len() >= r.wait_for => {
                 // Policy already satisfied: frozen buffer, wasted work.
-                r.pending.retain(|&p| p != worker);
+                Self::forget_share(r, share);
                 r.spilled += 1;
                 self.metrics.inc(names::RESULTS_LATE);
                 false
             }
             Some(r) => {
-                r.pending.retain(|&p| p != worker);
-                r.results.push((worker, result));
+                let recovered = r.spec_pending.contains(&share);
+                Self::forget_share(r, share);
+                r.results.push((share, result));
                 r.sizes.push((symbols, frame_bytes));
+                if recovered {
+                    self.metrics.inc(names::SPEC_RECOVERED);
+                }
                 if r.results.len() >= r.wait_for {
                     self.cv.notify_all();
                 }
@@ -309,6 +482,14 @@ impl RoundRegistry {
                 false
             }
         }
+    }
+
+    /// Drop `share` from every expectation set of `r`.
+    fn forget_share(r: &mut InflightRound, share: usize) {
+        r.pending.retain(|&p| p != share);
+        r.lost.retain(|&s| s != share);
+        r.spec_pending.retain(|&s| s != share);
+        r.spec_dup.retain(|&s| s != share);
     }
 
     /// One expected-but-unbuffered result landed for a settled round;
@@ -334,13 +515,7 @@ impl RoundRegistry {
             match st.rounds.get(&round) {
                 None => return Err(WaitError::Unknown(round)),
                 Some(r) if r.results.len() >= r.wait_for => {
-                    let done = st.rounds.remove(&round).expect("checked above");
-                    let received = done.results.len() + done.spilled;
-                    let remaining = done.dispatched.saturating_sub(received);
-                    if remaining > 0 {
-                        st.outstanding.insert(round, remaining);
-                    }
-                    return Ok(done);
+                    return Ok(Self::retire(&mut st, round));
                 }
                 Some(r) => {
                     if let Some((possible, need)) = r.hopeless {
@@ -361,6 +536,47 @@ impl RoundRegistry {
             let (guard, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
             st = guard;
         }
+    }
+
+    /// Block until `round` completes or `until` passes — the
+    /// speculation checkpoint. Unlike [`wait_done`](Self::wait_done),
+    /// reaching `until` (or a hopeless verdict) abandons *nothing*: the
+    /// caller gets the still-outstanding shares back and decides what to
+    /// re-dispatch before settling in for the hard deadline.
+    pub fn wait_soft(&self, round: u64, until: Instant) -> SoftWait {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            match st.rounds.get(&round) {
+                None => return SoftWait::Gone,
+                Some(r) if r.results.len() >= r.wait_for => {
+                    return SoftWait::Done(Self::retire(&mut st, round));
+                }
+                Some(r) if r.hopeless.is_some() => {
+                    return SoftWait::Blocked { pending: r.pending.clone(), hopeless: true };
+                }
+                Some(_) => {}
+            }
+            let now = Instant::now();
+            if now >= until {
+                let pending =
+                    st.rounds.get(&round).map(|r| r.pending.clone()).unwrap_or_default();
+                return SoftWait::Blocked { pending, hopeless: false };
+            }
+            let (guard, _) = self.cv.wait_timeout(st, until - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Remove a satisfied round, parking its never-arrived remainder in
+    /// the late-arrival accounting.
+    fn retire(st: &mut State, round: u64) -> InflightRound {
+        let done = st.rounds.remove(&round).expect("caller checked the round is satisfied");
+        let received = done.results.len() + done.spilled;
+        let remaining = done.dispatched.saturating_sub(received);
+        if remaining > 0 {
+            st.outstanding.insert(round, remaining);
+        }
+        done
     }
 
     /// Abandon a round (explicit `abandon`, or a dropped handle):
@@ -647,6 +863,233 @@ mod tests {
         assert!(!reg.deliver(40, 1, Matrix::ones(1, 1), 1, 64));
         assert!(!reg.deliver(40, 2, Matrix::ones(1, 1), 1, 64));
         assert_eq!(metrics.get(names::RESULTS_LATE), 3);
+    }
+
+    // ---- speculation ----------------------------------------------------
+
+    #[test]
+    fn respeculate_restores_the_wait_target_and_counts_recovery() {
+        let (reg, metrics) = registry();
+        open_flexible(&reg, 60, 1);
+        reg.finalize(60, 4, 1, &sent(4));
+        reg.deliver(60, 0, Matrix::ones(1, 1), 1, 64);
+        reg.note_lost(60, 3); // degrade 4 → 3
+        assert_eq!(reg.speculation_candidates(), vec![(60, vec![3])]);
+        assert!(reg.respeculate(60, 3), "a lost share is eligible");
+        assert!(!reg.respeculate(60, 3), "already back in pending");
+        assert!(reg.speculation_candidates().is_empty());
+        for w in [1, 2, 3] {
+            reg.deliver(60, w, Matrix::ones(1, 1), 1, 64);
+        }
+        let done = reg.wait_done(60, Instant::now()).unwrap();
+        assert_eq!(done.results.len(), 4, "the wait target was restored to the policy");
+        assert!(!done.degraded, "a fully recovered round is not degraded");
+        assert_eq!(metrics.get(names::SPEC_RECOVERED), 1);
+        // The degradation was still observed while it lasted.
+        assert_eq!(metrics.get(names::ROUNDS_DEGRADED), 1);
+    }
+
+    #[test]
+    fn respeculate_rescinds_a_hopeless_verdict() {
+        let (reg, _) = registry();
+        reg.register(61, ctx(), Threshold::Exact(3), Instant::now());
+        reg.finalize(61, 3, 3, &sent(3));
+        reg.deliver(61, 0, Matrix::ones(1, 1), 1, 64);
+        reg.note_worker_down(1); // possible 2 < 3 → hopeless
+        assert!(reg.respeculate(61, 1));
+        // Reachable again: the waiter must block, not fail fast.
+        let reg2 = Arc::clone(&reg);
+        let j = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            reg2.deliver(61, 1, Matrix::ones(1, 1), 1, 64);
+            reg2.deliver(61, 2, Matrix::ones(1, 1), 1, 64);
+        });
+        let done = reg.wait_done(61, Instant::now() + Duration::from_secs(5)).unwrap();
+        assert_eq!(done.results.len(), 3);
+        j.join().unwrap();
+    }
+
+    #[test]
+    fn duplicate_results_lose_first_result_wins() {
+        let (reg, metrics) = registry();
+        open_flexible(&reg, 62, 1);
+        reg.finalize(62, 3, 1, &sent(3));
+        assert!(reg.respeculate_dup(62, 2), "a pending share can be duplicated");
+        assert!(!reg.respeculate_dup(62, 2), "but only once");
+        assert!(reg.deliver(62, 2, Matrix::ones(1, 1), 1, 64), "first copy buffers");
+        assert!(!reg.deliver(62, 2, Matrix::ones(1, 1), 1, 64), "second copy is discarded");
+        assert_eq!(metrics.get(names::SPEC_WASTED), 1);
+        reg.deliver(62, 0, Matrix::ones(1, 1), 1, 64);
+        reg.deliver(62, 1, Matrix::ones(1, 1), 1, 64);
+        let done = reg.wait_done(62, Instant::now()).unwrap();
+        assert_eq!(done.results.len(), 3, "the duplicate never inflates the decode input");
+        assert_eq!(done.dispatched, 4, "the duplicate order is accounted for");
+    }
+
+    #[test]
+    fn failed_speculative_dispatch_rolls_back() {
+        let (reg, _) = registry();
+        open_flexible(&reg, 63, 1);
+        reg.finalize(63, 3, 1, &sent(3));
+        reg.note_lost(63, 1);
+        assert!(reg.respeculate(63, 1));
+        reg.respeculate_failed(63, 1);
+        assert_eq!(reg.speculation_candidates(), vec![(63, vec![1])], "share is lost again");
+        // Dup rollback keeps the share pending.
+        assert!(reg.respeculate_dup(63, 2));
+        reg.respeculate_failed(63, 2);
+        assert_eq!(reg.pending_shares(63), vec![0, 2]);
+        assert!(reg.respeculate_dup(63, 2), "the dup marker was cleared");
+    }
+
+    // ---- adversarial interleavings (property tests) ---------------------
+
+    /// One seeded adversarial event applied to a registry.
+    #[derive(Clone, Copy, Debug)]
+    enum Ev {
+        Deliver(usize),
+        Duplicate(usize),
+        Lost(usize),
+        WorkerDown(usize),
+        Respeculate(usize),
+        StaleDeliver(u64, usize),
+    }
+
+    /// Draw a seeded event script over `n` shares.
+    fn script(g: &mut crate::prop::Gen, n: usize, len: usize) -> Vec<Ev> {
+        (0..len)
+            .map(|_| {
+                let share = g.usize_in(0..n);
+                match g.usize_in(0..8) {
+                    0 | 1 | 2 => Ev::Deliver(share),
+                    3 => Ev::Duplicate(share),
+                    4 => Ev::Lost(share),
+                    5 => Ev::WorkerDown(share),
+                    6 => Ev::Respeculate(share),
+                    _ => Ev::StaleDeliver(g.u64() | 1 << 40, share),
+                }
+            })
+            .collect()
+    }
+
+    /// Apply a script and return the observable outcome fingerprint.
+    fn apply(reg: &RoundRegistry, round: u64, evs: &[Ev]) -> (usize, Vec<usize>) {
+        for &ev in evs {
+            match ev {
+                Ev::Deliver(s) => {
+                    reg.deliver(round, s, Matrix::ones(1, 1), 1, 64);
+                }
+                Ev::Duplicate(s) => {
+                    reg.respeculate_dup(round, s);
+                    reg.deliver(round, s, Matrix::ones(1, 1), 1, 64);
+                }
+                Ev::Lost(s) => reg.note_lost(round, s),
+                Ev::WorkerDown(s) => reg.note_worker_down(s),
+                Ev::Respeculate(s) => {
+                    reg.respeculate(round, s);
+                }
+                Ev::StaleDeliver(r, s) => {
+                    reg.deliver(r, s, Matrix::ones(1, 1), 1, 64);
+                }
+            }
+        }
+        match reg.wait_done(round, Instant::now()) {
+            Ok(done) => {
+                let mut used: Vec<usize> = done.results.iter().map(|(s, _)| *s).collect();
+                let mut dedup = used.clone();
+                dedup.sort_unstable();
+                dedup.dedup();
+                assert_eq!(dedup.len(), used.len(), "duplicate share in the decode input");
+                used.sort_unstable();
+                (done.results.len(), used)
+            }
+            Err(_) => (usize::MAX, Vec::new()),
+        }
+    }
+
+    #[test]
+    fn prop_interleavings_are_deterministic_and_leak_free() {
+        use crate::prop::{forall, prop_assert};
+        forall(120, 0x5EED_1, |g| {
+            let n = g.usize_in(2..9);
+            let wait_for = g.usize_in(1..n + 1);
+            let min = g.usize_in(1..wait_for + 1);
+            let evs = script(g, n, g.usize_in(1..24));
+            let round = 7u64;
+            // The same script against two fresh registries must land the
+            // same `results_used` and the same share set — arrival-order
+            // determinism is exactly what the digest pins.
+            let (reg_a, _) = registry();
+            open_flexible(&reg_a, round, min);
+            reg_a.finalize(round, wait_for, min, &sent(n));
+            let a = apply(&reg_a, round, &evs);
+            let (reg_b, _) = registry();
+            open_flexible(&reg_b, round, min);
+            reg_b.finalize(round, wait_for, min, &sent(n));
+            let b = apply(&reg_b, round, &evs);
+            prop_assert(a == b, format!("outcome diverged: {a:?} vs {b:?} over {evs:?}"))?;
+            // Post-retirement, nothing leaks: the round is gone (success
+            // or not — a failed immediate wait abandons in place) and
+            // late deliveries settle through the stale path.
+            prop_assert(!reg_a.is_inflight(round), "round leaked past retirement")?;
+            prop_assert(
+                reg_a.pending_shares(round).is_empty(),
+                "pending set leaked past retirement",
+            )?;
+            prop_assert(
+                !reg_a.deliver(round, 0, Matrix::ones(1, 1), 1, 64),
+                "a retired round buffered a late result",
+            )?;
+            prop_assert(
+                reg_a.speculation_candidates().is_empty(),
+                "lost set leaked past retirement",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_worker_down_racing_wait_never_wedges_or_double_counts() {
+        use crate::prop::{forall, prop_assert};
+        forall(40, 0x5EED_2, |g| {
+            let n = g.usize_in(3..8);
+            let round = 9u64;
+            let (reg, _) = registry();
+            open_flexible(&reg, round, 1);
+            reg.finalize(round, n, 1, &sent(n));
+            // One thread delivers results and kills a seeded subset of
+            // workers in a seeded order while the main thread waits.
+            let dead: Vec<usize> = g.subset(n, g.usize_in(1..n));
+            let mut order: Vec<usize> = (0..n).collect();
+            g.rng().shuffle(&mut order);
+            let reg2 = Arc::clone(&reg);
+            let dead2 = dead.clone();
+            let j = std::thread::spawn(move || {
+                for s in order {
+                    if dead2.contains(&s) {
+                        reg2.note_worker_down(s);
+                    } else {
+                        reg2.deliver(round, s, Matrix::ones(1, 1), 1, 64);
+                    }
+                }
+            });
+            let res = reg.wait_done(round, Instant::now() + Duration::from_secs(10));
+            j.join().unwrap();
+            // Every live worker's result is in; the dead are written off
+            // — degraded decode, never a deadlock, never a duplicate.
+            let done = match res {
+                Ok(done) => done,
+                Err(e) => return Err(format!("wait failed: {e:?}")),
+            };
+            prop_assert(
+                done.results.len() == n - dead.len(),
+                format!("used {} of n={n} with {} dead", done.results.len(), dead.len()),
+            )?;
+            prop_assert(!reg.is_inflight(round), "round leaked")?;
+            prop_assert(
+                done.results.iter().all(|(s, _)| !dead.contains(s)),
+                "a dead worker's share was counted",
+            )
+        });
     }
 
     #[test]

@@ -1,0 +1,246 @@
+//! Windowed round streams — DESIGN.md §8.
+//!
+//! [`Master::submit`]/[`Master::wait`] already let rounds overlap;
+//! [`Master::run_stream`] turns that into a policy: keep up to
+//! `inflight` rounds in flight at once, waiting on the oldest round
+//! (FIFO) whenever the window is full. The window hides the master's
+//! per-round encode/seal/decode work behind the workers' compute — at
+//! `inflight = 1` the stream degenerates to the synchronous
+//! [`Master::run`] loop, and wider windows raise round throughput until
+//! the slower of the master and the worker fabric saturates (the
+//! `stream` scenario's CI gate pins the ratio).
+//!
+//! **Determinism across window widths.** For a fixed seed and task
+//! list, every round's outcome — decoded bits, results used, degraded
+//! flag — is identical at any `inflight`, on either transport, at any
+//! thread-pool width. That holds because (a) tasks are submitted in
+//! list order, so the master's per-round RNG draws never move; (b) each
+//! worker serves its link FIFO, so round r's share is computed from the
+//! same bytes whenever it is queued; (c) lifecycle events are booked at
+//! submit time in round order, so the dispatch set for round r is a
+//! function of r, not of how far ahead the submitter runs (graceful
+//! relinks keep old incarnations draining — see
+//! `transport::Tcp::relink`); and (d) speculative re-dispatch is keyed
+//! on written-off shares, which are booked the same way. The scenario
+//! digest pins all of this in CI across `inflight ∈ {1, 4, 16}`.
+
+use super::master::{Master, RoundOutcome};
+use crate::coding::CodedTask;
+use crate::config::SystemConfig;
+use crate::metrics::names;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Streaming knobs (config keys `inflight` / `speculate`, CLI
+/// `--inflight` / `--speculate`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct StreamConfig {
+    /// Maximum rounds in flight at once (≥ 1; 1 = synchronous).
+    pub inflight: usize,
+    /// Re-dispatch outstanding shares to other workers (lost shares
+    /// immediately, live-but-slow shares at the deadline checkpoint).
+    pub speculate: bool,
+}
+
+impl StreamConfig {
+    /// The stream knobs a config asks for.
+    pub fn from_config(cfg: &SystemConfig) -> Self {
+        Self { inflight: cfg.inflight.max(1), speculate: cfg.speculate }
+    }
+}
+
+/// One round of a stream, in task-list order.
+#[derive(Debug)]
+pub struct StreamRound {
+    /// Position in the submitted task list (0-based).
+    pub index: usize,
+    /// The master's round id (0 when the submit itself failed before an
+    /// id was exposed).
+    pub round: u64,
+    /// The round's fate: a decoded outcome, or the typed error `wait`
+    /// (or `submit`) produced. One round failing never aborts the
+    /// stream — later rounds keep flowing.
+    pub outcome: anyhow::Result<RoundOutcome>,
+}
+
+/// What a whole stream did.
+#[derive(Debug)]
+pub struct StreamOutcome {
+    /// Per-round results, ordered by task-list position.
+    pub rounds: Vec<StreamRound>,
+    /// Wall-clock for the whole stream (first submit → last wait).
+    pub wall: Duration,
+    /// Round throughput over the stream (rounds / `wall`).
+    pub rounds_per_s: f64,
+    /// Speculative work orders sent during the stream.
+    pub redispatched: u64,
+    /// Written-off shares recovered by speculation during the stream.
+    pub recovered: u64,
+    /// Duplicate share copies discarded (speculation losers) during the
+    /// stream.
+    pub wasted: u64,
+}
+
+impl StreamOutcome {
+    /// How many rounds decoded successfully.
+    pub fn decoded(&self) -> usize {
+        self.rounds.iter().filter(|r| r.outcome.is_ok()).count()
+    }
+}
+
+impl Master {
+    /// Drive `tasks` through the coordinator as a windowed stream: up to
+    /// `sc.inflight` rounds in flight, FIFO waits, speculation per
+    /// `sc.speculate` (restored to the config's setting afterwards).
+    /// Individual round failures are captured per round, not returned —
+    /// the stream always runs to the end of the task list.
+    pub fn run_stream(
+        &mut self,
+        tasks: Vec<CodedTask>,
+        sc: StreamConfig,
+    ) -> anyhow::Result<StreamOutcome> {
+        anyhow::ensure!(sc.inflight >= 1, "stream window must be ≥ 1, got {}", sc.inflight);
+        let prev_speculation = self.speculation();
+        self.set_speculation(sc.speculate);
+        let spec0 = (
+            self.metrics().get(names::SPEC_REDISPATCHED),
+            self.metrics().get(names::SPEC_RECOVERED),
+            self.metrics().get(names::SPEC_WASTED),
+        );
+        let started = Instant::now();
+        let total = tasks.len();
+        let mut rounds: Vec<StreamRound> = Vec::with_capacity(total);
+        let mut window: VecDeque<(usize, super::RoundHandle)> =
+            VecDeque::with_capacity(sc.inflight);
+        for (index, task) in tasks.into_iter().enumerate() {
+            while window.len() >= sc.inflight {
+                let (index, handle) = window.pop_front().expect("window checked non-empty");
+                let round = handle.round_id();
+                rounds.push(StreamRound { index, round, outcome: self.wait(handle) });
+            }
+            match self.submit(task) {
+                Ok(handle) => window.push_back((index, handle)),
+                Err(e) => rounds.push(StreamRound { index, round: 0, outcome: Err(e) }),
+            }
+        }
+        while let Some((index, handle)) = window.pop_front() {
+            let round = handle.round_id();
+            rounds.push(StreamRound { index, round, outcome: self.wait(handle) });
+        }
+        self.set_speculation(prev_speculation);
+        // Failed submits are recorded out of turn (ahead of older rounds
+        // still in the window); present everything in task order.
+        rounds.sort_by_key(|r| r.index);
+        let wall = started.elapsed();
+        Ok(StreamOutcome {
+            rounds,
+            wall,
+            rounds_per_s: if wall.as_secs_f64() > 0.0 {
+                total as f64 / wall.as_secs_f64()
+            } else {
+                0.0
+            },
+            redispatched: self.metrics().get(names::SPEC_REDISPATCHED) - spec0.0,
+            recovered: self.metrics().get(names::SPEC_RECOVERED) - spec0.1,
+            wasted: self.metrics().get(names::SPEC_WASTED) - spec0.2,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchemeKind;
+    use crate::matrix::{matmul, split_rows, Matrix};
+    use crate::rng::rng_from_seed;
+    use crate::runtime::WorkerOp;
+    use std::sync::Arc;
+
+    fn cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.workers = 10;
+        cfg.partitions = 3;
+        cfg.colluders = 2;
+        cfg.stragglers = 2;
+        cfg.scheme = SchemeKind::Spacdc;
+        cfg.delay.base_service_s = 0.0;
+        cfg
+    }
+
+    fn tasks(n: usize, seed: u64) -> (Vec<CodedTask>, Vec<Matrix>, Arc<Matrix>) {
+        let mut rng = rng_from_seed(seed);
+        let v = Arc::new(Matrix::random_gaussian(6, 4, 0.0, 1.0, &mut rng));
+        let xs: Vec<Matrix> =
+            (0..n).map(|_| Matrix::random_gaussian(12, 6, 0.0, 1.0, &mut rng)).collect();
+        let ts = xs
+            .iter()
+            .map(|x| CodedTask::block_map(WorkerOp::RightMul(Arc::clone(&v)), x.clone()))
+            .collect();
+        (ts, xs, v)
+    }
+
+    #[test]
+    fn stream_decodes_every_round_in_task_order() {
+        let mut master = Master::from_config(cfg()).unwrap();
+        let (ts, xs, v) = tasks(6, 11);
+        let out = master
+            .run_stream(ts, StreamConfig { inflight: 3, speculate: false })
+            .unwrap();
+        assert_eq!(out.rounds.len(), 6);
+        assert_eq!(out.decoded(), 6);
+        for (i, r) in out.rounds.iter().enumerate() {
+            assert_eq!(r.index, i);
+            assert_eq!(r.round, i as u64 + 1, "FIFO submits number the rounds in order");
+            let decoded = r.outcome.as_ref().unwrap();
+            let (blocks, _) = split_rows(&xs[i], 3);
+            for (d, b) in decoded.blocks.iter().zip(&blocks) {
+                assert!(d.rel_error(&matmul(b, &v)) < 0.5);
+            }
+        }
+        assert!(out.rounds_per_s > 0.0);
+        assert_eq!(out.redispatched, 0, "no speculation requested");
+    }
+
+    #[test]
+    fn window_of_one_matches_the_synchronous_loop_bitwise() {
+        let (ts, _, _) = tasks(4, 22);
+        let mut synchronous = Master::from_config(cfg()).unwrap();
+        let mut blocks_sync = Vec::new();
+        for t in ts {
+            blocks_sync.push(synchronous.run(t).unwrap().blocks);
+        }
+        let (ts, _, _) = tasks(4, 22);
+        let mut streamed = Master::from_config(cfg()).unwrap();
+        let out = streamed
+            .run_stream(ts, StreamConfig { inflight: 1, speculate: false })
+            .unwrap();
+        for (sync, stream) in blocks_sync.iter().zip(&out.rounds) {
+            let stream = &stream.outcome.as_ref().unwrap().blocks;
+            assert_eq!(sync.len(), stream.len());
+            for (a, b) in sync.iter().zip(stream) {
+                assert_eq!(a, b, "inflight=1 must be bit-identical to run()");
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_window_is_capped_by_the_task_list() {
+        let mut master = Master::from_config(cfg()).unwrap();
+        let (ts, _, _) = tasks(3, 33);
+        let out = master
+            .run_stream(ts, StreamConfig { inflight: 16, speculate: false })
+            .unwrap();
+        assert_eq!(out.decoded(), 3, "window wider than the stream is fine");
+    }
+
+    #[test]
+    fn stream_config_comes_from_the_system_config() {
+        let mut c = cfg();
+        c.inflight = 8;
+        c.speculate = true;
+        assert_eq!(
+            StreamConfig::from_config(&c),
+            StreamConfig { inflight: 8, speculate: true }
+        );
+    }
+}

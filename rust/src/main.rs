@@ -25,7 +25,7 @@ use spacdc::dl::{train, TrainerOptions};
 use spacdc::matrix::{gram, split_rows, Matrix};
 use spacdc::rng::rng_from_seed;
 use spacdc::runtime::{Executor, RuntimeService, WorkerOp};
-use spacdc::sim::{run_scenario, Scenario};
+use spacdc::sim::{run_scenario_with, Scenario};
 use std::path::Path;
 use std::sync::Arc;
 
@@ -42,6 +42,8 @@ fn specs() -> Vec<ArgSpec> {
         ArgSpec::opt("security", "mea-ecc", "payload sealing: plain|mea-ecc"),
         ArgSpec::opt("round-deadline-s", "60", "per-round result-collection deadline (s)"),
         ArgSpec::opt("threads", "auto", "master-side thread-pool width (auto = one per core)"),
+        ArgSpec::opt("inflight", "", "round-stream window: rounds kept in flight (≥ 1)"),
+        ArgSpec::opt("speculate", "", "re-dispatch outstanding shares: on|off"),
         ArgSpec::opt("scenario", "", "scenario name or file (scenario subcommand)"),
         ArgSpec::opt("seed", "49374", "experiment seed"),
         ArgSpec::opt("base-service-ms", "0", "injected per-task service time (ms)"),
@@ -89,6 +91,25 @@ fn main() -> anyhow::Result<()> {
             parsed.get_str("threads")
         )
     })?;
+    // `--inflight`/`--speculate` act as overrides: unset, a scenario's
+    // own `[stream]` table wins (and plain runs stay synchronous).
+    let inflight_flag: Option<usize> = match parsed.get("inflight").filter(|s| !s.is_empty()) {
+        None => None,
+        Some(raw) => {
+            let n: usize =
+                raw.parse().map_err(|_| anyhow::anyhow!("--inflight {raw}: not a number"))?;
+            anyhow::ensure!(n >= 1, "--inflight {n}: stream window must be ≥ 1");
+            Some(n)
+        }
+    };
+    let speculate_flag = match parsed.get("speculate").filter(|s| !s.is_empty()) {
+        None => None,
+        Some("on" | "true" | "1" | "yes") => Some(true),
+        Some("off" | "false" | "0" | "no") => Some(false),
+        Some(other) => anyhow::bail!("--speculate {other}: expected on|off"),
+    };
+    cfg.inflight = inflight_flag.unwrap_or(cfg.inflight);
+    cfg.speculate = speculate_flag.unwrap_or(cfg.speculate);
     if let Some(s) = parsed.get("scenario").filter(|s| !s.is_empty()) {
         cfg.scenario = s.to_string();
     }
@@ -101,7 +122,7 @@ fn main() -> anyhow::Result<()> {
         "train" => cmd_train(&cfg),
         "round" => cmd_round(&cfg, parsed.get_usize("rows"), parsed.get_usize("cols")),
         "sweep" => cmd_sweep(&cfg),
-        "scenario" => cmd_scenario(&cfg),
+        "scenario" => cmd_scenario(&cfg, inflight_flag, speculate_flag),
         "info" => cmd_info(&cfg),
         other => {
             eprintln!("unknown subcommand {other}");
@@ -214,7 +235,11 @@ fn cmd_sweep(cfg: &SystemConfig) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_scenario(cfg: &SystemConfig) -> anyhow::Result<()> {
+fn cmd_scenario(
+    cfg: &SystemConfig,
+    inflight: Option<usize>,
+    speculate: Option<bool>,
+) -> anyhow::Result<()> {
     if cfg.scenario.is_empty() {
         anyhow::bail!(
             "no scenario selected: pass --scenario <name|file> or set `scenario =` in the \
@@ -223,7 +248,7 @@ fn cmd_scenario(cfg: &SystemConfig) -> anyhow::Result<()> {
         );
     }
     let scenario = Scenario::load(&cfg.scenario)?;
-    let report = run_scenario(&scenario, cfg.transport, cfg.threads)?;
+    let report = run_scenario_with(&scenario, cfg.transport, cfg.threads, inflight, speculate)?;
     print!("{}", report.render_table());
     std::fs::write("SCENARIO_REPORT.json", report.to_json())?;
     println!("wrote SCENARIO_REPORT.json");

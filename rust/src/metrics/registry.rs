@@ -39,6 +39,16 @@ pub mod names {
     /// Rounds whose wait policy was lowered to "decode from what can
     /// still arrive" after mid-round worker loss.
     pub const ROUNDS_DEGRADED: &str = "sched.rounds_degraded";
+    /// Work orders re-sent speculatively (a written-off share re-keyed
+    /// to another worker, or a pending share duplicated near the
+    /// deadline).
+    pub const SPEC_REDISPATCHED: &str = "spec.redispatched";
+    /// Written-off shares whose result arrived after a speculative
+    /// re-dispatch — work the round would otherwise have lost.
+    pub const SPEC_RECOVERED: &str = "spec.recovered";
+    /// Duplicate share copies discarded by first-result-wins (the losing
+    /// side of a speculative race).
+    pub const SPEC_WASTED: &str = "spec.wasted";
     /// Worker crashes the master observed (injected, scheduled, or link
     /// death).
     pub const WORKER_CRASHES: &str = "lifecycle.crashes";

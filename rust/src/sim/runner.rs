@@ -2,24 +2,30 @@
 //! master/worker system for N rounds and produce a machine-readable
 //! [`ScenarioReport`] (the `SCENARIO_REPORT.json` artifact CI uploads).
 //!
-//! Per round the runner draws fresh seeded data, submits one
-//! [`CodedTask`] through [`Master`](crate::coordinator::Master), and
-//! records the outcome — results used, degradation, decode error vs the
-//! exact result, wall-clock. Crashes, respawns, and wire corruption all
-//! happen *inside* the coordinator, driven by the scenario's
+//! The runner pre-draws every round's seeded data, then drives the
+//! whole task list through
+//! [`Master::run_stream`](crate::coordinator::Master::run_stream) — the
+//! scenario's `[stream]` table (or an execution-knob override) sets the
+//! in-flight window and speculation — and records each round's outcome:
+//! results used, degradation, decode error vs the exact result,
+//! wall-clock. Crashes, respawns, and wire corruption all happen
+//! *inside* the coordinator, driven by the scenario's
 //! [`FaultPlan`](crate::sim::FaultPlan); the runner only observes.
 //!
 //! **The digest.** CI pins one hex digest per scenario across the whole
-//! `{inproc, tcp} × {threads 1, 8}` execution matrix. It folds exactly
-//! the fields the determinism contract covers — per-round status,
-//! results-used counts, degradation flags, every decoded f32 bit, and
-//! the transport byte totals credited at dispatch/decode time — and
-//! deliberately excludes anything wall-clock-shaped (latencies, late
-//! straggler counts, wire-error tallies that race the soak's end).
+//! `{inproc, tcp} × {threads 1, 8} × inflight {1, 4, 16}` execution
+//! matrix. It folds exactly the fields the determinism contract covers
+//! — per-round status, results-used counts, degradation flags, every
+//! decoded f32 bit, the transport byte totals credited at
+//! dispatch/decode time, and the speculation-recovered share count
+//! (schedule-driven, hence deterministic) — and deliberately excludes
+//! anything wall-clock-shaped (latencies, throughput, late straggler
+//! counts, speculation *losers*, wire-error tallies that race the
+//! soak's end).
 
 use crate::coding::CodedTask;
 use crate::config::{SystemConfig, TransportKind};
-use crate::coordinator::{MasterBuilder, RoundError};
+use crate::coordinator::{MasterBuilder, RoundError, StreamConfig};
 use crate::matrix::{gram, split_rows, Matrix};
 use crate::metrics::{names, MetricsRegistry};
 use crate::rng::{derive_seed, rng_from_seed};
@@ -94,6 +100,10 @@ pub struct ScenarioReport {
     pub transport: String,
     /// Execution knob: master-side pool width (0 = auto).
     pub threads: usize,
+    /// Execution knob: rounds kept in flight (the stream window).
+    pub inflight: usize,
+    /// Was speculative re-dispatch on?
+    pub speculate: bool,
     /// Scenario seed.
     pub seed: u64,
     /// Cluster size N.
@@ -140,6 +150,18 @@ pub struct ScenarioReport {
     pub degraded_rounds: u64,
     /// Final incarnation number per worker.
     pub final_generations: Vec<u32>,
+    /// Round throughput over the whole stream (not in the digest —
+    /// wall-clock-shaped; this is the number the window is for).
+    pub rounds_per_s: f64,
+    /// Speculative work orders sent (not in the digest: the deadline
+    /// checkpoint fires on wall-clock).
+    pub spec_redispatched: u64,
+    /// Written-off shares recovered by speculation — schedule-driven,
+    /// so it *is* folded into the digest.
+    pub spec_recovered: u64,
+    /// Duplicate share copies discarded, first-result-wins losers (not
+    /// in the digest: which copy lost is a race).
+    pub spec_wasted: u64,
 }
 
 /// FNV-1a, 64-bit: tiny, dependency-free, good enough to pin a CI
@@ -167,7 +189,9 @@ impl Fnv64 {
     }
 }
 
-/// Drive `sc` through the live system on the given execution knobs.
+/// Drive `sc` through the live system on the default execution knobs
+/// for its `[stream]` table (window and speculation as the scenario
+/// asks).
 ///
 /// `transport` and `threads` may change wall-clock but must not change
 /// the digest — that is the determinism contract CI enforces.
@@ -175,6 +199,20 @@ pub fn run_scenario(
     sc: &Scenario,
     transport: TransportKind,
     threads: usize,
+) -> anyhow::Result<ScenarioReport> {
+    run_scenario_with(sc, transport, threads, None, None)
+}
+
+/// [`run_scenario`] with explicit stream-knob overrides: CI soaks the
+/// same scenario over `inflight ∈ {1, 4, 16}` and pins one digest —
+/// the window is an execution knob like the transport, never part of
+/// the outcome.
+pub fn run_scenario_with(
+    sc: &Scenario,
+    transport: TransportKind,
+    threads: usize,
+    inflight: Option<usize>,
+    speculate: Option<bool>,
 ) -> anyhow::Result<ScenarioReport> {
     sc.validate().map_err(|e| anyhow::anyhow!("invalid scenario {:?}: {e}", sc.name))?;
     let mut cfg = SystemConfig::default();
@@ -187,6 +225,10 @@ pub fn run_scenario(
     cfg.security = sc.security;
     cfg.round_deadline_s = sc.round_deadline_s;
     cfg.threads = threads;
+    let inflight = inflight.unwrap_or(sc.inflight).max(1);
+    let speculate = speculate.unwrap_or(sc.speculate);
+    cfg.inflight = inflight;
+    cfg.speculate = speculate;
     cfg.delay = sc.delay;
     cfg.seed = sc.seed;
     cfg.use_pjrt = false; // native kernels: deterministic, artifact-free
@@ -208,30 +250,38 @@ pub fn run_scenario(
     let mut master = builder.build()?;
 
     let mut digest = Fnv64::new();
-    digest.write(b"scenario-digest-v1");
+    digest.write(b"scenario-digest-v2");
     digest.write(sc.name.as_bytes());
     digest.u64(sc.seed);
     digest.u64(sc.rounds);
     digest.u64(sc.workers as u64);
 
-    let mut records = Vec::with_capacity(sc.rounds as usize);
-    // Per-round plaintext blocks, kept for the decode-error and
+    // Pre-draw every round's data (each round's stream is derived
+    // independently from the scenario seed, so pre-drawing changes no
+    // bits) and keep the plaintext blocks for the decode-error and
     // eavesdropper-leak analyses.
+    let worker_op = match sc.op {
+        ScenarioOp::Gram => WorkerOp::Gram,
+        ScenarioOp::Identity => WorkerOp::Identity,
+    };
+    let mut tasks = Vec::with_capacity(sc.rounds as usize);
     let mut round_blocks: Vec<Vec<Matrix>> = Vec::with_capacity(sc.rounds as usize);
     for r in 1..=sc.rounds {
         let mut data_rng = rng_from_seed(derive_seed(sc.seed, 0xDA7A_0000 + r));
         let x = Matrix::random_gaussian(sc.rows, sc.cols, 0.0, 1.0, &mut data_rng);
         let (blocks, _) = split_rows(&x, sc.partitions);
-        let worker_op = match sc.op {
-            ScenarioOp::Gram => WorkerOp::Gram,
-            ScenarioOp::Identity => WorkerOp::Identity,
-        };
-        let task = CodedTask::block_map(worker_op, x);
-        let outcome = match master.submit(task) {
-            Ok(handle) => master.wait(handle),
-            Err(e) => Err(e),
-        };
-        let record = match outcome {
+        tasks.push(CodedTask::block_map(worker_op.clone(), x));
+        round_blocks.push(blocks);
+    }
+
+    // The whole soak is one windowed stream (inflight = 1 degenerates
+    // to the old submit/wait-per-round loop, bit for bit).
+    let stream = master.run_stream(tasks, StreamConfig { inflight, speculate })?;
+
+    let mut records = Vec::with_capacity(sc.rounds as usize);
+    for sr in &stream.rounds {
+        let r = sr.index as u64 + 1;
+        let record = match &sr.outcome {
             Ok(out) => {
                 let exact = |b: &Matrix| match sc.op {
                     ScenarioOp::Gram => gram(b),
@@ -240,7 +290,7 @@ pub fn run_scenario(
                 let rel_err = out
                     .blocks
                     .iter()
-                    .zip(&blocks)
+                    .zip(&round_blocks[sr.index])
                     .map(|(d, b)| d.rel_error(&exact(b)))
                     .fold(0.0f64, f64::max);
                 digest.u64(r);
@@ -283,15 +333,18 @@ pub fn run_scenario(
             }
         };
         records.push(record);
-        round_blocks.push(blocks);
     }
 
     // Transport totals are deterministic (credited synchronously at
-    // dispatch and decode), so they belong in the digest.
+    // dispatch and decode), so they belong in the digest — and so does
+    // the recovered-share count, which is driven by the fault schedule,
+    // not the clock. Redispatch/wasted tallies race the deadline
+    // checkpoint and stay out.
     let bytes_tx = metrics.get(names::BYTES_TX);
     let bytes_rx = metrics.get(names::BYTES_RX);
     digest.u64(bytes_tx);
     digest.u64(bytes_rx);
+    digest.u64(stream.recovered);
 
     // Eavesdropper analysis: for each charted downlink payload, the best
     // |correlation| against any plaintext block of its round.
@@ -319,6 +372,8 @@ pub fn run_scenario(
         op: sc.op.name().to_string(),
         transport: transport.name().to_string(),
         threads,
+        inflight,
+        speculate,
         seed: sc.seed,
         workers: sc.workers,
         rounds: sc.rounds,
@@ -339,6 +394,10 @@ pub fn run_scenario(
         respawns: metrics.get(names::WORKER_RESPAWNS),
         degraded_rounds,
         final_generations: master.worker_generations(),
+        rounds_per_s: stream.rounds_per_s,
+        spec_redispatched: stream.redispatched,
+        spec_recovered: stream.recovered,
+        spec_wasted: stream.wasted,
         records,
     })
 }
@@ -374,10 +433,12 @@ impl ScenarioReport {
         let generations: Vec<String> =
             self.final_generations.iter().map(|g| g.to_string()).collect();
         format!(
-            "{{\n  \"schema\": \"scenario-report-v1\",\n  \"scenario\": \"{}\",\n  \
+            "{{\n  \"schema\": \"scenario-report-v2\",\n  \"scenario\": \"{}\",\n  \
              \"scheme\": \"{}\",\n  \"op\": \"{}\",\n  \"transport\": \"{}\",\n  \
              \"threads\": {},\n  \"seed\": {},\n  \"workers\": {},\n  \"rounds\": {},\n  \
              \"digest\": \"{}\",\n  \"recovery_hit_rate\": {:.4},\n  \
+             \"stream\": {{\"inflight\": {}, \"speculate\": {}, \"rounds_per_s\": {:.3}}},\n  \
+             \"speculation\": {{\"redispatched\": {}, \"recovered\": {}, \"wasted\": {}}},\n  \
              \"wall_ms\": {{\"mean\": {:.3}, \"p50\": {:.3}, \"p99\": {:.3}, \"max\": {:.3}}},\n  \
              \"comm\": {{\"bytes_tx\": {}, \"bytes_rx\": {}, \"wire_errors\": {}, \
              \"results_late\": {}}},\n  \
@@ -396,6 +457,12 @@ impl ScenarioReport {
             self.rounds,
             self.digest,
             self.recovery_hit_rate,
+            self.inflight,
+            self.speculate,
+            self.rounds_per_s,
+            self.spec_redispatched,
+            self.spec_recovered,
+            self.spec_wasted,
             self.wall_mean_ms,
             self.wall_p50_ms,
             self.wall_p99_ms,
@@ -419,8 +486,15 @@ impl ScenarioReport {
     pub fn render_table(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "scenario {} · scheme {} · transport {} · threads {} · seed {}\n",
-            self.scenario, self.scheme, self.transport, self.threads, self.seed
+            "scenario {} · scheme {} · transport {} · threads {} · inflight {} · \
+             speculate {} · seed {}\n",
+            self.scenario,
+            self.scheme,
+            self.transport,
+            self.threads,
+            self.inflight,
+            self.speculate,
+            self.seed
         ));
         out.push_str(&format!(
             "{:>5}  {:<13} {:>7} {:>9} {:>10} {:>9}\n",
@@ -449,6 +523,10 @@ impl ScenarioReport {
             self.bytes_rx,
             self.wire_errors,
             self.downlink_leak,
+        ));
+        out.push_str(&format!(
+            "stream: {:.2} rounds/s · speculation redispatched {} / recovered {} / wasted {}\n",
+            self.rounds_per_s, self.spec_redispatched, self.spec_recovered, self.spec_wasted,
         ));
         out.push_str(&format!("digest: {}\n", self.digest));
         out

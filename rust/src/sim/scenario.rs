@@ -112,6 +112,13 @@ pub struct Scenario {
     /// Probability that a worker's result frame is corrupted on the
     /// wire (drawn deterministically per (worker, round) from `seed`).
     pub corrupt_rate: f64,
+    /// Round-stream window the soak drives (`[stream] inflight`; ≥ 1,
+    /// 1 = synchronous). An execution knob may override it — the digest
+    /// must not move when it does (DESIGN.md §8).
+    pub inflight: usize,
+    /// Speculative re-dispatch of outstanding shares (`[stream]
+    /// speculate`).
+    pub speculate: bool,
 }
 
 impl Scenario {
@@ -135,6 +142,8 @@ impl Scenario {
             colluder_set: Vec::new(),
             crashes: Vec::new(),
             corrupt_rate: 0.0,
+            inflight: 1,
+            speculate: false,
         }
     }
 
@@ -176,13 +185,46 @@ impl Scenario {
                 sc.delay.straggler_factor = 250.0;
                 Some(sc)
             }
+            // The round-stream soak: a 16-wide in-flight window over a
+            // worker fabric whose service delay dominates the master's
+            // per-round work (so windowing visibly raises throughput),
+            // two mid-stream crash/respawn cycles, and speculation on —
+            // the crashed workers' shares are re-dispatched and
+            // recovered instead of degrading their rounds. No
+            // stragglers and no wire corruption: the decode set must be
+            // pinned by the schedule alone, so the digest holds across
+            // `inflight ∈ {1, 4, 16}`, both transports, and any
+            // thread-pool width.
+            "stream" => {
+                let mut sc = Self::base("stream");
+                sc.rounds = 12;
+                sc.rows = 64;
+                sc.cols = 32;
+                sc.seed = 0x5CE3;
+                sc.workers = 8;
+                sc.partitions = 4;
+                sc.colluders = 2;
+                sc.stragglers = 0;
+                sc.delay = DelayConfig {
+                    straggler_factor: 1.0,
+                    base_service_s: 0.004,
+                    jitter: 0.1,
+                };
+                sc.crashes = vec![
+                    CrashEvent { worker: 3, round: 4, respawn_after: Some(3) },
+                    CrashEvent { worker: 6, round: 8, respawn_after: Some(3) },
+                ];
+                sc.inflight = 16;
+                sc.speculate = true;
+                Some(sc)
+            }
             _ => None,
         }
     }
 
     /// Names [`Scenario::builtin`] answers to.
     pub fn builtin_names() -> &'static [&'static str] {
-        &["baseline", "crash-respawn", "colluders-stragglers"]
+        &["baseline", "crash-respawn", "colluders-stragglers", "stream"]
     }
 
     /// Resolve a `--scenario` / `scenario =` token: an explicit file
@@ -269,6 +311,16 @@ impl Scenario {
                         value.split(',').map(|t| t.trim().parse()).collect();
                     sc.colluder_set = ids.map_err(|_| bad(&full, value))?;
                 }
+                "stream.inflight" => {
+                    sc.inflight = value.parse().map_err(|_| bad(&full, value))?
+                }
+                "stream.speculate" => {
+                    sc.speculate = match value {
+                        "true" | "1" | "yes" | "on" => true,
+                        "false" | "0" | "no" | "off" => false,
+                        _ => return Err(bad(&full, value)),
+                    }
+                }
                 _ => return Err(ConfigError::UnknownKey(full)),
             }
         }
@@ -294,6 +346,9 @@ impl Scenario {
         }
         if !(0.0..1.0).contains(&self.corrupt_rate) {
             return Err(format!("corrupt_rate {} outside [0, 1)", self.corrupt_rate));
+        }
+        if self.inflight == 0 {
+            return Err("stream.inflight must be ≥ 1 (1 = synchronous)".into());
         }
         for c in &self.crashes {
             if c.worker >= self.workers {
@@ -431,9 +486,14 @@ crash = "3@4"
 corrupt_rate = 0.25
 [adversary]
 colluder_set = "0, 2"
+[stream]
+inflight = 4
+speculate = "on"
 "#;
         let sc = Scenario::from_str_toml(text).unwrap();
         assert_eq!(sc.name, "t");
+        assert_eq!(sc.inflight, 4);
+        assert!(sc.speculate);
         assert_eq!(sc.rounds, 6);
         assert_eq!(sc.op, ScenarioOp::Identity);
         assert_eq!(sc.scheme, SchemeKind::Bacc);
@@ -463,6 +523,9 @@ colluder_set = "0, 2"
         // A same-round respawn can never fire (respawns are scheduled
         // before dispatch, crashes booked after) — reject it up front.
         assert!(Scenario::from_str_toml("[faults]\ncrash = \"1@2+0\"\n").is_err());
+        // A zero stream window is a contradiction, not "off".
+        assert!(Scenario::from_str_toml("[stream]\ninflight = 0\n").is_err());
+        assert!(Scenario::from_str_toml("[stream]\nspeculate = \"maybe\"\n").is_err());
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! bytes move, the same counters tick — minus the syscalls. This is the
 //! default fabric for tests, benches, and single-machine runs.
 
-use super::{Fabric, Transport, TransportError, WorkerLink};
+use super::{Fabric, LoadBook, Transport, TransportError, WorkerLink};
 use crate::config::TransportKind;
 use crate::metrics::{names, MetricsRegistry};
 use std::sync::mpsc::{self, Sender};
@@ -35,7 +35,7 @@ impl InProc {
             links.push(WorkerLink::InProc { orders: order_rx, results: result_tx.clone() });
         }
         let transport = Box::new(InProc { order_txs, result_tx, metrics });
-        Fabric { transport, inbound, links }
+        Fabric { transport, inbound, links, load: Arc::new(LoadBook::new(n)) }
     }
 }
 

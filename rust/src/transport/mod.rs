@@ -36,6 +36,7 @@ use crate::metrics::MetricsRegistry;
 use crate::wire::{self, WireError};
 use std::io::Write;
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
 
@@ -137,6 +138,68 @@ impl WorkerLink {
     }
 }
 
+/// Per-worker backlog signal riding alongside the fabric: how many work
+/// orders each link is carrying that have not been settled yet. The
+/// master's dispatch paths tick [`note_sent`](LoadBook::note_sent) per
+/// order and [`settle`](LoadBook::settle) the whole batch when the
+/// round retires, so `outstanding(w) == 0` means "worker `w` owes
+/// nothing on its link" — the idle-worker signal the speculative
+/// re-dispatcher keys on. All updates happen on the master thread, so
+/// readings there are deterministic; the counters are atomics only so
+/// the book can be shared with observers on other threads.
+///
+/// Granularity is per *round* (orders are settled when their round
+/// retires, not when each individual result lands): result frames carry
+/// the share id, not the executor id, so per-result settling would need
+/// a wire-format extension — noted as a follow-on in ROADMAP.md.
+#[derive(Debug)]
+pub struct LoadBook {
+    outstanding: Vec<AtomicU64>,
+}
+
+impl LoadBook {
+    /// A book of `n` idle workers.
+    pub fn new(n: usize) -> Self {
+        Self { outstanding: (0..n).map(|_| AtomicU64::new(0)).collect() }
+    }
+
+    /// One order went out to worker `w`.
+    pub fn note_sent(&self, w: usize) {
+        if let Some(c) = self.outstanding.get(w) {
+            c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Settle a retired round's orders: one per entry in `targets`.
+    pub fn settle(&self, targets: &[usize]) {
+        for &w in targets {
+            if let Some(c) = self.outstanding.get(w) {
+                // Saturating: a double-settle must not wrap the signal.
+                let _ = c.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                    Some(v.saturating_sub(1))
+                });
+            }
+        }
+    }
+
+    /// Orders worker `w` is still carrying.
+    pub fn outstanding(&self, w: usize) -> u64 {
+        self.outstanding.get(w).map_or(0, |c| c.load(Ordering::Relaxed))
+    }
+
+    /// Is worker `w` idle (nothing outstanding on its link)?
+    pub fn is_idle(&self, w: usize) -> bool {
+        self.outstanding(w) == 0
+    }
+
+    /// The least-loaded worker among those `eligible`, ties broken by
+    /// the lowest index (deterministic). `None` when nothing is
+    /// eligible.
+    pub fn least_loaded(&self, eligible: impl Iterator<Item = usize>) -> Option<usize> {
+        eligible.map(|w| (self.outstanding(w), w)).min().map(|(_, w)| w)
+    }
+}
+
 /// A fully wired fabric, ready to hand to the worker pool.
 pub struct Fabric {
     /// Master-side sender.
@@ -145,6 +208,8 @@ pub struct Fabric {
     pub inbound: Receiver<Vec<u8>>,
     /// One endpoint per worker, index-aligned.
     pub links: Vec<WorkerLink>,
+    /// Per-worker backlog signal (see [`LoadBook`]).
+    pub load: Arc<LoadBook>,
 }
 
 /// Wire up a fabric of `n` worker links of the given kind.

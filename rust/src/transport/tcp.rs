@@ -14,16 +14,24 @@
 //!
 //! Relink (worker respawn): the listener stays bound for the fabric's
 //! lifetime, so [`Transport::relink`] dials/accepts a fresh connection
-//! pair for the worker, shuts the old master-side socket (killing the
-//! old bridge), swaps the new socket into the send slot, and spawns a
-//! new bridge — the same dial/accept pairing as bring-up.
+//! pair for the worker, swaps the new socket into the send slot, and
+//! spawns a new bridge — the same dial/accept pairing as bring-up. The
+//! old connection is retired *gracefully*: the master-side handle is
+//! dropped (FIN is ordered after any order frames already written, so a
+//! dying incarnation still drains its queue), and the old bridge keeps
+//! reading the old incarnation's in-flight result frames until that
+//! worker closes its end. This mirrors the in-proc fabric, where the
+//! replaced order sender disconnects only after the old receiver drains
+//! — and it is what keeps round outcomes independent of *when* a
+//! scheduled respawn lands relative to older in-flight rounds
+//! (DESIGN.md §8).
 //!
 //! Shutdown: dropping the [`Tcp`] sender shuts both directions of every
 //! master-side socket. Workers see EOF (`WireError::Closed`) and exit;
 //! bridge threads see EOF and exit, dropping their inbound senders,
 //! which disconnects the collector. Drop then joins the bridges.
 
-use super::{Fabric, Transport, TransportError, WorkerLink};
+use super::{Fabric, LoadBook, Transport, TransportError, WorkerLink};
 use crate::config::TransportKind;
 use crate::metrics::{names, MetricsRegistry};
 use crate::wire;
@@ -70,7 +78,7 @@ impl Tcp {
             metrics,
             bridges: Mutex::new(bridges),
         });
-        Ok(Fabric { transport, inbound, links })
+        Ok(Fabric { transport, inbound, links, load: Arc::new(LoadBook::new(n)) })
     }
 
     /// Dial one connection and accept its peer — serial, so the pairing
@@ -139,9 +147,14 @@ impl Transport for Tcp {
             .map_err(|e| TransportError::Setup(e.to_string()))?;
         {
             let mut s = slot.lock().unwrap();
-            // Kill the old connection first: its bridge sees EOF and
-            // exits, and any stale worker endpoint is cut off.
-            let _ = s.shutdown(Shutdown::Both);
+            // Retire the old connection gracefully: dropping the
+            // master-side handle queues a FIN *behind* any order frames
+            // already written, so a dying old incarnation still drains
+            // its queue; its in-flight replies keep flowing through the
+            // old bridge (which holds its own clone of the socket and
+            // exits on the worker-side close). An explicit
+            // Shutdown::Both here would discard both — and make round
+            // outcomes depend on respawn timing.
             *s = master_side;
         }
         self.bridges.lock().unwrap().push(spawn_bridge(w, reader, self.result_tx.clone()));

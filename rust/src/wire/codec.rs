@@ -185,6 +185,40 @@ fn payload_encoded_len(p: &WirePayload) -> usize {
     }
 }
 
+/// Cheap router peek: the message kind of a frame, from the fixed
+/// header alone. `None` when the buffer is too short or carries the
+/// wrong magic — the caller hands such frames to a full decoder, which
+/// produces the typed error and the `comm.wire_errors` tick.
+pub fn peek_kind(buf: &[u8]) -> Option<MsgKind> {
+    use super::frame::{HEADER_LEN, MAGIC};
+    if buf.len() < HEADER_LEN {
+        return None;
+    }
+    if u32::from_le_bytes(buf[0..4].try_into().unwrap()) != MAGIC {
+        return None;
+    }
+    match buf[6] {
+        1 => Some(MsgKind::Order),
+        2 => Some(MsgKind::Result),
+        3 => Some(MsgKind::Control),
+        _ => None,
+    }
+}
+
+/// Cheap router peek: the round id of a *result* frame (the first body
+/// field), without validating or decoding the rest. The collector's
+/// router uses this to shard inbound frames by round; full validation —
+/// CRC included — still happens on the shard thread, so a corrupted
+/// round id merely routes the frame to the wrong shard, where it fails
+/// validation exactly as it would have on the right one.
+pub fn peek_result_round(buf: &[u8]) -> Option<u64> {
+    use super::frame::HEADER_LEN;
+    if peek_kind(buf) != Some(MsgKind::Result) || buf.len() < HEADER_LEN + 8 {
+        return None;
+    }
+    Some(u64::from_le_bytes(buf[HEADER_LEN..HEADER_LEN + 8].try_into().unwrap()))
+}
+
 /// Decode either message kind from a complete frame.
 pub fn decode_message(buf: &[u8]) -> Result<WireMessage, WireError> {
     let (kind, body) = unframe(buf)?;

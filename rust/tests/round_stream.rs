@@ -1,0 +1,256 @@
+//! Round-stream integration tests — the determinism contract for
+//! windowed streams (DESIGN.md §8): one digest across `inflight ∈
+//! {1, 4, 16}` on both transports, speculation as a pure recovery
+//! mechanism (a healthy stream decodes identically with it on or off),
+//! and crash-under-window soaks that must degrade or re-dispatch but
+//! never deadlock.
+
+use spacdc::coding::CodedTask;
+use spacdc::config::{SchemeKind, SystemConfig, TransportKind};
+use spacdc::coordinator::{Master, StreamConfig};
+use spacdc::matrix::Matrix;
+use spacdc::metrics::names;
+use spacdc::rng::rng_from_seed;
+use spacdc::runtime::WorkerOp;
+use spacdc::sim::{run_scenario_with, Scenario};
+
+/// The CI stream matrix in miniature: both fabrics × three window
+/// widths (threads are exercised by the scenario-engine tests).
+const MATRIX: [(TransportKind, usize); 6] = [
+    (TransportKind::InProc, 1),
+    (TransportKind::InProc, 4),
+    (TransportKind::InProc, 16),
+    (TransportKind::Tcp, 1),
+    (TransportKind::Tcp, 4),
+    (TransportKind::Tcp, 16),
+];
+
+/// A faster cousin of the builtin `stream` scenario: same shape, same
+/// crash/respawn + speculation story, service delay turned down so the
+/// whole matrix stays cheap.
+fn quick_stream() -> Scenario {
+    let mut sc = Scenario::builtin("stream").unwrap();
+    // Keep the full 12 rounds (the second respawn lands at round 11);
+    // just turn the service delay down so the 6-way matrix stays cheap.
+    sc.delay.base_service_s = 0.001;
+    sc
+}
+
+#[test]
+fn stream_digest_is_bit_identical_across_windows_and_transports() {
+    let sc = quick_stream();
+    let mut digests = Vec::new();
+    for (transport, inflight) in MATRIX {
+        let report = run_scenario_with(&sc, transport, 2, Some(inflight), None).unwrap();
+        assert_eq!(
+            report.recovery_hit_rate, 1.0,
+            "every round must decode at transport={} inflight={inflight}",
+            transport.name()
+        );
+        assert_eq!(
+            report.spec_recovered, 2,
+            "each scheduled crash loses exactly one share and speculation recovers it"
+        );
+        assert_eq!(
+            report.degraded_rounds, 0,
+            "a recovered round decodes at full policy, not degraded"
+        );
+        assert_eq!(report.respawns, 2, "both incarnations rejoin on schedule");
+        assert_eq!(report.inflight, inflight);
+        digests.push((transport.name(), inflight, report.digest));
+    }
+    let first = digests[0].2.clone();
+    for (transport, inflight, digest) in &digests {
+        assert_eq!(
+            digest, &first,
+            "digest diverged at transport={transport} inflight={inflight}: {digests:?}"
+        );
+    }
+}
+
+#[test]
+fn speculation_is_invisible_on_a_healthy_stream() {
+    // No crashes: speculation must change nothing — not one decoded
+    // bit, not one byte of the comm accounting the digest folds.
+    let mut sc = quick_stream();
+    sc.crashes.clear();
+    let off = run_scenario_with(&sc, TransportKind::InProc, 2, Some(4), Some(false)).unwrap();
+    let on = run_scenario_with(&sc, TransportKind::InProc, 2, Some(4), Some(true)).unwrap();
+    assert_eq!(off.digest, on.digest, "speculation perturbed a healthy stream");
+    assert_eq!(on.spec_recovered, 0);
+    assert_eq!(off.recovery_hit_rate, 1.0);
+    for (a, b) in off.records.iter().zip(&on.records) {
+        assert_eq!(a.results_used, b.results_used);
+        assert_eq!(a.rel_err, b.rel_err, "round {}: decoded outputs differ", a.round);
+    }
+}
+
+#[test]
+fn speculation_turns_degraded_rounds_into_recovered_ones() {
+    // Same crashing stream, speculation as the only difference: off
+    // degrades the crash rounds, on recovers them to full policy.
+    let sc = quick_stream();
+    let off = run_scenario_with(&sc, TransportKind::InProc, 2, Some(4), Some(false)).unwrap();
+    assert_eq!(off.recovery_hit_rate, 1.0, "flexible rounds ride out the crash either way");
+    assert_eq!(off.degraded_rounds, 2, "without speculation, each crash degrades its round");
+    assert_eq!(off.spec_recovered, 0);
+    let on = run_scenario_with(&sc, TransportKind::InProc, 2, Some(4), Some(true)).unwrap();
+    assert_eq!(on.degraded_rounds, 0);
+    assert_eq!(on.spec_recovered, 2);
+    // The recovered rounds decode from strictly more results.
+    let crash_rounds = [4usize, 8];
+    for r in crash_rounds {
+        let (off_r, on_r) = (&off.records[r - 1], &on.records[r - 1]);
+        assert!(
+            on_r.results_used > off_r.results_used,
+            "round {r}: speculation must add the recovered share \
+             ({} vs {})",
+            on_r.results_used,
+            off_r.results_used
+        );
+    }
+}
+
+#[test]
+fn speculation_survives_scheduled_wire_corruption() {
+    // crash-respawn injects a 6% per-(worker, round) corruption coin.
+    // A speculative copy must never be handed to an executor whose coin
+    // is true for that round — the copy would be corrupted in transit
+    // with nobody booking it lost, wedging the share in `pending` until
+    // the 30 s deadline. With the executor filter, corruption-lost
+    // shares are recovered (or degrade cleanly) and every round
+    // decodes fast.
+    let sc = Scenario::builtin("crash-respawn").unwrap();
+    let t0 = std::time::Instant::now();
+    let report = run_scenario_with(&sc, TransportKind::InProc, 2, Some(4), Some(true)).unwrap();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(20),
+        "a wedged speculative share rode the deadline"
+    );
+    assert_eq!(report.recovery_hit_rate, 1.0, "every round must decode");
+    assert!(
+        report.spec_recovered >= 2,
+        "the crashed workers' shares (at least) must be recovered, got {}",
+        report.spec_recovered
+    );
+}
+
+fn crash_under_window_cfg(transport: TransportKind, speculate: bool) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 6;
+    cfg.partitions = 3;
+    cfg.colluders = 2;
+    cfg.stragglers = 0;
+    cfg.scheme = SchemeKind::Spacdc;
+    cfg.transport = transport;
+    cfg.speculate = speculate;
+    cfg.round_deadline_s = 20.0;
+    // Slow enough that three submitted rounds are all still owed when
+    // the crash lands, fast enough for a test.
+    cfg.delay.base_service_s = 0.05;
+    cfg.seed = 0xD1E;
+    cfg
+}
+
+fn crash_under_window_check(transport: TransportKind, speculate: bool) {
+    let mut master = Master::from_config(crash_under_window_cfg(transport, speculate)).unwrap();
+    let mut rng = rng_from_seed(91);
+    let tasks: Vec<Matrix> =
+        (0..3).map(|_| Matrix::random_gaussian(12, 6, 0.0, 1.0, &mut rng)).collect();
+    // Three rounds into the window, nothing waited on: worker 0 owes a
+    // share to every one of them when the master writes it off.
+    let handles: Vec<_> = tasks
+        .iter()
+        .map(|x| {
+            master.submit(CodedTask::block_map(WorkerOp::Identity, x.clone())).unwrap()
+        })
+        .collect();
+    master.note_worker_crashed(0);
+    let t0 = std::time::Instant::now();
+    for h in handles {
+        let out = master.wait(h).unwrap_or_else(|e| panic!("round must not fail: {e}"));
+        if speculate {
+            // The lost share is re-dispatched, the wait target restored:
+            // full-policy decode. (The written-off worker is a zombie
+            // whose own result races the speculative copy — both carry
+            // identical bits, so first-wins keeps this deterministic.)
+            assert_eq!(out.results_used, 6, "speculation must restore the full policy");
+            assert!(!out.degraded);
+        } else {
+            // Degrade to what can still arrive; the zombie's result,
+            // arriving early, simply takes one of the 5 slots.
+            assert_eq!(out.results_used, 5, "the round must degrade, not deadlock");
+            assert!(out.degraded);
+        }
+        assert_eq!(out.blocks.len(), 3);
+    }
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(15),
+        "crash-under-window must not ride the deadline"
+    );
+    if speculate {
+        assert!(
+            master.metrics().get(names::SPEC_REDISPATCHED) >= 3,
+            "each in-flight round's lost share is re-dispatched"
+        );
+    }
+    // The next round runs clean on the surviving workers.
+    let out = master
+        .run(CodedTask::block_map(WorkerOp::Identity, tasks[0].clone()))
+        .unwrap();
+    assert_eq!(out.results_used, 5, "the dead worker is skipped up front");
+}
+
+#[test]
+fn crash_under_window_degrades_without_speculation_inproc() {
+    crash_under_window_check(TransportKind::InProc, false);
+}
+
+#[test]
+fn crash_under_window_recovers_with_speculation_inproc() {
+    crash_under_window_check(TransportKind::InProc, true);
+}
+
+#[test]
+fn crash_under_window_survives_on_tcp() {
+    crash_under_window_check(TransportKind::Tcp, true);
+}
+
+#[test]
+fn wider_windows_do_not_change_stream_outcomes_via_master_api() {
+    // The API-level twin of the digest test: drive the same task list
+    // through run_stream at three widths and require bit-identical
+    // decoded blocks per round.
+    let mut blocks_by_width: Vec<Vec<Vec<Matrix>>> = Vec::new();
+    for inflight in [1usize, 4, 16] {
+        let mut cfg = SystemConfig::default();
+        cfg.workers = 8;
+        cfg.partitions = 4;
+        cfg.colluders = 2;
+        cfg.stragglers = 2;
+        cfg.scheme = SchemeKind::Spacdc;
+        cfg.seed = 0xABCD;
+        cfg.delay.base_service_s = 0.0;
+        let mut master = Master::from_config(cfg).unwrap();
+        let mut rng = rng_from_seed(17);
+        let tasks: Vec<CodedTask> = (0..6)
+            .map(|_| {
+                CodedTask::block_map(
+                    WorkerOp::Gram,
+                    Matrix::random_gaussian(16, 8, 0.0, 1.0, &mut rng),
+                )
+            })
+            .collect();
+        let out = master
+            .run_stream(tasks, StreamConfig { inflight, speculate: false })
+            .unwrap();
+        assert_eq!(out.decoded(), 6);
+        blocks_by_width
+            .push(out.rounds.into_iter().map(|r| r.outcome.unwrap().blocks).collect());
+    }
+    for wider in &blocks_by_width[1..] {
+        for (a, b) in blocks_by_width[0].iter().zip(wider) {
+            assert_eq!(a, b, "decoded blocks moved with the window width");
+        }
+    }
+}

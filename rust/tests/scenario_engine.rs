@@ -167,11 +167,13 @@ fn reports_serialize_with_digest_and_per_round_records() {
     let report = run_scenario(&sc, TransportKind::InProc, 1).unwrap();
     let json = report.to_json();
     for needle in [
-        "\"schema\": \"scenario-report-v1\"",
+        "\"schema\": \"scenario-report-v2\"",
         "\"scenario\": \"baseline\"",
         "\"digest\": \"",
         "\"per_round\": [",
         "\"lifecycle\": {",
+        "\"stream\": {\"inflight\": 1, \"speculate\": false",
+        "\"speculation\": {\"redispatched\": 0, \"recovered\": 0, \"wasted\": 0}",
         "\"recovery_hit_rate\": 1.0000",
     ] {
         assert!(json.contains(needle), "report JSON missing {needle}:\n{json}");

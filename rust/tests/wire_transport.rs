@@ -138,6 +138,139 @@ fn any_single_byte_corruption_is_rejected() {
     });
 }
 
+// ---------------------------------------------- control frames (PR 4 wire)
+
+/// A random lifecycle control message: the `Register`/`Crash` frames
+/// worker incarnations and the fault injector exchange.
+fn gen_control(g: &mut Gen) -> spacdc::coordinator::ControlMsg {
+    use spacdc::coordinator::ControlMsg;
+    if g.bool_with(0.4) {
+        ControlMsg::Crash { worker: g.usize_in(0..256) }
+    } else {
+        let pk = if g.bool_with(0.15) {
+            spacdc::ecc::Point::Infinity
+        } else {
+            let kp = KeyPair::generate(&sim_curve(), g.rng());
+            kp.public()
+        };
+        ControlMsg::Register {
+            worker: g.usize_in(0..256),
+            generation: g.usize_in(0..1 << 16) as u32,
+            pk,
+        }
+    }
+}
+
+#[test]
+fn control_frames_round_trip_over_random_contents() {
+    forall(80, 0xC7A1, |g| {
+        let msg = gen_control(g);
+        let frame = wire::encode_control(&msg);
+        match wire::decode_message(&frame).map_err(|e| e.to_string())? {
+            wire::WireMessage::Control(back) => {
+                prop_assert(back == msg, format!("control changed: {back:?} vs {msg:?}"))?;
+            }
+            other => return Err(format!("control frame decoded as {}", other.kind_name())),
+        }
+        // A control frame must never pass for an order or a result.
+        prop_assert(wire::decode_order(&frame).is_err(), "control decoded as order")?;
+        prop_assert(wire::decode_result(&frame).is_err(), "control decoded as result")
+    });
+}
+
+#[test]
+fn any_control_frame_corruption_is_rejected() {
+    // Every single-byte flip must fail to decode (CRC or structure) —
+    // a corrupted registration must never install a wrong key, and a
+    // corrupted kill must never fire.
+    forall(120, 0xC7A2, |g| {
+        let msg = gen_control(g);
+        let mut frame = wire::encode_control(&msg);
+        let pos = g.usize_in(0..frame.len());
+        let flip = (g.usize_in(1..256)) as u8;
+        frame[pos] ^= flip;
+        prop_assert(
+            wire::decode_message(&frame).is_err(),
+            format!("corrupted control frame (byte {pos} ^ {flip:#04x}) decoded"),
+        )
+    });
+}
+
+#[test]
+fn any_control_frame_truncation_is_rejected() {
+    forall(80, 0xC7A3, |g| {
+        let msg = gen_control(g);
+        let frame = wire::encode_control(&msg);
+        let cut = g.usize_in(0..frame.len());
+        prop_assert(
+            wire::decode_message(&frame[..cut]).is_err(),
+            format!("{cut}-byte prefix of a {}-byte control frame decoded", frame.len()),
+        )
+    });
+}
+
+#[test]
+fn control_frames_reject_trailing_garbage_and_bad_tags() {
+    use spacdc::wire::{frame, MsgKind};
+    // Unknown control tag byte.
+    let bad_tag = frame(MsgKind::Control, &[9, 0, 0, 0, 0]);
+    assert!(wire::decode_message(&bad_tag).is_err(), "unknown control tag accepted");
+    // A structurally valid Crash body with trailing bytes.
+    let mut body = vec![1u8];
+    body.extend_from_slice(&7u32.to_le_bytes());
+    body.push(0xEE);
+    let trailing = frame(MsgKind::Control, &body);
+    assert!(wire::decode_message(&trailing).is_err(), "trailing body bytes accepted");
+    // An empty control body.
+    let empty = frame(MsgKind::Control, &[]);
+    assert!(wire::decode_message(&empty).is_err(), "empty control body accepted");
+}
+
+// ------------------------------------------------------------- router peeks
+
+#[test]
+fn router_peeks_agree_with_the_full_decoder() {
+    let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
+    forall(60, 0xC7A4, |g| {
+        match g.usize_in(0..3) {
+            0 => {
+                let order = gen_order(g, &mea);
+                let f = wire::encode_order(&order);
+                prop_assert(
+                    wire::peek_kind(&f) == Some(spacdc::wire::MsgKind::Order),
+                    "order peek",
+                )?;
+                prop_assert(wire::peek_result_round(&f).is_none(), "order has no result round")
+            }
+            1 => {
+                let msg = ResultMsg {
+                    round: g.u64(),
+                    worker: g.usize_in(0..64),
+                    payload: gen_payload(g, &mea),
+                };
+                let f = wire::encode_result(&msg);
+                prop_assert(
+                    wire::peek_kind(&f) == Some(spacdc::wire::MsgKind::Result),
+                    "result peek",
+                )?;
+                prop_assert(
+                    wire::peek_result_round(&f) == Some(msg.round),
+                    "peeked round must match the encoded round",
+                )
+            }
+            _ => {
+                let msg = gen_control(g);
+                let f = wire::encode_control(&msg);
+                prop_assert(
+                    wire::peek_kind(&f) == Some(spacdc::wire::MsgKind::Control),
+                    "control peek",
+                )?;
+                prop_assert(wire::peek_result_round(&f).is_none(), "control has no round")
+            }
+        }
+    });
+}
+
 #[test]
 fn any_truncation_is_rejected() {
     let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
