@@ -24,7 +24,7 @@ use spacdc::sim::{run_scenario_with, Scenario};
 fn specs() -> Vec<ArgSpec> {
     vec![
         ArgSpec::required("scenario", "scenario name (builtin or scenarios/<name>.toml) or path"),
-        ArgSpec::opt("transport", "inproc", "worker link fabric: inproc|tcp"),
+        ArgSpec::opt("transport", "inproc", "worker link fabric: inproc|tcp|proc"),
         ArgSpec::opt("threads", "auto", "master-side thread-pool width (auto = one per core)"),
         ArgSpec::opt("inflight", "", "override the scenario's stream window (rounds in flight)"),
         ArgSpec::opt("speculate", "", "override the scenario's speculation: on|off"),

@@ -1,0 +1,210 @@
+//! `testbed` — the cluster testbed orchestrator: one scenario file, a
+//! real master plus N real `spacdc worker` processes on localhost TCP,
+//! OS-level fault injection, one `SCENARIO_REPORT.json`.
+//!
+//! The testbed process *is* the master: it loads the scenario, runs it
+//! on the process fabric (`--transport proc`), which forks one
+//! `spacdc worker` child per worker slot, injects the scenario's crash
+//! plan as real SIGKILLs through the process supervisor, and re-execs
+//! fresh incarnations on schedule. When the run finishes the cluster is
+//! torn down (SIGTERM, then SIGKILL after a grace period), every
+//! child's exit status is collected, and the report is written with a
+//! `process` section recording each exit — worker, generation, pid,
+//! code, signal, cause.
+//!
+//! Then it holds the run to the determinism contract: the same scenario
+//! is replayed on the in-process fabric and the deterministic report
+//! fields — the digest (decoded bits, per-round statuses, byte totals,
+//! recovered shares), recovery rate, and final generations — must match
+//! bit for bit. A crashed worker is a real process dying mid-round; the
+//! round must recover (degraded decode or speculative re-dispatch) and
+//! must never be silently wrong.
+//!
+//! Teardown is clean on every path: success and assertion failure run
+//! the orderly shutdown; on Ctrl-C the children (same foreground
+//! process group) receive the SIGINT too and exit on their own, and the
+//! supervisor's drop backstop reaps whatever is left.
+//!
+//! ```text
+//! testbed --scenario rust/scenarios/crash-respawn.toml
+//! testbed --scenario baseline --threads 4 --json /tmp/report.json
+//! ```
+
+use spacdc::cli::{parse, usage, ArgSpec};
+use spacdc::config::{parse_threads_token, TransportKind};
+use spacdc::coordinator::ExitCause;
+use spacdc::sim::{run_scenario_with, Scenario, ScenarioReport};
+
+fn specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::required("scenario", "scenario name (builtin or scenarios/<name>.toml) or path"),
+        ArgSpec::opt("threads", "auto", "master-side thread-pool width (auto = one per core)"),
+        ArgSpec::opt("rounds", "", "override the scenario's round count"),
+        ArgSpec::opt("json", "SCENARIO_REPORT.json", "where to write the JSON report"),
+        ArgSpec::opt("worker-exe", "", "explicit spacdc binary to fork workers from"),
+        ArgSpec::opt("expect-digest", "", "fail unless the run's digest equals this hex value"),
+        ArgSpec::flag("no-parity", "skip the in-process replay / digest-parity check"),
+        ArgSpec::flag("quiet", "suppress the per-round table"),
+        ArgSpec::flag("help", "show usage"),
+    ]
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let specs = specs();
+    let parsed = match parse(&args, &specs) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if parsed.has_flag("help") || parsed.get("scenario").is_none() {
+        print!("{}", usage("testbed --scenario <name|file>", &specs));
+        return Ok(());
+    }
+    if let Some(exe) = parsed.get("worker-exe").filter(|s| !s.is_empty()) {
+        std::env::set_var(spacdc::transport::WORKER_EXE_ENV, exe);
+    }
+
+    let mut scenario = Scenario::load(parsed.get_str("scenario"))?;
+    if let Some(rounds) = parsed.get("rounds").filter(|s| !s.is_empty()) {
+        scenario.rounds =
+            rounds.parse().map_err(|_| anyhow::anyhow!("--rounds {rounds}: not a number"))?;
+    }
+    let threads = parse_threads_token(parsed.get_str("threads")).ok_or_else(|| {
+        anyhow::anyhow!(
+            "--threads {}: pool width must be ≥ 1, or 'auto'",
+            parsed.get_str("threads")
+        )
+    })?;
+
+    println!(
+        "testbed: scenario {:?} — master + {} worker processes on localhost TCP",
+        scenario.name, scenario.workers
+    );
+    let report = run_scenario_with(&scenario, TransportKind::Proc, threads, None, None)?;
+    if !parsed.has_flag("quiet") {
+        print!("{}", report.render_table());
+    }
+
+    let json_path = parsed.get_str("json");
+    if !json_path.is_empty() {
+        std::fs::write(json_path, report.to_json())
+            .map_err(|e| anyhow::anyhow!("writing {json_path}: {e}"))?;
+        println!("wrote {json_path}");
+    }
+
+    let mut failures: Vec<String> = Vec::new();
+    check_exits(&scenario, &report, &mut failures);
+
+    let expected = parsed.get_str("expect-digest");
+    if !expected.is_empty() && expected != report.digest {
+        failures
+            .push(format!("digest mismatch: expected {expected}, got {}", report.digest));
+    }
+
+    if !parsed.has_flag("no-parity") {
+        println!("testbed: replaying {:?} in-process for the parity check", scenario.name);
+        match run_scenario_with(&scenario, TransportKind::InProc, threads, None, None) {
+            Ok(inproc) => check_parity(&report, &inproc, &mut failures),
+            Err(e) => failures.push(format!("in-process replay failed: {e}")),
+        }
+    }
+
+    if failures.is_empty() {
+        println!("testbed: OK — digest {}", report.digest);
+        Ok(())
+    } else {
+        for f in &failures {
+            eprintln!("testbed: FAIL — {f}");
+        }
+        std::process::exit(1);
+    }
+}
+
+/// Hold the process fabric to the scenario's fault plan: scheduled
+/// respawns must show up as real SIGKILLed children, and teardown must
+/// have accounted for every worker slot.
+fn check_exits(sc: &Scenario, report: &ScenarioReport, failures: &mut Vec<String>) {
+    if report.process_exits.is_empty() {
+        failures.push("no process exit records — the run did not fork real workers".into());
+        return;
+    }
+    // Every worker slot owes at least one exit record: mid-run kills for
+    // the crash schedule, and the teardown reap for the final
+    // incarnations.
+    for w in 0..sc.workers {
+        if !report.process_exits.iter().any(|e| e.worker == w) {
+            failures.push(format!("worker {w} has no exit record — a child leaked"));
+        }
+    }
+    let plan = sc.fault_plan();
+    let scheduled_respawns =
+        plan.crash_events().iter().filter(|c| c.respawn_after.is_some()).count();
+    if scheduled_respawns > 0 {
+        let sigkilled_respawns = report
+            .process_exits
+            .iter()
+            .filter(|e| e.cause == ExitCause::Killed && e.sigkilled())
+            .count();
+        if sigkilled_respawns == 0 {
+            failures.push(format!(
+                "the plan schedules {scheduled_respawns} respawn(s) but no child was \
+                 SIGKILLed mid-run — the fault plan never ran at the OS level"
+            ));
+        } else {
+            println!(
+                "testbed: {sigkilled_respawns} SIGKILL-driven respawn(s) observed \
+                 (signal 9 captured from the dead children)"
+            );
+        }
+        if report.respawns == 0 {
+            failures.push(
+                "scheduled respawns produced no re-registered incarnation".to_string(),
+            );
+        }
+    }
+}
+
+/// The determinism contract across the process boundary: everything the
+/// digest folds (decoded bits, statuses, byte totals, recovered shares)
+/// plus the named deterministic fields must match the in-process run.
+fn check_parity(proc_run: &ScenarioReport, inproc: &ScenarioReport, failures: &mut Vec<String>) {
+    let before = failures.len();
+    if proc_run.digest != inproc.digest {
+        failures.push(format!(
+            "digest diverges across the process boundary: proc {} vs inproc {}",
+            proc_run.digest, inproc.digest
+        ));
+    }
+    if proc_run.recovery_hit_rate != inproc.recovery_hit_rate {
+        failures.push(format!(
+            "recovery rate diverges: proc {} vs inproc {}",
+            proc_run.recovery_hit_rate, inproc.recovery_hit_rate
+        ));
+    }
+    if proc_run.final_generations != inproc.final_generations {
+        failures.push(format!(
+            "final generations diverge: proc {:?} vs inproc {:?}",
+            proc_run.final_generations, inproc.final_generations
+        ));
+    }
+    for (p, i) in proc_run.records.iter().zip(&inproc.records) {
+        if (p.status, p.results_used, p.degraded) != (i.status, i.results_used, i.degraded) {
+            failures.push(format!(
+                "round {} diverges: proc ({}, {}, degraded {}) vs inproc ({}, {}, degraded {})",
+                p.round,
+                p.status.name(),
+                p.results_used,
+                p.degraded,
+                i.status.name(),
+                i.results_used,
+                i.degraded
+            ));
+        }
+    }
+    if failures.len() == before {
+        println!("testbed: parity OK — proc and in-process runs agree on every pinned field");
+    }
+}

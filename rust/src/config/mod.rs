@@ -107,8 +107,9 @@ impl TransportSecurity {
 }
 
 /// Which fabric carries the framed wire bytes between master and
-/// workers (`rust/src/transport/`). Both fabrics move the identical
-/// serialized frames; TCP additionally crosses real localhost sockets.
+/// workers (`rust/src/transport/`). Every fabric moves the identical
+/// serialized frames; TCP additionally crosses real localhost sockets,
+/// and Proc additionally crosses real process boundaries.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, Default)]
 pub enum TransportKind {
     /// Per-worker in-process channels (default).
@@ -116,6 +117,9 @@ pub enum TransportKind {
     InProc,
     /// Localhost TCP sockets, one connection per worker.
     Tcp,
+    /// Real child processes (`spacdc worker`) over localhost TCP, under
+    /// a process supervisor — DESIGN.md §9.
+    Proc,
 }
 
 impl TransportKind {
@@ -124,6 +128,7 @@ impl TransportKind {
         Some(match s.to_ascii_lowercase().as_str() {
             "inproc" | "in-proc" | "channels" => Self::InProc,
             "tcp" | "sockets" => Self::Tcp,
+            "proc" | "process" | "processes" => Self::Proc,
             _ => return None,
         })
     }
@@ -133,6 +138,7 @@ impl TransportKind {
         match self {
             Self::InProc => "inproc",
             Self::Tcp => "tcp",
+            Self::Proc => "proc",
         }
     }
 }

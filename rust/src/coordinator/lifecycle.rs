@@ -73,12 +73,22 @@ impl WorkerDirectory {
 
     /// Install a registration: the incarnation's key becomes current and
     /// the slot goes `Alive`. Called by the pool at bring-up and by the
-    /// collector thread for respawns. Stale registrations (an older
-    /// generation racing a newer respawn) are ignored.
+    /// collector thread for respawns.
+    ///
+    /// First-register-wins, per generation: a registration is installed
+    /// only if its generation is *newer* than the slot's, or matches it
+    /// while the slot is still waiting (`Respawning`/`Crashed`). Stale
+    /// generations (an older incarnation racing a newer respawn) and
+    /// duplicate same-generation registrations for an `Alive` worker are
+    /// silently ignored — a replayed or duplicated `Register` frame must
+    /// not re-key a live incarnation mid-round, or shares sealed to its
+    /// installed key would stop opening.
     pub fn register(&self, worker: usize, generation: u32, pk: Point<Fp61>) {
         let mut es = self.entries.lock().unwrap();
         if let Some(e) = es.get_mut(worker) {
-            if generation >= e.generation {
+            let accept = generation > e.generation
+                || (generation == e.generation && e.state != WorkerState::Alive);
+            if accept {
                 *e = Entry { pk, generation, state: WorkerState::Alive };
                 self.cv.notify_all();
             }
@@ -205,6 +215,42 @@ mod tests {
         assert_eq!(d.state(0), WorkerState::Respawning);
         d.register(0, gen, pk(8));
         assert_eq!(d.pks()[0], pk(8));
+    }
+
+    #[test]
+    fn duplicate_register_for_a_live_worker_is_ignored() {
+        let d = WorkerDirectory::new(1);
+        d.register(0, 0, pk(1));
+        assert_eq!(d.state(0), WorkerState::Alive);
+        // Same generation, different key, while Alive: a replayed or
+        // forged Register must not re-key the live incarnation.
+        d.register(0, 0, pk(42));
+        assert_eq!(d.pks()[0], pk(1), "first registration wins for a generation");
+        assert_eq!(d.generation(0), 0);
+        // But the same generation *does* land while the slot waits —
+        // bring-up and respawn both rely on it.
+        d.mark_crashed(0);
+        d.register(0, 0, pk(7));
+        assert_eq!(d.pks()[0], pk(7), "a crashed slot accepts its generation again");
+        assert_eq!(d.state(0), WorkerState::Alive);
+    }
+
+    #[test]
+    fn stale_register_after_respawn_cannot_resurrect_the_old_incarnation() {
+        let d = WorkerDirectory::new(2);
+        d.register(0, 0, pk(1));
+        d.register(1, 0, pk(2));
+        d.mark_crashed(0);
+        let gen = d.begin_respawn(0);
+        assert_eq!(gen, 1);
+        // The new incarnation registers first; then a stale frame from
+        // the killed generation 0 arrives (half-drained socket). It must
+        // change nothing: not the key, not the state, not the generation.
+        d.register(0, gen, pk(10));
+        d.register(0, 0, pk(66));
+        assert_eq!(d.pks()[0], pk(10));
+        assert_eq!(d.generation(0), 1);
+        assert_eq!(d.state(0), WorkerState::Alive);
     }
 
     #[test]

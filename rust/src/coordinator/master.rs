@@ -42,7 +42,7 @@ use crate::transport::LoadBook;
 use crate::wire::{self, MsgKind, WireMessage};
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{self, Receiver};
-use std::sync::{Arc, Weak};
+use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -269,6 +269,8 @@ impl MasterBuilder {
             self.cfg.seed,
         );
         let registry = Arc::new(RoundRegistry::new(Arc::clone(&metrics)));
+        let load = Arc::clone(pool.load());
+        let round_settled: RoundSettled = Arc::new(Mutex::new(HashMap::new()));
         let collector = spawn_collector(
             inbound,
             Arc::clone(&registry),
@@ -276,8 +278,9 @@ impl MasterBuilder {
             Arc::clone(&metrics),
             Arc::new(keys),
             self.eavesdropper.clone(),
+            Arc::clone(&load),
+            Arc::clone(&round_settled),
         );
-        let load = Arc::clone(pool.load());
         let speculate = self.cfg.speculate;
         Ok(Master {
             cfg: self.cfg,
@@ -293,6 +296,7 @@ impl MasterBuilder {
             registry,
             directory,
             load,
+            round_settled,
             speculate,
             spec_rounds: HashMap::new(),
             round_targets: HashMap::new(),
@@ -310,6 +314,17 @@ struct SpecRound {
     op: WorkerOp,
     operands: Vec<Option<Vec<Matrix>>>,
 }
+
+/// Executors whose results already came home, per in-flight round —
+/// shared between the master thread and the collector shards. The
+/// master opens a round's entry *before* its first order goes out and
+/// removes it at retirement, settling the remainder (dispatch targets
+/// minus recorded executors) wholesale; each shard records a result's
+/// executor and settles its load-book slot the moment the result
+/// arrives (wire v2 carries the executor id). An absent entry means the
+/// round already retired — the remainder settle covered it, so late
+/// results must not settle again.
+type RoundSettled = Arc<Mutex<HashMap<u64, Vec<usize>>>>;
 
 /// The background result collector, sharded (DESIGN.md §8): one *router*
 /// thread drains the transport's merged inbound channel, peeks each
@@ -331,6 +346,8 @@ fn spawn_collector(
     metrics: Arc<MetricsRegistry>,
     keys: Arc<KeyPair<Fp61>>,
     tap: Option<Arc<EavesdropLog>>,
+    load: Arc<LoadBook>,
+    settled: RoundSettled,
 ) -> Vec<JoinHandle<()>> {
     let mut joins = Vec::with_capacity(COLLECTOR_SHARDS + 1);
     let mut shard_txs = Vec::with_capacity(COLLECTOR_SHARDS);
@@ -344,6 +361,8 @@ fn spawn_collector(
             Arc::clone(&metrics),
             Arc::clone(&keys),
             tap.clone(),
+            Arc::clone(&load),
+            Arc::clone(&settled),
         ));
     }
     let router = std::thread::Builder::new()
@@ -400,6 +419,7 @@ fn spawn_collector(
 
 /// One collector shard: full decode + unseal + registry delivery for
 /// the result frames of its round-id residue class.
+#[allow(clippy::too_many_arguments)]
 fn spawn_collector_shard(
     shard: usize,
     frames: Receiver<Vec<u8>>,
@@ -407,6 +427,8 @@ fn spawn_collector_shard(
     metrics: Arc<MetricsRegistry>,
     keys: Arc<KeyPair<Fp61>>,
     tap: Option<Arc<EavesdropLog>>,
+    load: Arc<LoadBook>,
+    settled: RoundSettled,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("collector-{shard}"))
@@ -438,7 +460,18 @@ fn spawn_collector_shard(
                     registry.note_rejected(msg.round);
                     continue;
                 }
-                let (round, worker) = (msg.round, msg.worker);
+                let (round, worker, executor) = (msg.round, msg.worker, msg.executor);
+                // Settle the executor's load-book slot now — it finished
+                // this order whatever becomes of the payload (even a
+                // corrupt seal was computed and sent). Recording it under
+                // the round keeps retirement's remainder-settle exact.
+                {
+                    let mut map = settled.lock().unwrap();
+                    if let Some(recorded) = map.get_mut(&round) {
+                        recorded.push(executor);
+                        load.settle_one(executor);
+                    }
+                }
                 let symbols = msg.payload.symbols() as u64;
                 // The eavesdropper's ciphertext view has to be charted
                 // before the payload is consumed; only materialized when
@@ -460,6 +493,12 @@ fn spawn_collector_shard(
                 let buffered =
                     registry.deliver(round, worker, result, symbols, frame.len() as u64);
                 if buffered {
+                    // A buffered result computed by someone other than
+                    // the share's owner is a speculative race won by the
+                    // re-dispatch copy (wire v2 attribution).
+                    if executor != worker {
+                        metrics.inc(names::SPEC_WON_BY_PROXY);
+                    }
                     if let (Some(tap), Some(view)) = (&tap, &wire_view) {
                         tap.capture(worker, round, false, view);
                     }
@@ -486,11 +525,17 @@ pub struct Master {
     /// Shared with the pool and the collector: lifecycle states,
     /// generations, and current public keys.
     directory: Arc<WorkerDirectory>,
-    /// Per-worker backlog signal (orders sent − rounds settled): the
+    /// Per-worker backlog signal (orders sent − results settled): the
     /// idle-worker signal speculative re-dispatch keys its executor
-    /// choice on. Updated only on the master thread, so readings here
-    /// are deterministic.
+    /// choice on. Sends book on the master thread; since wire v2 the
+    /// collector shards settle each result's *executor* the moment it
+    /// arrives, so readings track real completion instead of round
+    /// retirement. (Executor choice may therefore see arrival timing —
+    /// which worker computes a share never changes the decoded bits.)
     load: Arc<LoadBook>,
+    /// Executors already settled per in-flight round — see
+    /// [`RoundSettled`]; retirement settles the remainder.
+    round_settled: RoundSettled,
     /// Re-dispatch outstanding shares to other workers (config
     /// `speculate`, overridable per stream — see
     /// [`Master::run_stream`](super::stream)).
@@ -551,6 +596,13 @@ impl Master {
     /// Every worker's incarnation number, by index (0 = never respawned).
     pub fn worker_generations(&self) -> Vec<u32> {
         self.directory.generations()
+    }
+
+    /// The process fabric's child exit log (`None` on in-process
+    /// fabrics). Clone the handle before dropping the master to observe
+    /// teardown exits as well — the testbed does.
+    pub fn exit_log(&self) -> Option<super::ExitLog> {
+        self.pool.exit_records()
     }
 
     /// Kill worker `w` over the wire: it dies silently at its next frame
@@ -769,6 +821,11 @@ impl Master {
                 (sealed, Vec::new())
             }
         };
+
+        // Open the round's settle ledger *before* any order goes out so
+        // the collector shards can never race it: a result that arrives
+        // while the entry exists settles its executor immediately.
+        self.round_settled.lock().unwrap().insert(round, Vec::new());
 
         // Dispatch serially in worker order (frame serialization is
         // cheap next to sealing, and ordered sends keep the transport
@@ -1115,11 +1172,32 @@ impl Master {
         }
     }
 
-    /// Settle a retired round's bookkeeping: release its load-book
-    /// orders and drop its retained operands.
+    /// Settle a retired round's bookkeeping: close its settle ledger,
+    /// release whatever load-book orders the collector shards have *not*
+    /// already settled per-result (the multiset difference of dispatch
+    /// targets minus recorded executors — workers that never replied),
+    /// and drop its retained operands. Removing the ledger entry under
+    /// the lock is what makes this exact: a result landing afterwards
+    /// finds no entry and settles nothing, because its slot was just
+    /// settled here.
     fn settle_round(&mut self, round: u64) {
+        let recorded =
+            self.round_settled.lock().unwrap().remove(&round).unwrap_or_default();
         if let Some(targets) = self.round_targets.remove(&round) {
-            self.load.settle(&targets);
+            let mut owed: HashMap<usize, usize> = HashMap::new();
+            for w in targets {
+                *owed.entry(w).or_insert(0) += 1;
+            }
+            for w in recorded {
+                if let Some(c) = owed.get_mut(&w) {
+                    *c = c.saturating_sub(1);
+                }
+            }
+            let remainder: Vec<usize> = owed
+                .into_iter()
+                .flat_map(|(w, c)| std::iter::repeat(w).take(c))
+                .collect();
+            self.load.settle(&remainder);
         }
         self.spec_rounds.remove(&round);
     }

@@ -156,12 +156,21 @@ pub enum ControlMsg {
 }
 
 /// A worker's result for one round.
+///
+/// `worker` is the *share* id — which coded share this result carries —
+/// and routes decoding; under speculative re-dispatch a share may be
+/// computed by a different worker than it is named after. `executor` is
+/// the worker that actually ran the order: the collector settles that
+/// worker's [`LoadBook`](crate::transport::LoadBook) entry per result
+/// and attributes speculation winners by it (wire v2).
 #[derive(Debug)]
 pub struct ResultMsg {
     /// Round the result belongs to.
     pub round: u64,
-    /// Originating worker.
+    /// Share id the result carries (routes decoding).
     pub worker: usize,
+    /// Worker that actually executed the order (settles load).
+    pub executor: usize,
     /// The computed (possibly sealed) result.
     pub payload: WirePayload,
 }

@@ -36,7 +36,10 @@
 //! ([`ControlMsg::Register`], installed into the shared
 //! [`WorkerDirectory`] by the collector). Rounds that lose workers
 //! mid-flight degrade to "decode from what arrived" when the scheme's
-//! threshold allows it, or fail fast with a typed [`RoundError`].
+//! threshold allows it, or fail fast with a typed [`RoundError`]. Under
+//! the process fabric (`--transport proc`, DESIGN.md §9) each worker is
+//! a real `spacdc worker` child process, a [`Supervisor`] captures
+//! every exit status, and respawn is a real SIGKILL + re-exec.
 
 mod lifecycle;
 mod master;
@@ -44,9 +47,11 @@ mod messages;
 mod pool;
 mod registry;
 mod stream;
+mod supervisor;
 
 pub use lifecycle::{WorkerDirectory, WorkerState};
 pub use master::{Master, MasterBuilder, RoundError, RoundHandle, RoundOutcome};
 pub use messages::{ControlMsg, ResultMsg, SealedPayload, WirePayload, WorkOrder};
-pub use pool::WorkerPool;
+pub use pool::{WorkerHarness, WorkerPool};
 pub use stream::{StreamConfig, StreamOutcome, StreamRound};
+pub use supervisor::{ExitCause, ExitLog, ExitRecord, Supervisor};

@@ -38,6 +38,7 @@
 
 use super::lifecycle::WorkerDirectory;
 use super::messages::{ControlMsg, ResultMsg, SealedPayload, WirePayload, WorkOrder};
+use super::supervisor::ExitLog;
 use crate::config::TransportKind;
 use crate::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc, Point};
 use crate::field::Fp61;
@@ -96,7 +97,18 @@ impl WorkerPool {
         seed: u64,
         metrics: Arc<MetricsRegistry>,
     ) -> Result<(Self, Receiver<Vec<u8>>), TransportError> {
-        let fabric = transport::connect(kind, n, metrics)?;
+        // The process fabric spawns real children, which need the worker
+        // harness parameters on their command lines — so it is wired
+        // here, where those parameters live, not in `transport::connect`.
+        let fabric = if kind == TransportKind::Proc {
+            transport::Proc::connect(
+                n,
+                transport::ProcConfig { seed, master_pk, faults: faults.clone() },
+                metrics,
+            )?
+        } else {
+            transport::connect(kind, n, metrics)?
+        };
         let directory = Arc::new(WorkerDirectory::new(n));
         let mut pool = Self {
             transport: Some(fabric.transport),
@@ -142,16 +154,19 @@ impl WorkerPool {
 
     /// Spawn one incarnation of worker `w` on `link`.
     fn spawn_incarnation(&self, w: usize, generation: u32, link: WorkerLink) -> JoinHandle<()> {
-        let master_pk = self.master_pk;
-        let executor = self.executor.clone();
-        let collusion = self.collusion.clone();
-        let faults = self.faults.clone();
-        let seed = self.seed;
+        let harness = WorkerHarness {
+            worker: w,
+            generation,
+            seed: self.seed,
+            master_pk: self.master_pk,
+            executor: self.executor.clone(),
+            collusion: self.collusion.clone(),
+            faults: self.faults.clone(),
+            park_on_crash: false,
+        };
         std::thread::Builder::new()
             .name(format!("worker-{w}.g{generation}"))
-            .spawn(move || {
-                worker_loop(w, generation, seed, master_pk, link, executor, collusion, faults)
-            })
+            .spawn(move || harness.run(link))
             .expect("spawn worker")
     }
 
@@ -174,6 +189,13 @@ impl WorkerPool {
     /// Which fabric the pool runs on.
     pub fn transport_kind(&self) -> TransportKind {
         self.transport.as_ref().expect("pool not shut down").kind()
+    }
+
+    /// The process fabric's child exit log (`None` on in-process
+    /// fabrics). The handle stays readable after the pool shuts down,
+    /// so teardown exits are observable too — the testbed reports them.
+    pub fn exit_records(&self) -> Option<ExitLog> {
+        self.transport.as_ref().and_then(|t| t.exit_records())
     }
 
     /// The fabric's per-worker backlog signal (orders sent minus rounds
@@ -217,11 +239,21 @@ impl WorkerPool {
     /// once its `Register` frame lands in the directory (the master
     /// waits for that — [`Master::respawn_worker`](super::Master::respawn_worker)).
     pub fn respawn(&mut self, w: usize) -> Result<u32, TransportError> {
-        let link = self.transport.as_ref().expect("pool not shut down").relink(w)?;
-        let generation = self.directory.begin_respawn(w);
-        let join = self.spawn_incarnation(w, generation, link);
-        self.joins.push(join);
-        Ok(generation)
+        if self.transport.as_ref().expect("pool not shut down").out_of_process() {
+            // A replacement child carries its generation on the command
+            // line, so the bump must precede the relink; the fabric
+            // kills/reaps the old child and runs the new one itself —
+            // no thread to spawn here.
+            let generation = self.directory.begin_respawn(w);
+            self.transport.as_ref().expect("pool not shut down").respawn_process(w, generation)?;
+            Ok(generation)
+        } else {
+            let link = self.transport.as_ref().expect("pool not shut down").relink(w)?;
+            let generation = self.directory.begin_respawn(w);
+            let join = self.spawn_incarnation(w, generation, link);
+            self.joins.push(join);
+            Ok(generation)
+        }
     }
 
     /// Tear the fabric down and join the workers. Called by `Drop`;
@@ -240,6 +272,66 @@ impl Drop for WorkerPool {
     }
 }
 
+/// Everything one worker incarnation needs before it can serve: the
+/// body of every in-process worker thread, and of the standalone
+/// `spacdc worker` process (which dials the master, wraps the socket in
+/// a [`WorkerLink::Tcp`], and hands it to [`run`](WorkerHarness::run)).
+pub struct WorkerHarness {
+    /// Worker index.
+    pub worker: usize,
+    /// Incarnation number (0 initial, +1 per respawn).
+    pub generation: u32,
+    /// Root seed; keys and seal randomness derive from
+    /// `(seed, worker, generation)`.
+    pub seed: u64,
+    /// Master's public key (results are sealed to it).
+    pub master_pk: Point<Fp61>,
+    /// Execution façade (PJRT or native).
+    pub executor: Executor,
+    /// Optional coalition tap (in-process workers only — a process
+    /// worker cannot share the master's memory).
+    pub collusion: Option<Arc<CollusionPool>>,
+    /// Optional deterministic crash/corruption schedule.
+    pub faults: Option<Arc<FaultPlan>>,
+    /// On a scheduled or injected crash, park (hang without serving)
+    /// instead of returning. Worker *threads* return — a dead thread is
+    /// what a dead node looks like in-process. Worker *processes* park:
+    /// the process must stay alive so the supervisor's real SIGKILL is
+    /// what actually ends it, with the signal captured in its exit
+    /// status. Either way no reply is ever sent, so round outcomes are
+    /// identical.
+    pub park_on_crash: bool,
+}
+
+impl WorkerHarness {
+    /// Run the incarnation over an established link until the master
+    /// hangs up, the link poisons, or a crash event fires.
+    pub fn run(self, link: WorkerLink) {
+        let WorkerHarness {
+            worker: w,
+            generation,
+            seed,
+            master_pk,
+            executor,
+            collusion,
+            faults,
+            park_on_crash,
+        } = self;
+        worker_loop(
+            w, generation, seed, master_pk, link, executor, collusion, faults, park_on_crash,
+        )
+    }
+}
+
+/// A crashed process worker stops serving but must not exit — the
+/// supervisor's SIGKILL is the real cause of death (see
+/// [`WorkerHarness::park_on_crash`]).
+fn park_forever() -> ! {
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
 #[allow(clippy::too_many_arguments)]
 fn worker_loop(
     w: usize,
@@ -250,6 +342,7 @@ fn worker_loop(
     executor: Executor,
     collusion: Option<Arc<CollusionPool>>,
     faults: Option<Arc<FaultPlan>>,
+    park_on_crash: bool,
 ) {
     // One worker thread models one remote node: its kernels run serial
     // so N workers use N cores, not N × pool-width.
@@ -298,6 +391,9 @@ fn worker_loop(
             Ok(WireMessage::Control(ControlMsg::Crash { .. })) => {
                 // Injected kill: vanish mid-protocol, no reply, no
                 // cleanup — exactly what a dead node looks like.
+                if park_on_crash {
+                    park_forever();
+                }
                 return;
             }
             Ok(other) => {
@@ -314,8 +410,14 @@ fn worker_loop(
 
         // Scheduled crash: the order arrived, the reply never will. The
         // master runs the same plan and books the round as degraded.
+        // Crashing *here* — after draining every earlier order FIFO —
+        // is what keeps the set of results this incarnation did send
+        // independent of crash-signal timing.
         if let Some(plan) = &faults {
             if plan.crashes_at(w, order.round) {
+                if park_on_crash {
+                    park_forever();
+                }
                 return;
             }
         }
@@ -374,7 +476,7 @@ fn worker_loop(
             WirePayload::Plain(out)
         };
 
-        let msg = ResultMsg { round, worker: share, payload };
+        let msg = ResultMsg { round, worker: share, executor: w, payload };
         wire::encode_result_into(&msg, &mut frame_buf);
         // Scheduled wire corruption: flip one body byte so the frame
         // fails its CRC at the master — the result is lost in transit,

@@ -1,0 +1,282 @@
+//! Child-process supervision for the process fabric — DESIGN.md §9.
+//!
+//! One [`Supervisor`] owns every worker child the
+//! [`Proc`](crate::transport::Proc) fabric spawns. Per worker it tracks
+//! the live [`Child`] handle, its pid, and its generation; every exit —
+//! a fault-injection SIGKILL, a teardown, or a child dying on its own —
+//! is reaped (no zombies) and appended to a shared [`ExitLog`] with the
+//! exit code or terminating signal captured. The testbed serializes
+//! that log into SCENARIO_REPORT.json as the OS-level evidence that
+//! crashes really were crashes (signal 9, not a polite return).
+//!
+//! State machine per slot: `Empty → Running → (killed | reaped) →
+//! Empty`, re-entered by every respawn with the generation bumped by
+//! the caller ([`WorkerPool::respawn`](super::WorkerPool::respawn) via
+//! `Proc::respawn_process`). Teardown escalates: SIGTERM first, a
+//! bounded grace poll, then SIGKILL — so a hung child can stall
+//! shutdown only for the grace window, never forever.
+
+use std::io;
+use std::os::unix::process::ExitStatusExt;
+use std::process::{Child, Command, ExitStatus};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why the supervisor recorded an exit.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExitCause {
+    /// Fault injection: the supervisor SIGKILLed the child to make way
+    /// for a respawned incarnation.
+    Killed,
+    /// The child was already dead when the supervisor went to reap it
+    /// (it exited on its own — clean shutdown or a crash of its own).
+    Exited,
+    /// Teardown: SIGTERM, grace, then SIGKILL if it lingered.
+    Shutdown,
+}
+
+impl ExitCause {
+    /// Stable lowercase name (serialized into SCENARIO_REPORT.json).
+    pub fn name(self) -> &'static str {
+        match self {
+            ExitCause::Killed => "killed",
+            ExitCause::Exited => "exited",
+            ExitCause::Shutdown => "shutdown",
+        }
+    }
+}
+
+/// One reaped child: who it was and how it ended.
+#[derive(Clone, Debug)]
+pub struct ExitRecord {
+    /// Worker index.
+    pub worker: usize,
+    /// Incarnation the child was running.
+    pub generation: u32,
+    /// OS process id.
+    pub pid: u32,
+    /// Exit code, when the child exited normally.
+    pub code: Option<i32>,
+    /// Terminating signal, when it was killed (9 for the supervisor's
+    /// own SIGKILLs).
+    pub signal: Option<i32>,
+    /// Why the supervisor reaped it.
+    pub cause: ExitCause,
+}
+
+impl ExitRecord {
+    /// Did this child die by SIGKILL?
+    pub fn sigkilled(&self) -> bool {
+        self.signal == Some(9)
+    }
+}
+
+/// Shared, append-only view of the supervisor's exit records. Handed
+/// out live so the testbed can read it *after* the fabric (and the
+/// supervisor inside it) has been torn down.
+pub type ExitLog = Arc<Mutex<Vec<ExitRecord>>>;
+
+struct Slot {
+    child: Option<Child>,
+    generation: u32,
+    pid: u32,
+}
+
+/// Spawns, kills, reaps, and respawns the worker children of one
+/// process fabric.
+pub struct Supervisor {
+    slots: Vec<Slot>,
+    log: ExitLog,
+}
+
+impl Supervisor {
+    /// A supervisor with `n` empty slots.
+    pub fn new(n: usize) -> Self {
+        Self {
+            slots: (0..n).map(|_| Slot { child: None, generation: 0, pid: 0 }).collect(),
+            log: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    /// The shared exit log (alive after the supervisor is gone).
+    pub fn log(&self) -> ExitLog {
+        Arc::clone(&self.log)
+    }
+
+    /// Number of slots.
+    pub fn n(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Is worker `w`'s child handle still held (spawned, not reaped)?
+    pub fn running(&self, w: usize) -> bool {
+        self.slots.get(w).is_some_and(|s| s.child.is_some())
+    }
+
+    /// The generation of the child currently in slot `w`.
+    pub fn generation(&self, w: usize) -> u32 {
+        self.slots.get(w).map_or(0, |s| s.generation)
+    }
+
+    /// Launch `cmd` as worker `w`'s incarnation `generation`. The slot
+    /// must be empty (kill/reap the predecessor first). Returns the
+    /// child's pid.
+    pub fn spawn(&mut self, w: usize, generation: u32, cmd: &mut Command) -> io::Result<u32> {
+        let slot = &mut self.slots[w];
+        assert!(slot.child.is_none(), "slot {w} still holds a child; reap it first");
+        let child = cmd.spawn()?;
+        let pid = child.id();
+        *slot = Slot { child: Some(child), generation, pid };
+        Ok(pid)
+    }
+
+    /// SIGKILL worker `w`'s child and reap it — the fault-injection
+    /// kill. If the child already exited on its own, its real status is
+    /// reaped and recorded as [`ExitCause::Exited`] instead. No-op when
+    /// the slot is empty.
+    pub fn kill(&mut self, w: usize) -> Option<ExitRecord> {
+        let slot = self.slots.get_mut(w)?;
+        let mut child = slot.child.take()?;
+        let (status, cause) = match child.try_wait() {
+            Ok(Some(status)) => (status, ExitCause::Exited),
+            _ => {
+                // Child::kill is SIGKILL on unix; wait() reaps.
+                let _ = child.kill();
+                match child.wait() {
+                    Ok(status) => (status, ExitCause::Killed),
+                    Err(_) => return None,
+                }
+            }
+        };
+        Some(self.record(w, slot_info(&self.slots[w]), status, cause))
+    }
+
+    /// Teardown kill with escalation: SIGTERM, poll up to `grace`, then
+    /// SIGKILL + blocking reap. No-op when the slot is empty.
+    pub fn terminate(&mut self, w: usize, grace: Duration) -> Option<ExitRecord> {
+        let slot = self.slots.get_mut(w)?;
+        let mut child = slot.child.take()?;
+        sigterm(slot.pid);
+        let deadline = Instant::now() + grace;
+        let status = loop {
+            match child.try_wait() {
+                Ok(Some(status)) => break status,
+                Ok(None) if Instant::now() < deadline => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                _ => {
+                    // Grace expired (or try_wait failed): escalate.
+                    let _ = child.kill();
+                    match child.wait() {
+                        Ok(status) => break status,
+                        Err(_) => return None,
+                    }
+                }
+            }
+        };
+        Some(self.record(w, slot_info(&self.slots[w]), status, ExitCause::Shutdown))
+    }
+
+    /// Tear every remaining child down (TERM → grace → KILL each).
+    pub fn shutdown(&mut self, grace: Duration) {
+        for w in 0..self.slots.len() {
+            self.terminate(w, grace);
+        }
+    }
+
+    fn record(
+        &mut self,
+        worker: usize,
+        (generation, pid): (u32, u32),
+        status: ExitStatus,
+        cause: ExitCause,
+    ) -> ExitRecord {
+        let rec = ExitRecord {
+            worker,
+            generation,
+            pid,
+            code: status.code(),
+            signal: status.signal(),
+            cause,
+        };
+        self.log.lock().unwrap().push(rec.clone());
+        rec
+    }
+}
+
+fn slot_info(slot: &Slot) -> (u32, u32) {
+    (slot.generation, slot.pid)
+}
+
+/// Best-effort SIGTERM without a libc dependency: the one process
+/// primitive std does not expose. Failure is harmless — the caller
+/// escalates to `Child::kill` (SIGKILL) after the grace window anyway.
+fn sigterm(pid: u32) {
+    let _ = Command::new("kill").arg("-TERM").arg(pid.to_string()).status();
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        // Backstop: never leak children, even on panic paths. Normal
+        // teardown already emptied every slot via shutdown().
+        self.shutdown(Duration::from_millis(500));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sleeper() -> Command {
+        let mut cmd = Command::new("sleep");
+        cmd.arg("600");
+        cmd
+    }
+
+    #[test]
+    fn kill_reaps_with_signal_nine() {
+        let mut sup = Supervisor::new(2);
+        let pid = sup.spawn(0, 0, &mut sleeper()).unwrap();
+        assert!(sup.running(0));
+        let rec = sup.kill(0).expect("a record");
+        assert_eq!((rec.worker, rec.generation, rec.pid), (0, 0, pid));
+        assert_eq!(rec.signal, Some(9), "Child::kill must be SIGKILL");
+        assert!(rec.sigkilled());
+        assert_eq!(rec.cause, ExitCause::Killed);
+        assert!(!sup.running(0), "slot must be empty after the reap");
+        assert!(sup.kill(0).is_none(), "empty slot: nothing to kill");
+    }
+
+    #[test]
+    fn a_child_that_already_exited_is_reaped_as_exited() {
+        let mut sup = Supervisor::new(1);
+        let mut cmd = Command::new("true");
+        sup.spawn(0, 3, &mut cmd).unwrap();
+        // Give the child time to exit on its own.
+        std::thread::sleep(Duration::from_millis(200));
+        let rec = sup.kill(0).expect("a record");
+        assert_eq!(rec.cause, ExitCause::Exited);
+        assert_eq!(rec.code, Some(0));
+        assert_eq!(rec.signal, None);
+        assert_eq!(rec.generation, 3);
+    }
+
+    #[test]
+    fn respawn_cycle_tracks_generations_and_log() {
+        let mut sup = Supervisor::new(1);
+        let log = sup.log();
+        sup.spawn(0, 0, &mut sleeper()).unwrap();
+        sup.kill(0).unwrap();
+        sup.spawn(0, 1, &mut sleeper()).unwrap();
+        assert_eq!(sup.generation(0), 1);
+        sup.shutdown(Duration::from_millis(300));
+        let log = log.lock().unwrap();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0].generation, 0);
+        assert_eq!(log[0].cause, ExitCause::Killed);
+        assert_eq!(log[1].generation, 1);
+        assert_eq!(log[1].cause, ExitCause::Shutdown);
+        // `sleep` has no TERM handler, so the graceful leg suffices.
+        assert!(log[1].signal.is_some());
+    }
+}

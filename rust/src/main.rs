@@ -11,6 +11,11 @@
 //!   crash/respawn churn, colluders, wire corruption) through the
 //!   scenario engine and report per-round outcomes + the determinism
 //!   digest (see also the dedicated `scenario_runner` bin).
+//! * `worker` — run one worker as a standalone process: dial the
+//!   master, send the `Register` handshake, then serve the normal
+//!   worker loop over the versioned TCP wire protocol. Forked by the
+//!   process fabric (`--transport proc`) and the `testbed` bin; usable
+//!   by hand for ad-hoc cluster experiments (DESIGN.md §9).
 //! * `info`   — print the resolved config, artifact registry, and the
 //!   Table II complexity row for the chosen parameters.
 
@@ -20,12 +25,13 @@ use spacdc::coding::CodedTask;
 use spacdc::config::{
     parse_threads_token, SchemeKind, SystemConfig, TransportKind, TransportSecurity,
 };
-use spacdc::coordinator::MasterBuilder;
+use spacdc::coordinator::{MasterBuilder, WorkerHarness};
 use spacdc::dl::{train, TrainerOptions};
 use spacdc::matrix::{gram, split_rows, Matrix};
 use spacdc::rng::rng_from_seed;
 use spacdc::runtime::{Executor, RuntimeService, WorkerOp};
-use spacdc::sim::{run_scenario_with, Scenario};
+use spacdc::sim::{parse_crash, run_scenario_with, FaultPlan, Scenario};
+use spacdc::transport::WorkerLink;
 use std::path::Path;
 use std::sync::Arc;
 
@@ -38,7 +44,7 @@ fn specs() -> Vec<ArgSpec> {
         ArgSpec::opt("colluders", "3", "number of colluders T"),
         ArgSpec::opt("partitions", "4", "number of data partitions K"),
         ArgSpec::opt("epochs", "10", "training epochs"),
-        ArgSpec::opt("transport", "inproc", "worker link fabric: inproc|tcp"),
+        ArgSpec::opt("transport", "inproc", "worker link fabric: inproc|tcp|proc"),
         ArgSpec::opt("security", "mea-ecc", "payload sealing: plain|mea-ecc"),
         ArgSpec::opt("round-deadline-s", "60", "per-round result-collection deadline (s)"),
         ArgSpec::opt("threads", "auto", "master-side thread-pool width (auto = one per core)"),
@@ -54,8 +60,29 @@ fn specs() -> Vec<ArgSpec> {
     ]
 }
 
+/// Arguments of the `worker` subcommand — a different vocabulary from
+/// the master-side subcommands (no scheme/topology knobs: the master
+/// owns those and ships work fully encoded), so it dispatches before
+/// the main spec parse.
+fn worker_specs() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec::required("connect", "master address host:port"),
+        ArgSpec::required("worker", "worker id W"),
+        ArgSpec::required("master-pk", "master public key (hex, from the forking fabric)"),
+        ArgSpec::opt("generation", "0", "incarnation number (bumped on respawn)"),
+        ArgSpec::opt("seed", "49374", "experiment seed (must match the master's)"),
+        ArgSpec::opt("crashes", "", "crash schedule: comma-joined w@r[+d] tokens"),
+        ArgSpec::opt("corrupt-rate", "0", "wire corruption probability per result"),
+        ArgSpec::opt("fault-seed", "0", "fault-plan seed (must match the master's)"),
+        ArgSpec::flag("help", "show usage"),
+    ]
+}
+
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.first().map(String::as_str) == Some("worker") {
+        return cmd_worker(&args[1..]);
+    }
     let specs = specs();
     let parsed = match parse(&args, &specs) {
         Ok(p) => p,
@@ -65,7 +92,7 @@ fn main() -> anyhow::Result<()> {
         }
     };
     if parsed.has_flag("help") || parsed.positional.is_empty() {
-        print!("{}", usage("spacdc <train|round|sweep|scenario|info>", &specs));
+        print!("{}", usage("spacdc <train|round|sweep|scenario|worker|info>", &specs));
         return Ok(());
     }
 
@@ -252,6 +279,81 @@ fn cmd_scenario(
     print!("{}", report.render_table());
     std::fs::write("SCENARIO_REPORT.json", report.to_json())?;
     println!("wrote SCENARIO_REPORT.json");
+    Ok(())
+}
+
+/// `spacdc worker` — one worker node as a standalone process.
+///
+/// Dials the master, then hands the socket to the same
+/// [`WorkerHarness`] the in-proc fabrics run on a thread: the harness
+/// sends the `Register { worker, generation, pk }` handshake and serves
+/// orders until the socket closes (master gone → clean exit). The fault
+/// plan arrives on the command line, re-serialized by the process
+/// fabric from the scenario, so a child crashes on exactly the rounds
+/// the in-proc run would. A *crashed* process parks instead of exiting
+/// — the supervisor's SIGKILL must be the actual cause of death so the
+/// exit log proves the fault ran at the OS level (DESIGN.md §9).
+fn cmd_worker(args: &[String]) -> anyhow::Result<()> {
+    let specs = worker_specs();
+    let parsed = match parse(args, &specs) {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("{e}");
+            std::process::exit(2);
+        }
+    };
+    if parsed.has_flag("help") {
+        print!("{}", usage("spacdc worker --connect <host:port>", &specs));
+        return Ok(());
+    }
+    let need = |name: &str| -> anyhow::Result<&str> {
+        parsed
+            .get(name)
+            .filter(|s| !s.is_empty())
+            .ok_or_else(|| anyhow::anyhow!("spacdc worker: missing required --{name}"))
+    };
+    let addr = need("connect")?;
+    let worker: usize = need("worker")?.parse().map_err(|e| anyhow::anyhow!("--worker: {e}"))?;
+    let master_pk = spacdc::wire::point_from_hex(need("master-pk")?)
+        .map_err(|e| anyhow::anyhow!("--master-pk: {e}"))?;
+    let generation: u32 = parsed.get_str("generation").parse()
+        .map_err(|e| anyhow::anyhow!("--generation: {e}"))?;
+    let seed = parsed.get_u64("seed");
+
+    let crashes: Vec<_> = parsed
+        .get("crashes")
+        .unwrap_or("")
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| parse_crash(t).ok_or_else(|| anyhow::anyhow!("--crashes: bad token {t:?}")))
+        .collect::<Result<_, _>>()?;
+    let corrupt_rate = parsed.get_f64("corrupt-rate");
+    let faults = if crashes.is_empty() && corrupt_rate <= 0.0 {
+        None
+    } else {
+        Some(Arc::new(FaultPlan::new(crashes, corrupt_rate, parsed.get_u64("fault-seed"))))
+    };
+
+    let stream = std::net::TcpStream::connect(addr)
+        .map_err(|e| anyhow::anyhow!("spacdc worker: cannot reach master at {addr}: {e}"))?;
+    stream.set_nodelay(true)?;
+
+    let metrics = Arc::new(spacdc::metrics::MetricsRegistry::new());
+    let harness = WorkerHarness {
+        worker,
+        generation,
+        seed,
+        master_pk,
+        executor: Executor::native(metrics),
+        // Collusion taps cannot cross process boundaries; the digest
+        // never includes colluder shares, so parity with in-proc runs
+        // holds regardless (DESIGN.md §9).
+        collusion: None,
+        faults,
+        park_on_crash: true,
+    };
+    harness.run(WorkerLink::Tcp { stream });
     Ok(())
 }
 

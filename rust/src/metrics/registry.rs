@@ -49,6 +49,10 @@ pub mod names {
     /// Duplicate share copies discarded by first-result-wins (the losing
     /// side of a speculative race).
     pub const SPEC_WASTED: &str = "spec.wasted";
+    /// Buffered results computed by a *different* worker than the share's
+    /// original owner — speculative races won by the re-dispatch copy.
+    /// Attributable since wire v2 put the executor id on `ResultMsg`.
+    pub const SPEC_WON_BY_PROXY: &str = "spec.won_by_proxy";
     /// Worker crashes the master observed (injected, scheduled, or link
     /// death).
     pub const WORKER_CRASHES: &str = "lifecycle.crashes";

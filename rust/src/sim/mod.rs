@@ -13,5 +13,5 @@ mod straggler;
 
 pub use adversary::{correlation as correlation_of, CollusionPool, EavesdropLog, EavesdroppedMessage};
 pub use runner::{run_scenario, run_scenario_with, RoundRecord, RoundStatus, ScenarioReport};
-pub use scenario::{CrashEvent, FaultPlan, Scenario, ScenarioOp};
+pub use scenario::{parse_crash, CrashEvent, FaultPlan, Scenario, ScenarioOp};
 pub use straggler::{fresh_round_model, DelayModel, WorkerProfile};

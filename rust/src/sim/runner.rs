@@ -25,7 +25,7 @@
 
 use crate::coding::CodedTask;
 use crate::config::{SystemConfig, TransportKind};
-use crate::coordinator::{MasterBuilder, RoundError, StreamConfig};
+use crate::coordinator::{ExitRecord, MasterBuilder, RoundError, StreamConfig};
 use crate::matrix::{gram, split_rows, Matrix};
 use crate::metrics::{names, MetricsRegistry};
 use crate::rng::{derive_seed, rng_from_seed};
@@ -162,6 +162,13 @@ pub struct ScenarioReport {
     /// Duplicate share copies discarded, first-result-wins losers (not
     /// in the digest: which copy lost is a race).
     pub spec_wasted: u64,
+    /// Child-process exit records, in exit order — populated only on the
+    /// process fabric (`--transport proc`), where crashes are real
+    /// SIGKILLs and teardown is SIGTERM-then-SIGKILL. Includes the
+    /// final-teardown exits: the master is torn down before the report
+    /// is assembled. Excluded from the digest (pids and kill timing are
+    /// not deterministic); the *causes* are what the testbed asserts on.
+    pub process_exits: Vec<ExitRecord>,
 }
 
 /// FNV-1a, 64-bit: tiny, dependency-free, good enough to pin a CI
@@ -363,6 +370,16 @@ pub fn run_scenario_with(
         leak_n += 1;
     }
 
+    // Tear the cluster down *before* assembling the report so a process
+    // fabric's teardown exits (SIGTERM → exit, or escalation) land in
+    // the log too; the handle outlives the supervisor. In-process
+    // fabrics have no log and report an empty list.
+    let exit_log = master.exit_log();
+    let final_generations = master.worker_generations();
+    drop(master);
+    let process_exits: Vec<ExitRecord> =
+        exit_log.map_or_else(Vec::new, |log| log.lock().unwrap().clone());
+
     let wall = metrics.histogram("scenario.round_wall_s").unwrap_or_default();
     let ok_rounds = records.iter().filter(|r| r.status == RoundStatus::Ok).count();
     let degraded_rounds = records.iter().filter(|r| r.degraded).count() as u64;
@@ -393,11 +410,12 @@ pub fn run_scenario_with(
         crashes: metrics.get(names::WORKER_CRASHES),
         respawns: metrics.get(names::WORKER_RESPAWNS),
         degraded_rounds,
-        final_generations: master.worker_generations(),
+        final_generations,
         rounds_per_s: stream.rounds_per_s,
         spec_redispatched: stream.redispatched,
         spec_recovered: stream.recovered,
         spec_wasted: stream.wasted,
+        process_exits,
         records,
     })
 }
@@ -432,6 +450,30 @@ impl ScenarioReport {
             .collect();
         let generations: Vec<String> =
             self.final_generations.iter().map(|g| g.to_string()).collect();
+        let exits: Vec<String> = self
+            .process_exits
+            .iter()
+            .map(|e| {
+                let code = e.code.map_or("null".to_string(), |c| c.to_string());
+                let signal = e.signal.map_or("null".to_string(), |s| s.to_string());
+                format!(
+                    "    {{\"worker\": {}, \"generation\": {}, \"pid\": {}, \"code\": {}, \
+                     \"signal\": {}, \"cause\": \"{}\"}}",
+                    e.worker,
+                    e.generation,
+                    e.pid,
+                    code,
+                    signal,
+                    e.cause.name()
+                )
+            })
+            .collect();
+        let sigkilled = self.process_exits.iter().filter(|e| e.sigkilled()).count();
+        let process_section = format!(
+            "\"process\": {{\"sigkilled\": {}, \"exits\": [\n{}\n  ]}},\n  ",
+            sigkilled,
+            exits.join(",\n")
+        );
         format!(
             "{{\n  \"schema\": \"scenario-report-v2\",\n  \"scenario\": \"{}\",\n  \
              \"scheme\": \"{}\",\n  \"op\": \"{}\",\n  \"transport\": \"{}\",\n  \
@@ -446,6 +488,7 @@ impl ScenarioReport {
              \"colluder_shares\": {}}},\n  \
              \"lifecycle\": {{\"crashes\": {}, \"respawns\": {}, \"degraded_rounds\": {}, \
              \"final_generations\": [{}]}},\n  \
+             {process_section}\
              \"per_round\": [\n{}\n  ]\n}}\n",
             json_escape(&self.scenario),
             self.scheme,
@@ -528,6 +571,14 @@ impl ScenarioReport {
             "stream: {:.2} rounds/s · speculation redispatched {} / recovered {} / wasted {}\n",
             self.rounds_per_s, self.spec_redispatched, self.spec_recovered, self.spec_wasted,
         ));
+        if !self.process_exits.is_empty() {
+            let sigkilled = self.process_exits.iter().filter(|e| e.sigkilled()).count();
+            out.push_str(&format!(
+                "process: {} child exits recorded ({} by SIGKILL)\n",
+                self.process_exits.len(),
+                sigkilled
+            ));
+        }
         out.push_str(&format!("digest: {}\n", self.digest));
         out
     }

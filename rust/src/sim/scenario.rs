@@ -381,8 +381,20 @@ impl Scenario {
     }
 }
 
+impl CrashEvent {
+    /// Render to the token [`parse_crash`] accepts (`w@r` /
+    /// `w@r+respawn`) — how the process fabric hands a worker its slice
+    /// of the fault plan on the command line.
+    pub fn to_token(&self) -> String {
+        match self.respawn_after {
+            Some(d) => format!("{}@{}+{}", self.worker, self.round, d),
+            None => format!("{}@{}", self.worker, self.round),
+        }
+    }
+}
+
 /// Parse one crash event token: `worker@round` or `worker@round+respawn`.
-fn parse_crash(s: &str) -> Option<CrashEvent> {
+pub fn parse_crash(s: &str) -> Option<CrashEvent> {
     let (worker, rest) = s.split_once('@')?;
     let worker = worker.trim().parse().ok()?;
     let (round, respawn_after) = match rest.split_once('+') {
@@ -412,6 +424,22 @@ impl FaultPlan {
     /// No faults at all?
     pub fn is_empty(&self) -> bool {
         self.crashes.is_empty() && self.corrupt_rate <= 0.0
+    }
+
+    /// The crash schedule (re-serialized onto worker-process command
+    /// lines by the process fabric).
+    pub fn crash_events(&self) -> &[CrashEvent] {
+        &self.crashes
+    }
+
+    /// The wire-corruption probability.
+    pub fn corrupt_rate(&self) -> f64 {
+        self.corrupt_rate
+    }
+
+    /// The seed the corruption draws derive from.
+    pub fn seed(&self) -> u64 {
+        self.seed
     }
 
     /// Does `worker` crash mid-`round`? (It receives the order and never

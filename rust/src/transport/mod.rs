@@ -14,6 +14,12 @@
 //!   result frames off its socket into the merged inbound channel, so
 //!   the master side is transport-agnostic. This is the gateway to
 //!   out-of-process workers: the worker loop already speaks only bytes.
+//! * [`Proc`] — real child processes (DESIGN.md §9): each worker is a
+//!   `spacdc worker` process that dials the master's listener and is
+//!   identified by the first frame it sends (its `Register`). A
+//!   [`Supervisor`](crate::coordinator::Supervisor) tracks every
+//!   child's pid, generation, and exit status; respawn is a real
+//!   SIGKILL + re-exec, not a thread swap.
 //!
 //! [`connect`] wires a whole fabric at once and returns the three parts:
 //! the master-side sender ([`Transport`]), the merged inbound receiver,
@@ -26,10 +32,14 @@
 //! so both counters measure real serialized frames, whatever the fabric.
 
 mod inproc;
+mod proc;
 mod tcp;
 
 pub use inproc::InProc;
+pub use proc::{Proc, ProcConfig, WORKER_EXE_ENV};
 pub use tcp::Tcp;
+
+use crate::coordinator::ExitLog;
 
 use crate::config::TransportKind;
 use crate::metrics::MetricsRegistry;
@@ -92,6 +102,31 @@ pub trait Transport: Send + Sync {
     /// [`WorkerPool::respawn`](crate::coordinator::WorkerPool::respawn)).
     /// The old endpoint — wherever it is — sees its link as closed.
     fn relink(&self, w: usize) -> Result<WorkerLink, TransportError>;
+
+    /// Does this fabric run workers as separate OS processes? When
+    /// true, the pool spawns no worker threads (the fabric's `links`
+    /// are empty) and respawn goes through [`respawn_process`]
+    /// (Transport::respawn_process) instead of [`relink`]
+    /// (Transport::relink).
+    fn out_of_process(&self) -> bool {
+        false
+    }
+
+    /// Process fabrics only: SIGKILL/reap worker `w`'s child, spawn a
+    /// replacement incarnation of `generation`, and forward its
+    /// `Register` frame into the merged inbound channel (the master's
+    /// collector installs it). Thread fabrics never route here.
+    fn respawn_process(&self, w: usize, generation: u32) -> Result<(), TransportError> {
+        let _ = (w, generation);
+        Err(TransportError::Setup("not a process fabric".into()))
+    }
+
+    /// Process fabrics only: a live handle to the supervisor's
+    /// per-child exit records. The testbed reads it *after* teardown,
+    /// when shutdown kills have been recorded too.
+    fn exit_records(&self) -> Option<ExitLog> {
+        None
+    }
 }
 
 /// A worker's endpoint of the fabric: a blocking source of order frames
@@ -148,10 +183,14 @@ impl WorkerLink {
 /// readings there are deterministic; the counters are atomics only so
 /// the book can be shared with observers on other threads.
 ///
-/// Granularity is per *round* (orders are settled when their round
-/// retires, not when each individual result lands): result frames carry
-/// the share id, not the executor id, so per-result settling would need
-/// a wire-format extension — noted as a follow-on in ROADMAP.md.
+/// Settling is per *result* since wire v2: result frames carry the
+/// executor id, so the collector settles one order against the worker
+/// that actually ran it the moment its result lands
+/// ([`settle_one`](LoadBook::settle_one)). Orders whose results never
+/// come home — crashed workers, corrupted frames, speculation losers
+/// that died — are settled as a batch when their round retires
+/// ([`settle`](LoadBook::settle) over the unsettled remainder), so the
+/// book always returns to "idle" once a round is done.
 #[derive(Debug)]
 pub struct LoadBook {
     outstanding: Vec<AtomicU64>,
@@ -167,6 +206,18 @@ impl LoadBook {
     pub fn note_sent(&self, w: usize) {
         if let Some(c) = self.outstanding.get(w) {
             c.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Settle one order against worker `w` — the per-result path, taken
+    /// by the collector the moment a result frame lands, keyed on the
+    /// frame's executor id.
+    pub fn settle_one(&self, w: usize) {
+        if let Some(c) = self.outstanding.get(w) {
+            // Saturating: a double-settle must not wrap the signal.
+            let _ = c.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+                Some(v.saturating_sub(1))
+            });
         }
     }
 
@@ -221,6 +272,12 @@ pub fn connect(
     match kind {
         TransportKind::InProc => Ok(InProc::connect(n, metrics)),
         TransportKind::Tcp => Tcp::connect(n, metrics),
+        // The process fabric needs the worker harness parameters (seed,
+        // master pk, fault plan) for its children's command lines —
+        // WorkerPool::spawn wires it via Proc::connect directly.
+        TransportKind::Proc => Err(TransportError::Setup(
+            "the process fabric needs spawn parameters; wire it through WorkerPool::spawn".into(),
+        )),
     }
 }
 

@@ -1,0 +1,517 @@
+//! The process fabric: real `spacdc worker` child processes over
+//! localhost TCP, under a [`Supervisor`] — DESIGN.md §9.
+//!
+//! The TCP fabric ([`super::tcp`]) exercises the wire format but both
+//! endpoints still live in the master's address space, so "crash" means
+//! a thread returning and "respawn" means swapping a socket. Here the
+//! endpoints are genuinely separate OS processes: the master binds a
+//! listener, forks `n` children of its own executable running the
+//! `worker` subcommand, and each child dials back and *introduces
+//! itself* — the first frame on every inbound connection must be a
+//! `Register { worker, generation, pk }` control frame, which both
+//! identifies the connection (no dial/accept pairing trick works across
+//! processes) and is forwarded verbatim into the merged inbound channel
+//! so the pool's bring-up drain and the collector's directory see the
+//! exact handshake the in-proc fabrics produce.
+//!
+//! Respawn is the real thing: [`Transport::respawn_process`] SIGKILLs
+//! the old child through the [`Supervisor`] (capturing its exit status
+//! — signal 9 — in the shared [`ExitLog`]), spawns a replacement with
+//! the bumped generation on its command line, and waits for the new
+//! child's `Register` before swapping the send slot. Crashed children
+//! *park* rather than exit ([`crate::coordinator::WorkerHarness`]), so
+//! the SIGKILL is the actual cause of death and the exit log is
+//! evidence the fault plan ran at the OS level.
+//!
+//! A connection that dies (or stalls, or talks junk) before completing
+//! its `Register` is reaped: the socket is dropped and the accept loop
+//! keeps going until the deadline. That makes half-open sockets a
+//! bounded nuisance rather than a bring-up wedge.
+//!
+//! Teardown: the supervisor SIGTERMs (then SIGKILLs) every child;
+//! workers that lost their master earlier already exited on socket EOF.
+//! The supervisor's `Drop` is the backstop for panics and Ctrl-C paths
+//! that skip orderly shutdown, so the testbed never leaks children.
+
+use super::tcp::spawn_bridge;
+use super::{Fabric, LoadBook, Transport, TransportError, WorkerLink};
+use crate::config::TransportKind;
+use crate::coordinator::{ControlMsg, ExitLog, Supervisor};
+use crate::ecc::Point;
+use crate::field::Fp61;
+use crate::metrics::{names, MetricsRegistry};
+use crate::sim::FaultPlan;
+use crate::wire::{self, WireMessage};
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::mpsc::{self, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Env override for the worker executable (used by CI and tests whose
+/// own binary is not `spacdc`, e.g. `cargo test` runners).
+pub const WORKER_EXE_ENV: &str = "SPACDC_WORKER_EXE";
+
+/// Everything a child process needs on its command line.
+#[derive(Clone)]
+pub struct ProcConfig {
+    /// Master seed; children derive per-worker noise exactly like
+    /// in-proc incarnations do.
+    pub seed: u64,
+    /// Master's public key, hex-encoded onto the child's command line
+    /// so sealed results verify.
+    pub master_pk: Point<Fp61>,
+    /// Fault plan forwarded to children (`--crashes`/`--corrupt-rate`);
+    /// `None` means a clean run.
+    pub faults: Option<Arc<FaultPlan>>,
+}
+
+/// Master-side sender over per-child localhost sockets.
+pub struct Proc {
+    /// Kept bound so respawned children can dial back in.
+    listener: TcpListener,
+    addr: SocketAddr,
+    streams: Vec<Mutex<TcpStream>>,
+    result_tx: Sender<Vec<u8>>,
+    metrics: Arc<MetricsRegistry>,
+    bridges: Mutex<Vec<JoinHandle<()>>>,
+    supervisor: Mutex<Supervisor>,
+    exe: PathBuf,
+    cfg: ProcConfig,
+}
+
+/// How long bring-up waits for all `n` children to register.
+const BRINGUP_DEADLINE: Duration = Duration::from_secs(30);
+/// How long a respawned child gets to dial back and register.
+const RESPAWN_DEADLINE: Duration = Duration::from_secs(10);
+/// Per-connection cap on reading the identifying `Register` frame — a
+/// half-open socket can stall at most this long before being reaped.
+const IDENT_TIMEOUT: Duration = Duration::from_secs(1);
+
+impl Proc {
+    /// Fork `n` worker processes and wait for each to register.
+    ///
+    /// The returned fabric has *no* [`WorkerLink`]s — the workers run in
+    /// their own processes, so [`crate::coordinator::WorkerPool`] spawns
+    /// no threads. Each child's `Register` frame is forwarded into the
+    /// inbound channel before this returns, so the pool's usual
+    /// bring-up drain sees `n` registrations just like any other fabric.
+    pub fn connect(
+        n: usize,
+        cfg: ProcConfig,
+        metrics: Arc<MetricsRegistry>,
+    ) -> Result<Fabric, TransportError> {
+        let setup = |e: std::io::Error| TransportError::Setup(e.to_string());
+        let listener = TcpListener::bind(("127.0.0.1", 0)).map_err(setup)?;
+        let addr = listener.local_addr().map_err(setup)?;
+        let exe = worker_exe()?;
+        let (result_tx, inbound) = mpsc::channel::<Vec<u8>>();
+
+        let mut supervisor = Supervisor::new(n);
+        for w in 0..n {
+            let mut cmd = worker_command(&exe, addr, w, 0, &cfg);
+            supervisor
+                .spawn(w, 0, &mut cmd)
+                .map_err(|e| TransportError::Setup(format!("spawn worker {w}: {e}")))?;
+        }
+
+        // Children dial back in arrival order, not worker order: sort
+        // them out by the worker id each one registers with.
+        let deadline = Instant::now() + BRINGUP_DEADLINE;
+        let mut slots: Vec<Option<TcpStream>> = (0..n).map(|_| None).collect();
+        let mut bridges = Vec::with_capacity(n);
+        while slots.iter().any(Option::is_none) {
+            let (stream, frame, worker, generation) = accept_registered(&listener, deadline)?;
+            if worker >= n || generation != 0 || slots[worker].is_some() {
+                // Not a child of ours (or a duplicate): reap it.
+                let _ = stream.shutdown(Shutdown::Both);
+                continue;
+            }
+            let reader = stream.try_clone().map_err(setup)?;
+            bridges.push(spawn_bridge(worker, reader, result_tx.clone()));
+            slots[worker] = Some(stream);
+            result_tx
+                .send(frame)
+                .map_err(|_| TransportError::Setup("inbound channel closed during bring-up".into()))?;
+        }
+        let streams = slots.into_iter().map(|s| Mutex::new(s.unwrap())).collect();
+
+        let transport = Box::new(Proc {
+            listener,
+            addr,
+            streams,
+            result_tx,
+            metrics,
+            bridges: Mutex::new(bridges),
+            supervisor: Mutex::new(supervisor),
+            exe,
+            cfg,
+        });
+        Ok(Fabric { transport, inbound, links: Vec::new(), load: Arc::new(LoadBook::new(n)) })
+    }
+}
+
+/// Accept connections until one completes a `Register` handshake;
+/// reap any that die, stall, or talk junk before identifying.
+///
+/// Returns the socket, the raw `Register` frame (for forwarding), and
+/// the claimed worker id + generation.
+fn accept_registered(
+    listener: &TcpListener,
+    deadline: Instant,
+) -> Result<(TcpStream, Vec<u8>, usize, u32), TransportError> {
+    let setup = |e: std::io::Error| TransportError::Setup(e.to_string());
+    listener.set_nonblocking(true).map_err(setup)?;
+    loop {
+        let remaining = deadline.saturating_duration_since(Instant::now());
+        if remaining.is_zero() {
+            listener.set_nonblocking(false).map_err(setup)?;
+            return Err(TransportError::Setup(
+                "timed out waiting for a worker process to register".into(),
+            ));
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                listener.set_nonblocking(false).map_err(setup)?;
+                match identify(stream, remaining) {
+                    Some(registered) => return Ok(registered),
+                    None => {
+                        // Connect-then-die, half-open stall, or junk:
+                        // the socket was dropped. Keep accepting.
+                        listener.set_nonblocking(true).map_err(setup)?;
+                    }
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                listener.set_nonblocking(false).map_err(setup)?;
+                return Err(setup(e));
+            }
+        }
+    }
+}
+
+/// Read and validate the identifying first frame off a fresh
+/// connection. `None` (socket dropped) if the peer hangs up, stalls
+/// past the ident timeout, or sends anything but a `Register`.
+fn identify(stream: TcpStream, remaining: Duration) -> Option<(TcpStream, Vec<u8>, usize, u32)> {
+    stream.set_nonblocking(false).ok()?;
+    stream.set_nodelay(true).ok()?;
+    stream.set_read_timeout(Some(remaining.min(IDENT_TIMEOUT))).ok()?;
+    let mut reader = stream.try_clone().ok()?;
+    let frame = wire::read_frame(&mut reader).ok()?;
+    let (worker, generation) = match wire::decode_message(&frame) {
+        Ok(WireMessage::Control(ControlMsg::Register { worker, generation, .. })) => {
+            (worker, generation)
+        }
+        _ => return None,
+    };
+    stream.set_read_timeout(None).ok()?;
+    Some((stream, frame, worker, generation))
+}
+
+/// Resolve the `spacdc` executable to fork workers from: the
+/// `SPACDC_WORKER_EXE` env override, the current executable if it *is*
+/// `spacdc`, or a sibling `spacdc` next to (or above, for
+/// `target/debug/deps/` test runners) the current executable.
+fn worker_exe() -> Result<PathBuf, TransportError> {
+    if let Ok(p) = std::env::var(WORKER_EXE_ENV) {
+        let p = PathBuf::from(p);
+        if p.is_file() {
+            return Ok(p);
+        }
+        return Err(TransportError::Setup(format!(
+            "{WORKER_EXE_ENV}={} is not a file",
+            p.display()
+        )));
+    }
+    let me = std::env::current_exe()
+        .map_err(|e| TransportError::Setup(format!("current_exe: {e}")))?;
+    if me.file_name().and_then(|f| f.to_str()) == Some("spacdc") {
+        return Ok(me);
+    }
+    // Test binaries live in target/<profile>/deps/; the spacdc binary
+    // sits one or two directories up.
+    for dir in me.ancestors().skip(1).take(3) {
+        let candidate = dir.join("spacdc");
+        if candidate.is_file() {
+            return Ok(candidate);
+        }
+    }
+    Err(TransportError::Setup(format!(
+        "cannot find the spacdc worker executable near {} — set {WORKER_EXE_ENV}",
+        me.display()
+    )))
+}
+
+/// Build the command line for one child incarnation.
+fn worker_command(
+    exe: &PathBuf,
+    addr: SocketAddr,
+    w: usize,
+    generation: u32,
+    cfg: &ProcConfig,
+) -> Command {
+    let mut cmd = Command::new(exe);
+    cmd.arg("worker")
+        .arg("--connect")
+        .arg(addr.to_string())
+        .arg("--worker")
+        .arg(w.to_string())
+        .arg("--generation")
+        .arg(generation.to_string())
+        .arg("--seed")
+        .arg(cfg.seed.to_string())
+        .arg("--master-pk")
+        .arg(wire::point_to_hex(&cfg.master_pk));
+    if let Some(plan) = &cfg.faults {
+        let tokens: Vec<String> = plan.crash_events().iter().map(|c| c.to_token()).collect();
+        if !tokens.is_empty() {
+            cmd.arg("--crashes").arg(tokens.join(","));
+        }
+        if plan.corrupt_rate() > 0.0 {
+            cmd.arg("--corrupt-rate").arg(plan.corrupt_rate().to_string());
+        }
+        cmd.arg("--fault-seed").arg(plan.seed().to_string());
+    }
+    cmd
+}
+
+impl Transport for Proc {
+    fn kind(&self) -> TransportKind {
+        TransportKind::Proc
+    }
+
+    fn workers(&self) -> usize {
+        self.streams.len()
+    }
+
+    fn send(&self, w: usize, frame: Vec<u8>) -> Result<(), TransportError> {
+        let stream = self.streams.get(w).ok_or_else(|| TransportError::WorkerDown {
+            worker: w,
+            detail: format!("no such link (fabric has {})", self.streams.len()),
+        })?;
+        let mut s = stream.lock().unwrap();
+        s.write_all(&frame).map_err(|e| TransportError::WorkerDown {
+            worker: w,
+            detail: format!("socket write failed: {e}"),
+        })?;
+        self.metrics.add(names::BYTES_TX, frame.len() as u64);
+        Ok(())
+    }
+
+    fn relink(&self, w: usize) -> Result<WorkerLink, TransportError> {
+        let _ = w;
+        Err(TransportError::Setup(
+            "the process fabric relinks via respawn_process, not relink".into(),
+        ))
+    }
+
+    fn out_of_process(&self) -> bool {
+        true
+    }
+
+    fn respawn_process(&self, w: usize, generation: u32) -> Result<(), TransportError> {
+        if w >= self.streams.len() {
+            return Err(TransportError::WorkerDown {
+                worker: w,
+                detail: format!("no such link (fabric has {})", self.streams.len()),
+            });
+        }
+        // Kill the old incarnation for real. A crashed child is parked,
+        // not exited, so this SIGKILL is its actual cause of death and
+        // the exit record carries signal 9. Results it already wrote
+        // survive in the socket buffer and drain through the old bridge
+        // until EOF.
+        self.supervisor.lock().unwrap().kill(w);
+
+        let mut cmd = worker_command(&self.exe, self.addr, w, generation, &self.cfg);
+        self.supervisor
+            .lock()
+            .unwrap()
+            .spawn(w, generation, &mut cmd)
+            .map_err(|e| TransportError::Setup(format!("respawn worker {w}: {e}")))?;
+
+        let deadline = Instant::now() + RESPAWN_DEADLINE;
+        let setup = |e: std::io::Error| TransportError::Setup(e.to_string());
+        loop {
+            let (stream, frame, worker, gen) = accept_registered(&self.listener, deadline)?;
+            if worker != w || gen != generation {
+                // A stale or foreign connection — reap it and wait for
+                // the incarnation we just spawned.
+                let _ = stream.shutdown(Shutdown::Both);
+                continue;
+            }
+            let reader = stream.try_clone().map_err(setup)?;
+            // Swap the send slot *before* forwarding the Register:
+            // once the directory flips the worker to Alive, dispatch
+            // must land on the new socket, never the corpse's.
+            {
+                let mut s = self.streams[w].lock().unwrap();
+                *s = stream;
+            }
+            self.bridges.lock().unwrap().push(spawn_bridge(w, reader, self.result_tx.clone()));
+            self.result_tx.send(frame).map_err(|_| {
+                TransportError::Setup("inbound channel closed during respawn".into())
+            })?;
+            return Ok(());
+        }
+    }
+
+    fn exit_records(&self) -> Option<ExitLog> {
+        Some(self.supervisor.lock().unwrap().log())
+    }
+}
+
+impl Drop for Proc {
+    fn drop(&mut self) {
+        // Orderly teardown first: TERM then KILL every child, recording
+        // exits. Workers still alive see EOF when their sockets shut.
+        self.supervisor.lock().unwrap().shutdown(Duration::from_secs(2));
+        for s in &self.streams {
+            let _ = s.lock().unwrap().shutdown(Shutdown::Both);
+        }
+        for b in self.bridges.lock().unwrap().drain(..) {
+            let _ = b.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ecc::Point;
+    use std::io::Write as _;
+
+    fn register_frame(worker: usize, generation: u32) -> Vec<u8> {
+        wire::encode_control(&ControlMsg::Register {
+            worker,
+            generation,
+            pk: Point::Infinity,
+        })
+    }
+
+    /// Registration edge case: a peer that connects and dies before
+    /// sending its Register is reaped, and a well-behaved peer that
+    /// arrives later still gets through.
+    #[test]
+    fn connect_then_die_before_register_is_reaped() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let ghost = TcpStream::connect(addr).unwrap();
+        drop(ghost); // dies before registering
+
+        let good = std::thread::spawn(move || {
+            // Give the ghost a head start so the accept loop meets it first.
+            std::thread::sleep(Duration::from_millis(50));
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&register_frame(3, 1)).unwrap();
+            s
+        });
+
+        let deadline = Instant::now() + Duration::from_secs(5);
+        let (_stream, frame, worker, generation) =
+            accept_registered(&listener, deadline).expect("good peer registers");
+        assert_eq!(worker, 3);
+        assert_eq!(generation, 1);
+        match wire::decode_message(&frame).unwrap() {
+            WireMessage::Control(ControlMsg::Register { worker, .. }) => assert_eq!(worker, 3),
+            other => panic!("forwarded frame decodes wrong: {other:?}"),
+        }
+        good.join().unwrap();
+    }
+
+    /// Registration edge case: a half-open socket (connected, silent)
+    /// stalls the accept loop for at most the ident timeout, then is
+    /// reaped; it cannot wedge bring-up past the deadline.
+    #[test]
+    fn half_open_socket_is_reaped_after_the_ident_timeout() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let _half_open = TcpStream::connect(addr).unwrap(); // never speaks
+
+        let good = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&register_frame(0, 0)).unwrap();
+            s
+        });
+
+        let start = Instant::now();
+        let deadline = start + Duration::from_secs(10);
+        let (_stream, _frame, worker, _gen) =
+            accept_registered(&listener, deadline).expect("good peer registers");
+        assert_eq!(worker, 0);
+        // The half-open peer cost at most one ident timeout, not the
+        // whole deadline.
+        assert!(start.elapsed() < Duration::from_secs(5), "half-open socket wedged the accept loop");
+        good.join().unwrap();
+    }
+
+    /// The whole contract end to end: the crash-respawn scenario on the
+    /// process fabric — real forked children, real SIGKILLs — produces
+    /// the same digest as the in-process run, and the exit log shows
+    /// the fault plan ran at the OS level. Skips with a note when no
+    /// `spacdc` binary is on disk (e.g. `cargo test` in a tree that was
+    /// never built); the CI testbed job covers this path
+    /// unconditionally.
+    #[test]
+    fn proc_fabric_matches_the_inproc_digest() {
+        if worker_exe().is_err() {
+            eprintln!(
+                "skipping: no spacdc binary found (cargo build first, or set {WORKER_EXE_ENV})"
+            );
+            return;
+        }
+        use crate::config::TransportKind;
+        use crate::sim::{run_scenario_with, Scenario};
+
+        let mut sc = Scenario::builtin("crash-respawn").unwrap();
+        sc.rounds = 8; // both respawns (due rounds 5 and 7) still fire
+
+        let proc_run = run_scenario_with(&sc, TransportKind::Proc, 2, None, None).unwrap();
+        let inproc = run_scenario_with(&sc, TransportKind::InProc, 2, None, None).unwrap();
+
+        assert_eq!(
+            proc_run.digest, inproc.digest,
+            "digest diverges across the process boundary"
+        );
+        assert_eq!(proc_run.final_generations, inproc.final_generations);
+        assert!(
+            proc_run.process_exits.iter().any(|e| e.sigkilled()),
+            "no SIGKILL in the exit log — the fault plan never ran at the OS level"
+        );
+        // In-process runs have no supervisor and report no exits.
+        assert!(inproc.process_exits.is_empty());
+    }
+
+    /// A peer that sends junk instead of a Register is reaped too.
+    #[test]
+    fn junk_first_frame_is_reaped() {
+        let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+        let addr = listener.local_addr().unwrap();
+
+        let mut junk = TcpStream::connect(addr).unwrap();
+        junk.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+
+        let good = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(&register_frame(1, 2)).unwrap();
+            s
+        });
+
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let (_stream, _frame, worker, generation) =
+            accept_registered(&listener, deadline).expect("good peer registers");
+        assert_eq!((worker, generation), (1, 2));
+        good.join().unwrap();
+    }
+}

@@ -97,7 +97,8 @@ impl Tcp {
 }
 
 /// One bridge per connection: result frames socket → merged channel.
-fn spawn_bridge(w: usize, mut reader: TcpStream, tx: Sender<Vec<u8>>) -> JoinHandle<()> {
+/// Shared with the process fabric, whose sockets carry the same frames.
+pub(super) fn spawn_bridge(w: usize, mut reader: TcpStream, tx: Sender<Vec<u8>>) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("tcp-bridge-{w}"))
         .spawn(move || loop {

@@ -12,7 +12,7 @@
 //!                             len:u32 bytes:[u8; len])
 //! WorkOrder    := round:u64 worker:u32 delay_ns:u64 WorkerOp
 //!                 n_payloads:u16 WirePayload*
-//! ResultMsg    := round:u64 worker:u32 WirePayload
+//! ResultMsg    := round:u64 worker:u32 executor:u32 WirePayload
 //! ControlMsg   := tag:u8 (1 = Crash worker:u32 |
 //!                         2 = Register worker:u32 generation:u32 Point)
 //! ```
@@ -112,12 +112,13 @@ pub fn encode_result(msg: &ResultMsg) -> Vec<u8> {
 pub fn encode_result_into(msg: &ResultMsg, out: &mut Vec<u8>) {
     // Clear before reserving — see encode_order_into.
     out.clear();
-    let body_len = 8 + 4 + payload_encoded_len(&msg.payload);
+    let body_len = 8 + 4 + 4 + payload_encoded_len(&msg.payload);
     let total = super::frame::HEADER_LEN + body_len + super::frame::TRAILER_LEN;
     out.reserve(total);
     let start = super::frame::frame_begin(out, MsgKind::Result);
     put_u64(out, msg.round);
     put_u32(out, msg.worker as u32);
+    put_u32(out, msg.executor as u32);
     put_payload(out, &msg.payload);
     super::frame::frame_end(out, start);
     debug_assert_eq!(out.len(), total, "result size estimate out of sync with the writers");
@@ -273,6 +274,37 @@ pub fn matrix_from_le_bytes(rows: usize, cols: usize, bytes: &[u8]) -> Result<Ma
         .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
         .collect();
     Ok(Matrix::from_vec(rows, cols, data))
+}
+
+/// Hex-encode a point in its wire layout — the `--master-pk`
+/// command-line form for out-of-process workers: tiny, shell-safe, and
+/// byte-identical to what a `Register` frame would carry.
+pub fn point_to_hex(p: &Point<Fp61>) -> String {
+    let mut bytes = Vec::with_capacity(17);
+    put_point(&mut bytes, p);
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        use std::fmt::Write;
+        let _ = write!(s, "{b:02x}");
+    }
+    s
+}
+
+/// Decode [`point_to_hex`].
+pub fn point_from_hex(s: &str) -> Result<Point<Fp61>, WireError> {
+    let s = s.trim();
+    if !s.is_ascii() || s.len() % 2 != 0 {
+        return Err(WireError::Malformed(format!("bad point hex {s:?}")));
+    }
+    let bytes: Vec<u8> = (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16))
+        .collect::<Result<_, _>>()
+        .map_err(|_| WireError::Malformed(format!("bad point hex {s:?}")))?;
+    let mut cur = Cur::new(&bytes);
+    let p = read_point(&mut cur)?;
+    cur.finish()?;
+    Ok(p)
 }
 
 fn check_dims(rows: usize, cols: usize) -> Result<usize, WireError> {
@@ -471,8 +503,9 @@ fn read_order(cur: &mut Cur) -> Result<WorkOrder, WireError> {
 fn read_result(cur: &mut Cur) -> Result<ResultMsg, WireError> {
     let round = cur.u64()?;
     let worker = cur.u32()? as usize;
+    let executor = cur.u32()? as usize;
     let payload = read_payload(cur)?;
-    Ok(ResultMsg { round, worker, payload })
+    Ok(ResultMsg { round, worker, executor, payload })
 }
 
 fn read_control(cur: &mut Cur) -> Result<ControlMsg, WireError> {
@@ -533,6 +566,7 @@ mod tests {
         let msg = ResultMsg {
             round: 9,
             worker: 11,
+            executor: 4,
             payload: WirePayload::Sealed(SealedPayload {
                 sealed: SealedBytes {
                     ephemeral: Point::affine(Fp61::new(123), Fp61::new(456)),
@@ -545,6 +579,7 @@ mod tests {
         let back = decode_result(&encode_result(&msg)).unwrap();
         assert_eq!(back.round, 9);
         assert_eq!(back.worker, 11);
+        assert_eq!(back.executor, 4);
         assert!(payloads_eq(&back.payload, &msg.payload));
     }
 
@@ -584,6 +619,7 @@ mod tests {
         let msg = ResultMsg {
             round: 3,
             worker: 1,
+            executor: 1,
             payload: WirePayload::Plain(Matrix::ones(2, 2)),
         };
         let mut scratch = Vec::new();
@@ -618,6 +654,7 @@ mod tests {
         let msg = ResultMsg {
             round: 1,
             worker: 0,
+            executor: 0,
             payload: WirePayload::Plain(Matrix::ones(1, 1)),
         };
         let f = encode_result(&msg);
@@ -639,12 +676,25 @@ mod tests {
     }
 
     #[test]
+    fn point_hex_round_trips() {
+        for p in [Point::Infinity, Point::affine(Fp61::new(7), Fp61::new(123_4567))] {
+            let hex = point_to_hex(&p);
+            assert_eq!(point_from_hex(&hex).unwrap(), p);
+        }
+        assert!(point_from_hex("zz").is_err(), "non-hex digits");
+        assert!(point_from_hex("0").is_err(), "odd length");
+        assert!(point_from_hex("02").is_err(), "unknown point tag");
+        assert!(point_from_hex("01ff").is_err(), "truncated affine point");
+    }
+
+    #[test]
     fn sealed_length_mismatch_is_rejected() {
         // Hand-assemble a sealed payload whose byte length disagrees
         // with its shape.
         let mut body = Vec::new();
         put_u64(&mut body, 1); // round
         put_u32(&mut body, 0); // worker
+        put_u32(&mut body, 0); // executor
         body.push(1); // sealed payload tag
         put_point(&mut body, &Point::affine(Fp61::new(1), Fp61::new(2)));
         put_u32(&mut body, 2); // rows

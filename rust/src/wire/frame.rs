@@ -5,7 +5,7 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic      b"SPDC" (little-endian u32 0x43445053)
-//!      4     2  version    u16 LE — currently 1
+//!      4     2  version    u16 LE — currently 2
 //!      6     1  kind       1 = WorkOrder, 2 = ResultMsg, 3 = ControlMsg
 //!      7     1  reserved   0
 //!      8     4  body_len   u32 LE
@@ -23,8 +23,11 @@ use std::io::Read;
 /// Frame magic: the bytes `b"SPDC"` read as a little-endian u32.
 pub const MAGIC: u32 = u32::from_le_bytes(*b"SPDC");
 
-/// Current wire-format version.
-pub const VERSION: u16 = 1;
+/// Current wire-format version. Version 2 added the executor id to
+/// `ResultMsg` (the share id says *what* was computed, the executor id
+/// says *who* computed it — per-result load settling and speculation
+/// attribution need the latter).
+pub const VERSION: u16 = 2;
 
 /// Fixed header size (magic + version + kind + reserved + body_len).
 pub const HEADER_LEN: usize = 12;

@@ -22,7 +22,7 @@ mod frame;
 pub use codec::{
     decode_message, decode_order, decode_result, encode_control, encode_control_into,
     encode_order, encode_order_into, encode_result, encode_result_into, matrix_from_le_bytes,
-    matrix_to_le_bytes, peek_kind, peek_result_round, WireMessage,
+    matrix_to_le_bytes, peek_kind, peek_result_round, point_from_hex, point_to_hex, WireMessage,
 };
 pub use frame::{
     crc32, frame, frame_begin, frame_end, read_frame, unframe, MsgKind, WireError, HEADER_LEN,
