@@ -9,6 +9,10 @@ Gated metrics (higher is better):
   * best GEMM GFLOP/s across the measured sizes
   * MEA-ECC seal MB/s
   * MEA-ECC open MB/s
+  * per-kernel SIMD throughput (``simd`` block, when present): dispatched
+    GEMM row-panel GFLOP/s, keystream XOR MB/s, axpy GB/s, Fp61 add Mops
+    — so a broken dispatch that silently falls back to scalar shows up
+    as a regression even if end-to-end numbers stay within tolerance
 
 The default tolerance is 25% — smoke benches on shared CI runners are
 noisy, so the gate only catches real regressions (a botched GEMM kernel,
@@ -38,6 +42,16 @@ def metrics(bench: dict) -> dict:
         out["seal_mb_s"] = seal["seal_mb_s"]
     if "open_mb_s" in seal:
         out["open_mb_s"] = seal["open_mb_s"]
+    simd = bench.get("simd") or {}
+    for kernel, field, name in (
+        ("gemm", "simd_gflops", "simd_gemm_gflops"),
+        ("keystream", "simd_mb_s", "simd_keystream_mb_s"),
+        ("axpy", "simd_gb_s", "simd_axpy_gb_s"),
+        ("fp61", "simd_add_mops", "simd_fp61_add_mops"),
+    ):
+        value = (simd.get(kernel) or {}).get(field)
+        if value is not None:
+            out[name] = value
     return out
 
 
@@ -60,7 +74,7 @@ def main() -> int:
         return 1
     print("current bench metrics:")
     for k, v in sorted(cur.items()):
-        print(f"  {k:<14} {v:.3f}")
+        print(f"  {k:<22} {v:.3f}")
 
     if baseline.get("placeholder"):
         print("\nbaseline is a placeholder — gate not armed yet.")
@@ -73,13 +87,13 @@ def main() -> int:
     for key, base_v in sorted(base.items()):
         cur_v = cur.get(key)
         if cur_v is None:
-            print(f"  {key:<14} MISSING from current run")
+            print(f"  {key:<22} MISSING from current run")
             failed = True
             continue
         floor = base_v * (1.0 - args.tolerance)
         delta = (cur_v - base_v) / base_v
         verdict = "ok" if cur_v >= floor else "REGRESSION"
-        print(f"  {key:<14} {base_v:.3f} -> {cur_v:.3f} ({delta:+.1%})  {verdict}")
+        print(f"  {key:<22} {base_v:.3f} -> {cur_v:.3f} ({delta:+.1%})  {verdict}")
         if cur_v < floor:
             failed = True
 

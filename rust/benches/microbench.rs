@@ -9,7 +9,12 @@
 //!    (encode + seal + worker compute + unseal + decode), serial
 //!    (`threads = 1`) vs parallel (`threads = 8`), asserting the decode
 //!    output is bit-identical across thread counts.
-//! 5. Ablation: SPACDC mask_scale vs decode error and colluder leakage
+//! 5. SIMD kernels: each dispatched microkernel (GEMM row×panel,
+//!    keystream XOR, weighted-sum axpy, batched Fp61 add) measured
+//!    single-threaded at `Level::Scalar` vs the dispatched level via the
+//!    `*_at` entry points — the per-kernel speedups the CI bench job
+//!    gates at ≥ 2× on SIMD-capable hardware.
+//! 6. Ablation: SPACDC mask_scale vs decode error and colluder leakage
 //!    (full mode only).
 //!
 //! Flags (after `cargo bench --bench microbench --`):
@@ -23,10 +28,12 @@ use spacdc::bench::{banner, black_box, header, run, BenchConfig};
 use spacdc::coding::{BlockCode, CodeParams, Spacdc};
 use spacdc::coordinator::SealedPayload;
 use spacdc::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc};
+use spacdc::field::fp61::{batch, P61};
 use spacdc::field::Fp61;
 use spacdc::matrix::{gram, matmul, matmul_naive, split_rows, Matrix};
 use spacdc::parallel;
 use spacdc::rng::{derive_seed, rng_from_seed};
+use spacdc::simd::{self, axpy, fp61x, gemm, keystream, Level};
 use std::time::Instant;
 
 struct GemmRow {
@@ -153,7 +160,52 @@ fn main() {
     );
     assert!(bit_identical, "decode output must not depend on the thread count");
 
-    // ---- 5. mask-scale ablation ------------------------------------------
+    // ---- 5. SIMD kernels: scalar oracle vs dispatched level --------------
+    // Single-threaded, via the explicit-level `*_at` entry points, on
+    // identical seeded inputs — the kernel speedup itself, with no pool
+    // or curve work diluting it.
+    let active = simd::level();
+    banner(&format!(
+        "SIMD kernels: scalar oracle vs dispatched level ({})",
+        active.name()
+    ));
+    let simd_cfg = BenchConfig { warmup_iters: 2, iters: if smoke { 5 } else { 20 } };
+    let gemm_scalar_gflops = bench_simd_gemm(Level::Scalar, simd_cfg);
+    let gemm_simd_gflops = if active == Level::Scalar {
+        gemm_scalar_gflops
+    } else {
+        bench_simd_gemm(active, simd_cfg)
+    };
+    let ks_scalar_mb_s = bench_simd_keystream(Level::Scalar, simd_cfg);
+    let ks_simd_mb_s = if active == Level::Scalar {
+        ks_scalar_mb_s
+    } else {
+        bench_simd_keystream(active, simd_cfg)
+    };
+    let axpy_scalar_gb_s = bench_simd_axpy(Level::Scalar, simd_cfg);
+    let axpy_simd_gb_s = if active == Level::Scalar {
+        axpy_scalar_gb_s
+    } else {
+        bench_simd_axpy(active, simd_cfg)
+    };
+    let fp61_scalar_mops = bench_simd_fp61_add(Level::Scalar, simd_cfg);
+    let fp61_simd_mops = if active == Level::Scalar {
+        fp61_scalar_mops
+    } else {
+        bench_simd_fp61_add(active, simd_cfg)
+    };
+    let fp61_mul_mops = bench_fp61_mul(simd_cfg);
+    println!(
+        "  -> {} vs scalar: gemm {:.2}x ({gemm_simd_gflops:.2} GF/s), keystream {:.2}x \
+         ({ks_simd_mb_s:.0} MB/s), axpy {:.2}x, fp61-add {:.2}x (mul stays scalar: {fp61_mul_mops:.0} Mops)",
+        active.name(),
+        gemm_simd_gflops / gemm_scalar_gflops,
+        ks_simd_mb_s / ks_scalar_mb_s,
+        axpy_simd_gb_s / axpy_scalar_gb_s,
+        fp61_simd_mops / fp61_scalar_mops,
+    );
+
+    // ---- 6. mask-scale ablation ------------------------------------------
     if !smoke {
         mask_scale_ablation();
     }
@@ -173,12 +225,34 @@ fn main() {
                 )
             })
             .collect();
+        let simd_json = format!(
+            "{{\"active\": \"{}\", \
+             \"gemm\": {{\"scalar_gflops\": {:.3}, \"simd_gflops\": {:.3}, \"speedup\": {:.3}}}, \
+             \"keystream\": {{\"scalar_mb_s\": {:.2}, \"simd_mb_s\": {:.2}, \"speedup\": {:.3}}}, \
+             \"axpy\": {{\"scalar_gb_s\": {:.3}, \"simd_gb_s\": {:.3}, \"speedup\": {:.3}}}, \
+             \"fp61\": {{\"scalar_add_mops\": {:.1}, \"simd_add_mops\": {:.1}, \"speedup\": {:.3}, \"mul_mops\": {:.1}}}}}",
+            active.name(),
+            gemm_scalar_gflops,
+            gemm_simd_gflops,
+            gemm_simd_gflops / gemm_scalar_gflops,
+            ks_scalar_mb_s,
+            ks_simd_mb_s,
+            ks_simd_mb_s / ks_scalar_mb_s,
+            axpy_scalar_gb_s,
+            axpy_simd_gb_s,
+            axpy_simd_gb_s / axpy_scalar_gb_s,
+            fp61_scalar_mops,
+            fp61_simd_mops,
+            fp61_simd_mops / fp61_scalar_mops,
+            fp61_mul_mops,
+        );
         let json = format!(
             "{{\n  \"schema\": \"spacdc-microbench-v1\",\n  \"smoke\": {smoke},\n  \"available_cores\": {cores},\n  \
              \"gemm\": [{}],\n  \
              \"seal\": {{\"rows\": {sr}, \"cols\": {sc}, \"seal_ms\": {:.4}, \"open_ms\": {:.4}, \"seal_mb_s\": {:.2}, \"open_mb_s\": {:.2}}},\n  \
              \"decode\": {{\"scheme\": \"spacdc\", \"workers\": {dn}, \"returns\": {drets}, \"rows\": {drows}, \"cols\": {dcols}, \"encode_ms\": {:.4}, \"decode_ms\": {:.4}}},\n  \
-             \"round\": {{\"scheme\": \"spacdc\", \"workers\": 8, \"rows\": {rr}, \"cols\": {rc}, \"threads_1_ms\": {:.3}, \"threads_8_ms\": {:.3}, \"speedup\": {:.3}, \"decode_bit_identical\": {bit_identical}}}\n}}\n",
+             \"round\": {{\"scheme\": \"spacdc\", \"workers\": 8, \"rows\": {rr}, \"cols\": {rc}, \"threads_1_ms\": {:.3}, \"threads_8_ms\": {:.3}, \"speedup\": {:.3}, \"decode_bit_identical\": {bit_identical}}},\n  \
+             \"simd\": {simd_json}\n}}\n",
             gemm_json.join(", "),
             seal.mean() * 1e3,
             open.mean() * 1e3,
@@ -193,6 +267,87 @@ fn main() {
         std::fs::write(&path, &json).expect("write bench JSON");
         println!("\nwrote {path}");
     }
+}
+
+/// GEMM row×panel kernel at one level, single-threaded: 64 A rows
+/// against a 256-row packed panel at k = 256 (a COL_BLOCK-aligned
+/// shape). Returns GFLOP/s.
+fn bench_simd_gemm(level: Level, cfg: BenchConfig) -> f64 {
+    let (r, k, c) = (64usize, 256usize, 256usize);
+    let mut rng = rng_from_seed(0x51D0);
+    let a = Matrix::random_gaussian(r, k, 0.0, 1.0, &mut rng);
+    let panel = Matrix::random_gaussian(c, k, 0.0, 1.0, &mut rng);
+    let mut out = vec![0f32; r * c];
+    let res = run(&format!("simd_gemm_row_panel_{}", level.name()), cfg, |_| {
+        for i in 0..r {
+            gemm::row_panel_at(level, a.row(i), panel.as_slice(), k, &mut out[i * c..(i + 1) * c]);
+        }
+        black_box(&mut out);
+    });
+    println!("{}", res.row());
+    2.0 * (r * k * c) as f64 / res.mean() / 1e9
+}
+
+/// Keystream byte-XOR over a 1 MiB buffer (the seal/open-the-bytes
+/// kernel). Returns MB/s. Each iteration re-masks the same buffer —
+/// identical work either way, since XOR is self-inverse.
+fn bench_simd_keystream(level: Level, cfg: BenchConfig) -> f64 {
+    let mut buf: Vec<u8> = (0..1usize << 20).map(|i| (i * 13 + 5) as u8).collect();
+    let len = buf.len() as f64;
+    let res = run(&format!("simd_keystream_xor_1mib_{}", level.name()), cfg, |_| {
+        keystream::xor_in_place_at(level, &mut buf, 0x5EA1);
+        black_box(&mut buf);
+    });
+    println!("{}", res.row());
+    len / res.mean() / 1e6
+}
+
+/// Weighted-sum axpy over 256 Ki f32 (one decode chunk's worth of
+/// accumulation, 64× over). Returns GB/s counting src read + out
+/// read/write. Alternating weight sign keeps the accumulator bounded.
+fn bench_simd_axpy(level: Level, cfg: BenchConfig) -> f64 {
+    let n = 1usize << 18;
+    let mut rng = rng_from_seed(0x51D1);
+    let src: Vec<f32> = (0..n).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let mut out = vec![0f32; n];
+    let res = run(&format!("simd_axpy_256k_{}", level.name()), cfg, |i| {
+        let w = if i % 2 == 0 { 0.5f32 } else { -0.5f32 };
+        axpy::axpy_at(level, &mut out, &src, w);
+        black_box(&mut out);
+    });
+    println!("{}", res.row());
+    12.0 * n as f64 / res.mean() / 1e9
+}
+
+/// Batched Fp61 modular add over 64 Ki limbs. Returns Mops (field adds
+/// per second / 1e6). Canonical values stay canonical, so the same
+/// buffers feed every iteration.
+fn bench_simd_fp61_add(level: Level, cfg: BenchConfig) -> f64 {
+    let n = 1usize << 16;
+    let mut rng = rng_from_seed(0x51D2);
+    let mut a: Vec<u64> = (0..n).map(|_| rng.next_u64() % P61).collect();
+    let b: Vec<u64> = (0..n).map(|_| rng.next_u64() % P61).collect();
+    let res = run(&format!("simd_fp61_add_64k_{}", level.name()), cfg, |_| {
+        fp61x::add_assign_at(level, &mut a, &b);
+        black_box(&mut a);
+    });
+    println!("{}", res.row());
+    n as f64 / res.mean() / 1e6
+}
+
+/// Batched Fp61 multiply (scalar at every level — recorded for the
+/// record, not gated). Returns Mops.
+fn bench_fp61_mul(cfg: BenchConfig) -> f64 {
+    let n = 1usize << 16;
+    let mut rng = rng_from_seed(0x51D3);
+    let mut a: Vec<u64> = (0..n).map(|_| rng.next_u64() % P61).collect();
+    let b: Vec<u64> = (0..n).map(|_| 1 + rng.next_u64() % (P61 - 1)).collect();
+    let res = run("fp61_mul_64k_scalar", cfg, |_| {
+        batch::mul_assign(&mut a, &b);
+        black_box(&mut a);
+    });
+    println!("{}", res.row());
+    n as f64 / res.mean() / 1e6
 }
 
 /// One full sealed SPACDC round at a fixed pool width, modeled exactly

@@ -123,7 +123,10 @@ pub fn weighted_sum(values: &[Matrix], weights: &[f64]) -> Matrix {
 /// The output is split into fixed [`SUM_CHUNK`] element ranges; within a
 /// chunk the samples are accumulated in input order (i = 0, 1, …), so
 /// every output element sees the identical fixed-order reduction at any
-/// thread count — decode stays bit-identical whatever `threads` is.
+/// thread count — decode stays bit-identical whatever `threads` is. The
+/// per-sample `out += w·src` pass is the [`crate::simd::axpy`] kernel:
+/// element-independent, lane-wise mul-then-add at every level, so SIMD
+/// does not perturb the reduction either.
 pub fn weighted_sum_with(
     pool: &crate::parallel::ThreadPool,
     values: &[Matrix],
@@ -139,10 +142,7 @@ pub fn weighted_sum_with(
     pool.for_each_chunk(out.as_mut_slice(), SUM_CHUNK, |offset, chunk| {
         for (v, &w) in values.iter().zip(weights) {
             let src = &v.as_slice()[offset..offset + chunk.len()];
-            let wf = w as f32;
-            for (o, s) in chunk.iter_mut().zip(src) {
-                *o += wf * s;
-            }
+            crate::simd::axpy::axpy(chunk, src, w as f32);
         }
     });
     out

@@ -25,7 +25,7 @@ use super::curve::{Curve, Point};
 use super::keys::{KeyPair, SharedSecret};
 use crate::field::{FieldElement, U256};
 use crate::matrix::Matrix;
-use crate::rng::{Rng, SplitMix64};
+use crate::rng::Rng;
 
 /// Which masking construction to use (see module docs).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
@@ -202,39 +202,23 @@ fn ephemeral_scalar(rng: &mut Rng) -> U256 {
 
 /// XOR `bytes` in place with the SplitMix64 keystream seeded from the
 /// shared point, 8 bytes per draw. Self-inverse; no allocation.
+///
+/// The loop body lives in [`crate::simd::keystream`] (the scalar form
+/// moved there verbatim as the oracle); the stream is byte-identical at
+/// every SIMD level.
 fn xor_keystream_in_place<F: FieldElement>(bytes: &mut [u8], shared: &SharedSecret<F>) {
-    let mut ks = SplitMix64::new(shared.keystream_seed());
-    let mut chunks = bytes.chunks_exact_mut(8);
-    for chunk in &mut chunks {
-        let pad = ks.next_u64().to_le_bytes();
-        for (b, p) in chunk.iter_mut().zip(pad.iter()) {
-            *b ^= p;
-        }
-    }
-    let rem = chunks.into_remainder();
-    if !rem.is_empty() {
-        let pad = ks.next_u64().to_le_bytes();
-        for (b, p) in rem.iter_mut().zip(pad.iter()) {
-            *b ^= p;
-        }
-    }
+    crate::simd::keystream::xor_in_place(bytes, shared.keystream_seed());
 }
 
 /// Per-element 32-bit XOR keystream over f32 bit patterns, in place.
 /// Identical stream layout to the original out-of-place version: the
 /// high half of each SplitMix64 draw masks the even element, the low
 /// half the odd one, and a trailing element takes a fresh 32-bit draw.
+///
+/// Kernel dispatched through [`crate::simd::keystream`]; bit-identical
+/// at every SIMD level.
 fn mask_f32_keystream_in_place<F: FieldElement>(data: &mut [f32], shared: &SharedSecret<F>) {
-    let mut ks = SplitMix64::new(shared.keystream_seed());
-    let mut chunks = data.chunks_exact_mut(2);
-    for pair in &mut chunks {
-        let w = ks.next_u64();
-        pair[0] = f32::from_bits(pair[0].to_bits() ^ (w >> 32) as u32);
-        pair[1] = f32::from_bits(pair[1].to_bits() ^ w as u32);
-    }
-    if let [last] = chunks.into_remainder() {
-        *last = f32::from_bits(last.to_bits() ^ ks.next_u32());
-    }
+    crate::simd::keystream::mask_f32_in_place(data, shared.keystream_seed());
 }
 
 #[derive(Clone, Copy, PartialEq)]

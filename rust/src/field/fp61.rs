@@ -117,6 +117,81 @@ impl FieldElement for Fp61 {
     }
 }
 
+/// Slice-batched field ops over raw canonical `u64` limbs.
+///
+/// These are the field-op hot-path entry points: callers that hold many
+/// `Fp61` values as plain `u64`s (wire buffers, keystream-seed
+/// derivation, batched share algebra) operate on whole slices instead
+/// of element-at-a-time. `add_assign` and `reduce_assign` dispatch to
+/// the SIMD lanes in [`crate::simd::fp61x`]; `mul_assign` stays scalar
+/// — see the `simd::fp61x` module docs for why AVX2 offers no win on a
+/// 61×61-bit product — but still amortizes bounds checks and exposes
+/// the multiply chain to the out-of-order core.
+///
+/// All three agree bit-for-bit with the element-wise [`Fp61`] ops (the
+/// parity tests below and `tests/simd_parity.rs` enforce it).
+pub mod batch {
+    use super::Fp61;
+
+    /// `a[i] = (a[i] + b[i]) mod p` over canonical values.
+    #[inline]
+    pub fn add_assign(a: &mut [u64], b: &[u64]) {
+        crate::simd::fp61x::add_assign(a, b);
+    }
+
+    /// `a[i] = (a[i] * b[i]) mod p` over canonical values. Scalar on
+    /// every SIMD level (documented in `simd::fp61x`).
+    pub fn mul_assign(a: &mut [u64], b: &[u64]) {
+        debug_assert_eq!(a.len(), b.len());
+        for (x, &y) in a.iter_mut().zip(b) {
+            *x = Fp61::reduce128(*x as u128 * y as u128);
+        }
+    }
+
+    /// Canonicalize arbitrary `u64`s: `a[i] = a[i] mod p`.
+    #[inline]
+    pub fn reduce_assign(a: &mut [u64]) {
+        crate::simd::fp61x::reduce_assign(a);
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::field::fp61::P61;
+        use crate::field::FieldElement;
+        use crate::rng::rng_from_seed;
+
+        #[test]
+        fn batch_ops_match_element_ops() {
+            let mut r = rng_from_seed(0xBA7C);
+            let a: Vec<u64> = (0..513).map(|_| r.next_u64() % P61).collect();
+            let b: Vec<u64> = (0..513).map(|_| r.next_u64() % P61).collect();
+
+            let mut sum = a.clone();
+            add_assign(&mut sum, &b);
+            let mut prod = a.clone();
+            mul_assign(&mut prod, &b);
+            for i in 0..a.len() {
+                let (x, y) = (Fp61::new(a[i]), Fp61::new(b[i]));
+                assert_eq!(sum[i], x.add(&y).value(), "add i={i}");
+                assert_eq!(prod[i], x.mul(&y).value(), "mul i={i}");
+            }
+        }
+
+        #[test]
+        fn batch_reduce_matches_new() {
+            let mut r = rng_from_seed(0xBA7D);
+            let mut vals: Vec<u64> = (0..300).map(|_| r.next_u64()).collect();
+            vals.extend_from_slice(&[0, P61 - 1, P61, P61 + 1, u64::MAX]);
+            let raw = vals.clone();
+            reduce_assign(&mut vals);
+            for (i, &v) in raw.iter().enumerate() {
+                assert_eq!(vals[i], Fp61::new(v).value(), "v={v}");
+            }
+        }
+    }
+}
+
 impl core::fmt::Debug for Fp61 {
     fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
         write!(f, "Fp61({})", self.0)

@@ -55,5 +55,6 @@ pub mod prop;
 pub mod rng;
 pub mod runtime;
 pub mod sim;
+pub mod simd;
 pub mod transport;
 pub mod wire;

@@ -14,6 +14,7 @@
 
 use super::Matrix;
 use crate::parallel::{self, ThreadPool};
+use crate::simd;
 
 /// Rows of A per parallel granule. 32 rows × 4 B × d floats keeps the A
 /// panel comfortably in L2 for the d values we use (≤ 4096) while giving
@@ -55,9 +56,10 @@ pub fn matmul_tb(a: &Matrix, b_t: &Matrix) -> Matrix {
 /// pool distributes (disjoint output rows — no synchronization); inside a
 /// granule the kernel iterates [`COL_BLOCK`]-row panels of the packed Bᵀ
 /// so the panel is reused across every row of the granule. The inner
-/// kernel is an 8-wide unrolled dot product with four independent
-/// accumulators (breaks the FP dependency chain so the CPU keeps ≥ 2
-/// FMAs in flight).
+/// row-against-panel kernel is dispatched through [`crate::simd::gemm`]
+/// (AVX2/NEON with the scalar 4-accumulator dot as oracle); every level
+/// reproduces the same fixed reduction order, so outputs stay
+/// bit-identical across thread counts *and* SIMD levels.
 pub fn matmul_tb_with(pool: &ThreadPool, a: &Matrix, b_t: &Matrix) -> Matrix {
     assert_eq!(a.cols(), b_t.cols(), "matmul_tb: inner dims {} vs {}", a.cols(), b_t.cols());
     let (r, k) = a.shape();
@@ -76,34 +78,11 @@ pub fn matmul_tb_with(pool: &ThreadPool, a: &Matrix, b_t: &Matrix) -> Matrix {
             for i in 0..rows {
                 let arow = &a_data[(row0 + i) * k..(row0 + i) * k + k];
                 let orow = &mut chunk[i * c..i * c + c];
-                for j in jb..jend {
-                    orow[j] = dot(arow, &b_data[j * k..j * k + k]);
-                }
+                simd::gemm::row_panel(arow, &b_data[jb * k..jend * k], k, &mut orow[jb..jend]);
             }
         }
     });
     out
-}
-
-/// Unrolled dot product with 4 accumulators.
-#[inline]
-fn dot(x: &[f32], y: &[f32]) -> f32 {
-    debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let chunks = n / 8;
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    for i in 0..chunks {
-        let o = i * 8;
-        s0 += x[o] * y[o] + x[o + 4] * y[o + 4];
-        s1 += x[o + 1] * y[o + 1] + x[o + 5] * y[o + 5];
-        s2 += x[o + 2] * y[o + 2] + x[o + 6] * y[o + 6];
-        s3 += x[o + 3] * y[o + 3] + x[o + 7] * y[o + 7];
-    }
-    let mut tail = 0f32;
-    for i in chunks * 8..n {
-        tail += x[i] * y[i];
-    }
-    (s0 + s1) + (s2 + s3) + tail
 }
 
 /// Gram product `X · Xᵀ` — the paper's worker task `f`.
@@ -135,9 +114,7 @@ pub fn gram_with(pool: &ThreadPool, x: &Matrix) -> Matrix {
             let gi = row0 + i;
             let xrow = &xd[gi * k..gi * k + k];
             let orow = &mut chunk[i * n..i * n + n];
-            for j in gi..n {
-                orow[j] = dot(xrow, &xd[j * k..j * k + k]);
-            }
+            simd::gemm::row_panel(xrow, &xd[gi * k..n * k], k, &mut orow[gi..n]);
         }
     });
     let data = out.as_mut_slice();
@@ -149,11 +126,17 @@ pub fn gram_with(pool: &ThreadPool, x: &Matrix) -> Matrix {
     out
 }
 
-/// Matrix–vector product `A (r×k) · v (k) → (r)`. Small enough to stay
-/// serial — the DL layer shapes never make this a bottleneck.
+/// Matrix–vector product `A (r×k) · v (k) → (r)`.
+///
+/// Routed through the packed kernel ([`matmul_tb`]) with `v` as a
+/// one-row packed operand: the product inherits the pool distribution
+/// and the SIMD row kernel instead of the serial per-row loop it used
+/// to run, and each output element is still one fixed-order dot — so
+/// `matvec(a, v)` is bit-identical to column 0 of `matmul(a, vᵀ)`.
 pub fn matvec(a: &Matrix, v: &[f32]) -> Vec<f32> {
     assert_eq!(a.cols(), v.len(), "matvec: dims {} vs {}", a.cols(), v.len());
-    (0..a.rows()).map(|i| dot(a.row(i), v)).collect()
+    let vt = Matrix::from_vec(1, v.len(), v.to_vec());
+    matmul_tb(a, &vt).as_slice().to_vec()
 }
 
 /// Naive triple-loop matmul — kept as the correctness oracle and the
@@ -268,12 +251,15 @@ mod tests {
     }
 
     #[test]
-    fn dot_handles_non_multiple_of_eight() {
-        for n in 0..20 {
-            let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
-            let y = vec![1f32; n];
-            let expect: f32 = x.iter().sum();
-            assert_eq!(super::dot(&x, &y), expect);
-        }
+    fn matvec_bit_identical_to_matmul_column() {
+        // matvec routes through the packed kernel; against `matmul` with
+        // the explicit k×1 operand the result must be bit-equal, not
+        // merely close.
+        let mut r = rng_from_seed(16);
+        let a = Matrix::random_gaussian(33, 21, 0.0, 1.0, &mut r);
+        let v: Vec<f32> = (0..21).map(|_| r.next_f32()).collect();
+        let got = matvec(&a, &v);
+        let expect = matmul(&a, &Matrix::from_vec(21, 1, v.clone()));
+        assert_eq!(got, expect.as_slice());
     }
 }

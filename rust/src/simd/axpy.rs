@@ -1,0 +1,143 @@
+//! The `weighted_sum` accumulation kernel: `out[i] += w · src[i]`.
+//!
+//! `coding::interp::weighted_sum_with` keeps its fixed SUM_CHUNK
+//! boundaries and per-chunk input-order accumulation; this kernel is
+//! the per-(sample, chunk) inner loop. Elements are independent — no
+//! cross-lane reduction — so vectorization is bit-exact by
+//! construction as long as each lane performs the oracle's exact op
+//! sequence: one rounded multiply then one rounded add (never a fused
+//! multiply-add, which would skip the intermediate rounding).
+
+use super::Level;
+
+/// `out[i] += w * src[i]` at the cached dispatch level.
+#[inline]
+pub fn axpy(out: &mut [f32], src: &[f32], w: f32) {
+    axpy_at(super::level(), out, src, w);
+}
+
+/// [`axpy`] at an explicit level.
+pub fn axpy_at(level: Level, out: &mut [f32], src: &[f32], w: f32) {
+    debug_assert_eq!(out.len(), src.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 only exists behind runtime AVX2 detection.
+        Level::Avx2 => unsafe { avx2::axpy(out, src, w) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Level::Neon only exists behind runtime NEON detection.
+        Level::Neon => unsafe { neon::axpy(out, src, w) },
+        _ => axpy_scalar(out, src, w),
+    }
+}
+
+/// The scalar oracle — the loop body `weighted_sum_with` ran before the
+/// SIMD layer (PR 3), verbatim.
+pub fn axpy_scalar(out: &mut [f32], src: &[f32], w: f32) {
+    for (o, s) in out.iter_mut().zip(src) {
+        *o += w * s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(out: &mut [f32], src: &[f32], w: f32) {
+        let n = out.len();
+        let wv = _mm256_set1_ps(w);
+        let op = out.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0usize;
+        // Two 8-lane strips per iteration: independent chains keep both
+        // FP ports busy. Per lane: rounded mul, then rounded add —
+        // exactly the scalar `*o += w * s`.
+        while i + 16 <= n {
+            let a0 = _mm256_add_ps(
+                _mm256_loadu_ps(op.add(i)),
+                _mm256_mul_ps(wv, _mm256_loadu_ps(sp.add(i))),
+            );
+            let a1 = _mm256_add_ps(
+                _mm256_loadu_ps(op.add(i + 8)),
+                _mm256_mul_ps(wv, _mm256_loadu_ps(sp.add(i + 8))),
+            );
+            _mm256_storeu_ps(op.add(i), a0);
+            _mm256_storeu_ps(op.add(i + 8), a1);
+            i += 16;
+        }
+        while i + 8 <= n {
+            let a = _mm256_add_ps(
+                _mm256_loadu_ps(op.add(i)),
+                _mm256_mul_ps(wv, _mm256_loadu_ps(sp.add(i))),
+            );
+            _mm256_storeu_ps(op.add(i), a);
+            i += 8;
+        }
+        super::axpy_scalar(&mut out[i..], &src[i..], w);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(out: &mut [f32], src: &[f32], w: f32) {
+        let n = out.len();
+        let wv = vdupq_n_f32(w);
+        let op = out.as_mut_ptr();
+        let sp = src.as_ptr();
+        let mut i = 0usize;
+        // vmulq + vaddq, never vfmaq: the oracle rounds between the
+        // multiply and the add.
+        while i + 8 <= n {
+            let a0 = vaddq_f32(vld1q_f32(op.add(i)), vmulq_f32(wv, vld1q_f32(sp.add(i))));
+            let a1 =
+                vaddq_f32(vld1q_f32(op.add(i + 4)), vmulq_f32(wv, vld1q_f32(sp.add(i + 4))));
+            vst1q_f32(op.add(i), a0);
+            vst1q_f32(op.add(i + 4), a1);
+            i += 8;
+        }
+        while i + 4 <= n {
+            let a = vaddq_f32(vld1q_f32(op.add(i)), vmulq_f32(wv, vld1q_f32(sp.add(i))));
+            vst1q_f32(op.add(i), a);
+            i += 4;
+        }
+        super::axpy_scalar(&mut out[i..], &src[i..], w);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn axpy_all_levels_bit_identical_to_scalar() {
+        let mut rng = rng_from_seed(0x44);
+        for &len in &[0usize, 1, 3, 4, 7, 8, 9, 15, 16, 17, 31, 100, 4096, 4099] {
+            let src: Vec<f32> = (0..len).map(|_| rng.uniform(-3.0, 3.0) as f32).collect();
+            let base: Vec<f32> = (0..len).map(|_| rng.uniform(-3.0, 3.0) as f32).collect();
+            let w = rng.uniform(-2.0, 2.0) as f32;
+            let mut want = base.clone();
+            axpy_scalar(&mut want, &src, w);
+            for level in super::super::available_levels() {
+                let mut got = base.clone();
+                axpy_at(level, &mut got, &src, w);
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "level={} len={len}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_accumulates_in_place() {
+        let mut out = vec![1.0f32; 10];
+        let src: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        axpy(&mut out, &src, 2.0);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, 1.0 + 2.0 * i as f32);
+        }
+    }
+}

@@ -1,0 +1,242 @@
+//! Slice-batched F_{2^61 − 1} lanes — the vector half of
+//! `field::fp61::batch`.
+//!
+//! Operates on raw `u64` limbs holding canonical `Fp61` values (the
+//! layout the curve layer and the keystream-seed derivation already
+//! use). Two ops vectorize cleanly on 64-bit integer lanes and live
+//! here:
+//!
+//! * [`add_assign_at`] — lane-wise modular add of canonical values:
+//!   `s = a + b` (< 2^62, no overflow), one conditional subtract of p.
+//! * [`reduce_assign_at`] — fold arbitrary `u64`s into canonical form:
+//!   `(v & p) + (v >> 61)` (Mersenne shift-add), one conditional
+//!   subtract.
+//!
+//! Batch *multiplication* stays scalar in `field::fp61::batch`: the
+//! 61×61→122-bit product needs a full 64×64 multiply, which AVX2 lacks
+//! (`vpmullq` is AVX-512); emulating it from 32×32 pieces costs more
+//! µops than the scalar `mulx` + shift-add reduction it would replace.
+//!
+//! The conditional subtract compares via *signed* lane compares on
+//! AVX2 (the only kind it has), which is sound because every compared
+//! value is < 2^62 and therefore non-negative as an i64.
+
+use super::Level;
+use crate::field::fp61::P61;
+
+/// Lane-wise `a[i] = (a[i] + b[i]) mod p` over canonical values, at
+/// the cached dispatch level.
+#[inline]
+pub fn add_assign(a: &mut [u64], b: &[u64]) {
+    add_assign_at(super::level(), a, b);
+}
+
+/// [`add_assign`] at an explicit level.
+pub fn add_assign_at(level: Level, a: &mut [u64], b: &[u64]) {
+    debug_assert_eq!(a.len(), b.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 only exists behind runtime AVX2 detection.
+        Level::Avx2 => unsafe { avx2::add_assign(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Level::Neon only exists behind runtime NEON detection.
+        Level::Neon => unsafe { neon::add_assign(a, b) },
+        _ => add_assign_scalar(a, b),
+    }
+}
+
+/// Lane-wise canonical reduction `a[i] = a[i] mod p` of arbitrary
+/// `u64`s, at the cached dispatch level.
+#[inline]
+pub fn reduce_assign(a: &mut [u64]) {
+    reduce_assign_at(super::level(), a);
+}
+
+/// [`reduce_assign`] at an explicit level.
+pub fn reduce_assign_at(level: Level, a: &mut [u64]) {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 only exists behind runtime AVX2 detection.
+        Level::Avx2 => unsafe { avx2::reduce_assign(a) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Level::Neon only exists behind runtime NEON detection.
+        Level::Neon => unsafe { neon::reduce_assign(a) },
+        _ => reduce_assign_scalar(a),
+    }
+}
+
+/// Scalar oracle for the modular add — the `Fp61::add` body, lane by
+/// lane.
+pub fn add_assign_scalar(a: &mut [u64], b: &[u64]) {
+    for (x, &y) in a.iter_mut().zip(b) {
+        let mut s = *x + y; // canonical inputs: < 2^62, no overflow
+        if s >= P61 {
+            s -= P61;
+        }
+        *x = s;
+    }
+}
+
+/// Scalar oracle for the canonical reduction: Mersenne shift-add.
+/// `(v & p) + (v >> 61) ≤ p + 7`, so one conditional subtract
+/// canonicalizes — and equals `v % p` for every `u64` (2^61 ≡ 1).
+pub fn reduce_assign_scalar(a: &mut [u64]) {
+    for x in a.iter_mut() {
+        let mut r = (*x & P61) + (*x >> 61);
+        if r >= P61 {
+            r -= P61;
+        }
+        *x = r;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use crate::field::fp61::P61;
+    use std::arch::x86_64::*;
+
+    /// Conditional subtract: lanes holding values ≥ p (all < 2^62, so
+    /// the signed compare is exact) lose one p.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn cond_sub_p(s: __m256i) -> __m256i {
+        let pm1 = _mm256_set1_epi64x((P61 - 1) as i64);
+        let ge = _mm256_cmpgt_epi64(s, pm1);
+        _mm256_sub_epi64(s, _mm256_and_si256(ge, _mm256_set1_epi64x(P61 as i64)))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn add_assign(a: &mut [u64], b: &[u64]) {
+        let lanes = a.len() / 4 * 4;
+        let ap = a.as_mut_ptr();
+        let bp = b.as_ptr();
+        let mut i = 0usize;
+        while i < lanes {
+            let av = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            let bv = _mm256_loadu_si256(bp.add(i) as *const __m256i);
+            let s = cond_sub_p(_mm256_add_epi64(av, bv));
+            _mm256_storeu_si256(ap.add(i) as *mut __m256i, s);
+            i += 4;
+        }
+        super::add_assign_scalar(&mut a[lanes..], &b[lanes..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn reduce_assign(a: &mut [u64]) {
+        let lanes = a.len() / 4 * 4;
+        let ap = a.as_mut_ptr();
+        let pv = _mm256_set1_epi64x(P61 as i64);
+        let mut i = 0usize;
+        while i < lanes {
+            let v = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            let lo = _mm256_and_si256(v, pv);
+            let hi = _mm256_srli_epi64::<61>(v);
+            let r = cond_sub_p(_mm256_add_epi64(lo, hi));
+            _mm256_storeu_si256(ap.add(i) as *mut __m256i, r);
+            i += 4;
+        }
+        super::reduce_assign_scalar(&mut a[lanes..]);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use crate::field::fp61::P61;
+    use std::arch::aarch64::*;
+
+    /// Conditional subtract on 2 unsigned 64-bit lanes.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn cond_sub_p(s: uint64x2_t) -> uint64x2_t {
+        let ge = vcgtq_u64(s, vdupq_n_u64(P61 - 1));
+        vsubq_u64(s, vandq_u64(ge, vdupq_n_u64(P61)))
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn add_assign(a: &mut [u64], b: &[u64]) {
+        let lanes = a.len() / 2 * 2;
+        let ap = a.as_mut_ptr();
+        let bp = b.as_ptr();
+        let mut i = 0usize;
+        while i < lanes {
+            let s = cond_sub_p(vaddq_u64(vld1q_u64(ap.add(i)), vld1q_u64(bp.add(i))));
+            vst1q_u64(ap.add(i), s);
+            i += 2;
+        }
+        super::add_assign_scalar(&mut a[lanes..], &b[lanes..]);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn reduce_assign(a: &mut [u64]) {
+        let lanes = a.len() / 2 * 2;
+        let ap = a.as_mut_ptr();
+        let pv = vdupq_n_u64(P61);
+        let mut i = 0usize;
+        while i < lanes {
+            let v = vld1q_u64(ap.add(i));
+            let r = cond_sub_p(vaddq_u64(vandq_u64(v, pv), vshrq_n_u64::<61>(v)));
+            vst1q_u64(ap.add(i), r);
+            i += 2;
+        }
+        super::reduce_assign_scalar(&mut a[lanes..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    #[test]
+    fn add_all_levels_match_scalar_and_field() {
+        let mut rng = rng_from_seed(0x61);
+        for &len in &[0usize, 1, 2, 3, 4, 5, 7, 8, 9, 100, 1000] {
+            let a: Vec<u64> = (0..len).map(|_| rng.next_u64() % P61).collect();
+            let b: Vec<u64> = (0..len).map(|_| rng.next_u64() % P61).collect();
+            let mut want = a.clone();
+            add_assign_scalar(&mut want, &b);
+            // Oracle of the oracle: the Fp61 element op.
+            use crate::field::{FieldElement, Fp61};
+            for i in 0..len {
+                assert_eq!(want[i], Fp61::new(a[i]).add(&Fp61::new(b[i])).value());
+            }
+            for level in super::super::available_levels() {
+                let mut got = a.clone();
+                add_assign_at(level, &mut got, &b);
+                assert_eq!(got, want, "level={} len={len}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn add_edge_values() {
+        let edges = [0u64, 1, 2, P61 - 2, P61 - 1];
+        for &x in &edges {
+            for &y in &edges {
+                let mut a = vec![x; 5];
+                let b = vec![y; 5];
+                add_assign_scalar(&mut a, &b);
+                let expect = ((x as u128 + y as u128) % P61 as u128) as u64;
+                assert!(a.iter().all(|&v| v == expect), "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_all_levels_match_modulo() {
+        let mut rng = rng_from_seed(0x62);
+        let mut vals: Vec<u64> =
+            (0..997).map(|_| rng.next_u64()).collect();
+        vals.extend_from_slice(&[0, 1, P61 - 1, P61, P61 + 1, u64::MAX, u64::MAX - 1]);
+        let mut want = vals.clone();
+        reduce_assign_scalar(&mut want);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(want[i], v % P61, "v={v}");
+        }
+        for level in super::super::available_levels() {
+            let mut got = vals.clone();
+            reduce_assign_at(level, &mut got);
+            assert_eq!(got, want, "level={}", level.name());
+        }
+    }
+}

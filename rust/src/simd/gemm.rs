@@ -1,0 +1,303 @@
+//! GEMM inner kernel: one A row against a panel of packed Bᵀ rows.
+//!
+//! `matrix::ops::matmul_tb_with` keeps its blocking (ROW_BLOCK row
+//! granules on the pool × COL_BLOCK packed-Bᵀ panels) and calls
+//! [`row_panel`] for the innermost `out[j] = ⟨a_row, bᵀ_row_j⟩` loop.
+//!
+//! **Canonical reduction order** (the determinism contract, DESIGN.md
+//! §10): every output element is one dot product computed as 8-element
+//! chunks folded into four accumulators — chunk `o` contributes
+//! `sⱼ += x[o+j]·y[o+j] + x[o+j+4]·y[o+j+4]` for `j ∈ 0..4` — then the
+//! fixed tree `(s₀+s₁) + (s₂+s₃)` plus a sequential scalar tail. The
+//! AVX2 kernel computes the identical order with one 8-lane multiply
+//! whose high half is folded onto its low half; NEON with two 4-lane
+//! multiplies added lane-wise. No fused multiply-add anywhere: the
+//! scalar oracle rounds after every multiply, so the vector kernels
+//! must too. The vector win comes from lane width plus a 4-column tile
+//! (four independent accumulator chains hide the add latency and reuse
+//! each A chunk fourfold), not from reassociation.
+
+use super::Level;
+
+/// Unrolled dot product with 4 accumulators — the scalar oracle, moved
+/// verbatim from `matrix::ops::dot` (PR 3).
+#[inline]
+pub fn dot_scalar(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let chunks = n / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let o = i * 8;
+        s0 += x[o] * y[o] + x[o + 4] * y[o + 4];
+        s1 += x[o + 1] * y[o + 1] + x[o + 5] * y[o + 5];
+        s2 += x[o + 2] * y[o + 2] + x[o + 6] * y[o + 6];
+        s3 += x[o + 3] * y[o + 3] + x[o + 7] * y[o + 7];
+    }
+    let mut tail = 0f32;
+    for i in chunks * 8..n {
+        tail += x[i] * y[i];
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// `out[j] = ⟨arow, panel[j·k .. j·k+k]⟩` for every `j`, at the cached
+/// dispatch level. `panel` holds `out.len()` consecutive packed Bᵀ rows
+/// of length `k`.
+#[inline]
+pub fn row_panel(arow: &[f32], panel: &[f32], k: usize, out: &mut [f32]) {
+    row_panel_at(super::level(), arow, panel, k, out);
+}
+
+/// [`row_panel`] at an explicit level (parity tests and the microbench
+/// pin both sides).
+pub fn row_panel_at(level: Level, arow: &[f32], panel: &[f32], k: usize, out: &mut [f32]) {
+    debug_assert_eq!(arow.len(), k);
+    debug_assert_eq!(panel.len(), k * out.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 is only ever produced behind a successful
+        // `is_x86_feature_detected!("avx2")` (simd::native / the forced
+        // override), so the target-feature kernel may execute.
+        Level::Avx2 => unsafe { avx2::row_panel(arow, panel, k, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Level::Neon is only produced behind NEON detection.
+        Level::Neon => unsafe { neon::row_panel(arow, panel, k, out) },
+        _ => row_panel_scalar(arow, panel, k, out),
+    }
+}
+
+/// The scalar panel loop — one oracle dot per output column.
+pub fn row_panel_scalar(arow: &[f32], panel: &[f32], k: usize, out: &mut [f32]) {
+    for (j, o) in out.iter_mut().enumerate() {
+        *o = dot_scalar(arow, &panel[j * k..j * k + k]);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// One canonical chunk step: 8-lane multiply, fold the high half
+    /// onto the low half (`pⱼ + pⱼ₊₄` — the oracle's pairing), then
+    /// accumulate onto the 4-lane `(s0..s3)` register. Each lane
+    /// performs exactly the scalar oracle's op sequence.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn fold_step(acc: __m128, xv: __m256, yv: __m256) -> __m128 {
+        let p = _mm256_mul_ps(xv, yv);
+        let q = _mm_add_ps(_mm256_castps256_ps128(p), _mm256_extractf128_ps::<1>(p));
+        _mm_add_ps(acc, q)
+    }
+
+    /// The oracle's epilogue: `(s0+s1) + (s2+s3)` plus the sequential
+    /// scalar tail over `x[from..]`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn finish(acc: __m128, x: &[f32], y: &[f32], from: usize) -> f32 {
+        let mut s = [0f32; 4];
+        _mm_storeu_ps(s.as_mut_ptr(), acc);
+        let mut tail = 0f32;
+        for i in from..x.len() {
+            tail += x[i] * y[i];
+        }
+        (s[0] + s[1]) + (s[2] + s[3]) + tail
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+        let chunks = x.len() / 8;
+        let (xp, yp) = (x.as_ptr(), y.as_ptr());
+        let mut acc = _mm_setzero_ps();
+        for i in 0..chunks {
+            let o = i * 8;
+            acc = fold_step(acc, _mm256_loadu_ps(xp.add(o)), _mm256_loadu_ps(yp.add(o)));
+        }
+        finish(acc, x, y, chunks * 8)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_panel(arow: &[f32], panel: &[f32], k: usize, out: &mut [f32]) {
+        let cols = out.len();
+        let chunks = k / 8;
+        let xp = arow.as_ptr();
+        let bp = panel.as_ptr();
+        let mut j = 0usize;
+        // 4-column tile: four independent accumulator chains reuse each
+        // A chunk and hide the `_mm_add_ps` latency.
+        while j + 4 <= cols {
+            let (b0, b1, b2, b3) =
+                (bp.add(j * k), bp.add((j + 1) * k), bp.add((j + 2) * k), bp.add((j + 3) * k));
+            let mut a0 = _mm_setzero_ps();
+            let mut a1 = _mm_setzero_ps();
+            let mut a2 = _mm_setzero_ps();
+            let mut a3 = _mm_setzero_ps();
+            for i in 0..chunks {
+                let o = i * 8;
+                let xv = _mm256_loadu_ps(xp.add(o));
+                a0 = fold_step(a0, xv, _mm256_loadu_ps(b0.add(o)));
+                a1 = fold_step(a1, xv, _mm256_loadu_ps(b1.add(o)));
+                a2 = fold_step(a2, xv, _mm256_loadu_ps(b2.add(o)));
+                a3 = fold_step(a3, xv, _mm256_loadu_ps(b3.add(o)));
+            }
+            let from = chunks * 8;
+            out[j] = finish(a0, arow, &panel[j * k..(j + 1) * k], from);
+            out[j + 1] = finish(a1, arow, &panel[(j + 1) * k..(j + 2) * k], from);
+            out[j + 2] = finish(a2, arow, &panel[(j + 2) * k..(j + 3) * k], from);
+            out[j + 3] = finish(a3, arow, &panel[(j + 3) * k..(j + 4) * k], from);
+            j += 4;
+        }
+        while j < cols {
+            out[j] = dot(arow, &panel[j * k..j * k + k]);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    /// One canonical chunk step on 4-lane registers: two 4-lane
+    /// multiplies for the chunk's halves, added lane-wise
+    /// (`pⱼ + pⱼ₊₄`), then accumulated. `vmulq`/`vaddq` round after
+    /// every op, matching the scalar oracle (no `vfmaq`).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn fold_step(
+        acc: float32x4_t,
+        xlo: float32x4_t,
+        xhi: float32x4_t,
+        ylo: float32x4_t,
+        yhi: float32x4_t,
+    ) -> float32x4_t {
+        let q = vaddq_f32(vmulq_f32(xlo, ylo), vmulq_f32(xhi, yhi));
+        vaddq_f32(acc, q)
+    }
+
+    /// The oracle's epilogue: `(s0+s1) + (s2+s3)` plus the scalar tail.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn finish(acc: float32x4_t, x: &[f32], y: &[f32], from: usize) -> f32 {
+        let (s0, s1, s2, s3) = (
+            vgetq_lane_f32::<0>(acc),
+            vgetq_lane_f32::<1>(acc),
+            vgetq_lane_f32::<2>(acc),
+            vgetq_lane_f32::<3>(acc),
+        );
+        let mut tail = 0f32;
+        for i in from..x.len() {
+            tail += x[i] * y[i];
+        }
+        (s0 + s1) + (s2 + s3) + tail
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn dot(x: &[f32], y: &[f32]) -> f32 {
+        let chunks = x.len() / 8;
+        let (xp, yp) = (x.as_ptr(), y.as_ptr());
+        let mut acc = vdupq_n_f32(0.0);
+        for i in 0..chunks {
+            let o = i * 8;
+            acc = fold_step(
+                acc,
+                vld1q_f32(xp.add(o)),
+                vld1q_f32(xp.add(o + 4)),
+                vld1q_f32(yp.add(o)),
+                vld1q_f32(yp.add(o + 4)),
+            );
+        }
+        finish(acc, x, y, chunks * 8)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn row_panel(arow: &[f32], panel: &[f32], k: usize, out: &mut [f32]) {
+        let cols = out.len();
+        let chunks = k / 8;
+        let xp = arow.as_ptr();
+        let bp = panel.as_ptr();
+        let mut j = 0usize;
+        while j + 4 <= cols {
+            let (b0, b1, b2, b3) =
+                (bp.add(j * k), bp.add((j + 1) * k), bp.add((j + 2) * k), bp.add((j + 3) * k));
+            let mut a0 = vdupq_n_f32(0.0);
+            let mut a1 = vdupq_n_f32(0.0);
+            let mut a2 = vdupq_n_f32(0.0);
+            let mut a3 = vdupq_n_f32(0.0);
+            for i in 0..chunks {
+                let o = i * 8;
+                let xlo = vld1q_f32(xp.add(o));
+                let xhi = vld1q_f32(xp.add(o + 4));
+                a0 = fold_step(a0, xlo, xhi, vld1q_f32(b0.add(o)), vld1q_f32(b0.add(o + 4)));
+                a1 = fold_step(a1, xlo, xhi, vld1q_f32(b1.add(o)), vld1q_f32(b1.add(o + 4)));
+                a2 = fold_step(a2, xlo, xhi, vld1q_f32(b2.add(o)), vld1q_f32(b2.add(o + 4)));
+                a3 = fold_step(a3, xlo, xhi, vld1q_f32(b3.add(o)), vld1q_f32(b3.add(o + 4)));
+            }
+            let from = chunks * 8;
+            out[j] = finish(a0, arow, &panel[j * k..(j + 1) * k], from);
+            out[j + 1] = finish(a1, arow, &panel[(j + 1) * k..(j + 2) * k], from);
+            out[j + 2] = finish(a2, arow, &panel[(j + 2) * k..(j + 3) * k], from);
+            out[j + 3] = finish(a3, arow, &panel[(j + 3) * k..(j + 4) * k], from);
+            j += 4;
+        }
+        while j < cols {
+            out[j] = dot(arow, &panel[j * k..j * k + k]);
+            j += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::rng_from_seed;
+
+    fn fill(rng: &mut crate::rng::Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(-2.0, 2.0) as f32).collect()
+    }
+
+    #[test]
+    fn dot_scalar_handles_non_multiple_of_eight() {
+        for n in 0..20 {
+            let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let y = vec![1f32; n];
+            let expect: f32 = x.iter().sum();
+            assert_eq!(dot_scalar(&x, &y), expect);
+        }
+    }
+
+    #[test]
+    fn row_panel_all_levels_bit_identical_to_scalar() {
+        let mut rng = rng_from_seed(0x51);
+        // Ragged k (tails), ragged column counts (tile remainders).
+        for &k in &[0usize, 1, 7, 8, 9, 16, 31, 33, 64] {
+            for &cols in &[0usize, 1, 2, 3, 4, 5, 7, 8, 13] {
+                let arow = fill(&mut rng, k);
+                let panel = fill(&mut rng, k * cols);
+                let mut want = vec![0f32; cols];
+                row_panel_scalar(&arow, &panel, k, &mut want);
+                for level in super::super::available_levels() {
+                    let mut got = vec![0f32; cols];
+                    row_panel_at(level, &arow, &panel, k, &mut got);
+                    let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                    let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(gb, wb, "level={} k={k} cols={cols}", level.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_panel_matches_per_column_dots() {
+        let mut rng = rng_from_seed(0x52);
+        let (k, cols) = (37, 11);
+        let arow = fill(&mut rng, k);
+        let panel = fill(&mut rng, k * cols);
+        let mut out = vec![0f32; cols];
+        row_panel(&arow, &panel, k, &mut out);
+        for j in 0..cols {
+            let d = dot_scalar(&arow, &panel[j * k..(j + 1) * k]);
+            assert_eq!(out[j].to_bits(), d.to_bits(), "col {j}");
+        }
+    }
+}

@@ -1,0 +1,282 @@
+//! MEA-ECC keystream kernels: XOR a SplitMix64 pad over bytes (the
+//! wire's seal/open-the-bytes form) or over f32 bit patterns (the
+//! in-memory `SealedMatrix` mask).
+//!
+//! The keystream itself is *identical at every level* — one SplitMix64
+//! draw per 8 bytes / per f32 pair, in stream order, exactly as the
+//! scalar oracle consumes it. The vector kernels expand several draws
+//! into a small pad buffer (the mixes run in instruction-level
+//! parallelism; only the trivial `state += γ` chain is serial) and
+//! apply them with wide XORs, then hand the sub-block tail to the
+//! scalar loop *continuing the same generator* — so ciphertexts are
+//! byte-identical across levels and the pad never persists anywhere.
+//!
+//! Byte order: pads are committed through `to_le_bytes`, matching the
+//! scalar oracle's layout on every target the vector kernels exist for
+//! (x86_64 and aarch64 are little-endian).
+
+use super::Level;
+use crate::rng::SplitMix64;
+
+/// XOR `bytes` in place with the SplitMix64 keystream seeded from
+/// `seed`, 8 bytes per draw. Self-inverse; no allocation.
+#[inline]
+pub fn xor_in_place(bytes: &mut [u8], seed: u64) {
+    xor_in_place_at(super::level(), bytes, seed);
+}
+
+/// [`xor_in_place`] at an explicit level.
+pub fn xor_in_place_at(level: Level, bytes: &mut [u8], seed: u64) {
+    let mut ks = SplitMix64::new(seed);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 only exists behind runtime AVX2 detection.
+        Level::Avx2 => unsafe { avx2::xor_blocks(bytes, &mut ks) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Level::Neon only exists behind runtime NEON detection.
+        Level::Neon => unsafe { neon::xor_blocks(bytes, &mut ks) },
+        _ => xor_run(bytes, &mut ks),
+    }
+}
+
+/// Per-element 32-bit XOR keystream over f32 bit patterns, in place:
+/// the high half of each draw masks the even element, the low half the
+/// odd one, and a trailing element takes a fresh 32-bit draw.
+#[inline]
+pub fn mask_f32_in_place(data: &mut [f32], seed: u64) {
+    mask_f32_in_place_at(super::level(), data, seed);
+}
+
+/// [`mask_f32_in_place`] at an explicit level.
+pub fn mask_f32_in_place_at(level: Level, data: &mut [f32], seed: u64) {
+    let mut ks = SplitMix64::new(seed);
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Level::Avx2 only exists behind runtime AVX2 detection.
+        Level::Avx2 => unsafe { avx2::mask_blocks(data, &mut ks) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: Level::Neon only exists behind runtime NEON detection.
+        Level::Neon => unsafe { neon::mask_blocks(data, &mut ks) },
+        _ => mask_run(data, &mut ks),
+    }
+}
+
+/// The scalar byte-XOR loop — moved verbatim from
+/// `ecc::mea::xor_keystream_in_place` (PR 3), parameterized on the
+/// generator so the vector kernels reuse it for sub-block tails.
+fn xor_run(bytes: &mut [u8], ks: &mut SplitMix64) {
+    let mut chunks = bytes.chunks_exact_mut(8);
+    for chunk in &mut chunks {
+        let pad = ks.next_u64().to_le_bytes();
+        for (b, p) in chunk.iter_mut().zip(pad.iter()) {
+            *b ^= p;
+        }
+    }
+    let rem = chunks.into_remainder();
+    if !rem.is_empty() {
+        let pad = ks.next_u64().to_le_bytes();
+        for (b, p) in rem.iter_mut().zip(pad.iter()) {
+            *b ^= p;
+        }
+    }
+}
+
+/// The scalar f32-mask loop — moved verbatim from
+/// `ecc::mea::mask_f32_keystream_in_place` (PR 3), same
+/// parameterization.
+fn mask_run(data: &mut [f32], ks: &mut SplitMix64) {
+    let mut chunks = data.chunks_exact_mut(2);
+    for pair in &mut chunks {
+        let w = ks.next_u64();
+        pair[0] = f32::from_bits(pair[0].to_bits() ^ (w >> 32) as u32);
+        pair[1] = f32::from_bits(pair[1].to_bits() ^ w as u32);
+    }
+    if let [last] = chunks.into_remainder() {
+        *last = f32::from_bits(last.to_bits() ^ ks.next_u32());
+    }
+}
+
+/// Expand the next `N/8` draws into an `N`-byte pad, committed in the
+/// oracle's `to_le_bytes` layout.
+#[inline]
+fn fill_pad<const N: usize>(ks: &mut SplitMix64) -> [u8; N] {
+    let mut pad = [0u8; N];
+    for w in 0..N / 8 {
+        pad[w * 8..w * 8 + 8].copy_from_slice(&ks.next_u64().to_le_bytes());
+    }
+    pad
+}
+
+/// Expand the next 4 draws into a 32-byte pad in the f32-mask word
+/// order: per draw, high 32 bits first (even element), low 32 bits
+/// second (odd element).
+#[inline]
+fn fill_mask_pad(ks: &mut SplitMix64) -> [u8; 32] {
+    let mut pad = [0u8; 32];
+    for w in 0..4 {
+        let z = ks.next_u64();
+        pad[w * 8..w * 8 + 4].copy_from_slice(&((z >> 32) as u32).to_le_bytes());
+        pad[w * 8 + 4..w * 8 + 8].copy_from_slice(&(z as u32).to_le_bytes());
+    }
+    pad
+}
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::{fill_mask_pad, fill_pad, mask_run, xor_run};
+    use crate::rng::SplitMix64;
+    use std::arch::x86_64::*;
+
+    /// XOR one 32-byte pad onto `dst`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn xor32(dst: *mut u8, pad: *const u8) {
+        let v = _mm256_loadu_si256(dst as *const __m256i);
+        let p = _mm256_loadu_si256(pad as *const __m256i);
+        _mm256_storeu_si256(dst as *mut __m256i, _mm256_xor_si256(v, p));
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn xor_blocks(bytes: &mut [u8], ks: &mut SplitMix64) {
+        let n = bytes.len();
+        let p = bytes.as_mut_ptr();
+        let mut off = 0usize;
+        // 64-byte blocks: 8 draws expanded together for ILP across the
+        // mixes, two 256-bit XORs.
+        while off + 64 <= n {
+            let pad = fill_pad::<64>(ks);
+            xor32(p.add(off), pad.as_ptr());
+            xor32(p.add(off + 32), pad.as_ptr().add(32));
+            off += 64;
+        }
+        if off + 32 <= n {
+            let pad = fill_pad::<32>(ks);
+            xor32(p.add(off), pad.as_ptr());
+            off += 32;
+        }
+        // Sub-block tail: the scalar loop continues the same stream.
+        xor_run(&mut bytes[off..], ks);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn mask_blocks(data: &mut [f32], ks: &mut SplitMix64) {
+        let n = data.len();
+        let p = data.as_mut_ptr() as *mut u8;
+        let mut off = 0usize;
+        // 8 elements (4 draws) per block; XOR on the raw bit patterns.
+        while off + 8 <= n {
+            let pad = fill_mask_pad(ks);
+            xor32(p.add(off * 4), pad.as_ptr());
+            off += 8;
+        }
+        mask_run(&mut data[off..], ks);
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use super::{fill_mask_pad, fill_pad, mask_run, xor_run};
+    use crate::rng::SplitMix64;
+    use std::arch::aarch64::*;
+
+    /// XOR one 32-byte pad onto `dst` (two 128-bit lanes).
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn xor32(dst: *mut u8, pad: *const u8) {
+        let v0 = veorq_u8(vld1q_u8(dst), vld1q_u8(pad));
+        let v1 = veorq_u8(vld1q_u8(dst.add(16)), vld1q_u8(pad.add(16)));
+        vst1q_u8(dst, v0);
+        vst1q_u8(dst.add(16), v1);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn xor_blocks(bytes: &mut [u8], ks: &mut SplitMix64) {
+        let n = bytes.len();
+        let p = bytes.as_mut_ptr();
+        let mut off = 0usize;
+        while off + 64 <= n {
+            let pad = fill_pad::<64>(ks);
+            xor32(p.add(off), pad.as_ptr());
+            xor32(p.add(off + 32), pad.as_ptr().add(32));
+            off += 64;
+        }
+        if off + 32 <= n {
+            let pad = fill_pad::<32>(ks);
+            xor32(p.add(off), pad.as_ptr());
+            off += 32;
+        }
+        xor_run(&mut bytes[off..], ks);
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn mask_blocks(data: &mut [f32], ks: &mut SplitMix64) {
+        let n = data.len();
+        let p = data.as_mut_ptr() as *mut u8;
+        let mut off = 0usize;
+        while off + 8 <= n {
+            let pad = fill_mask_pad(ks);
+            xor32(p.add(off * 4), pad.as_ptr());
+            off += 8;
+        }
+        mask_run(&mut data[off..], ks);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xor_all_levels_byte_identical_to_scalar() {
+        for &len in &[0usize, 1, 7, 8, 9, 31, 32, 33, 63, 64, 65, 100, 1023, 4096] {
+            let plain: Vec<u8> = (0..len).map(|i| (i * 7 + 3) as u8).collect();
+            let mut want = plain.clone();
+            xor_in_place_at(Level::Scalar, &mut want, 0xFEED_5EED);
+            for level in super::super::available_levels() {
+                let mut got = plain.clone();
+                xor_in_place_at(level, &mut got, 0xFEED_5EED);
+                assert_eq!(got, want, "level={} len={len}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn xor_is_self_inverse_at_every_level() {
+        let plain: Vec<u8> = (0..777).map(|i| (i % 251) as u8).collect();
+        for level in super::super::available_levels() {
+            let mut buf = plain.clone();
+            xor_in_place_at(level, &mut buf, 42);
+            assert_ne!(buf, plain, "level={} must mask", level.name());
+            xor_in_place_at(level, &mut buf, 42);
+            assert_eq!(buf, plain, "level={} roundtrip", level.name());
+        }
+    }
+
+    #[test]
+    fn mask_all_levels_bit_identical_to_scalar() {
+        for &len in &[0usize, 1, 2, 3, 7, 8, 9, 15, 16, 17, 100, 1001] {
+            let plain: Vec<f32> = (0..len).map(|i| i as f32 * 0.37 - 3.0).collect();
+            let mut want = plain.clone();
+            mask_f32_in_place_at(Level::Scalar, &mut want, 0xD00D);
+            for level in super::super::available_levels() {
+                let mut got = plain.clone();
+                mask_f32_in_place_at(level, &mut got, 0xD00D);
+                let wb: Vec<u32> = want.iter().map(|v| v.to_bits()).collect();
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, wb, "level={} len={len}", level.name());
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_stream_matches_splitmix_reference() {
+        // The all-zero plaintext *is* the keystream: check it against
+        // direct SplitMix64 draws so refactors can't drift the stream.
+        let mut buf = vec![0u8; 24];
+        xor_in_place_at(Level::Scalar, &mut buf, 9);
+        let mut ks = SplitMix64::new(9);
+        for w in 0..3 {
+            assert_eq!(&buf[w * 8..w * 8 + 8], &ks.next_u64().to_le_bytes());
+        }
+    }
+}

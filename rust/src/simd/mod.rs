@@ -1,0 +1,203 @@
+//! SIMD microkernels for the four hot paths, behind one-time runtime
+//! dispatch — DESIGN.md §10.
+//!
+//! The kernels here are the only `unsafe` code in the crate (a CI
+//! grep-lint enforces the confinement). Four hot paths are dispatched:
+//!
+//! * [`gemm`] — the packed GEMM inner kernel (`matrix::ops`): one A row
+//!   against a panel of packed Bᵀ rows.
+//! * [`keystream`] — the MEA-ECC SplitMix64 pads (`ecc::mea`): byte XOR
+//!   for seal/open-the-bytes, 32-bit-word XOR for f32 bit patterns.
+//! * [`axpy`] — the fixed-order `weighted_sum` accumulation
+//!   (`coding::interp`, Berrut/Lagrange decode).
+//! * [`fp61x`] — slice-batched F_{2^61−1} add/reduce lanes backing the
+//!   `field::fp61::batch` helpers.
+//!
+//! **Determinism contract.** Every vector kernel performs the *same*
+//! per-element operations in the *same* per-element order as its scalar
+//! oracle — lane-wise IEEE-754 mul/add (never a fused mul-add: fusing
+//! skips a rounding step the scalar code performs), same chunk
+//! boundaries, same fixed reduction tree. Outputs are therefore
+//! bit-identical across `Level`s, which composes with the thread-pool
+//! contract (`parallel`): one result for any `(threads, SIMD level)`
+//! pair. `tests/simd_parity.rs` sweeps ragged shapes and unaligned
+//! tails; the CI scenario matrix pins one digest across
+//! `SPACDC_SIMD=off` and auto legs.
+//!
+//! **Dispatch.** The active [`Level`] is resolved once into a
+//! [`OnceLock`]: the `SPACDC_SIMD` environment variable, if set,
+//! overrides (`off`/`scalar`, `avx2`, `neon`, `auto`); otherwise
+//! `is_x86_feature_detected!("avx2")` / NEON detection picks the widest
+//! supported lane width. Forcing an ISA the CPU lacks panics (executing
+//! the kernel would be undefined behaviour); unknown values panic too,
+//! so a typo cannot silently drop to scalar. Kernels take an explicit
+//! `Level` in their `*_at` form (benches and parity tests pin both
+//! sides); the plain entry points read the cached level.
+//!
+//! **Adding an ISA.** Implement the per-kernel `*_<isa>` functions
+//! behind `#[cfg(target_arch)] + #[target_feature]`, add a `Level`
+//! variant, extend `native()` detection and `parse_override`, and add
+//! the ISA to the parity sweeps in `tests/simd_parity.rs`. Nothing
+//! outside this module changes.
+
+use std::sync::OnceLock;
+
+pub mod axpy;
+pub mod fp61x;
+pub mod gemm;
+pub mod keystream;
+
+/// An instruction-set level the kernels can run at. `Scalar` is always
+/// available and is the oracle the vector levels are tested against.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Level {
+    /// The portable scalar kernels (the verbatim pre-SIMD hot paths).
+    Scalar,
+    /// 256-bit AVX2 lanes (x86_64, runtime-detected).
+    Avx2,
+    /// 128-bit NEON lanes (aarch64, runtime-detected).
+    Neon,
+}
+
+impl Level {
+    /// Stable lowercase name (`scalar` / `avx2` / `neon`) — used by the
+    /// microbench JSON and log lines.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Level::Scalar => "scalar",
+            Level::Avx2 => "avx2",
+            Level::Neon => "neon",
+        }
+    }
+}
+
+static ACTIVE: OnceLock<Level> = OnceLock::new();
+
+/// The level the dispatched kernels run at, resolved once per process
+/// from `SPACDC_SIMD` (override) or runtime feature detection.
+#[inline]
+pub fn level() -> Level {
+    *ACTIVE.get_or_init(|| match std::env::var("SPACDC_SIMD") {
+        Ok(raw) => parse_override(&raw).unwrap_or_else(|e| panic!("SPACDC_SIMD: {e}")),
+        Err(_) => native(),
+    })
+}
+
+/// Parse one `SPACDC_SIMD` value into the level it forces.
+///
+/// Pure so the table is testable without touching the process cache:
+/// `off`/`scalar` force the oracle, `avx2`/`neon` force an ISA (error
+/// if this build/CPU cannot execute it), `auto`/empty defer to
+/// detection.
+fn parse_override(raw: &str) -> Result<Level, String> {
+    match raw.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => Ok(native()),
+        "off" | "scalar" => Ok(Level::Scalar),
+        "avx2" => {
+            if avx2_available() {
+                Ok(Level::Avx2)
+            } else {
+                Err("avx2 forced but not available on this CPU/arch".into())
+            }
+        }
+        "neon" => {
+            if neon_available() {
+                Ok(Level::Neon)
+            } else {
+                Err("neon forced but not available on this CPU/arch".into())
+            }
+        }
+        other => Err(format!(
+            "unknown value {other:?} (expected off|scalar|avx2|neon|auto)"
+        )),
+    }
+}
+
+/// Widest level the running CPU supports.
+fn native() -> Level {
+    if avx2_available() {
+        Level::Avx2
+    } else if neon_available() {
+        Level::Neon
+    } else {
+        Level::Scalar
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_available() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_available() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn neon_available() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+
+#[cfg(not(target_arch = "aarch64"))]
+fn neon_available() -> bool {
+    false
+}
+
+/// Every level this build can execute (used by the parity tests to
+/// sweep all reachable kernels, whatever machine the tests run on).
+pub fn available_levels() -> Vec<Level> {
+    let mut out = vec![Level::Scalar];
+    if avx2_available() {
+        out.push(Level::Avx2);
+    }
+    if neon_available() {
+        out.push(Level::Neon);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_override_scalar_spellings() {
+        assert_eq!(parse_override("off"), Ok(Level::Scalar));
+        assert_eq!(parse_override("scalar"), Ok(Level::Scalar));
+        assert_eq!(parse_override(" OFF "), Ok(Level::Scalar));
+    }
+
+    #[test]
+    fn parse_override_auto_matches_native() {
+        assert_eq!(parse_override("auto"), Ok(native()));
+        assert_eq!(parse_override(""), Ok(native()));
+    }
+
+    #[test]
+    fn parse_override_rejects_garbage() {
+        assert!(parse_override("sse9").is_err());
+        assert!(parse_override("on").is_err());
+    }
+
+    #[test]
+    fn forced_isa_matches_detection() {
+        // Forcing an ISA succeeds exactly when detection reports it.
+        assert_eq!(parse_override("avx2").is_ok(), avx2_available());
+        assert_eq!(parse_override("neon").is_ok(), neon_available());
+    }
+
+    #[test]
+    fn level_is_stable_and_available() {
+        let l = level();
+        assert_eq!(l, level(), "cached level must not change");
+        assert!(available_levels().contains(&l));
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(Level::Scalar.name(), "scalar");
+        assert_eq!(Level::Avx2.name(), "avx2");
+        assert_eq!(Level::Neon.name(), "neon");
+    }
+}

@@ -1,0 +1,268 @@
+//! SIMD-vs-scalar parity — the PR-7 contract (DESIGN.md §10).
+//!
+//! The SIMD layer (`spacdc::simd`) promises that every dispatched
+//! kernel — packed GEMM row×panel, MEA-ECC keystreams, the
+//! `weighted_sum` axpy, batched Fp61 lanes — is *bit-identical* to its
+//! scalar oracle at every level the running CPU can execute. This suite
+//! pins that from outside the crate:
+//!
+//! * kernel sweeps run every `available_levels()` entry through the
+//!   `*_at` entry points on ragged shapes and unaligned tails;
+//! * the public hot paths (`matmul`/`gram`, seal/open, decode) are
+//!   recomputed against scalar references at whatever level the process
+//!   dispatched, so a vector kernel cannot drift without failing here;
+//! * the full encode → seal → decode digest of all 8 schemes is pinned
+//!   across thread counts at the ambient level.
+//!
+//! The `SPACDC_SIMD=off` vs auto axis cannot be toggled in-process (the
+//! level is a `OnceLock`); the CI scenario matrix runs whole processes
+//! under both values and asserts one digest, completing the contract.
+
+use spacdc::coding::interp::weighted_sum_with;
+use spacdc::coding::{make_scheme, CodeParams, CodedTask, Threshold};
+use spacdc::config::SchemeKind;
+use spacdc::coordinator::SealedPayload;
+use spacdc::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc};
+use spacdc::field::fp61::{batch, P61};
+use spacdc::matrix::{matmul_with, matvec, Matrix};
+use spacdc::metrics::MetricsRegistry;
+use spacdc::parallel::{self, ThreadPool};
+use spacdc::rng::{derive_seed, rng_from_seed, Rng};
+use spacdc::runtime::{Executor, WorkerOp};
+use spacdc::simd::{self, axpy, fp61x, gemm, keystream, Level};
+use std::sync::Arc;
+
+fn fill_f32(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform(-2.0, 2.0) as f32).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn dispatched_level_is_executable() {
+    let l = simd::level();
+    assert!(
+        simd::available_levels().contains(&l),
+        "dispatched level {} must be executable here",
+        l.name()
+    );
+}
+
+#[test]
+fn gemm_row_panel_parity_on_ragged_shapes() {
+    let mut rng = rng_from_seed(0x5101);
+    for &k in &[1usize, 3, 7, 8, 9, 15, 16, 17, 31, 32, 33, 63, 64, 65, 127] {
+        for &cols in &[1usize, 2, 3, 4, 5, 6, 7, 8, 9, 13] {
+            let arow = fill_f32(&mut rng, k);
+            let panel = fill_f32(&mut rng, k * cols);
+            let mut want = vec![0f32; cols];
+            gemm::row_panel_scalar(&arow, &panel, k, &mut want);
+            for level in simd::available_levels() {
+                let mut got = vec![0f32; cols];
+                gemm::row_panel_at(level, &arow, &panel, k, &mut got);
+                assert_eq!(bits(&got), bits(&want), "level={} k={k} cols={cols}", level.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn public_matmul_bit_matches_scalar_reference() {
+    // Whatever level the process dispatched, the public product must
+    // equal a from-scratch scalar-oracle recomputation, bit for bit.
+    let mut rng = rng_from_seed(0x5102);
+    let pool = ThreadPool::new(8);
+    for &(m, k, n) in &[(1usize, 1usize, 1usize), (5, 7, 3), (33, 17, 65), (70, 129, 41)] {
+        let a = Matrix::random_gaussian(m, k, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_gaussian(k, n, 0.0, 1.0, &mut rng);
+        let fast = matmul_with(&pool, &a, &b);
+        let bt = b.transpose();
+        let btd = bt.as_slice();
+        let mut want = vec![0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                want[i * n + j] = gemm::dot_scalar(a.row(i), &btd[j * k..j * k + k]);
+            }
+        }
+        assert_eq!(bits(fast.as_slice()), bits(&want), "({m},{k},{n})");
+    }
+}
+
+#[test]
+fn matvec_bit_matches_scalar_dots() {
+    let mut rng = rng_from_seed(0x5103);
+    let a = Matrix::random_gaussian(39, 23, 0.0, 1.0, &mut rng);
+    let v = fill_f32(&mut rng, 23);
+    let got = matvec(&a, &v);
+    let want: Vec<f32> = (0..39).map(|i| gemm::dot_scalar(a.row(i), &v)).collect();
+    assert_eq!(bits(&got), bits(&want));
+}
+
+#[test]
+fn keystream_parity_on_unaligned_tails() {
+    for &len in &[0usize, 1, 5, 8, 13, 31, 32, 33, 63, 64, 65, 97, 1000, 4097] {
+        let plain: Vec<u8> = (0..len).map(|i| (i * 31 + 7) as u8).collect();
+        let mut want = plain.clone();
+        keystream::xor_in_place_at(Level::Scalar, &mut want, 0xC0FFEE);
+        for level in simd::available_levels() {
+            let mut got = plain.clone();
+            keystream::xor_in_place_at(level, &mut got, 0xC0FFEE);
+            assert_eq!(got, want, "xor level={} len={len}", level.name());
+        }
+        let fplain: Vec<f32> = (0..len).map(|i| i as f32 * 0.5 - 9.0).collect();
+        let mut fwant = fplain.clone();
+        keystream::mask_f32_in_place_at(Level::Scalar, &mut fwant, 0xC0FFEE);
+        for level in simd::available_levels() {
+            let mut fgot = fplain.clone();
+            keystream::mask_f32_in_place_at(level, &mut fgot, 0xC0FFEE);
+            assert_eq!(bits(&fgot), bits(&fwant), "mask level={} len={len}", level.name());
+        }
+    }
+}
+
+#[test]
+fn weighted_sum_bit_matches_scalar_axpy_reference() {
+    // Chunking only partitions elements; each element accumulates the
+    // samples in input order, so whole-matrix scalar axpy passes are the
+    // exact reference for any pool width and SIMD level.
+    let mut rng = rng_from_seed(0x5104);
+    let values: Vec<Matrix> =
+        (0..7).map(|_| Matrix::random_gaussian(41, 29, 0.0, 1.0, &mut rng)).collect();
+    let weights: Vec<f64> = (0..7).map(|_| rng.uniform(-1.0, 1.0)).collect();
+    let mut want = vec![0f32; 41 * 29];
+    for (v, &w) in values.iter().zip(&weights) {
+        axpy::axpy_at(Level::Scalar, &mut want, v.as_slice(), w as f32);
+    }
+    for threads in [1usize, 8] {
+        let got = weighted_sum_with(&ThreadPool::new(threads), &values, &weights);
+        assert_eq!(bits(got.as_slice()), bits(&want), "threads={threads}");
+    }
+}
+
+#[test]
+fn axpy_parity_on_ragged_lengths() {
+    let mut rng = rng_from_seed(0x5105);
+    for &len in &[0usize, 1, 7, 8, 15, 16, 17, 100, 4099] {
+        let src = fill_f32(&mut rng, len);
+        let base = fill_f32(&mut rng, len);
+        let w = rng.uniform(-2.0, 2.0) as f32;
+        let mut want = base.clone();
+        axpy::axpy_at(Level::Scalar, &mut want, &src, w);
+        for level in simd::available_levels() {
+            let mut got = base.clone();
+            axpy::axpy_at(level, &mut got, &src, w);
+            assert_eq!(bits(&got), bits(&want), "level={} len={len}", level.name());
+        }
+    }
+}
+
+#[test]
+fn fp61_batch_parity_across_levels() {
+    let mut rng = rng_from_seed(0x5106);
+    for &len in &[0usize, 1, 2, 3, 4, 5, 9, 100, 513] {
+        let a: Vec<u64> = (0..len).map(|_| rng.next_u64() % P61).collect();
+        let b: Vec<u64> = (0..len).map(|_| rng.next_u64() % P61).collect();
+        let raw: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+        let mut add_want = a.clone();
+        fp61x::add_assign_at(Level::Scalar, &mut add_want, &b);
+        let mut red_want = raw.clone();
+        fp61x::reduce_assign_at(Level::Scalar, &mut red_want);
+        for level in simd::available_levels() {
+            let mut add_got = a.clone();
+            fp61x::add_assign_at(level, &mut add_got, &b);
+            assert_eq!(add_got, add_want, "add level={} len={len}", level.name());
+            let mut red_got = raw.clone();
+            fp61x::reduce_assign_at(level, &mut red_got);
+            assert_eq!(red_got, red_want, "reduce level={} len={len}", level.name());
+        }
+        // The public batch API (dispatched) against element-wise math.
+        let mut sum = a.clone();
+        batch::add_assign(&mut sum, &b);
+        let mut prod = a.clone();
+        batch::mul_assign(&mut prod, &b);
+        for i in 0..len {
+            assert_eq!(sum[i] as u128, (a[i] as u128 + b[i] as u128) % P61 as u128);
+            assert_eq!(prod[i] as u128, (a[i] as u128 * b[i] as u128) % P61 as u128);
+        }
+    }
+}
+
+fn push_matrix(digest: &mut Vec<u8>, m: &Matrix) {
+    digest.extend_from_slice(&(m.rows() as u32).to_le_bytes());
+    digest.extend_from_slice(&(m.cols() as u32).to_le_bytes());
+    for v in m.as_slice() {
+        digest.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+}
+
+/// One full coded round at the current global pool width, digested —
+/// the `parallel_determinism` construction, reused to pin that the SIMD
+/// dispatch level does not interact with the thread count.
+fn pipeline_digest(kind: SchemeKind) -> Vec<u8> {
+    let params = CodeParams::new(12, 3, 2);
+    let scheme = make_scheme(kind, params);
+    let mut rng = rng_from_seed(0x51D);
+    let x = Matrix::random_gaussian(24, 18, 0.0, 1.0, &mut rng);
+    let task = if kind == SchemeKind::MatDot {
+        CodedTask::pair_product(x.clone(), x.transpose())
+    } else {
+        let v = Matrix::random_gaussian(18, 8, 0.0, 1.0, &mut rng);
+        CodedTask::block_map(WorkerOp::RightMul(Arc::new(v)), x.clone())
+    };
+    let job = scheme.encode(&task, &mut rng).unwrap();
+    let mut digest = Vec::new();
+    for payloads in &job.payloads {
+        for m in payloads {
+            push_matrix(&mut digest, m);
+        }
+    }
+    let curve = sim_curve();
+    let mea = MeaEcc::new(curve, MaskMode::Keystream);
+    let executor = Executor::native(Arc::new(MetricsRegistry::new()));
+    let mut results: Vec<(usize, Matrix)> = Vec::new();
+    for (w, payloads) in job.payloads.iter().enumerate() {
+        let mut wrng = rng_from_seed(derive_seed(0x51D2, w as u64));
+        let keys = KeyPair::generate(&curve, &mut wrng);
+        let mut opened = Vec::new();
+        for m in payloads {
+            let sealed = SealedPayload::seal(&mea, m, &keys.public(), &mut wrng);
+            digest.extend_from_slice(&sealed.sealed.bytes);
+            let back = sealed.open_owned(&mea, &keys).unwrap();
+            assert_eq!(&back, m, "seal/open must round-trip bit-exact");
+            opened.push(back);
+        }
+        results.push((w, executor.run(&job.op, &opened)));
+    }
+    let selected: Vec<(usize, Matrix)> = match scheme.threshold(&task) {
+        Threshold::Exact(k) => results.into_iter().take(k).collect(),
+        Threshold::Flexible { .. } => {
+            results.into_iter().filter(|(w, _)| *w != 2 && *w != 7).collect()
+        }
+    };
+    let decoded = scheme.decode(&job.ctx, &selected).unwrap();
+    for m in &decoded {
+        push_matrix(&mut digest, m);
+    }
+    digest
+}
+
+#[test]
+fn all_schemes_digest_stable_across_threads_at_dispatched_level() {
+    for kind in SchemeKind::all() {
+        parallel::configure(1);
+        let baseline = pipeline_digest(kind);
+        assert!(!baseline.is_empty());
+        parallel::configure(8);
+        let got = pipeline_digest(kind);
+        assert_eq!(
+            got,
+            baseline,
+            "{} digest must be identical at (threads=8, level={})",
+            kind.name(),
+            simd::level().name()
+        );
+    }
+    parallel::configure(0); // restore auto width for later tests
+}
