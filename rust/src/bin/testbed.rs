@@ -33,7 +33,7 @@
 use spacdc::cli::{parse, usage, ArgSpec};
 use spacdc::config::{parse_threads_token, TransportKind};
 use spacdc::coordinator::ExitCause;
-use spacdc::sim::{run_scenario_with, Scenario, ScenarioReport};
+use spacdc::sim::{run_scenario_with, RoundStatus, Scenario, ScenarioReport};
 
 fn specs() -> Vec<ArgSpec> {
     vec![
@@ -97,6 +97,7 @@ fn main() -> anyhow::Result<()> {
 
     let mut failures: Vec<String> = Vec::new();
     check_exits(&scenario, &report, &mut failures);
+    check_verify(&scenario, &report, &mut failures);
 
     let expected = parsed.get_str("expect-digest");
     if !expected.is_empty() && expected != report.digest {
@@ -167,6 +168,46 @@ fn check_exits(sc: &Scenario, report: &ScenarioReport, failures: &mut Vec<String
     }
 }
 
+/// Hold a Byzantine plan to the verification layer (DESIGN.md §11):
+/// scheduled forgeries must be detected, their senders quarantined, and
+/// every decoded round must be right — never silently wrong.
+fn check_verify(sc: &Scenario, report: &ScenarioReport, failures: &mut Vec<String>) {
+    if !sc.fault_plan().has_forgers() {
+        return;
+    }
+    if report.verify_forged_detected == 0 {
+        failures.push("the plan schedules forgeries but none was detected".into());
+    }
+    if report.verify_checked == 0 {
+        failures
+            .push("a forger plan ran but the collector verified no commitments".into());
+    }
+    if report.verify_quarantined == 0 {
+        failures.push("no forging executor was quarantined".into());
+    }
+    for r in &report.records {
+        if r.status != RoundStatus::Ok {
+            continue;
+        }
+        match r.rel_err {
+            Some(e) if e.is_finite() && e < 1.0 => {}
+            other => failures.push(format!(
+                "round {}: decode error {other:?} under a forger plan — a forged \
+                 result may have reached the decoder",
+                r.round
+            )),
+        }
+    }
+    if failures.is_empty() {
+        println!(
+            "testbed: verification OK — {} forged, {} quarantined, {} rehabilitated",
+            report.verify_forged_detected,
+            report.verify_quarantined,
+            report.verify_rehabilitated
+        );
+    }
+}
+
 /// The determinism contract across the process boundary: everything the
 /// digest folds (decoded bits, statuses, byte totals, recovered shares)
 /// plus the named deterministic fields must match the in-process run.
@@ -188,6 +229,13 @@ fn check_parity(proc_run: &ScenarioReport, inproc: &ScenarioReport, failures: &m
         failures.push(format!(
             "final generations diverge: proc {:?} vs inproc {:?}",
             proc_run.final_generations, inproc.final_generations
+        ));
+    }
+    if proc_run.verify_forged_detected != inproc.verify_forged_detected {
+        failures.push(format!(
+            "forged detections diverge: proc {} vs inproc {} — the booking is \
+             plan-pure and must not depend on the fabric",
+            proc_run.verify_forged_detected, inproc.verify_forged_detected
         ));
     }
     for (p, i) in proc_run.records.iter().zip(&inproc.records) {

@@ -48,6 +48,12 @@ struct Entry {
     pk: Point<Fp61>,
     generation: u32,
     state: WorkerState,
+    /// Quarantined after a verified forgery (DESIGN.md §11). A suspect
+    /// stays `Alive` — its own shares are still dispatched, so the
+    /// round schedule never depends on detection timing — but it is
+    /// excluded from speculative picks until a verified-good result
+    /// rehabilitates it. A fresh incarnation starts unsuspected.
+    suspected: bool,
 }
 
 /// Shared directory of worker incarnations (see module docs).
@@ -61,8 +67,15 @@ impl WorkerDirectory {
     /// A directory of `n` unregistered slots (state `Respawning`,
     /// generation 0): bring-up is just the first registration wave.
     pub fn new(n: usize) -> Self {
-        let entries =
-            vec![Entry { pk: Point::Infinity, generation: 0, state: WorkerState::Respawning }; n];
+        let entries = vec![
+            Entry {
+                pk: Point::Infinity,
+                generation: 0,
+                state: WorkerState::Respawning,
+                suspected: false,
+            };
+            n
+        ];
         Self { entries: Mutex::new(entries), cv: Condvar::new() }
     }
 
@@ -89,7 +102,9 @@ impl WorkerDirectory {
             let accept = generation > e.generation
                 || (generation == e.generation && e.state != WorkerState::Alive);
             if accept {
-                *e = Entry { pk, generation, state: WorkerState::Alive };
+                // A new incarnation is a new identity: suspicion dies
+                // with the incarnation that earned it.
+                *e = Entry { pk, generation, state: WorkerState::Alive, suspected: false };
                 self.cv.notify_all();
             }
         }
@@ -163,6 +178,45 @@ impl WorkerDirectory {
     /// worker (the seal targets for the next round).
     pub fn pks(&self) -> Vec<Point<Fp61>> {
         self.entries.lock().unwrap().iter().map(|e| e.pk).collect()
+    }
+
+    /// Quarantine `worker` after a verified forgery: excluded from
+    /// speculative picks until rehabilitated. Returns `true` when the
+    /// worker was not already suspected (the caller counts new
+    /// quarantines, not repeat offenses).
+    pub fn mark_suspected(&self, worker: usize) -> bool {
+        let mut es = self.entries.lock().unwrap();
+        match es.get_mut(worker) {
+            Some(e) if !e.suspected => {
+                e.suspected = true;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Readmit `worker` after a verified-good result. Returns `true`
+    /// when it was actually suspected (the caller counts real
+    /// rehabilitations, not no-ops).
+    pub fn rehabilitate(&self, worker: usize) -> bool {
+        let mut es = self.entries.lock().unwrap();
+        match es.get_mut(worker) {
+            Some(e) if e.suspected => {
+                e.suspected = false;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Is `worker` currently quarantined?
+    pub fn is_suspected(&self, worker: usize) -> bool {
+        self.entries.lock().unwrap()[worker].suspected
+    }
+
+    /// Per-worker quarantine mask (parallel to [`alive_mask`](Self::alive_mask)).
+    pub fn suspected_mask(&self) -> Vec<bool> {
+        self.entries.lock().unwrap().iter().map(|e| e.suspected).collect()
     }
 }
 
@@ -251,6 +305,45 @@ mod tests {
         assert_eq!(d.pks()[0], pk(10));
         assert_eq!(d.generation(0), 1);
         assert_eq!(d.state(0), WorkerState::Alive);
+    }
+
+    #[test]
+    fn quarantine_flags_once_and_rehab_clears_it() {
+        let d = WorkerDirectory::new(3);
+        for w in 0..3 {
+            d.register(w, 0, pk(w as u64));
+        }
+        assert_eq!(d.suspected_mask(), vec![false; 3]);
+        assert!(d.mark_suspected(1), "first verified forgery is a new quarantine");
+        assert!(!d.mark_suspected(1), "repeat offenses are not new quarantines");
+        assert!(d.is_suspected(1));
+        assert_eq!(d.suspected_mask(), vec![false, true, false]);
+        // Quarantine does not touch the lifecycle state: the suspect's
+        // own shares are still dispatched.
+        assert_eq!(d.state(1), WorkerState::Alive);
+        assert_eq!(d.alive_mask(), vec![true; 3]);
+        assert!(d.rehabilitate(1), "a verified-good result readmits the suspect");
+        assert!(!d.rehabilitate(1), "rehabilitating an unsuspected worker is a no-op");
+        assert!(!d.is_suspected(1));
+        assert!(!d.mark_suspected(99), "out-of-range workers are ignored");
+        assert!(!d.rehabilitate(99));
+    }
+
+    #[test]
+    fn a_fresh_incarnation_starts_unsuspected() {
+        let d = WorkerDirectory::new(1);
+        d.register(0, 0, pk(1));
+        assert!(d.mark_suspected(0));
+        d.mark_crashed(0);
+        assert!(d.is_suspected(0), "crashing does not clear suspicion by itself");
+        let gen = d.begin_respawn(0);
+        d.register(0, gen, pk(2));
+        assert!(!d.is_suspected(0), "suspicion dies with the incarnation that earned it");
+        // But a stale frame from the dead generation must not launder a
+        // live suspect's reputation.
+        assert!(d.mark_suspected(0));
+        d.register(0, gen, pk(3));
+        assert!(d.is_suspected(0), "a rejected registration must not clear suspicion");
     }
 
     #[test]

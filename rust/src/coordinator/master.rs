@@ -26,10 +26,10 @@
 //! abandons its round, so in-flight buffers can never leak.
 
 use super::lifecycle::{WorkerDirectory, WorkerState};
-use super::messages::{ControlMsg, SealedPayload, WirePayload, WorkOrder};
+use super::messages::{share_commitment, ControlMsg, SealedPayload, WirePayload, WorkOrder};
 use super::pool::WorkerPool;
 use super::registry::{RoundRegistry, SoftWait, WaitError};
-use crate::coding::{make_scheme, CodeParams, CodedTask, Scheme, Threshold};
+use crate::coding::{make_scheme, CodeParams, CodedTask, DecodeCtx, Scheme, TaskShape, Threshold};
 use crate::config::{SystemConfig, TransportSecurity};
 use crate::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc};
 use crate::field::Fp61;
@@ -58,6 +58,34 @@ const COLLECTOR_SHARDS: usize = 4;
 /// on). Written-off shares are re-dispatched immediately and never wait
 /// for this checkpoint.
 const SPEC_DEADLINE_FRACTION: f64 = 0.5;
+
+/// Tolerance for the decode residual check (DESIGN.md §11): an honest
+/// surplus result re-encoded from the decoded blocks differs only by
+/// f32 round-off (observed ~1e-6 relative); a forged result is off by
+/// O(1).
+const RESIDUAL_TOL: f64 = 1e-3;
+
+/// What an honest result for `share` must look like, predicted from the
+/// decoded blocks alone — the redundancy residual of verified decode
+/// (DESIGN.md §11). Predictable only for the exact, non-private, linear
+/// block codes: there f∘u has degree K−1 and the K decoded blocks pin
+/// it completely, so its value at the share's evaluation node is
+/// forced. Privacy masks (T > 0) add unknown mask images, approximate
+/// schemes carry a nonzero baseline residual, higher degrees need more
+/// than K points, and pair products restack before this sees them — all
+/// of those return `None` and rely on the commitment layer instead.
+fn predict_share_result(ctx: &DecodeCtx, blocks: &[Matrix], share: usize) -> Option<Matrix> {
+    if !matches!(ctx.shape, TaskShape::BlockMap)
+        || ctx.degree != 1
+        || ctx.params.t != 0
+        || ctx.betas.len() != ctx.params.k
+        || blocks.len() != ctx.params.k
+        || share >= ctx.alphas.len()
+    {
+        return None;
+    }
+    Some(crate::coding::interp::lagrange_eval(&ctx.betas, blocks, ctx.alphas[share]))
+}
 
 /// Result of one coded round.
 #[derive(Debug)]
@@ -112,6 +140,19 @@ pub enum RoundError {
         /// The unknown round id.
         round: u64,
     },
+    /// Forged results made the round fail: either the shortfall traces
+    /// back to results dropped at the collector's commitment check
+    /// (recovery could not outrun them), or the decode residual check
+    /// caught a forged result that slipped into the decode set. Either
+    /// way the round is refused rather than returned silently wrong —
+    /// the core guarantee of verified decode (DESIGN.md §11).
+    Forged {
+        /// The abandoned round.
+        round: u64,
+        /// Forged results implicated (per the fault bookings; at least 1
+        /// when the decode residual check itself fired).
+        forged: usize,
+    },
 }
 
 impl std::fmt::Display for RoundError {
@@ -128,6 +169,11 @@ impl std::fmt::Display for RoundError {
                  needs {need} — too many workers are down"
             ),
             RoundError::Unknown { round } => write!(f, "round {round} is not in flight"),
+            RoundError::Forged { round, forged } => write!(
+                f,
+                "round {round}: {forged} forged result(s) detected — the round could not \
+                 be completed from verified results and was refused rather than decoded wrong"
+            ),
         }
     }
 }
@@ -271,6 +317,7 @@ impl MasterBuilder {
         let registry = Arc::new(RoundRegistry::new(Arc::clone(&metrics)));
         let load = Arc::clone(pool.load());
         let round_settled: RoundSettled = Arc::new(Mutex::new(HashMap::new()));
+        let commit_book: CommitBook = Arc::new(Mutex::new(HashMap::new()));
         let collector = spawn_collector(
             inbound,
             Arc::clone(&registry),
@@ -280,6 +327,7 @@ impl MasterBuilder {
             self.eavesdropper.clone(),
             Arc::clone(&load),
             Arc::clone(&round_settled),
+            Arc::clone(&commit_book),
         );
         let speculate = self.cfg.speculate;
         Ok(Master {
@@ -297,6 +345,8 @@ impl MasterBuilder {
             directory,
             load,
             round_settled,
+            commit_book,
+            forge_booked: HashMap::new(),
             speculate,
             spec_rounds: HashMap::new(),
             round_targets: HashMap::new(),
@@ -326,6 +376,14 @@ struct SpecRound {
 /// results must not settle again.
 type RoundSettled = Arc<Mutex<HashMap<u64, Vec<usize>>>>;
 
+/// Per-share commitments of every in-flight round, booked at encode
+/// time (wire v3) — shared with the collector shards, which verify each
+/// arriving result's echo against the booked value before it may count
+/// toward the round. Removed when the round settles; an absent entry
+/// means the round retired and the frame is about to be rejected as
+/// late anyway.
+type CommitBook = Arc<Mutex<HashMap<u64, Vec<u64>>>>;
+
 /// The background result collector, sharded (DESIGN.md §8): one *router*
 /// thread drains the transport's merged inbound channel, peeks each
 /// frame's kind and round id from the fixed header (no body decode, no
@@ -339,6 +397,7 @@ type RoundSettled = Arc<Mutex<HashMap<u64, Vec<usize>>>>;
 /// determinism is untouched. Everything exits when the inbound channel
 /// disconnects (pool shutdown): the router drops the shard senders and
 /// the shards drain out.
+#[allow(clippy::too_many_arguments)]
 fn spawn_collector(
     inbound: Receiver<Vec<u8>>,
     registry: Arc<RoundRegistry>,
@@ -348,6 +407,7 @@ fn spawn_collector(
     tap: Option<Arc<EavesdropLog>>,
     load: Arc<LoadBook>,
     settled: RoundSettled,
+    commits: CommitBook,
 ) -> Vec<JoinHandle<()>> {
     let mut joins = Vec::with_capacity(COLLECTOR_SHARDS + 1);
     let mut shard_txs = Vec::with_capacity(COLLECTOR_SHARDS);
@@ -358,11 +418,13 @@ fn spawn_collector(
             shard,
             rx,
             Arc::clone(&registry),
+            Arc::clone(&directory),
             Arc::clone(&metrics),
             Arc::clone(&keys),
             tap.clone(),
             Arc::clone(&load),
             Arc::clone(&settled),
+            Arc::clone(&commits),
         ));
     }
     let router = std::thread::Builder::new()
@@ -424,11 +486,13 @@ fn spawn_collector_shard(
     shard: usize,
     frames: Receiver<Vec<u8>>,
     registry: Arc<RoundRegistry>,
+    directory: Arc<WorkerDirectory>,
     metrics: Arc<MetricsRegistry>,
     keys: Arc<KeyPair<Fp61>>,
     tap: Option<Arc<EavesdropLog>>,
     load: Arc<LoadBook>,
     settled: RoundSettled,
+    commits: CommitBook,
 ) -> JoinHandle<()> {
     std::thread::Builder::new()
         .name(format!("collector-{shard}"))
@@ -470,6 +534,33 @@ fn spawn_collector_shard(
                     if let Some(recorded) = map.get_mut(&round) {
                         recorded.push(executor);
                         load.settle_one(executor);
+                    }
+                }
+                // Wire-v3 result verification (DESIGN.md §11): the
+                // commitment echo is checked against the value booked at
+                // encode time *before* the result may count toward the
+                // round. A mismatch is a forged result: drop it — it must
+                // never win the first-result-wins race against the honest
+                // re-dispatch copy — and quarantine the executor. A
+                // matching result from a suspect is the evidence that
+                // rehabilitates it. The counts here are timing-shaped
+                // (late frames skip the check entirely) and are never
+                // folded into the determinism digest; the deterministic
+                // forgery count lives in the master's fault bookings.
+                let expected = {
+                    let book = commits.lock().unwrap();
+                    book.get(&round).and_then(|c| c.get(worker)).copied()
+                };
+                if let Some(expected) = expected {
+                    metrics.inc(names::VERIFY_CHECKED);
+                    if expected != msg.commitment {
+                        if directory.mark_suspected(executor) {
+                            metrics.inc(names::VERIFY_QUARANTINED);
+                        }
+                        continue;
+                    }
+                    if directory.rehabilitate(executor) {
+                        metrics.inc(names::VERIFY_REHABILITATED);
                     }
                 }
                 let symbols = msg.payload.symbols() as u64;
@@ -536,6 +627,13 @@ pub struct Master {
     /// Executors already settled per in-flight round — see
     /// [`RoundSettled`]; retirement settles the remainder.
     round_settled: RoundSettled,
+    /// Per-share commitments per in-flight round — see [`CommitBook`];
+    /// the collector shards verify every result echo against it.
+    commit_book: CommitBook,
+    /// Forgeries booked per in-flight round (from the fault plan, at
+    /// submit time). A round that fails with bookings here reports
+    /// [`RoundError::Forged`] instead of a generic timeout/hopeless.
+    forge_booked: HashMap<u64, usize>,
     /// Re-dispatch outstanding shares to other workers (config
     /// `speculate`, overridable per stream — see
     /// [`Master::run_stream`](super::stream)).
@@ -651,6 +749,19 @@ impl Master {
                 }
             } else if plan.corrupts(w, round) && note_registry {
                 self.note_result_lost(round, w);
+            } else if plan.forges_at(w, round) && note_registry {
+                // A planned forgery is booked like a transit loss: the
+                // collector's commitment check will drop the forged
+                // frame, so the share must be re-dispatched to an honest
+                // executor now (the speculation pass that follows this
+                // booking). Counting detections here — from the same
+                // plan the worker executes — keeps the metric a pure
+                // function of the scenario, in lock step with the crash
+                // accounting, instead of a race between late frames and
+                // run-end metric reads.
+                self.metrics.inc(names::VERIFY_FORGED_DETECTED);
+                *self.forge_booked.entry(round).or_insert(0) += 1;
+                self.note_result_lost(round, w);
             }
         }
     }
@@ -743,6 +854,14 @@ impl Master {
         let threshold = self.scheme.threshold(&task);
         let crate::coding::EncodedJob { payloads: shares, op, ctx } = job;
 
+        // Book every share's commitment before the shares move into the
+        // seal fan-out: the collector verifies each result's echo
+        // against these (wire v3), and a speculative re-seal recomputes
+        // the same value from the retained plaintext. Commitments are
+        // over plaintext operands, so the owner's copy and a proxy's
+        // copy agree even though their sealed bytes differ.
+        let commitments: Vec<u64> = shares.iter().map(|ops| share_commitment(ops)).collect();
+
         // Open the round *before* any order goes out so the collector
         // can never race the registration.
         self.registry.register(round, ctx, threshold, started);
@@ -822,10 +941,12 @@ impl Master {
             }
         };
 
-        // Open the round's settle ledger *before* any order goes out so
-        // the collector shards can never race it: a result that arrives
-        // while the entry exists settles its executor immediately.
+        // Open the round's settle and commitment ledgers *before* any
+        // order goes out so the collector shards can never race them: a
+        // result that arrives while the entries exist settles its
+        // executor and is verified against its share's commitment.
         self.round_settled.lock().unwrap().insert(round, Vec::new());
+        self.commit_book.lock().unwrap().insert(round, commitments.clone());
 
         // Dispatch serially in worker order (frame serialization is
         // cheap next to sealing, and ordered sends keep the transport
@@ -844,6 +965,7 @@ impl Master {
                     op: op.clone(),
                     payloads,
                     delay: self.delays.service_delay(w, round),
+                    commitment: commitments[w],
                 };
                 match self.pool.dispatch(&order) {
                     Ok(()) => {
@@ -882,7 +1004,16 @@ impl Master {
                         self.scheme.kind().name()
                     );
                 }
-                (k, k)
+                // Verified decode (DESIGN.md §11): under an active
+                // forger plan, hold one surplus result past the exact
+                // threshold when dispatch left slack — the redundancy
+                // the decode residual check needs to bite. Keyed on the
+                // static plan, so the wait target stays a pure function
+                // of the scenario, never of arrival timing.
+                let forger_plan =
+                    self.faults.as_deref().is_some_and(FaultPlan::has_forgers);
+                let wait_for = if forger_plan { (k + 1).min(dispatched) } else { k };
+                (wait_for, k)
             }
             Threshold::Flexible { min } => {
                 if dispatched < min {
@@ -970,9 +1101,22 @@ impl Master {
             match outcome {
                 Ok(done) => done,
                 Err(e) => {
+                    let forged = self.forge_booked.get(&round).copied().unwrap_or(0);
                     self.settle_round(round);
                     return Err(match e {
                         WaitError::Unknown(round) => RoundError::Unknown { round },
+                        // A failed round with forgeries booked is
+                        // reported as Forged, not as a generic
+                        // timeout/hopeless: the caller must know the
+                        // shortfall traces back to results dropped as
+                        // forged — the round failed *typed*, it was
+                        // never at risk of decoding silently wrong.
+                        WaitError::TimedOut { round, .. } if forged > 0 => {
+                            RoundError::Forged { round, forged }
+                        }
+                        WaitError::Hopeless { round, .. } if forged > 0 => {
+                            RoundError::Forged { round, forged }
+                        }
                         WaitError::TimedOut { round, got, need } => {
                             RoundError::Deadline { round, got, need }
                         }
@@ -984,6 +1128,7 @@ impl Master {
                 }
             }
         };
+        let forged_booked = self.forge_booked.get(&round).copied().unwrap_or(0);
         self.settle_round(round);
         // Credit the uplink comm counters with exactly the decode
         // inputs (results beyond the wait policy were rejected before
@@ -1003,6 +1148,34 @@ impl Master {
             let _t = self.metrics.time_phase("phase.decode");
             self.scheme.decode(&done.ctx, &done.results)?
         };
+        // Verified decode, second layer (DESIGN.md §11): when the buffer
+        // holds surplus results beyond an exact threshold, re-encode the
+        // decoded blocks at each surplus share's node and compare. An
+        // exact decoder consumes the first `k` results in worker order,
+        // so any later-indexed buffered result is pure redundancy — a
+        // residual there means a result the commitment layer did not
+        // catch poisoned the decode set, and the round is refused rather
+        // than returned silently wrong.
+        if let Threshold::Exact(k) = done.threshold {
+            if done.results.len() > k {
+                let mut order: Vec<usize> = (0..done.results.len()).collect();
+                order.sort_by_key(|&i| done.results[i].0);
+                for &i in &order[k..] {
+                    let (share, result) = &done.results[i];
+                    let Some(expect) = predict_share_result(&done.ctx, &decoded, *share)
+                    else {
+                        continue;
+                    };
+                    if expect.rel_error(result) > RESIDUAL_TOL {
+                        return Err(RoundError::Forged {
+                            round,
+                            forged: forged_booked.max(1),
+                        }
+                        .into());
+                    }
+                }
+            }
+        }
         Ok(RoundOutcome {
             blocks: decoded,
             wall: done.started.elapsed(),
@@ -1096,17 +1269,24 @@ impl Master {
     /// The least-loaded live worker other than `share`'s original owner
     /// (deterministic: the load book only moves on the master thread,
     /// ties break to the lowest index). Workers whose scheduled
-    /// corruption coin is true for `round` are skipped outright: the
-    /// worker loop corrupts *every* result frame it sends for that round
-    /// — the copy would be lost in transit, and unlike the original
-    /// owners' frames, speculative copies are never booked lost at
-    /// submit time, so the share would wedge in `pending` until the
-    /// deadline.
+    /// corruption or forgery coin is true for `round` are skipped
+    /// outright: the worker loop corrupts/forges *every* result frame it
+    /// sends for that round — the copy would be lost in transit (or
+    /// dropped at the commitment check), and unlike the original owners'
+    /// frames, speculative copies are never booked lost at submit time,
+    /// so the share would wedge in `pending` until the deadline.
+    /// Quarantined workers are skipped too: a suspect keeps serving its
+    /// own shares, but it earns no proxy work until a verified-good
+    /// result rehabilitates it (DESIGN.md §11).
     fn pick_executor(&self, round: u64, share: usize) -> Option<usize> {
         let alive = self.directory.alive_mask();
+        let suspected = self.directory.suspected_mask();
         let plan = self.faults.as_deref();
         self.load.least_loaded((0..alive.len()).filter(|&w| {
-            alive[w] && w != share && plan.map_or(true, |p| !p.corrupts(w, round))
+            alive[w]
+                && w != share
+                && !suspected[w]
+                && plan.map_or(true, |p| !p.corrupts(w, round) && !p.forges_at(w, round))
         }))
     }
 
@@ -1121,6 +1301,11 @@ impl Master {
         operands: Vec<Matrix>,
     ) -> bool {
         let pks = self.directory.pks();
+        // Commitments are over the plaintext operands, so the proxy's
+        // order carries the same commitment the owner's did — recomputed
+        // from the retained operands rather than read back from the
+        // ledger (provably equal, and no lock on the collector's path).
+        let commitment = share_commitment(&operands);
         // A dedicated seal stream per (round, executor, share): never
         // reuses the original owner's keystream, and never collides with
         // the executor's own share of the round.
@@ -1146,6 +1331,7 @@ impl Master {
             op,
             payloads,
             delay: self.delays.service_delay(executor, round),
+            commitment,
         };
         match self.pool.dispatch_to(executor, &order) {
             Ok(()) => {
@@ -1200,6 +1386,8 @@ impl Master {
             self.load.settle(&remainder);
         }
         self.spec_rounds.remove(&round);
+        self.commit_book.lock().unwrap().remove(&round);
+        self.forge_booked.remove(&round);
     }
 
     /// Reclaim bookkeeping for rounds that left the registry without
@@ -1563,6 +1751,135 @@ mod tests {
         let out = master.run(CodedTask::block_map(WorkerOp::Identity, x)).unwrap();
         assert_eq!(out.results_used, 10);
         assert!(master.respawn_worker(3).is_err(), "respawning a live worker is refused");
+    }
+
+    #[test]
+    fn planned_forgery_is_dropped_and_recovered_by_redispatch() {
+        // Worker 2 forges every round; speculation re-dispatches its
+        // share to an honest proxy; the collector's commitment check
+        // drops the forged copy, so the decode is clean even though the
+        // forged frame and the honest frame race for the same slot.
+        let mut cfg = base_cfg(SchemeKind::Spacdc);
+        cfg.stragglers = 0;
+        cfg.speculate = true;
+        let plan = Arc::new(FaultPlan::new(vec![], 0.0, cfg.seed).with_forgers(vec![2], 1.0));
+        let mut master = MasterBuilder::new(cfg).faults(plan).build().unwrap();
+        let mut rng = rng_from_seed(90);
+        let x = Matrix::random_gaussian(24, 8, 0.0, 1.0, &mut rng);
+        let v = Arc::new(Matrix::random_gaussian(8, 4, 0.0, 1.0, &mut rng));
+        let out = master
+            .run(CodedTask::block_map(WorkerOp::RightMul(Arc::clone(&v)), x.clone()))
+            .unwrap();
+        // All 12 shares decoded, none of them the −1.375-scaled forgery.
+        assert_eq!(out.results_used, 12);
+        let (blocks, _) = split_rows(&x, 3);
+        for (d, b) in out.blocks.iter().zip(&blocks) {
+            let err = d.rel_error(&matmul(b, &v));
+            assert!(err < 0.5, "forged result poisoned the decode: err={err}");
+        }
+        let m = master.metrics();
+        assert_eq!(m.get(names::VERIFY_FORGED_DETECTED), 1, "one forgery booked");
+        assert!(m.get(names::SPEC_REDISPATCHED) >= 1, "forged share was re-dispatched");
+        // Every buffered result passed the commitment check.
+        assert!(m.get(names::VERIFY_CHECKED) >= 12);
+    }
+
+    #[test]
+    fn unrecoverable_forgery_fails_typed_never_silently_wrong() {
+        // MDS needs exactly K = 3 of N = 4; two forgers at rate 1.0 with
+        // speculation off leave only 2 verifiable results. The wait must
+        // fail with the Forged variant — not Hopeless, and above all not
+        // a silently wrong decode.
+        let mut cfg = base_cfg(SchemeKind::Mds);
+        cfg.workers = 4;
+        cfg.stragglers = 0;
+        cfg.colluders = 0;
+        cfg.security = TransportSecurity::Plain;
+        cfg.round_deadline_s = 60.0;
+        cfg.speculate = false;
+        let plan =
+            Arc::new(FaultPlan::new(vec![], 0.0, cfg.seed).with_forgers(vec![0, 1], 1.0));
+        let mut master = MasterBuilder::new(cfg).faults(plan).build().unwrap();
+        let t0 = Instant::now();
+        let err = master
+            .run(CodedTask::block_map(WorkerOp::Identity, Matrix::ones(12, 4)))
+            .unwrap_err();
+        assert!(t0.elapsed() < Duration::from_secs(10), "must not ride the deadline");
+        assert_eq!(
+            err.inner().downcast_ref::<RoundError>(),
+            Some(&RoundError::Forged { round: 1, forged: 2 }),
+            "got: {err}"
+        );
+        assert_eq!(master.metrics().get(names::VERIFY_FORGED_DETECTED), 2);
+    }
+
+    #[test]
+    fn exact_scheme_holds_a_surplus_result_under_a_forger_plan() {
+        // With an active forger plan, MDS waits for K+1 results so the
+        // decode residual check has redundancy to bite on; the decode
+        // itself still consumes exactly K.
+        let mut cfg = base_cfg(SchemeKind::Mds);
+        cfg.stragglers = 0;
+        cfg.security = TransportSecurity::Plain;
+        cfg.speculate = true;
+        let plan = Arc::new(FaultPlan::new(vec![], 0.0, cfg.seed).with_forgers(vec![5], 1.0));
+        let mut master = MasterBuilder::new(cfg).faults(plan).build().unwrap();
+        let mut rng = rng_from_seed(92);
+        let x = Matrix::random_gaussian(24, 6, 0.0, 1.0, &mut rng);
+        let v = Arc::new(Matrix::random_gaussian(6, 5, 0.0, 1.0, &mut rng));
+        let out = master
+            .run(CodedTask::block_map(WorkerOp::RightMul(Arc::clone(&v)), x.clone()))
+            .unwrap();
+        assert_eq!(out.results_used, 3, "decode still consumes exactly K");
+        let (blocks, _) = split_rows(&x, 3);
+        for (d, b) in out.blocks.iter().zip(&blocks) {
+            assert!(d.rel_error(&matmul(b, &v)) < 1e-2);
+        }
+    }
+
+    #[test]
+    fn surplus_prediction_matches_honest_results_and_flags_forged_ones() {
+        // The decode residual core: an honest surplus share re-encoded
+        // from the decoded blocks matches to round-off; a forged one is
+        // off by orders of magnitude; private schemes are unpredictable.
+        let code = crate::coding::EvalCode::mds(CodeParams::new(8, 3, 0));
+        let mut rng = rng_from_seed(91);
+        let x = Matrix::random_gaussian(12, 5, 0.0, 1.0, &mut rng);
+        let enc = code.encode_blocks(&x, 1, &mut rng).unwrap();
+        // f = identity: the results are the shares themselves.
+        let results: Vec<(usize, Matrix)> =
+            (0..3).map(|i| (i, enc.shares[i].clone())).collect();
+        let decoded = code.decode_blocks(&enc.ctx, &results).unwrap();
+        let honest = enc.shares[5].clone();
+        let predicted = predict_share_result(&enc.ctx, &decoded, 5).unwrap();
+        assert!(predicted.rel_error(&honest) < RESIDUAL_TOL);
+        let forged = honest.scale(-1.375);
+        assert!(predicted.rel_error(&forged) > RESIDUAL_TOL);
+        // Privacy masks make the surplus unpredictable — the commitment
+        // layer owns verification there.
+        let priv_code = crate::coding::EvalCode::secpoly(CodeParams::new(8, 3, 2));
+        let enc2 = priv_code.encode_blocks(&x, 1, &mut rng).unwrap();
+        let r2: Vec<(usize, Matrix)> =
+            (0..5).map(|i| (i, enc2.shares[i].clone())).collect();
+        let d2 = priv_code.decode_blocks(&enc2.ctx, &r2).unwrap();
+        assert!(predict_share_result(&enc2.ctx, &d2, 6).is_none());
+    }
+
+    #[test]
+    fn quarantined_workers_earn_no_proxy_work_until_rehabilitated() {
+        // pick_executor must skip a suspect; after rehabilitation it is
+        // eligible again. Exercised directly against the directory and
+        // the load book (the end-to-end path is covered by the forgers
+        // scenario in the engine tests).
+        let mut master = Master::from_config(base_cfg(SchemeKind::Spacdc)).unwrap();
+        let x = Matrix::ones(12, 4);
+        master.run(CodedTask::block_map(WorkerOp::Identity, x)).unwrap();
+        // All loads equal → least-loaded tie breaks to lowest index.
+        assert_eq!(master.pick_executor(1, 5), Some(0));
+        master.directory.mark_suspected(0);
+        assert_eq!(master.pick_executor(1, 5), Some(1), "suspect must be skipped");
+        master.directory.rehabilitate(0);
+        assert_eq!(master.pick_executor(1, 5), Some(0), "rehabilitated worker is back");
     }
 
     #[test]

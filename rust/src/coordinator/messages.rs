@@ -124,6 +124,39 @@ pub struct WorkOrder {
     pub payloads: Vec<WirePayload>,
     /// Injected service delay (straggler simulation).
     pub delay: Duration,
+    /// Share commitment (wire v3): [`share_commitment`] over the
+    /// plaintext operands, computed master-side at encode time. An
+    /// honest worker echoes it verbatim on its [`ResultMsg`]; the
+    /// collector refuses any result whose echo disagrees with the
+    /// round's encode-time ledger.
+    pub commitment: u64,
+}
+
+/// FNV-1a 64 commitment over a share's plaintext operands: shape and
+/// f32 bit patterns, folded in operand order. Both dispatch copies of a
+/// share (the owner's and a speculative re-dispatch's) carry the same
+/// plaintext, so they commit identically even though their sealed bytes
+/// differ — the collector can verify either copy against one ledger
+/// entry.
+pub fn share_commitment<'a, I>(operands: I) -> u64
+where
+    I: IntoIterator<Item = &'a Matrix>,
+{
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut fold = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    };
+    for m in operands {
+        fold(&(m.rows() as u64).to_le_bytes());
+        fold(&(m.cols() as u64).to_le_bytes());
+        for v in m.as_slice() {
+            fold(&v.to_bits().to_le_bytes());
+        }
+    }
+    h
 }
 
 /// A lifecycle control message (see [`crate::coordinator`] module docs
@@ -163,7 +196,7 @@ pub enum ControlMsg {
 /// the worker that actually ran the order: the collector settles that
 /// worker's [`LoadBook`](crate::transport::LoadBook) entry per result
 /// and attributes speculation winners by it (wire v2).
-#[derive(Debug)]
+#[derive(Clone, Debug)]
 pub struct ResultMsg {
     /// Round the result belongs to.
     pub round: u64,
@@ -173,6 +206,10 @@ pub struct ResultMsg {
     pub executor: usize,
     /// The computed (possibly sealed) result.
     pub payload: WirePayload,
+    /// Echo of the order's share commitment (wire v3). A forged result
+    /// carries a tampered echo; the collector drops it on mismatch and
+    /// quarantines the executor (DESIGN.md §11).
+    pub commitment: u64,
 }
 
 #[cfg(test)]
@@ -220,6 +257,25 @@ mod tests {
             .filter(|(a, b)| a.to_bits() == b.to_bits())
             .count();
         assert!(same < 4, "{same}/64 wire elements equal plaintext");
+    }
+
+    #[test]
+    fn share_commitment_is_shape_and_bit_sensitive() {
+        let mut rng = rng_from_seed(34);
+        let a = Matrix::random_gaussian(4, 3, 0.0, 1.0, &mut rng);
+        let b = Matrix::random_gaussian(4, 3, 0.0, 1.0, &mut rng);
+        let c = share_commitment([&a, &b]);
+        assert_eq!(c, share_commitment([&a, &b]), "commitment must be pure");
+        assert_ne!(c, share_commitment([&b, &a]), "operand order must matter");
+        assert_ne!(c, share_commitment([&a]), "arity must matter");
+        // One flipped mantissa bit must change the commitment.
+        let mut data: Vec<f32> = a.as_slice().to_vec();
+        data[5] = f32::from_bits(data[5].to_bits() ^ 1);
+        let tweaked = Matrix::from_vec(4, 3, data);
+        assert_ne!(c, share_commitment([&tweaked, &b]));
+        // Same bits reshaped must not collide.
+        let flat = Matrix::from_vec(3, 4, a.as_slice().to_vec());
+        assert_ne!(share_commitment([&a]), share_commitment([&flat]));
     }
 
     #[test]

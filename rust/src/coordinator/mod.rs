@@ -51,7 +51,7 @@ mod supervisor;
 
 pub use lifecycle::{WorkerDirectory, WorkerState};
 pub use master::{Master, MasterBuilder, RoundError, RoundHandle, RoundOutcome};
-pub use messages::{ControlMsg, ResultMsg, SealedPayload, WirePayload, WorkOrder};
+pub use messages::{share_commitment, ControlMsg, ResultMsg, SealedPayload, WirePayload, WorkOrder};
 pub use pool::{WorkerHarness, WorkerPool};
 pub use stream::{StreamConfig, StreamOutcome, StreamRound};
 pub use supervisor::{ExitCause, ExitLog, ExitRecord, Supervisor};

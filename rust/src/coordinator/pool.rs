@@ -431,7 +431,7 @@ fn worker_loop(
         // worker's share here — the reply must be tagged with the share
         // id, not the executor, so the master routes it to the right
         // interpolation point.
-        let WorkOrder { round, worker: share, op, payloads, .. } = order;
+        let WorkOrder { round, worker: share, op, payloads, commitment, .. } = order;
 
         // Decrypt operands (§IV-B step 4), consuming the decoded order:
         // plain operands move straight through and sealed ones are
@@ -466,7 +466,24 @@ fn worker_loop(
         }
 
         // Compute f (PJRT artifact or native kernel).
-        let out = executor.run(&op, &operands);
+        let mut out = executor.run(&op, &operands);
+
+        // Scheduled forgery (Byzantine worker): replace the result with
+        // a well-formed wrong one and tamper the commitment echo. The
+        // frame stays structurally perfect — CRC, shapes, seal all
+        // check out — so only the master's verification layer can tell
+        // (DESIGN.md §11). The tamper is keyed on the *executor*, so a
+        // speculative re-dispatch of this share to an honest worker
+        // produces a clean echo and the round recovers.
+        let forged = faults.as_ref().is_some_and(|plan| plan.forges_at(w, round));
+        if forged {
+            out = out.scale(-1.375);
+        }
+        let echo = if forged {
+            commitment ^ (0x0BAD_C0DE_0000_0000 | (w as u64 + 1))
+        } else {
+            commitment
+        };
 
         // Encrypt the result back to the master when the share arrived
         // sealed (symmetric policy — §V-B step 2).
@@ -476,7 +493,7 @@ fn worker_loop(
             WirePayload::Plain(out)
         };
 
-        let msg = ResultMsg { round, worker: share, executor: w, payload };
+        let msg = ResultMsg { round, worker: share, executor: w, payload, commitment: echo };
         wire::encode_result_into(&msg, &mut frame_buf);
         // Scheduled wire corruption: flip one body byte so the frame
         // fails its CRC at the master — the result is lost in transit,
@@ -535,12 +552,14 @@ mod tests {
     }
 
     fn identity_order(round: u64, worker: usize, m: Matrix) -> WorkOrder {
+        let commitment = super::messages::share_commitment([&m]);
         WorkOrder {
             round,
             worker,
             op: WorkerOp::Identity,
             payloads: vec![WirePayload::Plain(m)],
             delay: Duration::ZERO,
+            commitment,
         }
     }
 
@@ -578,6 +597,7 @@ mod tests {
             op: WorkerOp::Identity,
             payloads: vec![WirePayload::Sealed(sealed)],
             delay: Duration::ZERO,
+            commitment: super::messages::share_commitment([&x]),
         })
         .unwrap();
         let r = recv_result(&rx);
@@ -616,6 +636,7 @@ mod tests {
             op: WorkerOp::Identity,
             payloads: vec![WirePayload::Plain(Matrix::ones(1, 1))],
             delay: Duration::from_millis(150),
+            commitment: 0,
         })
         .unwrap();
         pool.dispatch(&identity_order(1, 1, Matrix::ones(1, 1))).unwrap();
@@ -723,5 +744,36 @@ mod tests {
             wire::decode_result(&frame).is_err(),
             "corrupted frame must fail wire validation at the master"
         );
+    }
+
+    #[test]
+    fn honest_workers_echo_the_order_commitment() {
+        let (pool, rx, _master) = pool(1);
+        let order = identity_order(4, 0, Matrix::ones(3, 2).scale(2.5));
+        let want = order.commitment;
+        pool.dispatch(&order).unwrap();
+        let r = recv_result(&rx);
+        assert_eq!(r.commitment, want, "an honest result must echo the order's commitment");
+    }
+
+    #[test]
+    fn planned_forgery_perturbs_the_result_and_tampers_the_echo() {
+        let plan = Arc::new(FaultPlan::new(Vec::new(), 0.0, 7).with_forgers(vec![0], 0.999));
+        let (pool, rx, _master, _) = pool_with(TransportKind::InProc, 1, None, Some(plan));
+        let m = Matrix::ones(2, 2).scale(3.0);
+        let order = identity_order(1, 0, m.clone());
+        let want = order.commitment;
+        pool.dispatch(&order).unwrap();
+        // The frame is structurally perfect — it decodes cleanly —
+        // but the payload is wrong and the echo does not match.
+        let r = recv_result(&rx);
+        assert_ne!(r.commitment, want, "a forged result must carry a tampered echo");
+        match r.payload {
+            WirePayload::Plain(out) => {
+                assert_eq!(out.shape(), m.shape(), "forgery must stay well-formed");
+                assert_ne!(out, m, "forged identity must not echo the operand");
+            }
+            _ => panic!("expected plain"),
+        }
     }
 }

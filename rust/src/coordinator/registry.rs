@@ -952,6 +952,14 @@ mod tests {
         Lost(usize),
         WorkerDown(usize),
         Respeculate(usize),
+        /// A planned forgery handled the way the master handles it: the
+        /// share is booked lost at submit (the collector will drop the
+        /// forged frame at the commitment check) and immediately
+        /// re-dispatched to an honest proxy — one atomic adversarial
+        /// event, so it can land at any point of the interleaving:
+        /// before the share delivered, after it delivered, after the
+        /// round froze (DESIGN.md §11).
+        ForgeRecover(usize),
         StaleDeliver(u64, usize),
     }
 
@@ -960,12 +968,13 @@ mod tests {
         (0..len)
             .map(|_| {
                 let share = g.usize_in(0..n);
-                match g.usize_in(0..8) {
+                match g.usize_in(0..9) {
                     0 | 1 | 2 => Ev::Deliver(share),
                     3 => Ev::Duplicate(share),
                     4 => Ev::Lost(share),
                     5 => Ev::WorkerDown(share),
                     6 => Ev::Respeculate(share),
+                    7 => Ev::ForgeRecover(share),
                     _ => Ev::StaleDeliver(g.u64() | 1 << 40, share),
                 }
             })
@@ -986,6 +995,10 @@ mod tests {
                 Ev::Lost(s) => reg.note_lost(round, s),
                 Ev::WorkerDown(s) => reg.note_worker_down(s),
                 Ev::Respeculate(s) => {
+                    reg.respeculate(round, s);
+                }
+                Ev::ForgeRecover(s) => {
+                    reg.note_lost(round, s);
                     reg.respeculate(round, s);
                 }
                 Ev::StaleDeliver(r, s) => {
@@ -1089,6 +1102,60 @@ mod tests {
                 done.results.iter().all(|(s, _)| !dead.contains(s)),
                 "a dead worker's share was counted",
             )
+        });
+    }
+
+    #[test]
+    fn prop_forged_redispatch_racing_wait_converges_without_double_count() {
+        use crate::prop::{forall, prop_assert};
+        forall(40, 0x5EED_3, |g| {
+            let n = g.usize_in(3..8);
+            let round = 13u64;
+            let (reg, metrics) = registry();
+            open_flexible(&reg, round, 1);
+            reg.finalize(round, n, 1, &sent(n));
+            // A seeded subset of shares is forged. The master's sequence
+            // is deterministic: booked lost at submit (the collector
+            // will drop the forged frames at the commitment check) and
+            // re-dispatched to honest proxies in the same pass — both
+            // before the waiter blocks. Only the proxy *deliveries* race
+            // the wait, in a seeded shuffled order.
+            let forged: Vec<usize> = g.subset(n, g.usize_in(1..n));
+            for &s in &forged {
+                reg.note_lost(round, s);
+                prop_assert(reg.respeculate(round, s), "a booked forgery is re-dispatchable")?;
+            }
+            let mut order: Vec<usize> = (0..n).collect();
+            g.rng().shuffle(&mut order);
+            let reg2 = Arc::clone(&reg);
+            let j = std::thread::spawn(move || {
+                for s in order {
+                    reg2.deliver(round, s, Matrix::ones(1, 1), 1, 64);
+                }
+            });
+            let res = reg.wait_done(round, Instant::now() + Duration::from_secs(10));
+            j.join().unwrap();
+            let done = match res {
+                Ok(done) => done,
+                Err(e) => return Err(format!("wait failed: {e:?}")),
+            };
+            // Every share arrives exactly once — forged ones through
+            // their proxies — so the round converges to the full policy,
+            // undegraded, with each recovery counted exactly once.
+            prop_assert(
+                done.results.len() == n,
+                format!("used {} of n={n} with {} forged", done.results.len(), forged.len()),
+            )?;
+            prop_assert(!done.degraded, "a fully recovered round must not read degraded")?;
+            prop_assert(
+                metrics.get(names::SPEC_RECOVERED) == forged.len() as u64,
+                format!(
+                    "recovered {} for {} forged shares",
+                    metrics.get(names::SPEC_RECOVERED),
+                    forged.len()
+                ),
+            )?;
+            prop_assert(!reg.is_inflight(round), "round leaked past retirement")
         });
     }
 

@@ -73,6 +73,8 @@ fn worker_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("seed", "49374", "experiment seed (must match the master's)"),
         ArgSpec::opt("crashes", "", "crash schedule: comma-joined w@r[+d] tokens"),
         ArgSpec::opt("corrupt-rate", "0", "wire corruption probability per result"),
+        ArgSpec::opt("forgers", "", "forger worker ids (comma-joined)"),
+        ArgSpec::opt("forge-rate", "0", "forgery probability per (forger, round)"),
         ArgSpec::opt("fault-seed", "0", "fault-plan seed (must match the master's)"),
         ArgSpec::flag("help", "show usage"),
     ]
@@ -329,10 +331,22 @@ fn cmd_worker(args: &[String]) -> anyhow::Result<()> {
         .map(|t| parse_crash(t).ok_or_else(|| anyhow::anyhow!("--crashes: bad token {t:?}")))
         .collect::<Result<_, _>>()?;
     let corrupt_rate = parsed.get_f64("corrupt-rate");
-    let faults = if crashes.is_empty() && corrupt_rate <= 0.0 {
+    let forgers: Vec<usize> = parsed
+        .get("forgers")
+        .unwrap_or("")
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse().map_err(|e| anyhow::anyhow!("--forgers: bad id {t:?}: {e}")))
+        .collect::<Result<_, _>>()?;
+    let forge_rate = parsed.get_f64("forge-rate");
+    let faults = if crashes.is_empty() && corrupt_rate <= 0.0 && forge_rate <= 0.0 {
         None
     } else {
-        Some(Arc::new(FaultPlan::new(crashes, corrupt_rate, parsed.get_u64("fault-seed"))))
+        Some(Arc::new(
+            FaultPlan::new(crashes, corrupt_rate, parsed.get_u64("fault-seed"))
+                .with_forgers(forgers, forge_rate),
+        ))
     };
 
     let stream = std::net::TcpStream::connect(addr)

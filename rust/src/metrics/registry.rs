@@ -62,6 +62,17 @@ pub mod names {
     pub const PJRT_EXECUTIONS: &str = "runtime.pjrt_executions";
     /// Executions that fell back to the native kernel.
     pub const NATIVE_EXECUTIONS: &str = "runtime.native_executions";
+    /// Results whose share commitment the collector checked against the
+    /// round's encode-time ledger (every verifiable arrival).
+    pub const VERIFY_CHECKED: &str = "verify.checked";
+    /// Results dropped for a commitment mismatch (collector layer) or a
+    /// failed redundancy residual at decode — forged results detected.
+    pub const VERIFY_FORGED_DETECTED: &str = "verify.forged_detected";
+    /// Executors newly quarantined (marked suspect) after a verified
+    /// forgery; a suspect is excluded from speculative picks.
+    pub const VERIFY_QUARANTINED: &str = "verify.quarantined";
+    /// Quarantined executors readmitted after a verified-good result.
+    pub const VERIFY_REHABILITATED: &str = "verify.rehabilitated";
 }
 
 impl MetricsRegistry {

@@ -17,11 +17,12 @@
 //! matrix. It folds exactly the fields the determinism contract covers
 //! — per-round status, results-used counts, degradation flags, every
 //! decoded f32 bit, the transport byte totals credited at
-//! dispatch/decode time, and the speculation-recovered share count
-//! (schedule-driven, hence deterministic) — and deliberately excludes
-//! anything wall-clock-shaped (latencies, throughput, late straggler
-//! counts, speculation *losers*, wire-error tallies that race the
-//! soak's end).
+//! dispatch/decode time, the speculation-recovered share count, and the
+//! forged-result detections (both schedule-driven, hence deterministic)
+//! — and deliberately excludes anything wall-clock-shaped (latencies,
+//! throughput, late straggler counts, speculation *losers*, wire-error
+//! tallies that race the soak's end, and the quarantine/rehabilitation
+//! tallies, which depend on frame arrival order).
 
 use crate::coding::CodedTask;
 use crate::config::{SystemConfig, TransportKind};
@@ -45,6 +46,9 @@ pub enum RoundStatus {
     /// The round could not even be dispatched (e.g. fewer live workers
     /// than an exact scheme's k).
     SubmitFailed,
+    /// Forged results left the round uncompletable from verified
+    /// results; it was refused rather than decoded wrong (DESIGN.md §11).
+    Forged,
 }
 
 impl RoundStatus {
@@ -55,6 +59,7 @@ impl RoundStatus {
             RoundStatus::Deadline => 1,
             RoundStatus::Hopeless => 2,
             RoundStatus::SubmitFailed => 3,
+            RoundStatus::Forged => 4,
         }
     }
 
@@ -65,6 +70,7 @@ impl RoundStatus {
             RoundStatus::Deadline => "deadline",
             RoundStatus::Hopeless => "hopeless",
             RoundStatus::SubmitFailed => "submit-failed",
+            RoundStatus::Forged => "forged",
         }
     }
 }
@@ -162,6 +168,17 @@ pub struct ScenarioReport {
     /// Duplicate share copies discarded, first-result-wins losers (not
     /// in the digest: which copy lost is a race).
     pub spec_wasted: u64,
+    /// Results whose commitment echo was checked at the collector (not
+    /// in the digest — late frames race the soak's end).
+    pub verify_checked: u64,
+    /// Forgeries booked from the fault plan at submit — plan-pure, so it
+    /// *is* folded into the digest.
+    pub verify_forged_detected: u64,
+    /// Executors quarantined after a verified-forged result (not in the
+    /// digest: which copy tripped the check first is a race).
+    pub verify_quarantined: u64,
+    /// Suspects cleared by a later verified-good result (ditto).
+    pub verify_rehabilitated: u64,
     /// Child-process exit records, in exit order — populated only on the
     /// process fabric (`--transport proc`), where crashes are real
     /// SIGKILLs and teardown is SIGTERM-then-SIGKILL. Includes the
@@ -257,7 +274,7 @@ pub fn run_scenario_with(
     let mut master = builder.build()?;
 
     let mut digest = Fnv64::new();
-    digest.write(b"scenario-digest-v2");
+    digest.write(b"scenario-digest-v3");
     digest.write(sc.name.as_bytes());
     digest.u64(sc.seed);
     digest.u64(sc.rounds);
@@ -324,6 +341,7 @@ pub fn run_scenario_with(
                 let status = match e.inner().downcast_ref::<RoundError>() {
                     Some(RoundError::Deadline { .. }) => RoundStatus::Deadline,
                     Some(RoundError::Hopeless { .. }) => RoundStatus::Hopeless,
+                    Some(RoundError::Forged { .. }) => RoundStatus::Forged,
                     _ => RoundStatus::SubmitFailed,
                 };
                 digest.u64(r);
@@ -352,6 +370,11 @@ pub fn run_scenario_with(
     digest.u64(bytes_tx);
     digest.u64(bytes_rx);
     digest.u64(stream.recovered);
+    // Forgery detections are booked at submit from the fault plan — a
+    // pure function of the scenario, so they belong in the digest. The
+    // quarantine/rehabilitation/checked tallies are shaped by frame
+    // arrival order and stay out (CI asserts on them separately).
+    digest.u64(metrics.get(names::VERIFY_FORGED_DETECTED));
 
     // Eavesdropper analysis: for each charted downlink payload, the best
     // |correlation| against any plaintext block of its round.
@@ -415,6 +438,10 @@ pub fn run_scenario_with(
         spec_redispatched: stream.redispatched,
         spec_recovered: stream.recovered,
         spec_wasted: stream.wasted,
+        verify_checked: metrics.get(names::VERIFY_CHECKED),
+        verify_forged_detected: metrics.get(names::VERIFY_FORGED_DETECTED),
+        verify_quarantined: metrics.get(names::VERIFY_QUARANTINED),
+        verify_rehabilitated: metrics.get(names::VERIFY_REHABILITATED),
         process_exits,
         records,
     })
@@ -475,12 +502,14 @@ impl ScenarioReport {
             exits.join(",\n")
         );
         format!(
-            "{{\n  \"schema\": \"scenario-report-v2\",\n  \"scenario\": \"{}\",\n  \
+            "{{\n  \"schema\": \"scenario-report-v3\",\n  \"scenario\": \"{}\",\n  \
              \"scheme\": \"{}\",\n  \"op\": \"{}\",\n  \"transport\": \"{}\",\n  \
              \"threads\": {},\n  \"seed\": {},\n  \"workers\": {},\n  \"rounds\": {},\n  \
              \"digest\": \"{}\",\n  \"recovery_hit_rate\": {:.4},\n  \
              \"stream\": {{\"inflight\": {}, \"speculate\": {}, \"rounds_per_s\": {:.3}}},\n  \
              \"speculation\": {{\"redispatched\": {}, \"recovered\": {}, \"wasted\": {}}},\n  \
+             \"verify\": {{\"checked\": {}, \"forged_detected\": {}, \"quarantined\": {}, \
+             \"rehabilitated\": {}}},\n  \
              \"wall_ms\": {{\"mean\": {:.3}, \"p50\": {:.3}, \"p99\": {:.3}, \"max\": {:.3}}},\n  \
              \"comm\": {{\"bytes_tx\": {}, \"bytes_rx\": {}, \"wire_errors\": {}, \
              \"results_late\": {}}},\n  \
@@ -506,6 +535,10 @@ impl ScenarioReport {
             self.spec_redispatched,
             self.spec_recovered,
             self.spec_wasted,
+            self.verify_checked,
+            self.verify_forged_detected,
+            self.verify_quarantined,
+            self.verify_rehabilitated,
             self.wall_mean_ms,
             self.wall_p50_ms,
             self.wall_p99_ms,
@@ -571,6 +604,15 @@ impl ScenarioReport {
             "stream: {:.2} rounds/s · speculation redispatched {} / recovered {} / wasted {}\n",
             self.rounds_per_s, self.spec_redispatched, self.spec_recovered, self.spec_wasted,
         ));
+        if self.verify_checked > 0 || self.verify_forged_detected > 0 {
+            out.push_str(&format!(
+                "verify: checked {} · forged detected {} · quarantined {} · rehabilitated {}\n",
+                self.verify_checked,
+                self.verify_forged_detected,
+                self.verify_quarantined,
+                self.verify_rehabilitated,
+            ));
+        }
         if !self.process_exits.is_empty() {
             let sigkilled = self.process_exits.iter().filter(|e| e.sigkilled()).count();
             out.push_str(&format!(

@@ -112,6 +112,15 @@ pub struct Scenario {
     /// Probability that a worker's result frame is corrupted on the
     /// wire (drawn deterministically per (worker, round) from `seed`).
     pub corrupt_rate: f64,
+    /// Byzantine workers: members return *well-formed but wrong*
+    /// results (forged payload, tampered commitment echo) on the rounds
+    /// their seeded draw fires — unlike `corrupt_rate`'s bit flips,
+    /// these pass every CRC and must be caught by the verification
+    /// layer (DESIGN.md §11).
+    pub forger_set: Vec<usize>,
+    /// Probability that a forger-set worker forges a given round (drawn
+    /// deterministically per (worker, round) from `seed`).
+    pub forge_rate: f64,
     /// Round-stream window the soak drives (`[stream] inflight`; ≥ 1,
     /// 1 = synchronous). An execution knob may override it — the digest
     /// must not move when it does (DESIGN.md §8).
@@ -142,6 +151,8 @@ impl Scenario {
             colluder_set: Vec::new(),
             crashes: Vec::new(),
             corrupt_rate: 0.0,
+            forger_set: Vec::new(),
+            forge_rate: 0.0,
             inflight: 1,
             speculate: false,
         }
@@ -218,13 +229,44 @@ impl Scenario {
                 sc.speculate = true;
                 Some(sc)
             }
+            // Byzantine forgers: two workers return well-formed wrong
+            // results on roughly half their rounds. The master books
+            // each planned forgery as a lost share at submit and
+            // re-dispatches it speculatively to a non-suspect executor;
+            // the collector's commitment check is what keeps the forged
+            // copy from winning the race home — every forged round must
+            // decode correctly from the honest copies, never silently
+            // wrong. No stragglers and no corruption, so the decode set
+            // is pinned by the schedule alone and the digest holds
+            // across transports, thread counts, and window widths.
+            "forgers" => {
+                let mut sc = Self::base("forgers");
+                sc.rounds = 10;
+                sc.rows = 64;
+                sc.cols = 32;
+                sc.seed = 0x5CE4;
+                sc.workers = 8;
+                sc.partitions = 4;
+                sc.colluders = 2;
+                sc.stragglers = 0;
+                sc.delay = DelayConfig {
+                    straggler_factor: 1.0,
+                    base_service_s: 0.004,
+                    jitter: 0.1,
+                };
+                sc.forger_set = vec![2, 5];
+                sc.forge_rate = 0.55;
+                sc.inflight = 4;
+                sc.speculate = true;
+                Some(sc)
+            }
             _ => None,
         }
     }
 
     /// Names [`Scenario::builtin`] answers to.
     pub fn builtin_names() -> &'static [&'static str] {
-        &["baseline", "crash-respawn", "colluders-stragglers", "stream"]
+        &["baseline", "crash-respawn", "colluders-stragglers", "stream", "forgers"]
     }
 
     /// Resolve a `--scenario` / `scenario =` token: an explicit file
@@ -306,10 +348,18 @@ impl Scenario {
                 "faults.corrupt_rate" => {
                     sc.corrupt_rate = value.parse().map_err(|_| bad(&full, value))?
                 }
+                "faults.forge_rate" => {
+                    sc.forge_rate = value.parse().map_err(|_| bad(&full, value))?
+                }
                 "adversary.colluder_set" => {
                     let ids: Result<Vec<usize>, _> =
                         value.split(',').map(|t| t.trim().parse()).collect();
                     sc.colluder_set = ids.map_err(|_| bad(&full, value))?;
+                }
+                "adversary.forger_set" => {
+                    let ids: Result<Vec<usize>, _> =
+                        value.split(',').map(|t| t.trim().parse()).collect();
+                    sc.forger_set = ids.map_err(|_| bad(&full, value))?;
                 }
                 "stream.inflight" => {
                     sc.inflight = value.parse().map_err(|_| bad(&full, value))?
@@ -372,12 +422,38 @@ impl Scenario {
                 return Err(format!("colluder set names worker {w} of {}", self.workers));
             }
         }
+        // An explicit coalition must agree with the privacy parameter T:
+        // encoding masks against `colluders` workers, so observing a
+        // coalition of a different size silently measures the wrong
+        // threat. (An empty set just means "no observed coalition".)
+        if !self.colluder_set.is_empty() && self.colluder_set.len() != self.colluders {
+            return Err(format!(
+                "colluder_set has {} members but colluders = {} — the observed coalition \
+                 must match the privacy parameter T",
+                self.colluder_set.len(),
+                self.colluders
+            ));
+        }
+        if !(0.0..1.0).contains(&self.forge_rate) {
+            return Err(format!("forge_rate {} outside [0, 1)", self.forge_rate));
+        }
+        for &w in &self.forger_set {
+            if w >= self.workers {
+                return Err(format!("forger set names worker {w} of {}", self.workers));
+            }
+        }
+        if self.forge_rate > 0.0 && self.forger_set.is_empty() {
+            return Err("forge_rate is set but forger_set is empty — name the Byzantine \
+                        workers in [adversary] forger_set"
+                .into());
+        }
         Ok(())
     }
 
     /// Compile the fault schedule to the runtime's form.
     pub fn fault_plan(&self) -> FaultPlan {
         FaultPlan::new(self.crashes.clone(), self.corrupt_rate, self.seed)
+            .with_forgers(self.forger_set.clone(), self.forge_rate)
     }
 }
 
@@ -412,18 +488,31 @@ pub fn parse_crash(s: &str) -> Option<CrashEvent> {
 pub struct FaultPlan {
     crashes: Vec<CrashEvent>,
     corrupt_rate: f64,
+    forgers: Vec<usize>,
+    forge_rate: f64,
     seed: u64,
 }
 
 impl FaultPlan {
     /// Build a plan from its parts.
     pub fn new(crashes: Vec<CrashEvent>, corrupt_rate: f64, seed: u64) -> Self {
-        Self { crashes, corrupt_rate, seed }
+        Self { crashes, corrupt_rate, forgers: Vec::new(), forge_rate: 0.0, seed }
+    }
+
+    /// Add a Byzantine forger schedule: each `forgers` member returns a
+    /// well-formed wrong result (with a tampered commitment echo) on
+    /// the rounds its seeded draw fires.
+    pub fn with_forgers(mut self, forgers: Vec<usize>, forge_rate: f64) -> Self {
+        self.forgers = forgers;
+        self.forge_rate = forge_rate;
+        self
     }
 
     /// No faults at all?
     pub fn is_empty(&self) -> bool {
-        self.crashes.is_empty() && self.corrupt_rate <= 0.0
+        self.crashes.is_empty()
+            && self.corrupt_rate <= 0.0
+            && (self.forgers.is_empty() || self.forge_rate <= 0.0)
     }
 
     /// The crash schedule (re-serialized onto worker-process command
@@ -471,6 +560,44 @@ impl FaultPlan {
         ));
         rng.next_f64() < self.corrupt_rate
     }
+
+    /// The Byzantine worker set (re-serialized onto worker-process
+    /// command lines by the process fabric).
+    pub fn forger_set(&self) -> &[usize] {
+        &self.forgers
+    }
+
+    /// Does the plan schedule any forgeries at all? (Keys the master's
+    /// surplus-result wait policy for exact schemes — DESIGN.md §11.)
+    pub fn has_forgers(&self) -> bool {
+        self.forge_rate > 0.0 && !self.forgers.is_empty()
+    }
+
+    /// The per-(forger, round) forgery probability.
+    pub fn forge_rate(&self) -> f64 {
+        self.forge_rate
+    }
+
+    /// Does `worker` forge its `round` result — return a well-formed
+    /// wrong payload with a tampered commitment echo? Deterministic
+    /// like [`FaultPlan::corrupts`], with its own seed stream, and
+    /// lowest precedence: a crash means nothing is sent, and a
+    /// corruption already destroys the frame at the CRC, so forging is
+    /// moot on either.
+    pub fn forges_at(&self, worker: usize, round: u64) -> bool {
+        if self.forge_rate <= 0.0
+            || !self.forgers.contains(&worker)
+            || self.crashes_at(worker, round)
+            || self.corrupts(worker, round)
+        {
+            return false;
+        }
+        let mut rng = rng_from_seed(derive_seed(
+            self.seed,
+            0xF0_46_0000 ^ (round << 20) ^ worker as u64,
+        ));
+        rng.next_f64() < self.forge_rate
+    }
 }
 
 #[cfg(test)]
@@ -499,7 +626,7 @@ seed = 99
 [cluster]
 workers = 6
 partitions = 2
-colluders = 1
+colluders = 2
 stragglers = 1
 scheme = "bacc"
 security = "plain"
@@ -512,8 +639,10 @@ jitter = 0.05
 crash = "1@2+2"
 crash = "3@4"
 corrupt_rate = 0.25
+forge_rate = 0.4
 [adversary]
 colluder_set = "0, 2"
+forger_set = "4"
 [stream]
 inflight = 4
 speculate = "on"
@@ -535,7 +664,77 @@ speculate = "on"
         );
         assert_eq!(sc.corrupt_rate, 0.25);
         assert_eq!(sc.colluder_set, vec![0, 2]);
+        assert_eq!(sc.forge_rate, 0.4);
+        assert_eq!(sc.forger_set, vec![4]);
         assert_eq!(sc.delay.straggler_factor, 10.0);
+    }
+
+    #[test]
+    fn colluder_set_must_agree_with_the_privacy_parameter() {
+        // T = 2 but a 3-member observed coalition: inconsistent.
+        let text = "[cluster]\nworkers = 8\ncolluders = 2\n\
+                    [adversary]\ncolluder_set = \"0, 1, 2\"\n";
+        let err = Scenario::from_str_toml(text).unwrap_err();
+        assert!(
+            matches!(&err, ConfigError::Validation(m) if m.contains("colluder_set")),
+            "want a typed validation error naming colluder_set, got {err:?}"
+        );
+        // The same set sized to T passes…
+        let ok = "[cluster]\nworkers = 8\ncolluders = 3\n\
+                  [adversary]\ncolluder_set = \"0, 1, 2\"\n";
+        assert_eq!(Scenario::from_str_toml(ok).unwrap().colluder_set, vec![0, 1, 2]);
+        // …and an empty set stays valid at any T (no observed coalition).
+        let mut sc = Scenario::builtin("baseline").unwrap();
+        assert!(sc.colluder_set.is_empty());
+        sc.validate().unwrap();
+    }
+
+    #[test]
+    fn forger_config_is_validated() {
+        // Out-of-range forger index.
+        let ghost = "[cluster]\nworkers = 4\n[faults]\nforge_rate = 0.5\n\
+                     [adversary]\nforger_set = \"9\"\n";
+        assert!(Scenario::from_str_toml(ghost).is_err());
+        // A rate with no named forgers is a contradiction, not "off".
+        assert!(Scenario::from_str_toml("[faults]\nforge_rate = 0.5\n").is_err());
+        // Rates live in [0, 1).
+        let hot = "[faults]\nforge_rate = 1.0\n[adversary]\nforger_set = \"1\"\n";
+        assert!(Scenario::from_str_toml(hot).is_err());
+        // An inert forger set (rate 0) is fine.
+        let inert = "[adversary]\nforger_set = \"1\"\n";
+        assert_eq!(Scenario::from_str_toml(inert).unwrap().forger_set, vec![1]);
+    }
+
+    #[test]
+    fn forge_draws_are_deterministic_and_lowest_precedence() {
+        let sc = Scenario::builtin("forgers").unwrap();
+        let a = sc.fault_plan();
+        let b = sc.fault_plan();
+        let mut fired = 0usize;
+        for w in 0..sc.workers {
+            for r in 1..=sc.rounds {
+                assert_eq!(a.forges_at(w, r), b.forges_at(w, r));
+                if a.forges_at(w, r) {
+                    fired += 1;
+                    assert!(sc.forger_set.contains(&w), "only forger-set members forge");
+                }
+            }
+        }
+        assert!(fired > 0, "the forgers scenario must actually forge");
+        // Crash and corruption take precedence over forging.
+        let plan = FaultPlan::new(
+            vec![CrashEvent { worker: 2, round: 3, respawn_after: None }],
+            0.999,
+            0x5CE4,
+        )
+        .with_forgers(vec![2], 0.999);
+        assert!(!plan.forges_at(2, 3), "a crashed worker sends nothing to forge");
+        assert!(
+            (1..=20u64).all(|r| !plan.forges_at(2, r) || !plan.corrupts(2, r)),
+            "corruption destroys the frame before a forgery could matter"
+        );
+        assert!(!plan.is_empty());
+        assert!(FaultPlan::new(Vec::new(), 0.0, 1).with_forgers(vec![1], 0.0).is_empty());
     }
 
     #[test]

@@ -277,6 +277,11 @@ fn worker_command(
         if plan.corrupt_rate() > 0.0 {
             cmd.arg("--corrupt-rate").arg(plan.corrupt_rate().to_string());
         }
+        if plan.forge_rate() > 0.0 && !plan.forger_set().is_empty() {
+            let ids: Vec<String> = plan.forger_set().iter().map(|w| w.to_string()).collect();
+            cmd.arg("--forgers").arg(ids.join(","));
+            cmd.arg("--forge-rate").arg(plan.forge_rate().to_string());
+        }
         cmd.arg("--fault-seed").arg(plan.seed().to_string());
     }
     cmd

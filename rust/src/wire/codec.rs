@@ -11,8 +11,9 @@
 //!                         1 = Sealed Point rows:u32 cols:u32
 //!                             len:u32 bytes:[u8; len])
 //! WorkOrder    := round:u64 worker:u32 delay_ns:u64 WorkerOp
-//!                 n_payloads:u16 WirePayload*
+//!                 n_payloads:u16 WirePayload* commitment:u64
 //! ResultMsg    := round:u64 worker:u32 executor:u32 WirePayload
+//!                 commitment:u64
 //! ControlMsg   := tag:u8 (1 = Crash worker:u32 |
 //!                         2 = Register worker:u32 generation:u32 Point)
 //! ```
@@ -83,7 +84,8 @@ pub fn encode_order_into(order: &WorkOrder, out: &mut Vec<u8>) {
         + 8
         + op_encoded_len(&order.op)
         + 2
-        + order.payloads.iter().map(payload_encoded_len).sum::<usize>();
+        + order.payloads.iter().map(payload_encoded_len).sum::<usize>()
+        + 8;
     let total = super::frame::HEADER_LEN + body_len + super::frame::TRAILER_LEN;
     out.reserve(total);
     let start = super::frame::frame_begin(out, MsgKind::Order);
@@ -95,6 +97,9 @@ pub fn encode_order_into(order: &WorkOrder, out: &mut Vec<u8>) {
     for p in &order.payloads {
         put_payload(out, p);
     }
+    // Wire v3: the share commitment rides at the end of the body so the
+    // fixed-offset router peeks over the leading fields stay valid.
+    put_u64(out, order.commitment);
     super::frame::frame_end(out, start);
     debug_assert_eq!(out.len(), total, "order size estimate out of sync with the writers");
 }
@@ -112,7 +117,7 @@ pub fn encode_result(msg: &ResultMsg) -> Vec<u8> {
 pub fn encode_result_into(msg: &ResultMsg, out: &mut Vec<u8>) {
     // Clear before reserving — see encode_order_into.
     out.clear();
-    let body_len = 8 + 4 + 4 + payload_encoded_len(&msg.payload);
+    let body_len = 8 + 4 + 4 + payload_encoded_len(&msg.payload) + 8;
     let total = super::frame::HEADER_LEN + body_len + super::frame::TRAILER_LEN;
     out.reserve(total);
     let start = super::frame::frame_begin(out, MsgKind::Result);
@@ -120,6 +125,8 @@ pub fn encode_result_into(msg: &ResultMsg, out: &mut Vec<u8>) {
     put_u32(out, msg.worker as u32);
     put_u32(out, msg.executor as u32);
     put_payload(out, &msg.payload);
+    // Wire v3: the commitment echo trails the payload (see order codec).
+    put_u64(out, msg.commitment);
     super::frame::frame_end(out, start);
     debug_assert_eq!(out.len(), total, "result size estimate out of sync with the writers");
 }
@@ -497,7 +504,8 @@ fn read_order(cur: &mut Cur) -> Result<WorkOrder, WireError> {
     for _ in 0..n {
         payloads.push(read_payload(cur)?);
     }
-    Ok(WorkOrder { round, worker, op, payloads, delay })
+    let commitment = cur.u64()?;
+    Ok(WorkOrder { round, worker, op, payloads, delay, commitment })
 }
 
 fn read_result(cur: &mut Cur) -> Result<ResultMsg, WireError> {
@@ -505,7 +513,8 @@ fn read_result(cur: &mut Cur) -> Result<ResultMsg, WireError> {
     let worker = cur.u32()? as usize;
     let executor = cur.u32()? as usize;
     let payload = read_payload(cur)?;
-    Ok(ResultMsg { round, worker, executor, payload })
+    let commitment = cur.u64()?;
+    Ok(ResultMsg { round, worker, executor, payload, commitment })
 }
 
 fn read_control(cur: &mut Cur) -> Result<ControlMsg, WireError> {
@@ -551,11 +560,13 @@ mod tests {
             op: WorkerOp::RightMul(Arc::new(v.clone())),
             payloads: vec![WirePayload::Plain(m.clone())],
             delay: Duration::from_millis(17),
+            commitment: 0xDEAD_BEEF_0123_4567,
         };
         let back = decode_order(&encode_order(&order)).unwrap();
         assert_eq!(back.round, 42);
         assert_eq!(back.worker, 3);
         assert_eq!(back.delay, Duration::from_millis(17));
+        assert_eq!(back.commitment, 0xDEAD_BEEF_0123_4567);
         assert!(matches!(&back.op, WorkerOp::RightMul(w) if **w == v));
         assert_eq!(back.payloads.len(), 1);
         assert!(payloads_eq(&back.payloads[0], &order.payloads[0]));
@@ -575,11 +586,13 @@ mod tests {
                 rows: 2,
                 cols: 3,
             }),
+            commitment: 0x0123_4567_89AB_CDEF,
         };
         let back = decode_result(&encode_result(&msg)).unwrap();
         assert_eq!(back.round, 9);
         assert_eq!(back.worker, 11);
         assert_eq!(back.executor, 4);
+        assert_eq!(back.commitment, 0x0123_4567_89AB_CDEF);
         assert!(payloads_eq(&back.payload, &msg.payload));
     }
 
@@ -603,6 +616,7 @@ mod tests {
                 }),
             ],
             delay: Duration::ZERO,
+            commitment: 77,
         };
         let one_shot = encode_order(&order);
         let mut scratch = Vec::new();
@@ -621,6 +635,7 @@ mod tests {
             worker: 1,
             executor: 1,
             payload: WirePayload::Plain(Matrix::ones(2, 2)),
+            commitment: 78,
         };
         let mut scratch = Vec::new();
         encode_result_into(&msg, &mut scratch);
@@ -656,6 +671,7 @@ mod tests {
             worker: 0,
             executor: 0,
             payload: WirePayload::Plain(Matrix::ones(1, 1)),
+            commitment: 0,
         };
         let f = encode_result(&msg);
         assert!(decode_order(&f).is_err());
@@ -669,6 +685,7 @@ mod tests {
             op: WorkerOp::Identity,
             payloads: vec![WirePayload::Plain(Matrix::zeros(0, 4))],
             delay: Duration::ZERO,
+            commitment: 0,
         };
         let back = decode_order(&encode_order(&order)).unwrap();
         assert!(matches!(&back.payloads[0],
@@ -701,6 +718,7 @@ mod tests {
         put_u32(&mut body, 2); // cols
         put_u32(&mut body, 7); // wrong: needs 16
         body.extend_from_slice(&[0u8; 7]);
+        put_u64(&mut body, 0); // commitment echo
         let f = frame(MsgKind::Result, &body);
         assert!(matches!(decode_result(&f), Err(WireError::Malformed(_))));
     }

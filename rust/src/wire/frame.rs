@@ -26,8 +26,12 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"SPDC");
 /// Current wire-format version. Version 2 added the executor id to
 /// `ResultMsg` (the share id says *what* was computed, the executor id
 /// says *who* computed it — per-result load settling and speculation
-/// attribution need the latter).
-pub const VERSION: u16 = 2;
+/// attribution need the latter). Version 3 added the share commitment:
+/// a FNV-64 digest of the share's plaintext operands, shipped on the
+/// `WorkOrder` and echoed on the `ResultMsg` so the master's collector
+/// can verify a result against the order it answers before it may
+/// count toward the round (Byzantine forger detection, DESIGN.md §11).
+pub const VERSION: u16 = 3;
 
 /// Fixed header size (magic + version + kind + reserved + body_len).
 pub const HEADER_LEN: usize = 12;

@@ -4,7 +4,7 @@
 //! live system, and the file ≡ builtin pin for the shipped scenarios.
 
 use spacdc::config::TransportKind;
-use spacdc::sim::{run_scenario, CrashEvent, RoundStatus, Scenario, ScenarioOp};
+use spacdc::sim::{run_scenario, run_scenario_with, CrashEvent, RoundStatus, Scenario, ScenarioOp};
 
 /// The CI matrix in miniature: both fabrics, serial and wide pools.
 const MATRIX: [(TransportKind, usize); 4] = [
@@ -120,6 +120,113 @@ fn colluding_workers_gather_exactly_their_shares() {
 }
 
 #[test]
+fn forged_rounds_recover_verified_and_pin_one_digest() {
+    // The Byzantine soak's acceptance bar: every forged round decodes
+    // correctly from honest copies — never silently wrong — and the
+    // digest is bit-identical across both fabrics, both pool widths,
+    // and inflight ∈ {1, 4, 16}.
+    let sc = Scenario::builtin("forgers").unwrap();
+    let mut digests = Vec::new();
+    for (transport, threads) in MATRIX {
+        for inflight in [1usize, 4, 16] {
+            let report =
+                run_scenario_with(&sc, transport, threads, Some(inflight), None).unwrap();
+            assert!(
+                report.verify_forged_detected > 0,
+                "the seeded schedule must fire at least one forgery"
+            );
+            assert_eq!(report.recovery_hit_rate, 1.0, "every forged round must still decode");
+            for r in &report.records {
+                assert_eq!(r.status, RoundStatus::Ok);
+                assert_eq!(
+                    r.results_used, sc.workers,
+                    "round {}: the proxy copy must restore the full wait policy",
+                    r.round
+                );
+                assert!(!r.degraded, "a fully recovered round is not degraded");
+                let e = r.rel_err.unwrap();
+                assert!(
+                    e.is_finite() && e < 1.0,
+                    "round {}: a forged result poisoned the decode (rel_err {e})",
+                    r.round
+                );
+            }
+            // Each booked forgery was re-dispatched and its proxy's
+            // result recovered; the forged copy lost the race at the
+            // commitment check, quarantining its sender at least once,
+            // and a later honest result rehabilitated a suspect.
+            assert_eq!(report.spec_recovered, report.verify_forged_detected);
+            assert!(report.spec_redispatched >= report.verify_forged_detected);
+            assert!(report.verify_checked > 0, "the collector must verify commitments");
+            assert!(report.verify_quarantined >= 1, "a caught forger must be quarantined");
+            assert!(
+                report.verify_rehabilitated >= 1,
+                "an honest round must rehabilitate a suspect"
+            );
+            digests.push((transport.name(), threads, inflight, report.digest));
+        }
+    }
+    let first = digests[0].3.clone();
+    for (transport, threads, inflight, digest) in &digests {
+        assert_eq!(
+            digest, &first,
+            "digest diverged at transport={transport} threads={threads} inflight={inflight}"
+        );
+    }
+}
+
+#[test]
+fn unrecoverable_forgeries_refuse_the_round_typed_never_silently_wrong() {
+    // MDS needs exactly K = 3 of N = 4. Two forgers at rate 1.0 with
+    // speculation off leave only two verifiable results per round:
+    // every round must fail as `forged` — the typed refusal — and
+    // never decode wrong.
+    let mut sc = Scenario::builtin("forgers").unwrap();
+    sc.name = "forged-hopeless-mds".into();
+    sc.rounds = 3;
+    sc.workers = 4;
+    sc.partitions = 3;
+    sc.colluders = 0;
+    sc.stragglers = 0;
+    sc.scheme = spacdc::config::SchemeKind::Mds;
+    sc.security = spacdc::config::TransportSecurity::Plain;
+    sc.op = ScenarioOp::Identity;
+    sc.forger_set = vec![0, 1];
+    sc.forge_rate = 0.999_999; // validate() wants [0, 1): forge every round
+    sc.inflight = 1;
+    sc.speculate = false;
+    sc.validate().unwrap();
+    let t0 = std::time::Instant::now();
+    let report = run_scenario(&sc, TransportKind::InProc, 1).unwrap();
+    assert!(
+        t0.elapsed() < std::time::Duration::from_secs(15),
+        "forged-hopeless rounds must not ride the 30s deadline"
+    );
+    // The invariant under any mix of forgery coins: a round either
+    // refuses with the typed `forged` status and publishes nothing, or
+    // decodes exactly from verified results — never silently wrong.
+    for r in &report.records {
+        match r.status {
+            RoundStatus::Forged => {
+                assert!(r.rel_err.is_none(), "a refused round publishes no decode");
+            }
+            // A round where only one forger's coin fired degrades to
+            // the three honest results and still decodes exactly.
+            RoundStatus::Ok => {
+                let e = r.rel_err.unwrap();
+                assert!(e < 1e-2, "round {}: wrong decode slipped through ({e})", r.round);
+            }
+            other => panic!("round {}: unexpected status {other:?}", r.round),
+        }
+    }
+    assert!(
+        report.records.iter().any(|r| r.status == RoundStatus::Forged),
+        "at a ~1.0 forge rate some round must be refused as forged"
+    );
+    assert!(report.verify_forged_detected >= sc.rounds, "both forgers fire most rounds");
+}
+
+#[test]
 fn hopeless_rounds_fail_fast_and_the_soak_continues() {
     // MDS needs exactly K = 3 of N = 4. Two unrecovered crashes
     // mid-round 2 doom that round (typed, immediate) and every round
@@ -167,13 +274,15 @@ fn reports_serialize_with_digest_and_per_round_records() {
     let report = run_scenario(&sc, TransportKind::InProc, 1).unwrap();
     let json = report.to_json();
     for needle in [
-        "\"schema\": \"scenario-report-v2\"",
+        "\"schema\": \"scenario-report-v3\"",
         "\"scenario\": \"baseline\"",
         "\"digest\": \"",
         "\"per_round\": [",
         "\"lifecycle\": {",
         "\"stream\": {\"inflight\": 1, \"speculate\": false",
         "\"speculation\": {\"redispatched\": 0, \"recovered\": 0, \"wasted\": 0}",
+        "\"verify\": {\"checked\": ",
+        "\"forged_detected\": 0, \"quarantined\": 0, \"rehabilitated\": 0}",
         "\"recovery_hit_rate\": 1.0000",
     ] {
         assert!(json.contains(needle), "report JSON missing {needle}:\n{json}");

@@ -52,6 +52,17 @@ fn gen_order(g: &mut Gen, mea: &MeaEcc<spacdc::field::Fp61>) -> WorkOrder {
         op: gen_op(g),
         payloads: (0..arity).map(|_| gen_payload(g, mea)).collect(),
         delay: Duration::from_nanos(g.u64() >> 20),
+        commitment: g.u64(),
+    }
+}
+
+fn gen_result(g: &mut Gen, mea: &MeaEcc<spacdc::field::Fp61>) -> ResultMsg {
+    ResultMsg {
+        round: g.u64(),
+        worker: g.usize_in(0..64),
+        executor: g.usize_in(0..64),
+        payload: gen_payload(g, mea),
+        commitment: g.u64(),
     }
 }
 
@@ -95,6 +106,7 @@ fn order_frames_round_trip_over_random_shapes_and_arities() {
         prop_assert(back.round == order.round, "round id changed")?;
         prop_assert(back.worker == order.worker, "worker id changed")?;
         prop_assert(back.delay == order.delay, "delay changed")?;
+        prop_assert(back.commitment == order.commitment, "commitment changed")?;
         prop_assert(ops_eq(&back.op, &order.op), "op changed")?;
         prop_assert(back.payloads.len() == order.payloads.len(), "arity changed")?;
         for (p, q) in back.payloads.iter().zip(&order.payloads) {
@@ -108,15 +120,13 @@ fn order_frames_round_trip_over_random_shapes_and_arities() {
 fn result_frames_round_trip_plain_and_sealed() {
     let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
     forall(60, 0xF1A8, |g| {
-        let msg = ResultMsg {
-            round: g.u64(),
-            worker: g.usize_in(0..64),
-            payload: gen_payload(g, &mea),
-        };
+        let msg = gen_result(g, &mea);
         let frame = wire::encode_result(&msg);
         let back = wire::decode_result(&frame).map_err(|e| e.to_string())?;
         prop_assert(back.round == msg.round, "round id changed")?;
         prop_assert(back.worker == msg.worker, "worker id changed")?;
+        prop_assert(back.executor == msg.executor, "executor id changed")?;
+        prop_assert(back.commitment == msg.commitment, "commitment changed")?;
         prop_assert(payloads_eq(&back.payload, &msg.payload), "payload changed")
     });
 }
@@ -243,11 +253,7 @@ fn router_peeks_agree_with_the_full_decoder() {
                 prop_assert(wire::peek_result_round(&f).is_none(), "order has no result round")
             }
             1 => {
-                let msg = ResultMsg {
-                    round: g.u64(),
-                    worker: g.usize_in(0..64),
-                    payload: gen_payload(g, &mea),
-                };
+                let msg = gen_result(g, &mea);
                 let f = wire::encode_result(&msg);
                 prop_assert(
                     wire::peek_kind(&f) == Some(spacdc::wire::MsgKind::Result),
@@ -275,16 +281,60 @@ fn router_peeks_agree_with_the_full_decoder() {
 fn any_truncation_is_rejected() {
     let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
     forall(80, 0x7A11, |g| {
-        let msg = ResultMsg {
-            round: g.u64(),
-            worker: g.usize_in(0..8),
-            payload: gen_payload(g, &mea),
-        };
+        let msg = gen_result(g, &mea);
         let frame = wire::encode_result(&msg);
         let cut = g.usize_in(0..frame.len());
         prop_assert(
             wire::decode_result(&frame[..cut]).is_err(),
             format!("{cut}-byte prefix of a {}-byte frame decoded", frame.len()),
+        )
+    });
+}
+
+// ------------------------------------------- commitment echo (wire v3)
+
+#[test]
+fn any_result_frame_corruption_is_rejected_commitment_included() {
+    // The commitment u64 rides at the end of the result body; a flip
+    // anywhere in the frame — payload, ids, or the echo itself — must
+    // fail the CRC. An in-transit tamper therefore never reaches the
+    // collector's commitment comparison: only a worker that *re-frames*
+    // (a forger) can deliver a wrong echo, which is exactly the case the
+    // collector's ledger check exists for.
+    let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
+    forall(120, 0xF1A9, |g| {
+        let msg = gen_result(g, &mea);
+        let mut frame = wire::encode_result(&msg);
+        let pos = g.usize_in(0..frame.len());
+        let flip = (g.usize_in(1..256)) as u8;
+        frame[pos] ^= flip;
+        prop_assert(
+            wire::decode_result(&frame).is_err(),
+            format!("corrupted result frame (byte {pos} ^ {flip:#04x}) decoded"),
+        )
+    });
+}
+
+#[test]
+fn a_reframed_tampered_commitment_survives_the_wire_but_not_the_ledger() {
+    // A forger controls its own encoder: it can re-frame a result with a
+    // valid CRC around a tampered echo. The wire layer must accept the
+    // frame (it is well-formed) — detection belongs to the collector's
+    // encode-time ledger, not the CRC.
+    let mea = MeaEcc::new(sim_curve(), MaskMode::Keystream);
+    forall(40, 0xF1AA, |g| {
+        let msg = gen_result(g, &mea);
+        let tamper = g.u64() | 1; // nonzero XOR → echo always differs
+        let forged = ResultMsg { commitment: msg.commitment ^ tamper, ..msg.clone() };
+        let back = wire::decode_result(&wire::encode_result(&forged))
+            .map_err(|e| format!("well-formed forged frame rejected by the wire: {e}"))?;
+        prop_assert(
+            back.commitment != msg.commitment,
+            "tampered echo must disagree with the encode-time commitment",
+        )?;
+        prop_assert(
+            back.commitment == forged.commitment,
+            "the forged echo itself must round-trip verbatim",
         )
     });
 }
