@@ -13,6 +13,10 @@ Gated metrics (higher is better):
     GEMM row-panel GFLOP/s, keystream XOR MB/s, axpy GB/s, Fp61 add Mops
     — so a broken dispatch that silently falls back to scalar shows up
     as a regression even if end-to-end numbers stay within tolerance
+  * multi-tenant saturation (``saturation`` block, when present):
+    aggregate rounds/s of 4 concurrent tenants through one fleet — a
+    serving-front-end scheduling regression shows up here even when the
+    per-kernel numbers hold
 
 The default tolerance is 25% — smoke benches on shared CI runners are
 noisy, so the gate only catches real regressions (a botched GEMM kernel,
@@ -52,6 +56,9 @@ def metrics(bench: dict) -> dict:
         value = (simd.get(kernel) or {}).get(field)
         if value is not None:
             out[name] = value
+    saturation = bench.get("saturation") or {}
+    if "rounds_per_s" in saturation:
+        out["saturation_rounds_per_s"] = saturation["rounds_per_s"]
     return out
 
 

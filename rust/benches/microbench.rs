@@ -16,6 +16,12 @@
 //!    gates at ≥ 2× on SIMD-capable hardware.
 //! 6. Ablation: SPACDC mask_scale vs decode error and colluder leakage
 //!    (full mode only).
+//! 7. Saturation: 4 concurrent tenants streaming through one live
+//!    8-worker fleet via the serving front end (DESIGN.md §12), each at
+//!    a 4-wide session window under a 16-wide global cap, vs one tenant
+//!    streaming the same total rounds at inflight 16 — aggregate
+//!    `rounds_per_s` and per-tenant p99 land in BENCH.json and the CI
+//!    bench job gates the aggregate against the self-arming baseline.
 //!
 //! Flags (after `cargo bench --bench microbench --`):
 //! * `--smoke`        — small shapes / few iterations (the CI preset).
@@ -25,14 +31,16 @@
 //!   GEMM GFLOP/s and seal/open MB/s may not regress more than 25%.
 
 use spacdc::bench::{banner, black_box, header, run, BenchConfig};
-use spacdc::coding::{BlockCode, CodeParams, Spacdc};
-use spacdc::coordinator::SealedPayload;
+use spacdc::coding::{BlockCode, CodeParams, CodedTask, Spacdc};
+use spacdc::config::{SchemeKind, SystemConfig};
+use spacdc::coordinator::{Master, SealedPayload, ServiceConfig, SessionOptions, StreamConfig};
 use spacdc::ecc::{sim_curve, KeyPair, MaskMode, MeaEcc};
 use spacdc::field::fp61::{batch, P61};
 use spacdc::field::Fp61;
 use spacdc::matrix::{gram, matmul, matmul_naive, split_rows, Matrix};
 use spacdc::parallel;
 use spacdc::rng::{derive_seed, rng_from_seed};
+use spacdc::runtime::WorkerOp;
 use spacdc::simd::{self, axpy, fp61x, gemm, keystream, Level};
 use std::time::Instant;
 
@@ -210,6 +218,20 @@ fn main() {
         mask_scale_ablation();
     }
 
+    // ---- 7. multi-tenant saturation --------------------------------------
+    banner("saturation: 4 tenants × inflight 4 vs 1 tenant × inflight 16, one fleet");
+    let sat = bench_saturation(smoke);
+    let p99_worst = sat.p99_ms.iter().fold(0.0f64, |a, &b| a.max(b));
+    println!(
+        "{} rounds through 8 workers: single-tenant {:.2} rounds/s, 4 tenants {:.2} rounds/s \
+         ({:.2}x), per-tenant p99 {:?} ms",
+        sat.rounds,
+        sat.single_rounds_per_s,
+        sat.rounds_per_s,
+        sat.rounds_per_s / sat.single_rounds_per_s,
+        sat.p99_ms.iter().map(|p| (p * 100.0).round() / 100.0).collect::<Vec<_>>(),
+    );
+
     // ---- JSON artifact ---------------------------------------------------
     if let Some(path) = json_path {
         let gemm_json: Vec<String> = gemm_rows
@@ -252,7 +274,10 @@ fn main() {
              \"seal\": {{\"rows\": {sr}, \"cols\": {sc}, \"seal_ms\": {:.4}, \"open_ms\": {:.4}, \"seal_mb_s\": {:.2}, \"open_mb_s\": {:.2}}},\n  \
              \"decode\": {{\"scheme\": \"spacdc\", \"workers\": {dn}, \"returns\": {drets}, \"rows\": {drows}, \"cols\": {dcols}, \"encode_ms\": {:.4}, \"decode_ms\": {:.4}}},\n  \
              \"round\": {{\"scheme\": \"spacdc\", \"workers\": 8, \"rows\": {rr}, \"cols\": {rc}, \"threads_1_ms\": {:.3}, \"threads_8_ms\": {:.3}, \"speedup\": {:.3}, \"decode_bit_identical\": {bit_identical}}},\n  \
-             \"simd\": {simd_json}\n}}\n",
+             \"simd\": {simd_json},\n  \
+             \"saturation\": {{\"tenants\": {}, \"rounds\": {}, \"global_inflight\": 16, \
+             \"tenant_inflight\": 4, \"rounds_per_s\": {:.3}, \"single_rounds_per_s\": {:.3}, \
+             \"speedup\": {:.3}, \"p99_ms\": [{}], \"p99_worst_ms\": {:.3}}}\n}}\n",
             gemm_json.join(", "),
             seal.mean() * 1e3,
             open.mean() * 1e3,
@@ -263,6 +288,13 @@ fn main() {
             serial_s * 1e3,
             parallel_s * 1e3,
             speedup,
+            sat.tenants,
+            sat.rounds,
+            sat.rounds_per_s,
+            sat.single_rounds_per_s,
+            sat.rounds_per_s / sat.single_rounds_per_s,
+            sat.p99_ms.iter().map(|p| format!("{p:.3}")).collect::<Vec<_>>().join(", "),
+            p99_worst,
         );
         std::fs::write(&path, &json).expect("write bench JSON");
         println!("\nwrote {path}");
@@ -412,6 +444,73 @@ fn best_round(threads: usize, rows: usize, cols: usize, iters: usize) -> (f64, V
         out = decoded;
     }
     (best, out)
+}
+
+struct SaturationRow {
+    tenants: usize,
+    rounds: usize,
+    rounds_per_s: f64,
+    single_rounds_per_s: f64,
+    p99_ms: Vec<f64>,
+}
+
+/// Section 7: the same total round count through one live 8-worker
+/// fleet, first as one `run_stream` tenant at inflight 16, then as 4
+/// session tenants at inflight 4 under a 16-wide global cap — equal
+/// total in-flight either way, so the aggregate throughput isolates
+/// the serving front end's multiplexing cost (which the CI bench job
+/// gates at ≥ 0.9× the single-tenant stream).
+fn bench_saturation(smoke: bool) -> SaturationRow {
+    parallel::configure(0);
+    let tenants = 4usize;
+    let per_tenant = if smoke { 4 } else { 16 };
+    let total = tenants * per_tenant;
+    let (rows, cols) = if smoke { (48usize, 24usize) } else { (128usize, 64usize) };
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 8;
+    cfg.partitions = 4;
+    cfg.colluders = 2;
+    cfg.stragglers = 0;
+    cfg.scheme = SchemeKind::Spacdc;
+    cfg.delay.base_service_s = 0.0;
+    cfg.use_pjrt = false;
+    let tasks = |seed: u64, n: usize| -> Vec<CodedTask> {
+        let mut rng = rng_from_seed(seed);
+        (0..n)
+            .map(|_| {
+                let x = Matrix::random_gaussian(rows, cols, 0.0, 1.0, &mut rng);
+                CodedTask::block_map(WorkerOp::Gram, x)
+            })
+            .collect()
+    };
+
+    let mut master = Master::from_config(cfg.clone()).expect("saturation fleet");
+    let single = master
+        .run_stream(tasks(0x5A70, total), StreamConfig { inflight: 16, speculate: false })
+        .expect("single-tenant stream");
+    assert!(single.rounds.iter().all(|r| r.outcome.is_ok()));
+    drop(master);
+
+    let mut master = Master::from_config(cfg).expect("saturation fleet");
+    let mut svc = master.service(ServiceConfig { global_inflight: 16, speculate: false });
+    for t in 0..tenants {
+        let seed = derive_seed(0x5A71, t as u64);
+        svc.open_iter(
+            &format!("tenant-{t}"),
+            SessionOptions { inflight: 4, seed: Some(seed), ..Default::default() },
+            tasks(seed, per_tenant).into_iter(),
+        );
+    }
+    let out = svc.run();
+    assert_eq!(out.decoded(), total, "every tenant round must decode");
+
+    SaturationRow {
+        tenants,
+        rounds: total,
+        rounds_per_s: out.rounds_per_s,
+        single_rounds_per_s: single.rounds_per_s,
+        p99_ms: out.tenants.iter().map(|t| t.p99_ms).collect(),
+    }
 }
 
 fn mask_scale_ablation() {

@@ -16,6 +16,9 @@
 //! `--inflight` and `--speculate` override the scenario's `[stream]`
 //! table: the window is an execution knob like the transport — the CI
 //! matrix soaks `inflight ∈ {1, 4, 16}` and pins one digest.
+//! `--tenants`/`--tenant-inflight` override the `[tenants]` table to
+//! drive the multi-tenant serving front end (DESIGN.md §12); the
+//! per-tenant digests in the report are execution-knob-invariant too.
 
 use spacdc::cli::{parse, usage, ArgSpec};
 use spacdc::config::{parse_threads_token, TransportKind};
@@ -29,6 +32,8 @@ fn specs() -> Vec<ArgSpec> {
         ArgSpec::opt("inflight", "", "override the scenario's stream window (rounds in flight)"),
         ArgSpec::opt("speculate", "", "override the scenario's speculation: on|off"),
         ArgSpec::opt("rounds", "", "override the scenario's round count"),
+        ArgSpec::opt("tenants", "", "override the scenario's concurrent session tenants (≥ 1)"),
+        ArgSpec::opt("tenant-inflight", "", "override the per-tenant session window"),
         ArgSpec::opt("json", "SCENARIO_REPORT.json", "where to write the JSON report"),
         ArgSpec::opt("expect-digest", "", "fail unless the run's digest equals this hex value"),
         ArgSpec::flag("quiet", "suppress the per-round table"),
@@ -55,6 +60,15 @@ fn main() -> anyhow::Result<()> {
     if let Some(rounds) = parsed.get("rounds").filter(|s| !s.is_empty()) {
         scenario.rounds =
             rounds.parse().map_err(|_| anyhow::anyhow!("--rounds {rounds}: not a number"))?;
+    }
+    if let Some(raw) = parsed.get("tenants").filter(|s| !s.is_empty()) {
+        scenario.tenants =
+            raw.parse().map_err(|_| anyhow::anyhow!("--tenants {raw}: not a number"))?;
+    }
+    if let Some(raw) = parsed.get("tenant-inflight").filter(|s| !s.is_empty()) {
+        scenario.tenant_inflight = raw
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--tenant-inflight {raw}: not a number"))?;
     }
     let transport = TransportKind::from_str_token(parsed.get_str("transport"))
         .ok_or_else(|| anyhow::anyhow!("unknown transport {}", parsed.get_str("transport")))?;

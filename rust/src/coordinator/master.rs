@@ -811,16 +811,47 @@ impl Master {
 
     /// Run one coded round synchronously: encode `task` with the
     /// configured scheme, dispatch, collect, decode.
+    ///
+    /// This is a convenience wrapper over the session front end
+    /// (DESIGN.md §12): one throwaway single-tenant lane in
+    /// compatibility mode (no tenant seed, the config deadline,
+    /// speculation untouched), so its bits are exactly one
+    /// [`Service::round`](super::Service::round).
     pub fn run(&mut self, task: CodedTask) -> anyhow::Result<RoundOutcome> {
-        let handle = self.submit(task)?;
-        self.wait(handle)
+        let speculate = self.speculation();
+        let mut svc =
+            self.service(super::ServiceConfig { global_inflight: 1, speculate });
+        let sid = svc.open("run", super::SessionOptions::default());
+        let out = svc.round(sid, task);
+        svc.finish();
+        out
     }
 
     /// Phase 1+2 of a round: encode `task`, seal the per-worker payloads,
     /// and dispatch the framed work orders. Returns immediately with a
     /// [`RoundHandle`]; several rounds may be in flight at once — the
     /// collector thread routes interleaved results to the right round.
+    ///
+    /// Draws encode masks and the round salt from the master's root
+    /// RNG — the single-tenant path. The session layer submits through
+    /// [`submit_seeded`](Master::submit_seeded) to give each tenant its
+    /// own stream.
     pub fn submit(&mut self, task: CodedTask) -> anyhow::Result<RoundHandle> {
+        self.submit_seeded(task, None)
+    }
+
+    /// [`submit`](Master::submit) with an optional tenant RNG lane:
+    /// when `lane_rng` is `Some`, the encode privacy masks and the
+    /// round's seal salt are drawn from it instead of the master's root
+    /// RNG, so a tenant's round bits are a pure function of its own
+    /// seed and task — never of how other tenants' rounds interleave
+    /// (the session layer's isolation contract, DESIGN.md §12). `None`
+    /// is the compatibility path every pre-session caller takes.
+    pub(crate) fn submit_seeded(
+        &mut self,
+        task: CodedTask,
+        mut lane_rng: Option<&mut Rng>,
+    ) -> anyhow::Result<RoundHandle> {
         if !self.scheme.supports(&task) {
             anyhow::bail!(
                 "{} does not support {} tasks",
@@ -849,7 +880,10 @@ impl Master {
         // Encode (+T masks) — §V-B "data process".
         let job = {
             let _t = self.metrics.time_phase("phase.encode");
-            self.scheme.encode(&task, &mut self.rng)?
+            match lane_rng.as_deref_mut() {
+                Some(rng) => self.scheme.encode(&task, rng)?,
+                None => self.scheme.encode(&task, &mut self.rng)?,
+            }
         };
         let threshold = self.scheme.threshold(&task);
         let crate::coding::EncodedJob { payloads: shares, op, ctx } = job;
@@ -881,7 +915,10 @@ impl Master {
         // copy of the input either way (MEA-ECC copies only the bytes it
         // masks; the plain+speculate combination clones, which the wire
         // payload needs an owned matrix for regardless).
-        let round_salt = self.rng.next_u64();
+        let round_salt = match lane_rng.as_deref_mut() {
+            Some(rng) => rng.next_u64(),
+            None => self.rng.next_u64(),
+        };
         // Seal to the *current incarnations'* keys: a respawned worker
         // re-registered with a fresh key pair.
         let pks = self.directory.pks();
@@ -1059,8 +1096,21 @@ impl Master {
     /// as soon as the threshold is unreachable, [`RoundError::Deadline`]
     /// when live-but-slow workers exhaust `round_deadline_s`.
     pub fn wait(&mut self, handle: RoundHandle) -> anyhow::Result<RoundOutcome> {
+        let deadline_s = self.cfg.round_deadline_s;
+        self.wait_with_deadline(handle, deadline_s)
+    }
+
+    /// [`wait`](Master::wait) under an explicit deadline budget instead
+    /// of the config's `round_deadline_s` — the session layer's
+    /// per-tenant deadline hook (DESIGN.md §12). The speculation
+    /// checkpoint scales with the same budget.
+    pub(crate) fn wait_with_deadline(
+        &mut self,
+        handle: RoundHandle,
+        deadline_s: f64,
+    ) -> anyhow::Result<RoundOutcome> {
         let round = handle.defuse();
-        let deadline = Instant::now() + Duration::from_secs_f64(self.cfg.round_deadline_s);
+        let deadline = Instant::now() + Duration::from_secs_f64(deadline_s);
         // Recover anything already known lost before blocking (covers
         // losses noted since the last submit-time pass).
         self.speculation_pass();
@@ -1075,9 +1125,7 @@ impl Master {
             let mut early = None;
             if self.speculate {
                 let checkpoint = (Instant::now()
-                    + Duration::from_secs_f64(
-                        self.cfg.round_deadline_s * SPEC_DEADLINE_FRACTION,
-                    ))
+                    + Duration::from_secs_f64(deadline_s * SPEC_DEADLINE_FRACTION))
                 .min(deadline);
                 match self.registry.wait_soft(round, checkpoint) {
                     SoftWait::Done(done) => early = Some(done),
@@ -1197,7 +1245,8 @@ impl Master {
 
     /// Turn speculative re-dispatch on or off for the rounds submitted
     /// from here on (the builder seeds this from `config.speculate`;
-    /// [`run_stream`](Master::run_stream) overrides it per stream).
+    /// [`Master::service`] overrides it per service — and through it,
+    /// [`run_stream`](Master::run_stream) per stream).
     pub fn set_speculation(&mut self, on: bool) {
         self.speculate = on;
     }

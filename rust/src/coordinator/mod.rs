@@ -14,14 +14,18 @@
 //!    in-flight round (`registry`); `Master::wait` decodes once the
 //!    scheme's wait policy is satisfied, under a per-round deadline.
 //!
-//! One pipeline serves all eight schemes: [`Master::run`] executes a
-//! round synchronously, [`Master::submit`] / [`Master::wait`] keep
-//! several rounds in flight at once (results are routed to their round
-//! by id, so rounds may complete out of order; dropping a
-//! [`RoundHandle`] abandons its round), and [`Master::run_stream`]
-//! drives a whole task list through a configurable in-flight window
-//! with optional speculative re-dispatch of outstanding shares
-//! (`stream`, DESIGN.md §8).
+//! One pipeline serves all eight schemes: [`Master::submit`] /
+//! [`Master::wait`] keep several rounds in flight at once (results are
+//! routed to their round by id, so rounds may complete out of order;
+//! dropping a [`RoundHandle`] abandons its round), and the
+//! multi-tenant serving front end ([`Master::service`] → [`Service`],
+//! DESIGN.md §12) multiplexes many independent session lanes —
+//! iterator-, channel-, or manually-fed — over that pipeline with
+//! admission control, deficit-round-robin fairness, and per-tenant
+//! deadlines/metrics. [`Master::run`] (one synchronous round) and
+//! [`Master::run_stream`] (one windowed stream with optional
+//! speculative re-dispatch, DESIGN.md §8) remain as thin single-tenant
+//! convenience wrappers over the session API.
 //!
 //! Stragglers are injected per [`sim::DelayModel`](crate::sim::DelayModel);
 //! colluders and eavesdroppers observe through the [`sim`](crate::sim)
@@ -46,6 +50,7 @@ mod master;
 mod messages;
 mod pool;
 mod registry;
+mod session;
 mod stream;
 mod supervisor;
 
@@ -53,5 +58,8 @@ pub use lifecycle::{WorkerDirectory, WorkerState};
 pub use master::{Master, MasterBuilder, RoundError, RoundHandle, RoundOutcome};
 pub use messages::{share_commitment, ControlMsg, ResultMsg, SealedPayload, WirePayload, WorkOrder};
 pub use pool::{WorkerHarness, WorkerPool};
+pub use session::{
+    Service, ServiceConfig, ServiceOutcome, SessionId, SessionOptions, SessionRound, SessionStats,
+};
 pub use stream::{StreamConfig, StreamOutcome, StreamRound};
 pub use supervisor::{ExitCause, ExitLog, ExitRecord, Supervisor};

@@ -1,0 +1,830 @@
+//! Multi-tenant serving front end — DESIGN.md §12.
+//!
+//! One [`Master`] (and its worker fleet) serves many concurrent
+//! tenants: [`Master::service`] opens a [`Service`], each tenant opens
+//! a session lane fed from an iterator ([`Service::open_iter`]), a
+//! bounded channel ([`Service::open_channel`]), or one synchronous call
+//! at a time ([`Service::open`] + [`Service::round`]). The service owns
+//! the dispatch point and multiplexes every lane over the one round
+//! pipeline:
+//!
+//! * **Streaming sources, no epoch buffering.** Tasks are pulled from
+//!   the source one at a time, only when the scheduler is ready to
+//!   submit them — a tenant streaming a whole training epoch never
+//!   materializes it encoded. Bounded channels give producers
+//!   backpressure for free; per-window occupancy is surfaced in the
+//!   stats so saturation is observable.
+//! * **Admission control.** Each lane caps its own in-flight rounds
+//!   (`SessionOptions::inflight`) and the service caps the global
+//!   total (`ServiceConfig::global_inflight`). A lane with window
+//!   space that is blocked only by the global cap counts a refusal
+//!   (`tenant.refused`) — the admission signal a saturated fleet emits
+//!   instead of queueing without bound.
+//! * **Deficit-round-robin fairness.** The scheduler sweeps lanes
+//!   round-robin; each sweep credits a lane `weight` submissions and
+//!   carries at most one unused quantum forward, so a greedy tenant
+//!   with a wide window cannot starve a polite one — bandwidth
+//!   converges to the weight ratio whenever both lanes have work.
+//! * **Per-tenant deadlines and metrics.** Every lane may override the
+//!   round deadline (`SessionOptions::deadline_s`); per-lane
+//!   [`SessionStats`] report rounds, throughput, p50/p99 round
+//!   latency, degraded/refused/failed counts, and window occupancy.
+//!
+//! **Tenant isolation and determinism.** Round ids are global (the
+//! registry and sharded collector already route purely by id), but
+//! every *random* choice a lane's rounds consume — encode privacy
+//! masks and the per-round seal salt — comes from the lane's own RNG
+//! stream when `SessionOptions::seed` is set. A tenant's decoded bits
+//! are then a pure function of its own seed and task list: bit-equal
+//! whether the tenant runs alone or interleaved with any number of
+//! other tenants (asserted by `tests/multi_tenant.rs`). With `seed:
+//! None` the lane draws from the master's root RNG — exactly the
+//! pre-session behaviour, which is how [`Master::run`] and
+//! [`Master::run_stream`] stay bit-identical wrappers.
+
+use super::master::{Master, RoundHandle, RoundOutcome};
+use crate::coding::CodedTask;
+use crate::config::SystemConfig;
+use crate::metrics::{names, Histogram};
+use crate::rng::{derive_seed, rng_from_seed, Rng};
+use std::collections::VecDeque;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TryRecvError};
+use std::time::{Duration, Instant};
+
+/// The stream index every lane RNG derives from its tenant seed:
+/// `rng_from_seed(derive_seed(seed, LANE_RNG_STREAM))`. One fixed
+/// derivation means a tenant's mask/salt draws depend only on its own
+/// seed — the solo-vs-interleaved bit-parity contract.
+const LANE_RNG_STREAM: u64 = 0x5E55_000A;
+
+/// Service-wide knobs (the config keys `inflight` / `speculate` map
+/// here for the single-tenant wrappers; a multi-tenant caller sets
+/// them directly).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ServiceConfig {
+    /// Cap on rounds in flight across *all* lanes (0 = no global cap;
+    /// each lane is still bounded by its own window).
+    pub global_inflight: usize,
+    /// Speculative re-dispatch of outstanding shares, service-wide
+    /// (restored to the master's prior setting by [`Service::finish`]).
+    pub speculate: bool,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        Self { global_inflight: 0, speculate: false }
+    }
+}
+
+impl ServiceConfig {
+    /// The service knobs a system config asks for: the config's stream
+    /// window becomes the global cap.
+    pub fn from_config(cfg: &SystemConfig) -> Self {
+        Self { global_inflight: cfg.inflight.max(1), speculate: cfg.speculate }
+    }
+}
+
+/// Per-tenant session knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SessionOptions {
+    /// This lane's in-flight window (≥ 1; 1 = synchronous).
+    pub inflight: usize,
+    /// Per-round collection deadline override (None = the master
+    /// config's `round_deadline_s`).
+    pub deadline_s: Option<f64>,
+    /// Deficit-round-robin weight (≥ 1): submissions credited per
+    /// scheduler sweep. A weight-2 lane gets twice the dispatch
+    /// bandwidth of a weight-1 lane when both have work queued.
+    pub weight: u32,
+    /// Tenant RNG stream: `Some(seed)` gives this lane's rounds their
+    /// own mask/salt draws (solo-vs-interleaved bit-parity); `None`
+    /// draws from the master's root RNG (the single-tenant wrappers'
+    /// compatibility mode).
+    pub seed: Option<u64>,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        Self { inflight: 1, deadline_s: None, weight: 1, seed: None }
+    }
+}
+
+/// Handle to one tenant's lane (an index; lanes live as long as the
+/// service).
+pub type SessionId = usize;
+
+/// One completed round of a session, in lane-local submission order.
+#[derive(Debug)]
+pub struct SessionRound {
+    /// Position in the lane's submission sequence (0-based).
+    pub index: usize,
+    /// The master's global round id (0 when the submit itself failed
+    /// before an id was exposed).
+    pub round: u64,
+    /// The round's fate: a decoded outcome, or the typed error `wait`
+    /// (or `submit`) produced. One round failing never stops the lane.
+    pub outcome: anyhow::Result<RoundOutcome>,
+}
+
+/// Per-tenant statistics at service close.
+#[derive(Clone, Debug)]
+pub struct SessionStats {
+    /// Lane id.
+    pub id: SessionId,
+    /// Tenant name (as passed to `open*`).
+    pub name: String,
+    /// Rounds completed (decoded + failed).
+    pub rounds: u64,
+    /// Rounds that decoded.
+    pub decoded: u64,
+    /// Decoded rounds that lost workers and decoded from fewer results.
+    pub degraded: u64,
+    /// Rounds that failed (typed round errors and failed submits).
+    pub failed: u64,
+    /// Times this lane had window space but the global cap turned its
+    /// next submission away (admission-control pressure).
+    pub refused: u64,
+    /// Completed rounds per second over the service wall-clock.
+    pub rounds_per_s: f64,
+    /// Median round latency (submit → decode), milliseconds.
+    pub p50_ms: f64,
+    /// 99th-percentile round latency, milliseconds.
+    pub p99_ms: f64,
+    /// Mean lane-window occupancy, sampled at every submit and wait.
+    pub occupancy_mean: f64,
+    /// Peak lane-window occupancy.
+    pub occupancy_max: usize,
+}
+
+/// What a whole service run did.
+#[derive(Debug)]
+pub struct ServiceOutcome {
+    /// Per-lane completed rounds, sorted by lane-local index (empty
+    /// for lanes whose rounds were consumed by [`Service::round`] or a
+    /// [`Service::run_with`] sink).
+    pub rounds: Vec<Vec<SessionRound>>,
+    /// Per-tenant statistics, indexed by [`SessionId`].
+    pub tenants: Vec<SessionStats>,
+    /// Wall-clock from service open to finish.
+    pub wall: Duration,
+    /// Aggregate completed rounds per second across all tenants.
+    pub rounds_per_s: f64,
+    /// Speculative work orders sent during the service.
+    pub redispatched: u64,
+    /// Written-off shares recovered by speculation during the service.
+    pub recovered: u64,
+    /// Duplicate share copies discarded (speculation losers).
+    pub wasted: u64,
+    /// Mean total rounds in flight, sampled at every scheduler event.
+    pub occupancy_mean: f64,
+    /// Peak total rounds in flight.
+    pub occupancy_max: usize,
+}
+
+impl ServiceOutcome {
+    /// How many rounds decoded successfully, across all tenants.
+    pub fn decoded(&self) -> usize {
+        self.tenants.iter().map(|t| t.decoded as usize).sum()
+    }
+}
+
+/// Where a lane's tasks come from.
+enum TaskSource {
+    /// Pulled lazily from an iterator — one task at a time, only when
+    /// the scheduler is ready to submit it.
+    Iter(Box<dyn Iterator<Item = CodedTask>>),
+    /// Received from a bounded channel: producers block when the
+    /// channel is full (backpressure), the lane drains as capacity
+    /// allows, and a dropped sender ends the session.
+    Channel(Receiver<CodedTask>),
+    /// Fed one task at a time through [`Service::round`].
+    Manual,
+}
+
+/// One round in flight on a lane.
+struct InFlight {
+    index: usize,
+    round: u64,
+    handle: RoundHandle,
+}
+
+/// One tenant's lane: source, window, RNG stream, DRR state, stats.
+struct Lane {
+    name: String,
+    opts: SessionOptions,
+    source: TaskSource,
+    /// The next task, pulled but not yet admitted.
+    next: Option<CodedTask>,
+    /// Source drained (iterator done / channel disconnected).
+    exhausted: bool,
+    window: VecDeque<InFlight>,
+    rng: Option<Rng>,
+    deficit: f64,
+    submitted: usize,
+    decoded: u64,
+    degraded: u64,
+    failed: u64,
+    refused: u64,
+    latency: Histogram,
+    occ_sum: u64,
+    occ_samples: u64,
+    occ_max: usize,
+}
+
+impl Lane {
+    fn sample_occupancy(&mut self) {
+        let o = self.window.len();
+        self.occ_sum += o as u64;
+        self.occ_samples += 1;
+        self.occ_max = self.occ_max.max(o);
+    }
+
+    /// Nothing left to pull, submit, or wait on. Manual lanes count as
+    /// drained whenever their window is empty — they only carry work
+    /// during a [`Service::round`] call.
+    fn drained(&self) -> bool {
+        self.next.is_none()
+            && self.window.is_empty()
+            && (self.exhausted || matches!(self.source, TaskSource::Manual))
+    }
+
+    /// A connected channel lane with nothing pulled yet: the only case
+    /// where the scheduler must block for outside input.
+    fn awaiting_channel(&self) -> bool {
+        matches!(self.source, TaskSource::Channel(_)) && !self.exhausted && self.next.is_none()
+    }
+}
+
+/// Pull the lane's next task without blocking (no-op if one is already
+/// peeked, the source is drained, or the channel is momentarily empty).
+fn pull_ready(lane: &mut Lane) {
+    if lane.next.is_some() || lane.exhausted {
+        return;
+    }
+    match &mut lane.source {
+        TaskSource::Iter(it) => match it.next() {
+            Some(task) => lane.next = Some(task),
+            None => lane.exhausted = true,
+        },
+        TaskSource::Channel(rx) => match rx.try_recv() {
+            Ok(task) => lane.next = Some(task),
+            Err(TryRecvError::Empty) => {}
+            Err(TryRecvError::Disconnected) => lane.exhausted = true,
+        },
+        TaskSource::Manual => {}
+    }
+}
+
+/// Submit one task on a lane. A successful submit joins the lane's
+/// window; a failed submit is a completed (failed) round, returned for
+/// delivery.
+fn submit_task(master: &mut Master, lane: &mut Lane, task: CodedTask) -> Option<SessionRound> {
+    let index = lane.submitted;
+    lane.submitted += 1;
+    match master.submit_seeded(task, lane.rng.as_mut()) {
+        Ok(handle) => {
+            let round = handle.round_id();
+            lane.window.push_back(InFlight { index, round, handle });
+            lane.sample_occupancy();
+            None
+        }
+        Err(e) => {
+            lane.failed += 1;
+            Some(SessionRound { index, round: 0, outcome: Err(e) })
+        }
+    }
+}
+
+/// The multi-tenant serving front end over one [`Master`] (see module
+/// docs). Open lanes, then either drive them to completion with
+/// [`Service::run`] / [`Service::run_with`], or feed rounds one at a
+/// time with [`Service::round`]; close with [`Service::finish`].
+pub struct Service<'m> {
+    master: &'m mut Master,
+    cfg: ServiceConfig,
+    lanes: Vec<Lane>,
+    /// Completed rounds not yet handed to a caller, per lane.
+    collected: Vec<Vec<SessionRound>>,
+    cursor: usize,
+    prev_speculation: bool,
+    spec0: (u64, u64, u64),
+    started: Instant,
+    completed: u64,
+    occ_sum: u64,
+    occ_samples: u64,
+    occ_max: usize,
+}
+
+impl Master {
+    /// Open the multi-tenant serving front end over this master:
+    /// speculation is set per `cfg` for the service's lifetime (and
+    /// restored by [`Service::finish`]), and every lane opened on the
+    /// returned [`Service`] shares this master's worker fleet,
+    /// registry, and collector.
+    pub fn service(&mut self, cfg: ServiceConfig) -> Service<'_> {
+        let prev_speculation = self.speculation();
+        self.set_speculation(cfg.speculate);
+        let spec0 = (
+            self.metrics().get(names::SPEC_REDISPATCHED),
+            self.metrics().get(names::SPEC_RECOVERED),
+            self.metrics().get(names::SPEC_WASTED),
+        );
+        Service {
+            master: self,
+            cfg,
+            lanes: Vec::new(),
+            collected: Vec::new(),
+            cursor: 0,
+            prev_speculation,
+            spec0,
+            started: Instant::now(),
+            completed: 0,
+            occ_sum: 0,
+            occ_samples: 0,
+            occ_max: 0,
+        }
+    }
+}
+
+impl<'m> Service<'m> {
+    /// Open a manual lane: tasks are fed one at a time through
+    /// [`Service::round`].
+    pub fn open(&mut self, name: &str, opts: SessionOptions) -> SessionId {
+        self.add_lane(name, opts, TaskSource::Manual)
+    }
+
+    /// Open a lane fed from an iterator. Tasks are pulled lazily — one
+    /// at a time, only when the scheduler is ready to submit — so a
+    /// whole-epoch source is never materialized.
+    pub fn open_iter(
+        &mut self,
+        name: &str,
+        opts: SessionOptions,
+        tasks: impl Iterator<Item = CodedTask> + 'static,
+    ) -> SessionId {
+        self.add_lane(name, opts, TaskSource::Iter(Box::new(tasks)))
+    }
+
+    /// Open a lane fed from a bounded channel (capacity ≥ 1). The
+    /// returned sender blocks when the channel is full — producer
+    /// backpressure — and dropping it ends the session once the queue
+    /// drains.
+    pub fn open_channel(
+        &mut self,
+        name: &str,
+        opts: SessionOptions,
+        capacity: usize,
+    ) -> (SessionId, SyncSender<CodedTask>) {
+        let (tx, rx) = sync_channel(capacity.max(1));
+        (self.add_lane(name, opts, TaskSource::Channel(rx)), tx)
+    }
+
+    fn add_lane(&mut self, name: &str, opts: SessionOptions, source: TaskSource) -> SessionId {
+        let rng = opts.seed.map(|s| rng_from_seed(derive_seed(s, LANE_RNG_STREAM)));
+        self.lanes.push(Lane {
+            name: name.to_string(),
+            opts,
+            source,
+            next: None,
+            exhausted: false,
+            window: VecDeque::with_capacity(opts.inflight.max(1)),
+            rng,
+            deficit: 0.0,
+            submitted: 0,
+            decoded: 0,
+            degraded: 0,
+            failed: 0,
+            refused: 0,
+            latency: Histogram::new(),
+            occ_sum: 0,
+            occ_samples: 0,
+            occ_max: 0,
+        });
+        self.collected.push(Vec::new());
+        self.lanes.len() - 1
+    }
+
+    /// Rounds currently in flight across all lanes.
+    fn outstanding(&self) -> usize {
+        self.lanes.iter().map(|l| l.window.len()).sum()
+    }
+
+    /// The lane holding the globally-oldest in-flight round (round ids
+    /// are monotone in submission order, so the minimum front id is the
+    /// oldest round — the FIFO wait target).
+    fn oldest_lane(&self) -> Option<usize> {
+        self.lanes
+            .iter()
+            .enumerate()
+            .filter_map(|(i, l)| l.window.front().map(|f| (f.round, i)))
+            .min()
+            .map(|(_, i)| i)
+    }
+
+    fn sample_global(&mut self) {
+        let o = self.outstanding();
+        self.occ_sum += o as u64;
+        self.occ_samples += 1;
+        self.occ_max = self.occ_max.max(o);
+    }
+
+    /// Wait the front of lane `li`'s window (its oldest round) under the
+    /// lane's deadline and record its stats.
+    fn wait_front(&mut self, li: usize) -> SessionRound {
+        let default_deadline = self.master.config().round_deadline_s;
+        let lane = &mut self.lanes[li];
+        let inflight = lane.window.pop_front().expect("wait_front on an empty window");
+        let deadline = lane.opts.deadline_s.unwrap_or(default_deadline);
+        let outcome = self.master.wait_with_deadline(inflight.handle, deadline);
+        match &outcome {
+            Ok(out) => {
+                lane.decoded += 1;
+                if out.degraded {
+                    lane.degraded += 1;
+                    self.master.metrics().inc(names::TENANT_DEGRADED);
+                }
+                lane.latency.record(out.wall.as_secs_f64() * 1e3);
+            }
+            Err(_) => lane.failed += 1,
+        }
+        lane.sample_occupancy();
+        SessionRound { index: inflight.index, round: inflight.round, outcome }
+    }
+
+    /// Book a completed round for later collection.
+    fn deliver(&mut self, li: usize, r: SessionRound) {
+        self.completed += 1;
+        self.master.metrics().inc(names::TENANT_ROUNDS);
+        self.collected[li].push(r);
+    }
+
+    /// One deficit-round-robin sweep over the lanes: credit each lane
+    /// its quantum and submit while the deficit, the lane window, and
+    /// the global cap allow. Returns whether anything was submitted.
+    fn sweep(&mut self) -> bool {
+        let n = self.lanes.len();
+        if n == 0 {
+            return false;
+        }
+        let mut any = false;
+        let mut outstanding = self.outstanding();
+        let mut failed: Vec<(usize, SessionRound)> = Vec::new();
+        for step in 0..n {
+            let li = (self.cursor + step) % n;
+            pull_ready(&mut self.lanes[li]);
+            let lane = &mut self.lanes[li];
+            if lane.next.is_none() {
+                // Classic DRR: an empty queue forfeits its credit —
+                // otherwise an idle lane would bank bandwidth and burst
+                // later, which is latency unfairness in disguise.
+                lane.deficit = 0.0;
+                continue;
+            }
+            let quantum = lane.opts.weight.max(1) as f64;
+            // Carry at most one unused quantum: enough to realize the
+            // weight ratio, never enough to burst past it.
+            lane.deficit = (lane.deficit + quantum).min(2.0 * quantum);
+            let mut refused_this_sweep = false;
+            while lane.deficit >= 1.0 && lane.next.is_some() {
+                if lane.window.len() >= lane.opts.inflight.max(1) {
+                    break; // the lane's own window binds — not a refusal
+                }
+                if self.cfg.global_inflight > 0 && outstanding >= self.cfg.global_inflight {
+                    if !refused_this_sweep {
+                        lane.refused += 1;
+                        refused_this_sweep = true;
+                    }
+                    break;
+                }
+                let task = lane.next.take().expect("checked is_some");
+                lane.deficit -= 1.0;
+                match submit_task(&mut *self.master, lane, task) {
+                    None => outstanding += 1,
+                    Some(r) => failed.push((li, r)),
+                }
+                any = true;
+                pull_ready(lane);
+            }
+            if refused_this_sweep {
+                self.master.metrics().inc(names::TENANT_REFUSED);
+            }
+        }
+        self.cursor = (self.cursor + 1) % n;
+        for (li, r) in failed {
+            self.deliver(li, r);
+        }
+        any
+    }
+
+    /// Block briefly on one awaiting channel lane (all sources idle,
+    /// nothing in flight): the only point the scheduler sleeps.
+    fn block_on_channels(&mut self) {
+        for lane in self.lanes.iter_mut().filter(|l| l.awaiting_channel()) {
+            let TaskSource::Channel(rx) = &lane.source else { continue };
+            match rx.recv_timeout(Duration::from_millis(2)) {
+                Ok(task) => {
+                    lane.next = Some(task);
+                    return;
+                }
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => lane.exhausted = true,
+            }
+        }
+    }
+
+    /// One scheduler step: submit what admission allows; otherwise wait
+    /// the globally-oldest round; otherwise block for channel input.
+    /// Returns false when every lane is drained.
+    fn step(&mut self, pull: bool) -> bool {
+        if pull && self.sweep() {
+            self.sample_global();
+            return true;
+        }
+        if let Some(li) = self.oldest_lane() {
+            let r = self.wait_front(li);
+            self.deliver(li, r);
+            self.sample_global();
+            return true;
+        }
+        if pull && self.lanes.iter().any(Lane::awaiting_channel) {
+            self.block_on_channels();
+            return true;
+        }
+        // Nothing to submit, nothing in flight, no channel pending:
+        // every lane is drained (a lane with a peeked task always has
+        // either window space — the sweep takes it — or an in-flight
+        // round the wait branch retires first).
+        debug_assert!(self.lanes.iter().all(Lane::drained));
+        false
+    }
+
+    /// Run one round synchronously on lane `sid`: admit (waiting out
+    /// older rounds if the lane window or global cap is full), submit,
+    /// and wait for *this* round's outcome. This is the feed path for
+    /// callers whose next task depends on the previous result — the DL
+    /// trainer's gradient products — where lookahead is impossible and
+    /// memory must stay flat.
+    pub fn round(&mut self, sid: SessionId, task: CodedTask) -> anyhow::Result<RoundOutcome> {
+        let mut counted_refusal = false;
+        loop {
+            let lane = &self.lanes[sid];
+            let lane_full = lane.window.len() >= lane.opts.inflight.max(1);
+            let global_full =
+                self.cfg.global_inflight > 0 && self.outstanding() >= self.cfg.global_inflight;
+            if !lane_full && !global_full {
+                break;
+            }
+            if global_full && !lane_full && !counted_refusal {
+                self.lanes[sid].refused += 1;
+                self.master.metrics().inc(names::TENANT_REFUSED);
+                counted_refusal = true;
+            }
+            let li = self.oldest_lane().expect("a full window implies an outstanding round");
+            let r = self.wait_front(li);
+            self.deliver(li, r);
+        }
+        if let Some(r) = submit_task(&mut *self.master, &mut self.lanes[sid], task) {
+            self.completed += 1;
+            self.master.metrics().inc(names::TENANT_ROUNDS);
+            return r.outcome;
+        }
+        self.sample_global();
+        let target = self.lanes[sid].window.back().expect("just submitted").round;
+        loop {
+            let r = self.wait_front(sid);
+            if r.round == target {
+                self.completed += 1;
+                self.master.metrics().inc(names::TENANT_ROUNDS);
+                self.sample_global();
+                return r.outcome;
+            }
+            self.deliver(sid, r);
+        }
+    }
+
+    /// Drive every lane's source to exhaustion and every window dry,
+    /// then [`finish`](Service::finish). Per-lane rounds come back in
+    /// the outcome, sorted by lane-local index. Blocks until channel
+    /// senders are dropped.
+    pub fn run(mut self) -> ServiceOutcome {
+        while self.step(true) {}
+        self.finish()
+    }
+
+    /// Like [`run`](Service::run), but each completed round is handed
+    /// to `sink` as soon as it finishes instead of being buffered —
+    /// memory stays flat no matter how long the streams are.
+    pub fn run_with(
+        mut self,
+        sink: &mut dyn FnMut(SessionId, SessionRound),
+    ) -> ServiceOutcome {
+        while self.step(true) {
+            self.flush(sink);
+        }
+        self.flush(sink);
+        self.finish()
+    }
+
+    fn flush(&mut self, sink: &mut dyn FnMut(SessionId, SessionRound)) {
+        for li in 0..self.collected.len() {
+            for r in self.collected[li].drain(..) {
+                sink(li, r);
+            }
+        }
+    }
+
+    /// Close the service: wait out every in-flight round (without
+    /// pulling new tasks), restore the master's speculation setting,
+    /// and report per-tenant stats plus the speculation deltas.
+    pub fn finish(mut self) -> ServiceOutcome {
+        while let Some(li) = self.oldest_lane() {
+            let r = self.wait_front(li);
+            self.deliver(li, r);
+        }
+        self.master.set_speculation(self.prev_speculation);
+        let wall = self.started.elapsed();
+        let wall_s = wall.as_secs_f64();
+        let tenants: Vec<SessionStats> = self
+            .lanes
+            .iter()
+            .enumerate()
+            .map(|(id, lane)| SessionStats {
+                id,
+                name: lane.name.clone(),
+                rounds: lane.decoded + lane.failed,
+                decoded: lane.decoded,
+                degraded: lane.degraded,
+                failed: lane.failed,
+                refused: lane.refused,
+                rounds_per_s: if wall_s > 0.0 {
+                    (lane.decoded + lane.failed) as f64 / wall_s
+                } else {
+                    0.0
+                },
+                p50_ms: lane.latency.p50(),
+                p99_ms: lane.latency.p99(),
+                occupancy_mean: if lane.occ_samples > 0 {
+                    lane.occ_sum as f64 / lane.occ_samples as f64
+                } else {
+                    0.0
+                },
+                occupancy_max: lane.occ_max,
+            })
+            .collect();
+        let mut rounds = std::mem::take(&mut self.collected);
+        for lane in &mut rounds {
+            lane.sort_by_key(|r| r.index);
+        }
+        let metrics = self.master.metrics();
+        ServiceOutcome {
+            rounds,
+            tenants,
+            wall,
+            rounds_per_s: if wall_s > 0.0 { self.completed as f64 / wall_s } else { 0.0 },
+            redispatched: metrics.get(names::SPEC_REDISPATCHED) - self.spec0.0,
+            recovered: metrics.get(names::SPEC_RECOVERED) - self.spec0.1,
+            wasted: metrics.get(names::SPEC_WASTED) - self.spec0.2,
+            occupancy_mean: if self.occ_samples > 0 {
+                self.occ_sum as f64 / self.occ_samples as f64
+            } else {
+                0.0
+            },
+            occupancy_max: self.occ_max,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SchemeKind;
+    use crate::matrix::Matrix;
+    use crate::rng::rng_from_seed;
+    use crate::runtime::WorkerOp;
+    use std::sync::Arc;
+
+    fn cfg() -> SystemConfig {
+        let mut cfg = SystemConfig::default();
+        cfg.workers = 10;
+        cfg.partitions = 3;
+        cfg.colluders = 2;
+        cfg.stragglers = 2;
+        cfg.scheme = SchemeKind::Spacdc;
+        cfg.delay.base_service_s = 0.0;
+        cfg
+    }
+
+    fn tasks(n: usize, seed: u64) -> Vec<CodedTask> {
+        let mut rng = rng_from_seed(seed);
+        let v = Arc::new(Matrix::random_gaussian(6, 4, 0.0, 1.0, &mut rng));
+        (0..n)
+            .map(|_| {
+                let x = Matrix::random_gaussian(12, 6, 0.0, 1.0, &mut rng);
+                CodedTask::block_map(WorkerOp::RightMul(Arc::clone(&v)), x)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_lane_rounds_match_submit_wait_bitwise() {
+        let mut direct = Master::from_config(cfg()).unwrap();
+        let mut expect = Vec::new();
+        for t in tasks(4, 77) {
+            let h = direct.submit(t).unwrap();
+            expect.push(direct.wait(h).unwrap().blocks);
+        }
+        let mut master = Master::from_config(cfg()).unwrap();
+        let mut svc = master.service(ServiceConfig { global_inflight: 1, speculate: false });
+        let sid = svc.open("solo", SessionOptions::default());
+        for (i, t) in tasks(4, 77).into_iter().enumerate() {
+            let out = svc.round(sid, t).unwrap();
+            assert_eq!(
+                out.blocks, expect[i],
+                "a compatibility-mode session must be bit-identical to submit/wait"
+            );
+        }
+        let outcome = svc.finish();
+        assert_eq!(outcome.tenants[sid].decoded, 4);
+        assert_eq!(outcome.tenants[sid].failed, 0);
+        assert!(outcome.tenants[sid].p99_ms >= outcome.tenants[sid].p50_ms);
+    }
+
+    #[test]
+    fn drr_alternates_two_equal_tenants() {
+        let mut master = Master::from_config(cfg()).unwrap();
+        let mut svc = master.service(ServiceConfig { global_inflight: 0, speculate: false });
+        let opts = SessionOptions { inflight: 1, seed: Some(1), ..Default::default() };
+        let a = svc.open_iter("a", opts, tasks(4, 101).into_iter());
+        let b = svc.open_iter(
+            "b",
+            SessionOptions { seed: Some(2), ..opts },
+            tasks(4, 102).into_iter(),
+        );
+        let out = svc.run();
+        // Round ids are global and monotone in submission order: strict
+        // alternation is exactly a:1,3,5,7 / b:2,4,6,8.
+        let ids = |sid: usize| -> Vec<u64> { out.rounds[sid].iter().map(|r| r.round).collect() };
+        assert_eq!(ids(a), vec![1, 3, 5, 7], "lane a must get every other dispatch slot");
+        assert_eq!(ids(b), vec![2, 4, 6, 8], "lane b must get every other dispatch slot");
+        assert_eq!(out.decoded(), 8);
+        assert_eq!(out.tenants[a].refused, 0, "no global cap, no refusals");
+    }
+
+    #[test]
+    fn admission_refuses_beyond_the_global_cap() {
+        let mut master = Master::from_config(cfg()).unwrap();
+        let mut svc = master.service(ServiceConfig { global_inflight: 4, speculate: false });
+        let opts = SessionOptions { inflight: 4, seed: Some(3), ..Default::default() };
+        let a = svc.open_iter("greedy-a", opts, tasks(6, 201).into_iter());
+        let b = svc.open_iter(
+            "greedy-b",
+            SessionOptions { seed: Some(4), ..opts },
+            tasks(6, 202).into_iter(),
+        );
+        let out = svc.run();
+        assert_eq!(out.decoded(), 12, "admission defers work, never drops it");
+        assert!(out.occupancy_max <= 4, "the global cap binds: {}", out.occupancy_max);
+        assert!(
+            out.tenants[a].refused + out.tenants[b].refused > 0,
+            "two 4-wide lanes into a 4-wide fleet must hit admission control"
+        );
+    }
+
+    #[test]
+    fn channel_source_streams_with_backpressure() {
+        let mut master = Master::from_config(cfg()).unwrap();
+        let mut svc = master.service(ServiceConfig { global_inflight: 0, speculate: false });
+        let (sid, tx) = svc.open_channel(
+            "feed",
+            SessionOptions { inflight: 2, seed: Some(5), ..Default::default() },
+            2,
+        );
+        let feeder = std::thread::spawn(move || {
+            for t in tasks(6, 301) {
+                tx.send(t).unwrap();
+            }
+            // Sender drops here: the session ends once the queue drains.
+        });
+        let mut seen = 0usize;
+        let out = svc.run_with(&mut |id, r| {
+            assert_eq!(id, sid);
+            assert!(r.outcome.is_ok(), "round {}: {:?}", r.index, r.outcome);
+            seen += 1;
+        });
+        feeder.join().unwrap();
+        assert_eq!(seen, 6, "every fed round must come back through the sink");
+        assert_eq!(out.rounds[sid].len(), 0, "sink mode buffers nothing");
+        assert!(out.tenants[sid].occupancy_max <= 2, "lane window bounds occupancy");
+    }
+
+    #[test]
+    fn service_config_comes_from_the_system_config() {
+        let mut c = cfg();
+        c.inflight = 8;
+        c.speculate = true;
+        assert_eq!(
+            ServiceConfig::from_config(&c),
+            ServiceConfig { global_inflight: 8, speculate: true }
+        );
+    }
+}

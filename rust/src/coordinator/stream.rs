@@ -10,6 +10,13 @@
 //! the slower of the master and the worker fabric saturates (the
 //! `stream` scenario's CI gate pins the ratio).
 //!
+//! Since the session redesign (DESIGN.md §12), `run_stream` is a thin
+//! single-tenant wrapper over the serving front end: one iterator-fed
+//! [`Service`](super::Service) lane in compatibility mode. A one-lane
+//! service with lane window = global cap = `inflight` emits exactly the
+//! old submit/wait sequence, so the wrapper is bit-identical to the
+//! pre-session implementation — the scenario digests pin that in CI.
+//!
 //! **Determinism across window widths.** For a fixed seed and task
 //! list, every round's outcome — decoded bits, results used, degraded
 //! flag — is identical at any `inflight`, on either transport, at any
@@ -27,9 +34,7 @@
 use super::master::{Master, RoundOutcome};
 use crate::coding::CodedTask;
 use crate::config::SystemConfig;
-use crate::metrics::names;
-use std::collections::VecDeque;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Streaming knobs (config keys `inflight` / `speculate`, CLI
 /// `--inflight` / `--speculate`).
@@ -79,6 +84,11 @@ pub struct StreamOutcome {
     /// Duplicate share copies discarded (speculation losers) during the
     /// stream.
     pub wasted: u64,
+    /// Mean window occupancy (rounds in flight), sampled at every
+    /// submit and wait — how full the window actually ran.
+    pub occupancy_mean: f64,
+    /// Peak window occupancy (≤ `inflight`).
+    pub occupancy_max: usize,
 }
 
 impl StreamOutcome {
@@ -94,55 +104,42 @@ impl Master {
     /// `sc.speculate` (restored to the config's setting afterwards).
     /// Individual round failures are captured per round, not returned —
     /// the stream always runs to the end of the task list.
+    ///
+    /// This is a convenience wrapper over the session front end
+    /// (DESIGN.md §12): one iterator-fed single-tenant
+    /// [`Service`](super::Service) lane in compatibility mode (no
+    /// tenant seed, the config deadline), bit-identical to the
+    /// pre-session stream at every window width.
     pub fn run_stream(
         &mut self,
         tasks: Vec<CodedTask>,
         sc: StreamConfig,
     ) -> anyhow::Result<StreamOutcome> {
         anyhow::ensure!(sc.inflight >= 1, "stream window must be ≥ 1, got {}", sc.inflight);
-        let prev_speculation = self.speculation();
-        self.set_speculation(sc.speculate);
-        let spec0 = (
-            self.metrics().get(names::SPEC_REDISPATCHED),
-            self.metrics().get(names::SPEC_RECOVERED),
-            self.metrics().get(names::SPEC_WASTED),
+        let mut svc = self.service(super::ServiceConfig {
+            global_inflight: sc.inflight,
+            speculate: sc.speculate,
+        });
+        let sid = svc.open_iter(
+            "stream",
+            super::SessionOptions { inflight: sc.inflight, ..Default::default() },
+            tasks.into_iter(),
         );
-        let started = Instant::now();
-        let total = tasks.len();
-        let mut rounds: Vec<StreamRound> = Vec::with_capacity(total);
-        let mut window: VecDeque<(usize, super::RoundHandle)> =
-            VecDeque::with_capacity(sc.inflight);
-        for (index, task) in tasks.into_iter().enumerate() {
-            while window.len() >= sc.inflight {
-                let (index, handle) = window.pop_front().expect("window checked non-empty");
-                let round = handle.round_id();
-                rounds.push(StreamRound { index, round, outcome: self.wait(handle) });
-            }
-            match self.submit(task) {
-                Ok(handle) => window.push_back((index, handle)),
-                Err(e) => rounds.push(StreamRound { index, round: 0, outcome: Err(e) }),
-            }
-        }
-        while let Some((index, handle)) = window.pop_front() {
-            let round = handle.round_id();
-            rounds.push(StreamRound { index, round, outcome: self.wait(handle) });
-        }
-        self.set_speculation(prev_speculation);
-        // Failed submits are recorded out of turn (ahead of older rounds
-        // still in the window); present everything in task order.
-        rounds.sort_by_key(|r| r.index);
-        let wall = started.elapsed();
+        let mut out = svc.run();
+        let lane = &out.tenants[sid];
+        let rounds: Vec<StreamRound> = out.rounds[sid]
+            .drain(..)
+            .map(|r| StreamRound { index: r.index, round: r.round, outcome: r.outcome })
+            .collect();
         Ok(StreamOutcome {
             rounds,
-            wall,
-            rounds_per_s: if wall.as_secs_f64() > 0.0 {
-                total as f64 / wall.as_secs_f64()
-            } else {
-                0.0
-            },
-            redispatched: self.metrics().get(names::SPEC_REDISPATCHED) - spec0.0,
-            recovered: self.metrics().get(names::SPEC_RECOVERED) - spec0.1,
-            wasted: self.metrics().get(names::SPEC_WASTED) - spec0.2,
+            wall: out.wall,
+            rounds_per_s: out.rounds_per_s,
+            redispatched: out.redispatched,
+            recovered: out.recovered,
+            wasted: out.wasted,
+            occupancy_mean: lane.occupancy_mean,
+            occupancy_max: lane.occupancy_max,
         })
     }
 }
@@ -199,6 +196,11 @@ mod tests {
         }
         assert!(out.rounds_per_s > 0.0);
         assert_eq!(out.redispatched, 0, "no speculation requested");
+        assert!(
+            (1..=3).contains(&out.occupancy_max),
+            "window occupancy is surfaced and bounded by inflight: {}",
+            out.occupancy_max
+        );
     }
 
     #[test]

@@ -11,7 +11,7 @@
 
 use crate::coding::CodedTask;
 use crate::config::{SchemeKind, SystemConfig};
-use crate::coordinator::Master;
+use crate::coordinator::{Service, ServiceConfig, SessionId, SessionOptions};
 use crate::dl::dataset::Dataset;
 use crate::dl::network::Network;
 use crate::matrix::{matmul, Matrix};
@@ -106,6 +106,16 @@ pub fn train(opts: &TrainerOptions) -> anyhow::Result<TrainReport> {
             None => builder.build()?,
         }
     };
+    // One session lane serves the whole training run (DESIGN.md §12):
+    // each backward product is fed through `Service::round` the moment
+    // the step needs it, so nothing is ever materialized encoded —
+    // memory stays flat no matter how many epochs or batches stream
+    // through. (Gradient steps are sequentially dependent: step t's
+    // product uses step t-1's weights, so the lane runs synchronous —
+    // lookahead is impossible by construction, not by buffering.)
+    let speculate = master.speculation();
+    let mut service = master.service(ServiceConfig { global_inflight: 1, speculate });
+    let session = service.open("dl-trainer", SessionOptions::default());
 
     let t0 = Instant::now();
     let mut epochs = Vec::with_capacity(dl.epochs);
@@ -122,7 +132,7 @@ pub fn train(opts: &TrainerOptions) -> anyhow::Result<TrainReport> {
             let fwd = net.forward(&x);
             let mut mm_err: Option<anyhow::Error> = None;
             let (loss, grads) = net.backward_with(&fwd, &y, &mut |_l, w, delta| {
-                match coded_backward_product(&mut master, w, delta) {
+                match coded_backward_product(&mut service, session, w, delta) {
                     Ok(h) => h,
                     Err(e) => {
                         mm_err = Some(e);
@@ -164,6 +174,7 @@ pub fn train(opts: &TrainerOptions) -> anyhow::Result<TrainReport> {
         });
     }
 
+    service.finish();
     let final_accuracy = net.accuracy(&test_data, dl.batch_size);
     Ok(TrainReport {
         scheme: cfg.scheme,
@@ -178,14 +189,16 @@ pub fn train(opts: &TrainerOptions) -> anyhow::Result<TrainReport> {
 /// `H = Θᵀ·δ`, expressed as one [`CodedTask::PairProduct`] so the same
 /// line serves all eight schemes — MatDot encodes both operands, the
 /// row-partition schemes encode Θᵀ and broadcast δ, and the decode
-/// returns the full stacked product either way.
+/// returns the full stacked product either way. Fed through the
+/// trainer's persistent session lane, one round at a time.
 fn coded_backward_product(
-    master: &mut Master,
+    service: &mut Service<'_>,
+    session: SessionId,
     w: &Matrix,
     delta: &Matrix,
 ) -> anyhow::Result<Matrix> {
     let task = CodedTask::pair_product(w.transpose(), delta.clone());
-    let out = master.run(task)?;
+    let out = service.round(session, task)?;
     Ok(out.blocks.into_iter().next().expect("pair product decodes to one matrix"))
 }
 

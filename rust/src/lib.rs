@@ -19,11 +19,18 @@
 //!
 //! Every workload enters the system as a typed
 //! [`CodedTask`](coding::CodedTask) through one coordinator pipeline:
-//! [`Master::run`](coordinator::Master::run) for synchronous rounds, or
+//! the multi-tenant serving front end
+//! ([`Master::service`](coordinator::Master::service) →
+//! [`Service`](coordinator::Service)) multiplexes many concurrent
+//! session lanes — iterator-, channel-, or manually-fed — over one
+//! worker fleet with admission control and fair scheduling, while
+//! [`Master::run`](coordinator::Master::run) (one synchronous round),
 //! [`Master::submit`](coordinator::Master::submit) /
-//! [`Master::wait`](coordinator::Master::wait) to keep several rounds in
-//! flight at once. All eight schemes — MatDot included — implement the
-//! task-level [`Scheme`](coding::Scheme) trait.
+//! [`Master::wait`](coordinator::Master::wait) (explicit overlap), and
+//! [`Master::run_stream`](coordinator::Master::run_stream) (one
+//! windowed stream) remain as single-tenant entry points. All eight
+//! schemes — MatDot included — implement the task-level
+//! [`Scheme`](coding::Scheme) trait.
 //!
 //! Master and workers exchange *serialized frames* — a versioned,
 //! checksummed binary format ([`wire`]) — over a pluggable fabric

@@ -51,6 +51,8 @@ fn specs() -> Vec<ArgSpec> {
         ArgSpec::opt("inflight", "", "round-stream window: rounds kept in flight (≥ 1)"),
         ArgSpec::opt("speculate", "", "re-dispatch outstanding shares: on|off"),
         ArgSpec::opt("scenario", "", "scenario name or file (scenario subcommand)"),
+        ArgSpec::opt("tenants", "", "scenario override: concurrent session tenants (≥ 1)"),
+        ArgSpec::opt("tenant-inflight", "", "scenario override: per-tenant session window"),
         ArgSpec::opt("seed", "49374", "experiment seed"),
         ArgSpec::opt("base-service-ms", "0", "injected per-task service time (ms)"),
         ArgSpec::opt("rows", "512", "data rows m (round subcommand)"),
@@ -139,6 +141,20 @@ fn main() -> anyhow::Result<()> {
     };
     cfg.inflight = inflight_flag.unwrap_or(cfg.inflight);
     cfg.speculate = speculate_flag.unwrap_or(cfg.speculate);
+    let tenants_flag: Option<usize> = match parsed.get("tenants").filter(|s| !s.is_empty()) {
+        None => None,
+        Some(raw) => {
+            Some(raw.parse().map_err(|_| anyhow::anyhow!("--tenants {raw}: not a number"))?)
+        }
+    };
+    let tenant_inflight_flag: Option<usize> =
+        match parsed.get("tenant-inflight").filter(|s| !s.is_empty()) {
+            None => None,
+            Some(raw) => Some(
+                raw.parse()
+                    .map_err(|_| anyhow::anyhow!("--tenant-inflight {raw}: not a number"))?,
+            ),
+        };
     if let Some(s) = parsed.get("scenario").filter(|s| !s.is_empty()) {
         cfg.scenario = s.to_string();
     }
@@ -151,7 +167,9 @@ fn main() -> anyhow::Result<()> {
         "train" => cmd_train(&cfg),
         "round" => cmd_round(&cfg, parsed.get_usize("rows"), parsed.get_usize("cols")),
         "sweep" => cmd_sweep(&cfg),
-        "scenario" => cmd_scenario(&cfg, inflight_flag, speculate_flag),
+        "scenario" => {
+            cmd_scenario(&cfg, inflight_flag, speculate_flag, tenants_flag, tenant_inflight_flag)
+        }
         "info" => cmd_info(&cfg),
         other => {
             eprintln!("unknown subcommand {other}");
@@ -268,6 +286,8 @@ fn cmd_scenario(
     cfg: &SystemConfig,
     inflight: Option<usize>,
     speculate: Option<bool>,
+    tenants: Option<usize>,
+    tenant_inflight: Option<usize>,
 ) -> anyhow::Result<()> {
     if cfg.scenario.is_empty() {
         anyhow::bail!(
@@ -276,7 +296,15 @@ fn cmd_scenario(
             Scenario::builtin_names().join(", ")
         );
     }
-    let scenario = Scenario::load(&cfg.scenario)?;
+    let mut scenario = Scenario::load(&cfg.scenario)?;
+    // `--tenants`/`--tenant-inflight` override the scenario's
+    // `[tenants]` table (validated again by the runner).
+    if let Some(t) = tenants {
+        scenario.tenants = t;
+    }
+    if let Some(w) = tenant_inflight {
+        scenario.tenant_inflight = w;
+    }
     let report = run_scenario_with(&scenario, cfg.transport, cfg.threads, inflight, speculate)?;
     print!("{}", report.render_table());
     std::fs::write("SCENARIO_REPORT.json", report.to_json())?;

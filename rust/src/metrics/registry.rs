@@ -73,6 +73,13 @@ pub mod names {
     pub const VERIFY_QUARANTINED: &str = "verify.quarantined";
     /// Quarantined executors readmitted after a verified-good result.
     pub const VERIFY_REHABILITATED: &str = "verify.rehabilitated";
+    /// Rounds completed through the session front end (all tenants).
+    pub const TENANT_ROUNDS: &str = "tenant.rounds";
+    /// Completed tenant rounds that decoded degraded (fewer results).
+    pub const TENANT_DEGRADED: &str = "tenant.degraded";
+    /// Admission-control refusals: a lane had window space but the
+    /// global in-flight cap turned its next submission away.
+    pub const TENANT_REFUSED: &str = "tenant.refused";
 }
 
 impl MetricsRegistry {

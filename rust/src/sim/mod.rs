@@ -12,6 +12,8 @@ mod scenario;
 mod straggler;
 
 pub use adversary::{correlation as correlation_of, CollusionPool, EavesdropLog, EavesdroppedMessage};
-pub use runner::{run_scenario, run_scenario_with, RoundRecord, RoundStatus, ScenarioReport};
+pub use runner::{
+    run_scenario, run_scenario_with, RoundRecord, RoundStatus, ScenarioReport, TenantStat,
+};
 pub use scenario::{parse_crash, CrashEvent, FaultPlan, Scenario, ScenarioOp};
 pub use straggler::{fresh_round_model, DelayModel, WorkerProfile};

@@ -12,6 +12,19 @@
 //! *inside* the coordinator, driven by the scenario's
 //! [`FaultPlan`](crate::sim::FaultPlan); the runner only observes.
 //!
+//! **Multi-tenant soaks** (`[tenants] count > 1`, DESIGN.md §12): the
+//! runner opens one session lane per tenant on the serving front end
+//! ([`Master::service`](crate::coordinator::Master::service)), each fed
+//! from its own iterator with its own seed stream
+//! (`derive_seed(seed, 0x7E4A_0000 ^ t)`), and reports per-tenant
+//! stats *and* a per-tenant digest. Because every random choice a
+//! tenant's rounds consume comes from its lane seed, and a validated
+//! multi-tenant scenario is fault-free and straggler-free (decode
+//! waits for all dispatched workers), each per-tenant digest is a pure
+//! function of that tenant alone — bit-identical to the tenant's solo
+//! run and invariant across transports, thread widths, the global cap,
+//! and however the deficit-round-robin dispatcher interleaves lanes.
+//!
 //! **The digest.** CI pins one hex digest per scenario across the whole
 //! `{inproc, tcp} × {threads 1, 8} × inflight {1, 4, 16}` execution
 //! matrix. It folds exactly the fields the determinism contract covers
@@ -26,13 +39,21 @@
 
 use crate::coding::CodedTask;
 use crate::config::{SystemConfig, TransportKind};
-use crate::coordinator::{ExitRecord, MasterBuilder, RoundError, StreamConfig};
+use crate::coordinator::{
+    ExitRecord, Master, MasterBuilder, RoundError, ServiceConfig, SessionOptions, StreamConfig,
+};
 use crate::matrix::{gram, split_rows, Matrix};
 use crate::metrics::{names, MetricsRegistry};
 use crate::rng::{derive_seed, rng_from_seed};
 use crate::runtime::WorkerOp;
 use crate::sim::{correlation_of, CollusionPool, EavesdropLog, Scenario, ScenarioOp};
+use std::collections::HashMap;
 use std::sync::Arc;
+
+/// The seed-stream tag each tenant's lane derives from the scenario
+/// seed: tenant `t` draws everything from
+/// `derive_seed(sc.seed, TENANT_SEED_STREAM ^ t)`.
+const TENANT_SEED_STREAM: u64 = 0x7E4A_0000;
 
 /// How one round of a soak ended.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -91,6 +112,41 @@ pub struct RoundRecord {
     pub rel_err: Option<f64>,
     /// Wall-clock of the round, milliseconds (excluded from the digest).
     pub wall_ms: f64,
+}
+
+/// One tenant's slice of a multi-tenant soak (DESIGN.md §12).
+#[derive(Clone, Debug)]
+pub struct TenantStat {
+    /// Tenant index (lane order).
+    pub tenant: usize,
+    /// Lane name (`tenant-<t>`).
+    pub name: String,
+    /// This tenant's determinism pin: a pure function of the tenant's
+    /// own seed stream — identical to the tenant's solo run, on any
+    /// transport, thread width, global cap, or lane interleaving.
+    pub digest: String,
+    /// Rounds this tenant completed (decoded + failed).
+    pub rounds: u64,
+    /// Rounds that decoded.
+    pub decoded: u64,
+    /// Decoded rounds that degraded (always 0 — a validated tenants
+    /// scenario is fault-free; reported for schema completeness).
+    pub degraded: u64,
+    /// Rounds that failed.
+    pub failed: u64,
+    /// Admission refusals: the lane had window space but the global cap
+    /// turned its submission away (not in any digest — scheduling).
+    pub refused: u64,
+    /// This tenant's completed rounds per second over the soak.
+    pub rounds_per_s: f64,
+    /// Median round latency, ms (not in any digest).
+    pub p50_ms: f64,
+    /// 99th-percentile round latency, ms (not in any digest).
+    pub p99_ms: f64,
+    /// Mean lane-window occupancy.
+    pub occupancy_mean: f64,
+    /// Peak lane-window occupancy.
+    pub occupancy_max: usize,
 }
 
 /// The full soak report (serialized as `SCENARIO_REPORT.json`).
@@ -159,6 +215,19 @@ pub struct ScenarioReport {
     /// Round throughput over the whole stream (not in the digest —
     /// wall-clock-shaped; this is the number the window is for).
     pub rounds_per_s: f64,
+    /// Mean in-flight occupancy over the soak (not in the digest —
+    /// scheduling-shaped; the backpressure/saturation readout).
+    pub occupancy_mean: f64,
+    /// Peak in-flight occupancy (≤ the window / global cap).
+    pub occupancy_max: usize,
+    /// Concurrent tenants the soak drove (1 = the classic single-tenant
+    /// stream).
+    pub tenants: usize,
+    /// Per-tenant session window (= `inflight` when the scenario left
+    /// it 0).
+    pub tenant_inflight: usize,
+    /// Per-tenant stats + digests — empty at `tenants = 1`.
+    pub tenant_stats: Vec<TenantStat>,
     /// Speculative work orders sent (not in the digest: the deadline
     /// checkpoint fires on wall-clock).
     pub spec_redispatched: u64,
@@ -272,6 +341,14 @@ pub fn run_scenario_with(
         builder = builder.collusion(Arc::clone(c));
     }
     let mut master = builder.build()?;
+
+    // Multi-tenant soaks go through the serving front end; the
+    // single-tenant path below stays byte-for-byte what PR 8 pinned.
+    if sc.tenants > 1 {
+        return run_multi_tenant(
+            sc, transport, threads, inflight, speculate, metrics, tap, coalition, master,
+        );
+    }
 
     let mut digest = Fnv64::new();
     digest.write(b"scenario-digest-v3");
@@ -435,9 +512,257 @@ pub fn run_scenario_with(
         degraded_rounds,
         final_generations,
         rounds_per_s: stream.rounds_per_s,
+        occupancy_mean: stream.occupancy_mean,
+        occupancy_max: stream.occupancy_max,
+        tenants: 1,
+        tenant_inflight: inflight,
+        tenant_stats: Vec::new(),
         spec_redispatched: stream.redispatched,
         spec_recovered: stream.recovered,
         spec_wasted: stream.wasted,
+        verify_checked: metrics.get(names::VERIFY_CHECKED),
+        verify_forged_detected: metrics.get(names::VERIFY_FORGED_DETECTED),
+        verify_quarantined: metrics.get(names::VERIFY_QUARANTINED),
+        verify_rehabilitated: metrics.get(names::VERIFY_REHABILITATED),
+        process_exits,
+        records,
+    })
+}
+
+/// The multi-tenant arm of [`run_scenario_with`]: one session lane per
+/// tenant over one fleet through the serving front end (module docs).
+/// Each lane's data, encode masks, and seal salts derive from the
+/// tenant's own seed stream, so each per-tenant digest — and through
+/// them the report digest — is invariant across transports, thread
+/// widths, the global cap, and lane interleaving.
+#[allow(clippy::too_many_arguments)]
+fn run_multi_tenant(
+    sc: &Scenario,
+    transport: TransportKind,
+    threads: usize,
+    inflight: usize,
+    speculate: bool,
+    metrics: Arc<MetricsRegistry>,
+    tap: Arc<EavesdropLog>,
+    coalition: Option<Arc<CollusionPool>>,
+    mut master: Master,
+) -> anyhow::Result<ScenarioReport> {
+    let tenants = sc.tenants;
+    let tenant_inflight =
+        if sc.tenant_inflight == 0 { inflight } else { sc.tenant_inflight };
+    let worker_op = match sc.op {
+        ScenarioOp::Gram => WorkerOp::Gram,
+        ScenarioOp::Identity => WorkerOp::Identity,
+    };
+
+    // Pre-draw every tenant's data from its own seed stream (the same
+    // per-round derivation the single-tenant path uses, rooted at the
+    // tenant seed instead of the scenario seed).
+    let mut tenant_seeds = Vec::with_capacity(tenants);
+    let mut tenant_tasks: Vec<Vec<CodedTask>> = Vec::with_capacity(tenants);
+    let mut tenant_blocks: Vec<Vec<Vec<Matrix>>> = Vec::with_capacity(tenants);
+    for t in 0..tenants {
+        let tenant_seed = derive_seed(sc.seed, TENANT_SEED_STREAM ^ t as u64);
+        tenant_seeds.push(tenant_seed);
+        let mut tasks = Vec::with_capacity(sc.rounds as usize);
+        let mut blocks_by_round = Vec::with_capacity(sc.rounds as usize);
+        for r in 1..=sc.rounds {
+            let mut data_rng = rng_from_seed(derive_seed(tenant_seed, 0xDA7A_0000 + r));
+            let x = Matrix::random_gaussian(sc.rows, sc.cols, 0.0, 1.0, &mut data_rng);
+            let (blocks, _) = split_rows(&x, sc.partitions);
+            tasks.push(CodedTask::block_map(worker_op.clone(), x));
+            blocks_by_round.push(blocks);
+        }
+        tenant_tasks.push(tasks);
+        tenant_blocks.push(blocks_by_round);
+    }
+
+    let mut svc = master.service(ServiceConfig { global_inflight: inflight, speculate });
+    for (t, tasks) in tenant_tasks.into_iter().enumerate() {
+        svc.open_iter(
+            &format!("tenant-{t}"),
+            SessionOptions {
+                inflight: tenant_inflight,
+                seed: Some(tenant_seeds[t]),
+                ..Default::default()
+            },
+            tasks.into_iter(),
+        );
+    }
+    let out = svc.run();
+
+    // The report digest chains the per-tenant digests; each tenant's
+    // digest folds its rounds by *lane-local* index, so neither moves
+    // when the dispatcher interleaves lanes differently.
+    let mut digest = Fnv64::new();
+    digest.write(b"scenario-digest-v3");
+    digest.write(sc.name.as_bytes());
+    digest.u64(sc.seed);
+    digest.u64(sc.rounds);
+    digest.u64(sc.workers as u64);
+    digest.u64(tenants as u64);
+
+    let exact = |b: &Matrix| match sc.op {
+        ScenarioOp::Gram => gram(b),
+        ScenarioOp::Identity => b.clone(),
+    };
+    let mut records = Vec::with_capacity(tenants * sc.rounds as usize);
+    let mut tenant_stats = Vec::with_capacity(tenants);
+    // Global round id → (tenant, lane-local index), for the leak
+    // analysis (the tap charts payloads by global round).
+    let mut round_owner: HashMap<u64, (usize, usize)> = HashMap::new();
+    for (t, stats) in out.tenants.iter().enumerate() {
+        let mut td = Fnv64::new();
+        td.write(b"tenant-digest-v1");
+        td.write(sc.name.as_bytes());
+        td.u64(tenant_seeds[t]);
+        td.u64(sc.rounds);
+        td.u64(sc.workers as u64);
+        for sr in &out.rounds[t] {
+            let r = sr.index as u64 + 1;
+            if sr.round != 0 {
+                round_owner.insert(sr.round, (t, sr.index));
+            }
+            match &sr.outcome {
+                Ok(done) => {
+                    let rel_err = done
+                        .blocks
+                        .iter()
+                        .zip(&tenant_blocks[t][sr.index])
+                        .map(|(d, b)| d.rel_error(&exact(b)))
+                        .fold(0.0f64, f64::max);
+                    td.u64(r);
+                    td.write(&[RoundStatus::Ok.code(), done.degraded as u8]);
+                    td.u64(done.results_used as u64);
+                    for m in &done.blocks {
+                        td.u64(m.rows() as u64);
+                        td.u64(m.cols() as u64);
+                        for v in m.as_slice() {
+                            td.write(&v.to_bits().to_le_bytes());
+                        }
+                    }
+                    metrics.record("scenario.round_wall_s", done.wall.as_secs_f64());
+                    records.push(RoundRecord {
+                        round: sr.round,
+                        status: RoundStatus::Ok,
+                        results_used: done.results_used,
+                        degraded: done.degraded,
+                        rel_err: Some(rel_err),
+                        wall_ms: done.wall.as_secs_f64() * 1e3,
+                    });
+                }
+                Err(e) => {
+                    let status = match e.inner().downcast_ref::<RoundError>() {
+                        Some(RoundError::Deadline { .. }) => RoundStatus::Deadline,
+                        Some(RoundError::Hopeless { .. }) => RoundStatus::Hopeless,
+                        Some(RoundError::Forged { .. }) => RoundStatus::Forged,
+                        _ => RoundStatus::SubmitFailed,
+                    };
+                    td.u64(r);
+                    td.write(&[status.code(), 0]);
+                    td.u64(0);
+                    records.push(RoundRecord {
+                        round: sr.round,
+                        status,
+                        results_used: 0,
+                        degraded: false,
+                        rel_err: None,
+                        wall_ms: 0.0,
+                    });
+                }
+            }
+        }
+        digest.u64(td.0);
+        tenant_stats.push(TenantStat {
+            tenant: t,
+            name: stats.name.clone(),
+            digest: td.hex(),
+            rounds: stats.rounds,
+            decoded: stats.decoded,
+            degraded: stats.degraded,
+            failed: stats.failed,
+            refused: stats.refused,
+            rounds_per_s: stats.rounds_per_s,
+            p50_ms: stats.p50_ms,
+            p99_ms: stats.p99_ms,
+            occupancy_mean: stats.occupancy_mean,
+            occupancy_max: stats.occupancy_max,
+        });
+    }
+    let bytes_tx = metrics.get(names::BYTES_TX);
+    let bytes_rx = metrics.get(names::BYTES_RX);
+    // Transport totals stay digest material: dispatch sets and decode
+    // sets are schedule-pure (fault-free, wait-for-all), so the byte
+    // totals cannot move with interleaving.
+    digest.u64(bytes_tx);
+    digest.u64(bytes_rx);
+    digest.u64(out.recovered);
+    digest.u64(metrics.get(names::VERIFY_FORGED_DETECTED));
+
+    let mut leak_sum = 0.0;
+    let mut leak_n = 0usize;
+    for msg in tap.messages().iter().filter(|m| m.downlink) {
+        let Some(&(t, i)) = round_owner.get(&msg.round) else {
+            continue;
+        };
+        let best = tenant_blocks[t][i]
+            .iter()
+            .filter(|b| b.shape() == msg.payload.shape())
+            .map(|b| correlation_of(b, &msg.payload).abs())
+            .fold(0.0f64, f64::max);
+        leak_sum += best;
+        leak_n += 1;
+    }
+
+    let exit_log = master.exit_log();
+    let final_generations = master.worker_generations();
+    drop(master);
+    let process_exits: Vec<ExitRecord> =
+        exit_log.map_or_else(Vec::new, |log| log.lock().unwrap().clone());
+
+    let wall = metrics.histogram("scenario.round_wall_s").unwrap_or_default();
+    let total_rounds = sc.rounds * tenants as u64;
+    let ok_rounds = records.iter().filter(|r| r.status == RoundStatus::Ok).count();
+    let degraded_rounds = records.iter().filter(|r| r.degraded).count() as u64;
+    // Present the interleaved soak in global submit order.
+    records.sort_by_key(|r| r.round);
+    Ok(ScenarioReport {
+        scenario: sc.name.clone(),
+        scheme: sc.scheme.name().to_string(),
+        op: sc.op.name().to_string(),
+        transport: transport.name().to_string(),
+        threads,
+        inflight,
+        speculate,
+        seed: sc.seed,
+        workers: sc.workers,
+        rounds: total_rounds,
+        digest: digest.hex(),
+        recovery_hit_rate: ok_rounds as f64 / total_rounds as f64,
+        wall_mean_ms: wall.mean() * 1e3,
+        wall_p50_ms: wall.p50() * 1e3,
+        wall_p99_ms: wall.p99() * 1e3,
+        wall_max_ms: wall.max().max(0.0) * 1e3,
+        bytes_tx,
+        bytes_rx,
+        wire_errors: metrics.get(names::WIRE_ERRORS),
+        results_late: metrics.get(names::RESULTS_LATE),
+        downlink_messages: leak_n,
+        downlink_leak: if leak_n == 0 { 0.0 } else { leak_sum / leak_n as f64 },
+        colluder_shares: coalition.map_or(0, |c| c.gathered().len()),
+        crashes: metrics.get(names::WORKER_CRASHES),
+        respawns: metrics.get(names::WORKER_RESPAWNS),
+        degraded_rounds,
+        final_generations,
+        rounds_per_s: out.rounds_per_s,
+        occupancy_mean: out.occupancy_mean,
+        occupancy_max: out.occupancy_max,
+        tenants,
+        tenant_inflight,
+        tenant_stats,
+        spec_redispatched: out.redispatched,
+        spec_recovered: out.recovered,
+        spec_wasted: out.wasted,
         verify_checked: metrics.get(names::VERIFY_CHECKED),
         verify_forged_detected: metrics.get(names::VERIFY_FORGED_DETECTED),
         verify_quarantined: metrics.get(names::VERIFY_QUARANTINED),
@@ -501,12 +826,49 @@ impl ScenarioReport {
             sigkilled,
             exits.join(",\n")
         );
+        let per_tenant: Vec<String> = self
+            .tenant_stats
+            .iter()
+            .map(|t| {
+                format!(
+                    "    {{\"tenant\": {}, \"name\": \"{}\", \"digest\": \"{}\", \
+                     \"rounds\": {}, \"decoded\": {}, \"degraded\": {}, \"failed\": {}, \
+                     \"refused\": {}, \"rounds_per_s\": {:.3}, \"p50_ms\": {:.3}, \
+                     \"p99_ms\": {:.3}, \"occupancy_mean\": {:.3}, \"occupancy_max\": {}}}",
+                    t.tenant,
+                    json_escape(&t.name),
+                    t.digest,
+                    t.rounds,
+                    t.decoded,
+                    t.degraded,
+                    t.failed,
+                    t.refused,
+                    t.rounds_per_s,
+                    t.p50_ms,
+                    t.p99_ms,
+                    t.occupancy_mean,
+                    t.occupancy_max
+                )
+            })
+            .collect();
+        let tenants_section = format!(
+            "\"tenants\": {{\"count\": {}, \"inflight\": {}, \"per_tenant\": [{}]}},\n  ",
+            self.tenants,
+            self.tenant_inflight,
+            if per_tenant.is_empty() {
+                String::new()
+            } else {
+                format!("\n{}\n  ", per_tenant.join(",\n"))
+            }
+        );
         format!(
-            "{{\n  \"schema\": \"scenario-report-v3\",\n  \"scenario\": \"{}\",\n  \
+            "{{\n  \"schema\": \"scenario-report-v4\",\n  \"scenario\": \"{}\",\n  \
              \"scheme\": \"{}\",\n  \"op\": \"{}\",\n  \"transport\": \"{}\",\n  \
              \"threads\": {},\n  \"seed\": {},\n  \"workers\": {},\n  \"rounds\": {},\n  \
              \"digest\": \"{}\",\n  \"recovery_hit_rate\": {:.4},\n  \
-             \"stream\": {{\"inflight\": {}, \"speculate\": {}, \"rounds_per_s\": {:.3}}},\n  \
+             \"stream\": {{\"inflight\": {}, \"speculate\": {}, \"rounds_per_s\": {:.3}, \
+             \"occupancy_mean\": {:.3}, \"occupancy_max\": {}}},\n  \
+             {tenants_section}\
              \"speculation\": {{\"redispatched\": {}, \"recovered\": {}, \"wasted\": {}}},\n  \
              \"verify\": {{\"checked\": {}, \"forged_detected\": {}, \"quarantined\": {}, \
              \"rehabilitated\": {}}},\n  \
@@ -532,6 +894,8 @@ impl ScenarioReport {
             self.inflight,
             self.speculate,
             self.rounds_per_s,
+            self.occupancy_mean,
+            self.occupancy_max,
             self.spec_redispatched,
             self.spec_recovered,
             self.spec_wasted,
@@ -601,9 +965,30 @@ impl ScenarioReport {
             self.downlink_leak,
         ));
         out.push_str(&format!(
-            "stream: {:.2} rounds/s · speculation redispatched {} / recovered {} / wasted {}\n",
-            self.rounds_per_s, self.spec_redispatched, self.spec_recovered, self.spec_wasted,
+            "stream: {:.2} rounds/s · occupancy {:.2} mean / {} peak · \
+             speculation redispatched {} / recovered {} / wasted {}\n",
+            self.rounds_per_s,
+            self.occupancy_mean,
+            self.occupancy_max,
+            self.spec_redispatched,
+            self.spec_recovered,
+            self.spec_wasted,
         ));
+        for t in &self.tenant_stats {
+            out.push_str(&format!(
+                "tenant {}: {} rounds ({} decoded, {} failed) · {:.2} rounds/s · \
+                 p50 {:.2} ms · p99 {:.2} ms · refused {} · digest {}\n",
+                t.tenant,
+                t.rounds,
+                t.decoded,
+                t.failed,
+                t.rounds_per_s,
+                t.p50_ms,
+                t.p99_ms,
+                t.refused,
+                t.digest,
+            ));
+        }
         if self.verify_checked > 0 || self.verify_forged_detected > 0 {
             out.push_str(&format!(
                 "verify: checked {} · forged detected {} · quarantined {} · rehabilitated {}\n",

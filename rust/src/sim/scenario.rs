@@ -121,13 +121,29 @@ pub struct Scenario {
     /// Probability that a forger-set worker forges a given round (drawn
     /// deterministically per (worker, round) from `seed`).
     pub forge_rate: f64,
+    /// Declared Byzantine budget F (`[cluster] forgers`): how many
+    /// workers the scenario *claims* are forgers. When non-zero, a
+    /// non-empty `forger_set` must have exactly this many members —
+    /// the mirror of the `colluder_set`/`colluders` agreement check.
+    /// 0 = no declared budget (the set alone defines the adversary).
+    pub forgers: usize,
     /// Round-stream window the soak drives (`[stream] inflight`; ≥ 1,
     /// 1 = synchronous). An execution knob may override it — the digest
-    /// must not move when it does (DESIGN.md §8).
+    /// must not move when it does (DESIGN.md §8). With `tenants > 1`
+    /// this is the service's *global* in-flight cap.
     pub inflight: usize,
     /// Speculative re-dispatch of outstanding shares (`[stream]
     /// speculate`).
     pub speculate: bool,
+    /// Concurrent tenants sharing the fleet (`[tenants] count`; ≥ 1).
+    /// Each tenant streams its own `rounds` rounds through one session
+    /// lane of the serving front end (DESIGN.md §12), with per-tenant
+    /// data and RNG streams derived from `seed` — so every tenant's
+    /// digest is bit-identical to its solo run.
+    pub tenants: usize,
+    /// Per-tenant in-flight window (`[tenants] inflight`; 0 = inherit
+    /// the stream window `inflight`).
+    pub tenant_inflight: usize,
 }
 
 impl Scenario {
@@ -153,8 +169,11 @@ impl Scenario {
             corrupt_rate: 0.0,
             forger_set: Vec::new(),
             forge_rate: 0.0,
+            forgers: 0,
             inflight: 1,
             speculate: false,
+            tenants: 1,
+            tenant_inflight: 0,
         }
     }
 
@@ -256,8 +275,38 @@ impl Scenario {
                 };
                 sc.forger_set = vec![2, 5];
                 sc.forge_rate = 0.55;
+                sc.forgers = 2;
                 sc.inflight = 4;
                 sc.speculate = true;
+                Some(sc)
+            }
+            // The multi-tenant saturation soak: four tenants share one
+            // fleet through the serving front end, each streaming its
+            // own 8 rounds at a 4-wide window under a 16-wide global
+            // cap. Fault-free and straggler-free by design: every
+            // tenant's decode set is then pinned by its own schedule,
+            // so each per-tenant digest is bit-identical to that
+            // tenant's solo run (the isolation contract the report
+            // pins), while the aggregate throughput exercises admission
+            // control and the deficit-round-robin dispatcher.
+            "tenants" => {
+                let mut sc = Self::base("tenants");
+                sc.rounds = 8;
+                sc.rows = 48;
+                sc.cols = 24;
+                sc.seed = 0x5CE5;
+                sc.workers = 8;
+                sc.partitions = 4;
+                sc.colluders = 2;
+                sc.stragglers = 0;
+                sc.delay = DelayConfig {
+                    straggler_factor: 1.0,
+                    base_service_s: 0.002,
+                    jitter: 0.1,
+                };
+                sc.tenants = 4;
+                sc.tenant_inflight = 4;
+                sc.inflight = 16;
                 Some(sc)
             }
             _ => None,
@@ -266,7 +315,7 @@ impl Scenario {
 
     /// Names [`Scenario::builtin`] answers to.
     pub fn builtin_names() -> &'static [&'static str] {
-        &["baseline", "crash-respawn", "colluders-stragglers", "stream", "forgers"]
+        &["baseline", "crash-respawn", "colluders-stragglers", "stream", "forgers", "tenants"]
     }
 
     /// Resolve a `--scenario` / `scenario =` token: an explicit file
@@ -322,6 +371,9 @@ impl Scenario {
                 "cluster.stragglers" => {
                     sc.stragglers = value.parse().map_err(|_| bad(&full, value))?
                 }
+                "cluster.forgers" => {
+                    sc.forgers = value.parse().map_err(|_| bad(&full, value))?
+                }
                 "cluster.scheme" => {
                     sc.scheme =
                         SchemeKind::from_str_token(value).ok_or_else(|| bad(&full, value))?
@@ -370,6 +422,12 @@ impl Scenario {
                         "false" | "0" | "no" | "off" => false,
                         _ => return Err(bad(&full, value)),
                     }
+                }
+                "tenants.count" => {
+                    sc.tenants = value.parse().map_err(|_| bad(&full, value))?
+                }
+                "tenants.inflight" => {
+                    sc.tenant_inflight = value.parse().map_err(|_| bad(&full, value))?
                 }
                 _ => return Err(ConfigError::UnknownKey(full)),
             }
@@ -446,6 +504,42 @@ impl Scenario {
             return Err("forge_rate is set but forger_set is empty — name the Byzantine \
                         workers in [adversary] forger_set"
                 .into());
+        }
+        // A declared Byzantine budget must agree with the named set —
+        // the mirror of the colluder_set/colluders check above: running
+        // a different adversary than the one the scenario claims
+        // silently measures the wrong threat. (forgers = 0 declares no
+        // budget; the set alone then defines the adversary.)
+        if self.forgers != 0 && !self.forger_set.is_empty() && self.forger_set.len() != self.forgers
+        {
+            return Err(format!(
+                "forger_set has {} members but forgers = {} — the named Byzantine set \
+                 must match the declared budget F",
+                self.forger_set.len(),
+                self.forgers
+            ));
+        }
+        if self.tenants == 0 {
+            return Err("tenants.count must be ≥ 1 (1 = single-tenant)".into());
+        }
+        // Multi-tenant runs pin each tenant's digest to its solo run.
+        // That isolation contract needs the decode set pinned by each
+        // tenant's own schedule: faults and stragglers key on *global*
+        // round ids, which move when tenants interleave — so a
+        // tenants > 1 scenario must be fault-free and straggler-free.
+        if self.tenants > 1 {
+            if !self.crashes.is_empty()
+                || self.corrupt_rate > 0.0
+                || self.forge_rate > 0.0
+                || self.stragglers > 0
+            {
+                return Err(format!(
+                    "tenants = {} needs a fault-free, straggler-free cluster — crashes, \
+                     corruption, forgeries, and stragglers key on global round ids, which \
+                     interleaving tenants reassign",
+                    self.tenants
+                ));
+            }
         }
         Ok(())
     }
@@ -703,6 +797,59 @@ speculate = "on"
         // An inert forger set (rate 0) is fine.
         let inert = "[adversary]\nforger_set = \"1\"\n";
         assert_eq!(Scenario::from_str_toml(inert).unwrap().forger_set, vec![1]);
+    }
+
+    #[test]
+    fn forger_set_must_agree_with_the_declared_budget() {
+        // F = 2 but a 1-member named set: inconsistent — the mirror of
+        // the colluder_set/colluders check.
+        let short = "[cluster]\nworkers = 8\nforgers = 2\n\
+                     [adversary]\nforger_set = \"3\"\n";
+        let err = Scenario::from_str_toml(short).unwrap_err();
+        assert!(
+            matches!(&err, ConfigError::Validation(m) if m.contains("forger_set")),
+            "want a typed validation error naming forger_set, got {err:?}"
+        );
+        // The same set sized to F passes…
+        let ok = "[cluster]\nworkers = 8\nforgers = 2\n\
+                  [adversary]\nforger_set = \"3, 5\"\n";
+        let sc = Scenario::from_str_toml(ok).unwrap();
+        assert_eq!(sc.forgers, 2);
+        assert_eq!(sc.forger_set, vec![3, 5]);
+        // …an undeclared budget (F = 0) leaves the set authoritative…
+        let legacy = "[cluster]\nworkers = 8\n[adversary]\nforger_set = \"3\"\n";
+        assert_eq!(Scenario::from_str_toml(legacy).unwrap().forger_set, vec![3]);
+        // …and the shipped Byzantine builtin declares a matching budget.
+        let builtin = Scenario::builtin("forgers").unwrap();
+        assert_eq!(builtin.forgers, builtin.forger_set.len());
+        builtin.validate().unwrap();
+    }
+
+    #[test]
+    fn multi_tenant_scenarios_must_be_fault_free() {
+        // Zero tenants is a contradiction, not "off".
+        assert!(Scenario::from_str_toml("[tenants]\ncount = 0\n").is_err());
+        // Any global-round-keyed adversity under tenants > 1 is
+        // rejected: it would break per-tenant solo-run parity.
+        for adversity in [
+            "[faults]\ncrash = \"1@2+2\"\n",
+            "[faults]\ncorrupt_rate = 0.1\n",
+            "[faults]\nforge_rate = 0.5\n[adversary]\nforger_set = \"1\"\n",
+            "[cluster]\nstragglers = 1\n",
+        ] {
+            let text = format!("rounds = 4\n{adversity}[tenants]\ncount = 2\n");
+            let err = Scenario::from_str_toml(&text).unwrap_err();
+            assert!(
+                matches!(&err, ConfigError::Validation(m) if m.contains("fault-free")),
+                "want the fault-free validation for {adversity:?}, got {err:?}"
+            );
+        }
+        // The shipped tenants builtin is valid and 4-wide.
+        let sc = Scenario::builtin("tenants").unwrap();
+        assert_eq!(sc.tenants, 4);
+        assert_eq!(sc.tenant_inflight, 4);
+        assert_eq!(sc.inflight, 16);
+        sc.validate().unwrap();
     }
 
     #[test]

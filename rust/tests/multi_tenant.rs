@@ -1,0 +1,195 @@
+//! Multi-tenant serving-front-end integration tests (DESIGN.md §12):
+//! the tenant-isolation contract (a tenant's decoded bits are identical
+//! solo or interleaved, on any fabric and pool width), the digest pin
+//! for the shipped `tenants` scenario across the execution matrix, and
+//! deficit-round-robin fairness under a greedy tenant.
+
+use spacdc::coding::CodedTask;
+use spacdc::config::{SchemeKind, SystemConfig, TransportKind};
+use spacdc::coordinator::{Master, ServiceConfig, SessionOptions};
+use spacdc::matrix::Matrix;
+use spacdc::rng::{derive_seed, rng_from_seed};
+use spacdc::runtime::WorkerOp;
+use spacdc::sim::{run_scenario, Scenario};
+
+/// The CI matrix in miniature: both fabrics, serial and wide pools.
+const MATRIX: [(TransportKind, usize); 4] = [
+    (TransportKind::InProc, 1),
+    (TransportKind::InProc, 8),
+    (TransportKind::Tcp, 1),
+    (TransportKind::Tcp, 8),
+];
+
+/// Straggler-free cluster: decode waits for every dispatched worker, so
+/// each tenant's decode set — and therefore its bits — is pinned by the
+/// schedule alone (the precondition scenario validation enforces for
+/// multi-tenant soaks).
+fn cluster(transport: TransportKind, threads: usize) -> SystemConfig {
+    let mut cfg = SystemConfig::default();
+    cfg.workers = 8;
+    cfg.partitions = 4;
+    cfg.colluders = 2;
+    cfg.stragglers = 0;
+    cfg.scheme = SchemeKind::Spacdc;
+    cfg.transport = transport;
+    cfg.threads = threads;
+    cfg.delay.base_service_s = 0.0;
+    cfg
+}
+
+/// A tenant's task list, drawn from its own seed stream (the same
+/// per-round derivation the scenario runner uses).
+fn tenant_tasks(seed: u64, rounds: usize) -> Vec<CodedTask> {
+    (1..=rounds as u64)
+        .map(|r| {
+            let mut rng = rng_from_seed(derive_seed(seed, 0xDA7A_0000 + r));
+            let x = Matrix::random_gaussian(24, 12, 0.0, 1.0, &mut rng);
+            CodedTask::block_map(WorkerOp::Gram, x)
+        })
+        .collect()
+}
+
+/// Run one tenant alone on a fresh fleet and return its decoded blocks
+/// in task order.
+fn solo_blocks(
+    transport: TransportKind,
+    threads: usize,
+    seed: u64,
+    rounds: usize,
+) -> Vec<Vec<Matrix>> {
+    let mut master = Master::from_config(cluster(transport, threads)).unwrap();
+    let mut svc = master.service(ServiceConfig { global_inflight: 16, speculate: false });
+    let sid = svc.open_iter(
+        "solo",
+        SessionOptions { inflight: 16, seed: Some(seed), ..Default::default() },
+        tenant_tasks(seed, rounds).into_iter(),
+    );
+    let mut out = svc.run();
+    out.rounds[sid]
+        .drain(..)
+        .map(|r| r.outcome.expect("solo round must decode").blocks)
+        .collect()
+}
+
+#[test]
+fn tenant_bits_are_identical_solo_or_interleaved() {
+    // Three tenants share one fleet at inflight 16 each; every tenant's
+    // decoded bits must equal its solo run exactly — per seed stream,
+    // per round, per f32 bit — on every fabric and pool width.
+    const ROUNDS: usize = 5;
+    let seeds = [0xA11C_E001u64, 0xB0B0_0002, 0xCAFE_0003];
+    for (transport, threads) in MATRIX {
+        let solo: Vec<Vec<Vec<Matrix>>> = seeds
+            .iter()
+            .map(|&s| solo_blocks(transport, threads, s, ROUNDS))
+            .collect();
+
+        let mut master = Master::from_config(cluster(transport, threads)).unwrap();
+        let mut svc = master.service(ServiceConfig { global_inflight: 16, speculate: false });
+        let sids: Vec<usize> = seeds
+            .iter()
+            .enumerate()
+            .map(|(t, &s)| {
+                svc.open_iter(
+                    &format!("tenant-{t}"),
+                    SessionOptions { inflight: 16, seed: Some(s), ..Default::default() },
+                    tenant_tasks(s, ROUNDS).into_iter(),
+                )
+            })
+            .collect();
+        let mut out = svc.run();
+        assert_eq!(out.decoded(), seeds.len() * ROUNDS);
+        for (t, &sid) in sids.iter().enumerate() {
+            let interleaved: Vec<Vec<Matrix>> = out.rounds[sid]
+                .drain(..)
+                .map(|r| r.outcome.expect("interleaved round must decode").blocks)
+                .collect();
+            assert_eq!(
+                interleaved, solo[t],
+                "tenant {t} bits diverged from its solo run at \
+                 transport={} threads={threads}",
+                transport.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn tenants_scenario_digest_pins_across_transports_and_widths() {
+    let mut sc = Scenario::builtin("tenants").unwrap();
+    sc.rounds = 4; // keep the matrix cheap; same scenario for every combo
+    let mut reports = Vec::new();
+    for (transport, threads) in MATRIX {
+        let report = run_scenario(&sc, transport, threads).unwrap();
+        assert_eq!(report.tenants, 4);
+        assert_eq!(report.tenant_stats.len(), 4);
+        assert_eq!(report.rounds, 4 * sc.rounds, "rounds aggregates all tenants");
+        assert_eq!(report.recovery_hit_rate, 1.0, "fault-free soak decodes every round");
+        assert!(
+            report.occupancy_max <= sc.inflight,
+            "the global cap binds: {} > {}",
+            report.occupancy_max,
+            sc.inflight
+        );
+        for t in &report.tenant_stats {
+            assert_eq!(t.decoded, sc.rounds, "tenant {} must decode every round", t.tenant);
+            assert_eq!(t.failed, 0);
+            assert!(t.occupancy_max <= sc.tenant_inflight);
+        }
+        reports.push((transport.name(), threads, report));
+    }
+    let first = &reports[0].2;
+    for (transport, threads, report) in &reports {
+        assert_eq!(
+            report.digest, first.digest,
+            "digest diverged at transport={transport} threads={threads}"
+        );
+        for (t, stat) in report.tenant_stats.iter().enumerate() {
+            assert_eq!(
+                stat.digest, first.tenant_stats[t].digest,
+                "tenant {t} digest diverged at transport={transport} threads={threads}"
+            );
+        }
+    }
+    // Distinct seed streams: no two tenants may produce the same bits.
+    for t in 1..first.tenant_stats.len() {
+        assert_ne!(first.tenant_stats[0].digest, first.tenant_stats[t].digest);
+    }
+}
+
+#[test]
+fn greedy_tenant_cannot_starve_a_polite_one() {
+    // A greedy 16-wide lane with 3× the work shares the fleet with a
+    // polite 1-wide lane. Deficit round-robin must keep serving the
+    // polite lane throughout: its rounds interleave with the greedy
+    // stream instead of queueing behind it, and its tail latency stays
+    // within a small factor of the greedy lane's.
+    let mut master = Master::from_config(cluster(TransportKind::InProc, 0)).unwrap();
+    let mut svc = master.service(ServiceConfig { global_inflight: 16, speculate: false });
+    let greedy = svc.open_iter(
+        "greedy",
+        SessionOptions { inflight: 16, seed: Some(0x92EE_D000), ..Default::default() },
+        tenant_tasks(0x92EE_D000, 24).into_iter(),
+    );
+    let polite = svc.open_iter(
+        "polite",
+        SessionOptions { inflight: 1, seed: Some(0x9011_7E00), ..Default::default() },
+        tenant_tasks(0x9011_7E00, 8).into_iter(),
+    );
+    let out = svc.run();
+    assert_eq!(out.tenants[greedy].decoded, 24);
+    assert_eq!(out.tenants[polite].decoded, 8, "the polite lane must finish all its work");
+    // Starvation would push the polite lane's submissions past the
+    // greedy lane's 24: round ids are global and monotone in dispatch
+    // order, so fairness shows up as interleaved ids.
+    let polite_last = out.rounds[polite].iter().map(|r| r.round).max().unwrap();
+    assert!(
+        polite_last <= 24,
+        "polite lane starved: its last dispatch was global round {polite_last} of 32"
+    );
+    let (g99, p99) = (out.tenants[greedy].p99_ms, out.tenants[polite].p99_ms);
+    assert!(
+        p99 <= g99 * 4.0 + 50.0,
+        "polite p99 {p99:.2} ms vs greedy p99 {g99:.2} ms — tail blew out"
+    );
+}

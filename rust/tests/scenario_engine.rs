@@ -274,12 +274,14 @@ fn reports_serialize_with_digest_and_per_round_records() {
     let report = run_scenario(&sc, TransportKind::InProc, 1).unwrap();
     let json = report.to_json();
     for needle in [
-        "\"schema\": \"scenario-report-v3\"",
+        "\"schema\": \"scenario-report-v4\"",
         "\"scenario\": \"baseline\"",
         "\"digest\": \"",
         "\"per_round\": [",
         "\"lifecycle\": {",
         "\"stream\": {\"inflight\": 1, \"speculate\": false",
+        "\"occupancy_mean\": ",
+        "\"tenants\": {\"count\": 1, \"inflight\": 1, \"per_tenant\": []}",
         "\"speculation\": {\"redispatched\": 0, \"recovered\": 0, \"wasted\": 0}",
         "\"verify\": {\"checked\": ",
         "\"forged_detected\": 0, \"quarantined\": 0, \"rehabilitated\": 0}",
