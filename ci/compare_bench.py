@@ -17,6 +17,10 @@ Gated metrics (higher is better):
     aggregate rounds/s of 4 concurrent tenants through one fleet — a
     serving-front-end scheduling regression shows up here even when the
     per-kernel numbers hold
+  * weighted fairness (``saturation.weighted`` block, when present):
+    proportionality of a 2:1-weighted lane pair's bandwidth split
+    (1.0 = perfect) — a broken deficit-round-robin weighting drags it
+    toward the 0.75 an equal split scores
 
 The default tolerance is 25% — smoke benches on shared CI runners are
 noisy, so the gate only catches real regressions (a botched GEMM kernel,
@@ -59,6 +63,12 @@ def metrics(bench: dict) -> dict:
     saturation = bench.get("saturation") or {}
     if "rounds_per_s" in saturation:
         out["saturation_rounds_per_s"] = saturation["rounds_per_s"]
+    weighted = saturation.get("weighted") or {}
+    if "fairness" in weighted:
+        # Proportionality of the 2:1 weighted split (1.0 = perfect).
+        # Higher is better like every other gated metric: a weighted-
+        # scheduler regression drags the split toward equal shares.
+        out["saturation_weighted_fairness"] = weighted["fairness"]
     return out
 
 

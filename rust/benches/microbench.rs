@@ -231,6 +231,12 @@ fn main() {
         sat.rounds_per_s / sat.single_rounds_per_s,
         sat.p99_ms.iter().map(|p| (p * 100.0).round() / 100.0).collect::<Vec<_>>(),
     );
+    println!(
+        "weighted 2:1 pair under a 4-wide cap: heavy lane took {:.1}% of the merged \
+         dispatch stream (ideal 66.7%, fairness {:.3})",
+        sat.weighted_heavy_share * 100.0,
+        sat.weighted_fairness,
+    );
 
     // ---- JSON artifact ---------------------------------------------------
     if let Some(path) = json_path {
@@ -277,7 +283,8 @@ fn main() {
              \"simd\": {simd_json},\n  \
              \"saturation\": {{\"tenants\": {}, \"rounds\": {}, \"global_inflight\": 16, \
              \"tenant_inflight\": 4, \"rounds_per_s\": {:.3}, \"single_rounds_per_s\": {:.3}, \
-             \"speedup\": {:.3}, \"p99_ms\": [{}], \"p99_worst_ms\": {:.3}}}\n}}\n",
+             \"speedup\": {:.3}, \"p99_ms\": [{}], \"p99_worst_ms\": {:.3}, \
+             \"weighted\": {{\"weights\": [2, 1], \"heavy_share\": {:.4}, \"fairness\": {:.4}}}}}\n}}\n",
             gemm_json.join(", "),
             seal.mean() * 1e3,
             open.mean() * 1e3,
@@ -295,6 +302,8 @@ fn main() {
             sat.rounds_per_s / sat.single_rounds_per_s,
             sat.p99_ms.iter().map(|p| format!("{p:.3}")).collect::<Vec<_>>().join(", "),
             p99_worst,
+            sat.weighted_heavy_share,
+            sat.weighted_fairness,
         );
         std::fs::write(&path, &json).expect("write bench JSON");
         println!("\nwrote {path}");
@@ -452,6 +461,13 @@ struct SaturationRow {
     rounds_per_s: f64,
     single_rounds_per_s: f64,
     p99_ms: Vec<f64>,
+    /// Measured dispatch-bandwidth share of a weight-2 lane racing a
+    /// weight-1 lane (ideal: 2/3).
+    weighted_heavy_share: f64,
+    /// Proportionality of that split: `min(share, ideal) /
+    /// max(share, ideal)` — 1.0 is a perfect 2:1 split, and a broken
+    /// weighted scheduler drags it toward 0.5 (equal split) or below.
+    weighted_fairness: f64,
 }
 
 /// Section 7: the same total round count through one live 8-worker
@@ -491,7 +507,7 @@ fn bench_saturation(smoke: bool) -> SaturationRow {
     assert!(single.rounds.iter().all(|r| r.outcome.is_ok()));
     drop(master);
 
-    let mut master = Master::from_config(cfg).expect("saturation fleet");
+    let mut master = Master::from_config(cfg.clone()).expect("saturation fleet");
     let mut svc = master.service(ServiceConfig { global_inflight: 16, speculate: false });
     for t in 0..tenants {
         let seed = derive_seed(0x5A71, t as u64);
@@ -504,12 +520,39 @@ fn bench_saturation(smoke: bool) -> SaturationRow {
     let out = svc.run();
     assert_eq!(out.decoded(), total, "every tenant round must decode");
 
+    // Weighted leg: a 2:1 pair of saturated lanes under a tight global
+    // cap. Round ids are global and monotone in dispatch order, so the
+    // heavy lane's last dispatch measures its share of the merged
+    // stream while both lanes were busy (ideal 2/3).
+    let mut master = Master::from_config(cfg).expect("saturation fleet");
+    let mut svc = master.service(ServiceConfig { global_inflight: 4, speculate: false });
+    let per_lane = total / 2;
+    let heavy = svc.open_iter(
+        "heavy",
+        SessionOptions { inflight: 4, weight: 2, seed: Some(0x5A72), ..Default::default() },
+        tasks(0x5A72, per_lane).into_iter(),
+    );
+    svc.open_iter(
+        "light",
+        SessionOptions { inflight: 4, weight: 1, seed: Some(0x5A73), ..Default::default() },
+        tasks(0x5A73, per_lane).into_iter(),
+    );
+    let weighted = svc.run();
+    assert_eq!(weighted.decoded(), total, "every weighted round must decode");
+    let heavy_last =
+        weighted.rounds[heavy].iter().map(|r| r.round).max().unwrap_or(1).max(1) as f64;
+    let heavy_share = per_lane as f64 / heavy_last;
+    let ideal = 2.0 / 3.0;
+    let fairness = (heavy_share.min(ideal)) / (heavy_share.max(ideal));
+
     SaturationRow {
         tenants,
         rounds: total,
         rounds_per_s: out.rounds_per_s,
         single_rounds_per_s: single.rounds_per_s,
         p99_ms: out.tenants.iter().map(|t| t.p99_ms).collect(),
+        weighted_heavy_share: heavy_share,
+        weighted_fairness: fairness,
     }
 }
 

@@ -37,7 +37,7 @@ use crate::matrix::Matrix;
 use crate::metrics::{names, MetricsRegistry};
 use crate::rng::{derive_seed, rng_from_seed, Rng};
 use crate::runtime::{Executor, WorkerOp};
-use crate::sim::{CollusionPool, DelayModel, EavesdropLog, FaultPlan};
+use crate::sim::{CollusionPool, DelayModel, EavesdropLog, FaultCoords, FaultKey, FaultPlan};
 use crate::transport::LoadBook;
 use crate::wire::{self, MsgKind, WireMessage};
 use std::collections::{HashMap, HashSet};
@@ -330,6 +330,7 @@ impl MasterBuilder {
             Arc::clone(&commit_book),
         );
         let speculate = self.cfg.speculate;
+        let workers = self.cfg.workers;
         Ok(Master {
             cfg: self.cfg,
             scheme,
@@ -340,6 +341,9 @@ impl MasterBuilder {
             faults: self.faults,
             delays,
             round: 0,
+            served: vec![0; workers],
+            pending_respawns: Vec::new(),
+            round_lanes: HashMap::new(),
             rng,
             registry,
             directory,
@@ -610,6 +614,31 @@ pub struct Master {
     faults: Option<Arc<FaultPlan>>,
     delays: DelayModel,
     round: u64,
+    /// Wall rounds served per worker slot, 1-based and counting the
+    /// order being dispatched. Ticks on *directory aliveness at
+    /// dispatch* — exactly the workers the seal fan-out produced
+    /// payloads for — never on send success, which can differ between
+    /// fabrics (a TCP send to a corpse may buffer where an in-process
+    /// send fails). This is the `served` fault coordinate: a respawned
+    /// worker resumes its own service clock where it left off instead
+    /// of inheriting whatever the global round counter reached while it
+    /// was dead (DESIGN.md §13). Speculative orders carry the
+    /// executor's current count without ticking it — proxy work is
+    /// extra load, not a wall round of its own.
+    served: Vec<u64>,
+    /// Scheduled respawns booked under the `served`/`lane` fault keys:
+    /// `(worker, due global round)`. Under the legacy `global` key the
+    /// plan itself answers [`FaultPlan::respawns_due`]; under the
+    /// re-keyed modes a crash fires on the worker's served clock at
+    /// whatever global round that happens to be, so the due round is
+    /// only known when the crash is booked.
+    pending_respawns: Vec<(usize, u64)>,
+    /// The session lane each in-flight round was submitted under:
+    /// `(lane id, lane-local round)`, `(0, round)` on single-tenant
+    /// paths. Speculative re-dispatch reads the original coordinates
+    /// here so a proxy's order carries the same fault coordinates the
+    /// owner's did. Cleaned at retirement.
+    round_lanes: HashMap<u64, (u32, u64)>,
     rng: Rng,
     /// Shared with the collector shards and every live round handle.
     registry: Arc<RoundRegistry>,
@@ -732,24 +761,76 @@ impl Master {
         self.registry.note_lost(round, w);
     }
 
+    /// The active fault key — `Global` when no plan is attached (the
+    /// legacy bits by construction).
+    fn fault_key(&self) -> FaultKey {
+        self.faults.as_deref().map_or(FaultKey::Global, FaultPlan::key)
+    }
+
+    /// The delay-model round key for worker `w`: the global round under
+    /// the legacy `global` fault key (bit-identical jitter streams), the
+    /// worker's wall-rounds-served count otherwise — a respawned
+    /// worker's jitter stream resumes from its own service history
+    /// instead of jumping to wherever the global clock got to
+    /// (DESIGN.md §13).
+    fn delay_key(&self, w: usize, round: u64) -> u64 {
+        match self.fault_key() {
+            FaultKey::Global => round,
+            FaultKey::Served | FaultKey::Lane => self.served[w],
+        }
+    }
+
+    /// The lane coordinates `round` was submitted under — `(0, round)`
+    /// for rounds that predate the lane map or came through the
+    /// single-tenant path.
+    fn round_coords(&self, round: u64) -> (u32, u64) {
+        self.round_lanes.get(&round).copied().unwrap_or((0, round))
+    }
+
+    /// The full fault coordinates of worker `w`'s order for `round`:
+    /// the same four numbers the dispatched [`WorkOrder`] carries, so
+    /// master-side pre-booking and the worker loop evaluate the plan on
+    /// identical inputs by construction.
+    fn fault_coords(&self, w: usize, round: u64, lane: u32, lane_round: u64) -> FaultCoords {
+        FaultCoords { round, served: self.served[w], lane, lane_round }
+    }
+
     /// Book this round's scheduled faults, mirroring what the workers
     /// will actually do with the same plan. Crash state is recorded even
     /// when the round itself is being abandoned (`note_registry =
     /// false`): the worker received its order and died, whatever became
     /// of the round — skipping the booking would leave it `Alive`
     /// forever and silently cancel its scheduled respawn.
-    fn book_scheduled_faults(&mut self, round: u64, sent: &[usize], note_registry: bool) {
+    fn book_scheduled_faults(
+        &mut self,
+        round: u64,
+        lane: u32,
+        lane_round: u64,
+        sent: &[usize],
+        note_registry: bool,
+    ) {
         let Some(plan) = self.faults.clone() else { return };
         for &w in sent {
-            if plan.crashes_at(w, round) {
+            let coords = self.fault_coords(w, round, lane, lane_round);
+            if let Some(ev) = plan.crash_hit(w, &coords) {
                 self.directory.mark_crashed(w);
                 self.metrics.inc(names::WORKER_CRASHES);
+                // Under the re-keyed modes the plan cannot answer
+                // "whose respawn is due at global round r" — the crash
+                // fired on the worker's served clock at whatever global
+                // round that happened to be. Book the respawn here,
+                // due `respawn_after` submits from now.
+                if plan.key() != FaultKey::Global {
+                    if let Some(after) = ev.respawn_after {
+                        self.pending_respawns.push((w, round + after));
+                    }
+                }
                 if note_registry {
                     self.note_result_lost(round, w);
                 }
-            } else if plan.corrupts(w, round) && note_registry {
+            } else if plan.corrupts(w, &coords) && note_registry {
                 self.note_result_lost(round, w);
-            } else if plan.forges_at(w, round) && note_registry {
+            } else if plan.forges_at(w, &coords) && note_registry {
                 // A planned forgery is booked like a transit loss: the
                 // collector's commitment check will drop the forged
                 // frame, so the share must be re-dispatched to an honest
@@ -850,7 +931,23 @@ impl Master {
     pub(crate) fn submit_seeded(
         &mut self,
         task: CodedTask,
+        lane_rng: Option<&mut Rng>,
+    ) -> anyhow::Result<RoundHandle> {
+        self.submit_in_lane(task, lane_rng, 0, 0)
+    }
+
+    /// [`submit_seeded`](Master::submit_seeded) with explicit fault
+    /// coordinates: `lane` is the session lane id and `lane_round` its
+    /// 1-based lane-local round counter — the numbers the dispatched
+    /// orders carry so the fault plan's `lane` key draws per-lane
+    /// streams (DESIGN.md §13). `lane_round == 0` is the single-tenant
+    /// sentinel: the lane-local round *is* the global round.
+    pub(crate) fn submit_in_lane(
+        &mut self,
+        task: CodedTask,
         mut lane_rng: Option<&mut Rng>,
+        lane: u32,
+        lane_round: u64,
     ) -> anyhow::Result<RoundHandle> {
         if !self.scheme.supports(&task) {
             anyhow::bail!(
@@ -864,10 +961,28 @@ impl Master {
         self.sweep_retired();
         self.round += 1;
         let round = self.round;
+        let lane_round = if lane_round == 0 { round } else { lane_round };
         // Scheduled respawns land before the round's orders go out, so a
-        // rejoined incarnation serves this round with its new key.
+        // rejoined incarnation serves this round with its new key. The
+        // legacy key asks the plan (crash round + respawn_after is a
+        // pure function of the global clock); the re-keyed modes drain
+        // the ledger the crash bookings posted.
         if let Some(plan) = self.faults.clone() {
-            for w in plan.respawns_due(round) {
+            let due: Vec<usize> = if plan.key() == FaultKey::Global {
+                plan.respawns_due(round)
+            } else {
+                let mut due = Vec::new();
+                self.pending_respawns.retain(|&(w, at)| {
+                    if at <= round {
+                        due.push(w);
+                        false
+                    } else {
+                        true
+                    }
+                });
+                due
+            };
+            for w in due {
                 if self.directory.state(w) == WorkerState::Crashed {
                     if let Err(e) = self.respawn_now(w, false) {
                         eprintln!("master: scheduled respawn of worker {w} failed: {e}");
@@ -996,12 +1111,22 @@ impl Master {
             let _t = metrics.time_phase("phase.dispatch");
             for (w, payloads) in sealed.into_iter().enumerate() {
                 let Some(payloads) = payloads else { continue };
+                // The served clock ticks on the aliveness the seal
+                // fan-out used (payloads exist ⇔ directory said alive),
+                // before the send — whether the frame then lands is a
+                // transport matter the fault coordinates must not
+                // depend on.
+                self.served[w] += 1;
+                let delay_round = self.delay_key(w, round);
                 let order = WorkOrder {
                     round,
                     worker: w,
+                    lane,
+                    lane_round,
+                    served: self.served[w],
                     op: op.clone(),
                     payloads,
-                    delay: self.delays.service_delay(w, round),
+                    delay: self.delays.service_delay(w, delay_round),
                     commitment: commitments[w],
                 };
                 match self.pool.dispatch(&order) {
@@ -1025,6 +1150,7 @@ impl Master {
         }
         let dispatched = sent.len();
         self.round_targets.insert(round, sent.clone());
+        self.round_lanes.insert(round, (lane, lane_round));
 
         // The wait policy over the orders that actually went out.
         let (wait_for, min_required) = match threshold {
@@ -1035,7 +1161,7 @@ impl Master {
                     // The abandoned round's orders are out: crashes
                     // scheduled on it still happen worker-side and must
                     // still be booked.
-                    self.book_scheduled_faults(round, &sent, false);
+                    self.book_scheduled_faults(round, lane, lane_round, &sent, false);
                     anyhow::bail!(
                         "round {round}: only {dispatched} live workers but {} needs exactly {k}",
                         self.scheme.kind().name()
@@ -1056,7 +1182,7 @@ impl Master {
                 if dispatched < min {
                     self.registry.abandon(round);
                     self.settle_round(round);
-                    self.book_scheduled_faults(round, &sent, false);
+                    self.book_scheduled_faults(round, lane, lane_round, &sent, false);
                     anyhow::bail!(
                         "round {round}: only {dispatched} live workers, below the flexible minimum {min}"
                     );
@@ -1076,7 +1202,7 @@ impl Master {
         // result is lost in transit while the worker lives on. Either
         // way the round's pending set shrinks now, so it degrades or
         // fails fast instead of riding the deadline.
-        self.book_scheduled_faults(round, &sent, true);
+        self.book_scheduled_faults(round, lane, lane_round, &sent, true);
         // Reclaim what the bookings just wrote off — for this round and
         // any older in-flight round a crash straddled.
         self.speculation_pass();
@@ -1331,11 +1457,18 @@ impl Master {
         let alive = self.directory.alive_mask();
         let suspected = self.directory.suspected_mask();
         let plan = self.faults.as_deref();
+        let (lane, lane_round) = self.round_coords(round);
         self.load.least_loaded((0..alive.len()).filter(|&w| {
             alive[w]
                 && w != share
                 && !suspected[w]
-                && plan.map_or(true, |p| !p.corrupts(w, round) && !p.forges_at(w, round))
+                && plan.map_or(true, |p| {
+                    // The coordinates the speculative order would carry
+                    // for this candidate — the executor's *current*
+                    // served count, the round's original lane pair.
+                    let coords = self.fault_coords(w, round, lane, lane_round);
+                    !p.corrupts(w, &coords) && !p.forges_at(w, &coords)
+                })
         }))
     }
 
@@ -1374,12 +1507,20 @@ impl Master {
                 )),
             })
             .collect();
+        // The proxy's order keeps the round's original lane pair (the
+        // share's draw identity) and carries the executor's current
+        // served count *without* ticking it — proxy work is extra load,
+        // not a wall round.
+        let (lane, lane_round) = self.round_coords(round);
         let order = WorkOrder {
             round,
             worker: share,
+            lane,
+            lane_round,
+            served: self.served[executor],
             op,
             payloads,
-            delay: self.delays.service_delay(executor, round),
+            delay: self.delays.service_delay(executor, self.delay_key(executor, round)),
             commitment,
         };
         match self.pool.dispatch_to(executor, &order) {
@@ -1435,6 +1576,7 @@ impl Master {
             self.load.settle(&remainder);
         }
         self.spec_rounds.remove(&round);
+        self.round_lanes.remove(&round);
         self.commit_book.lock().unwrap().remove(&round);
         self.forge_booked.remove(&round);
     }

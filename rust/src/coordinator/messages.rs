@@ -118,6 +118,20 @@ pub struct WorkOrder {
     pub round: u64,
     /// Destination worker index.
     pub worker: usize,
+    /// Session lane the round belongs to (wire v4; 0 on single-tenant
+    /// paths). Together with `lane_round` and `served` these are the
+    /// [`FaultCoords`](crate::sim::FaultCoords) the destination's fault
+    /// plan keys on: the master fills them at dispatch, so its
+    /// pre-booking and the worker's own evaluation read identical
+    /// numbers whatever the plan's key (DESIGN.md §13).
+    pub lane: u32,
+    /// Lane-local round index, 1-based (wire v4; equals `round` on
+    /// single-tenant paths).
+    pub lane_round: u64,
+    /// Wall rounds served by the order's *executor* slot, 1-based and
+    /// counting this order (wire v4). For a speculative re-dispatch
+    /// this is the executor's current count, not the share owner's.
+    pub served: u64,
     /// The operation to apply.
     pub op: WorkerOp,
     /// Operand payloads (1, or 2 for pair ops).

@@ -46,7 +46,7 @@ use crate::matrix::Matrix;
 use crate::metrics::{names, MetricsRegistry};
 use crate::rng::{derive_seed, rng_from_seed};
 use crate::runtime::Executor;
-use crate::sim::{CollusionPool, FaultPlan};
+use crate::sim::{CollusionPool, FaultCoords, FaultPlan};
 use crate::transport::{self, LoadBook, Transport, TransportError, WorkerLink};
 use crate::wire::{self, WireMessage};
 use std::sync::mpsc::Receiver;
@@ -408,13 +408,27 @@ fn worker_loop(
             }
         };
 
+        // The fault coordinates ride the order (wire v4): the worker
+        // evaluates the plan on exactly the numbers the master
+        // pre-booked with — no local counters a respawn would reset,
+        // no divergence between fabrics. Zeroed fields are the
+        // hand-made-order fallback (tests, external drivers): the
+        // coordinate collapses to the global round, which is also what
+        // the legacy `global` key reads.
+        let coords = FaultCoords {
+            round: order.round,
+            served: if order.served == 0 { order.round } else { order.served },
+            lane: order.lane,
+            lane_round: if order.lane_round == 0 { order.round } else { order.lane_round },
+        };
+
         // Scheduled crash: the order arrived, the reply never will. The
         // master runs the same plan and books the round as degraded.
         // Crashing *here* — after draining every earlier order FIFO —
         // is what keeps the set of results this incarnation did send
         // independent of crash-signal timing.
         if let Some(plan) = &faults {
-            if plan.crashes_at(w, order.round) {
+            if plan.crashes_at(w, &coords) {
                 if park_on_crash {
                     park_forever();
                 }
@@ -475,7 +489,7 @@ fn worker_loop(
         // (DESIGN.md §11). The tamper is keyed on the *executor*, so a
         // speculative re-dispatch of this share to an honest worker
         // produces a clean echo and the round recovers.
-        let forged = faults.as_ref().is_some_and(|plan| plan.forges_at(w, round));
+        let forged = faults.as_ref().is_some_and(|plan| plan.forges_at(w, &coords));
         if forged {
             out = out.scale(-1.375);
         }
@@ -498,7 +512,7 @@ fn worker_loop(
         // Scheduled wire corruption: flip one body byte so the frame
         // fails its CRC at the master — the result is lost in transit,
         // deterministically.
-        if faults.as_ref().is_some_and(|plan| plan.corrupts(w, round)) {
+        if faults.as_ref().is_some_and(|plan| plan.corrupts(w, &coords)) {
             frame_buf[wire::HEADER_LEN] ^= 0xA5;
         }
         if link.send(&frame_buf).is_err() {
@@ -556,6 +570,9 @@ mod tests {
         WorkOrder {
             round,
             worker,
+            lane: 0,
+            lane_round: round,
+            served: round,
             op: WorkerOp::Identity,
             payloads: vec![WirePayload::Plain(m)],
             delay: Duration::ZERO,
@@ -594,6 +611,9 @@ mod tests {
         pool.dispatch(&WorkOrder {
             round: 9,
             worker: 0,
+            lane: 0,
+            lane_round: 9,
+            served: 9,
             op: WorkerOp::Identity,
             payloads: vec![WirePayload::Sealed(sealed)],
             delay: Duration::ZERO,
@@ -633,6 +653,9 @@ mod tests {
         pool.dispatch(&WorkOrder {
             round: 1,
             worker: 0,
+            lane: 0,
+            lane_round: 1,
+            served: 1,
             op: WorkerOp::Identity,
             payloads: vec![WirePayload::Plain(Matrix::ones(1, 1))],
             delay: Duration::from_millis(150),

@@ -278,10 +278,25 @@ fn pull_ready(lane: &mut Lane) {
 /// Submit one task on a lane. A successful submit joins the lane's
 /// window; a failed submit is a completed (failed) round, returned for
 /// delivery.
-fn submit_task(master: &mut Master, lane: &mut Lane, task: CodedTask) -> Option<SessionRound> {
+///
+/// Seeded lanes submit with their fault coordinates — `(lane id,
+/// 1-based lane-local round)` — so a fault plan keyed on `lane`
+/// (DESIGN.md §13) draws per-lane streams invariant under tenant
+/// interleaving. Unseeded (compatibility) lanes pass the `(0, 0)`
+/// sentinel: the lane-local round *is* the global round, which keeps
+/// the single-tenant wrappers' orders carrying exactly the legacy
+/// coordinates.
+fn submit_task(
+    master: &mut Master,
+    sid: SessionId,
+    lane: &mut Lane,
+    task: CodedTask,
+) -> Option<SessionRound> {
     let index = lane.submitted;
     lane.submitted += 1;
-    match master.submit_seeded(task, lane.rng.as_mut()) {
+    let (lane_id, lane_round) =
+        if lane.rng.is_some() { (sid as u32, index as u64 + 1) } else { (0, 0) };
+    match master.submit_in_lane(task, lane.rng.as_mut(), lane_id, lane_round) {
         Ok(handle) => {
             let round = handle.round_id();
             lane.window.push_back(InFlight { index, round, handle });
@@ -484,6 +499,13 @@ impl<'m> Service<'m> {
             // Carry at most one unused quantum: enough to realize the
             // weight ratio, never enough to burst past it.
             lane.deficit = (lane.deficit + quantum).min(2.0 * quantum);
+            // Refusal accounting invariant (shared with `round`): a
+            // lane counts at most ONE refusal per admission attempt —
+            // here, per sweep — no matter how many submissions its
+            // deficit would have allowed or how often the cap is
+            // re-checked. `lane.refused` and the TENANT_REFUSED metric
+            // move in lock step (the flag below gates both), so the
+            // two never drift into a double count.
             let mut refused_this_sweep = false;
             while lane.deficit >= 1.0 && lane.next.is_some() {
                 if lane.window.len() >= lane.opts.inflight.max(1) {
@@ -498,7 +520,7 @@ impl<'m> Service<'m> {
                 }
                 let task = lane.next.take().expect("checked is_some");
                 lane.deficit -= 1.0;
-                match submit_task(&mut *self.master, lane, task) {
+                match submit_task(&mut *self.master, li, lane, task) {
                     None => outstanding += 1,
                     Some(r) => failed.push((li, r)),
                 }
@@ -565,6 +587,10 @@ impl<'m> Service<'m> {
     /// trainer's gradient products — where lookahead is impossible and
     /// memory must stay flat.
     pub fn round(&mut self, sid: SessionId, task: CodedTask) -> anyhow::Result<RoundOutcome> {
+        // Same refusal invariant as `sweep`: this call is ONE admission
+        // attempt, so it books at most one refusal even when the
+        // admission loop has to wait out several older rounds (each
+        // iteration re-checks the cap) before space opens.
         let mut counted_refusal = false;
         loop {
             let lane = &self.lanes[sid];
@@ -583,7 +609,7 @@ impl<'m> Service<'m> {
             let r = self.wait_front(li);
             self.deliver(li, r);
         }
-        if let Some(r) = submit_task(&mut *self.master, &mut self.lanes[sid], task) {
+        if let Some(r) = submit_task(&mut *self.master, sid, &mut self.lanes[sid], task) {
             self.completed += 1;
             self.master.metrics().inc(names::TENANT_ROUNDS);
             return r.outcome;
@@ -787,6 +813,33 @@ mod tests {
         assert!(
             out.tenants[a].refused + out.tenants[b].refused > 0,
             "two 4-wide lanes into a 4-wide fleet must hit admission control"
+        );
+    }
+
+    #[test]
+    fn refusals_count_admission_attempts_not_recheck_iterations() {
+        // One lane, weight 2, window 2, two tasks, into a global cap of
+        // 1: every sweep that finds the cap full while the lane still
+        // has work and window space books exactly one refusal — never
+        // one per deficit credit, never one per re-check. The schedule
+        // is deterministic: sweep 1 submits t1 and is refused t2;
+        // sweep 2 is refused t2 again (t1 still in flight), the
+        // scheduler then retires t1; sweep 3 submits t2 unrefused.
+        let mut master = Master::from_config(cfg()).unwrap();
+        let mut svc = master.service(ServiceConfig { global_inflight: 1, speculate: false });
+        let opts =
+            SessionOptions { inflight: 2, weight: 2, seed: Some(9), ..Default::default() };
+        let sid = svc.open_iter("pushy", opts, tasks(2, 401).into_iter());
+        let out = svc.run();
+        assert_eq!(out.decoded(), 2, "admission defers work, never drops it");
+        assert_eq!(
+            out.tenants[sid].refused, 2,
+            "one refusal per cap-blocked sweep: a weight-2 deficit must not double-book"
+        );
+        assert_eq!(
+            master.metrics().get(names::TENANT_REFUSED),
+            2,
+            "the metric moves in lock step with the per-lane counter"
         );
     }
 

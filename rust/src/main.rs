@@ -30,7 +30,7 @@ use spacdc::dl::{train, TrainerOptions};
 use spacdc::matrix::{gram, split_rows, Matrix};
 use spacdc::rng::rng_from_seed;
 use spacdc::runtime::{Executor, RuntimeService, WorkerOp};
-use spacdc::sim::{parse_crash, run_scenario_with, FaultPlan, Scenario};
+use spacdc::sim::{parse_crash, run_scenario_with, FaultKey, FaultPlan, Scenario};
 use spacdc::transport::WorkerLink;
 use std::path::Path;
 use std::sync::Arc;
@@ -78,6 +78,7 @@ fn worker_specs() -> Vec<ArgSpec> {
         ArgSpec::opt("forgers", "", "forger worker ids (comma-joined)"),
         ArgSpec::opt("forge-rate", "0", "forgery probability per (forger, round)"),
         ArgSpec::opt("fault-seed", "0", "fault-plan seed (must match the master's)"),
+        ArgSpec::opt("fault-key", "global", "fault keying: global | served | lane"),
         ArgSpec::flag("help", "show usage"),
     ]
 }
@@ -368,12 +369,15 @@ fn cmd_worker(args: &[String]) -> anyhow::Result<()> {
         .map(|t| t.parse().map_err(|e| anyhow::anyhow!("--forgers: bad id {t:?}: {e}")))
         .collect::<Result<_, _>>()?;
     let forge_rate = parsed.get_f64("forge-rate");
+    let fault_key = FaultKey::from_token(parsed.get_str("fault-key"))
+        .ok_or_else(|| anyhow::anyhow!("--fault-key: expected global | served | lane"))?;
     let faults = if crashes.is_empty() && corrupt_rate <= 0.0 && forge_rate <= 0.0 {
         None
     } else {
         Some(Arc::new(
             FaultPlan::new(crashes, corrupt_rate, parsed.get_u64("fault-seed"))
-                .with_forgers(forgers, forge_rate),
+                .with_forgers(forgers, forge_rate)
+                .with_key(fault_key),
         ))
     };
 

@@ -15,5 +15,7 @@ pub use adversary::{correlation as correlation_of, CollusionPool, EavesdropLog, 
 pub use runner::{
     run_scenario, run_scenario_with, RoundRecord, RoundStatus, ScenarioReport, TenantStat,
 };
-pub use scenario::{parse_crash, CrashEvent, FaultPlan, Scenario, ScenarioOp};
+pub use scenario::{
+    parse_crash, CrashEvent, FaultCoords, FaultKey, FaultPlan, Scenario, ScenarioOp,
+};
 pub use straggler::{fresh_round_model, DelayModel, WorkerProfile};

@@ -17,13 +17,19 @@
 //! ([`Master::service`](crate::coordinator::Master::service)), each fed
 //! from its own iterator with its own seed stream
 //! (`derive_seed(seed, 0x7E4A_0000 ^ t)`), and reports per-tenant
-//! stats *and* a per-tenant digest. Because every random choice a
-//! tenant's rounds consume comes from its lane seed, and a validated
-//! multi-tenant scenario is fault-free and straggler-free (decode
-//! waits for all dispatched workers), each per-tenant digest is a pure
-//! function of that tenant alone — bit-identical to the tenant's solo
-//! run and invariant across transports, thread widths, the global cap,
-//! and however the deficit-round-robin dispatcher interleaves lanes.
+//! stats *and* a per-tenant digest. Every random choice a tenant's
+//! rounds consume comes from its lane seed, and since the fault plan
+//! re-keyed onto stable identities (DESIGN.md §13) a multi-tenant
+//! scenario may also carry faults: corruption/forgery draws key on the
+//! tenant's own `(lane, lane_round)` stream and crashes/jitter on
+//! wall-rounds-served, so a tenant's adversarial exposure does not
+//! shift when the deficit-round-robin dispatcher re-interleaves lanes.
+//! When the scenario keeps the decode set round-invariant (S = 0 plus
+//! next-round respawns, with speculation re-covering every written-off
+//! share — the `tenants-faults` builtin's construction), each
+//! per-tenant digest is a pure function of that tenant alone —
+//! invariant across transports, thread widths, the global cap, and
+//! lane interleaving.
 //!
 //! **The digest.** CI pins one hex digest per scenario across the whole
 //! `{inproc, tcp} × {threads 1, 8} × inflight {1, 4, 16}` execution
@@ -129,8 +135,11 @@ pub struct TenantStat {
     pub rounds: u64,
     /// Rounds that decoded.
     pub decoded: u64,
-    /// Decoded rounds that degraded (always 0 — a validated tenants
-    /// scenario is fault-free; reported for schema completeness).
+    /// Decoded rounds that degraded. 0 whenever the scenario keeps the
+    /// decode set round-invariant (fault-free, or faulted with
+    /// speculation re-covering every written-off share, as in
+    /// `tenants-faults`); nonzero means some of this tenant's rounds
+    /// decoded short.
     pub degraded: u64,
     /// Rounds that failed.
     pub failed: u64,
@@ -691,9 +700,11 @@ fn run_multi_tenant(
     }
     let bytes_tx = metrics.get(names::BYTES_TX);
     let bytes_rx = metrics.get(names::BYTES_RX);
-    // Transport totals stay digest material: dispatch sets and decode
-    // sets are schedule-pure (fault-free, wait-for-all), so the byte
-    // totals cannot move with interleaving.
+    // Transport totals stay digest material: dispatch sets are
+    // schedule-pure, fault bookings key on identities that do not move
+    // with interleaving (lane streams and wall-rounds-served), and
+    // speculative re-dispatch resends a retained payload of fixed
+    // size — so the byte totals cannot move with interleaving.
     digest.u64(bytes_tx);
     digest.u64(bytes_rx);
     digest.u64(out.recovered);

@@ -29,6 +29,17 @@
 //! questions to keep its partial-failure accounting in lock-step with
 //! what the workers will actually do — both sides read one plan, so
 //! neither needs to observe the other.
+//!
+//! Since PR 10 the plan's queries key on a [`FaultKey`] identity
+//! (DESIGN.md §13) instead of the global round id alone: `served` keys
+//! every class on `(worker, wall_rounds_served)` and `lane` keys the
+//! corruption/forgery draws on `(worker, lane, lane_local_round)` — so
+//! fault schedules compose with the multi-tenant serving front end,
+//! where lane interleaving reassigns global round ids. The coordinates
+//! ride each [`WorkOrder`](crate::coordinator::WorkOrder), so the
+//! master's pre-booking and the worker's evaluation read the same
+//! numbers by construction. `fault_key = "global"` reproduces the
+//! pre-PR-10 draws bit for bit.
 
 use crate::config::{parse_str, ConfigError, DelayConfig, SchemeKind, TransportSecurity};
 use crate::rng::{derive_seed, rng_from_seed};
@@ -39,12 +50,90 @@ pub struct CrashEvent {
     /// Which worker crashes.
     pub worker: usize,
     /// The round *mid-which* it crashes: the worker receives that
-    /// round's order and vanishes without replying.
+    /// round's order and vanishes without replying. Under
+    /// [`FaultKey::Global`] this is the global round id; under the
+    /// `served`/`lane` keys it is the worker's wall-rounds-served count
+    /// (its Nth serviced order) — identical numbers for any
+    /// single-tenant soak where the worker was alive throughout.
     pub round: u64,
     /// Respawn `Some(d)` rounds after the crash (the new incarnation
     /// rejoins before round `round + d` is submitted); `None` = stays
-    /// dead.
+    /// dead. Under the `served`/`lane` keys `d` counts *global* rounds
+    /// from the round the crash actually booked on (the master keeps a
+    /// due ledger), so the dead window has the same length either way.
     pub respawn_after: Option<u64>,
+}
+
+/// Which identity a [`FaultPlan`]'s queries key on (DESIGN.md §13).
+///
+/// `Global` is the pre-PR-10 behaviour: every class keys on the global
+/// round id, which only makes sense when one tenant owns the whole
+/// round sequence. `Served` keys every class on `(worker,
+/// wall_rounds_served)` — stable under lane interleaving because every
+/// submitted round dispatches one share to every live worker. `Lane`
+/// additionally keys the corruption/forgery draws on `(worker, lane,
+/// lane_local_round)`, making a tenant's adversarial exposure a pure
+/// function of its own stream.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKey {
+    /// Legacy: everything keys on the global round id.
+    Global,
+    /// Crashes, respawns, straggler floors, corruption, and forgery all
+    /// key on `(worker, wall_rounds_served)`.
+    Served,
+    /// Crashes/respawns/straggler floors key on `(worker,
+    /// wall_rounds_served)`; corruption/forgery draws key on `(worker,
+    /// lane, lane_local_round)`.
+    Lane,
+}
+
+impl FaultKey {
+    /// Parse the `faults.key` / `--fault-key` token.
+    pub fn from_token(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "global" => Some(Self::Global),
+            "served" => Some(Self::Served),
+            "lane" => Some(Self::Lane),
+            _ => None,
+        }
+    }
+
+    /// Canonical token.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Global => "global",
+            Self::Served => "served",
+            Self::Lane => "lane",
+        }
+    }
+}
+
+/// The per-order coordinates a fault draw may key on. The master fills
+/// these at dispatch (it owns the served counters and the lane map) and
+/// ships them on the [`WorkOrder`](crate::coordinator::WorkOrder), so a
+/// worker evaluating the plan reads exactly the numbers the master's
+/// pre-booking used — lock-step by construction, whatever the key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultCoords {
+    /// Global round id (1-based).
+    pub round: u64,
+    /// Wall rounds served by the order's worker slot, 1-based and
+    /// counting this order — cumulative across respawned incarnations.
+    pub served: u64,
+    /// Session lane the round belongs to (0 for single-tenant paths).
+    pub lane: u32,
+    /// Lane-local round index (1-based position in the lane's stream).
+    pub lane_round: u64,
+}
+
+impl FaultCoords {
+    /// Coordinates for a context with no lane structure and no crash
+    /// history: served count and lane-local index coincide with the
+    /// global round. Under `Global` and `Served` keys these give
+    /// identical draws — the shape every pre-session call site had.
+    pub fn global(round: u64) -> Self {
+        Self { round, served: round, lane: 0, lane_round: round }
+    }
 }
 
 /// The per-round task the scenario drives through the master.
@@ -144,6 +233,10 @@ pub struct Scenario {
     /// Per-tenant in-flight window (`[tenants] inflight`; 0 = inherit
     /// the stream window `inflight`).
     pub tenant_inflight: usize,
+    /// Which identity the fault schedule keys on (`[faults] key`,
+    /// default `served`). `global` reproduces the pre-PR-10 draws bit
+    /// for bit but is rejected with faults under `tenants > 1`.
+    pub fault_key: FaultKey,
 }
 
 impl Scenario {
@@ -174,6 +267,7 @@ impl Scenario {
             speculate: false,
             tenants: 1,
             tenant_inflight: 0,
+            fault_key: FaultKey::Served,
         }
     }
 
@@ -309,13 +403,67 @@ impl Scenario {
                 sc.inflight = 16;
                 Some(sc)
             }
+            // Faults composed with the serving front end — the proof
+            // PR 10 exists for: four tenants share a 10-worker fleet
+            // while one worker crashes mid-stream and respawns and one
+            // Byzantine worker forges about half its rounds. The fault
+            // key is `lane`, so each tenant's forgery exposure is a
+            // pure function of its own (lane, lane-round) stream, and
+            // crashes plus jitter floors key on wall-rounds-served —
+            // stable however the lanes interleave. Two knobs keep the
+            // decode set identical on every round, which is what makes
+            // each per-tenant digest invariant under re-interleaving:
+            // S = 0 means decode waits for every dispatched share (no
+            // race between a straggling original and a speculative
+            // proxy for the last decode slot), and `respawn_after = 1`
+            // brings the crashed worker back before the next dispatch
+            // so no round ever runs a worker short. Speculation then
+            // re-covers the crashed and forged shares onto live
+            // executors, so every round decodes the full N-share set
+            // and both the scenario digest and every per-tenant digest
+            // hold across transports, thread widths, and both window
+            // knobs (global cap and per-tenant).
+            "tenants-faults" => {
+                let mut sc = Self::base("tenants-faults");
+                sc.rounds = 8;
+                sc.rows = 48;
+                sc.cols = 24;
+                sc.seed = 0x5CE6;
+                sc.workers = 10;
+                sc.partitions = 4;
+                sc.colluders = 2;
+                sc.stragglers = 0;
+                sc.delay = DelayConfig {
+                    straggler_factor: 1.0,
+                    base_service_s: 0.002,
+                    jitter: 0.1,
+                };
+                sc.crashes = vec![CrashEvent { worker: 2, round: 3, respawn_after: Some(1) }];
+                sc.forger_set = vec![5];
+                sc.forge_rate = 0.5;
+                sc.forgers = 1;
+                sc.fault_key = FaultKey::Lane;
+                sc.inflight = 16;
+                sc.speculate = true;
+                sc.tenants = 4;
+                sc.tenant_inflight = 4;
+                Some(sc)
+            }
             _ => None,
         }
     }
 
     /// Names [`Scenario::builtin`] answers to.
     pub fn builtin_names() -> &'static [&'static str] {
-        &["baseline", "crash-respawn", "colluders-stragglers", "stream", "forgers", "tenants"]
+        &[
+            "baseline",
+            "crash-respawn",
+            "colluders-stragglers",
+            "stream",
+            "forgers",
+            "tenants",
+            "tenants-faults",
+        ]
     }
 
     /// Resolve a `--scenario` / `scenario =` token: an explicit file
@@ -403,6 +551,9 @@ impl Scenario {
                 "faults.forge_rate" => {
                     sc.forge_rate = value.parse().map_err(|_| bad(&full, value))?
                 }
+                "faults.key" => {
+                    sc.fault_key = FaultKey::from_token(value).ok_or_else(|| bad(&full, value))?
+                }
                 "adversary.colluder_set" => {
                     let ids: Result<Vec<usize>, _> =
                         value.split(',').map(|t| t.trim().parse()).collect();
@@ -458,12 +609,16 @@ impl Scenario {
         if self.inflight == 0 {
             return Err("stream.inflight must be ≥ 1 (1 = synchronous)".into());
         }
+        // Under the served/lane keys a crash round is a wall-rounds-
+        // served count, which runs to the *aggregate* round total when
+        // tenants interleave.
+        let crash_horizon = self.rounds * self.tenants.max(1) as u64;
         for c in &self.crashes {
             if c.worker >= self.workers {
                 return Err(format!("crash event names worker {} of {}", c.worker, self.workers));
             }
-            if c.round == 0 || c.round > self.rounds {
-                return Err(format!("crash round {} outside 1..={}", c.round, self.rounds));
+            if c.round == 0 || c.round > crash_horizon {
+                return Err(format!("crash round {} outside 1..={crash_horizon}", c.round));
             }
             // A respawn is scheduled *before* its round's dispatch and a
             // crash is booked *after* it, so a zero-round respawn could
@@ -522,21 +677,22 @@ impl Scenario {
         if self.tenants == 0 {
             return Err("tenants.count must be ≥ 1 (1 = single-tenant)".into());
         }
-        // Multi-tenant runs pin each tenant's digest to its solo run.
-        // That isolation contract needs the decode set pinned by each
-        // tenant's own schedule: faults and stragglers key on *global*
-        // round ids, which move when tenants interleave — so a
-        // tenants > 1 scenario must be fault-free and straggler-free.
-        if self.tenants > 1 {
+        // Multi-tenant runs pin each tenant's digest across lane
+        // interleavings. Under `fault_key = "global"` faults and
+        // stragglers key on global round ids, which move when tenants
+        // interleave — only that combination still needs a fault-free,
+        // straggler-free cluster. The served/lane keys exist precisely
+        // so adversity composes with tenants (DESIGN.md §13).
+        if self.tenants > 1 && self.fault_key == FaultKey::Global {
             if !self.crashes.is_empty()
                 || self.corrupt_rate > 0.0
                 || self.forge_rate > 0.0
                 || self.stragglers > 0
             {
                 return Err(format!(
-                    "tenants = {} needs a fault-free, straggler-free cluster — crashes, \
-                     corruption, forgeries, and stragglers key on global round ids, which \
-                     interleaving tenants reassign",
+                    "tenants = {} with fault_key = \"global\" needs a fault-free, \
+                     straggler-free cluster — global round ids are reassigned by lane \
+                     interleaving; key the plan with faults.key = \"served\" or \"lane\"",
                     self.tenants
                 ));
             }
@@ -548,6 +704,7 @@ impl Scenario {
     pub fn fault_plan(&self) -> FaultPlan {
         FaultPlan::new(self.crashes.clone(), self.corrupt_rate, self.seed)
             .with_forgers(self.forger_set.clone(), self.forge_rate)
+            .with_key(self.fault_key)
     }
 }
 
@@ -575,22 +732,40 @@ pub fn parse_crash(s: &str) -> Option<CrashEvent> {
 }
 
 /// The fault schedule as the runtime consumes it: a pure function of
-/// `(worker, round)` — worker threads and the master evaluate the same
-/// plan independently and stay consistent without observing each other
-/// (see module docs).
-#[derive(Clone, Debug, Default)]
+/// `(worker, `[`FaultCoords`]`)` — worker threads and the master
+/// evaluate the same plan independently and stay consistent without
+/// observing each other (see module docs). Which coordinate each query
+/// reads is selected by the plan's [`FaultKey`].
+#[derive(Clone, Debug)]
 pub struct FaultPlan {
     crashes: Vec<CrashEvent>,
     corrupt_rate: f64,
     forgers: Vec<usize>,
     forge_rate: f64,
     seed: u64,
+    key: FaultKey,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        Self::new(Vec::new(), 0.0, 0)
+    }
 }
 
 impl FaultPlan {
-    /// Build a plan from its parts.
+    /// Build a plan from its parts. Defaults to [`FaultKey::Global`] —
+    /// the draws every pre-PR-10 call site got — so direct constructions
+    /// stay bit-identical; [`Scenario::fault_plan`] overrides with the
+    /// scenario's `fault_key`.
     pub fn new(crashes: Vec<CrashEvent>, corrupt_rate: f64, seed: u64) -> Self {
-        Self { crashes, corrupt_rate, forgers: Vec::new(), forge_rate: 0.0, seed }
+        Self {
+            crashes,
+            corrupt_rate,
+            forgers: Vec::new(),
+            forge_rate: 0.0,
+            seed,
+            key: FaultKey::Global,
+        }
     }
 
     /// Add a Byzantine forger schedule: each `forgers` member returns a
@@ -600,6 +775,39 @@ impl FaultPlan {
         self.forgers = forgers;
         self.forge_rate = forge_rate;
         self
+    }
+
+    /// Select which identity the queries key on (DESIGN.md §13).
+    pub fn with_key(mut self, key: FaultKey) -> Self {
+        self.key = key;
+        self
+    }
+
+    /// The identity the queries key on.
+    pub fn key(&self) -> FaultKey {
+        self.key
+    }
+
+    /// The coordinate a crash/respawn/straggler-floor query keys on:
+    /// the global round under `global`, the wall-rounds-served count
+    /// otherwise.
+    fn lifecycle_key(&self, coords: &FaultCoords) -> u64 {
+        match self.key {
+            FaultKey::Global => coords.round,
+            FaultKey::Served | FaultKey::Lane => coords.served,
+        }
+    }
+
+    /// The `(round-part, lane-part)` pair a corruption/forgery draw
+    /// mixes into its seed stream. The lane part is 0 except under the
+    /// `lane` key, so `global` reproduces the legacy stream exactly and
+    /// `served` coincides with it whenever served count == round.
+    fn draw_key(&self, coords: &FaultCoords) -> (u64, u64) {
+        match self.key {
+            FaultKey::Global => (coords.round, 0),
+            FaultKey::Served => (coords.served, 0),
+            FaultKey::Lane => (coords.lane_round, coords.lane as u64),
+        }
     }
 
     /// No faults at all?
@@ -625,13 +833,27 @@ impl FaultPlan {
         self.seed
     }
 
-    /// Does `worker` crash mid-`round`? (It receives the order and never
-    /// replies.)
-    pub fn crashes_at(&self, worker: usize, round: u64) -> bool {
-        self.crashes.iter().any(|c| c.worker == worker && c.round == round)
+    /// Does `worker` crash mid this order? (It receives the order and
+    /// never replies.) Keys on the global round or the worker's
+    /// wall-rounds-served count per the plan's [`FaultKey`].
+    pub fn crashes_at(&self, worker: usize, coords: &FaultCoords) -> bool {
+        self.crash_hit(worker, coords).is_some()
     }
 
-    /// Workers whose respawn is due before `round` is dispatched.
+    /// The crash event (if any) that fires for `worker` at these
+    /// coordinates — the master uses the hit's `respawn_after` to post
+    /// the respawn due ledger under the served/lane keys.
+    pub fn crash_hit(&self, worker: usize, coords: &FaultCoords) -> Option<&CrashEvent> {
+        let key = self.lifecycle_key(coords);
+        self.crashes.iter().find(|c| c.worker == worker && c.round == key)
+    }
+
+    /// Workers whose respawn is due before global `round` is dispatched.
+    /// Only meaningful under [`FaultKey::Global`], where a crash's
+    /// booking round is the event's own round field; under the
+    /// served/lane keys the master posts each respawn to a due ledger
+    /// when the crash actually books (it cannot be computed from the
+    /// plan alone).
     pub fn respawns_due(&self, round: u64) -> Vec<usize> {
         self.crashes
             .iter()
@@ -640,17 +862,18 @@ impl FaultPlan {
             .collect()
     }
 
-    /// Is `worker`'s result frame for `round` corrupted on the wire?
-    /// Deterministic: a seeded draw per (worker, round), independent of
-    /// everything else. A crash on the same round takes precedence (the
-    /// worker dies before sending anything).
-    pub fn corrupts(&self, worker: usize, round: u64) -> bool {
-        if self.corrupt_rate <= 0.0 || self.crashes_at(worker, round) {
+    /// Is `worker`'s result frame corrupted on the wire? Deterministic:
+    /// a seeded draw per (worker, key), independent of everything else.
+    /// A crash on the same order takes precedence (the worker dies
+    /// before sending anything).
+    pub fn corrupts(&self, worker: usize, coords: &FaultCoords) -> bool {
+        if self.corrupt_rate <= 0.0 || self.crashes_at(worker, coords) {
             return false;
         }
+        let (r, lane) = self.draw_key(coords);
         let mut rng = rng_from_seed(derive_seed(
             self.seed,
-            0xC0_44_0000 ^ (round << 20) ^ worker as u64,
+            0xC0_44_0000 ^ (r << 20) ^ (lane << 44) ^ worker as u64,
         ));
         rng.next_f64() < self.corrupt_rate
     }
@@ -672,23 +895,24 @@ impl FaultPlan {
         self.forge_rate
     }
 
-    /// Does `worker` forge its `round` result — return a well-formed
-    /// wrong payload with a tampered commitment echo? Deterministic
-    /// like [`FaultPlan::corrupts`], with its own seed stream, and
-    /// lowest precedence: a crash means nothing is sent, and a
-    /// corruption already destroys the frame at the CRC, so forging is
-    /// moot on either.
-    pub fn forges_at(&self, worker: usize, round: u64) -> bool {
+    /// Does `worker` forge this result — return a well-formed wrong
+    /// payload with a tampered commitment echo? Deterministic like
+    /// [`FaultPlan::corrupts`], with its own seed stream, and lowest
+    /// precedence: a crash means nothing is sent, and a corruption
+    /// already destroys the frame at the CRC, so forging is moot on
+    /// either.
+    pub fn forges_at(&self, worker: usize, coords: &FaultCoords) -> bool {
         if self.forge_rate <= 0.0
             || !self.forgers.contains(&worker)
-            || self.crashes_at(worker, round)
-            || self.corrupts(worker, round)
+            || self.crashes_at(worker, coords)
+            || self.corrupts(worker, coords)
         {
             return false;
         }
+        let (r, lane) = self.draw_key(coords);
         let mut rng = rng_from_seed(derive_seed(
             self.seed,
-            0xF0_46_0000 ^ (round << 20) ^ worker as u64,
+            0xF0_46_0000 ^ (r << 20) ^ (lane << 44) ^ worker as u64,
         ));
         rng.next_f64() < self.forge_rate
     }
@@ -826,30 +1050,139 @@ speculate = "on"
     }
 
     #[test]
-    fn multi_tenant_scenarios_must_be_fault_free() {
+    fn multi_tenant_fault_rules_follow_the_key() {
         // Zero tenants is a contradiction, not "off".
         assert!(Scenario::from_str_toml("[tenants]\ncount = 0\n").is_err());
-        // Any global-round-keyed adversity under tenants > 1 is
-        // rejected: it would break per-tenant solo-run parity.
+        // Global-round-keyed adversity under tenants > 1 is still
+        // rejected: interleaving reassigns the ids it keys on. The
+        // same adversity under the served/lane keys is legal — that
+        // composition is the whole point of the re-keying.
         for adversity in [
             "[faults]\ncrash = \"1@2+2\"\n",
             "[faults]\ncorrupt_rate = 0.1\n",
             "[faults]\nforge_rate = 0.5\n[adversary]\nforger_set = \"1\"\n",
             "[cluster]\nstragglers = 1\n",
         ] {
-            let text = format!("rounds = 4\n{adversity}[tenants]\ncount = 2\n");
-            let err = Scenario::from_str_toml(&text).unwrap_err();
+            let global = format!(
+                "rounds = 4\n{adversity}[faults]\nkey = \"global\"\n[tenants]\ncount = 2\n"
+            );
+            let err = Scenario::from_str_toml(&global).unwrap_err();
             assert!(
                 matches!(&err, ConfigError::Validation(m) if m.contains("fault-free")),
                 "want the fault-free validation for {adversity:?}, got {err:?}"
             );
+            for key in ["served", "lane"] {
+                let text = format!(
+                    "rounds = 4\n{adversity}[faults]\nkey = \"{key}\"\n[tenants]\ncount = 2\n"
+                );
+                Scenario::from_str_toml(&text)
+                    .unwrap_or_else(|e| panic!("{key} key must allow {adversity:?}: {e:?}"));
+            }
         }
+        // The default key is `served`, so the bare combination passes
+        // too.
+        let sc =
+            Scenario::from_str_toml("rounds = 4\n[cluster]\nstragglers = 1\n[tenants]\ncount = 2\n")
+                .unwrap();
+        assert_eq!(sc.fault_key, FaultKey::Served);
         // The shipped tenants builtin is valid and 4-wide.
         let sc = Scenario::builtin("tenants").unwrap();
         assert_eq!(sc.tenants, 4);
         assert_eq!(sc.tenant_inflight, 4);
         assert_eq!(sc.inflight, 16);
         sc.validate().unwrap();
+    }
+
+    #[test]
+    fn tenants_faults_builtin_composes_adversity_with_lanes() {
+        let sc = Scenario::builtin("tenants-faults").unwrap();
+        assert_eq!(sc.tenants, 4);
+        assert_eq!(sc.fault_key, FaultKey::Lane);
+        assert_eq!(sc.crashes.len(), 1);
+        assert_eq!(
+            sc.crashes[0].respawn_after,
+            Some(1),
+            "the soak needs a respawn cycle, and it must land before the \
+             next dispatch so every round runs the full fleet"
+        );
+        assert_eq!(sc.forger_set, vec![5]);
+        assert_eq!(sc.stragglers, 0, "S = 0 pins the decode set to every dispatched share");
+        assert!(sc.speculate, "speculation is what keeps faulted rounds undegraded");
+        sc.validate().unwrap();
+        assert_eq!(sc.fault_plan().key(), FaultKey::Lane);
+    }
+
+    #[test]
+    fn fault_key_tokens_round_trip() {
+        for key in [FaultKey::Global, FaultKey::Served, FaultKey::Lane] {
+            assert_eq!(FaultKey::from_token(key.name()), Some(key));
+        }
+        assert_eq!(FaultKey::from_token("SERVED"), Some(FaultKey::Served));
+        assert!(FaultKey::from_token("round").is_none());
+        assert!(Scenario::from_str_toml("[faults]\nkey = \"banana\"\n").is_err());
+    }
+
+    #[test]
+    fn lane_key_makes_draws_a_pure_function_of_the_lane_stream() {
+        let plan =
+            FaultPlan::new(Vec::new(), 0.3, 0x5CE6).with_forgers(vec![5], 0.5).with_key(FaultKey::Lane);
+        // The same (lane, lane_round) must draw identically whatever
+        // global round or served count it lands on — that is the
+        // isolation contract for a tenant's adversarial exposure.
+        for w in 0..10usize {
+            for lane in 0..4u32 {
+                for lr in 1..=8u64 {
+                    let a = FaultCoords { round: lr, served: lr, lane, lane_round: lr };
+                    let b = FaultCoords {
+                        round: 100 + 7 * lr,
+                        served: 31 + lr,
+                        lane,
+                        lane_round: lr,
+                    };
+                    assert_eq!(plan.corrupts(w, &a), plan.corrupts(w, &b));
+                    assert_eq!(plan.forges_at(w, &a), plan.forges_at(w, &b));
+                }
+            }
+        }
+        // …and distinct lanes see distinct streams: the same local
+        // round must not fire identically across all four lanes for
+        // every worker (that would mean the lane id is ignored).
+        let mut lanes_differ = false;
+        'outer: for w in 0..10usize {
+            for lr in 1..=8u64 {
+                let hits: Vec<bool> = (0..4u32)
+                    .map(|lane| {
+                        plan.corrupts(w, &FaultCoords { round: lr, served: lr, lane, lane_round: lr })
+                    })
+                    .collect();
+                if hits.iter().any(|&h| h != hits[0]) {
+                    lanes_differ = true;
+                    break 'outer;
+                }
+            }
+        }
+        assert!(lanes_differ, "lane id must enter the draw stream");
+    }
+
+    #[test]
+    fn served_key_moves_lifecycle_events_off_the_global_round() {
+        let plan = FaultPlan::new(
+            vec![CrashEvent { worker: 2, round: 3, respawn_after: Some(2) }],
+            0.0,
+            7,
+        )
+        .with_key(FaultKey::Served);
+        // The crash fires on worker 2's third serviced order, whatever
+        // global round that happens to be…
+        let hit = FaultCoords { round: 11, served: 3, lane: 1, lane_round: 2 };
+        assert!(plan.crashes_at(2, &hit));
+        assert_eq!(plan.crash_hit(2, &hit).unwrap().respawn_after, Some(2));
+        // …and not on global round 3 if that is only its second.
+        assert!(!plan.crashes_at(2, &FaultCoords { round: 3, served: 2, lane: 0, lane_round: 3 }));
+        // Under the global key the same coordinates flip.
+        let legacy = plan.clone().with_key(FaultKey::Global);
+        assert!(!legacy.crashes_at(2, &hit));
+        assert!(legacy.crashes_at(2, &FaultCoords { round: 3, served: 2, lane: 0, lane_round: 3 }));
     }
 
     #[test]
@@ -860,8 +1193,9 @@ speculate = "on"
         let mut fired = 0usize;
         for w in 0..sc.workers {
             for r in 1..=sc.rounds {
-                assert_eq!(a.forges_at(w, r), b.forges_at(w, r));
-                if a.forges_at(w, r) {
+                let at = FaultCoords::global(r);
+                assert_eq!(a.forges_at(w, &at), b.forges_at(w, &at));
+                if a.forges_at(w, &at) {
                     fired += 1;
                     assert!(sc.forger_set.contains(&w), "only forger-set members forge");
                 }
@@ -875,9 +1209,15 @@ speculate = "on"
             0x5CE4,
         )
         .with_forgers(vec![2], 0.999);
-        assert!(!plan.forges_at(2, 3), "a crashed worker sends nothing to forge");
         assert!(
-            (1..=20u64).all(|r| !plan.forges_at(2, r) || !plan.corrupts(2, r)),
+            !plan.forges_at(2, &FaultCoords::global(3)),
+            "a crashed worker sends nothing to forge"
+        );
+        assert!(
+            (1..=20u64).all(|r| {
+                let at = FaultCoords::global(r);
+                !plan.forges_at(2, &at) || !plan.corrupts(2, &at)
+            }),
             "corruption destroys the frame before a forgery could matter"
         );
         assert!(!plan.is_empty());
@@ -907,19 +1247,20 @@ speculate = "on"
         let sc = Scenario::builtin("crash-respawn").unwrap();
         let a = sc.fault_plan();
         let b = sc.fault_plan();
-        assert!(a.crashes_at(2, 3));
-        assert!(!a.crashes_at(2, 4));
+        assert!(a.crashes_at(2, &FaultCoords::global(3)));
+        assert!(!a.crashes_at(2, &FaultCoords::global(4)));
         assert_eq!(a.respawns_due(5), vec![2]);
         assert_eq!(a.respawns_due(7), vec![5]);
         assert_eq!(a.respawns_due(6), Vec::<usize>::new());
-        // Corruption draws are a pure function of (worker, round)…
+        // Corruption draws are a pure function of (worker, key)…
         for w in 0..sc.workers {
             for r in 1..=sc.rounds {
-                assert_eq!(a.corrupts(w, r), b.corrupts(w, r));
+                let at = FaultCoords::global(r);
+                assert_eq!(a.corrupts(w, &at), b.corrupts(w, &at));
             }
         }
         // …and never fire on a round the worker crashes in.
-        assert!(!a.corrupts(2, 3));
+        assert!(!a.corrupts(2, &FaultCoords::global(3)));
     }
 
     #[test]
@@ -927,11 +1268,11 @@ speculate = "on"
         let plan = FaultPlan::new(Vec::new(), 0.3, 7);
         let hits: usize = (0..50)
             .flat_map(|w| (1..=40).map(move |r| (w, r)))
-            .filter(|&(w, r)| plan.corrupts(w, r))
+            .filter(|&(w, r)| plan.corrupts(w, &FaultCoords::global(r)))
             .count();
         let rate = hits as f64 / 2000.0;
         assert!((0.2..0.4).contains(&rate), "rate {rate} far from 0.3");
         let off = FaultPlan::new(Vec::new(), 0.0, 7);
-        assert!(!(0..50).any(|w| off.corrupts(w, 1)));
+        assert!(!(0..50).any(|w| off.corrupts(w, &FaultCoords::global(1))));
     }
 }

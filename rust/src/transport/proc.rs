@@ -283,6 +283,10 @@ fn worker_command(
             cmd.arg("--forge-rate").arg(plan.forge_rate().to_string());
         }
         cmd.arg("--fault-seed").arg(plan.seed().to_string());
+        // The key decides which identities the child's draws consume
+        // (global round vs served count vs lane stream) — it must match
+        // the master's plan or the two sides book different faults.
+        cmd.arg("--fault-key").arg(plan.key().name());
     }
     cmd
 }

@@ -10,7 +10,8 @@
 //! WirePayload  := tag:u8 (0 = Plain Matrix |
 //!                         1 = Sealed Point rows:u32 cols:u32
 //!                             len:u32 bytes:[u8; len])
-//! WorkOrder    := round:u64 worker:u32 delay_ns:u64 WorkerOp
+//! WorkOrder    := round:u64 worker:u32 lane:u32 lane_round:u64
+//!                 served:u64 delay_ns:u64 WorkerOp
 //!                 n_payloads:u16 WirePayload* commitment:u64
 //! ResultMsg    := round:u64 worker:u32 executor:u32 WirePayload
 //!                 commitment:u64
@@ -81,6 +82,9 @@ pub fn encode_order_into(order: &WorkOrder, out: &mut Vec<u8>) {
     out.clear();
     let body_len = 8
         + 4
+        + 4
+        + 8
+        + 8
         + 8
         + op_encoded_len(&order.op)
         + 2
@@ -91,6 +95,11 @@ pub fn encode_order_into(order: &WorkOrder, out: &mut Vec<u8>) {
     let start = super::frame::frame_begin(out, MsgKind::Order);
     put_u64(out, order.round);
     put_u32(out, order.worker as u32);
+    // Wire v4: the fault coordinates ride between the routing fields
+    // and the delay (DESIGN.md §13).
+    put_u32(out, order.lane);
+    put_u64(out, order.lane_round);
+    put_u64(out, order.served);
     put_u64(out, order.delay.as_nanos() as u64);
     put_op(out, &order.op);
     put_u16(out, order.payloads.len() as u16);
@@ -497,6 +506,9 @@ fn read_payload(cur: &mut Cur) -> Result<WirePayload, WireError> {
 fn read_order(cur: &mut Cur) -> Result<WorkOrder, WireError> {
     let round = cur.u64()?;
     let worker = cur.u32()? as usize;
+    let lane = cur.u32()?;
+    let lane_round = cur.u64()?;
+    let served = cur.u64()?;
     let delay = Duration::from_nanos(cur.u64()?);
     let op = read_op(cur)?;
     let n = cur.u16()? as usize;
@@ -505,7 +517,7 @@ fn read_order(cur: &mut Cur) -> Result<WorkOrder, WireError> {
         payloads.push(read_payload(cur)?);
     }
     let commitment = cur.u64()?;
-    Ok(WorkOrder { round, worker, op, payloads, delay, commitment })
+    Ok(WorkOrder { round, worker, lane, lane_round, served, op, payloads, delay, commitment })
 }
 
 fn read_result(cur: &mut Cur) -> Result<ResultMsg, WireError> {
@@ -557,6 +569,9 @@ mod tests {
         let order = WorkOrder {
             round: 42,
             worker: 3,
+            lane: 2,
+            lane_round: 11,
+            served: 40,
             op: WorkerOp::RightMul(Arc::new(v.clone())),
             payloads: vec![WirePayload::Plain(m.clone())],
             delay: Duration::from_millis(17),
@@ -565,6 +580,9 @@ mod tests {
         let back = decode_order(&encode_order(&order)).unwrap();
         assert_eq!(back.round, 42);
         assert_eq!(back.worker, 3);
+        assert_eq!(back.lane, 2);
+        assert_eq!(back.lane_round, 11);
+        assert_eq!(back.served, 40);
         assert_eq!(back.delay, Duration::from_millis(17));
         assert_eq!(back.commitment, 0xDEAD_BEEF_0123_4567);
         assert!(matches!(&back.op, WorkerOp::RightMul(w) if **w == v));
@@ -603,6 +621,9 @@ mod tests {
         let order = WorkOrder {
             round: 3,
             worker: 1,
+            lane: 0,
+            lane_round: 3,
+            served: 3,
             op: WorkerOp::RightMul(Arc::new(Matrix::ones(9, 2))),
             payloads: vec![
                 WirePayload::Plain(m),
@@ -682,6 +703,9 @@ mod tests {
         let order = WorkOrder {
             round: 1,
             worker: 0,
+            lane: 0,
+            lane_round: 1,
+            served: 1,
             op: WorkerOp::Identity,
             payloads: vec![WirePayload::Plain(Matrix::zeros(0, 4))],
             delay: Duration::ZERO,

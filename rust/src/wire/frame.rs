@@ -5,7 +5,7 @@
 //! ```text
 //! offset  size  field
 //!      0     4  magic      b"SPDC" (little-endian u32 0x43445053)
-//!      4     2  version    u16 LE — currently 2
+//!      4     2  version    u16 LE — see [`VERSION`]
 //!      6     1  kind       1 = WorkOrder, 2 = ResultMsg, 3 = ControlMsg
 //!      7     1  reserved   0
 //!      8     4  body_len   u32 LE
@@ -31,7 +31,11 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"SPDC");
 /// `WorkOrder` and echoed on the `ResultMsg` so the master's collector
 /// can verify a result against the order it answers before it may
 /// count toward the round (Byzantine forger detection, DESIGN.md §11).
-pub const VERSION: u16 = 3;
+/// Version 4 added the fault coordinates to the `WorkOrder` — session
+/// lane, lane-local round, and the executor's wall-rounds-served count
+/// — so a worker's fault plan can key on stable identities instead of
+/// the global round id (DESIGN.md §13).
+pub const VERSION: u16 = 4;
 
 /// Fixed header size (magic + version + kind + reserved + body_len).
 pub const HEADER_LEN: usize = 12;

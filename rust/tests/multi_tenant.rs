@@ -10,7 +10,7 @@ use spacdc::coordinator::{Master, ServiceConfig, SessionOptions};
 use spacdc::matrix::Matrix;
 use spacdc::rng::{derive_seed, rng_from_seed};
 use spacdc::runtime::WorkerOp;
-use spacdc::sim::{run_scenario, Scenario};
+use spacdc::sim::{run_scenario, run_scenario_with, Scenario};
 
 /// The CI matrix in miniature: both fabrics, serial and wide pools.
 const MATRIX: [(TransportKind, usize); 4] = [
@@ -192,4 +192,93 @@ fn greedy_tenant_cannot_starve_a_polite_one() {
         p99 <= g99 * 4.0 + 50.0,
         "polite p99 {p99:.2} ms vs greedy p99 {g99:.2} ms — tail blew out"
     );
+}
+
+#[test]
+fn weighted_lanes_share_bandwidth_in_weight_proportion() {
+    // A 2:1-weighted pair of saturated lanes must split dispatch
+    // bandwidth 2:1 while both are busy. Round ids are global and
+    // monotone in dispatch order, so the heavy lane's last dispatch
+    // marks how much of the merged stream it consumed: its 40 rounds
+    // should sit inside a ~60-round contention window (share 2/3,
+    // within 10%).
+    const TASKS: usize = 40;
+    let mut master = Master::from_config(cluster(TransportKind::InProc, 0)).unwrap();
+    let mut svc = master.service(ServiceConfig { global_inflight: 4, speculate: false });
+    let heavy = svc.open_iter(
+        "heavy",
+        SessionOptions { inflight: 4, weight: 2, seed: Some(0x3EA0_0001), ..Default::default() },
+        tenant_tasks(0x3EA0_0001, TASKS).into_iter(),
+    );
+    let light = svc.open_iter(
+        "light",
+        SessionOptions { inflight: 4, weight: 1, seed: Some(0x3EA0_0002), ..Default::default() },
+        tenant_tasks(0x3EA0_0002, TASKS).into_iter(),
+    );
+    let out = svc.run();
+    assert_eq!(out.tenants[heavy].decoded, TASKS as u64);
+    assert_eq!(out.tenants[light].decoded, TASKS as u64);
+    let heavy_last = out.rounds[heavy].iter().map(|r| r.round).max().unwrap();
+    let share = TASKS as f64 / heavy_last as f64;
+    let want = 2.0 / 3.0;
+    assert!(
+        (share - want).abs() <= want * 0.10,
+        "heavy lane bandwidth share {share:.3} is off its 2/3 weight share \
+         (exhausted at global round {heavy_last} of {})",
+        2 * TASKS
+    );
+}
+
+#[test]
+fn tenants_faults_soak_pins_digests_with_adversity_composed() {
+    // The composition contract the re-keyed fault plan exists for
+    // (DESIGN.md §13): four tenants share a fleet while worker 2
+    // crashes and respawns and worker 5 forges about half its rounds —
+    // and still one scenario digest and one digest per tenant hold
+    // across both fabrics, both pool widths, and both global-cap
+    // widths. Faults key on lane streams and wall-rounds-served, not
+    // on the global round ids the interleaving reassigns, and
+    // speculation re-covers every written-off share so each round
+    // decodes the full fleet.
+    let sc = Scenario::builtin("tenants-faults").unwrap();
+    let mut reports = Vec::new();
+    for (transport, threads) in MATRIX {
+        for inflight in [1usize, 4] {
+            let report =
+                run_scenario_with(&sc, transport, threads, Some(inflight), None).unwrap();
+            assert_eq!(report.crashes, 1, "the scheduled crash must fire");
+            assert_eq!(report.respawns, 1, "the crashed incarnation must rejoin");
+            assert_eq!(report.final_generations[2], 1, "worker 2 rejoined as generation 1");
+            assert!(
+                report.verify_forged_detected > 0,
+                "the seeded forgery schedule must fire at least once"
+            );
+            assert_eq!(report.recovery_hit_rate, 1.0, "every round must still decode");
+            assert_eq!(
+                report.degraded_rounds, 0,
+                "speculation must re-cover every written-off share"
+            );
+            assert_eq!(report.tenant_stats.len(), 4);
+            for t in &report.tenant_stats {
+                assert_eq!(t.decoded, sc.rounds, "tenant {} must decode every round", t.tenant);
+                assert_eq!(t.failed, 0);
+                assert_eq!(t.degraded, 0);
+            }
+            reports.push((transport.name(), threads, inflight, report));
+        }
+    }
+    let first = &reports[0].3;
+    for (transport, threads, inflight, report) in &reports {
+        assert_eq!(
+            report.digest, first.digest,
+            "digest diverged at transport={transport} threads={threads} inflight={inflight}"
+        );
+        for (t, stat) in report.tenant_stats.iter().enumerate() {
+            assert_eq!(
+                stat.digest, first.tenant_stats[t].digest,
+                "tenant {t} digest diverged at transport={transport} \
+                 threads={threads} inflight={inflight}"
+            );
+        }
+    }
 }

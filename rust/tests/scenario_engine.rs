@@ -4,7 +4,11 @@
 //! live system, and the file ≡ builtin pin for the shipped scenarios.
 
 use spacdc::config::TransportKind;
-use spacdc::sim::{run_scenario, run_scenario_with, CrashEvent, RoundStatus, Scenario, ScenarioOp};
+use spacdc::rng::{derive_seed, rng_from_seed};
+use spacdc::sim::{
+    run_scenario, run_scenario_with, CrashEvent, FaultCoords, FaultKey, FaultPlan, RoundStatus,
+    Scenario, ScenarioOp,
+};
 
 /// The CI matrix in miniature: both fabrics, serial and wide pools.
 const MATRIX: [(TransportKind, usize); 4] = [
@@ -291,4 +295,100 @@ fn reports_serialize_with_digest_and_per_round_records() {
     }
     assert_eq!(report.digest.len(), 16, "fnv64 digest is 16 hex chars");
     assert!(report.digest.chars().all(|c| c.is_ascii_hexdigit()));
+}
+
+#[test]
+fn fault_key_global_reproduces_the_legacy_draw_streams() {
+    // Before the re-keying, the engine drew corruption from
+    // `derive_seed(seed, 0xC0_44_0000 ^ (round << 20) ^ worker)`,
+    // forgery from the matching 0xF0_46_0000 stream, and matched
+    // crash/respawn events on the global round id. `fault_key =
+    // "global"` must reproduce all three bit-for-bit — that is what
+    // keeps every pre-existing single-tenant scenario digest unchanged
+    // when a config opts back into the legacy keying.
+    let crashes = vec![
+        CrashEvent { worker: 2, round: 3, respawn_after: Some(2) },
+        CrashEvent { worker: 5, round: 4, respawn_after: Some(3) },
+    ];
+    let seed = 0x5CE1u64;
+    let plan = FaultPlan::new(crashes.clone(), 0.06, seed)
+        .with_forgers(vec![2, 5], 0.55)
+        .with_key(FaultKey::Global);
+    for worker in 0..10usize {
+        for round in 1..=40u64 {
+            let coords = FaultCoords::global(round);
+            let legacy_crash = crashes.iter().any(|c| c.worker == worker && c.round == round);
+            assert_eq!(plan.crashes_at(worker, &coords), legacy_crash);
+            let legacy_corrupt = !legacy_crash && {
+                let mut rng = rng_from_seed(derive_seed(
+                    seed,
+                    0xC0_44_0000 ^ (round << 20) ^ worker as u64,
+                ));
+                rng.next_f64() < 0.06
+            };
+            assert_eq!(
+                plan.corrupts(worker, &coords),
+                legacy_corrupt,
+                "corruption stream moved at (worker {worker}, round {round})"
+            );
+            let legacy_forge = [2usize, 5].contains(&worker)
+                && !legacy_crash
+                && !legacy_corrupt
+                && {
+                    let mut rng = rng_from_seed(derive_seed(
+                        seed,
+                        0xF0_46_0000 ^ (round << 20) ^ worker as u64,
+                    ));
+                    rng.next_f64() < 0.55
+                };
+            assert_eq!(
+                plan.forges_at(worker, &coords),
+                legacy_forge,
+                "forgery stream moved at (worker {worker}, round {round})"
+            );
+        }
+    }
+    // Legacy respawn arithmetic: due exactly at crash round + delay.
+    assert_eq!(plan.respawns_due(5), vec![2]);
+    assert_eq!(plan.respawns_due(7), vec![5]);
+    assert!(plan.respawns_due(4).is_empty());
+    // Under the global key the other coordinates are inert: only the
+    // global round feeds the draw, however the order was laned.
+    let weird = FaultCoords { round: 7, served: 3, lane: 9, lane_round: 1 };
+    assert_eq!(plan.corrupts(0, &weird), plan.corrupts(0, &FaultCoords::global(7)));
+    assert_eq!(plan.forges_at(5, &weird), plan.forges_at(5, &FaultCoords::global(7)));
+}
+
+#[test]
+fn served_key_coincides_with_global_while_no_worker_dies() {
+    // The scenario default flipped from global-round keying to
+    // wall-rounds-served. With no crash in the plan every worker's
+    // served count equals the global round, so the shipped crash-free
+    // scenarios must digest identically under either key — the
+    // back-compat half of the default flip.
+    for name in ["baseline", "forgers"] {
+        let mut sc = Scenario::builtin(name).unwrap();
+        sc.rounds = sc.rounds.min(4);
+        let mut digests = Vec::new();
+        for key in [FaultKey::Global, FaultKey::Served] {
+            sc.fault_key = key;
+            digests.push(run_scenario(&sc, TransportKind::InProc, 2).unwrap().digest);
+        }
+        assert_eq!(digests[0], digests[1], "{name}: served keying moved off the legacy stream");
+    }
+}
+
+#[test]
+fn crash_respawn_under_the_global_key_still_pins_one_digest() {
+    // Opting a crash scenario back into `fault_key = "global"` must
+    // still produce one digest across fabrics — the legacy lifecycle
+    // path (respawns computed from the plan, not the due ledger) stays
+    // live and deterministic.
+    let mut sc = Scenario::builtin("crash-respawn").unwrap();
+    sc.fault_key = FaultKey::Global;
+    let a = run_scenario(&sc, TransportKind::InProc, 1).unwrap();
+    let b = run_scenario(&sc, TransportKind::Tcp, 8).unwrap();
+    assert_eq!(a.crashes, 2);
+    assert_eq!(a.respawns, 2);
+    assert_eq!(a.digest, b.digest, "global-key digest diverged between fabrics");
 }

@@ -49,6 +49,9 @@ fn gen_order(g: &mut Gen, mea: &MeaEcc<spacdc::field::Fp61>) -> WorkOrder {
     WorkOrder {
         round: g.u64(),
         worker: g.usize_in(0..64),
+        lane: g.usize_in(0..1 << 16) as u32,
+        lane_round: g.u64(),
+        served: g.u64(),
         op: gen_op(g),
         payloads: (0..arity).map(|_| gen_payload(g, mea)).collect(),
         delay: Duration::from_nanos(g.u64() >> 20),
@@ -105,6 +108,9 @@ fn order_frames_round_trip_over_random_shapes_and_arities() {
         let back = wire::decode_order(&frame).map_err(|e| e.to_string())?;
         prop_assert(back.round == order.round, "round id changed")?;
         prop_assert(back.worker == order.worker, "worker id changed")?;
+        prop_assert(back.lane == order.lane, "lane changed")?;
+        prop_assert(back.lane_round == order.lane_round, "lane round changed")?;
+        prop_assert(back.served == order.served, "served count changed")?;
         prop_assert(back.delay == order.delay, "delay changed")?;
         prop_assert(back.commitment == order.commitment, "commitment changed")?;
         prop_assert(ops_eq(&back.op, &order.op), "op changed")?;
